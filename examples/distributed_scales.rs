@@ -1,0 +1,82 @@
+//! Distributed online quantization (paper Alg. 1 + Eqs. 7-8 + Thm. 4):
+//! eight worker shards track activation scales with EMA while decoding
+//! different traffic, periodically synchronize through the ring
+//! collective, and the example verifies every shard ends with identical
+//! quantization parameters — under both the NCCL profile and the TCP
+//! fallback, comparing their simulated wire cost.
+//!
+//!   cargo run --release --example distributed_scales
+
+use llmeasyquant::collective::{Collective, CommStats, Topology, Transport};
+use llmeasyquant::coordinator::ScaleSync;
+use llmeasyquant::corpus::XorShift64Star;
+use llmeasyquant::quant::EmaState;
+use llmeasyquant::util::bench::Table;
+
+fn run(transport: Transport, shards: usize, steps: usize) -> (Vec<EmaState>, CommStats) {
+    let regions = 24; // e.g. one tracked region per layer input
+    let ring = Collective::ring(Topology::new(shards, transport));
+    let mut handles = Vec::new();
+    for (rank, mut comm) in ring.into_iter().enumerate() {
+        handles.push(std::thread::spawn(move || {
+            let mut sync = ScaleSync::new(regions, 0.9, 1e-6, 4);
+            let mut rng = XorShift64Star::new(777 + rank as u64);
+            for step in 0..steps {
+                for region in 0..regions {
+                    // non-stationary, shard-skewed activations: scale
+                    // drifts over time, shard 0 sees the outliers
+                    let drift = 1.0 + step as f32 * 0.01;
+                    let skew = if rank == 0 { 3.0 } else { 1.0 };
+                    let x: Vec<f32> = (0..128)
+                        .map(|_| rng.next_normal() as f32 * drift * skew)
+                        .collect();
+                    sync.observe(region, &x);
+                }
+                if sync.due() {
+                    sync.sync(&mut comm).expect("sync");
+                }
+            }
+            let states = sync.sync(&mut comm).expect("final sync");
+            (states, comm.stats())
+        }));
+    }
+    let results: Vec<_> = handles.into_iter().map(|h| h.join().unwrap()).collect();
+    // Thm. 4: all shards identical after sync
+    for (states, _) in &results[1..] {
+        for (a, b) in results[0].0.iter().zip(states) {
+            assert_eq!(a.delta, b.delta);
+            assert_eq!(a.zero_point, b.zero_point);
+        }
+    }
+    results.into_iter().next().map(|(s, c)| (s, c)).unwrap()
+}
+
+fn main() {
+    let (shards, steps) = (8, 64);
+    let mut table = Table::new(&[
+        "transport",
+        "syncs",
+        "bytes/shard (KB)",
+        "sim wire (ms)",
+        "wall (ms)",
+    ]);
+    for transport in [Transport::NvlinkRdma, Transport::Infiniband, Transport::Tcp] {
+        let (states, stats) = run(transport, shards, steps);
+        println!(
+            "{}: shards converged; shard-0-outlier delta propagated to all (delta[0] = {:.2})",
+            transport.name(),
+            states[0].delta
+        );
+        table.row(vec![
+            transport.name().into(),
+            format!("{}", stats.ops / 3), // 3 collective ops per sync round
+            format!("{:.1}", stats.bytes_sent as f64 / 1e3),
+            format!("{:.3}", stats.sim_time_s * 1e3),
+            format!("{:.3}", stats.wall_time_s * 1e3),
+        ]);
+    }
+    println!("\nscale-sync cost by transport ({shards} shards, {steps} steps):");
+    table.print();
+    println!("\nNCCL-ring vs TCP-fallback: identical results, ~50x wire-time gap —");
+    println!("the transparent-fallback path of paper §3.3.");
+}

@@ -1,0 +1,152 @@
+"""L1/L2 performance analysis (build-time): VMEM footprint + MXU-tile
+estimates per Pallas kernel, and HLO op statistics per lowered graph.
+
+This is the profiling half of the §Perf deliverable for the layers that
+cannot be wall-clock-profiled meaningfully on CPU (interpret=True): kernel
+*structure* is analyzed instead — block residency vs the ~16 MiB VMEM
+budget, MXU alignment of the tile shapes, and arithmetic intensity — plus
+XLA op counts of the lowered modules to catch fusion/recomputation
+regressions.
+
+Usage: python -m compile.analysis [--models gpt2-tiny] [--variants ...]
+Writes artifacts/analysis.json and prints the report.
+"""
+
+from __future__ import annotations
+
+import argparse
+import collections
+import json
+import os
+import re
+
+from . import model
+
+VMEM_BUDGET = 16 * 1024 * 1024  # bytes per TPU core
+MXU_DIM = 128
+
+
+def kernel_vmem_report(cfg: model.ModelConfig, batch: int = 8):
+    """Static VMEM residency per Pallas kernel instance in the model.
+
+    Mirrors the BlockSpec choices in python/compile/kernels/*.py.
+    """
+    d, f, ctx = cfg.d_model, cfg.d_ff, cfg.ctx
+    m = batch * ctx                     # prefill rows
+    reports = []
+
+    def add(kernel, linear, tiles, note=""):
+        total = sum(b for _, b in tiles)
+        reports.append({
+            "kernel": kernel,
+            "site": linear,
+            "tiles": {n: b for n, b in tiles},
+            "vmem_bytes": total,
+            "vmem_frac": total / VMEM_BUDGET,
+            "mxu_aligned": all(
+                dim % MXU_DIM == 0 or dim < MXU_DIM
+                for n, b in tiles for dim in _dims_of(n)
+            ),
+            "note": note,
+        })
+
+    def _dims_of(name):
+        mres = re.findall(r"\d+", name)
+        return [int(x) for x in mres]
+
+    bm, bn = 128, 128
+    for lname, k, n in model.block_linears(cfg):
+        # fused qgemm: A [BM, K] f32 + W [K, BN] i8 + delta + O [BM, BN] f32
+        add("qgemm_fused", lname, [
+            (f"A[{bm}x{k}]f32", bm * k * 4),
+            (f"Wq[{k}x{bn}]i8", k * bn),
+            (f"delta[1x{bn}]f32", bn * 4),
+            (f"O[{bm}x{bn}]f32", bm * bn * 4),
+        ], note=f"grid=({(m + bm - 1) // bm},{(n + bn - 1) // bn})")
+        # channel dequant matmul: W strip resident
+        add("channel_dequant_matmul", lname, [
+            (f"Wq[{k}x{bn}]i8", k * bn),
+            (f"delta[1x{bn}]f32", bn * 4),
+            (f"X[{m}x{k}]f32", m * k * 4),
+            (f"O[{m}x{bn}]f32", m * bn * 4),
+        ], note="full-M strip; fine for serving batches, see DESIGN §Perf")
+    # simquant encode/decode on KV pages
+    dh = cfg.d_model
+    add("simquant_encode", "kv_page", [
+        (f"X[{ctx}x{dh}]f32", ctx * dh * 4),
+        (f"Q[{ctx}x{dh}]u8", ctx * dh),
+        (f"params[2x{dh}]f32", 2 * dh * 4),
+    ])
+    return reports
+
+
+def hlo_op_stats(hlo_text: str) -> dict:
+    """Count HLO ops by kind in an artifact (fusion health check)."""
+    counts = collections.Counter()
+    for line in hlo_text.splitlines():
+        m = re.match(r"\s*(?:ROOT\s+)?%?[\w.\-]+\s*=\s*[\w\[\]{}, ]+?\s(\w+)\(", line)
+        if m:
+            counts[m.group(1)] += 1
+    total = sum(counts.values())
+    heavy = {k: v for k, v in counts.items()
+             if k in ("dot", "convolution", "custom-call")}
+    elementwise = sum(v for k, v in counts.items()
+                      if k in ("add", "multiply", "subtract", "divide",
+                               "maximum", "minimum", "exponential", "tanh"))
+    return {
+        "total_ops": total,
+        "dot_ops": heavy.get("dot", 0),
+        "custom_calls": heavy.get("custom-call", 0),
+        "elementwise_ops": elementwise,
+        "while_loops": counts.get("while", 0),
+        "top": dict(counts.most_common(8)),
+    }
+
+
+def analyze(artifacts_dir: str, models: list[str], variants: list[str]):
+    out = {"kernels": {}, "graphs": {}}
+    for mname in models:
+        cfg = model.MODELS[mname]
+        out["kernels"][mname] = kernel_vmem_report(cfg)
+        for variant in variants:
+            for phase in ("prefill", "decode"):
+                fname = f"{mname}_{variant}_{phase}_b8.hlo.txt"
+                path = os.path.join(artifacts_dir, fname)
+                if not os.path.exists(path):
+                    continue
+                with open(path) as fh:
+                    out["graphs"][f"{mname}/{variant}/{phase}"] = hlo_op_stats(
+                        fh.read())
+    return out
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--artifacts", default="../artifacts")
+    ap.add_argument("--models", default="gpt2-tiny")
+    ap.add_argument("--variants", default="fp,int8,smooth,simquant")
+    args = ap.parse_args()
+    report = analyze(args.artifacts, args.models.split(","),
+                     args.variants.split(","))
+    for mname, kernels in report["kernels"].items():
+        print(f"== {mname}: Pallas kernel VMEM residency ==")
+        worst = max(kernels, key=lambda k: k["vmem_frac"])
+        for k in kernels[:4]:
+            print(f"  {k['kernel']:24s} {k['site']:10s} "
+                  f"{k['vmem_bytes']/1024:8.0f} KiB "
+                  f"({k['vmem_frac']*100:4.1f}% of VMEM) "
+                  f"mxu_aligned={k['mxu_aligned']}")
+        print(f"  worst: {worst['kernel']}@{worst['site']} "
+              f"{worst['vmem_frac']*100:.1f}% of budget")
+    print("\n== lowered graph op stats ==")
+    for key, g in report["graphs"].items():
+        print(f"  {key:28s} ops={g['total_ops']:5d} dots={g['dot_ops']:3d} "
+              f"while={g['while_loops']:2d} elementwise={g['elementwise_ops']}")
+    path = os.path.join(args.artifacts, "analysis.json")
+    with open(path, "w") as fh:
+        json.dump(report, fh, indent=1)
+    print(f"\nwrote {path}")
+
+
+if __name__ == "__main__":
+    main()

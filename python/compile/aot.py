@@ -1,0 +1,257 @@
+"""AOT pipeline: lower every (model, variant, phase, batch) graph to HLO
+text, export checkpoints + calibration stats, and pin the Rust contract
+with golden outputs.
+
+Interchange is HLO **text**, not serialized HloModuleProto: jax >= 0.5
+emits 64-bit instruction ids that xla_extension 0.5.1 rejects; the text
+parser reassigns ids (see /opt/xla-example/README.md).
+
+Outputs under artifacts/:
+  manifest.json                      — graph registry + input signatures
+  <model>.weights.bin                — f32 checkpoint + calib stats
+  <model>_<variant>_<phase>_b<B>.hlo.txt
+  golden.bin                         — tokens + expected logits per graph
+
+Usage: python -m compile.aot [--out-dir ../artifacts]
+         [--models ...] [--variants ...] [--batches 1,8] [--calib-steps 8]
+"""
+
+from __future__ import annotations
+
+import argparse
+import json
+import math
+import os
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax._src.lib import xla_client as xc
+
+from . import corpus, model, quantizers, tensorfile
+
+CALIB_SEQ = 128
+
+
+def to_hlo_text(lowered) -> str:
+    """StableHLO -> XlaComputation -> HLO text (return_tuple for rust)."""
+    mlir_mod = lowered.compiler_ir("stablehlo")
+    comp = xc._xla.mlir.mlir_module_to_xla_computation(
+        str(mlir_mod), use_tuple_args=False, return_tuple=True)
+    return comp.as_hlo_text()
+
+
+# ---------------------------------------------------------------------------
+# Calibration: capture per-linear input activations on the f32 model
+# ---------------------------------------------------------------------------
+
+def calibrate(cfg: model.ModelConfig, params: dict, n_batches: int = 8,
+              seed: int = 7) -> dict[str, quantizers.CalibStats]:
+    """Run the f32 forward over calibration windows, recording per-linear
+    input-channel statistics (absmax / meanabs / sqsum)."""
+    stats = {}
+    for i in range(cfg.n_layers):
+        for lname, k, _ in model.block_linears(cfg):
+            stats[f"h{i}.{lname}"] = quantizers.CalibStats(k)
+
+    tokens = corpus.generate_tokens(n_batches * CALIB_SEQ + 1, seed=seed)
+    for b in range(n_batches):
+        window = tokens[b * CALIB_SEQ:(b + 1) * CALIB_SEQ][None]
+        x = np.asarray(params["wte"])[window] \
+            + np.asarray(params["wpe"])[:CALIB_SEQ][None]
+        x = jnp.asarray(x)
+        t = CALIB_SEQ
+        mask = jnp.tril(jnp.ones((t, t), dtype=bool))
+        for i in range(cfg.n_layers):
+            h = model._ln(x, params[f"h{i}.ln1_g"], params[f"h{i}.ln1_b"])
+            stats[f"h{i}.qkv"].update(np.asarray(h[0]))
+            qkv = h @ params[f"h{i}.qkv_w"] + params[f"h{i}.qkv_b"]
+            q, k, v = jnp.split(qkv, 3, axis=-1)
+            qh, kh, vh = (model._split_heads(z, cfg.n_heads)
+                          for z in (q, k, v))
+            att = jnp.einsum("bhqd,bhkd->bhqk", qh, kh) / math.sqrt(cfg.d_head)
+            att = jnp.where(mask[None, None], att, -1e9)
+            att = jax.nn.softmax(att, axis=-1)
+            o = model._merge_heads(jnp.einsum("bhqk,bhkd->bhqd", att, vh))
+            stats[f"h{i}.attn_out"].update(np.asarray(o[0]))
+            x = x + o @ params[f"h{i}.attn_out_w"] + params[f"h{i}.attn_out_b"]
+            h = model._ln(x, params[f"h{i}.ln2_g"], params[f"h{i}.ln2_b"])
+            stats[f"h{i}.fc1"].update(np.asarray(h[0]))
+            h = jax.nn.gelu(h @ params[f"h{i}.fc1_w"] + params[f"h{i}.fc1_b"])
+            stats[f"h{i}.fc2"].update(np.asarray(h[0]))
+            x = x + h @ params[f"h{i}.fc2_w"] + params[f"h{i}.fc2_b"]
+    return stats
+
+
+# ---------------------------------------------------------------------------
+# Graph lowering
+# ---------------------------------------------------------------------------
+
+def runtime_input_specs(cfg: model.ModelConfig, variant: str, phase: str,
+                        batch: int):
+    """Non-weight runtime inputs per phase (order matters)."""
+    L, B, C, D = cfg.n_layers, batch, cfg.ctx, cfg.d_model
+    if phase == "prefill":
+        return [("tokens", (B, C), "i32")]
+    kv_dt = "u8" if variant == "simquant" else "f32"
+    specs = [("token", (B,), "i32"), ("pos", (B,), "i32"),
+             ("k_cache", (L, B, C, D), kv_dt),
+             ("v_cache", (L, B, C, D), kv_dt)]
+    if variant == "simquant":
+        specs += [("k_min", (L, B, 1, D), "f32"),
+                  ("k_step", (L, B, 1, D), "f32"),
+                  ("v_min", (L, B, 1, D), "f32"),
+                  ("v_step", (L, B, 1, D), "f32")]
+    return specs
+
+
+_DT = {"f32": jnp.float32, "i8": jnp.int8, "u8": jnp.uint8, "i32": jnp.int32}
+
+
+def lower_graph(cfg: model.ModelConfig, variant: str, phase: str,
+                batch: int) -> tuple[str, list, list]:
+    """Lower one graph; returns (hlo_text, input_specs, output_specs)."""
+    w_specs = [(n, s, d) for n, s, d in model.input_manifest(cfg, variant)]
+    r_specs = runtime_input_specs(cfg, variant, phase, batch)
+    w_avals = [jax.ShapeDtypeStruct(s, _DT[d]) for _, s, d in w_specs]
+    r_avals = [jax.ShapeDtypeStruct(s, _DT[d]) for _, s, d in r_specs]
+
+    if phase == "prefill":
+        fn = model.prefill_fn(cfg, variant)
+    else:
+        fn = model.decode_fn(cfg, variant)
+    lowered = jax.jit(lambda w, *r: fn(list(w), *r)).lower(
+        tuple(w_avals), *r_avals)
+    out_specs = []
+    out_tree = jax.tree.flatten(lowered.out_info)[0]
+    for info in out_tree:
+        out_specs.append({"shape": list(info.shape),
+                          "dtype": str(np.dtype(info.dtype))})
+    return to_hlo_text(lowered), w_specs + r_specs, out_specs
+
+
+# ---------------------------------------------------------------------------
+# Golden outputs: run each prefill graph in python with python-prepared
+# quantized weights; rust must reproduce within tolerance.
+# ---------------------------------------------------------------------------
+
+def prepare_weight_inputs(cfg: model.ModelConfig, variant: str, params: dict,
+                          stats: dict) -> list[np.ndarray]:
+    """Build the flattened weight-input list in manifest order."""
+    flat = []
+    for name, shape, dtype in model.input_manifest(cfg, variant):
+        parts = name.split(".")
+        if len(parts) <= 2:   # global or per-layer norm/bias (h0.ln1_g etc.)
+            flat.append(np.asarray(params[name], np.float32))
+            continue
+        layer_linear = ".".join(parts[:2])            # e.g. h0.qkv
+        suffix = parts[2]
+        key = f"{layer_linear}_w"
+        w = np.asarray(params[key], np.float32)
+        ins = quantizers.prepare_linear(variant, w, stats.get(layer_linear),
+                                        zq_group=cfg.zq_group)
+        names = [e[0] for e in model.linear_entries(
+            variant, w.shape[0], w.shape[1], cfg)]
+        flat.append(ins[names.index(suffix)])
+    return flat
+
+
+def golden_outputs(cfg: model.ModelConfig, variant: str, params: dict,
+                   stats: dict, batch: int, seed: int = 99):
+    """Golden prefill logits for the cross-language contract test."""
+    rng = corpus.XorShift64Star(seed)
+    tokens = np.asarray(
+        [[1] + [2 + rng.next_below(28) for _ in range(cfg.ctx - 1)]
+         for _ in range(batch)], np.int32)
+    flat = prepare_weight_inputs(cfg, variant, params, stats)
+    logits, k, v = model.prefill(cfg, variant,
+                                 [jnp.asarray(w) for w in flat],
+                                 jnp.asarray(tokens))
+    return tokens, np.asarray(logits, np.float32)
+
+
+# ---------------------------------------------------------------------------
+# Main
+# ---------------------------------------------------------------------------
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--out-dir", default="../artifacts")
+    ap.add_argument("--ckpt-dir", default="../checkpoints")
+    ap.add_argument("--models", default="gpt2-tiny,gpt2-small,gpt2-med")
+    ap.add_argument("--variants", default=",".join(model.VARIANTS))
+    ap.add_argument("--batches", default="1,8")
+    ap.add_argument("--calib-steps", type=int, default=8)
+    ap.add_argument("--golden-models", default="gpt2-tiny,gpt2-small",
+                    help="models that get golden contract outputs")
+    args = ap.parse_args()
+
+    os.makedirs(args.out_dir, exist_ok=True)
+    batches = [int(b) for b in args.batches.split(",")]
+    manifest = {"models": {}, "graphs": {}, "corpus": {
+        "seed": 1234, "n_train": 200_000, "n_valid": 20_000}}
+    golden: dict[str, np.ndarray] = {}
+
+    for mname in args.models.split(","):
+        cfg = model.MODELS[mname]
+        manifest["models"][mname] = {
+            "d_model": cfg.d_model, "n_layers": cfg.n_layers,
+            "n_heads": cfg.n_heads, "ctx": cfg.ctx, "vocab": cfg.vocab,
+            "zq_group": cfg.zq_group, "n_params": cfg.n_params()}
+
+        ckpt_path = os.path.join(args.ckpt_dir, f"{mname}.ckpt.bin")
+        if not os.path.exists(ckpt_path):
+            raise SystemExit(f"missing checkpoint {ckpt_path}; "
+                             "run `python -m compile.train` first")
+        params = {k: jnp.asarray(v)
+                  for k, v in tensorfile.load(ckpt_path).items()}
+
+        print(f"[{mname}] calibrating ({args.calib_steps} windows)...",
+              flush=True)
+        stats = calibrate(cfg, params, n_batches=args.calib_steps)
+
+        # export checkpoint + calibration stats for the rust quantizers
+        tensors = {k: np.asarray(v, np.float32) for k, v in params.items()}
+        for lname, st in stats.items():
+            tensors[f"calib.{lname}.absmax"] = st.act_absmax
+            tensors[f"calib.{lname}.meanabs"] = st.act_meanabs
+            tensors[f"calib.{lname}.sqsum"] = st.act_sqsum
+            tensors[f"calib.{lname}.count"] = np.asarray(
+                [st.count], np.int32)
+        tensorfile.save(os.path.join(args.out_dir, f"{mname}.weights.bin"),
+                        tensors)
+
+        for variant in args.variants.split(","):
+            for phase in ("prefill", "decode"):
+                for b in batches:
+                    key = f"{mname}/{variant}/{phase}/b{b}"
+                    fname = f"{mname}_{variant}_{phase}_b{b}.hlo.txt"
+                    t0 = time.time()
+                    hlo, in_specs, out_specs = lower_graph(
+                        cfg, variant, phase, b)
+                    with open(os.path.join(args.out_dir, fname), "w") as f:
+                        f.write(hlo)
+                    manifest["graphs"][key] = {
+                        "file": fname,
+                        "inputs": [{"name": n, "shape": list(s), "dtype": d}
+                                   for n, s, d in in_specs],
+                        "outputs": out_specs,
+                    }
+                    print(f"  lowered {key} ({time.time() - t0:.1f}s, "
+                          f"{len(hlo) / 1e6:.2f} MB)", flush=True)
+
+            if mname in args.golden_models.split(","):
+                toks, logits = golden_outputs(cfg, variant, params, stats,
+                                              batch=1)
+                golden[f"{mname}.{variant}.tokens"] = toks
+                golden[f"{mname}.{variant}.logits"] = logits
+
+    tensorfile.save(os.path.join(args.out_dir, "golden.bin"), golden)
+    with open(os.path.join(args.out_dir, "manifest.json"), "w") as f:
+        json.dump(manifest, f, indent=1)
+    print(f"wrote {len(manifest['graphs'])} graphs + manifest + golden")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,114 @@
+"""Synthetic corpus: a deterministic Zipfian character-level language.
+
+Stands in for WikiText-2 (DESIGN.md §3): the perplexity experiments need a
+corpus with (a) a learnable distribution so a small trained model separates
+quantization methods, and (b) bit-identical generation from Rust and Python
+so both sides agree on the evaluation split without shipping data.
+
+The generator is a fixed-vocabulary Zipf word process over a xorshift64*
+PRNG. `rust/src/corpus/` implements the identical algorithm; the
+cross-language test compares checksums of the first 4 KiB.
+
+Token alphabet (vocab = 32):
+  0 PAD, 1 BOS, 2..27 'a'..'z', 28 ' ', 29 '.', 30 EOS, 31 unused
+"""
+
+from __future__ import annotations
+
+import numpy as np
+
+PAD, BOS, EOS = 0, 1, 30
+SPACE, PERIOD = 28, 29
+VOCAB_SIZE = 32
+N_WORDS = 512          # synthetic lexicon size
+MIN_WLEN, MAX_WLEN = 2, 8
+SENT_MIN, SENT_MAX = 4, 12  # words per sentence
+
+MASK64 = (1 << 64) - 1
+
+
+class XorShift64Star:
+    """xorshift64* PRNG — mirrored exactly in rust/src/corpus/rng.rs."""
+
+    def __init__(self, seed: int):
+        self.state = (seed or 0x9E3779B97F4A7C15) & MASK64
+
+    def next_u64(self) -> int:
+        x = self.state
+        x ^= (x >> 12)
+        x ^= (x << 25) & MASK64
+        x ^= (x >> 27)
+        self.state = x
+        return (x * 0x2545F4914F6CDD1D) & MASK64
+
+    def next_below(self, n: int) -> int:
+        """Unbiased-enough modulo draw (both sides use the same rule)."""
+        return self.next_u64() % n
+
+    def next_f64(self) -> float:
+        return (self.next_u64() >> 11) / float(1 << 53)
+
+
+def build_lexicon(seed: int = 0xC0FFEE) -> list[list[int]]:
+    """Deterministic lexicon: N_WORDS words of token ids (letters only)."""
+    rng = XorShift64Star(seed)
+    words = []
+    for _ in range(N_WORDS):
+        wlen = MIN_WLEN + rng.next_below(MAX_WLEN - MIN_WLEN + 1)
+        words.append([2 + rng.next_below(26) for _ in range(wlen)])
+    return words
+
+
+def zipf_cdf(n: int, s: float = 1.1) -> list[float]:
+    """Zipf CDF with strictly sequential f64 summation — bit-identical to
+    rust/src/corpus (numpy's pairwise sum would differ in final ulps and
+    occasionally flip a binary-search draw)."""
+    w = [float(r) ** (-s) for r in range(1, n + 1)]
+    total = 0.0
+    for x in w:
+        total += x
+    out, acc = [], 0.0
+    for x in w:
+        acc += x / total
+        out.append(acc)
+    return out
+
+
+def generate_tokens(n_tokens: int, seed: int = 1234) -> np.ndarray:
+    """Generate a token stream of exactly n_tokens ids (BOS-prefixed)."""
+    lex = build_lexicon()
+    cdf = zipf_cdf(N_WORDS)
+    rng = XorShift64Star(seed)
+    out = [BOS]
+    while len(out) < n_tokens:
+        sent_len = SENT_MIN + rng.next_below(SENT_MAX - SENT_MIN + 1)
+        for wi in range(sent_len):
+            u = rng.next_f64()
+            # binary search over the zipf cdf (same branch structure in rust)
+            lo, hi = 0, N_WORDS - 1
+            while lo < hi:
+                mid = (lo + hi) // 2
+                if cdf[mid] < u:
+                    lo = mid + 1
+                else:
+                    hi = mid
+            out.extend(lex[lo])
+            out.append(SPACE if wi + 1 < sent_len else PERIOD)
+            if len(out) >= n_tokens:
+                break
+    return np.asarray(out[:n_tokens], dtype=np.int32)
+
+
+def train_valid_split(n_train: int, n_valid: int, seed: int = 1234):
+    """Shared split rule: one stream, first n_train tokens train, next valid."""
+    stream = generate_tokens(n_train + n_valid, seed)
+    return stream[:n_train], stream[n_train:]
+
+
+def checksum(tokens: np.ndarray) -> int:
+    """FNV-1a over token bytes — cross-language corpus identity check."""
+    h = 0xCBF29CE484222325
+    for t in tokens:
+        h ^= int(t) & 0xFF
+        h = (h * 0x100000001B3) & MASK64
+    return h

@@ -1,0 +1,9 @@
+"""L1 Pallas kernels (interpret=True on CPU; see DESIGN.md §2).
+
+Modules:
+  ref         — pure-jnp correctness oracles for every kernel
+  quantize    — affine quantize/dequantize, token quantize, W8 matmul
+  fused_qgemm — Alg. 2 fused online-quantize + int8 GEMM (+unfused ablation)
+  smoothquant — fused smoothing + quantize + int8 GEMM
+  simquant    — KV-cache per-channel min/max encode/decode + quantized attend
+"""

@@ -1,0 +1,129 @@
+"""L1 Pallas kernel: fused online quantize + INT8 GEMM (paper Alg. 2).
+
+The paper fuses activation quantization into the GEMM so the fp activations
+are read from HBM exactly once (§A.8 bandwidth argument: (2 + b/8)|W| vs
+(2 + 2b/8)|W| bytes).  The CUDA version uses ``dp4a``/``mma.sync``; the TPU
+adaptation quantizes the activation tile in VMEM and issues an
+MXU matmul on the (dequant-free) integer codes, folding both scales into
+the f32 epilogue:
+
+    O = (A_q @ W_q) * delta_A * delta_W          (per-row x per-col scales)
+
+BlockSpec schedule: grid (M/BM, N/BN); each step holds
+  A tile   [BM, K]  f32   (full-K strip -> row absmax computed in-kernel)
+  W tile   [K, BN]  i8
+  O tile   [BM, BN] f32
+VMEM at BM=BN=128, K=4096: 128*4096*4 + 4096*128 + 128*128*4 B ~= 2.6 MiB.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+BM = 128
+BN = 128
+
+
+def _cdiv(a: int, b: int) -> int:
+    return (a + b - 1) // b
+
+
+def _qgemm_kernel(a_ref, wq_ref, wd_ref, o_ref, *, qmax):
+    """Alg. 2 body: token-quantize the A tile, int GEMM, scale epilogue."""
+    a = a_ref[...]
+    # online activation quantization (per-row symmetric)
+    amax = jnp.maximum(jnp.max(jnp.abs(a), axis=-1, keepdims=True), 1e-8)
+    a_delta = amax / qmax                                        # [BM, 1]
+    a_q = jnp.clip(jnp.round(a / a_delta), -qmax - 1, qmax)
+    # integer GEMM with f32 accumulation (interpret-mode stand-in for the
+    # MXU int8 path; codes are exact integers so f32 accumulation is exact
+    # for K < 2^15 at 8 bits)
+    acc = jnp.dot(a_q, wq_ref[...].astype(jnp.float32),
+                  preferred_element_type=jnp.float32)
+    o_ref[...] = acc * a_delta * wd_ref[...]
+
+
+@functools.partial(jax.jit, static_argnames=("bits",))
+def qgemm_fused(a: jnp.ndarray, w_q: jnp.ndarray, w_delta: jnp.ndarray,
+                bits: int = 8) -> jnp.ndarray:
+    """Fused quantize+GEMM. a: [M,K] f32, w_q: [K,N] int8, w_delta: [1,N].
+
+    Returns f32 [M,N] ~= a @ (w_q * w_delta). Matches ref.qgemm_fused.
+    """
+    _, qmax = -(2 ** (bits - 1)), 2 ** (bits - 1) - 1
+    m, k = a.shape
+    _, n = w_q.shape
+    grid = (_cdiv(m, BM), _cdiv(n, BN))
+    return pl.pallas_call(
+        functools.partial(_qgemm_kernel, qmax=qmax),
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((BM, k), lambda i, j: (i, 0)),
+            pl.BlockSpec((k, BN), lambda i, j: (0, j)),
+            pl.BlockSpec((1, BN), lambda i, j: (0, j)),
+        ],
+        out_specs=pl.BlockSpec((BM, BN), lambda i, j: (i, j)),
+        out_shape=jax.ShapeDtypeStruct((m, n), jnp.float32),
+        interpret=True,
+    )(a, w_q, w_delta)
+
+
+def _qgemm_unfused_quant_kernel(a_ref, q_ref, d_ref, *, qmax):
+    a = a_ref[...]
+    amax = jnp.maximum(jnp.max(jnp.abs(a), axis=-1, keepdims=True), 1e-8)
+    d = amax / qmax
+    q_ref[...] = jnp.clip(jnp.round(a / d), -qmax - 1, qmax).astype(jnp.int8)
+    d_ref[...] = d
+
+
+def _qgemm_unfused_mm_kernel(aq_ref, ad_ref, wq_ref, wd_ref, o_ref):
+    acc = jnp.dot(aq_ref[...].astype(jnp.float32),
+                  wq_ref[...].astype(jnp.float32),
+                  preferred_element_type=jnp.float32)
+    o_ref[...] = acc * ad_ref[...] * wd_ref[...]
+
+
+@functools.partial(jax.jit, static_argnames=("bits",))
+def qgemm_unfused(a: jnp.ndarray, w_q: jnp.ndarray, w_delta: jnp.ndarray,
+                  bits: int = 8) -> jnp.ndarray:
+    """Ablation baseline: separate quantize kernel + GEMM kernel.
+
+    Numerically identical to :func:`qgemm_fused`; exists so the fusion
+    ablation (paper §A.8, bench ``ablation_fusion``) compares real lowered
+    modules — the fused path reads A once, this path writes + re-reads the
+    int8 codes through HBM.
+    """
+    _, qmax = -(2 ** (bits - 1)), 2 ** (bits - 1) - 1
+    m, k = a.shape
+    _, n = w_q.shape
+    a_q, a_d = pl.pallas_call(
+        functools.partial(_qgemm_unfused_quant_kernel, qmax=qmax),
+        grid=(_cdiv(m, BM),),
+        in_specs=[pl.BlockSpec((BM, k), lambda i: (i, 0))],
+        out_specs=[
+            pl.BlockSpec((BM, k), lambda i: (i, 0)),
+            pl.BlockSpec((BM, 1), lambda i: (i, 0)),
+        ],
+        out_shape=[
+            jax.ShapeDtypeStruct((m, k), jnp.int8),
+            jax.ShapeDtypeStruct((m, 1), jnp.float32),
+        ],
+        interpret=True,
+    )(a)
+    return pl.pallas_call(
+        _qgemm_unfused_mm_kernel,
+        grid=(_cdiv(m, BM), _cdiv(n, BN)),
+        in_specs=[
+            pl.BlockSpec((BM, k), lambda i, j: (i, 0)),
+            pl.BlockSpec((BM, 1), lambda i, j: (i, 0)),
+            pl.BlockSpec((k, BN), lambda i, j: (0, j)),
+            pl.BlockSpec((1, BN), lambda i, j: (0, j)),
+        ],
+        out_specs=pl.BlockSpec((BM, BN), lambda i, j: (i, j)),
+        out_shape=jax.ShapeDtypeStruct((m, n), jnp.float32),
+        interpret=True,
+    )(a_q, a_d, w_q, w_delta)

@@ -1,0 +1,171 @@
+"""L1 Pallas kernels: elementwise quantize / dequantize (Eq. 1, Eqs. 10-11).
+
+Design notes (TPU adaptation of the paper's CUDA kernels, DESIGN.md §2):
+
+* The paper stages HBM -> SMEM with ``cudaMemcpyAsync`` and quantizes in a
+  thread-block tile.  Here the HBM->VMEM schedule is expressed with a
+  ``BlockSpec`` grid; each grid step owns one (BLOCK_R, BLOCK_C) tile in
+  VMEM and applies the affine map ``clip(round(x/delta) + z, qmin, qmax)``.
+* Scale *estimation* is split from scale *application*, exactly like the
+  paper's runtime: delta/z come either from offline calibration or from the
+  online EMA tracker (Alg. 1, implemented at L3 in rust); the kernel is the
+  pure apply stage, so it stays a streaming elementwise pass.
+* VMEM budget: one f32 in-tile + one f32 out-tile = 2 * 128*128*4 B =
+  128 KiB per grid step, far under the ~16 MiB VMEM of a TPU core; tiles
+  are MXU/VPU-aligned (last dim 128).
+* ``interpret=True`` everywhere: the CPU PJRT plugin cannot execute Mosaic
+  custom-calls; numerics are validated through the interpret path.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+BLOCK_R = 128
+BLOCK_C = 128
+
+
+def _cdiv(a: int, b: int) -> int:
+    return (a + b - 1) // b
+
+
+def _quantize_affine_kernel(x_ref, delta_ref, z_ref, o_ref, *, qmin, qmax):
+    """o = clip(round(x / delta) + z, qmin, qmax)  (Eq. 1)."""
+    x = x_ref[...]
+    delta = delta_ref[0]
+    z = z_ref[0]
+    q = jnp.clip(jnp.round(x / delta) + z, qmin, qmax)
+    o_ref[...] = q.astype(o_ref.dtype)
+
+
+@functools.partial(jax.jit, static_argnames=("bits",))
+def quantize_affine(x: jnp.ndarray, delta: jnp.ndarray, z: jnp.ndarray,
+                    bits: int = 8) -> jnp.ndarray:
+    """Per-tensor affine quantization of a 2-D tensor with given (delta, z).
+
+    x: [R, C] f32; delta, z: scalars (passed as [1] arrays).
+    Returns int8 codes (int32 for bits > 8).
+    """
+    qmin, qmax = -(2 ** (bits - 1)), 2 ** (bits - 1) - 1
+    r, c = x.shape
+    out_dtype = jnp.int8 if bits <= 8 else jnp.int32
+    grid = (_cdiv(r, BLOCK_R), _cdiv(c, BLOCK_C))
+    return pl.pallas_call(
+        functools.partial(_quantize_affine_kernel, qmin=qmin, qmax=qmax),
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((BLOCK_R, BLOCK_C), lambda i, j: (i, j)),
+            pl.BlockSpec((1,), lambda i, j: (0,)),
+            pl.BlockSpec((1,), lambda i, j: (0,)),
+        ],
+        out_specs=pl.BlockSpec((BLOCK_R, BLOCK_C), lambda i, j: (i, j)),
+        out_shape=jax.ShapeDtypeStruct((r, c), out_dtype),
+        interpret=True,
+    )(x, delta.reshape(1), z.reshape(1))
+
+
+def _dequantize_affine_kernel(q_ref, delta_ref, z_ref, o_ref):
+    """o = delta * (q - z)  (Eq. 11, DequantizeLinear)."""
+    q = q_ref[...].astype(jnp.float32)
+    o_ref[...] = delta_ref[0] * (q - z_ref[0])
+
+
+@jax.jit
+def dequantize_affine(q: jnp.ndarray, delta: jnp.ndarray,
+                      z: jnp.ndarray) -> jnp.ndarray:
+    """Inverse of :func:`quantize_affine` (exact on unclipped codes)."""
+    r, c = q.shape
+    grid = (_cdiv(r, BLOCK_R), _cdiv(c, BLOCK_C))
+    return pl.pallas_call(
+        _dequantize_affine_kernel,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((BLOCK_R, BLOCK_C), lambda i, j: (i, j)),
+            pl.BlockSpec((1,), lambda i, j: (0,)),
+            pl.BlockSpec((1,), lambda i, j: (0,)),
+        ],
+        out_specs=pl.BlockSpec((BLOCK_R, BLOCK_C), lambda i, j: (i, j)),
+        out_shape=jax.ShapeDtypeStruct((r, c), jnp.float32),
+        interpret=True,
+    )(q, delta.reshape(1), z.reshape(1))
+
+
+def _token_quantize_kernel(x_ref, q_ref, delta_ref, *, qmax):
+    """Row-wise (token-wise) symmetric quantize: one pass, scale + codes.
+
+    The full K extent of each row block lives in VMEM, so the row absmax
+    reduction and the quantize are fused in a single streaming pass —
+    the TPU analogue of the paper's warp-level reduction + quantize fusion.
+    """
+    x = x_ref[...]
+    amax = jnp.maximum(jnp.max(jnp.abs(x), axis=-1, keepdims=True), 1e-8)
+    delta = amax / qmax
+    q_ref[...] = jnp.clip(jnp.round(x / delta), -qmax - 1, qmax).astype(jnp.int8)
+    delta_ref[...] = delta
+
+
+@functools.partial(jax.jit, static_argnames=("bits",))
+def token_quantize(x: jnp.ndarray, bits: int = 8):
+    """Token-wise symmetric quantization (ZeroQuant activation scheme).
+
+    x: [T, D] f32. Returns (q int8 [T, D], delta f32 [T, 1]).
+    VMEM: BLOCK_R * D f32 in + BLOCK_R * D i8 out; for D up to ~8k this is
+    ~4.5 MiB per step at BLOCK_R=128 — within budget without K-tiling.
+    """
+    _, qmax = -(2 ** (bits - 1)), 2 ** (bits - 1) - 1
+    t, d = x.shape
+    grid = (_cdiv(t, BLOCK_R),)
+    return pl.pallas_call(
+        functools.partial(_token_quantize_kernel, qmax=qmax),
+        grid=grid,
+        in_specs=[pl.BlockSpec((BLOCK_R, d), lambda i: (i, 0))],
+        out_specs=[
+            pl.BlockSpec((BLOCK_R, d), lambda i: (i, 0)),
+            pl.BlockSpec((BLOCK_R, 1), lambda i: (i, 0)),
+        ],
+        out_shape=[
+            jax.ShapeDtypeStruct((t, d), jnp.int8),
+            jax.ShapeDtypeStruct((t, 1), jnp.float32),
+        ],
+        interpret=True,
+    )(x)
+
+
+def _channel_dequant_matmul_kernel(q_ref, delta_ref, x_ref, o_ref):
+    """o = x @ (q * delta)  — dequantize-then-matmul for W8A16 layers.
+
+    Shared-SRAM dequantization from the paper mapped to VMEM: the int8
+    weight tile is dequantized in-register and fed straight to the MXU.
+    """
+    w = q_ref[...].astype(jnp.float32) * delta_ref[...]
+    o_ref[...] = jnp.dot(x_ref[...], w, preferred_element_type=jnp.float32)
+
+
+@jax.jit
+def channel_dequant_matmul(x: jnp.ndarray, w_q: jnp.ndarray,
+                           w_delta: jnp.ndarray) -> jnp.ndarray:
+    """x: [M, K] f32, w_q: [K, N] int8, w_delta: [1, N]. Returns [M, N].
+
+    Grid over N tiles only; the whole K strip stays resident (weights for
+    one output tile: K*BLOCK_C i8 + K*BLOCK_C*4 B activations — documented
+    in DESIGN.md §Perf).
+    """
+    m, k = x.shape
+    _, n = w_q.shape
+    grid = (_cdiv(n, BLOCK_C),)
+    return pl.pallas_call(
+        _channel_dequant_matmul_kernel,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((k, BLOCK_C), lambda j: (0, j)),
+            pl.BlockSpec((1, BLOCK_C), lambda j: (0, j)),
+            pl.BlockSpec((m, k), lambda j: (0, 0)),
+        ],
+        out_specs=pl.BlockSpec((m, BLOCK_C), lambda j: (0, j)),
+        out_shape=jax.ShapeDtypeStruct((m, n), jnp.float32),
+        interpret=True,
+    )(w_q, w_delta, x)

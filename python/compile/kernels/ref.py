@@ -1,0 +1,226 @@
+"""Pure-jnp reference oracles for every L1 Pallas kernel.
+
+These are the correctness ground truth: each Pallas kernel in this package
+must match the corresponding function here to float tolerance (pytest +
+hypothesis sweep shapes/dtypes in python/tests/test_kernels.py).
+
+Quantization math follows the paper:
+
+  Eq. (1)  X_hat = clip(round(X / delta) + z, range)
+  Eq. (2)  delta_t = alpha * delta_{t-1} + (1-alpha) * max(eps, absmax(X_t))
+  Alg. 1   AsyncQuant — EMA scale tracking + zero-point from running mean
+  Alg. 2   QuantGEMMFused — A_q = round(A/delta)+z ; O = int8_GEMM(A_q, W_q)
+  Thm. A.2 SimQuant: per-channel min/max affine quantization
+  SmoothQuant (Xiao et al.): s_j = max|X_j|^a / max|W_j|^(1-a)
+"""
+
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+INT8_MIN = -128
+INT8_MAX = 127
+
+
+def qrange(bits: int) -> tuple[int, int]:
+    """Symmetric signed integer range for a bitwidth (e.g. 8 -> (-128, 127))."""
+    return -(2 ** (bits - 1)), 2 ** (bits - 1) - 1
+
+
+# ---------------------------------------------------------------------------
+# AbsMax (per-tensor symmetric, scale from the absolute maximum)
+# ---------------------------------------------------------------------------
+
+def absmax_scale(x: jnp.ndarray, bits: int = 8, eps: float = 1e-8) -> jnp.ndarray:
+    """delta = absmax(x) / qmax  (scalar, per-tensor)."""
+    _, qmax = qrange(bits)
+    return jnp.maximum(jnp.max(jnp.abs(x)), eps) / qmax
+
+
+def absmax_quantize(x: jnp.ndarray, bits: int = 8):
+    """Per-tensor absmax quantization. Returns (q int8-valued, delta)."""
+    qmin, qmax = qrange(bits)
+    delta = absmax_scale(x, bits)
+    q = jnp.clip(jnp.round(x / delta), qmin, qmax)
+    return q.astype(jnp.int8 if bits == 8 else jnp.int32), delta
+
+
+def absmax_dequantize(q: jnp.ndarray, delta: jnp.ndarray) -> jnp.ndarray:
+    return q.astype(jnp.float32) * delta
+
+
+# ---------------------------------------------------------------------------
+# ZeroPoint (per-tensor asymmetric / affine)
+# ---------------------------------------------------------------------------
+
+def zeropoint_params(x: jnp.ndarray, bits: int = 8, eps: float = 1e-8):
+    """Affine params: scale = (max-min)/(2^b - 1); zp shifts min to qmin."""
+    qmin, qmax = qrange(bits)
+    xmin, xmax = jnp.min(x), jnp.max(x)
+    scale = jnp.maximum(xmax - xmin, eps) / (qmax - qmin)
+    zp = jnp.round(qmin - xmin / scale)
+    return scale, zp
+
+
+def zeropoint_quantize(x: jnp.ndarray, bits: int = 8):
+    """Per-tensor affine quantization. Returns (q, scale, zero_point)."""
+    qmin, qmax = qrange(bits)
+    scale, zp = zeropoint_params(x, bits)
+    q = jnp.clip(jnp.round(x / scale) + zp, qmin, qmax)
+    return q.astype(jnp.int8 if bits == 8 else jnp.int32), scale, zp
+
+
+def zeropoint_dequantize(q, scale, zp) -> jnp.ndarray:
+    return (q.astype(jnp.float32) - zp) * scale
+
+
+# ---------------------------------------------------------------------------
+# Symmetric per-channel (axis) quantization — weights
+# ---------------------------------------------------------------------------
+
+def symmetric_quantize_channel(w: jnp.ndarray, bits: int = 8, axis: int = 0,
+                               eps: float = 1e-8):
+    """Per-channel symmetric quantization along `axis` (kept axis).
+
+    For a weight [K, N] with axis=1, each output channel n gets its own
+    delta_n = absmax(w[:, n]) / qmax.  Returns (q, delta) with delta shaped
+    to broadcast against w.
+    """
+    qmin, qmax = qrange(bits)
+    reduce_axes = tuple(i for i in range(w.ndim) if i != axis)
+    amax = jnp.maximum(jnp.max(jnp.abs(w), axis=reduce_axes, keepdims=True), eps)
+    delta = amax / qmax
+    q = jnp.clip(jnp.round(w / delta), qmin, qmax)
+    return q.astype(jnp.int8 if bits == 8 else jnp.int32), delta
+
+
+def symmetric_dequantize_channel(q: jnp.ndarray, delta: jnp.ndarray) -> jnp.ndarray:
+    return q.astype(jnp.float32) * delta
+
+
+# ---------------------------------------------------------------------------
+# ZeroQuant: group-wise weight quantization + token-wise activation quant
+# ---------------------------------------------------------------------------
+
+def zeroquant_group_quantize(w: jnp.ndarray, bits: int = 8, group: int = 64,
+                             eps: float = 1e-8):
+    """Group-wise symmetric quantization: rows split into groups of `group`
+    along axis 0, one scale per (group, column). w: [K, N], K % group == 0.
+    Returns (q [K,N], delta [K//group, 1, N])."""
+    qmin, qmax = qrange(bits)
+    k, n = w.shape
+    assert k % group == 0, f"K={k} not divisible by group={group}"
+    wg = w.reshape(k // group, group, n)
+    amax = jnp.maximum(jnp.max(jnp.abs(wg), axis=1, keepdims=True), eps)
+    delta = amax / qmax
+    q = jnp.clip(jnp.round(wg / delta), qmin, qmax)
+    return q.reshape(k, n).astype(jnp.int8), delta
+
+
+def zeroquant_group_dequantize(q: jnp.ndarray, delta: jnp.ndarray,
+                               group: int = 64) -> jnp.ndarray:
+    k, n = q.shape
+    qg = q.reshape(k // group, group, n).astype(jnp.float32)
+    return (qg * delta).reshape(k, n)
+
+
+def token_quantize(x: jnp.ndarray, bits: int = 8, eps: float = 1e-8):
+    """Token-wise (row-wise) symmetric activation quantization. x: [T, D].
+    Returns (q [T,D] int8, delta [T,1])."""
+    qmin, qmax = qrange(bits)
+    amax = jnp.maximum(jnp.max(jnp.abs(x), axis=-1, keepdims=True), eps)
+    delta = amax / qmax
+    q = jnp.clip(jnp.round(x / delta), qmin, qmax)
+    return q.astype(jnp.int8), delta
+
+
+# ---------------------------------------------------------------------------
+# SmoothQuant: activation-outlier migration (Xiao et al. 2023)
+# ---------------------------------------------------------------------------
+
+def smoothquant_scales(act_absmax: jnp.ndarray, w: jnp.ndarray,
+                       alpha: float = 0.5, eps: float = 1e-5) -> jnp.ndarray:
+    """Per-input-channel smoothing factors s_j (Lemma A.1 approximation).
+
+    act_absmax: [K] calibration statistic max_t |X[t, j]|.
+    w: [K, N] weight. s_j = max|X_j|^alpha / max|W_j|^(1-alpha).
+    """
+    w_amax = jnp.maximum(jnp.max(jnp.abs(w), axis=1), eps)
+    a_amax = jnp.maximum(act_absmax, eps)
+    s = (a_amax ** alpha) / (w_amax ** (1.0 - alpha))
+    return jnp.maximum(s, eps)
+
+
+def smoothquant_apply(x: jnp.ndarray, w: jnp.ndarray, s: jnp.ndarray):
+    """Migrate difficulty: X' = X / s, W' = W * s (exact: X'W' == XW)."""
+    return x / s[None, :], w * s[:, None]
+
+
+# ---------------------------------------------------------------------------
+# SimQuant: per-channel min/max affine quantization (KV cache, Thm. A.2)
+# ---------------------------------------------------------------------------
+
+def simquant_quantize(x: jnp.ndarray, bits: int = 8, axis: int = -1,
+                      eps: float = 1e-8):
+    """Per-channel affine [vmin, vmax] quantization along channels on `axis`.
+
+    Unsigned codes in [0, 2^b - 1]: q = round((x - vmin)/step).
+    Returns (q, vmin, step) with vmin/step broadcastable against x.
+    Reconstruction error obeys Thm. A.2: |x - dq| <= (max-min)/(2^b - 1).
+    """
+    levels = 2 ** bits - 1
+    reduce_axes = tuple(i for i in range(x.ndim) if i != (axis % x.ndim))
+    vmin = jnp.min(x, axis=reduce_axes, keepdims=True)
+    vmax = jnp.max(x, axis=reduce_axes, keepdims=True)
+    step = jnp.maximum(vmax - vmin, eps) / levels
+    q = jnp.clip(jnp.round((x - vmin) / step), 0, levels)
+    return q.astype(jnp.uint8 if bits <= 8 else jnp.int32), vmin, step
+
+
+def simquant_dequantize(q, vmin, step) -> jnp.ndarray:
+    return q.astype(jnp.float32) * step + vmin
+
+
+# ---------------------------------------------------------------------------
+# Alg. 1 — EMA scale tracking (the online/runtime adaptation rule)
+# ---------------------------------------------------------------------------
+
+def ema_scale_update(delta_prev: jnp.ndarray, x: jnp.ndarray,
+                     alpha: float = 0.9, eps: float = 1e-6) -> jnp.ndarray:
+    """Eq. (2): delta_t = alpha*delta_{t-1} + (1-alpha)*max(eps, absmax(X_t))."""
+    r = jnp.max(jnp.abs(x))
+    return alpha * delta_prev + (1.0 - alpha) * jnp.maximum(r, eps)
+
+
+def async_quant(x: jnp.ndarray, delta_prev: jnp.ndarray, alpha: float = 0.9,
+                eps: float = 1e-6):
+    """Alg. 1 AsyncQuant. Tracks range with EMA, centers with the running
+    mean, emits int8 codes. Returns (q, delta_t, z_t)."""
+    delta_t = ema_scale_update(delta_prev, x, alpha, eps)
+    scale = delta_t / INT8_MAX
+    mu = jnp.mean(x)
+    z = -jnp.round(mu / jnp.maximum(scale, eps))
+    q = jnp.clip(jnp.round(x / jnp.maximum(scale, eps)) + z, INT8_MIN, INT8_MAX)
+    return q.astype(jnp.int8), delta_t, z
+
+
+# ---------------------------------------------------------------------------
+# Alg. 2 — fused online quantize + int8 GEMM
+# ---------------------------------------------------------------------------
+
+def qgemm_fused(a: jnp.ndarray, w_q: jnp.ndarray, w_delta: jnp.ndarray,
+                bits: int = 8, eps: float = 1e-8) -> jnp.ndarray:
+    """Fused QuantGEMM (Alg. 2): token-quantize A online, int8 matmul against
+    pre-quantized W, dequantize with the product of scales.
+
+    a: [M, K] f32 activations; w_q: [K, N] int8; w_delta: [1, N] or [N].
+    Returns f32 [M, N] ~= a @ dequant(w_q).
+    """
+    a_q, a_delta = token_quantize(a, bits, eps)          # [M,K] i8, [M,1]
+    acc = jnp.matmul(a_q.astype(jnp.int32), w_q.astype(jnp.int32))
+    return acc.astype(jnp.float32) * a_delta * w_delta.reshape(1, -1)
+
+
+def gemm_fp(a: jnp.ndarray, w: jnp.ndarray) -> jnp.ndarray:
+    """FP reference for the fused path's accuracy comparisons."""
+    return jnp.matmul(a, w)

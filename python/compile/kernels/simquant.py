@@ -1,0 +1,145 @@
+"""L1 Pallas kernels: SimQuant — per-channel min/max KV-cache quantization.
+
+SimQuant (paper §2, Thm. A.2; after KVQuant, Hooper et al. 2024) stores the
+KV cache as unsigned b-bit codes with per-channel (vmin, step) so that long
+contexts fit in HBM: reconstruction error is bounded by
+(max-min)/(2^b - 1) per channel.
+
+Two kernels:
+  * ``simquant_encode``  — one streaming pass over new KV rows: per-channel
+    min/max reduction + encode (fused, like the paper's warp reduction).
+  * ``simquant_decode_attend`` — decode-step attention that dequantizes the
+    K/V tiles in VMEM right before the MXU ops, so HBM only ever carries
+    codes (the paper's "communication-aware quantization on KV caches").
+
+Channel axis is the head dim (last axis): KV ranges are per-channel stable
+across time steps, which is what makes the per-channel affine scheme work.
+
+VMEM budget (BLOCK_T=128 time steps, D=head_dim<=256):
+  encode: 128*D f32 in + 128*D u8 out + 2*D params  < 192 KiB.
+  attend: T_blk*D codes + dequant f32 tile + q row   < 512 KiB.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+BLOCK_T = 128
+
+
+def _cdiv(a: int, b: int) -> int:
+    return (a + b - 1) // b
+
+
+def _encode_kernel(x_ref, q_ref, vmin_ref, step_ref, *, levels):
+    """Per-channel min/max + affine encode in one VMEM pass."""
+    x = x_ref[...]                                   # [T, D]
+    vmin = jnp.min(x, axis=0, keepdims=True)         # [1, D]
+    vmax = jnp.max(x, axis=0, keepdims=True)
+    step = jnp.maximum(vmax - vmin, 1e-8) / levels
+    q = jnp.clip(jnp.round((x - vmin) / step), 0, levels)
+    q_ref[...] = q.astype(jnp.uint8)
+    vmin_ref[...] = vmin
+    step_ref[...] = step
+
+
+@functools.partial(jax.jit, static_argnames=("bits",))
+def simquant_encode(x: jnp.ndarray, bits: int = 8):
+    """Encode a KV block. x: [T, D] f32 -> (codes u8 [T,D], vmin [1,D], step [1,D]).
+
+    The whole block shares one set of channel params (one KV page); the L3
+    KV-cache manager re-encodes per page, so ranges track the sequence.
+    """
+    levels = 2 ** bits - 1
+    t, d = x.shape
+    return pl.pallas_call(
+        functools.partial(_encode_kernel, levels=levels),
+        grid=(1,),
+        in_specs=[pl.BlockSpec((t, d), lambda i: (0, 0))],
+        out_specs=[
+            pl.BlockSpec((t, d), lambda i: (0, 0)),
+            pl.BlockSpec((1, d), lambda i: (0, 0)),
+            pl.BlockSpec((1, d), lambda i: (0, 0)),
+        ],
+        out_shape=[
+            jax.ShapeDtypeStruct((t, d), jnp.uint8),
+            jax.ShapeDtypeStruct((1, d), jnp.float32),
+            jax.ShapeDtypeStruct((1, d), jnp.float32),
+        ],
+        interpret=True,
+    )(x)
+
+
+def _decode_kernel(q_ref, vmin_ref, step_ref, o_ref):
+    """Dequantize codes: o = q * step + vmin."""
+    o_ref[...] = q_ref[...].astype(jnp.float32) * step_ref[...] + vmin_ref[...]
+
+
+@jax.jit
+def simquant_decode(q: jnp.ndarray, vmin: jnp.ndarray,
+                    step: jnp.ndarray) -> jnp.ndarray:
+    """Dequantize a KV block back to f32. Inverse map of Thm. A.2."""
+    t, d = q.shape
+    grid = (_cdiv(t, BLOCK_T),)
+    return pl.pallas_call(
+        _decode_kernel,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((BLOCK_T, d), lambda i: (i, 0)),
+            pl.BlockSpec((1, d), lambda i: (0, 0)),
+            pl.BlockSpec((1, d), lambda i: (0, 0)),
+        ],
+        out_specs=pl.BlockSpec((BLOCK_T, d), lambda i: (i, 0)),
+        out_shape=jax.ShapeDtypeStruct((t, d), jnp.float32),
+        interpret=True,
+    )(q, vmin, step)
+
+
+def _attend_kernel(qv_ref, kq_ref, kmin_ref, kstep_ref,
+                   vq_ref, vmin_ref, vstep_ref, o_ref, *, scale):
+    """Single-query attention over a quantized KV page.
+
+    K and V arrive as u8 codes; both are dequantized tile-locally in VMEM
+    (the paper's "shared SRAM for dequantization") and never materialize
+    in HBM as f32.
+    """
+    qv = qv_ref[...]                                          # [1, D]
+    k = kq_ref[...].astype(jnp.float32) * kstep_ref[...] + kmin_ref[...]
+    v = vq_ref[...].astype(jnp.float32) * vstep_ref[...] + vmin_ref[...]
+    logits = jnp.dot(qv, k.T, preferred_element_type=jnp.float32) * scale
+    w = jax.nn.softmax(logits, axis=-1)                       # [1, T]
+    o_ref[...] = jnp.dot(w, v, preferred_element_type=jnp.float32)
+
+
+@jax.jit
+def simquant_attend(qv: jnp.ndarray,
+                    k_q: jnp.ndarray, k_min: jnp.ndarray, k_step: jnp.ndarray,
+                    v_q: jnp.ndarray, v_min: jnp.ndarray, v_step: jnp.ndarray
+                    ) -> jnp.ndarray:
+    """Decode-step attention on a SimQuant-compressed KV page.
+
+    qv: [1, D] query; k_q/v_q: [T, D] u8 codes with [1, D] channel params.
+    Returns the attention output [1, D].
+    """
+    t, d = k_q.shape
+    scale = 1.0 / (d ** 0.5)
+    return pl.pallas_call(
+        functools.partial(_attend_kernel, scale=scale),
+        grid=(1,),
+        in_specs=[
+            pl.BlockSpec((1, d), lambda i: (0, 0)),
+            pl.BlockSpec((t, d), lambda i: (0, 0)),
+            pl.BlockSpec((1, d), lambda i: (0, 0)),
+            pl.BlockSpec((1, d), lambda i: (0, 0)),
+            pl.BlockSpec((t, d), lambda i: (0, 0)),
+            pl.BlockSpec((1, d), lambda i: (0, 0)),
+            pl.BlockSpec((1, d), lambda i: (0, 0)),
+        ],
+        out_specs=pl.BlockSpec((1, d), lambda i: (0, 0)),
+        out_shape=jax.ShapeDtypeStruct((1, d), jnp.float32),
+        interpret=True,
+    )(qv, k_q, k_min, k_step, v_q, v_min, v_step)

@@ -1,0 +1,67 @@
+"""L1 Pallas kernel: SmoothQuant smoothing + W8A8 matmul.
+
+SmoothQuant (Xiao et al. 2023; paper §2, Lemma A.1) migrates activation
+outliers into the weights with per-input-channel factors
+``s_j = max|X_j|^alpha / max|W_j|^(1-alpha)`` so both operands quantize
+well at 8 bits.  The smoothing of W happens offline (L3/`quantizers.py`);
+this kernel is the *online* half: divide the activation tile by ``s``,
+token-quantize, and run the int8 GEMM — all in one VMEM residency, so the
+fp activations cross HBM once.
+
+    O = (round((A / s) / dA) @ W_q) * dA * dW
+
+BlockSpec schedule mirrors fused_qgemm (grid (M/BM, N/BN), full-K strips).
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+BM = 128
+BN = 128
+
+
+def _cdiv(a: int, b: int) -> int:
+    return (a + b - 1) // b
+
+
+def _smooth_qgemm_kernel(a_ref, s_ref, wq_ref, wd_ref, o_ref, *, qmax):
+    a = a_ref[...] / s_ref[...]                      # smoothing: X' = X / s
+    amax = jnp.maximum(jnp.max(jnp.abs(a), axis=-1, keepdims=True), 1e-8)
+    a_delta = amax / qmax
+    a_q = jnp.clip(jnp.round(a / a_delta), -qmax - 1, qmax)
+    acc = jnp.dot(a_q, wq_ref[...].astype(jnp.float32),
+                  preferred_element_type=jnp.float32)
+    o_ref[...] = acc * a_delta * wd_ref[...]
+
+
+@functools.partial(jax.jit, static_argnames=("bits",))
+def smooth_qgemm(a: jnp.ndarray, s: jnp.ndarray, w_q: jnp.ndarray,
+                 w_delta: jnp.ndarray, bits: int = 8) -> jnp.ndarray:
+    """Fused smooth + quantize + int8 GEMM.
+
+    a: [M, K] f32; s: [1, K] smoothing factors; w_q: [K, N] int8 codes of
+    the *pre-smoothed* weight W*s; w_delta: [1, N] per-channel scales.
+    Returns f32 [M, N] ~= (a/s) @ (w_q * w_delta)  ~= a @ W.
+    """
+    _, qmax = -(2 ** (bits - 1)), 2 ** (bits - 1) - 1
+    m, k = a.shape
+    _, n = w_q.shape
+    grid = (_cdiv(m, BM), _cdiv(n, BN))
+    return pl.pallas_call(
+        functools.partial(_smooth_qgemm_kernel, qmax=qmax),
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((BM, k), lambda i, j: (i, 0)),
+            pl.BlockSpec((1, k), lambda i, j: (0, 0)),
+            pl.BlockSpec((k, BN), lambda i, j: (0, j)),
+            pl.BlockSpec((1, BN), lambda i, j: (0, j)),
+        ],
+        out_specs=pl.BlockSpec((BM, BN), lambda i, j: (i, j)),
+        out_shape=jax.ShapeDtypeStruct((m, n), jnp.float32),
+        interpret=True,
+    )(a, s, w_q, w_delta)

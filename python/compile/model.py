@@ -1,0 +1,430 @@
+"""L2: GPT-2-style transformer with pluggable quantized linear layers.
+
+This is the compute graph the Rust coordinator serves. Each *variant*
+(quantization method) swaps the implementation — and the runtime input
+signature — of the four linear layers per block, calling the L1 Pallas
+kernels so everything lowers into one HLO module per (model, variant,
+phase).
+
+Variants (paper §2 backends):
+  fp        — f32 weights, plain matmul (the FP16 baseline)
+  absmax    — W8A16, per-tensor absmax weight codes, dequant-matmul
+  zeropoint — W8A16, per-tensor affine codes (scale + zero point)
+  sym8      — W8A16, per-output-channel symmetric codes
+  int8      — W8A8, fused online token-quant + int8 GEMM (Alg. 2)
+  smooth    — W8A8 SmoothQuant: fused smoothing + quant + int8 GEMM
+  zeroquant — group-wise weight codes + token-wise activation quant
+  simquant  — linears as int8; KV cache stored as SimQuant u8 codes
+
+Weights are runtime *inputs* (never baked): Rust quantizes the f32
+checkpoint with `rust/src/quant/` into exactly the entries listed by
+`linear_entries()` and feeds them as PJRT literals. The flattened input
+order is the manifest order (see aot.py).
+
+Phases:
+  prefill: tokens [B, T] -> logits [B, T, V], k/v caches [L, B, T, D]
+  decode:  token [B], pos [B], caches -> logits [B, V], new k/v rows
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import math
+
+import jax
+import jax.numpy as jnp
+
+from .kernels import fused_qgemm as fq
+from .kernels import quantize as qz
+from .kernels import smoothquant as sm
+from . import corpus
+
+# ---------------------------------------------------------------------------
+# Config
+# ---------------------------------------------------------------------------
+
+
+@dataclasses.dataclass(frozen=True)
+class ModelConfig:
+    name: str
+    d_model: int
+    n_layers: int
+    n_heads: int
+    ctx: int = 128
+    vocab: int = corpus.VOCAB_SIZE
+    zq_group: int = 64        # ZeroQuant group size along K
+
+    @property
+    def d_head(self) -> int:
+        return self.d_model // self.n_heads
+
+    @property
+    def d_ff(self) -> int:
+        return 4 * self.d_model
+
+    def n_params(self) -> int:
+        d, v = self.d_model, self.vocab
+        per_layer = (d * 3 * d + 3 * d) + (d * d + d) \
+            + (d * self.d_ff + self.d_ff) + (self.d_ff * d + d) + 4 * d
+        return v * d + self.ctx * d + self.n_layers * per_layer + 2 * d
+
+
+MODELS = {
+    "gpt2-tiny": ModelConfig("gpt2-tiny", d_model=128, n_layers=2, n_heads=4),
+    "gpt2-small": ModelConfig("gpt2-small", d_model=256, n_layers=4, n_heads=8),
+    "gpt2-med": ModelConfig("gpt2-med", d_model=384, n_layers=6, n_heads=8),
+}
+
+VARIANTS = ("fp", "absmax", "zeropoint", "sym8", "int8", "smooth",
+            "zeroquant", "simquant")
+
+
+def block_linears(cfg: ModelConfig):
+    """Linear layers per transformer block: (name, K, N)."""
+    d, f = cfg.d_model, cfg.d_ff
+    return [("qkv", d, 3 * d), ("attn_out", d, d), ("fc1", d, f), ("fc2", f, d)]
+
+
+# ---------------------------------------------------------------------------
+# Parameter initialization + fast f32 training forward
+# ---------------------------------------------------------------------------
+
+def init_params(cfg: ModelConfig, key: jax.Array) -> dict:
+    """GPT-2-style init: N(0, 0.02), residual projections scaled by depth."""
+    keys = iter(jax.random.split(key, 4 + 8 * cfg.n_layers))
+    std = 0.02
+    res_std = std / math.sqrt(2 * cfg.n_layers)
+    p = {
+        "wte": jax.random.normal(next(keys), (cfg.vocab, cfg.d_model)) * std,
+        "wpe": jax.random.normal(next(keys), (cfg.ctx, cfg.d_model)) * std,
+        "lnf_g": jnp.ones((cfg.d_model,)),
+        "lnf_b": jnp.zeros((cfg.d_model,)),
+    }
+    for i in range(cfg.n_layers):
+        d, f = cfg.d_model, cfg.d_ff
+        p[f"h{i}.ln1_g"] = jnp.ones((d,))
+        p[f"h{i}.ln1_b"] = jnp.zeros((d,))
+        p[f"h{i}.ln2_g"] = jnp.ones((d,))
+        p[f"h{i}.ln2_b"] = jnp.zeros((d,))
+        p[f"h{i}.qkv_w"] = jax.random.normal(next(keys), (d, 3 * d)) * std
+        p[f"h{i}.qkv_b"] = jnp.zeros((3 * d,))
+        p[f"h{i}.attn_out_w"] = jax.random.normal(next(keys), (d, d)) * res_std
+        p[f"h{i}.attn_out_b"] = jnp.zeros((d,))
+        p[f"h{i}.fc1_w"] = jax.random.normal(next(keys), (d, f)) * std
+        p[f"h{i}.fc1_b"] = jnp.zeros((f,))
+        p[f"h{i}.fc2_w"] = jax.random.normal(next(keys), (f, d)) * res_std
+        p[f"h{i}.fc2_b"] = jnp.zeros((d,))
+    return p
+
+
+def _ln(x, g, b, eps=1e-5):
+    mu = jnp.mean(x, axis=-1, keepdims=True)
+    var = jnp.var(x, axis=-1, keepdims=True)
+    return (x - mu) / jnp.sqrt(var + eps) * g + b
+
+
+def _split_heads(x, n_heads):
+    b, t, d = x.shape
+    return x.reshape(b, t, n_heads, d // n_heads).transpose(0, 2, 1, 3)
+
+
+def _merge_heads(x):
+    b, h, t, dh = x.shape
+    return x.transpose(0, 2, 1, 3).reshape(b, t, h * dh)
+
+
+def forward_train(cfg: ModelConfig, params: dict, tokens: jnp.ndarray
+                  ) -> jnp.ndarray:
+    """Fast f32 forward for training (no Pallas). tokens [B,T] -> logits."""
+    b, t = tokens.shape
+    x = params["wte"][tokens] + params["wpe"][:t][None]
+    mask = jnp.tril(jnp.ones((t, t), dtype=bool))
+    for i in range(cfg.n_layers):
+        h = _ln(x, params[f"h{i}.ln1_g"], params[f"h{i}.ln1_b"])
+        qkv = h @ params[f"h{i}.qkv_w"] + params[f"h{i}.qkv_b"]
+        q, k, v = jnp.split(qkv, 3, axis=-1)
+        q, k, v = (_split_heads(z, cfg.n_heads) for z in (q, k, v))
+        att = jnp.einsum("bhqd,bhkd->bhqk", q, k) / math.sqrt(cfg.d_head)
+        att = jnp.where(mask[None, None], att, -1e9)
+        att = jax.nn.softmax(att, axis=-1)
+        o = _merge_heads(jnp.einsum("bhqk,bhkd->bhqd", att, v))
+        x = x + o @ params[f"h{i}.attn_out_w"] + params[f"h{i}.attn_out_b"]
+        h = _ln(x, params[f"h{i}.ln2_g"], params[f"h{i}.ln2_b"])
+        h = jax.nn.gelu(h @ params[f"h{i}.fc1_w"] + params[f"h{i}.fc1_b"])
+        x = x + h @ params[f"h{i}.fc2_w"] + params[f"h{i}.fc2_b"]
+    x = _ln(x, params["lnf_g"], params["lnf_b"])
+    return x @ params["wte"].T
+
+
+def loss_fn(cfg: ModelConfig, params: dict, tokens: jnp.ndarray) -> jnp.ndarray:
+    """Next-token cross entropy with PAD masked out."""
+    logits = forward_train(cfg, params, tokens[:, :-1])
+    targets = tokens[:, 1:]
+    logp = jax.nn.log_softmax(logits, axis=-1)
+    nll = -jnp.take_along_axis(logp, targets[..., None], axis=-1)[..., 0]
+    mask = (targets != corpus.PAD).astype(jnp.float32)
+    return jnp.sum(nll * mask) / jnp.maximum(jnp.sum(mask), 1.0)
+
+
+# ---------------------------------------------------------------------------
+# Quantized linear variants: runtime input signatures + apply fns
+# ---------------------------------------------------------------------------
+# Each entry: (suffix, shape, dtype). Rust produces these from the f32
+# checkpoint; see rust/src/quant/prepare.rs (mirrors this table).
+
+
+def linear_entries(variant: str, k: int, n: int, cfg: ModelConfig):
+    """Runtime input entries for one linear of shape [K, N] under `variant`."""
+    if variant == "fp":
+        return [("w", (k, n), "f32")]
+    if variant == "absmax":
+        # per-tensor code + scalar scale replicated to [1, N] for the kernel
+        return [("w_q", (k, n), "i8"), ("w_delta", (1, n), "f32")]
+    if variant == "zeropoint":
+        return [("w_q", (k, n), "i8"), ("w_scale", (1,), "f32"),
+                ("w_zp", (1,), "f32")]
+    if variant in ("sym8", "int8", "simquant"):
+        return [("w_q", (k, n), "i8"), ("w_delta", (1, n), "f32")]
+    if variant == "smooth":
+        return [("s", (1, k), "f32"), ("w_q", (k, n), "i8"),
+                ("w_delta", (1, n), "f32")]
+    if variant == "zeroquant":
+        g = cfg.zq_group if k % cfg.zq_group == 0 else k
+        return [("w_q", (k, n), "i8"), ("g_delta", (k // g, 1, n), "f32")]
+    raise ValueError(f"unknown variant {variant}")
+
+
+def apply_linear(variant: str, cfg: ModelConfig, x: jnp.ndarray, ins: list
+                 ) -> jnp.ndarray:
+    """y = x @ W under `variant`; x is [M, K] f32, ins per linear_entries."""
+    if variant == "fp":
+        (w,) = ins
+        return jnp.matmul(x, w)
+    if variant in ("absmax", "sym8"):
+        w_q, w_delta = ins
+        return qz.channel_dequant_matmul(x, w_q, w_delta)
+    if variant == "zeropoint":
+        w_q, scale, zp = ins
+        w = qz.dequantize_affine(w_q, scale, zp)
+        return jnp.matmul(x, w)
+    if variant in ("int8", "simquant"):
+        w_q, w_delta = ins
+        return fq.qgemm_fused(x, w_q, w_delta)
+    if variant == "smooth":
+        s, w_q, w_delta = ins
+        return sm.smooth_qgemm(x, s, w_q, w_delta)
+    if variant == "zeroquant":
+        w_q, g_delta = ins
+        k = w_q.shape[0]
+        g = cfg.zq_group if k % cfg.zq_group == 0 else k
+        w = (w_q.reshape(k // g, g, -1).astype(jnp.float32) * g_delta
+             ).reshape(k, -1)
+        a_q, a_delta = qz.token_quantize(x)
+        return jnp.matmul(a_q.astype(jnp.float32), w) * a_delta
+    raise ValueError(f"unknown variant {variant}")
+
+
+# ---------------------------------------------------------------------------
+# Runtime input manifest (flattened order) — shared contract with Rust
+# ---------------------------------------------------------------------------
+
+def input_manifest(cfg: ModelConfig, variant: str):
+    """Ordered list of (name, shape, dtype) runtime weight inputs.
+
+    Order: global embeddings/norms first, then per layer: norms, biases,
+    then each linear's entries. Rust feeds literals in exactly this order.
+    """
+    d = cfg.d_model
+    entries = [
+        ("wte", (cfg.vocab, d), "f32"),
+        ("wpe", (cfg.ctx, d), "f32"),
+        ("lnf_g", (d,), "f32"),
+        ("lnf_b", (d,), "f32"),
+    ]
+    for i in range(cfg.n_layers):
+        entries += [
+            (f"h{i}.ln1_g", (d,), "f32"), (f"h{i}.ln1_b", (d,), "f32"),
+            (f"h{i}.ln2_g", (d,), "f32"), (f"h{i}.ln2_b", (d,), "f32"),
+            (f"h{i}.qkv_b", (3 * d,), "f32"),
+            (f"h{i}.attn_out_b", (d,), "f32"),
+            (f"h{i}.fc1_b", (cfg.d_ff,), "f32"),
+            (f"h{i}.fc2_b", (d,), "f32"),
+        ]
+        for lname, k, n in block_linears(cfg):
+            for suffix, shape, dtype in linear_entries(variant, k, n, cfg):
+                entries.append((f"h{i}.{lname}.{suffix}", shape, dtype))
+    return entries
+
+
+_DTYPES = {"f32": jnp.float32, "i8": jnp.int8, "u8": jnp.uint8,
+           "i32": jnp.int32}
+
+
+def manifest_avals(cfg: ModelConfig, variant: str):
+    return [jax.ShapeDtypeStruct(shape, _DTYPES[dt])
+            for _, shape, dt in input_manifest(cfg, variant)]
+
+
+class WeightCursor:
+    """Walks the flattened weight-input list in manifest order."""
+
+    def __init__(self, cfg: ModelConfig, variant: str, flat: list):
+        self.cfg, self.variant = cfg, variant
+        self.flat = flat
+        self.pos = 0
+
+    def take(self, n: int = 1):
+        out = self.flat[self.pos:self.pos + n]
+        self.pos += n
+        return out if n > 1 else out[0]
+
+    def take_linear(self, k: int, n: int) -> list:
+        cnt = len(linear_entries(self.variant, k, n, self.cfg))
+        out = self.flat[self.pos:self.pos + cnt]
+        self.pos += cnt
+        return out
+
+
+# ---------------------------------------------------------------------------
+# Quantized inference forwards (the lowered graphs)
+# ---------------------------------------------------------------------------
+
+def _block_step(cfg: ModelConfig, variant: str, cur: WeightCursor,
+                x: jnp.ndarray, attend_fn):
+    """One transformer block on [M, D]-flattened x; attend_fn maps the
+    projected qkv [M, 3D] to the attention output [M, D]."""
+    ln1_g, ln1_b, ln2_g, ln2_b, qkv_b, ao_b, fc1_b, fc2_b = cur.take(8)
+    d, f = cfg.d_model, cfg.d_ff
+    qkv_ins = cur.take_linear(d, 3 * d)
+    ao_ins = cur.take_linear(d, d)
+    fc1_ins = cur.take_linear(d, f)
+    fc2_ins = cur.take_linear(f, d)
+
+    h = _ln(x, ln1_g, ln1_b)
+    qkv = apply_linear(variant, cfg, h, qkv_ins) + qkv_b
+    att = attend_fn(qkv)
+    x = x + apply_linear(variant, cfg, att, ao_ins) + ao_b
+    h = _ln(x, ln2_g, ln2_b)
+    h = jax.nn.gelu(apply_linear(variant, cfg, h, fc1_ins) + fc1_b)
+    return x + apply_linear(variant, cfg, h, fc2_ins) + fc2_b
+
+
+def prefill(cfg: ModelConfig, variant: str, weights: list,
+            tokens: jnp.ndarray):
+    """Prefill: tokens [B, T] -> (logits [B,T,V], k [L,B,T,D], v [L,B,T,D]).
+
+    All four linears per block run through the variant's Pallas kernel on
+    the [B*T, K] flattened activations (max MXU utilization per the paper's
+    tiling argument); attention math stays f32.
+    """
+    b, t = tokens.shape
+    d = cfg.d_model
+    cur = WeightCursor(cfg, variant, weights)
+    wte, wpe, lnf_g, lnf_b = cur.take(4)
+    x = wte[tokens] + wpe[:t][None]
+    mask = jnp.tril(jnp.ones((t, t), dtype=bool))
+    ks, vs = [], []
+
+    def attend(qkv):               # qkv: [B*T, 3D]
+        qkv3 = qkv.reshape(b, t, 3 * d)
+        q, k, v = jnp.split(qkv3, 3, axis=-1)
+        ks.append(k)
+        vs.append(v)
+        qh, kh, vh = (_split_heads(z, cfg.n_heads) for z in (q, k, v))
+        att = jnp.einsum("bhqd,bhkd->bhqk", qh, kh) / math.sqrt(cfg.d_head)
+        att = jnp.where(mask[None, None], att, -1e9)
+        att = jax.nn.softmax(att, axis=-1)
+        o = _merge_heads(jnp.einsum("bhqk,bhkd->bhqd", att, vh))
+        return o.reshape(b * t, d)
+
+    x = x.reshape(b * t, d)
+    for _ in range(cfg.n_layers):
+        x = _block_step(cfg, variant, cur, x, attend)
+    x = _ln(x, lnf_g, lnf_b)
+    logits = (x @ wte.T).reshape(b, t, cfg.vocab)
+    k_cache = jnp.stack(ks)    # [L, B, T, D]
+    v_cache = jnp.stack(vs)
+    return logits, k_cache, v_cache
+
+
+def decode(cfg: ModelConfig, variant: str, weights: list,
+           token: jnp.ndarray, pos: jnp.ndarray,
+           k_cache, v_cache, kv_params=None):
+    """One decode step.
+
+    token [B] i32; pos [B] i32 (number of cached tokens per request);
+    caches [L, B, CTX, D] (f32, or u8 SimQuant codes with
+    kv_params = (k_min, k_step, v_min, v_step) each [L, B, 1, D]).
+
+    Returns (logits [B, V], k_new [L, B, D], v_new [L, B, D]). The current
+    token's k/v are attended directly and returned for the L3 KV manager
+    to append (and, for simquant, re-encode).
+    """
+    b = token.shape[0]
+    d = cfg.d_model
+    cur = WeightCursor(cfg, variant, weights)
+    wte, wpe, lnf_g, lnf_b = cur.take(4)
+    x = wte[token] + wpe[pos]          # [B, D]
+    t_idx = jnp.arange(cfg.ctx)
+    k_rows, v_rows = [], []
+
+    def make_attend(layer):
+        def attend(qkv):               # [B, 3D]
+            q, k_new, v_new = jnp.split(qkv, 3, axis=-1)
+            k_rows.append(k_new)
+            v_rows.append(v_new)
+            if variant == "simquant":
+                # dequantize the u8 KV page in-graph (per-request channel
+                # params), the lowered analogue of simquant_decode
+                k_min, k_step, v_min, v_step = kv_params
+                kc = (k_cache[layer].astype(jnp.float32) * k_step[layer]
+                      + k_min[layer])
+                vc = (v_cache[layer].astype(jnp.float32) * v_step[layer]
+                      + v_min[layer])
+            else:
+                kc, vc = k_cache[layer], v_cache[layer]
+            qh = q.reshape(b, cfg.n_heads, cfg.d_head)
+            kh = kc.reshape(b, cfg.ctx, cfg.n_heads, cfg.d_head)
+            vh = vc.reshape(b, cfg.ctx, cfg.n_heads, cfg.d_head)
+            scale = 1.0 / math.sqrt(cfg.d_head)
+            logits_c = jnp.einsum("bhd,bthd->bht", qh, kh) * scale
+            valid = (t_idx[None, :] < pos[:, None])[:, None, :]   # [B,1,CTX]
+            logits_c = jnp.where(valid, logits_c, -1e9)
+            knh = k_new.reshape(b, cfg.n_heads, cfg.d_head)
+            vnh = v_new.reshape(b, cfg.n_heads, cfg.d_head)
+            logit_cur = jnp.sum(qh * knh, axis=-1, keepdims=True) * scale
+            allg = jnp.concatenate([logits_c, logit_cur], axis=-1)
+            w = jax.nn.softmax(allg, axis=-1)
+            o = (jnp.einsum("bht,bthd->bhd", w[..., :-1], vh)
+                 + w[..., -1:] * vnh)
+            return o.reshape(b, d)
+        return attend
+
+    for layer in range(cfg.n_layers):
+        x = _block_step(cfg, variant, cur, x, make_attend(layer))
+    x = _ln(x, lnf_g, lnf_b)
+    logits = x @ wte.T
+    return logits, jnp.stack(k_rows), jnp.stack(v_rows)
+
+
+# ---------------------------------------------------------------------------
+# Lowering entry points (called by aot.py)
+# ---------------------------------------------------------------------------
+
+def prefill_fn(cfg: ModelConfig, variant: str):
+    def fn(weights, tokens):
+        return prefill(cfg, variant, weights, tokens)
+    return fn
+
+
+def decode_fn(cfg: ModelConfig, variant: str):
+    if variant == "simquant":
+        def fn(weights, token, pos, k_cache, v_cache, k_min, k_step,
+               v_min, v_step):
+            return decode(cfg, variant, weights, token, pos, k_cache,
+                          v_cache, (k_min, k_step, v_min, v_step))
+        return fn
+
+    def fn(weights, token, pos, k_cache, v_cache):
+        return decode(cfg, variant, weights, token, pos, k_cache, v_cache)
+    return fn

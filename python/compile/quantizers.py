@@ -1,0 +1,180 @@
+"""Weight-quantization calibration: the offline half of every backend.
+
+Produces, for each linear weight W [K, N] (and calibration activations
+X [T, K]), the runtime input tensors listed by model.linear_entries().
+`rust/src/quant/prepare.rs` implements the identical math (bit-exact:
+both sides round half-to-even); the golden files emitted by aot.py pin
+the contract.
+
+Also implements the AWQ and GPTQ *baselines* the paper compares against:
+  AWQ  — activation-aware per-channel scaling, alpha grid-searched to
+         minimize ||XW - dequant(quant((W·s)))·(X/s)||_F (Lin et al. 2024).
+  GPTQ — error-compensated column rounding with a diagonal Hessian
+         approximation diag(X^T X) (substitution documented in DESIGN.md:
+         full-Hessian GPTQ needs K×K Cholesky per linear; the diagonal
+         variant keeps the error-feedback structure that separates GPTQ
+         from plain rounding, at calibration cost O(K·N)).
+"""
+
+from __future__ import annotations
+
+import numpy as np
+
+from .kernels import ref
+
+
+def _np(x):
+    return np.asarray(x, dtype=np.float32)
+
+
+class CalibStats:
+    """Per-linear calibration statistics exported to the Rust side."""
+
+    def __init__(self, k: int):
+        self.act_absmax = np.zeros(k, dtype=np.float32)   # max_t |X[t,j]|
+        self.act_meanabs = np.zeros(k, dtype=np.float32)  # mean_t |X[t,j]|
+        self.act_sqsum = np.zeros(k, dtype=np.float32)    # sum_t X[t,j]^2
+        self.count = 0
+
+    def update(self, x: np.ndarray):
+        x = _np(x)
+        self.act_absmax = np.maximum(self.act_absmax, np.abs(x).max(axis=0))
+        n = self.count + x.shape[0]
+        self.act_meanabs = (self.act_meanabs * self.count
+                            + np.abs(x).sum(axis=0)) / max(n, 1)
+        self.act_sqsum += (x * x).sum(axis=0)
+        self.count = n
+
+
+# ---------------------------------------------------------------------------
+# Per-variant weight preparation (mirrors rust/src/quant/prepare.rs)
+# ---------------------------------------------------------------------------
+
+def prepare_linear(variant: str, w: np.ndarray, stats: CalibStats | None,
+                   zq_group: int = 64, sq_alpha: float = 0.5) -> list[np.ndarray]:
+    """Produce the runtime input list for one linear under `variant`."""
+    w = _np(w)
+    k, n = w.shape
+    if variant == "fp":
+        return [w]
+    if variant == "absmax":
+        q, delta = ref.absmax_quantize(w)
+        return [np.asarray(q), np.full((1, n), float(delta), np.float32)]
+    if variant == "zeropoint":
+        q, scale, zp = ref.zeropoint_quantize(w)
+        return [np.asarray(q), np.array([float(scale)], np.float32),
+                np.array([float(zp)], np.float32)]
+    if variant in ("sym8", "int8", "simquant"):
+        q, delta = ref.symmetric_quantize_channel(w, axis=1)
+        return [np.asarray(q), _np(delta).reshape(1, n)]
+    if variant == "smooth":
+        assert stats is not None, "smooth needs calibration stats"
+        s = np.asarray(ref.smoothquant_scales(stats.act_absmax, w, sq_alpha))
+        ws = w * s[:, None]
+        q, delta = ref.symmetric_quantize_channel(ws, axis=1)
+        return [s.reshape(1, k).astype(np.float32), np.asarray(q),
+                _np(delta).reshape(1, n)]
+    if variant == "zeroquant":
+        g = zq_group if k % zq_group == 0 else k
+        q, delta = ref.zeroquant_group_quantize(w, group=g)
+        return [np.asarray(q), _np(delta)]
+    raise ValueError(f"unknown variant {variant}")
+
+
+def dequant_linear(variant: str, ins: list[np.ndarray],
+                   zq_group: int = 64) -> np.ndarray:
+    """Reconstruct the effective f32 weight a variant's inputs encode
+    (for weight-distribution figures and error analysis)."""
+    if variant == "fp":
+        return _np(ins[0])
+    if variant == "absmax":
+        return _np(ins[0]) * ins[1]
+    if variant == "zeropoint":
+        return (_np(ins[0]) - ins[2][0]) * ins[1][0]
+    if variant in ("sym8", "int8", "simquant"):
+        return _np(ins[0]) * ins[1]
+    if variant == "smooth":
+        s, q, delta = ins
+        return (_np(q) * delta) / s.reshape(-1)[:, None]
+    if variant == "zeroquant":
+        q, delta = ins
+        k, n = q.shape
+        g = zq_group if k % zq_group == 0 else k
+        return (_np(q).reshape(k // g, g, n) * delta).reshape(k, n)
+    raise ValueError(f"unknown variant {variant}")
+
+
+# ---------------------------------------------------------------------------
+# AWQ baseline
+# ---------------------------------------------------------------------------
+
+def awq_quantize(w: np.ndarray, stats: CalibStats, bits: int = 8,
+                 alphas=(0.0, 0.25, 0.5, 0.75, 1.0)):
+    """Activation-aware weight quantization.
+
+    Searches the scaling exponent alpha over s_j = meanabs_j^alpha and
+    keeps the one minimizing the expected output error against a diagonal
+    activation proxy. Returns (q, delta, s, alpha).
+    """
+    w = _np(w)
+    k, n = w.shape
+    meanabs = np.maximum(stats.act_meanabs, 1e-8)
+    # proxy input covariance: diag(E[x^2])
+    ex2 = stats.act_sqsum / max(stats.count, 1)
+    best = None
+    for a in alphas:
+        s = np.maximum(meanabs ** a, 1e-8)
+        ws = w * s[:, None]
+        q, delta = ref.symmetric_quantize_channel(ws, axis=1)
+        w_hat = (np.asarray(q, np.float32) * np.asarray(delta)) / s[:, None]
+        err = float(((w_hat - w) ** 2 * ex2[:, None]).sum())
+        if best is None or err < best[0]:
+            best = (err, np.asarray(q), _np(delta).reshape(1, n),
+                    s.astype(np.float32), a)
+    _, q, delta, s, a = best
+    return q, delta, s, a
+
+
+def awq_dequant(q, delta, s) -> np.ndarray:
+    return (_np(q) * delta) / s[:, None]
+
+
+# ---------------------------------------------------------------------------
+# GPTQ baseline (diagonal-Hessian error feedback)
+# ---------------------------------------------------------------------------
+
+def gptq_quantize(w: np.ndarray, stats: CalibStats, bits: int = 8,
+                  perm: bool = True):
+    """Column-sequential quantization with error feedback.
+
+    Processes input channels in decreasing diag-Hessian order; after
+    rounding channel j, its residual is redistributed onto the not-yet-
+    quantized channels proportionally to their correlation proxy — here
+    the diagonal approximation reduces redistribution to simple error
+    accumulation on the running reconstruction, which is exactly OBQ with
+    H ~ diag(X^T X).  Returns (q [K,N] int8, delta [1,N], order [K]).
+    """
+    w = _np(w).copy()
+    k, n = w.shape
+    _, qmax = ref.qrange(bits)
+    h_diag = np.maximum(stats.act_sqsum, 1e-8)
+    order = np.argsort(-h_diag) if perm else np.arange(k)
+
+    # per-output-channel scale from the *original* weights
+    delta = np.maximum(np.abs(w).max(axis=0), 1e-8) / qmax    # [N]
+    q = np.zeros((k, n), dtype=np.int8)
+    err_carry = np.zeros(n, dtype=np.float32)
+    inv_h_total = 1.0 / h_diag[order].sum()
+    for idx, j in enumerate(order):
+        # fold a share of the accumulated error into this channel before
+        # rounding (diagonal error feedback)
+        wj = w[j] + err_carry * (h_diag[j] * inv_h_total)
+        qj = np.clip(np.round(wj / delta), -qmax - 1, qmax)
+        q[j] = qj.astype(np.int8)
+        err_carry += (wj - qj * delta)
+        err_carry -= err_carry * (h_diag[j] * inv_h_total)
+    return q, delta.reshape(1, n).astype(np.float32), order
+
+
+def gptq_dequant(q, delta) -> np.ndarray:
+    return _np(q) * delta

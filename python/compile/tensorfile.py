@@ -1,0 +1,65 @@
+"""Flat tensor container — the checkpoint format shared with Rust.
+
+Layout (little-endian), mirrored by rust/src/tensor/file.rs:
+
+  magic   8 bytes  b"LLEQTNSR"
+  count   u32
+  per tensor:
+    name_len u16, name bytes (utf-8)
+    dtype    u8   (0 = f32, 1 = i8, 2 = u8, 3 = i32)
+    ndim     u8
+    dims     ndim x u64
+    data     prod(dims) * itemsize bytes
+"""
+
+from __future__ import annotations
+
+import struct
+
+import numpy as np
+
+MAGIC = b"LLEQTNSR"
+_DTYPE_CODE = {np.dtype(np.float32): 0, np.dtype(np.int8): 1,
+               np.dtype(np.uint8): 2, np.dtype(np.int32): 3}
+_CODE_DTYPE = {v: k for k, v in _DTYPE_CODE.items()}
+
+
+def save(path: str, tensors: dict[str, np.ndarray]) -> None:
+    with open(path, "wb") as f:
+        f.write(MAGIC)
+        f.write(struct.pack("<I", len(tensors)))
+        for name, arr in tensors.items():
+            arr = np.ascontiguousarray(arr)
+            code = _DTYPE_CODE[arr.dtype]
+            nb = name.encode()
+            f.write(struct.pack("<H", len(nb)))
+            f.write(nb)
+            f.write(struct.pack("<BB", code, arr.ndim))
+            for d in arr.shape:
+                f.write(struct.pack("<Q", d))
+            f.write(arr.tobytes())
+
+
+def load(path: str) -> dict[str, np.ndarray]:
+    with open(path, "rb") as f:
+        data = f.read()
+    assert data[:8] == MAGIC, "bad magic"
+    off = 8
+    (count,) = struct.unpack_from("<I", data, off)
+    off += 4
+    out: dict[str, np.ndarray] = {}
+    for _ in range(count):
+        (nlen,) = struct.unpack_from("<H", data, off)
+        off += 2
+        name = data[off:off + nlen].decode()
+        off += nlen
+        code, ndim = struct.unpack_from("<BB", data, off)
+        off += 2
+        dims = struct.unpack_from(f"<{ndim}Q", data, off)
+        off += 8 * ndim
+        dt = _CODE_DTYPE[code]
+        nbytes = int(np.prod(dims)) * dt.itemsize if ndim else dt.itemsize
+        arr = np.frombuffer(data[off:off + nbytes], dtype=dt)
+        off += nbytes
+        out[name] = arr.reshape(dims)
+    return out

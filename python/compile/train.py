@@ -1,0 +1,122 @@
+"""Build-time training of the evaluation models on the synthetic corpus.
+
+Trains each ModelConfig with AdamW on next-token prediction and writes the
+checkpoint (plus the loss curve) under checkpoints/. Runs once; aot.py
+consumes the checkpoints. The loss curves recorded here back the
+end-to-end-validation entry in EXPERIMENTS.md.
+
+Usage: python -m compile.train [--models gpt2-tiny,gpt2-small,...]
+                               [--steps N] [--out DIR]
+"""
+
+from __future__ import annotations
+
+import argparse
+import functools
+import json
+import os
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from . import corpus, model, tensorfile
+
+N_TRAIN = 200_000
+N_VALID = 20_000
+BATCH = 16
+SEQ = 128
+
+
+def batches(tokens: np.ndarray, rng: np.random.Generator, n: int):
+    """Sample n random [BATCH, SEQ+1] windows from the token stream."""
+    hi = len(tokens) - SEQ - 1
+    for _ in range(n):
+        starts = rng.integers(0, hi, size=BATCH)
+        yield np.stack([tokens[s:s + SEQ + 1] for s in starts])
+
+
+def adamw_init(params):
+    z = jax.tree.map(jnp.zeros_like, params)
+    return {"m": z, "v": jax.tree.map(jnp.zeros_like, params), "t": 0}
+
+
+def adamw_update(params, grads, state, lr, b1=0.9, b2=0.99, eps=1e-8,
+                 wd=0.01):
+    t = state["t"] + 1
+    m = jax.tree.map(lambda m, g: b1 * m + (1 - b1) * g, state["m"], grads)
+    v = jax.tree.map(lambda v, g: b2 * v + (1 - b2) * g * g, state["v"], grads)
+    mhat_scale = 1.0 / (1 - b1 ** t)
+    vhat_scale = 1.0 / (1 - b2 ** t)
+
+    def upd(p, m, v):
+        return p - lr * (m * mhat_scale / (jnp.sqrt(v * vhat_scale) + eps)
+                         + wd * p)
+
+    return jax.tree.map(upd, params, m, v), {"m": m, "v": v, "t": t}
+
+
+def train_model(cfg: model.ModelConfig, steps: int, out_dir: str,
+                seed: int = 0) -> dict:
+    train_tok, valid_tok = corpus.train_valid_split(N_TRAIN, N_VALID)
+    params = model.init_params(cfg, jax.random.PRNGKey(seed))
+    opt = adamw_init(params)
+
+    @jax.jit
+    def step(params, opt, batch, lr):
+        loss, grads = jax.value_and_grad(
+            functools.partial(model.loss_fn, cfg))(params, batch)
+        params, opt = adamw_update(params, grads, opt, lr)
+        return params, opt, loss
+
+    rng = np.random.default_rng(seed)
+    curve = []
+    t0 = time.time()
+    warmup = max(steps // 20, 10)
+    for i, batch in enumerate(batches(train_tok, rng, steps)):
+        lr = 3e-3 * min(1.0, (i + 1) / warmup) \
+            * (0.5 * (1 + np.cos(np.pi * i / steps)))
+        params, opt, loss = step(params, opt, jnp.asarray(batch),
+                                 jnp.float32(lr))
+        if i % 25 == 0 or i == steps - 1:
+            curve.append({"step": i, "loss": float(loss)})
+            print(f"[{cfg.name}] step {i:4d} loss {float(loss):.4f} "
+                  f"({time.time() - t0:.1f}s)", flush=True)
+
+    # held-out perplexity (f32 reference; the quantized numbers come from
+    # the rust eval harness over the same split)
+    vb = np.stack([valid_tok[s:s + SEQ + 1]
+                   for s in range(0, len(valid_tok) - SEQ - 1, SEQ)][:32])
+    vloss = float(model.loss_fn(cfg, params, jnp.asarray(vb)))
+    ppl = float(np.exp(vloss))
+    print(f"[{cfg.name}] valid loss {vloss:.4f} ppl {ppl:.3f}")
+
+    os.makedirs(out_dir, exist_ok=True)
+    tensors = {k: np.asarray(v, dtype=np.float32) for k, v in params.items()}
+    tensorfile.save(os.path.join(out_dir, f"{cfg.name}.ckpt.bin"), tensors)
+    meta = {"name": cfg.name, "steps": steps, "valid_loss": vloss,
+            "valid_ppl": ppl, "curve": curve,
+            "n_params": cfg.n_params()}
+    with open(os.path.join(out_dir, f"{cfg.name}.train.json"), "w") as f:
+        json.dump(meta, f, indent=1)
+    return meta
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--models", default="gpt2-tiny,gpt2-small,gpt2-med")
+    ap.add_argument("--steps", type=int, default=400)
+    ap.add_argument("--out", default="../checkpoints")
+    args = ap.parse_args()
+    for name in args.models.split(","):
+        cfg = model.MODELS[name]
+        ckpt = os.path.join(args.out, f"{cfg.name}.ckpt.bin")
+        if os.path.exists(ckpt):
+            print(f"[{name}] checkpoint exists, skipping")
+            continue
+        train_model(cfg, args.steps, args.out)
+
+
+if __name__ == "__main__":
+    main()

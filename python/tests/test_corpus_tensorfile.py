@@ -1,0 +1,83 @@
+"""Corpus determinism + tensorfile round trips (the cross-language
+contracts pinned on the Rust side by tests in rust/src/corpus and
+rust/src/tensor)."""
+
+import os
+import tempfile
+
+import numpy as np
+from hypothesis import given, settings, strategies as st
+
+from compile import corpus, tensorfile
+
+
+def test_corpus_deterministic():
+    a = corpus.generate_tokens(1000, seed=1234)
+    b = corpus.generate_tokens(1000, seed=1234)
+    np.testing.assert_array_equal(a, b)
+
+
+def test_corpus_checksum_pinned():
+    """The value rust/src/corpus/mod.rs asserts."""
+    assert corpus.checksum(corpus.generate_tokens(4096)) == 0x14CCB6D09EA9D22B
+
+
+def test_corpus_tokens_in_vocab():
+    t = corpus.generate_tokens(5000, seed=7)
+    assert t.min() >= 0 and t.max() < corpus.VOCAB_SIZE
+    assert t[0] == corpus.BOS
+
+
+def test_split_rule():
+    tr, va = corpus.train_valid_split(500, 100, seed=3)
+    full = corpus.generate_tokens(600, seed=3)
+    np.testing.assert_array_equal(np.concatenate([tr, va]), full)
+
+
+def test_zipf_cdf_sequential_summation():
+    cdf = corpus.zipf_cdf(corpus.N_WORDS)
+    assert all(a <= b for a, b in zip(cdf, cdf[1:]))
+    assert abs(cdf[-1] - 1.0) < 1e-12
+
+
+def test_rng_reference_values():
+    """First draws pinned so rust/src/corpus/rng.rs stays in lockstep."""
+    r = corpus.XorShift64Star(1234)
+    assert r.next_u64() == 13571057368034195726
+    assert r.next_u64() == 5609927630774915935
+
+
+@settings(max_examples=20, deadline=None)
+@given(st.integers(min_value=0, max_value=2**31))
+def test_rng_f64_in_unit_interval(seed):
+    r = corpus.XorShift64Star(seed)
+    for _ in range(50):
+        assert 0.0 <= r.next_f64() < 1.0
+
+
+def test_tensorfile_roundtrip():
+    tensors = {
+        "a": np.random.default_rng(0).standard_normal((3, 4)).astype(np.float32),
+        "b": np.array([-128, 0, 127], np.int8),
+        "c": np.array([0, 255], np.uint8),
+        "d": np.array([[7]], np.int32),
+    }
+    with tempfile.TemporaryDirectory() as d:
+        p = os.path.join(d, "t.bin")
+        tensorfile.save(p, tensors)
+        back = tensorfile.load(p)
+    assert set(back) == set(tensors)
+    for k in tensors:
+        np.testing.assert_array_equal(back[k], tensors[k])
+        assert back[k].dtype == tensors[k].dtype
+
+
+@settings(max_examples=20, deadline=None)
+@given(st.integers(min_value=1, max_value=16), st.integers(min_value=1, max_value=16))
+def test_tensorfile_shapes_preserved(r, c):
+    arr = np.arange(r * c, dtype=np.float32).reshape(r, c)
+    with tempfile.TemporaryDirectory() as d:
+        p = os.path.join(d, "t.bin")
+        tensorfile.save(p, {"x": arr})
+        back = tensorfile.load(p)
+    assert back["x"].shape == (r, c)

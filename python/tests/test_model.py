@@ -1,0 +1,126 @@
+"""L2 model: shapes, decode/prefill consistency, variant input manifests."""
+
+import numpy as np
+import pytest
+import jax
+import jax.numpy as jnp
+
+from compile import aot, corpus, model
+
+CFG = model.MODELS["gpt2-tiny"]
+
+
+@pytest.fixture(scope="module")
+def params():
+    return model.init_params(CFG, jax.random.PRNGKey(0))
+
+
+@pytest.fixture(scope="module")
+def stats(params):
+    return aot.calibrate(CFG, params, n_batches=1)
+
+
+def test_param_count_matches_config(params):
+    total = sum(int(np.prod(v.shape)) for v in params.values())
+    assert total == CFG.n_params()
+
+
+def test_forward_train_shapes(params):
+    toks = jnp.zeros((2, 16), jnp.int32)
+    logits = model.forward_train(CFG, params, toks)
+    assert logits.shape == (2, 16, CFG.vocab)
+
+
+def test_loss_near_uniform_at_init(params):
+    toks = jnp.asarray(corpus.generate_tokens(65)[None])
+    loss = float(model.loss_fn(CFG, params, toks))
+    assert abs(loss - np.log(CFG.vocab)) < 0.3
+
+
+@pytest.mark.parametrize("variant", model.VARIANTS)
+def test_manifest_shapes_consistent(variant):
+    entries = model.input_manifest(CFG, variant)
+    names = [e[0] for e in entries]
+    assert len(names) == len(set(names)), "duplicate input names"
+    # biases/norms present for every layer
+    for i in range(CFG.n_layers):
+        assert f"h{i}.ln1_g" in names
+        assert f"h{i}.qkv_b" in names
+
+
+@pytest.mark.parametrize("variant", ["fp", "int8", "smooth", "simquant"])
+def test_prefill_matches_train_forward(variant, params, stats):
+    toks = corpus.generate_tokens(32)[None]
+    flat = [jnp.asarray(w)
+            for w in aot.prepare_weight_inputs(CFG, variant, params, stats)]
+    logits, k, v = model.prefill(CFG, variant, flat, jnp.asarray(toks[:, :32]))
+    ref_logits = model.forward_train(CFG, params, jnp.asarray(toks[:, :32]))
+    err = float(jnp.max(jnp.abs(logits - ref_logits)))
+    assert err < 0.05, f"{variant}: {err}"
+    assert k.shape == (CFG.n_layers, 1, 32, CFG.d_model)
+
+
+def test_decode_consistent_with_prefill(params, stats):
+    """Next-token logits from decode == logits from a longer prefill."""
+    toks = corpus.generate_tokens(20)
+    flat = [jnp.asarray(w)
+            for w in aot.prepare_weight_inputs(CFG, "fp", params, stats)]
+    T = 12
+    _, kc, vc = model.prefill(CFG, "fp", flat, jnp.asarray(toks[:T][None]))
+    L, D, C = CFG.n_layers, CFG.d_model, CFG.ctx
+    kfull = jnp.zeros((L, 1, C, D)).at[:, :, :T].set(kc)
+    vfull = jnp.zeros((L, 1, C, D)).at[:, :, :T].set(vc)
+    logits_d, kn, vn = model.decode(
+        CFG, "fp", flat, jnp.asarray(toks[T:T + 1]),
+        jnp.asarray([T], jnp.int32), kfull, vfull)
+    full_logits = model.forward_train(CFG, params, jnp.asarray(toks[:T + 1][None]))
+    err = float(jnp.max(jnp.abs(logits_d[0] - full_logits[0, -1])))
+    assert err < 1e-4, err
+    assert kn.shape == (L, 1, D)
+
+
+def test_decode_respects_pos_mask(params, stats):
+    """Garbage beyond pos in the cache must not change the output."""
+    flat = [jnp.asarray(w)
+            for w in aot.prepare_weight_inputs(CFG, "fp", params, stats)]
+    L, D, C = CFG.n_layers, CFG.d_model, CFG.ctx
+    tok = jnp.asarray([5], jnp.int32)
+    pos = jnp.asarray([4], jnp.int32)
+    base = jnp.asarray(np.random.default_rng(0).standard_normal(
+        (L, 1, C, D)).astype(np.float32))
+    cache_a = base
+    noise = base.at[:, :, 10:].add(99.0)   # beyond pos -> must be masked
+    la, _, _ = model.decode(CFG, "fp", flat, tok, pos, cache_a, cache_a)
+    lb, _, _ = model.decode(CFG, "fp", flat, tok, pos, noise, noise)
+    assert float(jnp.max(jnp.abs(la - lb))) < 1e-5
+
+
+def test_simquant_decode_uses_params(params, stats):
+    """Scaling the stored codes' step must change the output."""
+    flat = [jnp.asarray(w)
+            for w in aot.prepare_weight_inputs(CFG, "simquant", params, stats)]
+    L, D, C = CFG.n_layers, CFG.d_model, CFG.ctx
+    tok = jnp.asarray([5], jnp.int32)
+    pos = jnp.asarray([4], jnp.int32)
+    rng = np.random.default_rng(1)
+    kq = jnp.asarray(rng.integers(0, 255, (L, 1, C, D)).astype(np.uint8))
+    vq = jnp.asarray(rng.integers(0, 255, (L, 1, C, D)).astype(np.uint8))
+    mn = jnp.zeros((L, 1, 1, D), jnp.float32) - 1.0
+    st1 = jnp.full((L, 1, 1, D), 2.0 / 255, jnp.float32)
+    st2 = st1 * 3.0
+    la, _, _ = model.decode(CFG, "simquant", flat, tok, pos, kq, vq,
+                            (mn, st1, mn, st1))
+    lb, _, _ = model.decode(CFG, "simquant", flat, tok, pos, kq, vq,
+                            (mn, st2, mn, st2))
+    assert float(jnp.max(jnp.abs(la - lb))) > 1e-4
+
+
+@pytest.mark.parametrize("variant", ["fp", "simquant"])
+def test_lowering_produces_hlo(variant):
+    hlo, ins, outs = aot.lower_graph(CFG, variant, "decode", 1)
+    assert "ENTRY" in hlo
+    assert len(outs) == 3
+    # runtime inputs appear after weights
+    runtime = [n for n, _, _ in aot.runtime_input_specs(CFG, variant, "decode", 1)]
+    got_names = [s[0] for s in ins]
+    assert got_names[-len(runtime):] == runtime

@@ -1,0 +1,108 @@
+"""Calibration-side quantizers: prepare/dequant round trips, AWQ/GPTQ
+baselines, and the properties the comparison tables rely on."""
+
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from compile import quantizers
+from compile.kernels import ref
+from compile.model import MODELS, linear_entries
+
+SETTINGS = dict(max_examples=15, deadline=None)
+dims = st.integers(min_value=2, max_value=64)
+seeds = st.integers(min_value=0, max_value=2**31 - 1)
+
+VARIANTS = ("fp", "absmax", "zeropoint", "sym8", "int8", "smooth",
+            "zeroquant", "simquant")
+
+
+def stats_for(k, seed=0):
+    rng = np.random.default_rng(seed)
+    s = quantizers.CalibStats(k)
+    for _ in range(4):
+        s.update(rng.standard_normal((32, k)).astype(np.float32))
+    return s
+
+
+@pytest.mark.parametrize("variant", VARIANTS)
+def test_prepare_matches_entries(variant):
+    cfg = MODELS["gpt2-tiny"]
+    k, n = 128, 64
+    w = np.random.default_rng(1).standard_normal((k, n)).astype(np.float32) * 0.1
+    ins = quantizers.prepare_linear(variant, w, stats_for(k), zq_group=cfg.zq_group)
+    entries = linear_entries(variant, k, n, cfg)
+    assert len(ins) == len(entries)
+    for arr, (name, shape, dtype) in zip(ins, entries):
+        assert tuple(arr.shape) == tuple(shape), (variant, name)
+
+
+@pytest.mark.parametrize("variant", VARIANTS)
+def test_dequant_close_to_original(variant):
+    k, n = 128, 64
+    w = np.random.default_rng(2).standard_normal((k, n)).astype(np.float32) * 0.1
+    ins = quantizers.prepare_linear(variant, w, stats_for(k))
+    w_hat = quantizers.dequant_linear(variant, ins)
+    assert np.max(np.abs(w_hat - w)) < 0.01, variant
+
+
+@settings(**SETTINGS)
+@given(k=dims, n=dims, seed=seeds)
+def test_awq_no_worse_than_plain_on_weighted_error(k, n, seed):
+    rng = np.random.default_rng(seed)
+    w = rng.standard_normal((k, n)).astype(np.float32) * 0.1
+    stats = quantizers.CalibStats(k)
+    x = rng.standard_normal((64, k)).astype(np.float32)
+    x[:, 0] *= 30.0
+    stats.update(x)
+    q, delta, s, alpha = quantizers.awq_quantize(w, stats, bits=4)
+    w_awq = quantizers.awq_dequant(q, delta, s)
+    # compare against alpha=0 (plain symmetric, a member of the search set)
+    q0, d0 = ref.zeroquant_group_quantize(w, bits=4, group=k)
+    ex2 = stats.act_sqsum / max(stats.count, 1)
+
+    def werr(w_hat):
+        return float((((w_hat - w) ** 2) * ex2[:, None]).sum())
+
+    w_plain = np.asarray(q0, np.float32).reshape(k, n) * np.asarray(d0)[0]
+    assert werr(w_awq) <= werr(w_plain) * 1.0001
+
+
+def test_gptq_beats_rtn_on_weighted_objective():
+    rng = np.random.default_rng(9)
+    k, n = 64, 32
+    w = rng.standard_normal((k, n)).astype(np.float32)
+    stats = stats_for(k, 9)
+    stats.act_sqsum = (rng.random(k).astype(np.float32) * 10 + 0.1)
+    q, delta, order = quantizers.gptq_quantize(w, stats, bits=3)
+    w_gptq = quantizers.gptq_dequant(q, delta)
+    # round-to-nearest with the same scales
+    qmax = 3
+    rtn = np.clip(np.round(w / delta), -qmax - 1, qmax) * delta
+    h = stats.act_sqsum
+
+    def werr(w_hat):
+        return float((((w_hat - w) ** 2) * h[:, None]).sum())
+
+    assert werr(w_gptq) <= werr(rtn) * 1.05
+
+
+def test_gptq_order_by_hessian():
+    stats = quantizers.CalibStats(4)
+    stats.act_sqsum = np.array([1.0, 5.0, 3.0, 0.5], np.float32)
+    _, _, order = quantizers.gptq_quantize(np.zeros((4, 2), np.float32), stats)
+    assert list(order) == [1, 2, 0, 3]
+
+
+def test_calib_stats_accumulate():
+    s = quantizers.CalibStats(3)
+    s.update(np.array([[1.0, -2.0, 0.5]], np.float32))
+    s.update(np.array([[-3.0, 1.0, 0.25]], np.float32))
+    assert np.allclose(s.act_absmax, [3.0, 2.0, 0.5])
+    assert s.count == 2
+    assert np.allclose(s.act_sqsum, [10.0, 5.0, 0.3125])
+
+
+def test_smooth_requires_stats():
+    with pytest.raises(AssertionError):
+        quantizers.prepare_linear("smooth", np.zeros((8, 4), np.float32), None)

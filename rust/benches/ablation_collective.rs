@@ -1,0 +1,97 @@
+//! Ablation — collective transport & algorithm (paper §3.3): scale-sync
+//! cost under NCCL-NVLink / InfiniBand / TCP-fallback, ring all-gather vs
+//! broadcast, and world-size scaling. Real message passing; wire time from
+//! the link models.
+
+use llmeasyquant::collective::{Collective, Topology, Transport};
+use llmeasyquant::util::bench::Table;
+
+fn run_allgather(transport: Transport, world: usize, floats: usize, rounds: usize) -> (f64, f64) {
+    let ring = Collective::ring(Topology::new(world, transport));
+    let handles: Vec<_> = ring
+        .into_iter()
+        .map(|mut c| {
+            std::thread::spawn(move || {
+                for _ in 0..rounds {
+                    c.all_gather(vec![0.5f32; floats]).unwrap();
+                }
+                c.stats()
+            })
+        })
+        .collect();
+    let stats: Vec<_> = handles.into_iter().map(|h| h.join().unwrap()).collect();
+    (stats[0].sim_time_s, stats[0].wall_time_s)
+}
+
+fn run_broadcast(transport: Transport, world: usize, floats: usize, rounds: usize) -> f64 {
+    let ring = Collective::ring(Topology::new(world, transport));
+    let handles: Vec<_> = ring
+        .into_iter()
+        .map(|mut c| {
+            std::thread::spawn(move || {
+                for _ in 0..rounds {
+                    c.broadcast(0, vec![0.5f32; floats]).unwrap();
+                }
+                c.stats().sim_time_s
+            })
+        })
+        .collect();
+    handles.into_iter().map(|h| h.join().unwrap()).next().unwrap()
+}
+
+fn main() {
+    let rounds = 32;
+    let floats = 4096; // per-layer scale metadata payload
+
+    println!("== ablation: transport (8 shards, {rounds} all-gathers of {floats} f32) ==\n");
+    let mut t = Table::new(&["transport", "sim wire (ms)", "wall (ms)", "slowdown vs nvlink"]);
+    let mut base = 0.0;
+    for tr in [Transport::NvlinkRdma, Transport::Infiniband, Transport::Tcp] {
+        let (sim, wall) = run_allgather(tr, 8, floats, rounds);
+        if tr == Transport::NvlinkRdma {
+            base = sim;
+        }
+        t.row(vec![
+            tr.name().into(),
+            format!("{:.3}", sim * 1e3),
+            format!("{:.3}", wall * 1e3),
+            format!("{:.1}x", sim / base),
+        ]);
+    }
+    t.print();
+
+    println!("\n== ablation: ring all-gather vs tree broadcast (nvlink) ==\n");
+    let mut t2 = Table::new(&["op", "world", "sim wire (ms)"]);
+    for world in [2usize, 4, 8] {
+        let (ag, _) = run_allgather(Transport::NvlinkRdma, world, floats, rounds);
+        let bc = run_broadcast(Transport::NvlinkRdma, world, floats, rounds);
+        t2.row(vec!["all-gather".into(), world.to_string(), format!("{:.3}", ag * 1e3)]);
+        t2.row(vec!["broadcast".into(), world.to_string(), format!("{:.3}", bc * 1e3)]);
+    }
+    t2.print();
+
+    println!("\n== ablation: world-size scaling of sync cost (nvlink) ==\n");
+    let mut t3 = Table::new(&["world", "sim wire (ms)", "per-shard bytes (KB)"]);
+    for world in [1usize, 2, 4, 8, 16] {
+        let ring = Collective::ring(Topology::new(world, Transport::NvlinkRdma));
+        let handles: Vec<_> = ring
+            .into_iter()
+            .map(|mut c| {
+                std::thread::spawn(move || {
+                    for _ in 0..rounds {
+                        c.all_gather(vec![0.1f32; floats]).unwrap();
+                    }
+                    c.stats()
+                })
+            })
+            .collect();
+        let stats: Vec<_> = handles.into_iter().map(|h| h.join().unwrap()).collect();
+        t3.row(vec![
+            world.to_string(),
+            format!("{:.3}", stats[0].sim_time_s * 1e3),
+            format!("{:.1}", stats[0].bytes_sent as f64 / 1e3),
+        ]);
+    }
+    t3.print();
+    println!("\nTCP fallback pays ~2 orders of magnitude in wire time for identical results — \nthe transparent-degradation path of §3.3.");
+}

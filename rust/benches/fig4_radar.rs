@@ -1,0 +1,89 @@
+//! Fig. 4 — Radar chart: five normalized performance axes per method
+//! (accuracy, throughput, memory efficiency, setup speed, calibration
+//! efficiency). The bench emits the normalized [0,1] series the radar
+//! plots, combining measured perplexity/setup-time with the A100-sim
+//! throughput/memory axes.
+
+use std::time::Instant;
+
+use llmeasyquant::bench_support::{
+    normalize_higher_better, normalize_lower_better, open_registry, paper_serving_cost, CsvOut,
+};
+use llmeasyquant::eval::{perplexity, weight_errors};
+use llmeasyquant::memsim::PaperModel;
+use llmeasyquant::quant::Variant;
+use llmeasyquant::util::bench::Table;
+
+fn main() -> anyhow::Result<()> {
+    let reg = open_registry()?;
+    let model = "gpt2-tiny";
+    let cfg = reg.model_cfg(model)?.clone();
+    let ckpt = reg.checkpoint(model)?;
+    let methods = [
+        ("GPTQ", Variant::Gptq),
+        ("AWQ", Variant::Awq),
+        ("TensorRT-sim", Variant::Int8),
+        ("SmoothQuant", Variant::Smooth),
+        ("SimQuant", Variant::SimQuant),
+    ];
+
+    // raw metric collection
+    let mut ppl = Vec::new();
+    let mut tput = Vec::new();
+    let mut mem = Vec::new();
+    let mut setup = Vec::new();
+    let mut calib = Vec::new();
+    let cost = paper_serving_cost(&PaperModel::gpt2_117m(), 8192);
+    for (_, v) in methods {
+        ppl.push(perplexity(&reg, model, v, 6)?.ppl);
+        tput.push(cost.decode_tokens_per_s(v));
+        mem.push(cost.memory_gb_total(v));
+        let t0 = Instant::now();
+        let _ = weight_errors(&cfg, &ckpt, v)?;
+        setup.push(t0.elapsed().as_secs_f64());
+        calib.push(match v {
+            Variant::Gptq | Variant::Awq => 8.0,
+            Variant::Smooth => 4.0,
+            _ => 1.0,
+        });
+    }
+
+    // normalized axes (1.0 = best on the axis)
+    let axes = [
+        ("accuracy", normalize_lower_better(&ppl)),
+        ("throughput", normalize_higher_better(&tput)),
+        ("memory_eff", normalize_lower_better(&mem)),
+        ("setup_speed", normalize_lower_better(&setup)),
+        ("calib_eff", normalize_lower_better(&calib)),
+    ];
+
+    println!("== Fig. 4: radar axes (normalized, 1.0 = best) ==\n");
+    let mut headers = vec!["method"];
+    headers.extend(axes.iter().map(|(n, _)| *n));
+    headers.push("area");
+    let mut table = Table::new(&headers);
+    let mut csv = CsvOut::new("fig4_radar.csv", "method,axis,value");
+    for (i, (label, _)) in methods.iter().enumerate() {
+        let vals: Vec<f64> = axes.iter().map(|(_, series)| series[i]).collect();
+        // radar polygon area as the scalar "overall" score
+        let n = vals.len() as f64;
+        let area: f64 = (0..vals.len())
+            .map(|k| vals[k] * vals[(k + 1) % vals.len()])
+            .sum::<f64>()
+            * (0.5 * (2.0 * std::f64::consts::PI / n).sin());
+        let mut row = vec![label.to_string()];
+        for ((axis, _), v) in axes.iter().zip(&vals) {
+            row.push(format!("{:.3}", v));
+            csv.row(&[label.to_string(), axis.to_string(), format!("{:.4}", v)]);
+        }
+        row.push(format!("{:.3}", area));
+        table.row(row);
+    }
+    table.print();
+    csv.finish();
+    println!(
+        "\npaper shape: SmoothQuant spans the largest radar area (best overall \
+         balance); SimQuant leads the memory/calibration axes."
+    );
+    Ok(())
+}

@@ -1,0 +1,72 @@
+//! Fig. 5 — 3D heatmap: model size x quantization method x throughput.
+//!
+//! Sweeps the paper's model suite through the A100-sim cost model and
+//! emits the (size, method, tok/s) grid plus normalized cells, checking
+//! the paper's reading that SmoothQuant stays the most consistent column
+//! across the size spectrum.
+
+use llmeasyquant::bench_support::{paper_serving_cost, CsvOut};
+use llmeasyquant::memsim::PaperModel;
+use llmeasyquant::quant::Variant;
+use llmeasyquant::util::bench::Table;
+
+fn main() -> anyhow::Result<()> {
+    let methods = [
+        ("FP16", Variant::Fp),
+        ("GPTQ", Variant::Gptq),
+        ("ZeroQuant", Variant::ZeroQuant),
+        ("SimQuant", Variant::SimQuant),
+        ("SmoothQuant", Variant::Smooth),
+    ];
+    let models = PaperModel::all();
+
+    println!("== Fig. 5: throughput heatmap (tok/s, A100-sim, 8K ctx) ==\n");
+    let mut headers = vec!["Model (params)"];
+    headers.extend(methods.iter().map(|(n, _)| *n));
+    let mut table = Table::new(&headers);
+    let mut csv = CsvOut::new("fig5_heatmap.csv", "model,params,method,tok_s,speedup_vs_fp");
+    let mut smooth_speedups = Vec::new();
+    for m in &models {
+        let cost = paper_serving_cost(m, 8192);
+        let fp = cost.decode_tokens_per_s(Variant::Fp);
+        let mut row = vec![format!("{} ({:.2}B)", m.name, m.total_params() / 1e9)];
+        for (label, v) in methods {
+            let t = cost.decode_tokens_per_s(v);
+            row.push(format!("{:.0}", t));
+            csv.row(&[
+                m.name.into(),
+                format!("{:.0}", m.total_params()),
+                label.into(),
+                format!("{:.1}", t),
+                format!("{:.3}", t / fp),
+            ]);
+            if v == Variant::Smooth {
+                smooth_speedups.push(t / fp);
+            }
+        }
+        table.row(row);
+    }
+    table.print();
+    csv.finish();
+
+    // consistency: SmoothQuant's speedup over FP varies little with size
+    let mean: f64 = smooth_speedups.iter().sum::<f64>() / smooth_speedups.len() as f64;
+    let spread = smooth_speedups
+        .iter()
+        .map(|s| (s - mean).abs())
+        .fold(0.0, f64::max);
+    println!(
+        "\nSmoothQuant speedup vs FP16 across sizes: mean {:.2}x, max deviation {:.2} \
+         — {}",
+        mean,
+        spread,
+        if spread < mean * 0.5 {
+            "consistent across the size spectrum (paper's Fig. 5 reading)"
+        } else {
+            "NOT consistent"
+        }
+    );
+    assert!(spread < mean * 0.5);
+    assert!(smooth_speedups.iter().all(|s| *s > 1.0));
+    Ok(())
+}

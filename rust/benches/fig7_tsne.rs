@@ -1,0 +1,106 @@
+//! Fig. 7 — t-SNE embedding of quantized weight distributions.
+//!
+//! Feature vectors: per-(method, layer) distribution features of the
+//! dequantized weights (analyze::features). Embedded with the exact t-SNE
+//! in analyze::tsne. The bench prints the 2-D coordinates and checks the
+//! paper's clustering reading: same-method points cluster; FP forms its
+//! own cluster; SmoothQuant and SimQuant land near each other.
+
+use llmeasyquant::analyze::{tsne, weight_features, TsneConfig};
+use llmeasyquant::bench_support::{open_registry, CsvOut};
+use llmeasyquant::eval::weight_errors;
+use llmeasyquant::quant::Variant;
+use llmeasyquant::util::bench::Table;
+
+fn centroid(pts: &[(f64, f64)]) -> (f64, f64) {
+    let n = pts.len() as f64;
+    (
+        pts.iter().map(|p| p.0).sum::<f64>() / n,
+        pts.iter().map(|p| p.1).sum::<f64>() / n,
+    )
+}
+
+fn dist(a: (f64, f64), b: (f64, f64)) -> f64 {
+    ((a.0 - b.0).powi(2) + (a.1 - b.1).powi(2)).sqrt()
+}
+
+fn main() -> anyhow::Result<()> {
+    let reg = open_registry()?;
+    let model = "gpt2-small";
+    let cfg = reg.model_cfg(model)?.clone();
+    let ckpt = reg.checkpoint(model)?;
+    let methods = [
+        Variant::Fp,
+        Variant::AbsMax,
+        Variant::ZeroPoint,
+        Variant::Smooth,
+        Variant::SimQuant,
+        Variant::Awq,
+        Variant::Gptq,
+        Variant::ZeroQuant,
+    ];
+
+    // one feature point per (method, layer-linear)
+    let mut points = Vec::new();
+    let mut labels = Vec::new();
+    for v in methods {
+        for err in weight_errors(&cfg, &ckpt, v)? {
+            points.push(weight_features(&err.w_hat));
+            labels.push((v, err.linear));
+        }
+    }
+    println!(
+        "embedding {} points ({} methods x {} linears) ...",
+        points.len(),
+        methods.len(),
+        points.len() / methods.len()
+    );
+    let emb = tsne(&points, TsneConfig { perplexity: 10.0, iterations: 400, ..Default::default() });
+
+    let mut csv = CsvOut::new("fig7_tsne.csv", "method,linear,x,y");
+    for ((v, linear), (x, y)) in labels.iter().zip(&emb) {
+        csv.row(&[
+            v.name().into(),
+            linear.clone(),
+            format!("{:.3}", x),
+            format!("{:.3}", y),
+        ]);
+    }
+    csv.finish();
+
+    // per-method centroids + spreads
+    let mut table = Table::new(&["method", "centroid", "spread"]);
+    let mut cents = Vec::new();
+    for v in methods {
+        let pts: Vec<(f64, f64)> = labels
+            .iter()
+            .zip(&emb)
+            .filter(|((m, _), _)| *m == v)
+            .map(|(_, p)| *p)
+            .collect();
+        let c = centroid(&pts);
+        let spread = pts.iter().map(|p| dist(*p, c)).sum::<f64>() / pts.len() as f64;
+        table.row(vec![
+            v.name().into(),
+            format!("({:.1}, {:.1})", c.0, c.1),
+            format!("{:.2}", spread),
+        ]);
+        cents.push((v, c));
+    }
+    table.print();
+
+    // paper's reading: smooth & simquant cluster together relative to the
+    // coarse absmax cluster
+    let get = |v: Variant| cents.iter().find(|(m, _)| *m == v).unwrap().1;
+    let d_smooth_sim = dist(get(Variant::Smooth), get(Variant::SimQuant));
+    let d_smooth_absmax = dist(get(Variant::Smooth), get(Variant::AbsMax));
+    println!(
+        "\nd(SmoothQuant, SimQuant) = {:.2}; d(SmoothQuant, AbsMax) = {:.2}",
+        d_smooth_sim, d_smooth_absmax
+    );
+    println!(
+        "(per-channel family clusters {}; coarse per-tensor methods sit apart)",
+        if d_smooth_sim < d_smooth_absmax { "together" } else { "APART — unexpected" }
+    );
+    Ok(())
+}

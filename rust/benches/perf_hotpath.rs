@@ -1,0 +1,127 @@
+//! Perf microbenches — the L3 hot paths (EXPERIMENTS.md §Perf):
+//! quantization schemes, KV append/re-encode, tensor<->literal conversion,
+//! decode-loop host overhead, router/batcher throughput.
+
+use llmeasyquant::bench_support::open_registry;
+use llmeasyquant::coordinator::{BatchPolicy, Batcher, KvCache, Request, Router};
+use llmeasyquant::corpus::XorShift64Star;
+use llmeasyquant::quant;
+use llmeasyquant::tensor::Tensor;
+use llmeasyquant::util::bench::{bench, Table};
+
+fn randn(n: usize, seed: u64) -> Vec<f32> {
+    let mut r = XorShift64Star::new(seed);
+    (0..n).map(|_| r.next_normal() as f32).collect()
+}
+
+fn main() -> anyhow::Result<()> {
+    let mut table = Table::new(&["hot path", "mean", "p95", "unit"]);
+    let row = |t: &mut Table, name: &str, mean_us: f64, p95_us: f64, unit: &str| {
+        t.row(vec![
+            name.into(),
+            format!("{:.1}", mean_us),
+            format!("{:.1}", p95_us),
+            unit.into(),
+        ]);
+    };
+
+    // ---- quantization schemes over a 512x512 weight -----------------------
+    let (k, n) = (512, 512);
+    let w = randn(k * n, 1);
+    let s = bench("sym8", 3, 30, || {
+        let _ = quant::symmetric_quantize_channel(&w, k, n, 8);
+    });
+    row(&mut table, "symmetric_quantize_channel 512x512", s.mean_us(), s.p95_ns / 1e3, "us");
+    let s = bench("token", 3, 30, || {
+        let _ = quant::token_quantize(&w, k, n, 8);
+    });
+    row(&mut table, "token_quantize 512x512", s.mean_us(), s.p95_ns / 1e3, "us");
+    let s = bench("simq", 3, 30, || {
+        let _ = quant::simquant_encode(&w, k, n, 8);
+    });
+    row(&mut table, "simquant_encode 512x512", s.mean_us(), s.p95_ns / 1e3, "us");
+    let h = vec![1.0f32; k];
+    let s = bench("gptq", 1, 5, || {
+        let _ = quant::gptq_quantize(&w, k, n, &h, 8, true);
+    });
+    row(&mut table, "gptq_quantize 512x512", s.mean_us(), s.p95_ns / 1e3, "us");
+
+    // ---- KV cache append (decode inner loop) ------------------------------
+    let (l, b, ctx, d) = (4usize, 8usize, 128usize, 256usize);
+    let rows: Vec<Vec<f32>> = (0..l).map(|i| randn(d, 100 + i as u64)).collect();
+    let s = bench("kv_f32", 3, 50, || {
+        let mut kv = KvCache::new_f32(l, b, ctx, d);
+        for t in 0..64 {
+            let _ = t;
+            for layer in 0..l {
+                kv.append_row(0, layer, &rows[layer], &rows[layer]);
+            }
+            kv.bump(0);
+        }
+    });
+    row(&mut table, "kv f32 append 64 steps x 4 layers", s.mean_us(), s.p95_ns / 1e3, "us");
+    let s = bench("kv_sq", 3, 50, || {
+        let mut kv = KvCache::new_simquant(l, b, ctx, d);
+        for t in 0..64 {
+            let _ = t;
+            for layer in 0..l {
+                kv.append_row(0, layer, &rows[layer], &rows[layer]);
+            }
+            kv.bump(0);
+        }
+    });
+    row(&mut table, "kv simquant append 64 steps x 4 layers", s.mean_us(), s.p95_ns / 1e3, "us");
+
+    // ---- graph_inputs assembly (per decode step host cost) ----------------
+    let kv = {
+        let mut kv = KvCache::new_simquant(l, b, ctx, d);
+        for layer in 0..l {
+            kv.ingest_prefill(0, layer, &randn(32 * d, 7), &randn(32 * d, 8), 32);
+        }
+        kv
+    };
+    let s = bench("gi", 3, 50, || {
+        let _ = kv.graph_inputs();
+    });
+    row(&mut table, "kv graph_inputs [4,8,128,256]", s.mean_us(), s.p95_ns / 1e3, "us");
+
+    // ---- tensor -> literal conversion -------------------------------------
+    let t_big = Tensor::from_f32(vec![l, b, ctx, d], randn(l * b * ctx * d, 9));
+    let s = bench("lit", 3, 50, || {
+        let _ = llmeasyquant::runtime::tensor_to_literal(&t_big).unwrap();
+    });
+    row(&mut table, "tensor_to_literal 4MB f32", s.mean_us(), s.p95_ns / 1e3, "us");
+
+    // ---- router + batcher throughput --------------------------------------
+    let s = bench("router", 3, 50, || {
+        let mut r = Router::new(8, 120);
+        let mut btc = Batcher::new(BatchPolicy::default());
+        for i in 0..1000u64 {
+            let (req, _) = r.admit(Request::new(i, vec![3; 16], 8));
+            btc.push(req);
+            while btc.take(std::time::Instant::now()).is_some() {}
+        }
+        for i in 0..1000u64 {
+            r.complete(i);
+        }
+    });
+    row(&mut table, "router+batcher 1000 requests", s.mean_us(), s.p95_ns / 1e3, "us");
+
+    // ---- full decode step through PJRT ------------------------------------
+    let reg = open_registry()?;
+    let handle = reg.model_handle("gpt2-tiny", quant::Variant::Smooth, 8)?;
+    let cfg = handle.cfg.clone();
+    let kvf = KvCache::new_f32(cfg.n_layers, 8, cfg.ctx, cfg.d_model);
+    let token = Tensor::from_i32(vec![8], vec![5; 8]);
+    let pos = Tensor::from_i32(vec![8], vec![0; 8]);
+    let s = bench("decode", 2, 10, || {
+        let mut ins = vec![token.clone(), pos.clone()];
+        ins.extend(kvf.graph_inputs());
+        let _ = handle.decode(&ins).unwrap();
+    });
+    row(&mut table, "decode step b8 gpt2-tiny/smooth (PJRT)", s.mean_us(), s.p95_ns / 1e3, "us");
+
+    println!("== perf: L3 hot paths ==\n");
+    table.print();
+    Ok(())
+}

@@ -1,0 +1,128 @@
+//! Table 3 — Head-to-head comparison matrix: perplexity / throughput /
+//! memory / setup time / calibration data, LLMEasyQuant (SmoothQuant) vs
+//! GPTQ, AWQ and the TensorRT-sim baseline, per model.
+//!
+//! Perplexity and setup time are *measured* (setup = calibration-stat
+//! consumption + weight quantization wall time on this machine);
+//! throughput and memory come from the 8xA100 cost model; calibration
+//! data is the number of windows each method's calibration pass consumes.
+
+use std::time::Instant;
+
+use llmeasyquant::bench_support::{open_registry, paper_serving_cost, CsvOut, TRAINED_MODELS};
+use llmeasyquant::eval::{perplexity, weight_errors};
+use llmeasyquant::memsim::PaperModel;
+use llmeasyquant::quant::Variant;
+use llmeasyquant::util::bench::Table;
+
+/// calibration windows each method consumed in aot.py / prepare
+fn calib_windows(v: Variant) -> usize {
+    match v {
+        Variant::Gptq | Variant::Awq => 8, // need sqsum/meanabs over all 8
+        Variant::Smooth => 4,              // absmax stabilizes in half
+        _ => 0,
+    }
+}
+
+fn main() -> anyhow::Result<()> {
+    let reg = open_registry()?;
+    let methods = [
+        ("GPTQ", Variant::Gptq),
+        ("AWQ", Variant::Awq),
+        ("TensorRT-sim", Variant::Int8),
+        ("LLMEasyQuant", Variant::Smooth),
+    ];
+
+    println!("== Table 3: head-to-head matrix (per trained model) ==\n");
+    let mut csv = CsvOut::new(
+        "table3_matrix.csv",
+        "model,metric,gptq,awq,trt,llmeasyquant",
+    );
+    for model in TRAINED_MODELS {
+        let cfg = reg.model_cfg(model)?.clone();
+        let ckpt = reg.checkpoint(model)?;
+        let mut table = Table::new(&["Metric", "GPTQ", "AWQ", "TensorRT-sim", "LLMEasyQuant"]);
+
+        // perplexity (measured)
+        let ppls: Vec<f64> = methods
+            .iter()
+            .map(|(_, v)| perplexity(&reg, model, *v, 6).map(|r| r.ppl))
+            .collect::<Result<_, _>>()?;
+        table.row(
+            std::iter::once("Perplexity".to_string())
+                .chain(ppls.iter().map(|p| format!("{:.4}", p)))
+                .collect(),
+        );
+        csv.row(&[
+            model.into(),
+            "ppl".into(),
+            format!("{:.4}", ppls[0]),
+            format!("{:.4}", ppls[1]),
+            format!("{:.4}", ppls[2]),
+            format!("{:.4}", ppls[3]),
+        ]);
+
+        // throughput + memory (A100-sim at 8K ctx, proxy shape = GPT-2 117M
+        // scaled family; our trained models share the architecture)
+        let pm = PaperModel::gpt2_117m();
+        let cost = paper_serving_cost(&pm, 8192);
+        let tputs: Vec<f64> = methods
+            .iter()
+            .map(|(_, v)| cost.decode_tokens_per_s(*v))
+            .collect();
+        table.row(
+            std::iter::once("Throughput (tok/s, sim)".to_string())
+                .chain(tputs.iter().map(|t| format!("{:.0}", t)))
+                .collect(),
+        );
+        let mems: Vec<f64> = methods
+            .iter()
+            .map(|(_, v)| cost.memory_gb_total(*v))
+            .collect();
+        table.row(
+            std::iter::once("Memory (GB, sim)".to_string())
+                .chain(mems.iter().map(|m| format!("{:.2}", m)))
+                .collect(),
+        );
+
+        // setup time (measured: full weight quantization pass)
+        let setups: Vec<f64> = methods
+            .iter()
+            .map(|(_, v)| {
+                let t0 = Instant::now();
+                weight_errors(&cfg, &ckpt, *v).map(|_| t0.elapsed().as_secs_f64())
+            })
+            .collect::<Result<_, _>>()?;
+        table.row(
+            std::iter::once("Setup time (s, measured)".to_string())
+                .chain(setups.iter().map(|s| format!("{:.3}", s)))
+                .collect(),
+        );
+
+        // calibration data
+        table.row(
+            std::iter::once("Calibration windows".to_string())
+                .chain(methods.iter().map(|(_, v)| calib_windows(*v).to_string()))
+                .collect(),
+        );
+
+        println!("--- {model} ---");
+        table.print();
+        println!();
+
+        // shape assertions (paper's qualitative claims)
+        // at 8 bits on these models all methods sit within noise of each
+        // other (see EXPERIMENTS.md); assert parity, not dominance
+        assert!(
+            ppls[3] <= ppls[0] + 5e-3 && ppls[3] <= ppls[1] + 5e-3,
+            "LLMEasyQuant-SmoothQuant should match GPTQ/AWQ ppl within noise"
+        );
+        assert!(
+            setups[3] < setups[0],
+            "SmoothQuant setup must be cheaper than GPTQ's error-feedback pass"
+        );
+        assert!(calib_windows(Variant::Smooth) < calib_windows(Variant::Gptq));
+    }
+    csv.finish();
+    Ok(())
+}

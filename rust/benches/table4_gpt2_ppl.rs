@@ -1,0 +1,66 @@
+//! Table 4 + Fig. 2 — Perplexity analysis of every built-in quantizer on
+//! GPT-2 (our trained gpt2-tiny stands in for GPT-2 117M; DESIGN.md §3).
+//! All rows measured through the Rust runtime.
+
+use llmeasyquant::bench_support::{open_registry, CsvOut};
+use llmeasyquant::eval::perplexity;
+use llmeasyquant::quant::Variant;
+use llmeasyquant::util::bench::Table;
+
+fn main() -> anyhow::Result<()> {
+    let reg = open_registry()?;
+    let model = "gpt2-tiny";
+    let rows = [
+        ("GPT-2 (fp32)", Variant::Fp),
+        ("GPT-2 INT8 (W8A8 fused)", Variant::Int8),
+        ("GPT-2 AbsMax Quantize", Variant::AbsMax),
+        ("GPT-2 ZeroPoint Quantize", Variant::ZeroPoint),
+        ("GPT-2 Smooth Quant Apply", Variant::Smooth),
+        ("GPT-2 Sim Quantize", Variant::SimQuant),
+        ("GPT-2 Sym Quantize 8bit", Variant::Sym8),
+        ("GPT-2 Sym 8bit ZeroQuant Func", Variant::ZeroQuant),
+    ];
+
+    println!("== Table 4 / Fig. 2: perplexity per quantizer (gpt2-tiny, measured) ==\n");
+    let mut table = Table::new(&["Models", "Perplexity (ppl)", "delta vs fp"]);
+    let mut csv = CsvOut::new("table4_fig2_ppl.csv", "label,ppl");
+    let mut fp = 0.0;
+    let mut results = Vec::new();
+    for (label, v) in rows {
+        let r = perplexity(&reg, model, v, 12)?;
+        if v == Variant::Fp {
+            fp = r.ppl;
+        }
+        results.push((label, v, r.ppl));
+        csv.row(&[label.into(), format!("{:.6}", r.ppl)]);
+    }
+    for (label, _, ppl) in &results {
+        table.row(vec![
+            label.to_string(),
+            format!("{:.4}", ppl),
+            format!("{:+.4}", ppl - fp),
+        ]);
+    }
+    table.print();
+    csv.finish();
+
+    // paper shape: fp best; coarse per-tensor schemes (absmax/zeropoint)
+    // degrade at least as much as the per-channel/smoothed schemes
+    let get = |v: Variant| results.iter().find(|(_, x, _)| *x == v).unwrap().2;
+    assert!(results.iter().all(|(_, _, p)| *p >= fp - 0.02));
+    assert!(
+        get(Variant::AbsMax) >= get(Variant::Sym8) - 5e-3,
+        "per-tensor absmax should not beat per-channel sym8 beyond noise"
+    );
+    assert!(
+        get(Variant::Smooth) <= get(Variant::AbsMax) + 5e-3,
+        "smoothquant should not degrade more than absmax beyond noise"
+    );
+    println!(
+        "\nordering holds: fp <= smooth/sym8 <= absmax family \
+         (8-bit per-channel quantization on a 0.4M-param model costs little \
+         ppl in absolute terms; the paper's GPT-2 117M absolute gaps need \
+         outlier-heavy pretrained activations — DESIGN.md §3)."
+    );
+    Ok(())
+}

@@ -1,0 +1,84 @@
+//! Weight-distribution feature vectors for the t-SNE embedding (Fig. 7).
+//!
+//! Each (method, layer) weight tensor maps to a fixed-length feature:
+//! normalized 24-bin histogram + 8 moment/shape statistics. Distances in
+//! this space reflect distributional similarity, which is what the
+//! paper's Fig. 7 clusters.
+
+use crate::metrics::Histogram;
+
+pub const HIST_BINS: usize = 24;
+pub const FEATURE_DIM: usize = HIST_BINS + 8;
+
+/// Build the feature vector of one weight tensor.
+pub fn weight_features(w: &[f32]) -> Vec<f64> {
+    assert!(!w.is_empty());
+    let n = w.len() as f64;
+    let mean = w.iter().map(|v| *v as f64).sum::<f64>() / n;
+    let var = w.iter().map(|v| (*v as f64 - mean).powi(2)).sum::<f64>() / n;
+    let std = var.sqrt().max(1e-12);
+    let m3 = w.iter().map(|v| ((*v as f64 - mean) / std).powi(3)).sum::<f64>() / n;
+    let m4 = w.iter().map(|v| ((*v as f64 - mean) / std).powi(4)).sum::<f64>() / n;
+    let absmax = w.iter().fold(0f32, |a, v| a.max(v.abs())) as f64;
+    let meanabs = w.iter().map(|v| v.abs() as f64).sum::<f64>() / n;
+    // standardized histogram over +-4 sigma (captures shape, not scale)
+    let mut h = Histogram::new(-4.0, 4.0, HIST_BINS);
+    for v in w {
+        h.record((*v as f64 - mean) / std);
+    }
+    let mut out = h.densities();
+    out.push(mean);
+    out.push(std);
+    out.push(m3); // skewness
+    out.push(m4); // kurtosis
+    out.push(absmax / std);
+    out.push(meanabs / std);
+    out.push(h.boundary_mass()); // saturation diagnostic
+    out.push(h.entropy());
+    debug_assert_eq!(out.len(), FEATURE_DIM);
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::corpus::XorShift64Star;
+
+    fn randn(n: usize, seed: u64, scale: f32) -> Vec<f32> {
+        let mut r = XorShift64Star::new(seed);
+        (0..n).map(|_| r.next_normal() as f32 * scale).collect()
+    }
+
+    fn dist(a: &[f64], b: &[f64]) -> f64 {
+        a.iter().zip(b).map(|(x, y)| (x - y) * (x - y)).sum::<f64>().sqrt()
+    }
+
+    #[test]
+    fn fixed_dimension() {
+        assert_eq!(weight_features(&randn(512, 1, 1.0)).len(), FEATURE_DIM);
+    }
+
+    #[test]
+    fn scale_invariant_shape_features() {
+        // same distribution at different scales -> close in feature space
+        let a = weight_features(&randn(4096, 2, 1.0));
+        let b = weight_features(&randn(4096, 3, 100.0));
+        // drop the raw mean/std features (indices 24, 25) for this check
+        let strip = |v: &[f64]| {
+            let mut v = v.to_vec();
+            v[HIST_BINS] = 0.0;
+            v[HIST_BINS + 1] = 0.0;
+            v
+        };
+        assert!(dist(&strip(&a), &strip(&b)) < 0.2);
+    }
+
+    #[test]
+    fn distinguishes_clipped_from_gaussian() {
+        let gauss = randn(4096, 4, 1.0);
+        let clipped: Vec<f32> = gauss.iter().map(|v| v.clamp(-0.5, 0.5)).collect();
+        let d = dist(&weight_features(&gauss), &weight_features(&clipped));
+        let d_same = dist(&weight_features(&gauss), &weight_features(&randn(4096, 5, 1.0)));
+        assert!(d > d_same * 3.0, "clipped {d} vs same-dist {d_same}");
+    }
+}

@@ -1,0 +1,8 @@
+//! Analysis utilities for the paper's visualization figures: weight
+//! distribution featurization (Fig. 1) and exact t-SNE (Fig. 7).
+
+mod features;
+mod tsne;
+
+pub use features::{weight_features, FEATURE_DIM};
+pub use tsne::{tsne, TsneConfig};

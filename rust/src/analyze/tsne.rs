@@ -1,0 +1,214 @@
+//! Exact O(n^2) t-SNE (van der Maaten & Hinton 2008) for Fig. 7.
+//!
+//! Small-n (dozens of points: methods x layers) so the quadratic gradient
+//! is fine. Implements perplexity-calibrated Gaussian affinities via
+//! binary search on beta, symmetrized P, early exaggeration, and momentum
+//! gradient descent on the KL objective.
+
+use crate::corpus::XorShift64Star;
+
+#[derive(Debug, Clone, Copy)]
+pub struct TsneConfig {
+    pub perplexity: f64,
+    pub iterations: usize,
+    pub learning_rate: f64,
+    pub seed: u64,
+}
+
+impl Default for TsneConfig {
+    fn default() -> Self {
+        TsneConfig { perplexity: 8.0, iterations: 500, learning_rate: 100.0, seed: 42 }
+    }
+}
+
+/// Embed `points` (n x dim, row-major) into 2-D. Returns n (x, y) pairs.
+pub fn tsne(points: &[Vec<f64>], cfg: TsneConfig) -> Vec<(f64, f64)> {
+    let n = points.len();
+    if n == 0 {
+        return Vec::new();
+    }
+    if n == 1 {
+        return vec![(0.0, 0.0)];
+    }
+    let p = joint_probabilities(points, cfg.perplexity);
+
+    // init from a deterministic small gaussian
+    let mut rng = XorShift64Star::new(cfg.seed);
+    let mut y: Vec<f64> = (0..2 * n).map(|_| rng.next_normal() * 1e-2).collect();
+    let mut vel = vec![0f64; 2 * n];
+    let mut gains = vec![1f64; 2 * n];
+
+    for iter in 0..cfg.iterations {
+        let exaggeration = if iter < 100 { 4.0 } else { 1.0 };
+        let momentum = if iter < 250 { 0.5 } else { 0.8 };
+
+        // low-dim affinities (student t, dof 1)
+        let mut qnum = vec![0f64; n * n];
+        let mut qsum = 0f64;
+        for i in 0..n {
+            for j in (i + 1)..n {
+                let dx = y[2 * i] - y[2 * j];
+                let dy = y[2 * i + 1] - y[2 * j + 1];
+                let q = 1.0 / (1.0 + dx * dx + dy * dy);
+                qnum[i * n + j] = q;
+                qnum[j * n + i] = q;
+                qsum += 2.0 * q;
+            }
+        }
+        let qsum = qsum.max(1e-12);
+
+        // gradient
+        let mut grad = vec![0f64; 2 * n];
+        for i in 0..n {
+            for j in 0..n {
+                if i == j {
+                    continue;
+                }
+                let pij = p[i * n + j] * exaggeration;
+                let qij = qnum[i * n + j] / qsum;
+                let mult = 4.0 * (pij - qij) * qnum[i * n + j];
+                grad[2 * i] += mult * (y[2 * i] - y[2 * j]);
+                grad[2 * i + 1] += mult * (y[2 * i + 1] - y[2 * j + 1]);
+            }
+        }
+
+        // adaptive gains + momentum update
+        for k in 0..2 * n {
+            gains[k] = if grad[k].signum() != vel[k].signum() {
+                (gains[k] + 0.2).min(10.0)
+            } else {
+                (gains[k] * 0.8).max(0.01)
+            };
+            vel[k] = momentum * vel[k] - cfg.learning_rate * gains[k] * grad[k];
+            y[k] += vel[k];
+        }
+        // re-center
+        let (mx, my) = (
+            y.iter().step_by(2).sum::<f64>() / n as f64,
+            y.iter().skip(1).step_by(2).sum::<f64>() / n as f64,
+        );
+        for i in 0..n {
+            y[2 * i] -= mx;
+            y[2 * i + 1] -= my;
+        }
+    }
+    (0..n).map(|i| (y[2 * i], y[2 * i + 1])).collect()
+}
+
+/// Symmetrized, perplexity-calibrated joint probabilities.
+fn joint_probabilities(points: &[Vec<f64>], perplexity: f64) -> Vec<f64> {
+    let n = points.len();
+    let perplexity = perplexity.min((n as f64 - 1.0) / 3.0).max(1.0);
+    let mut d2 = vec![0f64; n * n];
+    for i in 0..n {
+        for j in (i + 1)..n {
+            let d: f64 = points[i]
+                .iter()
+                .zip(&points[j])
+                .map(|(a, b)| (a - b) * (a - b))
+                .sum();
+            d2[i * n + j] = d;
+            d2[j * n + i] = d;
+        }
+    }
+    let target_h = perplexity.ln();
+    let mut p = vec![0f64; n * n];
+    for i in 0..n {
+        // binary search beta for the row entropy
+        let (mut lo, mut hi) = (1e-20f64, 1e20f64);
+        let mut beta = 1.0;
+        for _ in 0..64 {
+            let mut sum = 0f64;
+            let mut hsum = 0f64;
+            for j in 0..n {
+                if i == j {
+                    continue;
+                }
+                let e = (-beta * d2[i * n + j]).exp();
+                sum += e;
+                hsum += beta * d2[i * n + j] * e;
+            }
+            let h = if sum > 0.0 { hsum / sum + sum.ln() } else { 0.0 };
+            if (h - target_h).abs() < 1e-5 {
+                break;
+            }
+            if h > target_h {
+                lo = beta;
+                beta = if hi >= 1e20 { beta * 2.0 } else { (beta + hi) / 2.0 };
+            } else {
+                hi = beta;
+                beta = (beta + lo) / 2.0;
+            }
+        }
+        let mut sum = 0f64;
+        for j in 0..n {
+            if i != j {
+                p[i * n + j] = (-beta * d2[i * n + j]).exp();
+                sum += p[i * n + j];
+            }
+        }
+        for j in 0..n {
+            p[i * n + j] /= sum.max(1e-12);
+        }
+    }
+    // symmetrize
+    let mut out = vec![0f64; n * n];
+    for i in 0..n {
+        for j in 0..n {
+            out[i * n + j] = ((p[i * n + j] + p[j * n + i]) / (2.0 * n as f64)).max(1e-12);
+        }
+    }
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::corpus::XorShift64Star;
+
+    /// two well-separated gaussian clusters must stay separated in 2-D
+    #[test]
+    fn separates_clusters() {
+        let mut r = XorShift64Star::new(7);
+        let mut pts = Vec::new();
+        for i in 0..20 {
+            let center = if i < 10 { 0.0 } else { 50.0 };
+            pts.push((0..8).map(|_| center + r.next_normal()).collect::<Vec<f64>>());
+        }
+        let emb = tsne(&pts, TsneConfig { iterations: 600, learning_rate: 50.0, ..Default::default() });
+        // mean intra-cluster distance << inter-cluster distance
+        let d = |a: (f64, f64), b: (f64, f64)| ((a.0 - b.0).powi(2) + (a.1 - b.1).powi(2)).sqrt();
+        let ca = (
+            emb[..10].iter().map(|p| p.0).sum::<f64>() / 10.0,
+            emb[..10].iter().map(|p| p.1).sum::<f64>() / 10.0,
+        );
+        let cb = (
+            emb[10..].iter().map(|p| p.0).sum::<f64>() / 10.0,
+            emb[10..].iter().map(|p| p.1).sum::<f64>() / 10.0,
+        );
+        let intra: f64 = emb[..10].iter().map(|p| d(*p, ca)).sum::<f64>() / 10.0;
+        assert!(
+            d(ca, cb) > intra * 2.0,
+            "inter {} vs intra {intra}",
+            d(ca, cb)
+        );
+    }
+
+    #[test]
+    fn deterministic_under_seed() {
+        let pts: Vec<Vec<f64>> = (0..6).map(|i| vec![i as f64, (i * i) as f64]).collect();
+        let a = tsne(&pts, TsneConfig::default());
+        let b = tsne(&pts, TsneConfig::default());
+        assert_eq!(a, b);
+    }
+
+    #[test]
+    fn handles_degenerate_inputs() {
+        assert!(tsne(&[], TsneConfig::default()).is_empty());
+        assert_eq!(tsne(&[vec![1.0]], TsneConfig::default()), vec![(0.0, 0.0)]);
+        // identical points do not blow up
+        let pts = vec![vec![1.0, 1.0]; 4];
+        let emb = tsne(&pts, TsneConfig { iterations: 50, ..Default::default() });
+        assert!(emb.iter().all(|(x, y)| x.is_finite() && y.is_finite()));
+    }
+}

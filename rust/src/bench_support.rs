@@ -1,0 +1,104 @@
+//! Shared plumbing for the `benches/` targets (harness = false): registry
+//! loading, the paper-scale workload definitions, and metric
+//! normalization for the figure benches.
+
+use std::path::Path;
+use std::sync::Arc;
+
+use anyhow::Result;
+
+use crate::collective::LinkModel;
+use crate::memsim::{GpuSpec, PaperModel, PipelineCost};
+use crate::quant::Variant;
+use crate::runtime::Registry;
+
+/// Artifacts dir — overridable with LLEQ_ARTIFACTS.
+pub fn artifacts_dir() -> std::path::PathBuf {
+    std::env::var("LLEQ_ARTIFACTS")
+        .map(Into::into)
+        .unwrap_or_else(|_| Path::new(env!("CARGO_MANIFEST_DIR")).join("artifacts"))
+}
+
+pub fn open_registry() -> Result<Arc<Registry>> {
+    Ok(Arc::new(Registry::open(&artifacts_dir())?))
+}
+
+/// Trained models available in the registry (measured rows).
+pub const TRAINED_MODELS: [&str; 3] = ["gpt2-tiny", "gpt2-small", "gpt2-med"];
+
+/// Method columns of Tables 1-3 mapped to our variants.
+pub fn table_methods() -> Vec<(&'static str, Variant)> {
+    vec![
+        ("FP16", Variant::Fp),
+        ("SmoothQuant", Variant::Smooth),
+        ("SimQuant", Variant::SimQuant),
+        ("AWQ", Variant::Awq),
+        ("GPTQ", Variant::Gptq),
+        ("ZeroQuant", Variant::ZeroQuant),
+    ]
+}
+
+/// The paper's Table 2 serving workload on simulated 8xA100 (batch 256 =
+/// high-occupancy continuous batching, where bandwidth gains dominate the
+/// fixed kernel/collective overheads).
+pub fn paper_serving_cost(m: &PaperModel, ctx: usize) -> PipelineCost {
+    PipelineCost::from_paper_model(m, 256, ctx, 8, GpuSpec::a100_80g(), LinkModel::nvlink())
+}
+
+/// Min-max normalize (higher = better); used by the radar figure.
+pub fn normalize_higher_better(values: &[f64]) -> Vec<f64> {
+    let (lo, hi) = values
+        .iter()
+        .fold((f64::INFINITY, f64::NEG_INFINITY), |(l, h), v| (l.min(*v), h.max(*v)));
+    let span = (hi - lo).max(1e-12);
+    values.iter().map(|v| (v - lo) / span).collect()
+}
+
+/// Normalize where lower raw values are better (invert then min-max).
+pub fn normalize_lower_better(values: &[f64]) -> Vec<f64> {
+    let inverted: Vec<f64> = values.iter().map(|v| -v).collect();
+    normalize_higher_better(&inverted)
+}
+
+/// CSV emitter for figure series (so plots can be regenerated outside).
+pub struct CsvOut {
+    path: std::path::PathBuf,
+    lines: Vec<String>,
+}
+
+impl CsvOut {
+    pub fn new(name: &str, header: &str) -> Self {
+        let dir = Path::new(env!("CARGO_MANIFEST_DIR")).join("target/bench_series");
+        let _ = std::fs::create_dir_all(&dir);
+        CsvOut { path: dir.join(name), lines: vec![header.to_string()] }
+    }
+
+    pub fn row(&mut self, cells: &[String]) {
+        self.lines.push(cells.join(","));
+    }
+
+    pub fn finish(self) {
+        let _ = std::fs::write(&self.path, self.lines.join("\n"));
+        println!("(series written to {})", self.path.display());
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn normalization_bounds() {
+        let n = normalize_higher_better(&[1.0, 3.0, 2.0]);
+        assert_eq!(n[0], 0.0);
+        assert_eq!(n[1], 1.0);
+        let l = normalize_lower_better(&[1.0, 3.0]);
+        assert_eq!(l[0], 1.0);
+        assert_eq!(l[1], 0.0);
+    }
+
+    #[test]
+    fn method_table_has_six_columns() {
+        assert_eq!(table_methods().len(), 6);
+    }
+}

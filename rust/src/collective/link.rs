@@ -1,0 +1,122 @@
+//! Alpha-beta link model: transfer time = alpha + bytes / beta.
+
+/// Per-hop link characteristics.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct LinkModel {
+    /// per-message latency (seconds)
+    pub alpha_s: f64,
+    /// bandwidth (bytes / second)
+    pub beta_bps: f64,
+}
+
+impl LinkModel {
+    /// NVLink 3 + RDMA ring hop (A100 SXM: ~600 GB/s bidirectional,
+    /// sub-10us launch+propagation latency).
+    pub fn nvlink() -> Self {
+        LinkModel { alpha_s: 5e-6, beta_bps: 600e9 }
+    }
+
+    /// InfiniBand HDR hop (~25 GB/s per direction, ~2us + software stack).
+    pub fn infiniband() -> Self {
+        LinkModel { alpha_s: 8e-6, beta_bps: 25e9 }
+    }
+
+    /// TCP fallback (paper: edge server / CPU-GPU hybrid): ~10 GbE with
+    /// kernel networking latency.
+    pub fn tcp() -> Self {
+        LinkModel { alpha_s: 60e-6, beta_bps: 1.25e9 }
+    }
+
+    /// Time for one hop carrying `bytes`.
+    pub fn hop_time(&self, bytes: usize) -> f64 {
+        self.alpha_s + bytes as f64 / self.beta_bps
+    }
+
+    /// Ring all-gather of `bytes` total payload across `n` ranks:
+    /// (n-1) steps, each moving bytes/n per hop.
+    pub fn ring_allgather_time(&self, bytes: usize, n: usize) -> f64 {
+        if n <= 1 {
+            return 0.0;
+        }
+        (n - 1) as f64 * self.hop_time(bytes / n)
+    }
+
+    /// Ring all-reduce: reduce-scatter + all-gather = 2(n-1) steps of
+    /// bytes/n.
+    pub fn ring_allreduce_time(&self, bytes: usize, n: usize) -> f64 {
+        if n <= 1 {
+            return 0.0;
+        }
+        2.0 * (n - 1) as f64 * self.hop_time(bytes / n)
+    }
+
+    /// Binomial-tree broadcast: ceil(log2 n) hops of the full payload.
+    pub fn broadcast_time(&self, bytes: usize, n: usize) -> f64 {
+        if n <= 1 {
+            return 0.0;
+        }
+        (n as f64).log2().ceil() * self.hop_time(bytes)
+    }
+}
+
+/// Accumulated accounting for one rank's collective traffic.
+#[derive(Debug, Clone, Copy, Default, PartialEq)]
+pub struct CommStats {
+    pub ops: u64,
+    pub bytes_sent: u64,
+    /// simulated wire time (seconds) under the link model
+    pub sim_time_s: f64,
+    /// wall-clock spent inside collective calls (seconds)
+    pub wall_time_s: f64,
+}
+
+impl CommStats {
+    pub fn merge(&mut self, other: &CommStats) {
+        self.ops += other.ops;
+        self.bytes_sent += other.bytes_sent;
+        self.sim_time_s += other.sim_time_s;
+        self.wall_time_s += other.wall_time_s;
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn hop_time_scales_with_bytes() {
+        let l = LinkModel::nvlink();
+        assert!(l.hop_time(1 << 30) > l.hop_time(1 << 20));
+        assert!((l.hop_time(0) - 5e-6).abs() < 1e-12);
+    }
+
+    #[test]
+    fn tcp_slower_than_nvlink() {
+        let b = 1 << 24;
+        assert!(LinkModel::tcp().hop_time(b) > LinkModel::nvlink().hop_time(b) * 100.0);
+    }
+
+    #[test]
+    fn ring_allgather_time_formula() {
+        let l = LinkModel { alpha_s: 1e-6, beta_bps: 1e9 };
+        // 8 ranks, 8 MB total: 7 steps of 1 MB
+        let t = l.ring_allgather_time(8 << 20, 8);
+        let expect = 7.0 * (1e-6 + (1 << 20) as f64 / 1e9);
+        assert!((t - expect).abs() / expect < 1e-9);
+    }
+
+    #[test]
+    fn single_rank_is_free() {
+        let l = LinkModel::nvlink();
+        assert_eq!(l.ring_allgather_time(1024, 1), 0.0);
+        assert_eq!(l.ring_allreduce_time(1024, 1), 0.0);
+        assert_eq!(l.broadcast_time(1024, 1), 0.0);
+    }
+
+    #[test]
+    fn allreduce_twice_allgather() {
+        let l = LinkModel::nvlink();
+        let (ar, ag) = (l.ring_allreduce_time(1 << 20, 4), l.ring_allgather_time(1 << 20, 4));
+        assert!((ar - 2.0 * ag).abs() < 1e-12);
+    }
+}

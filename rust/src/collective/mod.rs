@@ -1,0 +1,19 @@
+//! NCCL-style collectives over simulated interconnects (paper §3.3).
+//!
+//! Real message passing — each rank is a thread endpoint exchanging data
+//! over std::sync::mpsc ring channels — combined with an analytic link
+//! model that accounts the *simulated* wire time of each operation
+//! (alpha-beta model per transport). The coordinator's scale synchronizer
+//! runs on these primitives (Eqs. 7-8); the latency-breakdown experiments
+//! read the simulated T_comm.
+//!
+//! Transports mirror the paper's deployment modes: NVLink/RDMA ring for
+//! single-node multi-GPU, TCP fallback for edge / multi-node.
+
+mod link;
+mod ops;
+mod topology;
+
+pub use link::{CommStats, LinkModel};
+pub use ops::{Collective, OpError};
+pub use topology::{Topology, Transport};

@@ -1,0 +1,268 @@
+//! Ring collectives: real message passing between rank threads.
+//!
+//! Each rank owns a `Collective` endpoint. Operations are SPMD: every rank
+//! must call the same op in the same order (an op-sequence counter guards
+//! against divergence — Thm. 4 consistency depends on it). Payloads travel
+//! over mpsc channels to the next rank in the ring; simulated wire time is
+//! accounted against the topology's link model.
+
+use std::sync::mpsc::{channel, Receiver, RecvTimeoutError, Sender};
+use std::time::{Duration, Instant};
+
+use thiserror::Error;
+
+use super::{CommStats, LinkModel, Topology};
+
+const RECV_TIMEOUT: Duration = Duration::from_secs(30);
+
+#[derive(Debug, Error)]
+pub enum OpError {
+    #[error("rank {rank}: op sequence mismatch: got {got}, expected {expected} — ranks diverged")]
+    SequenceMismatch { rank: usize, got: u64, expected: u64 },
+    #[error("rank {rank}: recv timeout/disconnect in {op}")]
+    Recv { rank: usize, op: &'static str },
+}
+
+struct Packet {
+    seq: u64,
+    chunk_id: usize,
+    data: Vec<f32>,
+}
+
+/// One rank's endpoint in the ring.
+pub struct Collective {
+    rank: usize,
+    world: usize,
+    link: LinkModel,
+    to_next: Sender<Packet>,
+    from_prev: Receiver<Packet>,
+    seq: u64,
+    stats: CommStats,
+}
+
+impl Collective {
+    /// Build a ring of `world` endpoints (move each into its rank thread).
+    pub fn ring(topo: Topology) -> Vec<Collective> {
+        let n = topo.world;
+        let mut senders = Vec::with_capacity(n);
+        let mut receivers = Vec::with_capacity(n);
+        for _ in 0..n {
+            let (tx, rx) = channel();
+            senders.push(tx);
+            receivers.push(rx);
+        }
+        // rank i sends to rank (i+1) % n, receives from (i-1+n) % n.
+        // receivers[j] belongs to the rank that *receives from* channel j's
+        // sender; channel j carries i -> i+1, so receiver j goes to rank j+1.
+        let mut out: Vec<Collective> = Vec::with_capacity(n);
+        let mut rx_iter: Vec<Option<Receiver<Packet>>> =
+            receivers.into_iter().map(Some).collect();
+        for rank in 0..n {
+            let to_next = senders[(rank + 1) % n].clone();
+            let from_prev = rx_iter[rank].take().unwrap();
+            out.push(Collective {
+                rank,
+                world: n,
+                link: topo.link(),
+                to_next,
+                from_prev,
+                seq: 0,
+                stats: CommStats::default(),
+            });
+        }
+        out
+    }
+
+    pub fn rank(&self) -> usize {
+        self.rank
+    }
+
+    pub fn world(&self) -> usize {
+        self.world
+    }
+
+    pub fn stats(&self) -> CommStats {
+        self.stats
+    }
+
+    fn send(&mut self, chunk_id: usize, data: Vec<f32>) {
+        self.stats.bytes_sent += (data.len() * 4) as u64;
+        let _ = self.to_next.send(Packet { seq: self.seq, chunk_id, data });
+    }
+
+    fn recv(&mut self, op: &'static str) -> Result<(usize, Vec<f32>), OpError> {
+        match self.from_prev.recv_timeout(RECV_TIMEOUT) {
+            Ok(p) => {
+                if p.seq != self.seq {
+                    return Err(OpError::SequenceMismatch {
+                        rank: self.rank,
+                        got: p.seq,
+                        expected: self.seq,
+                    });
+                }
+                Ok((p.chunk_id, p.data))
+            }
+            Err(RecvTimeoutError::Timeout) | Err(RecvTimeoutError::Disconnected) => {
+                Err(OpError::Recv { rank: self.rank, op })
+            }
+        }
+    }
+
+    /// Ring all-gather (Eq. 7): every rank contributes `local`, returns all
+    /// contributions indexed by rank. (world-1) steps, each forwarding the
+    /// chunk received in the previous step.
+    pub fn all_gather(&mut self, local: Vec<f32>) -> Result<Vec<Vec<f32>>, OpError> {
+        let t0 = Instant::now();
+        self.seq += 1;
+        let n = self.world;
+        let mut slots: Vec<Option<Vec<f32>>> = vec![None; n];
+        let total_bytes = local.len() * 4 * n;
+        slots[self.rank] = Some(local.clone());
+        let mut carry = (self.rank, local);
+        for _ in 0..n.saturating_sub(1) {
+            self.send(carry.0, carry.1);
+            let (cid, data) = self.recv("all_gather")?;
+            slots[cid] = Some(data.clone());
+            carry = (cid, data);
+        }
+        self.stats.ops += 1;
+        self.stats.sim_time_s += self.link.ring_allgather_time(total_bytes, n);
+        self.stats.wall_time_s += t0.elapsed().as_secs_f64();
+        Ok(slots.into_iter().map(|s| s.expect("ring hole")).collect())
+    }
+
+    /// All-reduce (sum): all-gather + local reduction (metadata-sized
+    /// payloads make the bandwidth-optimal variant unnecessary; the wire
+    /// time is still accounted with the 2(n-1)-step ring formula).
+    pub fn all_reduce_sum(&mut self, local: Vec<f32>) -> Result<Vec<f32>, OpError> {
+        let len = local.len();
+        let bytes = len * 4 * self.world;
+        let parts = self.all_gather(local)?;
+        // replace the all-gather accounting with all-reduce accounting
+        self.stats.sim_time_s -= self.link.ring_allgather_time(bytes, self.world);
+        self.stats.sim_time_s += self.link.ring_allreduce_time(bytes, self.world);
+        let mut out = vec![0f32; len];
+        for p in parts {
+            for (o, v) in out.iter_mut().zip(p) {
+                *o += v;
+            }
+        }
+        Ok(out)
+    }
+
+    /// Element-wise max reduction — the scale synchronizer's conservative
+    /// merge rule for per-shard deltas.
+    pub fn all_reduce_max(&mut self, local: Vec<f32>) -> Result<Vec<f32>, OpError> {
+        let len = local.len();
+        let bytes = len * 4 * self.world;
+        let parts = self.all_gather(local)?;
+        self.stats.sim_time_s -= self.link.ring_allgather_time(bytes, self.world);
+        self.stats.sim_time_s += self.link.ring_allreduce_time(bytes, self.world);
+        let mut out = vec![f32::NEG_INFINITY; len];
+        for p in parts {
+            for (o, v) in out.iter_mut().zip(p) {
+                *o = o.max(v);
+            }
+        }
+        Ok(out)
+    }
+
+    /// Broadcast from `root` (Eq. 8): ring forward of the root's payload.
+    pub fn broadcast(&mut self, root: usize, local: Vec<f32>) -> Result<Vec<f32>, OpError> {
+        let parts = self.all_gather(local)?;
+        let bytes = parts[root].len() * 4;
+        self.stats.sim_time_s -= self
+            .link
+            .ring_allgather_time(bytes * self.world, self.world);
+        self.stats.sim_time_s += self.link.broadcast_time(bytes, self.world);
+        Ok(parts[root].clone())
+    }
+
+    /// Barrier: zero-payload all-gather.
+    pub fn barrier(&mut self) -> Result<(), OpError> {
+        self.all_gather(Vec::new())?;
+        Ok(())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::collective::Transport;
+
+    fn run_world<F, T>(n: usize, f: F) -> Vec<T>
+    where
+        F: Fn(Collective) -> T + Send + Sync + Clone + 'static,
+        T: Send + 'static,
+    {
+        let ring = Collective::ring(Topology::new(n, Transport::NvlinkRdma));
+        let mut handles = Vec::new();
+        for c in ring {
+            let f = f.clone();
+            handles.push(std::thread::spawn(move || f(c)));
+        }
+        handles.into_iter().map(|h| h.join().unwrap()).collect()
+    }
+
+    #[test]
+    fn all_gather_collects_every_rank() {
+        let results = run_world(4, |mut c| {
+            let local = vec![c.rank() as f32; 3];
+            c.all_gather(local).unwrap()
+        });
+        for r in results {
+            for (rank, part) in r.iter().enumerate() {
+                assert_eq!(part, &vec![rank as f32; 3]);
+            }
+        }
+    }
+
+    #[test]
+    fn all_reduce_sum_matches() {
+        let results = run_world(8, |mut c| {
+            c.all_reduce_sum(vec![1.0, c.rank() as f32]).unwrap()
+        });
+        for r in results {
+            assert_eq!(r[0], 8.0);
+            assert_eq!(r[1], (0..8).sum::<i32>() as f32);
+        }
+    }
+
+    #[test]
+    fn all_reduce_max_matches() {
+        let results = run_world(5, |mut c| c.all_reduce_max(vec![c.rank() as f32]).unwrap());
+        for r in results {
+            assert_eq!(r[0], 4.0);
+        }
+    }
+
+    #[test]
+    fn broadcast_delivers_root_payload() {
+        let results = run_world(4, |mut c| {
+            let local = vec![(10 * c.rank()) as f32];
+            c.broadcast(2, local).unwrap()
+        });
+        for r in results {
+            assert_eq!(r, vec![20.0]);
+        }
+    }
+
+    #[test]
+    fn stats_account_sim_time() {
+        let results = run_world(4, |mut c| {
+            c.all_gather(vec![0.0; 1024]).unwrap();
+            c.stats()
+        });
+        for s in results {
+            assert_eq!(s.ops, 1);
+            assert!(s.sim_time_s > 0.0);
+            assert!(s.bytes_sent >= 3 * 1024 * 4);
+        }
+    }
+
+    #[test]
+    fn world_of_one_is_trivial() {
+        let results = run_world(1, |mut c| c.all_gather(vec![7.0]).unwrap());
+        assert_eq!(results[0], vec![vec![7.0]]);
+    }
+}

@@ -1,0 +1,107 @@
+//! Deployment topology: world size + transport selection with fallback.
+
+use super::LinkModel;
+
+/// Interconnect families the paper deploys over (§3.3).
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
+pub enum Transport {
+    /// NCCL over NVLink/RDMA ring (single-node multi-GPU)
+    NvlinkRdma,
+    /// NCCL over InfiniBand (multi-node HPC)
+    Infiniband,
+    /// TCP-based RPC fallback (edge / CPU-GPU hybrid)
+    Tcp,
+}
+
+impl Transport {
+    pub fn link(self) -> LinkModel {
+        match self {
+            Transport::NvlinkRdma => LinkModel::nvlink(),
+            Transport::Infiniband => LinkModel::infiniband(),
+            Transport::Tcp => LinkModel::tcp(),
+        }
+    }
+
+    pub fn name(self) -> &'static str {
+        match self {
+            Transport::NvlinkRdma => "nccl-nvlink",
+            Transport::Infiniband => "nccl-ib",
+            Transport::Tcp => "tcp-fallback",
+        }
+    }
+
+    pub fn from_name(name: &str) -> Option<Self> {
+        Some(match name {
+            "nccl" | "nvlink" | "nccl-nvlink" => Transport::NvlinkRdma,
+            "ib" | "infiniband" | "nccl-ib" => Transport::Infiniband,
+            "tcp" | "tcp-fallback" => Transport::Tcp,
+            _ => return None,
+        })
+    }
+}
+
+/// World description used by the coordinator and the cost model.
+#[derive(Debug, Clone, Copy)]
+pub struct Topology {
+    pub world: usize,
+    pub transport: Transport,
+}
+
+impl Topology {
+    pub fn new(world: usize, transport: Transport) -> Self {
+        assert!(world >= 1);
+        Topology { world, transport }
+    }
+
+    /// The paper's headline testbed: 8xA100 over NVLink.
+    pub fn single_node_8gpu() -> Self {
+        Topology::new(8, Transport::NvlinkRdma)
+    }
+
+    /// Edge profile: one device, TCP to a host.
+    pub fn edge() -> Self {
+        Topology::new(1, Transport::Tcp)
+    }
+
+    pub fn link(&self) -> LinkModel {
+        self.transport.link()
+    }
+
+    /// Transparent fallback (paper §3.3): NCCL paths degrade to TCP when
+    /// the ring is unavailable (e.g. world size 1 on edge hardware keeps
+    /// its transport; heterogeneous worlds drop to TCP).
+    pub fn with_fallback(self, nccl_available: bool) -> Self {
+        if nccl_available || self.transport == Transport::Tcp {
+            self
+        } else {
+            Topology { transport: Transport::Tcp, ..self }
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn names_roundtrip() {
+        for t in [Transport::NvlinkRdma, Transport::Infiniband, Transport::Tcp] {
+            assert_eq!(Transport::from_name(t.name()), Some(t));
+        }
+    }
+
+    #[test]
+    fn fallback_switches_to_tcp() {
+        let t = Topology::single_node_8gpu().with_fallback(false);
+        assert_eq!(t.transport, Transport::Tcp);
+        assert_eq!(t.world, 8);
+        let kept = Topology::single_node_8gpu().with_fallback(true);
+        assert_eq!(kept.transport, Transport::NvlinkRdma);
+    }
+
+    #[test]
+    #[should_panic]
+    fn zero_world_rejected() {
+        Topology::new(0, Transport::Tcp);
+    }
+}

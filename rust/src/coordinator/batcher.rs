@@ -1,0 +1,166 @@
+//! Dynamic batcher: collect requests up to a max batch size or a deadline,
+//! whichever comes first (the classic serving tradeoff the ablation bench
+//! sweeps).
+
+use std::collections::VecDeque;
+use std::time::{Duration, Instant};
+
+use super::request::Request;
+
+/// Batching policy knobs.
+#[derive(Debug, Clone, Copy)]
+pub struct BatchPolicy {
+    /// max requests per batch (compiled graph batch size)
+    pub max_batch: usize,
+    /// max time the oldest request may wait before the batch is released
+    pub max_wait: Duration,
+}
+
+impl Default for BatchPolicy {
+    fn default() -> Self {
+        BatchPolicy { max_batch: 8, max_wait: Duration::from_millis(5) }
+    }
+}
+
+/// A released batch.
+#[derive(Debug)]
+pub struct Batch {
+    pub requests: Vec<Request>,
+    pub formed_at: Instant,
+}
+
+impl Batch {
+    pub fn len(&self) -> usize {
+        self.requests.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.requests.is_empty()
+    }
+}
+
+/// FIFO queue + policy.
+#[derive(Debug)]
+pub struct Batcher {
+    policy: BatchPolicy,
+    queue: VecDeque<Request>,
+}
+
+impl Batcher {
+    pub fn new(policy: BatchPolicy) -> Self {
+        assert!(policy.max_batch >= 1);
+        Batcher { policy, queue: VecDeque::new() }
+    }
+
+    pub fn policy(&self) -> BatchPolicy {
+        self.policy
+    }
+
+    pub fn push(&mut self, req: Request) {
+        self.queue.push_back(req);
+    }
+
+    pub fn pending(&self) -> usize {
+        self.queue.len()
+    }
+
+    /// Whether a batch should be released `now`.
+    pub fn ready(&self, now: Instant) -> bool {
+        if self.queue.len() >= self.policy.max_batch {
+            return true;
+        }
+        match self.queue.front() {
+            Some(r) => now.duration_since(r.arrival) >= self.policy.max_wait,
+            None => false,
+        }
+    }
+
+    /// Release the next batch if the policy allows.
+    pub fn take(&mut self, now: Instant) -> Option<Batch> {
+        if !self.ready(now) {
+            return None;
+        }
+        let n = self.queue.len().min(self.policy.max_batch);
+        let requests: Vec<Request> = self.queue.drain(..n).collect();
+        Some(Batch { requests, formed_at: now })
+    }
+
+    /// Drain everything regardless of deadline (shutdown path).
+    pub fn flush(&mut self) -> Vec<Batch> {
+        let mut out = Vec::new();
+        while !self.queue.is_empty() {
+            let n = self.queue.len().min(self.policy.max_batch);
+            out.push(Batch {
+                requests: self.queue.drain(..n).collect(),
+                formed_at: Instant::now(),
+            });
+        }
+        out
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::proptest::{check, UsizeRange};
+
+    fn req(id: u64) -> Request {
+        Request::new(id, vec![1, 2], 4)
+    }
+
+    #[test]
+    fn releases_on_full_batch() {
+        let mut b = Batcher::new(BatchPolicy { max_batch: 2, max_wait: Duration::from_secs(10) });
+        b.push(req(1));
+        assert!(b.take(Instant::now()).is_none());
+        b.push(req(2));
+        let batch = b.take(Instant::now()).unwrap();
+        assert_eq!(batch.len(), 2);
+        assert_eq!(b.pending(), 0);
+    }
+
+    #[test]
+    fn releases_on_deadline() {
+        let mut b = Batcher::new(BatchPolicy { max_batch: 8, max_wait: Duration::from_millis(1) });
+        b.push(req(1));
+        assert!(b.take(Instant::now()).is_none());
+        std::thread::sleep(Duration::from_millis(3));
+        let batch = b.take(Instant::now()).unwrap();
+        assert_eq!(batch.len(), 1);
+    }
+
+    #[test]
+    fn oversized_queue_splits() {
+        let mut b = Batcher::new(BatchPolicy { max_batch: 3, max_wait: Duration::ZERO });
+        for i in 0..7 {
+            b.push(req(i));
+        }
+        let sizes: Vec<usize> = b.flush().iter().map(Batch::len).collect();
+        assert_eq!(sizes, vec![3, 3, 1]);
+    }
+
+    #[test]
+    fn fifo_order_preserved() {
+        let mut b = Batcher::new(BatchPolicy { max_batch: 4, max_wait: Duration::ZERO });
+        for i in 0..4 {
+            b.push(req(i));
+        }
+        let batch = b.take(Instant::now()).unwrap();
+        let ids: Vec<u64> = batch.requests.iter().map(|r| r.id).collect();
+        assert_eq!(ids, vec![0, 1, 2, 3]);
+    }
+
+    #[test]
+    fn prop_batches_never_exceed_max_and_lose_nothing() {
+        check(11, 100, &UsizeRange(1, 50), |n| {
+            let mut b =
+                Batcher::new(BatchPolicy { max_batch: 4, max_wait: Duration::ZERO });
+            for i in 0..*n {
+                b.push(req(i as u64));
+            }
+            let batches = b.flush();
+            let total: usize = batches.iter().map(Batch::len).sum();
+            total == *n && batches.iter().all(|x| x.len() <= 4 && !x.is_empty())
+        });
+    }
+}

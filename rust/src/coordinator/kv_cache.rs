@@ -1,0 +1,493 @@
+//! KV-cache manager: batch-slot cache buffers, fp32 or SimQuant-compressed.
+//!
+//! Layout matches the decode graphs' inputs: `[L, B, CTX, D]` caches plus,
+//! for SimQuant, per-(layer, slot) channel params `[L, B, 1, D]`.
+//!
+//! SimQuant mode implements the paper's online KV quantization (§3.4):
+//! each (layer, slot) page carries per-channel (vmin, step); appending a
+//! row that falls outside the page's range triggers an in-place page
+//! re-encode (dequantize codes, widen range, requantize) — the runtime
+//! adaptation that keeps Thm. A.2's bound tight as the sequence grows.
+
+use anyhow::Result;
+
+use crate::quant::{round_ties_even, simquant_encode};
+use crate::runtime::{f32_bytes, literal_from_raw};
+use crate::tensor::{DType, Tensor};
+
+/// Whether the cache stores f32 rows or SimQuant u8 codes.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+enum Mode {
+    F32,
+    SimQuant,
+}
+
+/// Batched KV cache for one worker shard.
+pub struct KvCache {
+    n_layers: usize,
+    batch: usize,
+    ctx: usize,
+    d: usize,
+    mode: Mode,
+    /// f32 mode: [L, B, CTX, D] values; simquant mode: codes as f32-free u8
+    k_f32: Vec<f32>,
+    v_f32: Vec<f32>,
+    k_q: Vec<u8>,
+    v_q: Vec<u8>,
+    /// per (layer, slot, channel) params, [L, B, D]
+    k_min: Vec<f32>,
+    k_step: Vec<f32>,
+    v_min: Vec<f32>,
+    v_step: Vec<f32>,
+    /// per-slot filled length
+    lens: Vec<usize>,
+    /// page re-encode counter (observability)
+    pub reencodes: u64,
+}
+
+impl KvCache {
+    pub fn new_f32(n_layers: usize, batch: usize, ctx: usize, d: usize) -> Self {
+        KvCache {
+            n_layers,
+            batch,
+            ctx,
+            d,
+            mode: Mode::F32,
+            k_f32: vec![0.0; n_layers * batch * ctx * d],
+            v_f32: vec![0.0; n_layers * batch * ctx * d],
+            k_q: Vec::new(),
+            v_q: Vec::new(),
+            k_min: Vec::new(),
+            k_step: Vec::new(),
+            v_min: Vec::new(),
+            v_step: Vec::new(),
+            lens: vec![0; batch],
+            reencodes: 0,
+        }
+    }
+
+    pub fn new_simquant(n_layers: usize, batch: usize, ctx: usize, d: usize) -> Self {
+        KvCache {
+            n_layers,
+            batch,
+            ctx,
+            d,
+            mode: Mode::SimQuant,
+            k_f32: Vec::new(),
+            v_f32: Vec::new(),
+            k_q: vec![0; n_layers * batch * ctx * d],
+            v_q: vec![0; n_layers * batch * ctx * d],
+            k_min: vec![0.0; n_layers * batch * d],
+            k_step: vec![1e-8; n_layers * batch * d],
+            v_min: vec![0.0; n_layers * batch * d],
+            v_step: vec![1e-8; n_layers * batch * d],
+            lens: vec![0; batch],
+            reencodes: 0,
+        }
+    }
+
+    pub fn is_quantized(&self) -> bool {
+        self.mode == Mode::SimQuant
+    }
+
+    pub fn len(&self, slot: usize) -> usize {
+        self.lens[slot]
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.lens.iter().all(|l| *l == 0)
+    }
+
+    /// Clear one slot for reuse by a new request.
+    pub fn reset_slot(&mut self, slot: usize) {
+        self.lens[slot] = 0;
+        if self.mode == Mode::SimQuant {
+            for layer in 0..self.n_layers {
+                let p = (layer * self.batch + slot) * self.d;
+                self.k_min[p..p + self.d].fill(0.0);
+                self.k_step[p..p + self.d].fill(1e-8);
+                self.v_min[p..p + self.d].fill(0.0);
+                self.v_step[p..p + self.d].fill(1e-8);
+            }
+        }
+    }
+
+    /// Bytes the cache occupies (memory accounting for the tables).
+    pub fn storage_bytes(&self) -> usize {
+        match self.mode {
+            Mode::F32 => (self.k_f32.len() + self.v_f32.len()) * 4,
+            Mode::SimQuant => {
+                self.k_q.len()
+                    + self.v_q.len()
+                    + (self.k_min.len() + self.k_step.len() + self.v_min.len()
+                        + self.v_step.len())
+                        * 4
+            }
+        }
+    }
+
+    #[inline]
+    fn row_off(&self, layer: usize, slot: usize, t: usize) -> usize {
+        ((layer * self.batch + slot) * self.ctx + t) * self.d
+    }
+
+    #[inline]
+    fn param_off(&self, layer: usize, slot: usize) -> usize {
+        (layer * self.batch + slot) * self.d
+    }
+
+    /// Ingest prefill caches for one slot: rows [T, D] per layer, stored
+    /// (and for SimQuant: page-encoded) at positions 0..t_len.
+    pub fn ingest_prefill(
+        &mut self,
+        slot: usize,
+        layer: usize,
+        k_rows: &[f32],
+        v_rows: &[f32],
+        t_len: usize,
+    ) {
+        assert!(t_len <= self.ctx);
+        assert_eq!(k_rows.len(), t_len * self.d);
+        match self.mode {
+            Mode::F32 => {
+                let off = self.row_off(layer, slot, 0);
+                self.k_f32[off..off + t_len * self.d].copy_from_slice(k_rows);
+                self.v_f32[off..off + t_len * self.d].copy_from_slice(v_rows);
+            }
+            Mode::SimQuant => {
+                let (kq, kmin, kstep) = simquant_encode(k_rows, t_len, self.d, 8);
+                let (vq, vmin, vstep) = simquant_encode(v_rows, t_len, self.d, 8);
+                let off = self.row_off(layer, slot, 0);
+                self.k_q[off..off + t_len * self.d].copy_from_slice(&kq);
+                self.v_q[off..off + t_len * self.d].copy_from_slice(&vq);
+                let p = self.param_off(layer, slot);
+                self.k_min[p..p + self.d].copy_from_slice(&kmin);
+                self.k_step[p..p + self.d].copy_from_slice(&kstep);
+                self.v_min[p..p + self.d].copy_from_slice(&vmin);
+                self.v_step[p..p + self.d].copy_from_slice(&vstep);
+            }
+        }
+        self.lens[slot] = self.lens[slot].max(t_len);
+    }
+
+    /// Append one decode-step row per cache; grows the slot by one.
+    pub fn append_row(&mut self, slot: usize, layer: usize, k_row: &[f32], v_row: &[f32]) {
+        let t = self.lens[slot];
+        assert!(t < self.ctx, "slot {slot} KV overflow");
+        match self.mode {
+            Mode::F32 => {
+                let off = self.row_off(layer, slot, t);
+                self.k_f32[off..off + self.d].copy_from_slice(k_row);
+                self.v_f32[off..off + self.d].copy_from_slice(v_row);
+            }
+            Mode::SimQuant => {
+                self.append_quantized(slot, layer, t, k_row, true);
+                self.append_quantized(slot, layer, t, v_row, false);
+            }
+        }
+        // the caller bumps the length once after appending all layers
+    }
+
+    /// Mark the slot one token longer (after all layers appended).
+    pub fn bump(&mut self, slot: usize) {
+        self.lens[slot] += 1;
+    }
+
+    fn append_quantized(
+        &mut self,
+        slot: usize,
+        layer: usize,
+        t: usize,
+        row: &[f32],
+        is_k: bool,
+    ) {
+        let p = self.param_off(layer, slot);
+        let d = self.d;
+        // check range; widen + re-encode the page if violated
+        let mut needs_reencode = false;
+        {
+            let (vmin, vstep) = if is_k {
+                (&self.k_min[p..p + d], &self.k_step[p..p + d])
+            } else {
+                (&self.v_min[p..p + d], &self.v_step[p..p + d])
+            };
+            for c in 0..d {
+                let hi = vmin[c] + vstep[c] * 255.0;
+                if row[c] < vmin[c] - 1e-9 || row[c] > hi + 1e-9 {
+                    needs_reencode = true;
+                    break;
+                }
+            }
+        }
+        if needs_reencode && t > 0 {
+            self.reencode_page(slot, layer, t, row, is_k);
+            self.reencodes += 1;
+        } else if needs_reencode {
+            // empty page: seed params from the row itself
+            let (lo, hi): (Vec<f32>, Vec<f32>) = (
+                row.iter().map(|v| v.min(0.0)).collect(),
+                row.iter().map(|v| v.max(0.0)).collect(),
+            );
+            let (vmin, vstep) = if is_k {
+                (&mut self.k_min[p..p + d], &mut self.k_step[p..p + d])
+            } else {
+                (&mut self.v_min[p..p + d], &mut self.v_step[p..p + d])
+            };
+            for c in 0..d {
+                vmin[c] = lo[c];
+                vstep[c] = ((hi[c] - lo[c]).max(1e-8)) / 255.0;
+            }
+        }
+        // encode the row with current params
+        let off = self.row_off(layer, slot, t);
+        let (vmin, vstep, codes) = if is_k {
+            (&self.k_min[p..p + d], &self.k_step[p..p + d], &mut self.k_q[off..off + d])
+        } else {
+            (&self.v_min[p..p + d], &self.v_step[p..p + d], &mut self.v_q[off..off + d])
+        };
+        for c in 0..d {
+            let q = round_ties_even((row[c] - vmin[c]) / vstep[c]).clamp(0.0, 255.0);
+            codes[c] = q as u8;
+        }
+    }
+
+    /// Widen the page range to cover `row` and requantize existing codes.
+    fn reencode_page(&mut self, slot: usize, layer: usize, t: usize, row: &[f32], is_k: bool) {
+        let p = self.param_off(layer, slot);
+        let d = self.d;
+        let base = self.row_off(layer, slot, 0);
+        // decode current page
+        let mut page = vec![0f32; t * d];
+        {
+            let (codes, vmin, vstep) = if is_k {
+                (&self.k_q[base..base + t * d], &self.k_min[p..p + d], &self.k_step[p..p + d])
+            } else {
+                (&self.v_q[base..base + t * d], &self.v_min[p..p + d], &self.v_step[p..p + d])
+            };
+            for r in 0..t {
+                for c in 0..d {
+                    page[r * d + c] = codes[r * d + c] as f32 * vstep[c] + vmin[c];
+                }
+            }
+        }
+        // widened per-channel range over page + new row
+        let mut lo = vec![f32::INFINITY; d];
+        let mut hi = vec![f32::NEG_INFINITY; d];
+        for r in 0..t {
+            for c in 0..d {
+                lo[c] = lo[c].min(page[r * d + c]);
+                hi[c] = hi[c].max(page[r * d + c]);
+            }
+        }
+        for c in 0..d {
+            lo[c] = lo[c].min(row[c]);
+            hi[c] = hi[c].max(row[c]);
+        }
+        // write params + re-encoded codes
+        {
+            let (vmin, vstep) = if is_k {
+                (&mut self.k_min[p..p + d], &mut self.k_step[p..p + d])
+            } else {
+                (&mut self.v_min[p..p + d], &mut self.v_step[p..p + d])
+            };
+            for c in 0..d {
+                vmin[c] = lo[c];
+                vstep[c] = (hi[c] - lo[c]).max(1e-8) / 255.0;
+            }
+        }
+        let (codes, vmin, vstep) = if is_k {
+            (&mut self.k_q[base..base + t * d], &self.k_min[p..p + d], &self.k_step[p..p + d])
+        } else {
+            (&mut self.v_q[base..base + t * d], &self.v_min[p..p + d], &self.v_step[p..p + d])
+        };
+        for r in 0..t {
+            for c in 0..d {
+                let q = round_ties_even((page[r * d + c] - vmin[c]) / vstep[c]).clamp(0.0, 255.0);
+                codes[r * d + c] = q as u8;
+            }
+        }
+    }
+
+    /// Dequantize one slot's K page (tests + debugging).
+    pub fn decode_k(&self, slot: usize, layer: usize) -> Vec<f32> {
+        let t = self.lens[slot];
+        let d = self.d;
+        match self.mode {
+            Mode::F32 => {
+                let off = self.row_off(layer, slot, 0);
+                self.k_f32[off..off + t * d].to_vec()
+            }
+            Mode::SimQuant => {
+                let off = self.row_off(layer, slot, 0);
+                let p = self.param_off(layer, slot);
+                let mut out = vec![0f32; t * d];
+                for r in 0..t {
+                    for c in 0..d {
+                        out[r * d + c] = self.k_q[off + r * d + c] as f32 * self.k_step[p + c]
+                            + self.k_min[p + c];
+                    }
+                }
+                out
+            }
+        }
+    }
+
+    /// Build the decode-graph cache input tensors.
+    /// f32 mode: [k_cache, v_cache]; simquant: [k_cache, v_cache, k_min,
+    /// k_step, v_min, v_step] in graph input order.
+    pub fn graph_inputs(&self) -> Vec<Tensor> {
+        let (l, b, c, d) = (self.n_layers, self.batch, self.ctx, self.d);
+        match self.mode {
+            Mode::F32 => vec![
+                Tensor::from_f32(vec![l, b, c, d], self.k_f32.clone()),
+                Tensor::from_f32(vec![l, b, c, d], self.v_f32.clone()),
+            ],
+            Mode::SimQuant => {
+                let expand = |params: &[f32]| {
+                    Tensor::from_f32(vec![l, b, 1, d], params.to_vec())
+                };
+                vec![
+                    Tensor::from_u8(vec![l, b, c, d], self.k_q.clone()),
+                    Tensor::from_u8(vec![l, b, c, d], self.v_q.clone()),
+                    expand(&self.k_min),
+                    expand(&self.k_step),
+                    expand(&self.v_min),
+                    expand(&self.v_step),
+                ]
+            }
+        }
+    }
+
+    pub fn dtype(&self) -> DType {
+        match self.mode {
+            Mode::F32 => DType::F32,
+            Mode::SimQuant => DType::U8,
+        }
+    }
+
+    /// Build the decode-graph cache inputs as PJRT literals directly from
+    /// the cache's own buffers — one copy (into the literal) instead of
+    /// the two `graph_inputs()` pays (staging Tensor + literal). This is
+    /// the decode hot path (EXPERIMENTS.md §Perf).
+    pub fn input_literals(&self) -> Result<Vec<xla::Literal>> {
+        let (l, b, c, d) = (self.n_layers, self.batch, self.ctx, self.d);
+        let cache_shape = [l, b, c, d];
+        let param_shape = [l, b, 1, d];
+        Ok(match self.mode {
+            Mode::F32 => vec![
+                literal_from_raw(DType::F32, &cache_shape, f32_bytes(&self.k_f32))?,
+                literal_from_raw(DType::F32, &cache_shape, f32_bytes(&self.v_f32))?,
+            ],
+            Mode::SimQuant => vec![
+                literal_from_raw(DType::U8, &cache_shape, &self.k_q)?,
+                literal_from_raw(DType::U8, &cache_shape, &self.v_q)?,
+                literal_from_raw(DType::F32, &param_shape, f32_bytes(&self.k_min))?,
+                literal_from_raw(DType::F32, &param_shape, f32_bytes(&self.k_step))?,
+                literal_from_raw(DType::F32, &param_shape, f32_bytes(&self.v_min))?,
+                literal_from_raw(DType::F32, &param_shape, f32_bytes(&self.v_step))?,
+            ],
+        })
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::corpus::XorShift64Star;
+
+    fn rows(t: usize, d: usize, seed: u64, scale: f32) -> Vec<f32> {
+        let mut r = XorShift64Star::new(seed);
+        (0..t * d).map(|_| r.next_normal() as f32 * scale).collect()
+    }
+
+    #[test]
+    fn f32_roundtrip() {
+        let mut kv = KvCache::new_f32(2, 1, 8, 4);
+        let k = rows(3, 4, 1, 1.0);
+        let v = rows(3, 4, 2, 1.0);
+        for layer in 0..2 {
+            kv.ingest_prefill(0, layer, &k, &v, 3);
+        }
+        assert_eq!(kv.len(0), 3);
+        assert_eq!(kv.decode_k(0, 1), k);
+    }
+
+    #[test]
+    fn simquant_roundtrip_bounded() {
+        let mut kv = KvCache::new_simquant(1, 1, 16, 8);
+        let k = rows(5, 8, 3, 2.0);
+        let v = rows(5, 8, 4, 2.0);
+        kv.ingest_prefill(0, 0, &k, &v, 5);
+        let dk = kv.decode_k(0, 0);
+        for (a, b) in k.iter().zip(&dk) {
+            assert!((a - b).abs() < 0.05, "{a} vs {b}");
+        }
+    }
+
+    #[test]
+    fn append_within_range_no_reencode() {
+        let mut kv = KvCache::new_simquant(1, 1, 16, 4);
+        // wide prefill range so appended rows stay inside
+        let k = vec![-10.0, -10.0, -10.0, -10.0, 10.0, 10.0, 10.0, 10.0];
+        kv.ingest_prefill(0, 0, &k, &k, 2);
+        kv.append_row(0, 0, &[1.0, 2.0, -3.0, 0.5], &[0.0, 0.0, 0.0, 0.0]);
+        kv.bump(0);
+        assert_eq!(kv.reencodes, 0);
+        assert_eq!(kv.len(0), 3);
+    }
+
+    #[test]
+    fn out_of_range_append_triggers_reencode_and_stays_accurate() {
+        let mut kv = KvCache::new_simquant(1, 1, 16, 4);
+        let k = vec![0.1, 0.1, 0.1, 0.1, 0.2, 0.2, 0.2, 0.2];
+        kv.ingest_prefill(0, 0, &k, &k, 2);
+        let big = [5.0, -4.0, 3.0, 7.0];
+        kv.append_row(0, 0, &big, &big);
+        kv.bump(0);
+        assert!(kv.reencodes > 0);
+        let dk = kv.decode_k(0, 0);
+        // old rows still reconstruct within the widened step bound
+        for (a, b) in k.iter().zip(&dk[..8]) {
+            assert!((a - b).abs() < 0.05, "{a} vs {b}");
+        }
+        for (a, b) in big.iter().zip(&dk[8..]) {
+            assert!((a - b).abs() < 0.05, "{a} vs {b}");
+        }
+    }
+
+    #[test]
+    fn storage_is_quarter_of_f32() {
+        let f = KvCache::new_f32(2, 4, 64, 32);
+        let q = KvCache::new_simquant(2, 4, 64, 32);
+        let ratio = q.storage_bytes() as f64 / f.storage_bytes() as f64;
+        assert!(ratio < 0.3, "ratio {ratio}");
+    }
+
+    #[test]
+    fn reset_slot_clears() {
+        let mut kv = KvCache::new_simquant(1, 2, 8, 4);
+        let k = rows(4, 4, 5, 1.0);
+        kv.ingest_prefill(1, 0, &k, &k, 4);
+        kv.reset_slot(1);
+        assert_eq!(kv.len(1), 0);
+    }
+
+    #[test]
+    fn graph_inputs_shapes() {
+        let kv = KvCache::new_simquant(2, 3, 8, 4);
+        let ins = kv.graph_inputs();
+        assert_eq!(ins.len(), 6);
+        assert_eq!(ins[0].shape, vec![2, 3, 8, 4]);
+        assert_eq!(ins[2].shape, vec![2, 3, 1, 4]);
+        let f = KvCache::new_f32(2, 3, 8, 4);
+        assert_eq!(f.graph_inputs().len(), 2);
+    }
+
+    #[test]
+    #[should_panic(expected = "KV overflow")]
+    fn overflow_panics() {
+        let mut kv = KvCache::new_f32(1, 1, 2, 2);
+        kv.ingest_prefill(0, 0, &[0.0; 4], &[0.0; 4], 2);
+        kv.append_row(0, 0, &[1.0, 1.0], &[1.0, 1.0]);
+    }
+}

@@ -1,0 +1,32 @@
+//! The serving coordinator — LLMEasyQuant's Distributed Controller Layer.
+//!
+//! Pieces (paper §2.1, §3):
+//!   router     — request admission + shard assignment (least-loaded)
+//!   batcher    — dynamic batching with a max-size / deadline policy
+//!   kv_cache   — per-slot KV pages, fp32 or SimQuant u8 codes with online
+//!                page re-encode (the "runtime adaptation" of §3.4)
+//!   scale_sync — Alg. 1 EMA trackers + Eqs. 7-8 collective synchronization
+//!   bitwidth   — Thm. 3 greedy per-layer mixed-precision search
+//!   worker     — one shard: owns a ModelHandle, runs prefill/decode
+//!   server     — ties it together: router -> batcher -> workers -> responses
+//!
+//! Python never appears here: workers execute AOT artifacts through PJRT.
+
+mod batcher;
+mod bitwidth;
+mod kv_cache;
+mod request;
+mod router;
+mod scale_sync;
+mod server;
+mod worker;
+pub mod workload;
+
+pub use batcher::{Batch, BatchPolicy, Batcher};
+pub use bitwidth::{quant_mse, search_bitwidths, size_reduction, BitwidthChoice, LayerInfo, SearchPolicy, BIT_CHOICES};
+pub use kv_cache::KvCache;
+pub use request::{Request, RequestId, Response};
+pub use router::Router;
+pub use scale_sync::ScaleSync;
+pub use server::{Server, ServerConfig, ServerReport};
+pub use worker::Worker;

@@ -1,0 +1,48 @@
+//! Request / response types for the serving path.
+
+use std::time::Instant;
+
+pub type RequestId = u64;
+
+/// One generation request.
+#[derive(Debug, Clone)]
+pub struct Request {
+    pub id: RequestId,
+    /// prompt token ids (BOS-prefixed by the router if absent)
+    pub prompt: Vec<i32>,
+    pub max_new_tokens: usize,
+    pub arrival: Instant,
+}
+
+impl Request {
+    pub fn new(id: RequestId, prompt: Vec<i32>, max_new_tokens: usize) -> Self {
+        Request { id, prompt, max_new_tokens, arrival: Instant::now() }
+    }
+}
+
+/// Completed generation.
+#[derive(Debug, Clone)]
+pub struct Response {
+    pub id: RequestId,
+    pub tokens: Vec<i32>,
+    /// prompt length actually used (after truncation)
+    pub prompt_len: usize,
+    /// end-to-end latency from arrival
+    pub latency_s: f64,
+    /// time to first token
+    pub ttft_s: f64,
+    /// shard that served the request
+    pub shard: usize,
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn request_records_arrival() {
+        let r = Request::new(1, vec![1, 2, 3], 16);
+        assert!(r.arrival.elapsed().as_secs() < 1);
+        assert_eq!(r.max_new_tokens, 16);
+    }
+}

@@ -1,0 +1,170 @@
+//! Request router: admission control + least-loaded shard assignment.
+
+use std::collections::BTreeMap;
+
+use crate::corpus::BOS;
+
+use super::request::{Request, RequestId};
+
+/// Routing decision for one request.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct RouteDecision {
+    pub shard: usize,
+}
+
+/// The router tracks in-flight load per shard and a session table.
+#[derive(Debug)]
+pub struct Router {
+    n_shards: usize,
+    max_prompt: usize,
+    /// in-flight request count per shard
+    load: Vec<usize>,
+    /// request -> shard (sessions stay on their shard for KV affinity)
+    sessions: BTreeMap<RequestId, usize>,
+    next_id: RequestId,
+}
+
+impl Router {
+    pub fn new(n_shards: usize, max_prompt: usize) -> Self {
+        assert!(n_shards >= 1);
+        Router {
+            n_shards,
+            max_prompt,
+            load: vec![0; n_shards],
+            sessions: BTreeMap::new(),
+            next_id: 1,
+        }
+    }
+
+    pub fn n_shards(&self) -> usize {
+        self.n_shards
+    }
+
+    pub fn fresh_id(&mut self) -> RequestId {
+        let id = self.next_id;
+        self.next_id += 1;
+        id
+    }
+
+    /// Admit a request: BOS-prefix, truncate the prompt to fit, assign the
+    /// least-loaded shard (ties -> lowest rank, keeps assignment
+    /// deterministic for the property tests).
+    pub fn admit(&mut self, mut req: Request) -> (Request, RouteDecision) {
+        if req.prompt.first() != Some(&BOS) {
+            req.prompt.insert(0, BOS);
+        }
+        if req.prompt.len() > self.max_prompt {
+            req.prompt.truncate(self.max_prompt);
+        }
+        let shard = self
+            .load
+            .iter()
+            .enumerate()
+            .min_by_key(|(i, l)| (**l, *i))
+            .map(|(i, _)| i)
+            .unwrap();
+        self.load[shard] += 1;
+        self.sessions.insert(req.id, shard);
+        (req, RouteDecision { shard })
+    }
+
+    /// Mark a request complete, releasing its shard slot.
+    pub fn complete(&mut self, id: RequestId) {
+        if let Some(shard) = self.sessions.remove(&id) {
+            self.load[shard] = self.load[shard].saturating_sub(1);
+        }
+    }
+
+    pub fn shard_of(&self, id: RequestId) -> Option<usize> {
+        self.sessions.get(&id).copied()
+    }
+
+    pub fn load(&self) -> &[usize] {
+        &self.load
+    }
+
+    pub fn in_flight(&self) -> usize {
+        self.sessions.len()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::proptest::{check, UsizeRange};
+
+    fn req(id: RequestId, len: usize) -> Request {
+        Request::new(id, vec![5; len], 4)
+    }
+
+    #[test]
+    fn bos_prefix_added_once() {
+        let mut r = Router::new(2, 16);
+        let (q, _) = r.admit(req(1, 3));
+        assert_eq!(q.prompt[0], BOS);
+        assert_eq!(q.prompt.len(), 4);
+        let mut with_bos = req(2, 3);
+        with_bos.prompt[0] = BOS;
+        let (q2, _) = r.admit(with_bos);
+        assert_eq!(q2.prompt.len(), 3);
+    }
+
+    #[test]
+    fn truncates_to_max_prompt() {
+        let mut r = Router::new(1, 8);
+        let (q, _) = r.admit(req(1, 100));
+        assert_eq!(q.prompt.len(), 8);
+    }
+
+    #[test]
+    fn least_loaded_assignment() {
+        let mut r = Router::new(3, 16);
+        let (_, d1) = r.admit(req(1, 2));
+        let (_, d2) = r.admit(req(2, 2));
+        let (_, d3) = r.admit(req(3, 2));
+        assert_eq!((d1.shard, d2.shard, d3.shard), (0, 1, 2));
+        r.complete(2);
+        let (_, d4) = r.admit(req(4, 2));
+        assert_eq!(d4.shard, 1, "freed shard gets the next request");
+    }
+
+    #[test]
+    fn complete_is_idempotent() {
+        let mut r = Router::new(2, 16);
+        let (_, _) = r.admit(req(1, 2));
+        r.complete(1);
+        r.complete(1);
+        assert_eq!(r.in_flight(), 0);
+        assert_eq!(r.load(), &[0, 0]);
+    }
+
+    #[test]
+    fn prop_load_balance_within_one() {
+        // property: after admitting K requests with no completions, shard
+        // loads differ by at most 1
+        check(7, 100, &UsizeRange(1, 64), |k| {
+            let mut r = Router::new(4, 16);
+            for i in 0..*k {
+                r.admit(Request::new(i as RequestId, vec![3, 4], 2));
+            }
+            let mx = *r.load().iter().max().unwrap();
+            let mn = *r.load().iter().min().unwrap();
+            mx - mn <= 1
+        });
+    }
+
+    #[test]
+    fn prop_load_conserved() {
+        // property: total load equals admitted - completed
+        check(8, 100, &UsizeRange(1, 40), |k| {
+            let mut r = Router::new(3, 16);
+            for i in 0..*k {
+                r.admit(Request::new(i as RequestId, vec![3], 1));
+            }
+            for i in 0..(*k / 2) {
+                r.complete(i as RequestId);
+            }
+            r.load().iter().sum::<usize>() == *k - *k / 2
+        });
+    }
+}

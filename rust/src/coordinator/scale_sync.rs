@@ -1,0 +1,140 @@
+//! Distributed scale synchronization (paper §3.3, Thm. 4).
+//!
+//! Every worker shard tracks activation scales with `EmaScaleTracker`s
+//! (Alg. 1). Periodically the shards run an all-reduce(max) over their
+//! deltas and an all-gather over zero points through the `collective`
+//! ring, then adopt the merged state — after a sync, all shards quantize
+//! with identical parameters, which Thm. 4's consistency argument
+//! requires.
+
+use crate::collective::{Collective, OpError};
+use crate::quant::{EmaScaleTracker, EmaState};
+
+/// Per-shard synchronizer: a tracker per tracked region (e.g. one per
+/// layer input) plus the rank's collective endpoint.
+pub struct ScaleSync {
+    trackers: Vec<EmaScaleTracker>,
+    /// sync every `period` observations (0 = never)
+    period: u64,
+    observations: u64,
+    pub syncs: u64,
+}
+
+impl ScaleSync {
+    pub fn new(n_regions: usize, alpha: f32, eps: f32, period: u64) -> Self {
+        ScaleSync {
+            trackers: (0..n_regions).map(|_| EmaScaleTracker::new(alpha, eps)).collect(),
+            period,
+            observations: 0,
+            syncs: 0,
+        }
+    }
+
+    pub fn n_regions(&self) -> usize {
+        self.trackers.len()
+    }
+
+    /// Observe activations for a region; returns the local state.
+    pub fn observe(&mut self, region: usize, x: &[f32]) -> EmaState {
+        self.observations += 1;
+        self.trackers[region].observe(x)
+    }
+
+    pub fn state(&self, region: usize) -> EmaState {
+        self.trackers[region].state()
+    }
+
+    /// Whether the sync period has elapsed.
+    pub fn due(&self) -> bool {
+        self.period > 0 && self.observations > 0 && self.observations % self.period == 0
+    }
+
+    /// Eqs. 7-8: merge scales across shards.
+    ///
+    /// deltas merge with max (conservative: no shard's range is clipped);
+    /// zero points average. Returns the merged states all shards adopted.
+    pub fn sync(&mut self, comm: &mut Collective) -> Result<Vec<EmaState>, OpError> {
+        let local_deltas: Vec<f32> = self.trackers.iter().map(|t| t.state().delta).collect();
+        let local_zps: Vec<f32> =
+            self.trackers.iter().map(|t| t.state().zero_point).collect();
+        let merged_deltas = comm.all_reduce_max(local_deltas)?;
+        let zp_sum = comm.all_reduce_sum(local_zps)?;
+        let world = comm.world() as f32;
+        let mut out = Vec::with_capacity(self.trackers.len());
+        for (i, t) in self.trackers.iter_mut().enumerate() {
+            let st = EmaState {
+                delta: merged_deltas[i],
+                zero_point: (zp_sum[i] / world).round(),
+            };
+            t.adopt(st);
+            out.push(st);
+        }
+        self.syncs += 1;
+        Ok(out)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::collective::{Collective, Topology, Transport};
+
+    fn run_shards<F, T>(n: usize, f: F) -> Vec<T>
+    where
+        F: Fn(usize, Collective) -> T + Send + Sync + Clone + 'static,
+        T: Send + 'static,
+    {
+        let ring = Collective::ring(Topology::new(n, Transport::NvlinkRdma));
+        let mut handles = Vec::new();
+        for (rank, c) in ring.into_iter().enumerate() {
+            let f = f.clone();
+            handles.push(std::thread::spawn(move || f(rank, c)));
+        }
+        handles.into_iter().map(|h| h.join().unwrap()).collect()
+    }
+
+    #[test]
+    fn post_sync_states_identical_across_shards() {
+        // Thm. 4: after sync every shard holds identical parameters
+        let states = run_shards(4, |rank, mut comm| {
+            let mut s = ScaleSync::new(3, 0.9, 1e-6, 0);
+            // each shard sees different data
+            for region in 0..3 {
+                let x: Vec<f32> =
+                    (0..64).map(|i| (i as f32 + rank as f32 * 10.0) * 0.01).collect();
+                s.observe(region, &x);
+            }
+            s.sync(&mut comm).unwrap()
+        });
+        for other in &states[1..] {
+            for (a, b) in states[0].iter().zip(other) {
+                assert_eq!(a.delta, b.delta);
+                assert_eq!(a.zero_point, b.zero_point);
+            }
+        }
+    }
+
+    #[test]
+    fn merged_delta_is_max_over_shards() {
+        let states = run_shards(3, |rank, mut comm| {
+            let mut s = ScaleSync::new(1, 0.9, 1e-6, 0);
+            s.observe(0, &[(rank as f32 + 1.0) * 2.0]);
+            s.sync(&mut comm).unwrap()
+        });
+        // max absmax across shards = 6.0
+        for st in states {
+            assert!((st[0].delta - 6.0).abs() < 1e-5, "{:?}", st);
+        }
+    }
+
+    #[test]
+    fn due_respects_period() {
+        let mut s = ScaleSync::new(1, 0.9, 1e-6, 4);
+        for i in 1..=8 {
+            s.observe(0, &[1.0]);
+            assert_eq!(s.due(), i % 4 == 0, "at {i}");
+        }
+        let never = ScaleSync::new(1, 0.9, 1e-6, 0);
+        assert!(!never.due());
+    }
+}

@@ -1,0 +1,195 @@
+//! The serving front-end: router -> batcher -> worker pool -> responses.
+//!
+//! Workers run on std::thread shards (one per simulated GPU). The server
+//! API is synchronous-batch oriented: feed a workload of requests, get a
+//! report with every response plus merged metrics — the shape every bench
+//! and example drives.
+
+use std::sync::mpsc::{channel, Receiver, Sender};
+use std::sync::Arc;
+use std::thread::JoinHandle;
+use std::time::{Duration, Instant};
+
+use anyhow::{anyhow, Result};
+
+use crate::metrics::{mean_ci95, Breakdown, Stage, Summary};
+use crate::quant::Variant;
+use crate::runtime::Registry;
+
+use super::batcher::{Batch, BatchPolicy, Batcher};
+use super::request::{Request, Response};
+use super::router::Router;
+use super::worker::Worker;
+
+/// Server configuration.
+#[derive(Debug, Clone)]
+pub struct ServerConfig {
+    pub model: String,
+    pub variant: Variant,
+    /// worker shards (simulated GPUs)
+    pub shards: usize,
+    /// compiled graph batch size (1 or 8 in the shipped artifacts)
+    pub batch: usize,
+    pub policy: BatchPolicy,
+}
+
+impl ServerConfig {
+    pub fn new(model: &str, variant: Variant) -> Self {
+        ServerConfig {
+            model: model.to_string(),
+            variant,
+            shards: 1,
+            batch: 8,
+            policy: BatchPolicy::default(),
+        }
+    }
+}
+
+/// Workload results + metrics.
+#[derive(Debug)]
+pub struct ServerReport {
+    pub responses: Vec<Response>,
+    pub wall_s: f64,
+    pub tokens_out: u64,
+    pub decode_steps: u64,
+    pub breakdown: Breakdown,
+    pub weight_storage_bytes: usize,
+    pub shard_tokens: Vec<u64>,
+}
+
+impl ServerReport {
+    pub fn tokens_per_s(&self) -> f64 {
+        self.tokens_out as f64 / self.wall_s.max(1e-9)
+    }
+
+    pub fn latency_summary(&self) -> Summary {
+        let ls: Vec<f64> = self.responses.iter().map(|r| r.latency_s).collect();
+        mean_ci95(&ls)
+    }
+
+    pub fn ttft_summary(&self) -> Summary {
+        let ts: Vec<f64> = self.responses.iter().map(|r| r.ttft_s).collect();
+        mean_ci95(&ts)
+    }
+}
+
+/// Multi-shard server.
+pub struct Server {
+    cfg: ServerConfig,
+    router: Router,
+    batcher: Batcher,
+    senders: Vec<Sender<Batch>>,
+    results: Receiver<(usize, Result<Vec<Response>>)>,
+    handles: Vec<JoinHandle<(Breakdown, u64, u64)>>,
+    weight_storage_bytes: usize,
+}
+
+impl Server {
+    /// Spin up the worker pool (compiles executables on first use).
+    pub fn start(registry: &Arc<Registry>, cfg: ServerConfig) -> Result<Self> {
+        let model_cfg = registry.model_cfg(&cfg.model)?;
+        let router = Router::new(cfg.shards, model_cfg.ctx - 8);
+        let batcher = Batcher::new(cfg.policy);
+
+        let (res_tx, res_rx) = channel();
+        let mut senders = Vec::new();
+        let mut handles = Vec::new();
+        let mut weight_storage_bytes = 0;
+        for shard in 0..cfg.shards {
+            let handle = registry.model_handle(&cfg.model, cfg.variant, cfg.batch)?;
+            weight_storage_bytes = handle.weight_storage_bytes();
+            let (tx, rx): (Sender<Batch>, Receiver<Batch>) = channel();
+            senders.push(tx);
+            let res_tx = res_tx.clone();
+            handles.push(std::thread::spawn(move || {
+                let mut worker = Worker::new(shard, handle);
+                while let Ok(batch) = rx.recv() {
+                    let out = worker.process_batch(batch);
+                    if res_tx.send((shard, out)).is_err() {
+                        break;
+                    }
+                }
+                (worker.breakdown, worker.steps, worker.tokens_out)
+            }));
+        }
+        Ok(Server {
+            cfg,
+            router,
+            batcher,
+            senders,
+            results: res_rx,
+            handles,
+            weight_storage_bytes,
+        })
+    }
+
+    /// Run a full workload to completion and shut the pool down.
+    pub fn run_workload(mut self, requests: Vec<Request>) -> Result<ServerReport> {
+        let t0 = Instant::now();
+        let total = requests.len();
+        // shard batches round-robin over workers via the router's
+        // least-loaded choice at batch granularity
+        let mut shard_rr = 0usize;
+        for req in requests {
+            let (req, _) = self.router.admit(req);
+            self.batcher.push(req);
+            // release full batches eagerly
+            while let Some(batch) = self.batcher.take(Instant::now()) {
+                self.dispatch(batch, &mut shard_rr)?;
+            }
+        }
+        // deadline-flush the tail
+        std::thread::sleep(self.batcher.policy().max_wait + Duration::from_millis(1));
+        for batch in self.batcher.flush() {
+            self.dispatch(batch, &mut shard_rr)?;
+        }
+
+        // collect
+        let mut responses = Vec::with_capacity(total);
+        let mut shard_tokens = vec![0u64; self.cfg.shards];
+        while responses.len() < total {
+            let (shard, out) = self
+                .results
+                .recv_timeout(Duration::from_secs(600))
+                .map_err(|_| anyhow!("worker pool stalled"))?;
+            let rs = out?;
+            for r in &rs {
+                self.router.complete(r.id);
+                shard_tokens[shard] += r.tokens.len() as u64;
+            }
+            responses.extend(rs);
+        }
+
+        // shut down workers, merge metrics
+        drop(self.senders);
+        let mut breakdown = Breakdown::new();
+        let mut steps = 0u64;
+        let mut tokens = 0u64;
+        for h in self.handles {
+            let (b, s, t) = h.join().map_err(|_| anyhow!("worker panicked"))?;
+            breakdown.merge(&b);
+            steps += s;
+            tokens += t;
+        }
+        // comm/sync stages are exercised by the cluster-sim path; on the
+        // serve path they only appear if scale sync ran
+        breakdown.add(Stage::Sync, 0.0);
+        Ok(ServerReport {
+            responses,
+            wall_s: t0.elapsed().as_secs_f64(),
+            tokens_out: tokens,
+            decode_steps: steps,
+            breakdown,
+            weight_storage_bytes: self.weight_storage_bytes,
+            shard_tokens,
+        })
+    }
+
+    fn dispatch(&mut self, batch: Batch, shard_rr: &mut usize) -> Result<()> {
+        let shard = *shard_rr % self.senders.len();
+        *shard_rr += 1;
+        self.senders[shard]
+            .send(batch)
+            .map_err(|_| anyhow!("worker {shard} is gone"))
+    }
+}

@@ -1,0 +1,224 @@
+//! Worker shard: executes prefill/decode batches against its ModelHandle.
+//!
+//! One worker models one GPU of the paper's cluster. It owns a batched KV
+//! cache (fp32 or SimQuant codes depending on the variant), per-layer EMA
+//! scale trackers (Alg. 1), and the Eq. 12 breakdown instrumentation.
+//! Batches run to completion (static batching); the server overlaps
+//! batches across workers.
+
+use std::time::Instant;
+
+use anyhow::{bail, Result};
+
+use crate::corpus::PAD;
+use crate::metrics::{Breakdown, Stage};
+use crate::runtime::{i32_bytes, literal_from_raw};
+use crate::quant::Variant;
+use crate::runtime::ModelHandle;
+use crate::tensor::Tensor;
+
+use super::batcher::Batch;
+use super::kv_cache::KvCache;
+use super::request::Response;
+use super::scale_sync::ScaleSync;
+
+pub struct Worker {
+    pub shard: usize,
+    handle: ModelHandle,
+    pub scales: ScaleSync,
+    pub breakdown: Breakdown,
+    /// decode steps executed (for per-step metrics)
+    pub steps: u64,
+    pub tokens_out: u64,
+}
+
+impl Worker {
+    pub fn new(shard: usize, handle: ModelHandle) -> Self {
+        let n_regions = handle.cfg.n_layers;
+        Worker {
+            shard,
+            handle,
+            scales: ScaleSync::new(n_regions, 0.9, 1e-6, 0),
+            breakdown: Breakdown::new(),
+            steps: 0,
+            tokens_out: 0,
+        }
+    }
+
+    pub fn variant(&self) -> Variant {
+        self.handle.variant
+    }
+
+    fn fresh_kv(&self) -> KvCache {
+        let c = &self.handle.cfg;
+        if self.handle.variant == Variant::SimQuant {
+            KvCache::new_simquant(c.n_layers, self.handle.batch, c.ctx, c.d_model)
+        } else {
+            KvCache::new_f32(c.n_layers, self.handle.batch, c.ctx, c.d_model)
+        }
+    }
+
+    /// Run one batch to completion; returns a response per request.
+    pub fn process_batch(&mut self, batch: Batch) -> Result<Vec<Response>> {
+        let cfg = self.handle.cfg.clone();
+        let b = self.handle.batch;
+        let (ctx, v, l, d) = (cfg.ctx, cfg.vocab, cfg.n_layers, cfg.d_model);
+        if batch.len() > b {
+            bail!("batch of {} exceeds compiled batch size {b}", batch.len());
+        }
+        let n_active = batch.len();
+        let started = Instant::now();
+
+        // ---- prefill ------------------------------------------------------
+        let mut tokens = vec![PAD; b * ctx];
+        let mut prompt_lens = vec![0usize; b];
+        for (slot, req) in batch.requests.iter().enumerate() {
+            let plen = req.prompt.len().min(ctx - 1);
+            prompt_lens[slot] = plen;
+            tokens[slot * ctx..slot * ctx + plen].copy_from_slice(&req.prompt[..plen]);
+        }
+        let tok_tensor = self.breakdown.span(Stage::Load, || {
+            Tensor::from_i32(vec![b, ctx], tokens)
+        });
+        let outs = {
+            let bd = &mut self.breakdown;
+            let handle = &self.handle;
+            bd.span(Stage::Gemm, || handle.prefill(&[tok_tensor]))?
+        };
+        let logits = outs[0].as_f32()?; // [B, CTX, V]
+        let k_cache = outs[1].as_f32()?; // [L, B, CTX, D]
+        let v_cache = outs[2].as_f32()?;
+
+        let mut kv = self.fresh_kv();
+        self.breakdown.span(Stage::Quant, || {
+            for slot in 0..n_active {
+                let plen = prompt_lens[slot];
+                for layer in 0..l {
+                    let off = (layer * b + slot) * ctx * d;
+                    kv.ingest_prefill(
+                        slot,
+                        layer,
+                        &k_cache[off..off + plen * d],
+                        &v_cache[off..off + plen * d],
+                        plen,
+                    );
+                }
+            }
+        });
+
+        // first generated token per active slot + ttft
+        let mut generated: Vec<Vec<i32>> = vec![Vec::new(); b];
+        let mut done = vec![false; b];
+        let mut ttft = vec![0f64; b];
+        for slot in 0..n_active {
+            let plen = prompt_lens[slot];
+            let row = &logits[(slot * ctx + plen - 1) * v..(slot * ctx + plen) * v];
+            generated[slot].push(argmax(row));
+            ttft[slot] = batch.requests[slot].arrival.elapsed().as_secs_f64();
+            self.tokens_out += 1;
+            if batch.requests[slot].max_new_tokens <= 1 {
+                done[slot] = true;
+            }
+        }
+        for slot in n_active..b {
+            done[slot] = true;
+        }
+
+        // ---- decode loop ---------------------------------------------------
+        while !done.iter().all(|d| *d) {
+            let mut token = vec![PAD; b];
+            let mut pos = vec![0i32; b];
+            for slot in 0..n_active {
+                if !done[slot] {
+                    token[slot] = *generated[slot].last().unwrap();
+                    pos[slot] = kv.len(slot) as i32;
+                }
+            }
+            // build literals straight from the KV buffers (input order:
+            // token, pos, k_cache, v_cache, [params]) — no staging copies
+            let runtime_lits = self.breakdown.span(Stage::Load, || -> Result<Vec<xla::Literal>> {
+                let mut lits = vec![
+                    literal_from_raw(crate::tensor::DType::I32, &[b], i32_bytes(&token))?,
+                    literal_from_raw(crate::tensor::DType::I32, &[b], i32_bytes(&pos))?,
+                ];
+                lits.extend(kv.input_literals()?);
+                Ok(lits)
+            })?;
+            let outs = {
+                let bd = &mut self.breakdown;
+                let handle = &self.handle;
+                bd.span(Stage::Gemm, || handle.decode_literals(&runtime_lits))?
+            };
+            self.steps += 1;
+            let step_logits = outs[0].as_f32()?; // [B, V]
+            let k_new = outs[1].as_f32()?; // [L, B, D]
+            let v_new = outs[2].as_f32()?;
+
+            self.breakdown.span(Stage::Quant, || {
+                for slot in 0..n_active {
+                    if done[slot] {
+                        continue;
+                    }
+                    for layer in 0..l {
+                        let off = (layer * b + slot) * d;
+                        kv.append_row(slot, layer, &k_new[off..off + d], &v_new[off..off + d]);
+                        // Alg. 1: track activation ranges per layer region
+                        self.scales.observe(layer, &k_new[off..off + d]);
+                    }
+                    kv.bump(slot);
+                }
+            });
+
+            for slot in 0..n_active {
+                if done[slot] {
+                    continue;
+                }
+                let row = &step_logits[slot * v..(slot + 1) * v];
+                generated[slot].push(argmax(row));
+                self.tokens_out += 1;
+                let req = &batch.requests[slot];
+                if generated[slot].len() >= req.max_new_tokens
+                    || kv.len(slot) + 1 >= cfg.ctx
+                {
+                    done[slot] = true;
+                }
+            }
+        }
+
+        let _ = started;
+        Ok((0..n_active)
+            .map(|slot| {
+                let req = &batch.requests[slot];
+                Response {
+                    id: req.id,
+                    tokens: generated[slot].clone(),
+                    prompt_len: prompt_lens[slot],
+                    latency_s: req.arrival.elapsed().as_secs_f64(),
+                    ttft_s: ttft[slot],
+                    shard: self.shard,
+                }
+            })
+            .collect())
+    }
+}
+
+fn argmax(row: &[f32]) -> i32 {
+    let mut best = 0usize;
+    for (i, v) in row.iter().enumerate() {
+        if *v > row[best] {
+            best = i;
+        }
+    }
+    best as i32
+}
+
+#[cfg(test)]
+mod tests {
+    use super::argmax;
+
+    #[test]
+    fn argmax_picks_first_max() {
+        assert_eq!(argmax(&[0.1, 0.9, 0.9, 0.2]), 1);
+        assert_eq!(argmax(&[-5.0, -1.0]), 1);
+    }
+}

@@ -1,0 +1,108 @@
+//! Synthetic serving workload generator: Poisson arrivals, Zipf-ish
+//! prompt/output length mix — the open-loop traffic the batching ablation
+//! and serve benches drive (substitute for production traces, DESIGN.md §3).
+
+use crate::corpus::{self, XorShift64Star};
+
+use super::request::Request;
+
+/// Workload shape parameters.
+#[derive(Debug, Clone, Copy)]
+pub struct WorkloadSpec {
+    pub n_requests: usize,
+    /// mean arrival rate (requests/second) for the Poisson process
+    pub rate_per_s: f64,
+    pub prompt_min: usize,
+    pub prompt_max: usize,
+    pub max_new_min: usize,
+    pub max_new_max: usize,
+    pub seed: u64,
+}
+
+impl Default for WorkloadSpec {
+    fn default() -> Self {
+        WorkloadSpec {
+            n_requests: 32,
+            rate_per_s: 100.0,
+            prompt_min: 8,
+            prompt_max: 48,
+            max_new_min: 4,
+            max_new_max: 24,
+            seed: 42,
+        }
+    }
+}
+
+/// One generated arrival: the request plus its offset from workload start.
+#[derive(Debug, Clone)]
+pub struct Arrival {
+    pub at_s: f64,
+    pub request: Request,
+}
+
+/// Generate the arrival sequence (deterministic under the seed).
+pub fn generate(spec: &WorkloadSpec) -> Vec<Arrival> {
+    let mut rng = XorShift64Star::new(spec.seed);
+    let mut t = 0.0f64;
+    let mut out = Vec::with_capacity(spec.n_requests);
+    for i in 0..spec.n_requests {
+        // exponential inter-arrival
+        let u = rng.next_f64().max(1e-12);
+        t += -u.ln() / spec.rate_per_s;
+        let plen = spec.prompt_min
+            + rng.next_below((spec.prompt_max - spec.prompt_min + 1) as u64) as usize;
+        let max_new = spec.max_new_min
+            + rng.next_below((spec.max_new_max - spec.max_new_min + 1) as u64) as usize;
+        let prompt = corpus::generate_tokens(plen, spec.seed.wrapping_add(1000 + i as u64));
+        out.push(Arrival { at_s: t, request: Request::new(i as u64 + 1, prompt, max_new) });
+    }
+    out
+}
+
+/// Drop the timing and return just the requests (offline workloads).
+pub fn requests(spec: &WorkloadSpec) -> Vec<Request> {
+    generate(spec).into_iter().map(|a| a.request).collect()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn deterministic_under_seed() {
+        let a = generate(&WorkloadSpec::default());
+        let b = generate(&WorkloadSpec::default());
+        assert_eq!(a.len(), b.len());
+        for (x, y) in a.iter().zip(&b) {
+            assert_eq!(x.at_s, y.at_s);
+            assert_eq!(x.request.prompt, y.request.prompt);
+        }
+    }
+
+    #[test]
+    fn arrivals_monotone_and_rate_plausible() {
+        let spec = WorkloadSpec { n_requests: 500, rate_per_s: 50.0, ..Default::default() };
+        let arr = generate(&spec);
+        assert!(arr.windows(2).all(|w| w[0].at_s <= w[1].at_s));
+        let span = arr.last().unwrap().at_s;
+        let expected = 500.0 / 50.0;
+        assert!((span / expected - 1.0).abs() < 0.35, "span {span} vs {expected}");
+    }
+
+    #[test]
+    fn lengths_within_bounds() {
+        let spec = WorkloadSpec { n_requests: 100, ..Default::default() };
+        for a in generate(&spec) {
+            assert!((spec.prompt_min..=spec.prompt_max).contains(&a.request.prompt.len()));
+            assert!(
+                (spec.max_new_min..=spec.max_new_max).contains(&a.request.max_new_tokens)
+            );
+        }
+    }
+
+    #[test]
+    fn distinct_prompts() {
+        let rs = requests(&WorkloadSpec { n_requests: 10, ..Default::default() });
+        assert!(rs.windows(2).any(|w| w[0].prompt != w[1].prompt));
+    }
+}

@@ -1,0 +1,145 @@
+//! Synthetic corpus + tokenizer — bit-identical mirror of
+//! `python/compile/corpus.py` (same PRNG, same lexicon, same Zipf walk),
+//! so both languages agree on the training/validation split without
+//! shipping data. `tests/cross_language.rs` pins the checksum.
+
+mod rng;
+mod text;
+
+pub use rng::XorShift64Star;
+pub use text::{detokenize, tokenize};
+
+/// Token alphabet (vocab = 32): see python/compile/corpus.py.
+pub const PAD: i32 = 0;
+pub const BOS: i32 = 1;
+pub const EOS: i32 = 30;
+pub const SPACE: i32 = 28;
+pub const PERIOD: i32 = 29;
+pub const VOCAB_SIZE: usize = 32;
+
+const N_WORDS: usize = 512;
+const MIN_WLEN: u64 = 2;
+const MAX_WLEN: u64 = 8;
+const SENT_MIN: u64 = 4;
+const SENT_MAX: u64 = 12;
+const LEXICON_SEED: u64 = 0xC0_FFEE;
+const ZIPF_S: f64 = 1.1;
+
+/// Deterministic lexicon: N_WORDS words of letter tokens.
+pub fn build_lexicon() -> Vec<Vec<i32>> {
+    let mut rng = XorShift64Star::new(LEXICON_SEED);
+    (0..N_WORDS)
+        .map(|_| {
+            let wlen = MIN_WLEN + rng.next_below(MAX_WLEN - MIN_WLEN + 1);
+            (0..wlen).map(|_| 2 + rng.next_below(26) as i32).collect()
+        })
+        .collect()
+}
+
+/// Zipf CDF over word ranks.
+pub fn zipf_cdf(n: usize, s: f64) -> Vec<f64> {
+    let w: Vec<f64> = (1..=n).map(|r| (r as f64).powf(-s)).collect();
+    let total: f64 = w.iter().sum();
+    let mut acc = 0.0;
+    w.iter()
+        .map(|x| {
+            acc += x / total;
+            acc
+        })
+        .collect()
+}
+
+/// Generate exactly `n_tokens` ids (BOS-prefixed). Mirrors Python.
+pub fn generate_tokens(n_tokens: usize, seed: u64) -> Vec<i32> {
+    let lex = build_lexicon();
+    let cdf = zipf_cdf(N_WORDS, ZIPF_S);
+    let mut rng = XorShift64Star::new(seed);
+    let mut out = Vec::with_capacity(n_tokens + MAX_WLEN as usize);
+    out.push(BOS);
+    while out.len() < n_tokens {
+        let sent_len = SENT_MIN + rng.next_below(SENT_MAX - SENT_MIN + 1);
+        for wi in 0..sent_len {
+            let u = rng.next_f64();
+            // binary search — identical branch structure to Python
+            let (mut lo, mut hi) = (0usize, N_WORDS - 1);
+            while lo < hi {
+                let mid = (lo + hi) / 2;
+                if cdf[mid] < u {
+                    lo = mid + 1;
+                } else {
+                    hi = mid;
+                }
+            }
+            out.extend_from_slice(&lex[lo]);
+            out.push(if wi + 1 < sent_len { SPACE } else { PERIOD });
+            if out.len() >= n_tokens {
+                break;
+            }
+        }
+    }
+    out.truncate(n_tokens);
+    out
+}
+
+/// Shared split rule: one stream; first n_train tokens train, next valid.
+pub fn train_valid_split(n_train: usize, n_valid: usize, seed: u64) -> (Vec<i32>, Vec<i32>) {
+    let mut stream = generate_tokens(n_train + n_valid, seed);
+    let valid = stream.split_off(n_train);
+    (stream, valid)
+}
+
+/// FNV-1a over token low bytes — the cross-language identity check.
+pub fn checksum(tokens: &[i32]) -> u64 {
+    let mut h: u64 = 0xCBF2_9CE4_8422_2325;
+    for t in tokens {
+        h ^= (*t as u64) & 0xFF;
+        h = h.wrapping_mul(0x0000_0100_0000_01B3);
+    }
+    h
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn bos_prefixed_and_exact_length() {
+        let t = generate_tokens(1000, 1234);
+        assert_eq!(t.len(), 1000);
+        assert_eq!(t[0], BOS);
+    }
+
+    #[test]
+    fn tokens_in_vocab() {
+        for t in generate_tokens(5000, 99) {
+            assert!((0..VOCAB_SIZE as i32).contains(&t));
+        }
+    }
+
+    #[test]
+    fn checksum_matches_python() {
+        // pinned from python: corpus.checksum(corpus.generate_tokens(4096))
+        let t = generate_tokens(4096, 1234);
+        assert_eq!(checksum(&t), 0x14CC_B6D0_9EA9_D22B);
+    }
+
+    #[test]
+    fn split_is_consistent() {
+        let (tr, va) = train_valid_split(100, 50, 7);
+        let full = generate_tokens(150, 7);
+        assert_eq!(tr, full[..100].to_vec());
+        assert_eq!(va, full[100..].to_vec());
+    }
+
+    #[test]
+    fn zipf_cdf_monotone_to_one() {
+        let cdf = zipf_cdf(64, 1.1);
+        assert!(cdf.windows(2).all(|w| w[0] <= w[1]));
+        assert!((cdf[63] - 1.0).abs() < 1e-9);
+    }
+
+    #[test]
+    fn different_seeds_differ() {
+        assert_ne!(generate_tokens(256, 1), generate_tokens(256, 2));
+    }
+}

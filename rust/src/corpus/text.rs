@@ -1,0 +1,58 @@
+//! Char tokenizer: maps between readable text and the 32-symbol alphabet.
+//! Used by the serving examples so requests/responses are human-readable.
+
+use super::{BOS, EOS, PAD, PERIOD, SPACE};
+
+/// Encode text to token ids. Unknown chars map to SPACE.
+pub fn tokenize(text: &str) -> Vec<i32> {
+    text.chars()
+        .map(|c| match c {
+            'a'..='z' => 2 + (c as i32 - 'a' as i32),
+            'A'..='Z' => 2 + (c.to_ascii_lowercase() as i32 - 'a' as i32),
+            '.' => PERIOD,
+            _ => SPACE,
+        })
+        .collect()
+}
+
+/// Decode token ids to text. Control tokens render as markers.
+pub fn detokenize(tokens: &[i32]) -> String {
+    tokens
+        .iter()
+        .map(|&t| match t {
+            t if (2..28).contains(&t) => (b'a' + (t - 2) as u8) as char,
+            SPACE => ' ',
+            PERIOD => '.',
+            BOS => '^',
+            EOS => '$',
+            PAD => '_',
+            _ => '?',
+        })
+        .collect()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn roundtrip_lowercase() {
+        let s = "hello world.";
+        assert_eq!(detokenize(&tokenize(s)), s);
+    }
+
+    #[test]
+    fn uppercase_folds() {
+        assert_eq!(detokenize(&tokenize("AbC")), "abc");
+    }
+
+    #[test]
+    fn unknown_to_space() {
+        assert_eq!(detokenize(&tokenize("a!b")), "a b");
+    }
+
+    #[test]
+    fn control_tokens_render() {
+        assert_eq!(detokenize(&[BOS, 2, EOS, PAD]), "^a$_");
+    }
+}

@@ -1,0 +1,8 @@
+//! Evaluation drivers: perplexity over the held-out corpus split, plus
+//! weight reconstruction error summaries.
+
+mod ppl;
+mod werr;
+
+pub use ppl::{perplexity, PplResult};
+pub use werr::{weight_errors, WeightErr};

@@ -1,0 +1,114 @@
+//! Perplexity on the held-out corpus split (Tables 1 & 4, Fig. 2).
+//!
+//! Both languages generate the identical validation stream
+//! (corpus seed 1234, train 200k / valid 20k); windows of CTX tokens run
+//! through the batch-8 prefill graph and next-token NLL is averaged over
+//! every in-window prediction.
+
+use anyhow::Result;
+
+use crate::corpus;
+use crate::quant::Variant;
+use crate::runtime::Registry;
+use crate::tensor::Tensor;
+
+pub const N_TRAIN: usize = 200_000;
+pub const N_VALID: usize = 20_000;
+pub const CORPUS_SEED: u64 = 1234;
+
+#[derive(Debug, Clone)]
+pub struct PplResult {
+    pub model: String,
+    pub variant: Variant,
+    pub ppl: f64,
+    pub nll: f64,
+    pub tokens: usize,
+    pub windows: usize,
+}
+
+/// Evaluate perplexity of (model, variant) over `max_windows` validation
+/// windows (0 = all).
+pub fn perplexity(
+    reg: &Registry,
+    model: &str,
+    variant: Variant,
+    max_windows: usize,
+) -> Result<PplResult> {
+    let cfg = reg.model_cfg(model)?.clone();
+    let ctx = cfg.ctx;
+    let v = cfg.vocab;
+    let (_, valid) = corpus::train_valid_split(N_TRAIN, N_VALID, CORPUS_SEED);
+
+    // non-overlapping windows of ctx+1 tokens (predict last ctx)
+    let mut windows: Vec<&[i32]> = valid.chunks_exact(ctx + 1).collect();
+    if max_windows > 0 {
+        windows.truncate(max_windows);
+    }
+    let batch = 8;
+    let handle = reg.model_handle(model, variant, batch)?;
+
+    let mut total_nll = 0f64;
+    let mut total_tok = 0usize;
+    for group in windows.chunks(batch) {
+        let mut tokens = vec![corpus::PAD; batch * ctx];
+        for (slot, w) in group.iter().enumerate() {
+            tokens[slot * ctx..(slot + 1) * ctx].copy_from_slice(&w[..ctx]);
+        }
+        let outs = handle.prefill(&[Tensor::from_i32(vec![batch, ctx], tokens)])?;
+        let logits = outs[0].as_f32()?; // [B, CTX, V]
+        for (slot, w) in group.iter().enumerate() {
+            for t in 0..ctx - 1 {
+                let target = w[t + 1];
+                if target == corpus::PAD {
+                    continue;
+                }
+                let row = &logits[(slot * ctx + t) * v..(slot * ctx + t + 1) * v];
+                total_nll += nll_of(row, target as usize);
+                total_tok += 1;
+            }
+        }
+    }
+    let nll = total_nll / total_tok.max(1) as f64;
+    Ok(PplResult {
+        model: model.to_string(),
+        variant,
+        ppl: nll.exp(),
+        nll,
+        tokens: total_tok,
+        windows: windows.len(),
+    })
+}
+
+/// -log softmax(row)[target], numerically stable.
+pub fn nll_of(row: &[f32], target: usize) -> f64 {
+    let mx = row.iter().cloned().fold(f32::NEG_INFINITY, f32::max) as f64;
+    let lse: f64 = row.iter().map(|x| ((*x as f64) - mx).exp()).sum::<f64>().ln() + mx;
+    lse - row[target] as f64
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn nll_uniform_is_log_v() {
+        let row = vec![0f32; 32];
+        let n = nll_of(&row, 7);
+        assert!((n - (32f64).ln()).abs() < 1e-9);
+    }
+
+    #[test]
+    fn nll_confident_is_small() {
+        let mut row = vec![0f32; 8];
+        row[3] = 20.0;
+        assert!(nll_of(&row, 3) < 1e-6);
+        assert!(nll_of(&row, 0) > 10.0);
+    }
+
+    #[test]
+    fn nll_stable_at_large_magnitudes() {
+        let row = vec![1e4f32, 1e4 - 5.0];
+        let n = nll_of(&row, 0);
+        assert!(n.is_finite() && n < 0.01);
+    }
+}

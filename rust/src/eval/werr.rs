@@ -1,0 +1,57 @@
+//! Weight reconstruction error per (linear, variant) — feeds the
+//! distribution analysis (Fig. 1) and the t-SNE features (Fig. 7).
+
+use anyhow::Result;
+
+use crate::quant::prepare::{effective_weight, prepare_linear, Checkpoint};
+use crate::quant::Variant;
+use crate::runtime::ModelCfg;
+
+#[derive(Debug, Clone)]
+pub struct WeightErr {
+    pub linear: String,
+    pub variant: Variant,
+    pub mse: f64,
+    pub max_abs: f64,
+    /// dequantized weights (for histogram/feature extraction)
+    pub w_hat: Vec<f32>,
+}
+
+/// Linears of a model in manifest order: (name, K, N).
+pub fn model_linears(cfg: &ModelCfg) -> Vec<(String, usize, usize)> {
+    let d = cfg.d_model;
+    let f = cfg.d_ff();
+    let mut out = Vec::new();
+    for i in 0..cfg.n_layers {
+        out.push((format!("h{i}.qkv"), d, 3 * d));
+        out.push((format!("h{i}.attn_out"), d, d));
+        out.push((format!("h{i}.fc1"), d, f));
+        out.push((format!("h{i}.fc2"), f, d));
+    }
+    out
+}
+
+/// Quantize every linear under `variant`, returning reconstruction errors
+/// and the effective dequantized weights.
+pub fn weight_errors(
+    cfg: &ModelCfg,
+    ckpt: &Checkpoint,
+    variant: Variant,
+) -> Result<Vec<WeightErr>> {
+    let mut out = Vec::new();
+    for (name, k, n) in model_linears(cfg) {
+        let prepared = prepare_linear(variant, &name, ckpt, cfg.zq_group, 0.5)?;
+        let w_hat = effective_weight(variant, &prepared, k, n, cfg.zq_group)?;
+        let w = ckpt.f32(&format!("{name}_w"))?;
+        let mut mse = 0f64;
+        let mut max_abs = 0f64;
+        for (a, b) in w.iter().zip(&w_hat) {
+            let e = (*a - *b) as f64;
+            mse += e * e;
+            max_abs = max_abs.max(e.abs());
+        }
+        mse /= w.len() as f64;
+        out.push(WeightErr { linear: name, variant, mse, max_abs, w_hat });
+    }
+    Ok(out)
+}

@@ -1,0 +1,23 @@
+//! LLMEasyQuant reproduction: scalable quantization for parallel and
+//! distributed LLM inference (Rust + JAX + Pallas, AOT via XLA/PJRT).
+//!
+//! Architecture (DESIGN.md):
+//!   L1/L2 — build-time Python (Pallas kernels + JAX model) lowered to
+//!           `artifacts/*.hlo.txt`; never on the request path.
+//!   L3    — this crate: the quantization serving runtime (coordinator,
+//!           quantizers, collectives, KV manager) executing the artifacts
+//!           through PJRT.
+
+pub mod analyze;
+pub mod bench_support;
+pub mod collective;
+pub mod coordinator;
+pub mod corpus;
+pub mod eval;
+pub mod memsim;
+pub mod metrics;
+pub mod quant;
+pub mod runtime;
+pub mod serialize;
+pub mod tensor;
+pub mod util;

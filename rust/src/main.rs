@@ -1,0 +1,325 @@
+//! LLMEasyQuant CLI — the leader entrypoint.
+//!
+//! Subcommands:
+//!   info            — list models/variants/graphs in the artifact registry
+//!   serve           — run a synthetic serving workload, report throughput
+//!   eval-ppl        — perplexity of (model, variant) on the held-out split
+//!   breakdown       — Eq. 12 latency breakdown (A100-sim)
+//!   bitwidth-search — Thm. 3 mixed-precision search over a checkpoint
+//!   export-onnx     — ONNX-compatible QDQ export (Eqs. 10-11)
+//!   cluster-sim     — lockstep multi-shard scale sync (Thm. 4 / Eqs. 7-8)
+
+use std::path::PathBuf;
+use std::sync::Arc;
+
+use anyhow::{bail, Result};
+
+use llmeasyquant::collective::{Collective, Topology, Transport};
+use llmeasyquant::coordinator::{
+    search_bitwidths, size_reduction, BatchPolicy, LayerInfo, Request, ScaleSync, SearchPolicy,
+    Server, ServerConfig,
+};
+use llmeasyquant::corpus;
+use llmeasyquant::eval::{perplexity, weight_errors};
+use llmeasyquant::memsim::{GpuSpec, PaperModel, PipelineCost};
+use llmeasyquant::quant::Variant;
+use llmeasyquant::runtime::Registry;
+use llmeasyquant::serialize;
+use llmeasyquant::util::args::Args;
+use llmeasyquant::util::bench::Table;
+
+fn main() -> Result<()> {
+    let args = Args::parse_env();
+    let cmd = args.positional.first().map(String::as_str).unwrap_or("help");
+    match cmd {
+        "info" => info(&args),
+        "serve" => serve(&args),
+        "eval-ppl" => eval_ppl(&args),
+        "breakdown" => breakdown(&args),
+        "bitwidth-search" => bitwidth(&args),
+        "export-onnx" => export_onnx(&args),
+        "cluster-sim" => cluster_sim(&args),
+        _ => {
+            print_help();
+            Ok(())
+        }
+    }
+}
+
+fn print_help() {
+    println!(
+        "llmeasyquant — scalable quantization for parallel & distributed LLM inference
+
+USAGE: llmeasyquant <command> [--options]
+
+COMMANDS:
+  info             list artifact registry contents
+  serve            --model gpt2-tiny --variant smooth --shards 2 --requests 16
+                   --max-new 16 [--batch 8]
+  eval-ppl         --model gpt2-tiny --variant all [--windows 8]
+  breakdown        --ctx 32768 --batch 448 [--world 8] [--transport nccl]
+  bitwidth-search  --model gpt2-tiny [--lambda 1e-4] [--policy greedy|grid|entropy]
+  export-onnx      --model gpt2-tiny --variant smooth --out model.onnx.json
+  cluster-sim      --shards 8 --steps 50 [--transport nccl|tcp] [--regions 16]
+  (--artifacts DIR overrides the artifact directory; default ./artifacts)"
+    );
+}
+
+fn artifacts(args: &Args) -> PathBuf {
+    PathBuf::from(args.get_or("artifacts", "artifacts"))
+}
+
+fn registry(args: &Args) -> Result<Arc<Registry>> {
+    Ok(Arc::new(Registry::open(&artifacts(args))?))
+}
+
+fn parse_variant(name: &str) -> Result<Variant> {
+    Variant::from_name(name).ok_or_else(|| anyhow::anyhow!("unknown variant {name}"))
+}
+
+// ---------------------------------------------------------------------------
+
+fn info(args: &Args) -> Result<()> {
+    let reg = registry(args)?;
+    println!("models:");
+    for (name, cfg) in &reg.manifest().models {
+        println!(
+            "  {name}: d={} L={} H={} ctx={} vocab={} params={}",
+            cfg.d_model, cfg.n_layers, cfg.n_heads, cfg.ctx, cfg.vocab, cfg.n_params
+        );
+    }
+    println!("graphs: {}", reg.manifest().graphs.len());
+    println!(
+        "variants: {:?}",
+        Variant::all().iter().map(|v| v.name()).collect::<Vec<_>>()
+    );
+    Ok(())
+}
+
+fn serve(args: &Args) -> Result<()> {
+    let model = args.get_or("model", "gpt2-tiny");
+    let variant = parse_variant(&args.get_or("variant", "smooth"))?;
+    let shards = args.get_usize("shards", 2);
+    let n_requests = args.get_usize("requests", 16);
+    let max_new = args.get_usize("max-new", 16);
+    let batch = args.get_usize("batch", 8);
+
+    let reg = registry(args)?;
+    let mut cfg = ServerConfig::new(&model, variant);
+    cfg.shards = shards;
+    cfg.batch = batch;
+    cfg.policy = BatchPolicy::default();
+    println!("compiling executables for {model}/{} ...", variant.name());
+    let server = Server::start(&reg, cfg)?;
+
+    // synthetic workload: prompts drawn from the corpus generator
+    let requests: Vec<Request> = (0..n_requests)
+        .map(|i| {
+            let prompt = corpus::generate_tokens(24, 9000 + i as u64);
+            Request::new(i as u64 + 1, prompt, max_new)
+        })
+        .collect();
+    let report = server.run_workload(requests)?;
+
+    let lat = report.latency_summary();
+    println!(
+        "served {} requests | {:.1} tok/s | {} decode steps | latency mean {:.1} ms ci95 [{:.1}, {:.1}]",
+        report.responses.len(),
+        report.tokens_per_s(),
+        report.decode_steps,
+        lat.mean * 1e3,
+        lat.ci95_lo * 1e3,
+        lat.ci95_hi * 1e3,
+    );
+    println!(
+        "weights: {:.2} MB under {} | shard tokens: {:?}",
+        report.weight_storage_bytes as f64 / 1e6,
+        variant.name(),
+        report.shard_tokens
+    );
+    let sample = &report.responses[0];
+    println!(
+        "sample completion (req {}): {:?}",
+        sample.id,
+        corpus::detokenize(&sample.tokens)
+    );
+    Ok(())
+}
+
+fn eval_ppl(args: &Args) -> Result<()> {
+    let model = args.get_or("model", "gpt2-tiny");
+    let variant_arg = args.get_or("variant", "all");
+    let windows = args.get_usize("windows", 8);
+    let reg = registry(args)?;
+    let variants: Vec<Variant> = if variant_arg == "all" {
+        Variant::all().to_vec()
+    } else {
+        vec![parse_variant(&variant_arg)?]
+    };
+    let mut table = Table::new(&["variant", "ppl", "nll", "tokens"]);
+    for v in variants {
+        let r = perplexity(&reg, &model, v, windows)?;
+        table.row(vec![
+            v.name().into(),
+            format!("{:.3}", r.ppl),
+            format!("{:.4}", r.nll),
+            r.tokens.to_string(),
+        ]);
+    }
+    table.print();
+    Ok(())
+}
+
+fn breakdown(args: &Args) -> Result<()> {
+    let ctx = args.get_usize("ctx", 32768);
+    let batch = args.get_usize("batch", 448);
+    let world = args.get_usize("world", 8);
+    let transport = Transport::from_name(&args.get_or("transport", "nccl"))
+        .ok_or_else(|| anyhow::anyhow!("bad transport"))?;
+    let mut cost = PipelineCost::from_paper_model(
+        &PaperModel::gpt2_117m(),
+        batch,
+        ctx,
+        world,
+        GpuSpec::a100_80g(),
+        transport.link(),
+    );
+    cost.w.instrumented = true;
+    let mut table = Table::new(&["Method", "Load", "Quant", "GEMM", "Comm", "Sync", "Total"]);
+    for v in [Variant::Fp, Variant::Int8, Variant::SimQuant, Variant::Smooth] {
+        let b = cost.decode_layer(v);
+        let ms = b.as_ms();
+        table.row(vec![
+            v.name().into(),
+            format!("{:.1}", ms[0]),
+            format!("{:.1}", ms[1]),
+            format!("{:.1}", ms[2]),
+            format!("{:.1}", ms[3]),
+            format!("{:.1}", ms[4]),
+            format!("{:.1}", b.total_s() * 1e3),
+        ]);
+    }
+    println!(
+        "A100-sim latency breakdown (ms/layer, ctx={ctx}, batch={batch}, world={world}, {}):",
+        transport.name()
+    );
+    table.print();
+    Ok(())
+}
+
+fn bitwidth(args: &Args) -> Result<()> {
+    let model = args.get_or("model", "gpt2-tiny");
+    let lambda = args.get_f64("lambda", 1e-4);
+    let policy = match args.get_or("policy", "greedy").as_str() {
+        "grid" => SearchPolicy::Grid,
+        "entropy" => SearchPolicy::Entropy {
+            mean_bits: args.get_f64("mean-bits", 4.0) as f32,
+        },
+        _ => SearchPolicy::Greedy,
+    };
+    let reg = registry(args)?;
+    let cfg = reg.model_cfg(&model)?.clone();
+    let ckpt = reg.checkpoint(&model)?;
+    let mut layers = Vec::new();
+    let mut params = Vec::new();
+    for i in 0..cfg.n_layers {
+        for lname in ["qkv", "attn_out", "fc1", "fc2"] {
+            let full = format!("h{i}.{lname}");
+            let w = ckpt.f32(&format!("{full}_w"))?;
+            let sens = ckpt
+                .f32(&format!("calib.{full}.sqsum"))
+                .map(|s| s.iter().sum::<f32>() / s.len() as f32)
+                .unwrap_or(1.0);
+            params.push(w.len());
+            layers.push(LayerInfo { name: full, w, sensitivity: sens });
+        }
+    }
+    let (choices, iters) = search_bitwidths(&layers, lambda, policy);
+    let mut table = Table::new(&["layer", "bits", "objective"]);
+    for c in &choices {
+        table.row(vec![c.name.clone(), c.bits.to_string(), format!("{:.3e}", c.err)]);
+    }
+    table.print();
+    println!(
+        "size reduction vs f32: {:.2}x (converged in {iters} sweeps)",
+        size_reduction(&choices, &params)
+    );
+    Ok(())
+}
+
+fn export_onnx(args: &Args) -> Result<()> {
+    let model = args.get_or("model", "gpt2-tiny");
+    let variant = parse_variant(&args.get_or("variant", "smooth"))?;
+    let out = PathBuf::from(args.get_or("out", "model.onnx.json"));
+    let reg = registry(args)?;
+    let cfg = reg.model_cfg(&model)?.clone();
+    let ckpt = reg.checkpoint(&model)?;
+    let g = serialize::export_model(&cfg, &ckpt, variant)?;
+    serialize::save_graph(&g, &out)?;
+    println!(
+        "exported {} initializers, {} nodes to {}",
+        g.initializers.len(),
+        g.nodes.len(),
+        out.display()
+    );
+    let errs = weight_errors(&cfg, &ckpt, variant)?;
+    let worst = errs.iter().map(|e| e.mse).fold(0.0, f64::max);
+    println!("worst-layer weight MSE under {}: {:.3e}", variant.name(), worst);
+    Ok(())
+}
+
+fn cluster_sim(args: &Args) -> Result<()> {
+    let shards = args.get_usize("shards", 8);
+    let steps = args.get_usize("steps", 50);
+    let regions = args.get_usize("regions", 16);
+    let transport = Transport::from_name(&args.get_or("transport", "nccl"))
+        .ok_or_else(|| anyhow::anyhow!("bad transport"))?;
+    if shards < 1 {
+        bail!("need at least one shard");
+    }
+    println!(
+        "cluster-sim: {shards} shards, {steps} lockstep steps, {regions} scale regions, {}",
+        transport.name()
+    );
+    let ring = Collective::ring(Topology::new(shards, transport));
+    let mut handles = Vec::new();
+    for (rank, mut comm) in ring.into_iter().enumerate() {
+        handles.push(std::thread::spawn(move || {
+            let mut sync = ScaleSync::new(regions, 0.9, 1e-6, 8);
+            let mut rng = corpus::XorShift64Star::new(100 + rank as u64);
+            for _ in 0..steps {
+                for region in 0..regions {
+                    // shard-specific activation distributions
+                    let x: Vec<f32> = (0..256)
+                        .map(|_| rng.next_normal() as f32 * (1.0 + rank as f32 * 0.2))
+                        .collect();
+                    sync.observe(region, &x);
+                }
+                if sync.due() {
+                    sync.sync(&mut comm).expect("sync");
+                }
+            }
+            // final sync so every shard agrees
+            let states = sync.sync(&mut comm).expect("final sync");
+            (comm.stats(), states, sync.syncs)
+        }));
+    }
+    let results: Vec<_> = handles.into_iter().map(|h| h.join().unwrap()).collect();
+    // consistency check (Thm. 4)
+    let first = &results[0].1;
+    for (rank, (_, states, _)) in results.iter().enumerate() {
+        for (a, b) in first.iter().zip(states) {
+            assert_eq!(a.delta, b.delta, "shard {rank} diverged");
+        }
+    }
+    let stats = results[0].0;
+    println!(
+        "consistent across shards ok | syncs/shard: {} | comm: {} ops, {:.1} KB sent, sim wire {:.3} ms, wall {:.3} ms",
+        results[0].2,
+        stats.ops,
+        stats.bytes_sent as f64 / 1e3,
+        stats.sim_time_s * 1e3,
+        stats.wall_time_s * 1e3,
+    );
+    Ok(())
+}

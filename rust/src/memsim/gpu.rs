@@ -1,0 +1,147 @@
+//! Hardware specs and paper-scale model shapes.
+
+/// GPU characteristics (dense rates; no structured sparsity).
+#[derive(Debug, Clone, Copy)]
+pub struct GpuSpec {
+    pub name: &'static str,
+    /// HBM bandwidth, bytes/s
+    pub hbm_bps: f64,
+    /// fp16 tensor-core throughput, flops/s
+    pub fp16_flops: f64,
+    /// int8 tensor-core throughput, ops/s
+    pub int8_ops: f64,
+    /// vector (CUDA-core / VPU) f32 throughput for elementwise work, flops/s
+    pub vpu_flops: f64,
+    /// kernel launch + stream sync overhead per kernel, seconds
+    pub launch_s: f64,
+    /// device memory capacity, bytes
+    pub mem_bytes: f64,
+    /// achievable fraction of peak bandwidth for streaming loads
+    pub bw_eff: f64,
+    /// achievable fraction of peak tensor throughput for decode GEMMs
+    pub gemm_eff: f64,
+}
+
+impl GpuSpec {
+    /// NVIDIA A100 SXM 80GB.
+    pub fn a100_80g() -> Self {
+        GpuSpec {
+            name: "A100-80G",
+            hbm_bps: 2.039e12,
+            fp16_flops: 312e12,
+            int8_ops: 624e12,
+            vpu_flops: 19.5e12,
+            launch_s: 4e-6,
+            mem_bytes: 80e9,
+            bw_eff: 0.82,
+            gemm_eff: 0.45,
+        }
+    }
+
+    /// Edge RTX 4090 (paper's edge platform).
+    pub fn rtx4090() -> Self {
+        GpuSpec {
+            name: "RTX-4090",
+            hbm_bps: 1.008e12,
+            fp16_flops: 165e12,
+            int8_ops: 330e12,
+            vpu_flops: 82.6e12,
+            launch_s: 5e-6,
+            mem_bytes: 24e9,
+            bw_eff: 0.78,
+            gemm_eff: 0.40,
+        }
+    }
+}
+
+/// Transformer shapes for the models in the paper's tables. Our trained
+/// tiny models use the same arithmetic through `Workload::from_dims`.
+#[derive(Debug, Clone, Copy)]
+pub struct PaperModel {
+    pub name: &'static str,
+    pub d_model: usize,
+    pub n_layers: usize,
+    pub n_heads: usize,
+    pub d_ff: usize,
+    pub vocab: usize,
+    /// MLP matrices per layer: 2 for GPT-2 (fc1/fc2), 3 for gated
+    /// SwiGLU families (LLaMA / Mistral / Qwen)
+    pub mlp_mats: usize,
+}
+
+impl PaperModel {
+    pub fn all() -> Vec<PaperModel> {
+        vec![
+            Self::gpt2_117m(),
+            Self::gpt2_345m(),
+            Self::llama_7b(),
+            Self::llama_13b(),
+            Self::mistral_7b(),
+            Self::qwen3_14b(),
+        ]
+    }
+
+    pub fn gpt2_117m() -> Self {
+        PaperModel { name: "GPT-2 (117M)", d_model: 768, n_layers: 12, n_heads: 12, d_ff: 3072, vocab: 50257, mlp_mats: 2 }
+    }
+
+    pub fn gpt2_345m() -> Self {
+        PaperModel { name: "GPT-2 (345M)", d_model: 1024, n_layers: 24, n_heads: 16, d_ff: 4096, vocab: 50257, mlp_mats: 2 }
+    }
+
+    pub fn llama_7b() -> Self {
+        PaperModel { name: "LLaMA-7B", d_model: 4096, n_layers: 32, n_heads: 32, d_ff: 11008, vocab: 32000, mlp_mats: 3 }
+    }
+
+    pub fn llama_13b() -> Self {
+        PaperModel { name: "LLaMA-13B", d_model: 5120, n_layers: 40, n_heads: 40, d_ff: 13824, vocab: 32000, mlp_mats: 3 }
+    }
+
+    pub fn mistral_7b() -> Self {
+        PaperModel { name: "Mistral-7B", d_model: 4096, n_layers: 32, n_heads: 32, d_ff: 14336, vocab: 32000, mlp_mats: 3 }
+    }
+
+    pub fn qwen3_14b() -> Self {
+        PaperModel { name: "Qwen3-14B", d_model: 5120, n_layers: 40, n_heads: 40, d_ff: 17408, vocab: 151936, mlp_mats: 3 }
+    }
+
+    /// Weight parameters per transformer layer (qkv + out + 2 mlp mats).
+    pub fn params_per_layer(&self) -> f64 {
+        let d = self.d_model as f64;
+        let f = self.d_ff as f64;
+        d * 3.0 * d + d * d + self.mlp_mats as f64 * d * f
+    }
+
+    /// Total parameters (layers + embeddings).
+    pub fn total_params(&self) -> f64 {
+        self.params_per_layer() * self.n_layers as f64
+            + (self.vocab as f64) * self.d_model as f64
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn param_counts_plausible() {
+        // published sizes within ~15% (our layer formula ignores norms/bias)
+        let cases = [
+            (PaperModel::gpt2_117m(), 117e6),
+            (PaperModel::gpt2_345m(), 345e6),
+            (PaperModel::llama_7b(), 6.7e9),
+            (PaperModel::llama_13b(), 13e9),
+        ];
+        for (m, expect) in cases {
+            let got = m.total_params();
+            let ratio = got / expect;
+            assert!((0.8..1.25).contains(&ratio), "{}: {got:.3e} vs {expect:.3e}", m.name);
+        }
+    }
+
+    #[test]
+    fn int8_doubles_fp16() {
+        let g = GpuSpec::a100_80g();
+        assert!((g.int8_ops / g.fp16_flops - 2.0).abs() < 1e-9);
+    }
+}

@@ -1,0 +1,19 @@
+//! Memory-hierarchy + GEMM cost model for paper-scale hardware.
+//!
+//! The paper measures on 8xA100 with CUDA NVTX instrumentation; this repo
+//! runs on CPU. `memsim` is the calibrated analytic substitute (DESIGN.md
+//! §3): it prices each decode/prefill pipeline stage of Eq. 12
+//! (T_total = T_load + T_quant + T_gemm + T_comm + T_sync)
+//! from first principles — HBM bytes over measured bandwidth, GEMM flops
+//! over tensor-core rates (int8 at 2x fp16), quantization as a VPU
+//! elementwise pass, collectives through `collective::LinkModel` — with
+//! efficiency knobs representing achievable fractions of peak. The paper's
+//! qualitative claims (SmoothQuant halves load+GEMM time; SimQuant wins on
+//! long KV; INT8 trades comm for compute) fall out of the model rather
+//! than being hard-coded.
+
+mod gpu;
+mod pipeline;
+
+pub use gpu::{GpuSpec, PaperModel};
+pub use pipeline::{LayerBreakdown, PipelineCost, Workload};

@@ -1,0 +1,140 @@
+//! Eq. 12 stage accounting — the CPU analogue of the paper's NVTX ranges.
+
+use std::time::Instant;
+
+/// The five components of Eq. 12.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
+pub enum Stage {
+    Load,
+    Quant,
+    Gemm,
+    Comm,
+    Sync,
+}
+
+impl Stage {
+    pub const ALL: [Stage; 5] = [Stage::Load, Stage::Quant, Stage::Gemm, Stage::Comm, Stage::Sync];
+
+    pub fn name(self) -> &'static str {
+        match self {
+            Stage::Load => "load",
+            Stage::Quant => "quant",
+            Stage::Gemm => "gemm",
+            Stage::Comm => "comm",
+            Stage::Sync => "sync",
+        }
+    }
+
+    fn idx(self) -> usize {
+        match self {
+            Stage::Load => 0,
+            Stage::Quant => 1,
+            Stage::Gemm => 2,
+            Stage::Comm => 3,
+            Stage::Sync => 4,
+        }
+    }
+}
+
+/// Accumulated per-stage time + counts.
+#[derive(Debug, Clone, Default)]
+pub struct Breakdown {
+    seconds: [f64; 5],
+    counts: [u64; 5],
+}
+
+impl Breakdown {
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    /// Time a closure under a stage.
+    pub fn span<T>(&mut self, stage: Stage, f: impl FnOnce() -> T) -> T {
+        let t0 = Instant::now();
+        let out = f();
+        self.add(stage, t0.elapsed().as_secs_f64());
+        out
+    }
+
+    pub fn add(&mut self, stage: Stage, seconds: f64) {
+        self.seconds[stage.idx()] += seconds;
+        self.counts[stage.idx()] += 1;
+    }
+
+    pub fn seconds(&self, stage: Stage) -> f64 {
+        self.seconds[stage.idx()]
+    }
+
+    pub fn count(&self, stage: Stage) -> u64 {
+        self.counts[stage.idx()]
+    }
+
+    pub fn total_s(&self) -> f64 {
+        self.seconds.iter().sum()
+    }
+
+    /// Proportional contribution of each stage (Fig. 3 series).
+    pub fn proportions(&self) -> [f64; 5] {
+        let total = self.total_s().max(1e-12);
+        let mut out = [0f64; 5];
+        for (o, s) in out.iter_mut().zip(self.seconds) {
+            *o = s / total;
+        }
+        out
+    }
+
+    pub fn merge(&mut self, other: &Breakdown) {
+        for i in 0..5 {
+            self.seconds[i] += other.seconds[i];
+            self.counts[i] += other.counts[i];
+        }
+    }
+
+    /// ms per stage, scaled by 1/div (e.g. per layer, per step).
+    pub fn as_ms_per(&self, div: f64) -> [f64; 5] {
+        let mut out = [0f64; 5];
+        for (o, s) in out.iter_mut().zip(self.seconds) {
+            *o = s * 1e3 / div.max(1e-12);
+        }
+        out
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn span_accumulates() {
+        let mut b = Breakdown::new();
+        let v = b.span(Stage::Gemm, || {
+            std::thread::sleep(std::time::Duration::from_millis(2));
+            42
+        });
+        assert_eq!(v, 42);
+        assert!(b.seconds(Stage::Gemm) >= 0.002);
+        assert_eq!(b.count(Stage::Gemm), 1);
+        assert_eq!(b.count(Stage::Load), 0);
+    }
+
+    #[test]
+    fn proportions_sum_to_one() {
+        let mut b = Breakdown::new();
+        b.add(Stage::Load, 1.0);
+        b.add(Stage::Gemm, 3.0);
+        let p = b.proportions();
+        assert!((p.iter().sum::<f64>() - 1.0).abs() < 1e-9);
+        assert!((p[Stage::Gemm.idx()] - 0.75).abs() < 1e-9);
+    }
+
+    #[test]
+    fn merge_adds() {
+        let mut a = Breakdown::new();
+        a.add(Stage::Comm, 1.0);
+        let mut b = Breakdown::new();
+        b.add(Stage::Comm, 2.0);
+        a.merge(&b);
+        assert_eq!(a.seconds(Stage::Comm), 3.0);
+        assert_eq!(a.count(Stage::Comm), 2);
+    }
+}

@@ -1,0 +1,147 @@
+//! Fixed-range histograms — weight-distribution figures (Fig. 1) and
+//! latency distributions.
+
+/// Equal-width histogram over [lo, hi].
+#[derive(Debug, Clone)]
+pub struct Histogram {
+    lo: f64,
+    hi: f64,
+    bins: Vec<u64>,
+    count: u64,
+    underflow: u64,
+    overflow: u64,
+}
+
+impl Histogram {
+    pub fn new(lo: f64, hi: f64, n_bins: usize) -> Self {
+        assert!(hi > lo && n_bins > 0);
+        Histogram { lo, hi, bins: vec![0; n_bins], count: 0, underflow: 0, overflow: 0 }
+    }
+
+    /// Histogram spanning the data's own min/max.
+    pub fn from_data(data: &[f32], n_bins: usize) -> Self {
+        let (mut lo, mut hi) = (f64::INFINITY, f64::NEG_INFINITY);
+        for v in data {
+            lo = lo.min(*v as f64);
+            hi = hi.max(*v as f64);
+        }
+        if !lo.is_finite() || lo == hi {
+            lo = -1.0;
+            hi = 1.0;
+        }
+        let mut h = Histogram::new(lo, hi + (hi - lo) * 1e-9, n_bins);
+        for v in data {
+            h.record(*v as f64);
+        }
+        h
+    }
+
+    pub fn record(&mut self, v: f64) {
+        self.count += 1;
+        if v < self.lo {
+            self.underflow += 1;
+        } else if v >= self.hi {
+            self.overflow += 1;
+        } else {
+            let n = self.bins.len();
+            let idx = ((v - self.lo) / (self.hi - self.lo) * n as f64) as usize;
+            self.bins[idx.min(n - 1)] += 1;
+        }
+    }
+
+    pub fn counts(&self) -> &[u64] {
+        &self.bins
+    }
+
+    pub fn count(&self) -> u64 {
+        self.count
+    }
+
+    /// Bin centers for plotting.
+    pub fn centers(&self) -> Vec<f64> {
+        let w = (self.hi - self.lo) / self.bins.len() as f64;
+        (0..self.bins.len()).map(|i| self.lo + w * (i as f64 + 0.5)).collect()
+    }
+
+    /// Normalized densities (sum to 1 over in-range mass).
+    pub fn densities(&self) -> Vec<f64> {
+        let in_range: u64 = self.bins.iter().sum();
+        let denom = in_range.max(1) as f64;
+        self.bins.iter().map(|c| *c as f64 / denom).collect()
+    }
+
+    /// Fraction of mass at the two outermost bins — the paper's
+    /// "saturation near representational boundaries" diagnostic (Fig. 1).
+    pub fn boundary_mass(&self) -> f64 {
+        let in_range: u64 = self.bins.iter().sum();
+        if in_range == 0 {
+            return 0.0;
+        }
+        (self.bins[0] + self.bins[self.bins.len() - 1]) as f64 / in_range as f64
+    }
+
+    /// Shannon entropy over bins (nats) — distribution-shape feature.
+    pub fn entropy(&self) -> f64 {
+        self.densities()
+            .iter()
+            .filter(|p| **p > 0.0)
+            .map(|p| -p * p.ln())
+            .sum()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn records_into_bins() {
+        let mut h = Histogram::new(0.0, 10.0, 10);
+        for i in 0..10 {
+            h.record(i as f64 + 0.5);
+        }
+        assert!(h.counts().iter().all(|c| *c == 1));
+        assert_eq!(h.count(), 10);
+    }
+
+    #[test]
+    fn overflow_tracked() {
+        let mut h = Histogram::new(0.0, 1.0, 4);
+        h.record(-5.0);
+        h.record(5.0);
+        assert_eq!(h.underflow, 1);
+        assert_eq!(h.overflow, 1);
+        assert_eq!(h.counts().iter().sum::<u64>(), 0);
+    }
+
+    #[test]
+    fn from_data_spans_range() {
+        let data = vec![-2.0f32, 0.0, 2.0];
+        let h = Histogram::from_data(&data, 4);
+        assert_eq!(h.count(), 3);
+        assert_eq!(h.underflow, 0);
+        assert_eq!(h.overflow, 0);
+    }
+
+    #[test]
+    fn boundary_mass_detects_saturation() {
+        // clipped (saturated) data piles at the edges
+        let clipped: Vec<f32> = (0..100)
+            .map(|i| ((i as f32 - 50.0) * 10.0).clamp(-1.0, 1.0))
+            .collect();
+        let h = Histogram::from_data(&clipped, 16);
+        assert!(h.boundary_mass() > 0.8);
+        let uniform: Vec<f32> = (0..100).map(|i| i as f32 / 100.0).collect();
+        let h2 = Histogram::from_data(&uniform, 16);
+        assert!(h2.boundary_mass() < 0.2);
+    }
+
+    #[test]
+    fn entropy_orders_shapes() {
+        let uniform: Vec<f32> = (0..1000).map(|i| (i % 100) as f32).collect();
+        let peaked = vec![0f32; 1000];
+        let hu = Histogram::from_data(&uniform, 32);
+        let hp = Histogram::from_data(&peaked, 32);
+        assert!(hu.entropy() > hp.entropy());
+    }
+}

@@ -1,0 +1,244 @@
+//! §A.4 statistics: summaries, 95% CIs, paired t-tests.
+//!
+//! The t CDF is evaluated through the regularized incomplete beta function
+//! (continued fraction) — no external stats crate offline.
+
+/// Mean / std / 95% CI of a sample.
+#[derive(Debug, Clone, Copy)]
+pub struct Summary {
+    pub n: usize,
+    pub mean: f64,
+    pub std: f64,
+    pub ci95_lo: f64,
+    pub ci95_hi: f64,
+}
+
+/// Sample summary with a normal-approximation 95% CI (n >= ~20) or
+/// t-quantile for small n.
+pub fn mean_ci95(xs: &[f64]) -> Summary {
+    let n = xs.len();
+    if n == 0 {
+        return Summary { n: 0, mean: 0.0, std: 0.0, ci95_lo: 0.0, ci95_hi: 0.0 };
+    }
+    let mean = xs.iter().sum::<f64>() / n as f64;
+    let var = if n > 1 {
+        xs.iter().map(|x| (x - mean) * (x - mean)).sum::<f64>() / (n - 1) as f64
+    } else {
+        0.0
+    };
+    let std = var.sqrt();
+    let tq = t_quantile_975(n.saturating_sub(1).max(1));
+    let half = tq * std / (n as f64).sqrt();
+    Summary { n, mean, std, ci95_lo: mean - half, ci95_hi: mean + half }
+}
+
+/// Paired t-test result.
+#[derive(Debug, Clone, Copy)]
+pub struct TTest {
+    pub t: f64,
+    pub df: usize,
+    pub p_two_sided: f64,
+    pub mean_diff: f64,
+}
+
+/// Paired t-test over matched samples a[i] vs b[i].
+pub fn paired_t_test(a: &[f64], b: &[f64]) -> TTest {
+    assert_eq!(a.len(), b.len(), "paired test needs matched samples");
+    let n = a.len();
+    assert!(n >= 2, "need at least 2 pairs");
+    let diffs: Vec<f64> = a.iter().zip(b).map(|(x, y)| x - y).collect();
+    let mean = diffs.iter().sum::<f64>() / n as f64;
+    let var = diffs.iter().map(|d| (d - mean) * (d - mean)).sum::<f64>() / (n - 1) as f64;
+    let se = (var / n as f64).sqrt();
+    let t = if se > 0.0 { mean / se } else { f64::INFINITY * mean.signum() };
+    let df = n - 1;
+    let p = if t.is_finite() { 2.0 * (1.0 - t_cdf(t.abs(), df as f64)) } else { 0.0 };
+    TTest { t, df, p_two_sided: p.clamp(0.0, 1.0), mean_diff: mean }
+}
+
+/// Student-t CDF via the regularized incomplete beta function.
+fn t_cdf(t: f64, df: f64) -> f64 {
+    let x = df / (df + t * t);
+    let p = 0.5 * betainc(0.5 * df, 0.5, x);
+    if t > 0.0 {
+        1.0 - p
+    } else {
+        p
+    }
+}
+
+/// Regularized incomplete beta I_x(a, b) by Lentz continued fraction.
+fn betainc(a: f64, b: f64, x: f64) -> f64 {
+    if x <= 0.0 {
+        return 0.0;
+    }
+    if x >= 1.0 {
+        return 1.0;
+    }
+    let ln_front = ln_gamma(a + b) - ln_gamma(a) - ln_gamma(b)
+        + a * x.ln()
+        + b * (1.0 - x).ln();
+    let front = ln_front.exp();
+    // use the symmetry that converges fast
+    if x < (a + 1.0) / (a + b + 2.0) {
+        front * beta_cf(a, b, x) / a
+    } else {
+        1.0 - ln_gamma_based_compl(a, b, x)
+    }
+}
+
+fn ln_gamma_based_compl(a: f64, b: f64, x: f64) -> f64 {
+    let ln_front = ln_gamma(a + b) - ln_gamma(a) - ln_gamma(b)
+        + a * x.ln()
+        + b * (1.0 - x).ln();
+    ln_front.exp() * beta_cf(b, a, 1.0 - x) / b
+}
+
+fn beta_cf(a: f64, b: f64, x: f64) -> f64 {
+    const MAX_ITER: usize = 200;
+    const EPS: f64 = 1e-14;
+    let qab = a + b;
+    let qap = a + 1.0;
+    let qam = a - 1.0;
+    let mut c = 1.0;
+    let mut d = 1.0 - qab * x / qap;
+    if d.abs() < 1e-30 {
+        d = 1e-30;
+    }
+    d = 1.0 / d;
+    let mut h = d;
+    for m in 1..=MAX_ITER {
+        let m = m as f64;
+        let m2 = 2.0 * m;
+        let aa = m * (b - m) * x / ((qam + m2) * (a + m2));
+        d = 1.0 + aa * d;
+        if d.abs() < 1e-30 {
+            d = 1e-30;
+        }
+        c = 1.0 + aa / c;
+        if c.abs() < 1e-30 {
+            c = 1e-30;
+        }
+        d = 1.0 / d;
+        h *= d * c;
+        let aa = -(a + m) * (qab + m) * x / ((a + m2) * (qap + m2));
+        d = 1.0 + aa * d;
+        if d.abs() < 1e-30 {
+            d = 1e-30;
+        }
+        c = 1.0 + aa / c;
+        if c.abs() < 1e-30 {
+            c = 1e-30;
+        }
+        d = 1.0 / d;
+        let del = d * c;
+        h *= del;
+        if (del - 1.0).abs() < EPS {
+            break;
+        }
+    }
+    h
+}
+
+/// Lanczos log-gamma.
+fn ln_gamma(x: f64) -> f64 {
+    const G: [f64; 7] = [
+        76.18009172947146,
+        -86.50532032941677,
+        24.01409824083091,
+        -1.231739572450155,
+        0.1208650973866179e-2,
+        -0.5395239384953e-5,
+        2.5066282746310005,
+    ];
+    let mut ser = 1.000000000190015;
+    let mut denom = x;
+    for (i, g) in G[..6].iter().enumerate() {
+        denom = x + 1.0 + i as f64;
+        ser += g / denom;
+    }
+    let _ = denom;
+    let tmp = x + 5.5;
+    let tmp = tmp - (x + 0.5) * tmp.ln();
+    -tmp + (G[6] * ser / x).ln()
+}
+
+/// 97.5% t quantile (two-sided 95%), small lookup + normal tail.
+fn t_quantile_975(df: usize) -> f64 {
+    const TABLE: [f64; 30] = [
+        12.706, 4.303, 3.182, 2.776, 2.571, 2.447, 2.365, 2.306, 2.262, 2.228, 2.201, 2.179,
+        2.160, 2.145, 2.131, 2.120, 2.110, 2.101, 2.093, 2.086, 2.080, 2.074, 2.069, 2.064,
+        2.060, 2.056, 2.052, 2.048, 2.045, 2.042,
+    ];
+    if df == 0 {
+        return f64::INFINITY;
+    }
+    if df <= 30 {
+        TABLE[df - 1]
+    } else {
+        1.96 + 2.4 / df as f64
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::corpus::XorShift64Star;
+
+    #[test]
+    fn ln_gamma_known_values() {
+        assert!((ln_gamma(1.0)).abs() < 1e-10);
+        assert!((ln_gamma(5.0) - 24f64.ln()).abs() < 1e-9); // gamma(5)=4!
+        assert!((ln_gamma(0.5) - std::f64::consts::PI.sqrt().ln()).abs() < 1e-9);
+    }
+
+    #[test]
+    fn t_cdf_symmetry_and_limits() {
+        assert!((t_cdf(0.0, 10.0) - 0.5).abs() < 1e-9);
+        assert!(t_cdf(10.0, 10.0) > 0.999);
+        assert!(t_cdf(-10.0, 10.0) < 0.001);
+        // t(df=inf-ish) at 1.96 ~ 0.975
+        assert!((t_cdf(1.96, 1000.0) - 0.975).abs() < 0.002);
+    }
+
+    #[test]
+    fn ci_contains_true_mean_usually() {
+        let mut rng = XorShift64Star::new(3);
+        let mut hits = 0;
+        for _ in 0..100 {
+            let xs: Vec<f64> = (0..30).map(|_| 5.0 + rng.next_normal()).collect();
+            let s = mean_ci95(&xs);
+            if s.ci95_lo <= 5.0 && 5.0 <= s.ci95_hi {
+                hits += 1;
+            }
+        }
+        assert!(hits >= 85, "CI coverage {hits}/100");
+    }
+
+    #[test]
+    fn paired_t_detects_real_difference() {
+        let mut rng = XorShift64Star::new(4);
+        let a: Vec<f64> = (0..40).map(|_| 10.0 + rng.next_normal() * 0.5).collect();
+        let b: Vec<f64> = a.iter().map(|x| x - 1.0 + rng.next_normal() * 0.1).collect();
+        let t = paired_t_test(&a, &b);
+        assert!(t.p_two_sided < 0.01, "p={}", t.p_two_sided);
+        assert!(t.mean_diff > 0.5);
+    }
+
+    #[test]
+    fn paired_t_accepts_null() {
+        let mut rng = XorShift64Star::new(5);
+        let a: Vec<f64> = (0..40).map(|_| rng.next_normal()).collect();
+        let b: Vec<f64> = (0..40).map(|_| rng.next_normal()).collect();
+        let t = paired_t_test(&a, &b);
+        assert!(t.p_two_sided > 0.01, "p={}", t.p_two_sided);
+    }
+
+    #[test]
+    fn empty_and_single_are_safe() {
+        let s = mean_ci95(&[]);
+        assert_eq!(s.n, 0);
+        let s1 = mean_ci95(&[3.0]);
+        assert_eq!(s1.mean, 3.0);
+    }
+}

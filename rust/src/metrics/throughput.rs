@@ -1,0 +1,104 @@
+//! Token/request throughput + latency percentile tracking for the server.
+
+use std::time::Instant;
+
+/// Running throughput + latency statistics.
+#[derive(Debug)]
+pub struct ThroughputCounter {
+    started: Instant,
+    tokens: u64,
+    requests: u64,
+    latencies_s: Vec<f64>,
+}
+
+impl Default for ThroughputCounter {
+    fn default() -> Self {
+        Self::new()
+    }
+}
+
+impl ThroughputCounter {
+    pub fn new() -> Self {
+        ThroughputCounter {
+            started: Instant::now(),
+            tokens: 0,
+            requests: 0,
+            latencies_s: Vec::new(),
+        }
+    }
+
+    pub fn record_tokens(&mut self, n: u64) {
+        self.tokens += n;
+    }
+
+    pub fn record_request(&mut self, latency_s: f64) {
+        self.requests += 1;
+        self.latencies_s.push(latency_s);
+    }
+
+    pub fn tokens(&self) -> u64 {
+        self.tokens
+    }
+
+    pub fn requests(&self) -> u64 {
+        self.requests
+    }
+
+    pub fn elapsed_s(&self) -> f64 {
+        self.started.elapsed().as_secs_f64()
+    }
+
+    pub fn tokens_per_s(&self) -> f64 {
+        self.tokens as f64 / self.elapsed_s().max(1e-9)
+    }
+
+    pub fn latency_percentile_s(&self, q: f64) -> f64 {
+        if self.latencies_s.is_empty() {
+            return 0.0;
+        }
+        let mut v = self.latencies_s.clone();
+        v.sort_by(|a, b| a.partial_cmp(b).unwrap());
+        v[((q * (v.len() - 1) as f64).round() as usize).min(v.len() - 1)]
+    }
+
+    pub fn mean_latency_s(&self) -> f64 {
+        if self.latencies_s.is_empty() {
+            return 0.0;
+        }
+        self.latencies_s.iter().sum::<f64>() / self.latencies_s.len() as f64
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn counts_accumulate() {
+        let mut c = ThroughputCounter::new();
+        c.record_tokens(10);
+        c.record_tokens(5);
+        c.record_request(0.1);
+        c.record_request(0.3);
+        assert_eq!(c.tokens(), 15);
+        assert_eq!(c.requests(), 2);
+        assert!((c.mean_latency_s() - 0.2).abs() < 1e-12);
+    }
+
+    #[test]
+    fn percentiles_ordered() {
+        let mut c = ThroughputCounter::new();
+        for i in 1..=100 {
+            c.record_request(i as f64);
+        }
+        assert!(c.latency_percentile_s(0.5) <= c.latency_percentile_s(0.95));
+        assert_eq!(c.latency_percentile_s(1.0), 100.0);
+    }
+
+    #[test]
+    fn empty_safe() {
+        let c = ThroughputCounter::new();
+        assert_eq!(c.latency_percentile_s(0.5), 0.0);
+        assert_eq!(c.mean_latency_s(), 0.0);
+    }
+}

@@ -1,0 +1,130 @@
+//! AWQ baseline: activation-aware weight quantization (Lin et al. 2024).
+//!
+//! Mirrors `python/compile/quantizers.py::awq_quantize`: grid-search the
+//! scaling exponent alpha over per-channel factors s_j = meanabs_j^alpha,
+//! quantize W*s per output channel, keep the alpha minimizing the
+//! diagonal-covariance-weighted reconstruction error.
+
+use super::schemes::symmetric_quantize_channel;
+
+#[derive(Debug, Clone)]
+pub struct AwqResult {
+    /// int8 codes of W*s, [K, N]
+    pub q: Vec<i8>,
+    /// per-output-channel scales, [N]
+    pub delta: Vec<f32>,
+    /// per-input-channel smoothing factors, [K]
+    pub s: Vec<f32>,
+    /// chosen exponent
+    pub alpha: f32,
+    /// weighted reconstruction error at the chosen alpha
+    pub err: f64,
+}
+
+const ALPHAS: [f32; 5] = [0.0, 0.25, 0.5, 0.75, 1.0];
+
+/// Quantize w [K, N] given calibration meanabs [K] and E[x^2] proxy [K].
+pub fn awq_quantize(
+    w: &[f32],
+    k: usize,
+    n: usize,
+    act_meanabs: &[f32],
+    act_ex2: &[f32],
+    bits: u32,
+) -> AwqResult {
+    let mut best: Option<AwqResult> = None;
+    for &alpha in &ALPHAS {
+        let s: Vec<f32> = act_meanabs
+            .iter()
+            .map(|m| m.max(1e-8).powf(alpha).max(1e-8))
+            .collect();
+        let mut ws = vec![0f32; k * n];
+        for row in 0..k {
+            for col in 0..n {
+                ws[row * n + col] = w[row * n + col] * s[row];
+            }
+        }
+        let (q, delta) = symmetric_quantize_channel(&ws, k, n, bits);
+        // err = sum_jk (w_hat - w)^2 * E[x_j^2]
+        let mut err = 0f64;
+        for row in 0..k {
+            for col in 0..n {
+                let w_hat = q[row * n + col] as f32 * delta[col] / s[row];
+                let e = (w_hat - w[row * n + col]) as f64;
+                err += e * e * act_ex2[row] as f64;
+            }
+        }
+        if best.as_ref().map_or(true, |b| err < b.err) {
+            best = Some(AwqResult { q, delta, s, alpha, err });
+        }
+    }
+    best.unwrap()
+}
+
+/// Reconstruct the effective f32 weight AWQ encodes.
+pub fn awq_dequant(r: &AwqResult, k: usize, n: usize) -> Vec<f32> {
+    let mut out = vec![0f32; k * n];
+    for row in 0..k {
+        for col in 0..n {
+            out[row * n + col] = r.q[row * n + col] as f32 * r.delta[col] / r.s[row];
+        }
+    }
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::corpus::XorShift64Star;
+
+    fn setup(k: usize, n: usize, seed: u64) -> (Vec<f32>, Vec<f32>, Vec<f32>) {
+        let mut r = XorShift64Star::new(seed);
+        let w: Vec<f32> = (0..k * n).map(|_| r.next_normal() as f32 * 0.1).collect();
+        // activation stats with one dominant channel (the AWQ motivation)
+        let mut meanabs = vec![1.0f32; k];
+        let mut ex2 = vec![1.0f32; k];
+        meanabs[0] = 50.0;
+        ex2[0] = 2500.0;
+        (w, meanabs, ex2)
+    }
+
+    #[test]
+    fn beats_plain_symmetric_on_outlier_channels() {
+        let (w, meanabs, ex2) = setup(16, 8, 1);
+        let r = awq_quantize(&w, 16, 8, &meanabs, &ex2, 4); // 4-bit stresses it
+        // plain symmetric (alpha = 0)
+        let (q0, d0) = symmetric_quantize_channel(&w, 16, 8, 4);
+        let mut err0 = 0f64;
+        for row in 0..16 {
+            for col in 0..8 {
+                let w_hat = q0[row * 8 + col] as f32 * d0[col];
+                let e = (w_hat - w[row * 8 + col]) as f64;
+                err0 += e * e * ex2[row] as f64;
+            }
+        }
+        assert!(r.err <= err0 + 1e-12, "awq {} vs plain {}", r.err, err0);
+    }
+
+    #[test]
+    fn dequant_close_to_original() {
+        let (w, meanabs, ex2) = setup(32, 16, 2);
+        let r = awq_quantize(&w, 32, 16, &meanabs, &ex2, 8);
+        let dw = awq_dequant(&r, 32, 16);
+        let max_err = w
+            .iter()
+            .zip(&dw)
+            .map(|(a, b)| (a - b).abs())
+            .fold(0f32, f32::max);
+        assert!(max_err < 0.01, "max_err {max_err}");
+    }
+
+    #[test]
+    fn uniform_stats_picks_low_alpha_cost() {
+        // with uniform activation stats, all alphas are near-equivalent;
+        // just assert it runs and yields finite error
+        let (w, _, _) = setup(8, 8, 3);
+        let r = awq_quantize(&w, 8, 8, &vec![1.0; 8], &vec![1.0; 8], 8);
+        assert!(r.err.is_finite());
+        assert!(ALPHAS.contains(&r.alpha));
+    }
+}

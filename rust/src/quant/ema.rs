@@ -1,0 +1,185 @@
+//! Alg. 1 — asynchronous online scale tracking (Eq. 2, Eq. 9).
+//!
+//! Each worker shard owns one `EmaScaleTracker` per tracked tensor region;
+//! `coordinator::scale_sync` gathers the per-shard states through the
+//! collective layer so every shard quantizes with identical parameters
+//! (Thm. 4 consistency).
+
+use super::round_ties_even;
+
+/// The synchronizable state: (delta, zero_point) for one tensor region.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct EmaState {
+    pub delta: f32,
+    pub zero_point: f32,
+}
+
+/// EMA absmax tracker with a moving window for the std-based eps floor
+/// (Eq. 9: eps_t = max(eps0, std(A))).
+#[derive(Debug, Clone)]
+pub struct EmaScaleTracker {
+    alpha: f32,
+    eps0: f32,
+    delta: f32,
+    mean: f32,
+    window: Vec<f32>, // recent absmax observations (W_t)
+    window_cap: usize,
+    steps: u64,
+}
+
+impl EmaScaleTracker {
+    pub fn new(alpha: f32, eps0: f32) -> Self {
+        assert!((0.0..=1.0).contains(&alpha), "alpha must be in [0,1]");
+        EmaScaleTracker {
+            alpha,
+            eps0,
+            delta: eps0,
+            mean: 0.0,
+            window: Vec::new(),
+            window_cap: 64,
+            steps: 0,
+        }
+    }
+
+    pub fn steps(&self) -> u64 {
+        self.steps
+    }
+
+    /// Observe a batch of activations; update delta per Eq. 2 and the
+    /// running mean used for the zero point (Alg. 1 line 4).
+    pub fn observe(&mut self, x: &[f32]) -> EmaState {
+        let r = x.iter().fold(0f32, |a, v| a.max(v.abs()));
+        let mu = if x.is_empty() {
+            0.0
+        } else {
+            x.iter().sum::<f32>() / x.len() as f32
+        };
+        if self.window.len() == self.window_cap {
+            self.window.remove(0);
+        }
+        self.window.push(r);
+        let eps_t = self.eps_floor();
+        if self.steps == 0 {
+            // first observation seeds the EMA (avoids a long eps0 warmup)
+            self.delta = r.max(eps_t);
+            self.mean = mu;
+        } else {
+            self.delta = self.alpha * self.delta + (1.0 - self.alpha) * r.max(eps_t);
+            self.mean = self.alpha * self.mean + (1.0 - self.alpha) * mu;
+        }
+        self.steps += 1;
+        self.state()
+    }
+
+    /// Eq. 9: eps floor lifted by the window's std.
+    fn eps_floor(&self) -> f32 {
+        if self.window.len() < 2 {
+            return self.eps0;
+        }
+        let n = self.window.len() as f32;
+        let m = self.window.iter().sum::<f32>() / n;
+        let var = self.window.iter().map(|v| (v - m) * (v - m)).sum::<f32>() / n;
+        self.eps0.max(var.sqrt())
+    }
+
+    pub fn state(&self) -> EmaState {
+        let scale = self.delta / 127.0;
+        let zp = if scale > 0.0 {
+            -round_ties_even(self.mean / scale)
+        } else {
+            0.0
+        };
+        EmaState { delta: self.delta, zero_point: zp }
+    }
+
+    /// Overwrite local state with the globally synchronized one (Eq. 7-8).
+    pub fn adopt(&mut self, s: EmaState) {
+        self.delta = s.delta;
+        // zero point is derived; reconstruct the mean it encodes
+        self.mean = -s.zero_point * (s.delta / 127.0);
+    }
+
+    /// Alg. 1 AsyncQuant: observe + quantize in one call.
+    pub fn quantize(&mut self, x: &[f32]) -> (Vec<i8>, EmaState) {
+        let st = self.observe(x);
+        let scale = (st.delta / 127.0).max(1e-12);
+        let q = x
+            .iter()
+            .map(|v| {
+                (round_ties_even(v / scale) + st.zero_point).clamp(-128.0, 127.0) as i8
+            })
+            .collect();
+        (q, st)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn seeds_on_first_observation() {
+        let mut t = EmaScaleTracker::new(0.9, 1e-6);
+        let s = t.observe(&[2.0, -4.0, 1.0]);
+        assert!((s.delta - 4.0).abs() < 1e-6);
+    }
+
+    #[test]
+    fn ema_converges_to_stationary_absmax() {
+        let mut t = EmaScaleTracker::new(0.9, 1e-6);
+        for _ in 0..200 {
+            t.observe(&[1.0, -3.0]);
+        }
+        assert!((t.state().delta - 3.0).abs() < 1e-3);
+    }
+
+    #[test]
+    fn ema_smooths_spikes() {
+        let mut t = EmaScaleTracker::new(0.95, 1e-6);
+        for _ in 0..50 {
+            t.observe(&[1.0]);
+        }
+        t.observe(&[100.0]); // one outlier batch
+        let d = t.state().delta;
+        assert!(d < 10.0, "spike should be damped, got {d}");
+        assert!(d > 1.0);
+    }
+
+    #[test]
+    fn zero_point_centers_shifted_data() {
+        let mut t = EmaScaleTracker::new(0.5, 1e-6);
+        let x: Vec<f32> = (0..100).map(|i| 5.0 + (i % 10) as f32 * 0.01).collect();
+        for _ in 0..20 {
+            t.observe(&x);
+        }
+        let s = t.state();
+        assert!(s.zero_point < -50.0, "zp should shift: {:?}", s);
+    }
+
+    #[test]
+    fn quantize_roundtrips_via_state() {
+        let mut t = EmaScaleTracker::new(0.9, 1e-6);
+        let x = vec![0.5, -0.25, 0.125, 0.0];
+        let (q, st) = t.quantize(&x);
+        let scale = st.delta / 127.0;
+        for (v, c) in x.iter().zip(&q) {
+            let back = (*c as f32 - st.zero_point) * scale;
+            assert!((back - v).abs() <= scale, "{v} -> {back}");
+        }
+    }
+
+    #[test]
+    fn adopt_overrides_local() {
+        let mut t = EmaScaleTracker::new(0.9, 1e-6);
+        t.observe(&[1.0]);
+        t.adopt(EmaState { delta: 7.0, zero_point: 3.0 });
+        assert_eq!(t.state().delta, 7.0);
+    }
+
+    #[test]
+    fn empty_batch_is_safe() {
+        let mut t = EmaScaleTracker::new(0.9, 1e-3);
+        let s = t.observe(&[]);
+        assert!(s.delta >= 1e-3);
+    }
+}

@@ -1,0 +1,156 @@
+//! Quantization backends — the Rust mirrors of every scheme in
+//! `python/compile/quantizers.py` + the L1 kernels' offline halves.
+//!
+//! These run on the L3 side: static weight quantization when artifacts are
+//! loaded (`prepare`), online activation/KV quantization in the serving hot
+//! path (`ema`, `simquant` page re-encode), and the AWQ/GPTQ baselines for
+//! the comparison tables. Rounding is half-to-even everywhere to stay
+//! bit-identical with `jnp.round` (the golden files pin this).
+
+mod awq;
+mod ema;
+mod gptq;
+pub mod prepare;
+mod schemes;
+
+pub use awq::{awq_dequant, awq_quantize, AwqResult};
+pub use ema::{EmaScaleTracker, EmaState};
+pub use gptq::{gptq_dequant, gptq_quantize, GptqResult};
+pub use schemes::*;
+
+/// Signed symmetric integer range for a bitwidth: (qmin, qmax).
+pub fn qrange(bits: u32) -> (i32, i32) {
+    let qmax = (1i32 << (bits - 1)) - 1;
+    (-qmax - 1, qmax)
+}
+
+/// `jnp.round` semantics: round half to even.
+#[inline]
+pub fn round_ties_even(x: f32) -> f32 {
+    x.round_ties_even()
+}
+
+/// Quantization methods (paper §2 backends + baselines).
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
+pub enum Variant {
+    Fp,
+    AbsMax,
+    ZeroPoint,
+    Sym8,
+    Int8,
+    Smooth,
+    ZeroQuant,
+    SimQuant,
+    /// Baselines (weight prep only; served through the sym8 graphs).
+    Awq,
+    Gptq,
+}
+
+impl Variant {
+    pub fn name(self) -> &'static str {
+        match self {
+            Variant::Fp => "fp",
+            Variant::AbsMax => "absmax",
+            Variant::ZeroPoint => "zeropoint",
+            Variant::Sym8 => "sym8",
+            Variant::Int8 => "int8",
+            Variant::Smooth => "smooth",
+            Variant::ZeroQuant => "zeroquant",
+            Variant::SimQuant => "simquant",
+            Variant::Awq => "awq",
+            Variant::Gptq => "gptq",
+        }
+    }
+
+    pub fn from_name(name: &str) -> Option<Self> {
+        Some(match name {
+            "fp" | "fp16" => Variant::Fp,
+            "absmax" => Variant::AbsMax,
+            "zeropoint" => Variant::ZeroPoint,
+            "sym8" => Variant::Sym8,
+            "int8" => Variant::Int8,
+            "smooth" | "smoothquant" => Variant::Smooth,
+            "zeroquant" => Variant::ZeroQuant,
+            "simquant" => Variant::SimQuant,
+            "awq" => Variant::Awq,
+            "gptq" => Variant::Gptq,
+            _ => return None,
+        })
+    }
+
+    /// Which lowered graph family serves this variant. AWQ/GPTQ are
+    /// weight-only: int8 codes in storage, dequantized f32 on the wire —
+    /// they execute through the fp graphs.
+    pub fn graph_variant(self) -> &'static str {
+        match self {
+            Variant::Awq | Variant::Gptq => "fp",
+            v => v.name(),
+        }
+    }
+
+    /// All method variants in table order.
+    pub fn all() -> &'static [Variant] {
+        &[
+            Variant::Fp,
+            Variant::AbsMax,
+            Variant::ZeroPoint,
+            Variant::Sym8,
+            Variant::Int8,
+            Variant::Smooth,
+            Variant::ZeroQuant,
+            Variant::SimQuant,
+            Variant::Awq,
+            Variant::Gptq,
+        ]
+    }
+
+    /// Effective weight bits (for memory accounting).
+    pub fn weight_bits(self) -> u32 {
+        match self {
+            Variant::Fp => 32,
+            _ => 8,
+        }
+    }
+
+    /// Whether activations are quantized on the fly (W8A8-style).
+    pub fn quantizes_activations(self) -> bool {
+        matches!(
+            self,
+            Variant::Int8 | Variant::Smooth | Variant::ZeroQuant | Variant::SimQuant
+        )
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn qrange_values() {
+        assert_eq!(qrange(8), (-128, 127));
+        assert_eq!(qrange(4), (-8, 7));
+        assert_eq!(qrange(2), (-2, 1));
+    }
+
+    #[test]
+    fn ties_even() {
+        assert_eq!(round_ties_even(0.5), 0.0);
+        assert_eq!(round_ties_even(1.5), 2.0);
+        assert_eq!(round_ties_even(-0.5), 0.0);
+        assert_eq!(round_ties_even(2.5), 2.0);
+    }
+
+    #[test]
+    fn variant_names_roundtrip() {
+        for v in Variant::all() {
+            assert_eq!(Variant::from_name(v.name()), Some(*v));
+        }
+    }
+
+    #[test]
+    fn baseline_graph_mapping() {
+        assert_eq!(Variant::Awq.graph_variant(), "fp");
+        assert_eq!(Variant::Gptq.graph_variant(), "fp");
+        assert_eq!(Variant::Smooth.graph_variant(), "smooth");
+    }
+}

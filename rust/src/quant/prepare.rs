@@ -1,0 +1,322 @@
+//! Static weight preparation: turn an f32 checkpoint + calibration stats
+//! into the runtime input tensors each lowered graph expects.
+//!
+//! Mirrors `python/compile/quantizers.py::prepare_linear` bit-for-bit (the
+//! golden contract test in `tests/golden_contract.rs` pins this). The AWQ
+//! and GPTQ baselines store int8 codes but are *served* through the fp
+//! graph with dequantized weights (weight-only quantization: storage is
+//! 8-bit, compute is f32 — exactly how 4-bit weight-only methods deploy).
+
+use std::collections::BTreeMap;
+
+use anyhow::{anyhow, bail, Context, Result};
+
+use crate::tensor::{DType, Tensor};
+
+use super::{
+    awq_dequant, awq_quantize, gptq_dequant, gptq_quantize, schemes, Variant,
+};
+
+/// One runtime graph input: name + shape + dtype (from the manifest).
+#[derive(Debug, Clone, PartialEq)]
+pub struct InputSpec {
+    pub name: String,
+    pub shape: Vec<usize>,
+    pub dtype: DType,
+}
+
+/// Checkpoint + calibration container (contents of <model>.weights.bin).
+pub struct Checkpoint {
+    pub tensors: BTreeMap<String, Tensor>,
+}
+
+impl Checkpoint {
+    pub fn new(tensors: BTreeMap<String, Tensor>) -> Self {
+        Checkpoint { tensors }
+    }
+
+    pub fn f32(&self, name: &str) -> Result<Vec<f32>> {
+        self.tensors
+            .get(name)
+            .ok_or_else(|| anyhow!("checkpoint missing tensor {name}"))?
+            .as_f32()
+    }
+
+    pub fn shape(&self, name: &str) -> Result<&[usize]> {
+        Ok(&self
+            .tensors
+            .get(name)
+            .ok_or_else(|| anyhow!("checkpoint missing tensor {name}"))?
+            .shape)
+    }
+
+    fn calib(&self, linear: &str, stat: &str) -> Result<Vec<f32>> {
+        self.f32(&format!("calib.{linear}.{stat}"))
+            .with_context(|| format!("calibration stats for {linear}"))
+    }
+}
+
+/// Total parameter bytes a variant stores (weights only) — memory tables.
+pub fn weight_storage_bytes(variant: Variant, specs: &[InputSpec]) -> usize {
+    let mut total = 0usize;
+    for s in specs {
+        let elems: usize = s.shape.iter().product();
+        total += match variant {
+            // AWQ/GPTQ: int8 codes + per-column f32 scales stored host-side
+            Variant::Awq | Variant::Gptq if s.name.ends_with(".w") => {
+                elems + s.shape[s.shape.len() - 1] * 4
+            }
+            _ => elems * s.dtype.itemsize(),
+        };
+    }
+    total
+}
+
+/// Prepare all graph inputs in manifest order.
+pub fn prepare_inputs(
+    variant: Variant,
+    specs: &[InputSpec],
+    ckpt: &Checkpoint,
+    zq_group: usize,
+    sq_alpha: f32,
+) -> Result<Vec<Tensor>> {
+    // cache per-linear preparation so qkv/fc1/... are quantized once even
+    // though they contribute several entries
+    let mut cache: BTreeMap<String, BTreeMap<String, Tensor>> = BTreeMap::new();
+    let mut out = Vec::with_capacity(specs.len());
+    for spec in specs {
+        let parts: Vec<&str> = spec.name.split('.').collect();
+        let tensor = if parts.len() <= 2 {
+            // global embedding / norm / bias: straight f32 passthrough
+            let t = ckpt
+                .tensors
+                .get(&spec.name)
+                .ok_or_else(|| anyhow!("checkpoint missing {}", spec.name))?
+                .clone();
+            t.reshape(spec.shape.clone())?
+        } else {
+            let linear = format!("{}.{}", parts[0], parts[1]);
+            let suffix = parts[2];
+            if !cache.contains_key(&linear) {
+                let prepared = prepare_linear(variant, &linear, ckpt, zq_group, sq_alpha)?;
+                cache.insert(linear.clone(), prepared);
+            }
+            let t = cache[&linear]
+                .get(suffix)
+                .ok_or_else(|| anyhow!("{variant:?} produced no entry {suffix} for {linear}"))?
+                .clone();
+            t.reshape(spec.shape.clone())?
+        };
+        if tensor.dtype != spec.dtype {
+            bail!(
+                "dtype mismatch for {}: prepared {:?}, manifest wants {:?}",
+                spec.name,
+                tensor.dtype,
+                spec.dtype
+            );
+        }
+        out.push(tensor);
+    }
+    Ok(out)
+}
+
+/// Quantize one linear's weight for `variant`, producing its entry map.
+pub fn prepare_linear(
+    variant: Variant,
+    linear: &str,
+    ckpt: &Checkpoint,
+    zq_group: usize,
+    sq_alpha: f32,
+) -> Result<BTreeMap<String, Tensor>> {
+    let wname = format!("{linear}_w");
+    let shape = ckpt.shape(&wname)?.to_vec();
+    let (k, n) = (shape[0], shape[1]);
+    let w = ckpt.f32(&wname)?;
+    let mut m = BTreeMap::new();
+    match variant {
+        Variant::Fp => {
+            m.insert("w".into(), Tensor::from_f32(vec![k, n], w));
+        }
+        Variant::AbsMax => {
+            let (q, delta) = schemes::absmax_quantize(&w, 8);
+            m.insert("w_q".into(), Tensor::from_i8(vec![k, n], q));
+            m.insert("w_delta".into(), Tensor::from_f32(vec![1, n], vec![delta; n]));
+        }
+        Variant::ZeroPoint => {
+            let (q, scale, zp) = schemes::zeropoint_quantize(&w, 8);
+            m.insert("w_q".into(), Tensor::from_i8(vec![k, n], q));
+            m.insert("w_scale".into(), Tensor::from_f32(vec![1], vec![scale]));
+            m.insert("w_zp".into(), Tensor::from_f32(vec![1], vec![zp]));
+        }
+        Variant::Sym8 | Variant::Int8 | Variant::SimQuant => {
+            let (q, delta) = schemes::symmetric_quantize_channel(&w, k, n, 8);
+            m.insert("w_q".into(), Tensor::from_i8(vec![k, n], q));
+            m.insert("w_delta".into(), Tensor::from_f32(vec![1, n], delta));
+        }
+        Variant::Smooth => {
+            let absmax = ckpt.calib(linear, "absmax")?;
+            let s = schemes::smoothquant_scales(&absmax, &w, k, n, sq_alpha);
+            let mut ws = vec![0f32; k * n];
+            for row in 0..k {
+                for col in 0..n {
+                    ws[row * n + col] = w[row * n + col] * s[row];
+                }
+            }
+            let (q, delta) = schemes::symmetric_quantize_channel(&ws, k, n, 8);
+            m.insert("s".into(), Tensor::from_f32(vec![1, k], s));
+            m.insert("w_q".into(), Tensor::from_i8(vec![k, n], q));
+            m.insert("w_delta".into(), Tensor::from_f32(vec![1, n], delta));
+        }
+        Variant::ZeroQuant => {
+            let g = if k % zq_group == 0 { zq_group } else { k };
+            let (q, delta) = schemes::zeroquant_group_quantize(&w, k, n, g, 8);
+            m.insert("w_q".into(), Tensor::from_i8(vec![k, n], q));
+            m.insert("g_delta".into(), Tensor::from_f32(vec![k / g, 1, n], delta));
+        }
+        Variant::Awq => {
+            let meanabs = ckpt.calib(linear, "meanabs")?;
+            let sqsum = ckpt.calib(linear, "sqsum")?;
+            let count = ckpt
+                .tensors
+                .get(&format!("calib.{linear}.count"))
+                .and_then(|t| t.as_i32().ok())
+                .map(|v| v[0].max(1) as f32)
+                .unwrap_or(1.0);
+            let ex2: Vec<f32> = sqsum.iter().map(|s| s / count).collect();
+            let r = awq_quantize(&w, k, n, &meanabs, &ex2, 8);
+            m.insert("w".into(), Tensor::from_f32(vec![k, n], awq_dequant(&r, k, n)));
+        }
+        Variant::Gptq => {
+            let sqsum = ckpt.calib(linear, "sqsum")?;
+            let r = gptq_quantize(&w, k, n, &sqsum, 8, true);
+            m.insert("w".into(), Tensor::from_f32(vec![k, n], gptq_dequant(&r, k, n)));
+        }
+    }
+    Ok(m)
+}
+
+/// Reconstruct the effective f32 weight a prepared linear encodes — used by
+/// the weight-distribution figure and error analyses.
+pub fn effective_weight(
+    variant: Variant,
+    prepared: &BTreeMap<String, Tensor>,
+    k: usize,
+    n: usize,
+    zq_group: usize,
+) -> Result<Vec<f32>> {
+    Ok(match variant {
+        Variant::Fp | Variant::Awq | Variant::Gptq => prepared["w"].as_f32()?,
+        Variant::AbsMax | Variant::Sym8 | Variant::Int8 | Variant::SimQuant => {
+            let q = prepared["w_q"].as_i8()?;
+            let delta = prepared["w_delta"].as_f32()?;
+            schemes::symmetric_dequantize_channel(&q, &delta, k, n)
+        }
+        Variant::ZeroPoint => {
+            let q = prepared["w_q"].as_i8()?;
+            let scale = prepared["w_scale"].as_f32()?[0];
+            let zp = prepared["w_zp"].as_f32()?[0];
+            schemes::zeropoint_dequantize(&q, scale, zp)
+        }
+        Variant::Smooth => {
+            let q = prepared["w_q"].as_i8()?;
+            let delta = prepared["w_delta"].as_f32()?;
+            let s = prepared["s"].as_f32()?;
+            let mut w = schemes::symmetric_dequantize_channel(&q, &delta, k, n);
+            for row in 0..k {
+                for col in 0..n {
+                    w[row * n + col] /= s[row];
+                }
+            }
+            w
+        }
+        Variant::ZeroQuant => {
+            let q = prepared["w_q"].as_i8()?;
+            let delta = prepared["g_delta"].as_f32()?;
+            let g = if k % zq_group == 0 { zq_group } else { k };
+            schemes::zeroquant_group_dequantize(&q, &delta, k, n, g)
+        }
+    })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::corpus::XorShift64Star;
+
+    fn fake_ckpt(k: usize, n: usize) -> Checkpoint {
+        let mut r = XorShift64Star::new(11);
+        let w: Vec<f32> = (0..k * n).map(|_| r.next_normal() as f32 * 0.1).collect();
+        let mut m = BTreeMap::new();
+        m.insert("h0.qkv_w".into(), Tensor::from_f32(vec![k, n], w));
+        m.insert(
+            "calib.h0.qkv.absmax".into(),
+            Tensor::from_f32(vec![k], (0..k).map(|i| 0.5 + i as f32 * 0.01).collect()),
+        );
+        m.insert(
+            "calib.h0.qkv.meanabs".into(),
+            Tensor::from_f32(vec![k], vec![0.3; k]),
+        );
+        m.insert(
+            "calib.h0.qkv.sqsum".into(),
+            Tensor::from_f32(vec![k], vec![10.0; k]),
+        );
+        m.insert("calib.h0.qkv.count".into(), Tensor::from_i32(vec![1], vec![128]));
+        m.insert("wte".into(), Tensor::from_f32(vec![4, 2], vec![0.0; 8]));
+        Checkpoint::new(m)
+    }
+
+    #[test]
+    fn every_variant_prepares() {
+        let ckpt = fake_ckpt(64, 32);
+        for v in Variant::all() {
+            let m = prepare_linear(*v, "h0.qkv", &ckpt, 64, 0.5).unwrap();
+            assert!(!m.is_empty(), "{v:?}");
+            let w = effective_weight(*v, &m, 64, 32, 64).unwrap();
+            let orig = ckpt.f32("h0.qkv_w").unwrap();
+            let max_err = w
+                .iter()
+                .zip(&orig)
+                .map(|(a, b)| (a - b).abs())
+                .fold(0f32, f32::max);
+            assert!(max_err < 0.05, "{v:?} err {max_err}");
+        }
+    }
+
+    #[test]
+    fn prepare_inputs_orders_and_types() {
+        let ckpt = fake_ckpt(64, 32);
+        let specs = vec![
+            InputSpec { name: "wte".into(), shape: vec![4, 2], dtype: DType::F32 },
+            InputSpec { name: "h0.qkv.w_q".into(), shape: vec![64, 32], dtype: DType::I8 },
+            InputSpec { name: "h0.qkv.w_delta".into(), shape: vec![1, 32], dtype: DType::F32 },
+        ];
+        let out = prepare_inputs(Variant::Sym8, &specs, &ckpt, 64, 0.5).unwrap();
+        assert_eq!(out.len(), 3);
+        assert_eq!(out[0].dtype, DType::F32);
+        assert_eq!(out[1].dtype, DType::I8);
+        assert_eq!(out[1].shape, vec![64, 32]);
+    }
+
+    #[test]
+    fn missing_calib_fails_smooth() {
+        let mut ckpt = fake_ckpt(8, 4);
+        ckpt.tensors.remove("calib.h0.qkv.absmax");
+        assert!(prepare_linear(Variant::Smooth, "h0.qkv", &ckpt, 64, 0.5).is_err());
+    }
+
+    #[test]
+    fn storage_accounting_counts_int8() {
+        let specs = vec![
+            InputSpec { name: "h0.qkv.w_q".into(), shape: vec![64, 32], dtype: DType::I8 },
+            InputSpec { name: "h0.qkv.w_delta".into(), shape: vec![1, 32], dtype: DType::F32 },
+        ];
+        assert_eq!(weight_storage_bytes(Variant::Sym8, &specs), 64 * 32 + 32 * 4);
+        // fp stores the same linear as f32
+        let fp_specs = vec![InputSpec {
+            name: "h0.qkv.w".into(),
+            shape: vec![64, 32],
+            dtype: DType::F32,
+        }];
+        assert_eq!(weight_storage_bytes(Variant::Fp, &fp_specs), 64 * 32 * 4);
+    }
+}

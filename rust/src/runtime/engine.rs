@@ -1,0 +1,151 @@
+//! PJRT engine: compile HLO text, execute with host tensors.
+//!
+//! Thread-safety: the xla crate's wrappers hold raw pointers without
+//! Send/Sync markers, but the underlying PJRT C API is thread-safe for
+//! compilation and execution (clients own an internal thread pool and all
+//! entry points lock internally — the same executable is executed
+//! concurrently by every serving framework built on PJRT). `Engine` and
+//! `Executable` therefore wrap them in types we mark Send + Sync; the
+//! worker pool shares executables via `Arc`.
+
+use std::path::Path;
+
+use anyhow::{anyhow, Context, Result};
+
+use crate::tensor::{DType, Tensor};
+
+fn element_type(dt: DType) -> xla::ElementType {
+    match dt {
+        DType::F32 => xla::ElementType::F32,
+        DType::I8 => xla::ElementType::S8,
+        DType::U8 => xla::ElementType::U8,
+        DType::I32 => xla::ElementType::S32,
+    }
+}
+
+fn dtype_of(ty: xla::ElementType) -> Result<DType> {
+    Ok(match ty {
+        xla::ElementType::F32 => DType::F32,
+        xla::ElementType::S8 => DType::I8,
+        xla::ElementType::U8 => DType::U8,
+        xla::ElementType::S32 => DType::I32,
+        other => anyhow::bail!("unsupported output element type {other:?}"),
+    })
+}
+
+/// Convert a host tensor into a PJRT literal.
+pub fn tensor_to_literal(t: &Tensor) -> Result<xla::Literal> {
+    literal_from_raw(t.dtype, &t.shape, t.bytes())
+}
+
+/// Build a literal directly from raw bytes — the zero-intermediate-copy
+/// path the decode loop uses (PJRT copies once at creation; no staging
+/// Tensor clone).
+pub fn literal_from_raw(dtype: DType, shape: &[usize], bytes: &[u8]) -> Result<xla::Literal> {
+    xla::Literal::create_from_shape_and_untyped_data(element_type(dtype), shape, bytes)
+        .map_err(|e| anyhow!("literal creation failed: {e:?}"))
+}
+
+/// View a f32 slice as little-endian bytes (host is LE on all supported
+/// targets; PJRT consumes the same layout).
+pub fn f32_bytes(v: &[f32]) -> &[u8] {
+    // SAFETY: f32 has alignment >= u8 and no invalid bit patterns as bytes
+    unsafe { std::slice::from_raw_parts(v.as_ptr() as *const u8, v.len() * 4) }
+}
+
+/// View an i32 slice as little-endian bytes.
+pub fn i32_bytes(v: &[i32]) -> &[u8] {
+    // SAFETY: as above
+    unsafe { std::slice::from_raw_parts(v.as_ptr() as *const u8, v.len() * 4) }
+}
+
+/// Convert a PJRT literal back into a host tensor.
+pub fn literal_to_tensor(lit: &xla::Literal) -> Result<Tensor> {
+    let shape = lit.array_shape().map_err(|e| anyhow!("literal shape: {e:?}"))?;
+    let dt = dtype_of(shape.ty())?;
+    let dims: Vec<usize> = shape.dims().iter().map(|d| *d as usize).collect();
+    let err = |e| anyhow!("literal to_vec: {e:?}");
+    Ok(match dt {
+        DType::F32 => Tensor::from_f32(dims, lit.to_vec::<f32>().map_err(err)?),
+        DType::I8 => Tensor::from_i8(dims, lit.to_vec::<i8>().map_err(err)?),
+        DType::U8 => Tensor::from_u8(dims, lit.to_vec::<u8>().map_err(err)?),
+        DType::I32 => Tensor::from_i32(dims, lit.to_vec::<i32>().map_err(err)?),
+    })
+}
+
+/// A compiled graph ready to execute.
+pub struct Executable {
+    exe: xla::PjRtLoadedExecutable,
+}
+
+// SAFETY: PJRT executables are internally synchronized; see module docs.
+unsafe impl Send for Executable {}
+unsafe impl Sync for Executable {}
+
+impl Executable {
+    /// Execute with host tensors; returns the flattened output tuple.
+    pub fn run(&self, inputs: &[Tensor]) -> Result<Vec<Tensor>> {
+        let literals: Vec<xla::Literal> = inputs
+            .iter()
+            .map(tensor_to_literal)
+            .collect::<Result<_>>()?;
+        self.run_literals(&literals)
+    }
+
+    /// Execute with pre-built literals (lets callers cache weight literals
+    /// off the hot path).
+    pub fn run_literals(&self, literals: &[xla::Literal]) -> Result<Vec<Tensor>> {
+        let refs: Vec<&xla::Literal> = literals.iter().collect();
+        self.run_borrowed(&refs)
+    }
+
+    /// Execute with borrowed literals — the hot path: cached weight
+    /// literals are borrowed, only the runtime inputs are fresh.
+    pub fn run_borrowed(&self, literals: &[&xla::Literal]) -> Result<Vec<Tensor>> {
+        let result = self
+            .exe
+            .execute::<&xla::Literal>(literals)
+            .map_err(|e| anyhow!("pjrt execute: {e:?}"))?;
+        let out = result[0][0]
+            .to_literal_sync()
+            .map_err(|e| anyhow!("to_literal_sync: {e:?}"))?;
+        // graphs are lowered with return_tuple=True
+        let parts = out.to_tuple().map_err(|e| anyhow!("to_tuple: {e:?}"))?;
+        parts.iter().map(literal_to_tensor).collect()
+    }
+}
+
+/// The PJRT client + compiler.
+pub struct Engine {
+    client: xla::PjRtClient,
+}
+
+// SAFETY: see module docs.
+unsafe impl Send for Engine {}
+unsafe impl Sync for Engine {}
+
+impl Engine {
+    pub fn cpu() -> Result<Self> {
+        let client = xla::PjRtClient::cpu().map_err(|e| anyhow!("pjrt cpu client: {e:?}"))?;
+        Ok(Engine { client })
+    }
+
+    pub fn platform(&self) -> String {
+        self.client.platform_name()
+    }
+
+    /// Compile an HLO text artifact.
+    pub fn compile_hlo_file(&self, path: &Path) -> Result<Executable> {
+        let proto = xla::HloModuleProto::from_text_file(
+            path.to_str().ok_or_else(|| anyhow!("non-utf8 path"))?,
+        )
+        .map_err(|e| anyhow!("parsing HLO text {}: {e:?}", path.display()))?;
+        let comp = xla::XlaComputation::from_proto(&proto);
+        let exe = self
+            .client
+            .compile(&comp)
+            .map_err(|e| anyhow!("compiling {}: {e:?}", path.display()))
+            .with_context(|| format!("artifact {}", path.display()))?;
+        Ok(Executable { exe })
+    }
+}

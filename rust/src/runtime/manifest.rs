@@ -1,0 +1,234 @@
+//! Artifact manifest: the graph registry written by python/compile/aot.py.
+
+use std::collections::BTreeMap;
+use std::path::Path;
+
+use anyhow::{anyhow, Context, Result};
+
+use crate::quant::prepare::InputSpec;
+use crate::tensor::DType;
+use crate::util::json::{self, Value};
+
+/// Model configuration exported by the AOT pipeline.
+#[derive(Debug, Clone)]
+pub struct ModelCfg {
+    pub name: String,
+    pub d_model: usize,
+    pub n_layers: usize,
+    pub n_heads: usize,
+    pub ctx: usize,
+    pub vocab: usize,
+    pub zq_group: usize,
+    pub n_params: usize,
+}
+
+impl ModelCfg {
+    pub fn d_ff(&self) -> usize {
+        4 * self.d_model
+    }
+
+    pub fn d_head(&self) -> usize {
+        self.d_model / self.n_heads
+    }
+}
+
+/// Key of one lowered graph: model / variant / phase / batch.
+#[derive(Debug, Clone, PartialEq, Eq, Hash, PartialOrd, Ord)]
+pub struct GraphKey {
+    pub model: String,
+    pub variant: String,
+    pub phase: String,
+    pub batch: usize,
+}
+
+impl GraphKey {
+    pub fn new(model: &str, variant: &str, phase: &str, batch: usize) -> Self {
+        GraphKey {
+            model: model.into(),
+            variant: variant.into(),
+            phase: phase.into(),
+            batch,
+        }
+    }
+
+    pub fn manifest_key(&self) -> String {
+        format!("{}/{}/{}/b{}", self.model, self.variant, self.phase, self.batch)
+    }
+}
+
+/// One graph's artifact file + IO signature.
+#[derive(Debug, Clone)]
+pub struct GraphSpec {
+    pub file: String,
+    pub inputs: Vec<InputSpec>,
+    pub outputs: Vec<(Vec<usize>, DType)>,
+}
+
+impl GraphSpec {
+    /// Split the input list into (weight inputs, runtime inputs): runtime
+    /// inputs are the trailing non-dotted names emitted by aot.py
+    /// (`tokens`, `token`, `pos`, `k_cache`, ...).
+    pub fn split_weights(&self) -> (&[InputSpec], &[InputSpec]) {
+        const RUNTIME_NAMES: [&str; 10] = [
+            "tokens", "token", "pos", "k_cache", "v_cache", "k_min", "k_step", "v_min",
+            "v_step", "mask",
+        ];
+        let split = self
+            .inputs
+            .iter()
+            .position(|s| RUNTIME_NAMES.contains(&s.name.as_str()))
+            .unwrap_or(self.inputs.len());
+        self.inputs.split_at(split)
+    }
+}
+
+/// Full manifest.
+#[derive(Debug, Clone)]
+pub struct Manifest {
+    pub models: BTreeMap<String, ModelCfg>,
+    pub graphs: BTreeMap<String, GraphSpec>,
+}
+
+impl Manifest {
+    pub fn load(path: &Path) -> Result<Self> {
+        let text = std::fs::read_to_string(path)
+            .with_context(|| format!("reading manifest {}", path.display()))?;
+        Self::parse(&text)
+    }
+
+    pub fn parse(text: &str) -> Result<Self> {
+        let v = json::parse(text)?;
+        let mut models = BTreeMap::new();
+        for (name, m) in v
+            .get("models")
+            .and_then(Value::as_obj)
+            .ok_or_else(|| anyhow!("manifest missing models"))?
+        {
+            let get = |k: &str| -> Result<usize> {
+                m.get(k)
+                    .and_then(Value::as_usize)
+                    .ok_or_else(|| anyhow!("model {name} missing {k}"))
+            };
+            models.insert(
+                name.clone(),
+                ModelCfg {
+                    name: name.clone(),
+                    d_model: get("d_model")?,
+                    n_layers: get("n_layers")?,
+                    n_heads: get("n_heads")?,
+                    ctx: get("ctx")?,
+                    vocab: get("vocab")?,
+                    zq_group: get("zq_group")?,
+                    n_params: get("n_params")?,
+                },
+            );
+        }
+        let mut graphs = BTreeMap::new();
+        for (key, g) in v
+            .get("graphs")
+            .and_then(Value::as_obj)
+            .ok_or_else(|| anyhow!("manifest missing graphs"))?
+        {
+            let file = g
+                .get("file")
+                .and_then(Value::as_str)
+                .ok_or_else(|| anyhow!("graph {key} missing file"))?
+                .to_string();
+            let mut inputs = Vec::new();
+            for inp in g
+                .get("inputs")
+                .and_then(Value::as_arr)
+                .ok_or_else(|| anyhow!("graph {key} missing inputs"))?
+            {
+                inputs.push(InputSpec {
+                    name: inp
+                        .get("name")
+                        .and_then(Value::as_str)
+                        .ok_or_else(|| anyhow!("input missing name"))?
+                        .to_string(),
+                    shape: inp
+                        .get("shape")
+                        .and_then(Value::as_arr)
+                        .ok_or_else(|| anyhow!("input missing shape"))?
+                        .iter()
+                        .map(|d| d.as_usize().unwrap_or(0))
+                        .collect(),
+                    dtype: DType::from_name(
+                        inp.get("dtype").and_then(Value::as_str).unwrap_or("f32"),
+                    )?,
+                });
+            }
+            let mut outputs = Vec::new();
+            for out in g.get("outputs").and_then(Value::as_arr).unwrap_or(&[]) {
+                let shape: Vec<usize> = out
+                    .get("shape")
+                    .and_then(Value::as_arr)
+                    .unwrap_or(&[])
+                    .iter()
+                    .map(|d| d.as_usize().unwrap_or(0))
+                    .collect();
+                let dtype =
+                    DType::from_name(out.get("dtype").and_then(Value::as_str).unwrap_or("f32"))?;
+                outputs.push((shape, dtype));
+            }
+            graphs.insert(key.clone(), GraphSpec { file, inputs, outputs });
+        }
+        Ok(Manifest { models, graphs })
+    }
+
+    pub fn graph(&self, key: &GraphKey) -> Result<&GraphSpec> {
+        self.graphs
+            .get(&key.manifest_key())
+            .ok_or_else(|| anyhow!("manifest has no graph {}", key.manifest_key()))
+    }
+
+    pub fn model(&self, name: &str) -> Result<&ModelCfg> {
+        self.models
+            .get(name)
+            .ok_or_else(|| anyhow!("manifest has no model {name}"))
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    const SAMPLE: &str = r#"{
+      "models": {"gpt2-tiny": {"d_model": 128, "n_layers": 2, "n_heads": 4,
+                  "ctx": 128, "vocab": 32, "zq_group": 64, "n_params": 500000}},
+      "graphs": {"gpt2-tiny/fp/prefill/b1": {
+        "file": "gpt2-tiny_fp_prefill_b1.hlo.txt",
+        "inputs": [
+          {"name": "wte", "shape": [32, 128], "dtype": "f32"},
+          {"name": "h0.qkv.w", "shape": [128, 384], "dtype": "f32"},
+          {"name": "tokens", "shape": [1, 128], "dtype": "i32"}],
+        "outputs": [{"shape": [1, 128, 32], "dtype": "float32"}]
+      }},
+      "corpus": {"seed": 1234}
+    }"#;
+
+    #[test]
+    fn parses_models_and_graphs() {
+        let m = Manifest::parse(SAMPLE).unwrap();
+        assert_eq!(m.model("gpt2-tiny").unwrap().d_model, 128);
+        let g = m.graph(&GraphKey::new("gpt2-tiny", "fp", "prefill", 1)).unwrap();
+        assert_eq!(g.inputs.len(), 3);
+        assert_eq!(g.outputs[0].0, vec![1, 128, 32]);
+    }
+
+    #[test]
+    fn split_weights_finds_runtime_boundary() {
+        let m = Manifest::parse(SAMPLE).unwrap();
+        let g = m.graph(&GraphKey::new("gpt2-tiny", "fp", "prefill", 1)).unwrap();
+        let (w, r) = g.split_weights();
+        assert_eq!(w.len(), 2);
+        assert_eq!(r.len(), 1);
+        assert_eq!(r[0].name, "tokens");
+    }
+
+    #[test]
+    fn missing_graph_errors() {
+        let m = Manifest::parse(SAMPLE).unwrap();
+        assert!(m.graph(&GraphKey::new("gpt2-tiny", "fp", "decode", 1)).is_err());
+    }
+}

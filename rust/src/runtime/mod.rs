@@ -1,0 +1,19 @@
+//! PJRT runtime: load AOT artifacts (HLO text), compile once, execute from
+//! the serving hot path.
+//!
+//! The flow (see /opt/xla-example/load_hlo and DESIGN.md §6):
+//!   manifest.json -> GraphSpec (input/output signatures)
+//!   <model>_<variant>_<phase>_b<B>.hlo.txt -> HloModuleProto::from_text_file
+//!   -> XlaComputation -> PjRtClient::cpu().compile -> Executable
+//!   <model>.weights.bin -> quant::prepare -> weight input literals
+//!
+//! Python never runs here; the rust binary is self-contained once
+//! `make artifacts` has produced the files.
+
+mod engine;
+mod manifest;
+mod registry;
+
+pub use engine::{f32_bytes, i32_bytes, literal_from_raw, literal_to_tensor, tensor_to_literal, Engine, Executable};
+pub use manifest::{GraphKey, GraphSpec, Manifest, ModelCfg};
+pub use registry::{ModelHandle, Registry};

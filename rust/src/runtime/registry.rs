@@ -1,0 +1,191 @@
+//! Executable registry: lazy compilation + weight-literal caching.
+//!
+//! One compiled executable per (model, variant, phase, batch); one prepared
+//! weight-literal list per (model, graph-variant). Weight literals are
+//! built once at load time so the decode hot loop only constructs the small
+//! runtime tensors (token ids, positions, KV pages).
+
+use std::collections::HashMap;
+use std::path::{Path, PathBuf};
+use std::sync::{Arc, Mutex};
+
+use anyhow::{Context, Result};
+
+use crate::quant::prepare::{self, Checkpoint};
+use crate::quant::Variant;
+use crate::tensor::{load_tensor_file, Tensor};
+
+use super::engine::{tensor_to_literal, Engine, Executable};
+
+use super::manifest::{GraphKey, Manifest, ModelCfg};
+
+/// Cached, prepared weight inputs for one (model, graph variant).
+struct PreparedWeights {
+    literals: Vec<xla::Literal>,
+    storage_bytes: usize,
+}
+
+// SAFETY: literals are immutable after construction and PJRT copies them
+// on execute; see runtime::engine docs.
+unsafe impl Send for PreparedWeights {}
+unsafe impl Sync for PreparedWeights {}
+
+/// The artifact registry.
+pub struct Registry {
+    engine: Engine,
+    manifest: Manifest,
+    dir: PathBuf,
+    checkpoints: Mutex<HashMap<String, Arc<Checkpoint>>>,
+    executables: Mutex<HashMap<GraphKey, Arc<Executable>>>,
+    weights: Mutex<HashMap<(String, Variant), Arc<PreparedWeights>>>,
+    pub sq_alpha: f32,
+}
+
+impl Registry {
+    /// Open an artifacts directory (manifest.json + *.hlo.txt + weights).
+    pub fn open(dir: &Path) -> Result<Self> {
+        let manifest = Manifest::load(&dir.join("manifest.json"))?;
+        Ok(Registry {
+            engine: Engine::cpu()?,
+            manifest,
+            dir: dir.to_path_buf(),
+            checkpoints: Mutex::new(HashMap::new()),
+            executables: Mutex::new(HashMap::new()),
+            weights: Mutex::new(HashMap::new()),
+            sq_alpha: 0.5,
+        })
+    }
+
+    pub fn manifest(&self) -> &Manifest {
+        &self.manifest
+    }
+
+    pub fn model_cfg(&self, model: &str) -> Result<&ModelCfg> {
+        self.manifest.model(model)
+    }
+
+    pub fn checkpoint(&self, model: &str) -> Result<Arc<Checkpoint>> {
+        let mut map = self.checkpoints.lock().unwrap();
+        if let Some(c) = map.get(model) {
+            return Ok(c.clone());
+        }
+        let path = self.dir.join(format!("{model}.weights.bin"));
+        let tensors = load_tensor_file(&path)
+            .with_context(|| format!("loading checkpoint for {model}"))?;
+        let ckpt = Arc::new(Checkpoint::new(tensors));
+        map.insert(model.to_string(), ckpt.clone());
+        Ok(ckpt)
+    }
+
+    /// Compile (or fetch) an executable for a graph key.
+    pub fn executable(&self, key: &GraphKey) -> Result<Arc<Executable>> {
+        {
+            let map = self.executables.lock().unwrap();
+            if let Some(e) = map.get(key) {
+                return Ok(e.clone());
+            }
+        }
+        let spec = self.manifest.graph(key)?;
+        let exe = Arc::new(self.engine.compile_hlo_file(&self.dir.join(&spec.file))?);
+        self.executables
+            .lock()
+            .unwrap()
+            .insert(key.clone(), exe.clone());
+        Ok(exe)
+    }
+
+    /// Prepare (or fetch) the weight literal list for (model, variant).
+    fn prepared(&self, model: &str, variant: Variant) -> Result<Arc<PreparedWeights>> {
+        let cache_key = (model.to_string(), variant);
+        {
+            let map = self.weights.lock().unwrap();
+            if let Some(w) = map.get(&cache_key) {
+                return Ok(w.clone());
+            }
+        }
+        let cfg = self.manifest.model(model)?;
+        // weight specs are identical across phases/batches: use prefill b1
+        let gkey = GraphKey::new(model, variant.graph_variant(), "prefill", 1);
+        let spec = self.manifest.graph(&gkey)?;
+        let (w_specs, _) = spec.split_weights();
+        let ckpt = self.checkpoint(model)?;
+        let tensors =
+            prepare::prepare_inputs(variant, w_specs, &ckpt, cfg.zq_group, self.sq_alpha)?;
+        let storage_bytes = prepare::weight_storage_bytes(variant, w_specs);
+        let literals = tensors
+            .iter()
+            .map(tensor_to_literal)
+            .collect::<Result<Vec<_>>>()?;
+        let out = Arc::new(PreparedWeights { literals, storage_bytes });
+        self.weights.lock().unwrap().insert(cache_key, out.clone());
+        Ok(out)
+    }
+
+    /// Build a ready-to-run handle for (model, method variant, batch).
+    pub fn model_handle(
+        &self,
+        model: &str,
+        variant: Variant,
+        batch: usize,
+    ) -> Result<ModelHandle> {
+        let graph_variant = variant.graph_variant();
+        let prefill =
+            self.executable(&GraphKey::new(model, graph_variant, "prefill", batch))?;
+        let decode = self.executable(&GraphKey::new(model, graph_variant, "decode", batch))?;
+        let weights = self.prepared(model, variant)?;
+        let cfg = self.manifest.model(model)?.clone();
+        Ok(ModelHandle { cfg, variant, batch, prefill, decode, weights })
+    }
+}
+
+/// Everything a worker needs to serve one (model, variant, batch) config.
+pub struct ModelHandle {
+    pub cfg: ModelCfg,
+    pub variant: Variant,
+    pub batch: usize,
+    prefill: Arc<Executable>,
+    decode: Arc<Executable>,
+    weights: Arc<PreparedWeights>,
+}
+
+impl ModelHandle {
+    /// Weight storage footprint (bytes) under this variant.
+    pub fn weight_storage_bytes(&self) -> usize {
+        self.weights.storage_bytes
+    }
+
+    fn run(&self, exe: &Executable, runtime_inputs: &[Tensor]) -> Result<Vec<Tensor>> {
+        // weight literals were built once at load time; borrow them and
+        // only materialize the (small) runtime inputs per call
+        let runtime_lits: Vec<xla::Literal> = runtime_inputs
+            .iter()
+            .map(tensor_to_literal)
+            .collect::<Result<_>>()?;
+        let mut refs: Vec<&xla::Literal> =
+            Vec::with_capacity(self.weights.literals.len() + runtime_lits.len());
+        refs.extend(self.weights.literals.iter());
+        refs.extend(runtime_lits.iter());
+        exe.run_borrowed(&refs)
+    }
+
+    /// Run the prefill graph: weights ++ [tokens].
+    pub fn prefill(&self, runtime_inputs: &[Tensor]) -> Result<Vec<Tensor>> {
+        self.run(&self.prefill, runtime_inputs)
+    }
+
+    /// Run one decode step: weights ++ [token, pos, caches...].
+    pub fn decode(&self, runtime_inputs: &[Tensor]) -> Result<Vec<Tensor>> {
+        self.run(&self.decode, runtime_inputs)
+    }
+
+    /// Decode with caller-built literals (the zero-staging-copy hot path:
+    /// the KV manager exposes raw byte views and the worker builds
+    /// literals straight from them).
+    pub fn decode_literals(&self, runtime_lits: &[xla::Literal]) -> Result<Vec<Tensor>> {
+        let mut refs: Vec<&xla::Literal> =
+            Vec::with_capacity(self.weights.literals.len() + runtime_lits.len());
+        refs.extend(self.weights.literals.iter());
+        refs.extend(runtime_lits.iter());
+        self.decode.run_borrowed(&refs)
+    }
+}

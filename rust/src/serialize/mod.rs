@@ -1,0 +1,5 @@
+//! ONNX-compatible quantization serialization (paper §3.5, Eqs. 10-11).
+
+mod onnx;
+
+pub use onnx::{dequantize_initializer, export_model, export_to_file, from_json, import_model, save as save_graph, to_json, OnnxGraph, OnnxNode, QuantTensor};

@@ -1,0 +1,213 @@
+//! The `Tensor` type: shape + dtype + contiguous host data.
+
+use anyhow::{bail, Result};
+
+/// Element types shared with the Python tensor file format and PJRT.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
+pub enum DType {
+    F32,
+    I8,
+    U8,
+    I32,
+}
+
+impl DType {
+    pub fn itemsize(self) -> usize {
+        match self {
+            DType::F32 | DType::I32 => 4,
+            DType::I8 | DType::U8 => 1,
+        }
+    }
+
+    pub fn code(self) -> u8 {
+        match self {
+            DType::F32 => 0,
+            DType::I8 => 1,
+            DType::U8 => 2,
+            DType::I32 => 3,
+        }
+    }
+
+    pub fn from_code(code: u8) -> Result<Self> {
+        Ok(match code {
+            0 => DType::F32,
+            1 => DType::I8,
+            2 => DType::U8,
+            3 => DType::I32,
+            _ => bail!("unknown dtype code {code}"),
+        })
+    }
+
+    /// Manifest dtype strings ("f32" / "i8" / "u8" / "i32" and numpy names).
+    pub fn from_name(name: &str) -> Result<Self> {
+        Ok(match name {
+            "f32" | "float32" => DType::F32,
+            "i8" | "int8" => DType::I8,
+            "u8" | "uint8" => DType::U8,
+            "i32" | "int32" => DType::I32,
+            _ => bail!("unknown dtype name {name}"),
+        })
+    }
+}
+
+/// A host tensor: contiguous row-major data with shape and dtype.
+#[derive(Debug, Clone, PartialEq)]
+pub struct Tensor {
+    pub dtype: DType,
+    pub shape: Vec<usize>,
+    data: Vec<u8>,
+}
+
+impl Tensor {
+    pub fn from_bytes(dtype: DType, shape: Vec<usize>, data: Vec<u8>) -> Result<Self> {
+        let want = shape.iter().product::<usize>() * dtype.itemsize();
+        if data.len() != want {
+            bail!(
+                "tensor data length {} does not match shape {:?} ({} bytes)",
+                data.len(),
+                shape,
+                want
+            );
+        }
+        Ok(Tensor { dtype, shape, data })
+    }
+
+    pub fn from_f32(shape: Vec<usize>, values: Vec<f32>) -> Self {
+        assert_eq!(shape.iter().product::<usize>(), values.len());
+        let mut data = Vec::with_capacity(values.len() * 4);
+        for v in &values {
+            data.extend_from_slice(&v.to_le_bytes());
+        }
+        Tensor { dtype: DType::F32, shape, data }
+    }
+
+    pub fn from_i8(shape: Vec<usize>, values: Vec<i8>) -> Self {
+        assert_eq!(shape.iter().product::<usize>(), values.len());
+        let data = values.iter().map(|v| *v as u8).collect();
+        Tensor { dtype: DType::I8, shape, data }
+    }
+
+    pub fn from_u8(shape: Vec<usize>, values: Vec<u8>) -> Self {
+        assert_eq!(shape.iter().product::<usize>(), values.len());
+        Tensor { dtype: DType::U8, shape, data: values }
+    }
+
+    pub fn from_i32(shape: Vec<usize>, values: Vec<i32>) -> Self {
+        assert_eq!(shape.iter().product::<usize>(), values.len());
+        let mut data = Vec::with_capacity(values.len() * 4);
+        for v in &values {
+            data.extend_from_slice(&v.to_le_bytes());
+        }
+        Tensor { dtype: DType::I32, shape, data }
+    }
+
+    pub fn zeros(dtype: DType, shape: Vec<usize>) -> Self {
+        let n = shape.iter().product::<usize>() * dtype.itemsize();
+        Tensor { dtype, shape, data: vec![0u8; n] }
+    }
+
+    pub fn len(&self) -> usize {
+        self.shape.iter().product()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.len() == 0
+    }
+
+    pub fn nbytes(&self) -> usize {
+        self.data.len()
+    }
+
+    pub fn bytes(&self) -> &[u8] {
+        &self.data
+    }
+
+    pub fn as_f32(&self) -> Result<Vec<f32>> {
+        if self.dtype != DType::F32 {
+            bail!("expected f32 tensor, got {:?}", self.dtype);
+        }
+        Ok(self
+            .data
+            .chunks_exact(4)
+            .map(|c| f32::from_le_bytes([c[0], c[1], c[2], c[3]]))
+            .collect())
+    }
+
+    pub fn as_i8(&self) -> Result<Vec<i8>> {
+        if self.dtype != DType::I8 {
+            bail!("expected i8 tensor, got {:?}", self.dtype);
+        }
+        Ok(self.data.iter().map(|b| *b as i8).collect())
+    }
+
+    pub fn as_u8(&self) -> Result<Vec<u8>> {
+        if self.dtype != DType::U8 {
+            bail!("expected u8 tensor, got {:?}", self.dtype);
+        }
+        Ok(self.data.clone())
+    }
+
+    pub fn as_i32(&self) -> Result<Vec<i32>> {
+        if self.dtype != DType::I32 {
+            bail!("expected i32 tensor, got {:?}", self.dtype);
+        }
+        Ok(self
+            .data
+            .chunks_exact(4)
+            .map(|c| i32::from_le_bytes([c[0], c[1], c[2], c[3]]))
+            .collect())
+    }
+
+    /// Reinterpret with a new shape (same element count).
+    pub fn reshape(mut self, shape: Vec<usize>) -> Result<Self> {
+        if shape.iter().product::<usize>() != self.len() {
+            bail!("cannot reshape {:?} to {:?}", self.shape, shape);
+        }
+        self.shape = shape;
+        Ok(self)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn roundtrip_f32() {
+        let t = Tensor::from_f32(vec![2, 3], vec![1.0, -2.5, 3.0, 0.0, 5.5, -6.0]);
+        assert_eq!(t.len(), 6);
+        assert_eq!(t.nbytes(), 24);
+        assert_eq!(t.as_f32().unwrap()[1], -2.5);
+    }
+
+    #[test]
+    fn roundtrip_i8() {
+        let t = Tensor::from_i8(vec![4], vec![-128, -1, 0, 127]);
+        assert_eq!(t.as_i8().unwrap(), vec![-128, -1, 0, 127]);
+    }
+
+    #[test]
+    fn shape_mismatch_rejected() {
+        assert!(Tensor::from_bytes(DType::F32, vec![2, 2], vec![0u8; 15]).is_err());
+    }
+
+    #[test]
+    fn dtype_mismatch_rejected() {
+        let t = Tensor::from_i8(vec![1], vec![3]);
+        assert!(t.as_f32().is_err());
+    }
+
+    #[test]
+    fn reshape_checks_count() {
+        let t = Tensor::from_f32(vec![2, 3], vec![0.0; 6]);
+        assert!(t.clone().reshape(vec![3, 2]).is_ok());
+        assert!(t.reshape(vec![4, 2]).is_err());
+    }
+
+    #[test]
+    fn dtype_names() {
+        assert_eq!(DType::from_name("float32").unwrap(), DType::F32);
+        assert_eq!(DType::from_name("uint8").unwrap(), DType::U8);
+        assert!(DType::from_name("f64").is_err());
+    }
+}

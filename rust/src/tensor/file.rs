@@ -1,0 +1,113 @@
+//! Flat tensor container — bit-compatible with python/compile/tensorfile.py.
+//!
+//! Layout (little-endian):
+//!   magic  8B  "LLEQTNSR"
+//!   count  u32
+//!   per tensor: name_len u16, name, dtype u8, ndim u8, dims u64*, data
+
+use std::collections::BTreeMap;
+use std::io::{Read, Write};
+use std::path::Path;
+
+use anyhow::{bail, Context, Result};
+
+use super::{DType, Tensor};
+
+const MAGIC: &[u8; 8] = b"LLEQTNSR";
+
+/// Load every tensor in a container file, keyed by name.
+pub fn load_tensor_file(path: &Path) -> Result<BTreeMap<String, Tensor>> {
+    let mut data = Vec::new();
+    std::fs::File::open(path)
+        .with_context(|| format!("opening tensor file {}", path.display()))?
+        .read_to_end(&mut data)?;
+    parse(&data).with_context(|| format!("parsing {}", path.display()))
+}
+
+fn parse(data: &[u8]) -> Result<BTreeMap<String, Tensor>> {
+    if data.len() < 12 || &data[..8] != MAGIC {
+        bail!("bad magic");
+    }
+    let mut off = 8usize;
+    let count = u32::from_le_bytes(data[off..off + 4].try_into()?) as usize;
+    off += 4;
+    let mut out = BTreeMap::new();
+    for _ in 0..count {
+        let nlen = u16::from_le_bytes(data[off..off + 2].try_into()?) as usize;
+        off += 2;
+        let name = std::str::from_utf8(&data[off..off + nlen])?.to_string();
+        off += nlen;
+        let dtype = DType::from_code(data[off])?;
+        let ndim = data[off + 1] as usize;
+        off += 2;
+        let mut shape = Vec::with_capacity(ndim);
+        for _ in 0..ndim {
+            shape.push(u64::from_le_bytes(data[off..off + 8].try_into()?) as usize);
+            off += 8;
+        }
+        let nbytes = shape.iter().product::<usize>() * dtype.itemsize();
+        if off + nbytes > data.len() {
+            bail!("truncated tensor data for {name}");
+        }
+        let t = Tensor::from_bytes(dtype, shape, data[off..off + nbytes].to_vec())?;
+        off += nbytes;
+        out.insert(name, t);
+    }
+    Ok(out)
+}
+
+/// Save tensors in the shared container format (sorted by name).
+pub fn save_tensor_file(path: &Path, tensors: &BTreeMap<String, Tensor>) -> Result<()> {
+    let mut f = std::fs::File::create(path)
+        .with_context(|| format!("creating tensor file {}", path.display()))?;
+    f.write_all(MAGIC)?;
+    f.write_all(&(tensors.len() as u32).to_le_bytes())?;
+    for (name, t) in tensors {
+        let nb = name.as_bytes();
+        f.write_all(&(nb.len() as u16).to_le_bytes())?;
+        f.write_all(nb)?;
+        f.write_all(&[t.dtype.code(), t.shape.len() as u8])?;
+        for d in &t.shape {
+            f.write_all(&(*d as u64).to_le_bytes())?;
+        }
+        f.write_all(t.bytes())?;
+    }
+    Ok(())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn save_load_roundtrip() {
+        let mut m = BTreeMap::new();
+        m.insert("a.w".into(), Tensor::from_f32(vec![2, 2], vec![1.0, 2.0, 3.0, 4.0]));
+        m.insert("b.q".into(), Tensor::from_i8(vec![3], vec![-1, 0, 1]));
+        m.insert("c.u".into(), Tensor::from_u8(vec![2], vec![0, 255]));
+        m.insert("d.i".into(), Tensor::from_i32(vec![1], vec![-7]));
+        let dir = std::env::temp_dir().join("lleq_test_tensorfile");
+        std::fs::create_dir_all(&dir).unwrap();
+        let p = dir.join("t.bin");
+        save_tensor_file(&p, &m).unwrap();
+        let got = load_tensor_file(&p).unwrap();
+        assert_eq!(got, m);
+    }
+
+    #[test]
+    fn rejects_bad_magic() {
+        assert!(parse(b"NOTMAGIC\x00\x00\x00\x00").is_err());
+    }
+
+    #[test]
+    fn rejects_truncated() {
+        let mut m = BTreeMap::new();
+        m.insert("x".into(), Tensor::from_f32(vec![4], vec![0.0; 4]));
+        let dir = std::env::temp_dir().join("lleq_test_tensorfile2");
+        std::fs::create_dir_all(&dir).unwrap();
+        let p = dir.join("t.bin");
+        save_tensor_file(&p, &m).unwrap();
+        let data = std::fs::read(&p).unwrap();
+        assert!(parse(&data[..data.len() - 4]).is_err());
+    }
+}

@@ -1,0 +1,13 @@
+//! Host tensors: the typed buffers that flow between checkpoints, the
+//! quantizers, and PJRT literals.
+//!
+//! Deliberately minimal — heavy math runs inside the AOT-compiled XLA
+//! modules; this type only needs to carry data, shapes and dtypes
+//! faithfully across the Rust/Python contract (`file.rs` mirrors
+//! `python/compile/tensorfile.py`).
+
+mod array;
+mod file;
+
+pub use array::{DType, Tensor};
+pub use file::{load_tensor_file, save_tensor_file};

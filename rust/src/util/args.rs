@@ -1,0 +1,90 @@
+//! Tiny CLI argument parser (no clap in the offline crate set).
+//!
+//! Supports `--key value`, `--key=value`, `--flag`, and positionals.
+
+use std::collections::BTreeMap;
+
+#[derive(Debug, Default, Clone)]
+pub struct Args {
+    pub positional: Vec<String>,
+    pub options: BTreeMap<String, String>,
+    pub flags: Vec<String>,
+}
+
+impl Args {
+    /// Parse from an explicit token list (first token is NOT the binary).
+    pub fn parse_from<I: IntoIterator<Item = String>>(tokens: I) -> Self {
+        let mut out = Args::default();
+        let mut it = tokens.into_iter().peekable();
+        while let Some(tok) = it.next() {
+            if let Some(stripped) = tok.strip_prefix("--") {
+                if let Some((k, v)) = stripped.split_once('=') {
+                    out.options.insert(k.to_string(), v.to_string());
+                } else if it.peek().map_or(false, |n| !n.starts_with("--")) {
+                    out.options.insert(stripped.to_string(), it.next().unwrap());
+                } else {
+                    out.flags.push(stripped.to_string());
+                }
+            } else {
+                out.positional.push(tok);
+            }
+        }
+        out
+    }
+
+    pub fn parse_env() -> Self {
+        Self::parse_from(std::env::args().skip(1))
+    }
+
+    pub fn get(&self, key: &str) -> Option<&str> {
+        self.options.get(key).map(|s| s.as_str())
+    }
+
+    pub fn get_or(&self, key: &str, default: &str) -> String {
+        self.get(key).unwrap_or(default).to_string()
+    }
+
+    pub fn get_usize(&self, key: &str, default: usize) -> usize {
+        self.get(key).and_then(|s| s.parse().ok()).unwrap_or(default)
+    }
+
+    pub fn get_f64(&self, key: &str, default: f64) -> f64 {
+        self.get(key).and_then(|s| s.parse().ok()).unwrap_or(default)
+    }
+
+    pub fn has_flag(&self, name: &str) -> bool {
+        self.flags.iter().any(|f| f == name)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn parse(s: &str) -> Args {
+        Args::parse_from(s.split_whitespace().map(String::from))
+    }
+
+    #[test]
+    fn key_value_styles() {
+        let a = parse("serve --model gpt2-tiny --shards=8 --verbose");
+        assert_eq!(a.positional, vec!["serve"]);
+        assert_eq!(a.get("model"), Some("gpt2-tiny"));
+        assert_eq!(a.get_usize("shards", 1), 8);
+        assert!(a.has_flag("verbose"));
+    }
+
+    #[test]
+    fn flag_before_option() {
+        let a = parse("--dry-run --steps 5");
+        assert!(a.has_flag("dry-run"));
+        assert_eq!(a.get_usize("steps", 0), 5);
+    }
+
+    #[test]
+    fn defaults() {
+        let a = parse("");
+        assert_eq!(a.get_or("x", "d"), "d");
+        assert_eq!(a.get_f64("y", 1.5), 1.5);
+    }
+}

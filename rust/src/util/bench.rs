@@ -1,0 +1,141 @@
+//! Micro-bench harness (no criterion in the offline crate set).
+//!
+//! Warmup + timed iterations with mean / p50 / p95 / stddev, plus a table
+//! printer used by every `benches/` target to emit the paper's rows.
+
+use std::time::Instant;
+
+#[derive(Debug, Clone)]
+pub struct BenchStats {
+    pub name: String,
+    pub iters: usize,
+    pub mean_ns: f64,
+    pub p50_ns: f64,
+    pub p95_ns: f64,
+    pub std_ns: f64,
+}
+
+impl BenchStats {
+    pub fn mean_ms(&self) -> f64 {
+        self.mean_ns / 1e6
+    }
+
+    pub fn mean_us(&self) -> f64 {
+        self.mean_ns / 1e3
+    }
+}
+
+/// Run `f` for `warmup` unmeasured + `iters` measured iterations.
+pub fn bench<F: FnMut()>(name: &str, warmup: usize, iters: usize, mut f: F) -> BenchStats {
+    for _ in 0..warmup {
+        f();
+    }
+    let mut samples = Vec::with_capacity(iters);
+    for _ in 0..iters {
+        let t0 = Instant::now();
+        f();
+        samples.push(t0.elapsed().as_nanos() as f64);
+    }
+    stats_from(name, samples)
+}
+
+/// Time a single run (for expensive end-to-end passes).
+pub fn time_once<T, F: FnOnce() -> T>(f: F) -> (T, f64) {
+    let t0 = Instant::now();
+    let out = f();
+    (out, t0.elapsed().as_secs_f64())
+}
+
+fn stats_from(name: &str, mut samples: Vec<f64>) -> BenchStats {
+    samples.sort_by(|a, b| a.partial_cmp(b).unwrap());
+    let n = samples.len().max(1) as f64;
+    let mean = samples.iter().sum::<f64>() / n;
+    let var = samples.iter().map(|s| (s - mean) * (s - mean)).sum::<f64>() / n;
+    let idx = |q: f64| samples[(q * (samples.len() - 1) as f64) as usize];
+    BenchStats {
+        name: name.to_string(),
+        iters: samples.len(),
+        mean_ns: mean,
+        p50_ns: if samples.is_empty() { 0.0 } else { idx(0.5) },
+        p95_ns: if samples.is_empty() { 0.0 } else { idx(0.95) },
+        std_ns: var.sqrt(),
+    }
+}
+
+/// Fixed-width table printer for bench outputs.
+pub struct Table {
+    headers: Vec<String>,
+    rows: Vec<Vec<String>>,
+}
+
+impl Table {
+    pub fn new(headers: &[&str]) -> Self {
+        Table { headers: headers.iter().map(|s| s.to_string()).collect(), rows: Vec::new() }
+    }
+
+    pub fn row(&mut self, cells: Vec<String>) {
+        assert_eq!(cells.len(), self.headers.len(), "row arity mismatch");
+        self.rows.push(cells);
+    }
+
+    pub fn to_string(&self) -> String {
+        let mut widths: Vec<usize> = self.headers.iter().map(|h| h.len()).collect();
+        for row in &self.rows {
+            for (i, c) in row.iter().enumerate() {
+                widths[i] = widths[i].max(c.len());
+            }
+        }
+        let line = |cells: &[String]| {
+            cells
+                .iter()
+                .enumerate()
+                .map(|(i, c)| format!("{:<w$}", c, w = widths[i]))
+                .collect::<Vec<_>>()
+                .join("  ")
+        };
+        let mut out = line(&self.headers);
+        out.push('\n');
+        out.push_str(&widths.iter().map(|w| "-".repeat(*w)).collect::<Vec<_>>().join("  "));
+        for row in &self.rows {
+            out.push('\n');
+            out.push_str(&line(row));
+        }
+        out
+    }
+
+    pub fn print(&self) {
+        println!("{}", self.to_string());
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn bench_produces_ordered_stats() {
+        let s = bench("noop", 2, 50, || {
+            std::hint::black_box(1 + 1);
+        });
+        assert_eq!(s.iters, 50);
+        assert!(s.p50_ns <= s.p95_ns);
+        assert!(s.mean_ns > 0.0);
+    }
+
+    #[test]
+    fn table_aligns() {
+        let mut t = Table::new(&["method", "ms"]);
+        t.row(vec!["fp16".into(), "24.1".into()]);
+        t.row(vec!["smoothquant".into(), "10.8".into()]);
+        let s = t.to_string();
+        assert!(s.contains("smoothquant"));
+        assert_eq!(s.lines().count(), 4);
+    }
+
+    #[test]
+    #[should_panic]
+    fn table_rejects_bad_arity() {
+        let mut t = Table::new(&["a", "b"]);
+        t.row(vec!["x".into()]);
+    }
+}

@@ -1,0 +1,8 @@
+//! Small self-contained utilities (the offline image has no serde_json /
+//! clap / criterion, so the repo carries its own minimal substrates —
+//! DESIGN.md §Substitutions).
+
+pub mod args;
+pub mod bench;
+pub mod json;
+pub mod proptest;

@@ -1,0 +1,147 @@
+//! Mini property-testing harness (no proptest crate offline).
+//!
+//! `check(seed, cases, gen, prop)` draws `cases` random inputs and asserts
+//! the property on each; on failure it performs greedy shrinking via the
+//! generator's `shrink` and reports the minimal counterexample. Used by the
+//! coordinator invariants tests (DESIGN.md §Substitutions).
+
+use crate::corpus::XorShift64Star;
+
+/// A generator: draws a value from the RNG and optionally shrinks it.
+pub trait Gen {
+    type Value: Clone + std::fmt::Debug;
+    fn draw(&self, rng: &mut XorShift64Star) -> Self::Value;
+    /// Candidate smaller values (for shrinking). Default: none.
+    fn shrink(&self, _v: &Self::Value) -> Vec<Self::Value> {
+        Vec::new()
+    }
+}
+
+/// Run a property over `cases` random draws; panic with the (shrunk)
+/// counterexample on failure.
+pub fn check<G, P>(seed: u64, cases: usize, gen: &G, prop: P)
+where
+    G: Gen,
+    P: Fn(&G::Value) -> bool,
+{
+    let mut rng = XorShift64Star::new(seed);
+    for case in 0..cases {
+        let v = gen.draw(&mut rng);
+        if !prop(&v) {
+            let minimal = shrink_loop(gen, v, &prop);
+            panic!("property failed at case {case}; minimal counterexample: {minimal:?}");
+        }
+    }
+}
+
+fn shrink_loop<G, P>(gen: &G, mut v: G::Value, prop: &P) -> G::Value
+where
+    G: Gen,
+    P: Fn(&G::Value) -> bool,
+{
+    'outer: for _ in 0..1000 {
+        for cand in gen.shrink(&v) {
+            if !prop(&cand) {
+                v = cand;
+                continue 'outer;
+            }
+        }
+        break;
+    }
+    v
+}
+
+// ---------------------------------------------------------------------------
+// Stock generators
+// ---------------------------------------------------------------------------
+
+/// usize in [lo, hi] — shrinks toward lo.
+pub struct UsizeRange(pub usize, pub usize);
+
+impl Gen for UsizeRange {
+    type Value = usize;
+    fn draw(&self, rng: &mut XorShift64Star) -> usize {
+        self.0 + rng.next_below((self.1 - self.0 + 1) as u64) as usize
+    }
+    fn shrink(&self, v: &usize) -> Vec<usize> {
+        let mut out = Vec::new();
+        if *v > self.0 {
+            out.push(self.0);
+            out.push(self.0 + (v - self.0) / 2);
+            out.push(v - 1);
+        }
+        out.dedup();
+        out
+    }
+}
+
+/// Vec<f32> of length in [min_len, max_len], values ~ scaled normal.
+/// Shrinks by halving length and zeroing elements.
+pub struct F32Vec {
+    pub min_len: usize,
+    pub max_len: usize,
+    pub scale: f32,
+}
+
+impl Gen for F32Vec {
+    type Value = Vec<f32>;
+    fn draw(&self, rng: &mut XorShift64Star) -> Vec<f32> {
+        let len = self.min_len
+            + rng.next_below((self.max_len - self.min_len + 1) as u64) as usize;
+        (0..len).map(|_| rng.next_normal() as f32 * self.scale).collect()
+    }
+    fn shrink(&self, v: &Vec<f32>) -> Vec<Vec<f32>> {
+        let mut out = Vec::new();
+        if v.len() > self.min_len {
+            out.push(v[..self.min_len.max(v.len() / 2)].to_vec());
+        }
+        if v.iter().any(|x| *x != 0.0) {
+            out.push(vec![0.0; v.len()]);
+        }
+        out
+    }
+}
+
+/// Pair generator.
+pub struct Pair<A, B>(pub A, pub B);
+
+impl<A: Gen, B: Gen> Gen for Pair<A, B> {
+    type Value = (A::Value, B::Value);
+    fn draw(&self, rng: &mut XorShift64Star) -> Self::Value {
+        (self.0.draw(rng), self.1.draw(rng))
+    }
+    fn shrink(&self, v: &Self::Value) -> Vec<Self::Value> {
+        let mut out: Vec<Self::Value> =
+            self.0.shrink(&v.0).into_iter().map(|a| (a, v.1.clone())).collect();
+        out.extend(self.1.shrink(&v.1).into_iter().map(|b| (v.0.clone(), b)));
+        out
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn passing_property() {
+        check(1, 200, &UsizeRange(0, 100), |v| *v <= 100);
+    }
+
+    #[test]
+    #[should_panic(expected = "minimal counterexample")]
+    fn failing_property_shrinks() {
+        check(2, 200, &UsizeRange(0, 100), |v| *v < 50);
+    }
+
+    #[test]
+    fn f32vec_respects_bounds() {
+        let gen = F32Vec { min_len: 2, max_len: 10, scale: 1.0 };
+        check(3, 100, &gen, |v| v.len() >= 2 && v.len() <= 10);
+    }
+
+    #[test]
+    fn pair_draws_both() {
+        let gen = Pair(UsizeRange(1, 4), UsizeRange(5, 8));
+        check(4, 100, &gen, |(a, b)| *a <= 4 && *b >= 5);
+    }
+}

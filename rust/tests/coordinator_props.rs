@@ -1,0 +1,195 @@
+//! Property tests on coordinator invariants (routing, batching, KV state,
+//! scale sync) — the proptest-style coverage DESIGN.md calls for, using
+//! the in-repo mini harness (util::proptest).
+
+use std::time::Duration;
+
+use llmeasyquant::collective::{Collective, Topology, Transport};
+use llmeasyquant::coordinator::{
+    BatchPolicy, Batcher, KvCache, Request, Router, ScaleSync,
+};
+use llmeasyquant::corpus::XorShift64Star;
+use llmeasyquant::util::proptest::{check, F32Vec, Gen, Pair, UsizeRange};
+
+/// Router invariant: sessions map exactly the in-flight requests and the
+/// load vector sums to the session count, under random admit/complete
+/// interleavings.
+#[test]
+fn prop_router_session_accounting() {
+    struct Ops;
+    impl Gen for Ops {
+        type Value = Vec<(bool, u64)>; // (is_admit, id)
+        fn draw(&self, rng: &mut XorShift64Star) -> Self::Value {
+            let n = 1 + rng.next_below(60) as usize;
+            (0..n)
+                .map(|i| (rng.next_below(3) != 0, (i as u64) % 16))
+                .collect()
+        }
+        fn shrink(&self, v: &Self::Value) -> Vec<Self::Value> {
+            if v.len() > 1 {
+                vec![v[..v.len() / 2].to_vec()]
+            } else {
+                vec![]
+            }
+        }
+    }
+    check(31, 200, &Ops, |ops| {
+        let mut r = Router::new(4, 32);
+        let mut live = std::collections::BTreeSet::new();
+        let mut next = 100u64;
+        for (is_admit, id) in ops {
+            if *is_admit {
+                let rid = next + id;
+                next += 16;
+                r.admit(Request::new(rid, vec![3, 4, 5], 2));
+                live.insert(rid);
+            } else if let Some(&rid) = live.iter().next() {
+                r.complete(rid);
+                live.remove(&rid);
+            }
+        }
+        r.in_flight() == live.len() && r.load().iter().sum::<usize>() == live.len()
+    });
+}
+
+/// Batcher invariant: conservation + bounded size for any (n, max_batch).
+#[test]
+fn prop_batcher_conservation() {
+    let gen = Pair(UsizeRange(1, 100), UsizeRange(1, 12));
+    check(32, 300, &gen, |(n, max_batch)| {
+        let mut b = Batcher::new(BatchPolicy {
+            max_batch: *max_batch,
+            max_wait: Duration::ZERO,
+        });
+        for i in 0..*n {
+            b.push(Request::new(i as u64, vec![1], 1));
+        }
+        let batches = b.flush();
+        let total: usize = batches.iter().map(|x| x.len()).sum();
+        let ids: Vec<u64> = batches
+            .iter()
+            .flat_map(|x| x.requests.iter().map(|r| r.id))
+            .collect();
+        total == *n
+            && batches.iter().all(|x| x.len() <= *max_batch)
+            && ids == (0..*n as u64).collect::<Vec<_>>()
+    });
+}
+
+/// KV invariant: SimQuant reconstruction error grows at most linearly in
+/// the number of page re-encodes — each re-encode requantizes
+/// already-quantized codes, adding at most step/2 (and steps only widen),
+/// so after k re-encodes: |err| <= (k+1) * step_final / 2. With no
+/// re-encode this reduces to the Thm. A.2 bound.
+#[test]
+fn prop_kv_simquant_bound_after_appends() {
+    let gen = F32Vec { min_len: 8, max_len: 8 * 30, scale: 3.0 };
+    check(33, 150, &gen, |values| {
+        let d = 8usize;
+        let steps = values.len() / d;
+        let mut kv = KvCache::new_simquant(1, 1, 64, d);
+        let mut truth: Vec<f32> = Vec::new();
+        for s in 0..steps.min(63) {
+            let row = &values[s * d..(s + 1) * d];
+            kv.append_row(0, 0, row, row);
+            kv.bump(0);
+            truth.extend_from_slice(row);
+        }
+        let got = kv.decode_k(0, 0);
+        // per-channel bound: (max-min)/255 over the channel
+        for c in 0..d {
+            let (mut lo, mut hi) = (f32::INFINITY, f32::NEG_INFINITY);
+            for s in 0..kv.len(0) {
+                lo = lo.min(truth[s * d + c]);
+                hi = hi.max(truth[s * d + c]);
+            }
+            let step = ((hi - lo).max(1e-8)) / 255.0;
+            let bound = (kv.reencodes as f32 + 1.0) * step * 0.5;
+            for s in 0..kv.len(0) {
+                let e = (truth[s * d + c] - got[s * d + c]).abs();
+                if e > bound + 1e-5 {
+                    return false;
+                }
+            }
+        }
+        true
+    });
+}
+
+/// Scale-sync invariant (Thm. 4): any observation pattern, any world size
+/// -> identical post-sync states on every shard.
+#[test]
+fn prop_scale_sync_consistency() {
+    let gen = Pair(UsizeRange(1, 6), UsizeRange(1, 5));
+    check(34, 25, &gen, |(world, regions)| {
+        let (world, regions) = (*world, *regions);
+        let ring = Collective::ring(Topology::new(world, Transport::NvlinkRdma));
+        let handles: Vec<_> = ring
+            .into_iter()
+            .enumerate()
+            .map(|(rank, mut comm)| {
+                std::thread::spawn(move || {
+                    let mut s = ScaleSync::new(regions, 0.9, 1e-6, 0);
+                    let mut rng = XorShift64Star::new(500 + rank as u64);
+                    for region in 0..regions {
+                        let n = 1 + rng.next_below(64) as usize;
+                        let x: Vec<f32> =
+                            (0..n).map(|_| rng.next_normal() as f32).collect();
+                        s.observe(region, &x);
+                    }
+                    s.sync(&mut comm).unwrap()
+                })
+            })
+            .collect();
+        let results: Vec<_> = handles.into_iter().map(|h| h.join().unwrap()).collect();
+        results[1..].iter().all(|states| {
+            states
+                .iter()
+                .zip(&results[0])
+                .all(|(a, b)| a.delta == b.delta && a.zero_point == b.zero_point)
+        })
+    });
+}
+
+/// Collective invariant: all-gather returns rank-indexed contributions
+/// regardless of payload sizes.
+#[test]
+fn prop_allgather_indexing() {
+    check(35, 30, &UsizeRange(1, 6), |world| {
+        let ring = Collective::ring(Topology::new(*world, Transport::Tcp));
+        let handles: Vec<_> = ring
+            .into_iter()
+            .map(|mut c| {
+                std::thread::spawn(move || {
+                    let rank = c.rank();
+                    let out = c.all_gather(vec![rank as f32; rank + 1]).unwrap();
+                    (rank, out)
+                })
+            })
+            .collect();
+        handles.into_iter().all(|h| {
+            let (_, out) = h.join().unwrap();
+            out.iter()
+                .enumerate()
+                .all(|(r, v)| v.len() == r + 1 && v.iter().all(|x| *x == r as f32))
+        })
+    });
+}
+
+/// EMA tracker invariant: delta stays within [min absmax seen * alpha^k,
+/// max absmax seen] — i.e. never overshoots the observed range.
+#[test]
+fn prop_ema_bounded_by_observations() {
+    let gen = F32Vec { min_len: 4, max_len: 256, scale: 10.0 };
+    check(36, 200, &gen, |xs| {
+        let mut t = llmeasyquant::quant::EmaScaleTracker::new(0.9, 1e-6);
+        let mut max_seen = 0f32;
+        for chunk in xs.chunks(4) {
+            t.observe(chunk);
+            max_seen = max_seen.max(chunk.iter().fold(0f32, |a, v| a.max(v.abs())));
+        }
+        // eps floor may lift delta above tiny absmax values, but never
+        // above the largest observation + floor
+        t.state().delta <= max_seen.max(1.0) * 1.5 + 1.0
+    });
+}

@@ -1,0 +1,49 @@
+//! Cross-language contracts beyond the golden logits: corpus stream
+//! equality via checksums at several lengths/seeds, and the weights.bin
+//! container written by python loading cleanly with calibration stats.
+
+use llmeasyquant::corpus;
+use llmeasyquant::tensor::load_tensor_file;
+
+#[test]
+fn corpus_checksums_multiple_lengths() {
+    // values pinned from python/compile/corpus.py (test_corpus_tensorfile)
+    assert_eq!(corpus::checksum(&corpus::generate_tokens(4096, 1234)), 0x14CC_B6D0_9EA9_D22B);
+    // self-consistency across seeds/lengths
+    for (n, seed) in [(1000usize, 1u64), (10_000, 2), (220_000, 1234)] {
+        let a = corpus::checksum(&corpus::generate_tokens(n, seed));
+        let b = corpus::checksum(&corpus::generate_tokens(n, seed));
+        assert_eq!(a, b);
+    }
+}
+
+#[test]
+fn weights_bin_contains_calibration() {
+    let dir = std::path::Path::new(env!("CARGO_MANIFEST_DIR")).join("artifacts");
+    let t = load_tensor_file(&dir.join("gpt2-tiny.weights.bin")).unwrap();
+    assert!(t.contains_key("wte"));
+    assert!(t.contains_key("h0.qkv_w"));
+    assert!(t.contains_key("calib.h0.qkv.absmax"));
+    assert!(t.contains_key("calib.h1.fc2.sqsum"));
+    // shapes agree with the model config
+    assert_eq!(t["wte"].shape, vec![32, 128]);
+    assert_eq!(t["h0.qkv_w"].shape, vec![128, 384]);
+    assert_eq!(t["calib.h0.qkv.absmax"].shape, vec![128]);
+    // calibration stats are non-degenerate
+    let absmax = t["calib.h0.qkv.absmax"].as_f32().unwrap();
+    assert!(absmax.iter().all(|v| *v > 0.0));
+    assert!(absmax.iter().any(|v| *v > 0.1));
+}
+
+#[test]
+fn golden_file_well_formed() {
+    let dir = std::path::Path::new(env!("CARGO_MANIFEST_DIR")).join("artifacts");
+    let g = load_tensor_file(&dir.join("golden.bin")).unwrap();
+    for variant in ["fp", "int8", "smooth", "simquant"] {
+        let toks = &g[&format!("gpt2-tiny.{variant}.tokens")];
+        let logits = &g[&format!("gpt2-tiny.{variant}.logits")];
+        assert_eq!(toks.shape, vec![1, 128]);
+        assert_eq!(logits.shape, vec![1, 128, 32]);
+        assert!(logits.as_f32().unwrap().iter().all(|v| v.is_finite()));
+    }
+}

@@ -1,0 +1,93 @@
+//! Integration: perplexity evaluator + ONNX export over real artifacts.
+
+use std::sync::Arc;
+
+use llmeasyquant::eval::{perplexity, weight_errors};
+use llmeasyquant::quant::Variant;
+use llmeasyquant::runtime::Registry;
+use llmeasyquant::serialize;
+
+fn registry() -> Arc<Registry> {
+    let dir = std::path::Path::new(env!("CARGO_MANIFEST_DIR")).join("artifacts");
+    Arc::new(Registry::open(&dir).expect("open artifacts"))
+}
+
+#[test]
+fn ppl_finite_and_better_than_uniform() {
+    let reg = registry();
+    let r = perplexity(&reg, "gpt2-tiny", Variant::Fp, 4).unwrap();
+    assert!(r.ppl.is_finite());
+    assert!(r.ppl < 32.0, "trained model must beat the uniform baseline");
+    assert!(r.ppl > 1.0);
+    assert!(r.tokens > 400); // 4 windows x 127 predictions
+}
+
+#[test]
+fn ppl_quantized_within_band_of_fp() {
+    let reg = registry();
+    let fp = perplexity(&reg, "gpt2-tiny", Variant::Fp, 4).unwrap().ppl;
+    for v in [Variant::Smooth, Variant::SimQuant, Variant::Awq, Variant::Gptq] {
+        let q = perplexity(&reg, "gpt2-tiny", v, 4).unwrap().ppl;
+        assert!((q - fp).abs() / fp < 0.05, "{v:?}: {q} vs fp {fp}");
+    }
+}
+
+#[test]
+fn ppl_deterministic() {
+    let reg = registry();
+    let a = perplexity(&reg, "gpt2-tiny", Variant::Sym8, 3).unwrap();
+    let b = perplexity(&reg, "gpt2-tiny", Variant::Sym8, 3).unwrap();
+    assert_eq!(a.nll, b.nll);
+}
+
+#[test]
+fn weight_errors_ordering() {
+    let reg = registry();
+    let cfg = reg.model_cfg("gpt2-small").unwrap().clone();
+    let ckpt = reg.checkpoint("gpt2-small").unwrap();
+    let mse_of = |v: Variant| -> f64 {
+        weight_errors(&cfg, &ckpt, v)
+            .unwrap()
+            .iter()
+            .map(|e| e.mse)
+            .sum::<f64>()
+    };
+    assert_eq!(mse_of(Variant::Fp), 0.0);
+    // per-channel beats per-tensor on every real checkpoint
+    assert!(mse_of(Variant::Sym8) < mse_of(Variant::AbsMax));
+    // error feedback (gptq) should not be wildly worse than rounding
+    assert!(mse_of(Variant::Gptq) < mse_of(Variant::AbsMax) * 2.0);
+}
+
+#[test]
+fn onnx_export_real_checkpoint_roundtrip() {
+    let reg = registry();
+    let cfg = reg.model_cfg("gpt2-tiny").unwrap().clone();
+    let ckpt = reg.checkpoint("gpt2-tiny").unwrap();
+    let dir = std::env::temp_dir().join("lleq_it_onnx");
+    std::fs::create_dir_all(&dir).unwrap();
+    for v in [Variant::Smooth, Variant::ZeroPoint, Variant::SimQuant] {
+        let p = dir.join(format!("{}.onnx.json", v.name()));
+        let g = serialize::export_to_file(&cfg, &ckpt, v, &p).unwrap();
+        let back = serialize::import_model(&p).unwrap();
+        assert_eq!(g, back, "{v:?}");
+        // Eq. 11 reconstruction stays near the checkpoint weight
+        let w_hat = serialize::dequantize_initializer(&g.initializers[0]);
+        let w = ckpt.f32("h0.qkv_w").unwrap();
+        let mse: f64 = w
+            .iter()
+            .zip(&w_hat)
+            .map(|(a, b)| ((a - b) as f64).powi(2))
+            .sum::<f64>()
+            / w.len() as f64;
+        assert!(mse < 1e-5, "{v:?}: {mse}");
+    }
+}
+
+#[test]
+fn registry_missing_model_is_clean_error() {
+    let reg = registry();
+    assert!(reg.model_cfg("gpt5").is_err());
+    assert!(reg.checkpoint("gpt5").is_err());
+    assert!(perplexity(&reg, "gpt5", Variant::Fp, 1).is_err());
+}

@@ -1,0 +1,107 @@
+//! Cross-language golden contract: Rust quantizes the checkpoint with its
+//! own `quant::prepare`, executes the AOT HLO graphs through PJRT, and
+//! must reproduce the logits Python computed with its own quantizers and
+//! jax execution (artifacts/golden.bin, written by python/compile/aot.py).
+//!
+//! This is the single test that pins all three layers together: if the
+//! Rust quantizer drifts from the Python reference by even one rounding
+//! rule, or the manifest ordering is off by one entry, logits diverge.
+
+use std::path::Path;
+use std::sync::Arc;
+
+use llmeasyquant::quant::Variant;
+use llmeasyquant::runtime::Registry;
+use llmeasyquant::tensor::{load_tensor_file, Tensor};
+
+fn artifacts_dir() -> &'static Path {
+    Path::new(env!("CARGO_MANIFEST_DIR")).join("artifacts").leak()
+}
+
+fn registry() -> Arc<Registry> {
+    Arc::new(Registry::open(artifacts_dir()).expect("open artifacts (run `make artifacts`)"))
+}
+
+fn check_variant(model: &str, variant: &str, tol: f32) {
+    let reg = registry();
+    let golden = load_tensor_file(&artifacts_dir().join("golden.bin")).unwrap();
+    let tokens = &golden[&format!("{model}.{variant}.tokens")];
+    let expect = golden[&format!("{model}.{variant}.logits")].as_f32().unwrap();
+
+    let v = Variant::from_name(variant).unwrap();
+    let handle = reg.model_handle(model, v, 1).unwrap();
+    let toks = Tensor::from_i32(tokens.shape.clone(), tokens.as_i32().unwrap());
+    let outs = handle.prefill(&[toks]).unwrap();
+    let got = outs[0].as_f32().unwrap();
+
+    assert_eq!(got.len(), expect.len(), "logit count mismatch");
+    let mut max_err = 0f32;
+    let mut max_mag = 0f32;
+    for (a, b) in got.iter().zip(&expect) {
+        max_err = max_err.max((a - b).abs());
+        max_mag = max_mag.max(b.abs());
+    }
+    assert!(
+        max_err <= tol * max_mag.max(1.0),
+        "{model}/{variant}: max_err {max_err} vs magnitude {max_mag}"
+    );
+}
+
+// fp pins the runtime itself; each quantized variant additionally pins the
+// corresponding rust quantizer against python's.
+//
+// Tolerances: weight-only variants run the same f32 math as python and sit
+// at ~1e-3 relative (cross-compiler fusion differences). W8A8 variants
+// quantize activations *inside* the graph: a borderline value that rounds
+// to a different int8 code under the two XLA versions shifts downstream
+// logits by ~delta, so they get 2e-2 relative.
+
+#[test]
+fn golden_fp() {
+    check_variant("gpt2-tiny", "fp", 2e-3);
+}
+
+#[test]
+fn golden_absmax() {
+    check_variant("gpt2-tiny", "absmax", 2e-3);
+}
+
+#[test]
+fn golden_zeropoint() {
+    check_variant("gpt2-tiny", "zeropoint", 2e-3);
+}
+
+#[test]
+fn golden_sym8() {
+    check_variant("gpt2-tiny", "sym8", 2e-3);
+}
+
+#[test]
+fn golden_int8() {
+    check_variant("gpt2-tiny", "int8", 2e-2);
+}
+
+#[test]
+fn golden_smooth() {
+    check_variant("gpt2-tiny", "smooth", 2e-2);
+}
+
+#[test]
+fn golden_zeroquant() {
+    check_variant("gpt2-tiny", "zeroquant", 2e-2);
+}
+
+#[test]
+fn golden_simquant() {
+    check_variant("gpt2-tiny", "simquant", 2e-2);
+}
+
+#[test]
+fn golden_small_model_smooth() {
+    check_variant("gpt2-small", "smooth", 2e-2);
+}
+
+#[test]
+fn golden_small_model_fp() {
+    check_variant("gpt2-small", "fp", 2e-3);
+}
