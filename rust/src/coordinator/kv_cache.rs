@@ -8,11 +8,19 @@
 //! row that falls outside the page's range triggers an in-place page
 //! re-encode (dequantize codes, widen range, requantize) — the runtime
 //! adaptation that keeps Thm. A.2's bound tight as the sequence grows.
+//!
+//! Hot-path contract: prefill ingestion encodes through
+//! `quant::kernels::simquant_encode_into` straight into the cache's own
+//! code/param pages (no staging vectors), page re-encodes run on reused
+//! scratch buffers, and `input_literals` builds PJRT literals directly
+//! from the cache buffers — one copy per decode step, total.
 
 use anyhow::Result;
 
-use crate::quant::{round_ties_even, simquant_encode};
-use crate::runtime::{f32_bytes, literal_from_raw};
+use crate::quant::kernels::{
+    simquant_decode_into, simquant_encode_into, simquant_encode_with_params_into,
+};
+use crate::runtime::{f32_bytes, literal_from_raw, Literal};
 use crate::tensor::{DType, Tensor};
 
 /// Whether the cache stores f32 rows or SimQuant u8 codes.
@@ -41,6 +49,10 @@ pub struct KvCache {
     v_step: Vec<f32>,
     /// per-slot filled length
     lens: Vec<usize>,
+    /// reused page-reencode scratch (decoded page, widened lo/hi)
+    scratch: Vec<f32>,
+    lo_scratch: Vec<f32>,
+    hi_scratch: Vec<f32>,
     /// page re-encode counter (observability)
     pub reencodes: u64,
 }
@@ -62,6 +74,9 @@ impl KvCache {
             v_min: Vec::new(),
             v_step: Vec::new(),
             lens: vec![0; batch],
+            scratch: Vec::new(),
+            lo_scratch: Vec::new(),
+            hi_scratch: Vec::new(),
             reencodes: 0,
         }
     }
@@ -82,6 +97,9 @@ impl KvCache {
             v_min: vec![0.0; n_layers * batch * d],
             v_step: vec![1e-8; n_layers * batch * d],
             lens: vec![0; batch],
+            scratch: Vec::new(),
+            lo_scratch: Vec::new(),
+            hi_scratch: Vec::new(),
             reencodes: 0,
         }
     }
@@ -137,7 +155,8 @@ impl KvCache {
     }
 
     /// Ingest prefill caches for one slot: rows [T, D] per layer, stored
-    /// (and for SimQuant: page-encoded) at positions 0..t_len.
+    /// (and for SimQuant: page-encoded, straight into the cache pages)
+    /// at positions 0..t_len.
     pub fn ingest_prefill(
         &mut self,
         slot: usize,
@@ -148,23 +167,37 @@ impl KvCache {
     ) {
         assert!(t_len <= self.ctx);
         assert_eq!(k_rows.len(), t_len * self.d);
+        assert_eq!(v_rows.len(), t_len * self.d);
+        let d = self.d;
         match self.mode {
             Mode::F32 => {
                 let off = self.row_off(layer, slot, 0);
-                self.k_f32[off..off + t_len * self.d].copy_from_slice(k_rows);
-                self.v_f32[off..off + t_len * self.d].copy_from_slice(v_rows);
+                self.k_f32[off..off + t_len * d].copy_from_slice(k_rows);
+                self.v_f32[off..off + t_len * d].copy_from_slice(v_rows);
             }
             Mode::SimQuant => {
-                let (kq, kmin, kstep) = simquant_encode(k_rows, t_len, self.d, 8);
-                let (vq, vmin, vstep) = simquant_encode(v_rows, t_len, self.d, 8);
                 let off = self.row_off(layer, slot, 0);
-                self.k_q[off..off + t_len * self.d].copy_from_slice(&kq);
-                self.v_q[off..off + t_len * self.d].copy_from_slice(&vq);
                 let p = self.param_off(layer, slot);
-                self.k_min[p..p + self.d].copy_from_slice(&kmin);
-                self.k_step[p..p + self.d].copy_from_slice(&kstep);
-                self.v_min[p..p + self.d].copy_from_slice(&vmin);
-                self.v_step[p..p + self.d].copy_from_slice(&vstep);
+                simquant_encode_into(
+                    k_rows,
+                    t_len,
+                    d,
+                    8,
+                    &mut self.k_q[off..off + t_len * d],
+                    &mut self.k_min[p..p + d],
+                    &mut self.k_step[p..p + d],
+                )
+                .expect("simquant encode (bits=8, sized buffers) cannot fail");
+                simquant_encode_into(
+                    v_rows,
+                    t_len,
+                    d,
+                    8,
+                    &mut self.v_q[off..off + t_len * d],
+                    &mut self.v_min[p..p + d],
+                    &mut self.v_step[p..p + d],
+                )
+                .expect("simquant encode (bits=8, sized buffers) cannot fail");
             }
         }
         self.lens[slot] = self.lens[slot].max(t_len);
@@ -203,6 +236,8 @@ impl KvCache {
     ) {
         let p = self.param_off(layer, slot);
         let d = self.d;
+        // the zipped loops below would silently truncate a short row
+        assert_eq!(row.len(), d, "KV row length != d");
         // check range; widen + re-encode the page if violated
         let mut needs_reencode = false;
         {
@@ -211,9 +246,9 @@ impl KvCache {
             } else {
                 (&self.v_min[p..p + d], &self.v_step[p..p + d])
             };
-            for c in 0..d {
-                let hi = vmin[c] + vstep[c] * 255.0;
-                if row[c] < vmin[c] - 1e-9 || row[c] > hi + 1e-9 {
+            for ((mn, st), v) in vmin.iter().zip(vstep).zip(row) {
+                let hi = mn + st * 255.0;
+                if *v < mn - 1e-9 || *v > hi + 1e-9 {
                     needs_reencode = true;
                     break;
                 }
@@ -224,64 +259,62 @@ impl KvCache {
             self.reencodes += 1;
         } else if needs_reencode {
             // empty page: seed params from the row itself
-            let (lo, hi): (Vec<f32>, Vec<f32>) = (
-                row.iter().map(|v| v.min(0.0)).collect(),
-                row.iter().map(|v| v.max(0.0)).collect(),
-            );
             let (vmin, vstep) = if is_k {
                 (&mut self.k_min[p..p + d], &mut self.k_step[p..p + d])
             } else {
                 (&mut self.v_min[p..p + d], &mut self.v_step[p..p + d])
             };
-            for c in 0..d {
-                vmin[c] = lo[c];
-                vstep[c] = ((hi[c] - lo[c]).max(1e-8)) / 255.0;
+            for ((mn, st), v) in vmin.iter_mut().zip(vstep.iter_mut()).zip(row) {
+                let lo = v.min(0.0);
+                let hi = v.max(0.0);
+                *mn = lo;
+                *st = (hi - lo).max(1e-8) / 255.0;
             }
         }
-        // encode the row with current params
+        // encode the row with current params (cache pages are 8-bit)
         let off = self.row_off(layer, slot, t);
         let (vmin, vstep, codes) = if is_k {
             (&self.k_min[p..p + d], &self.k_step[p..p + d], &mut self.k_q[off..off + d])
         } else {
             (&self.v_min[p..p + d], &self.v_step[p..p + d], &mut self.v_q[off..off + d])
         };
-        for c in 0..d {
-            let q = round_ties_even((row[c] - vmin[c]) / vstep[c]).clamp(0.0, 255.0);
-            codes[c] = q as u8;
-        }
+        simquant_encode_with_params_into(row, vmin, vstep, 255.0, codes);
     }
 
     /// Widen the page range to cover `row` and requantize existing codes.
+    /// Runs entirely on the cache's reused scratch buffers.
     fn reencode_page(&mut self, slot: usize, layer: usize, t: usize, row: &[f32], is_k: bool) {
         let p = self.param_off(layer, slot);
         let d = self.d;
         let base = self.row_off(layer, slot, 0);
-        // decode current page
-        let mut page = vec![0f32; t * d];
+        // decode current page into the reused scratch
+        let mut page = std::mem::take(&mut self.scratch);
+        page.clear();
+        page.resize(t * d, 0.0);
         {
             let (codes, vmin, vstep) = if is_k {
                 (&self.k_q[base..base + t * d], &self.k_min[p..p + d], &self.k_step[p..p + d])
             } else {
                 (&self.v_q[base..base + t * d], &self.v_min[p..p + d], &self.v_step[p..p + d])
             };
-            for r in 0..t {
-                for c in 0..d {
-                    page[r * d + c] = codes[r * d + c] as f32 * vstep[c] + vmin[c];
-                }
-            }
+            simquant_decode_into(codes, vmin, vstep, t, d, &mut page);
         }
         // widened per-channel range over page + new row
-        let mut lo = vec![f32::INFINITY; d];
-        let mut hi = vec![f32::NEG_INFINITY; d];
-        for r in 0..t {
-            for c in 0..d {
-                lo[c] = lo[c].min(page[r * d + c]);
-                hi[c] = hi[c].max(page[r * d + c]);
+        let mut lo = std::mem::take(&mut self.lo_scratch);
+        let mut hi = std::mem::take(&mut self.hi_scratch);
+        lo.clear();
+        lo.resize(d, f32::INFINITY);
+        hi.clear();
+        hi.resize(d, f32::NEG_INFINITY);
+        for prow in page.chunks_exact(d) {
+            for ((l, h), v) in lo.iter_mut().zip(hi.iter_mut()).zip(prow) {
+                *l = l.min(*v);
+                *h = h.max(*v);
             }
         }
-        for c in 0..d {
-            lo[c] = lo[c].min(row[c]);
-            hi[c] = hi[c].max(row[c]);
+        for ((l, h), v) in lo.iter_mut().zip(hi.iter_mut()).zip(row) {
+            *l = l.min(*v);
+            *h = h.max(*v);
         }
         // write params + re-encoded codes
         {
@@ -290,9 +323,11 @@ impl KvCache {
             } else {
                 (&mut self.v_min[p..p + d], &mut self.v_step[p..p + d])
             };
-            for c in 0..d {
-                vmin[c] = lo[c];
-                vstep[c] = (hi[c] - lo[c]).max(1e-8) / 255.0;
+            for ((mn, st), (l, h)) in
+                vmin.iter_mut().zip(vstep.iter_mut()).zip(lo.iter().zip(&hi))
+            {
+                *mn = *l;
+                *st = (h - l).max(1e-8) / 255.0;
             }
         }
         let (codes, vmin, vstep) = if is_k {
@@ -300,36 +335,44 @@ impl KvCache {
         } else {
             (&mut self.v_q[base..base + t * d], &self.v_min[p..p + d], &self.v_step[p..p + d])
         };
-        for r in 0..t {
-            for c in 0..d {
-                let q = round_ties_even((page[r * d + c] - vmin[c]) / vstep[c]).clamp(0.0, 255.0);
-                codes[r * d + c] = q as u8;
+        simquant_encode_with_params_into(&page, vmin, vstep, 255.0, codes);
+        self.scratch = page;
+        self.lo_scratch = lo;
+        self.hi_scratch = hi;
+    }
+
+    /// Dequantize one slot's K page into a reused buffer (cleared and
+    /// refilled) — the scratch-friendly variant of [`KvCache::decode_k`].
+    pub fn decode_k_into(&self, slot: usize, layer: usize, out: &mut Vec<f32>) {
+        let t = self.lens[slot];
+        let d = self.d;
+        out.clear();
+        out.resize(t * d, 0.0);
+        match self.mode {
+            Mode::F32 => {
+                let off = self.row_off(layer, slot, 0);
+                out.copy_from_slice(&self.k_f32[off..off + t * d]);
+            }
+            Mode::SimQuant => {
+                let off = self.row_off(layer, slot, 0);
+                let p = self.param_off(layer, slot);
+                simquant_decode_into(
+                    &self.k_q[off..off + t * d],
+                    &self.k_min[p..p + d],
+                    &self.k_step[p..p + d],
+                    t,
+                    d,
+                    out,
+                );
             }
         }
     }
 
     /// Dequantize one slot's K page (tests + debugging).
     pub fn decode_k(&self, slot: usize, layer: usize) -> Vec<f32> {
-        let t = self.lens[slot];
-        let d = self.d;
-        match self.mode {
-            Mode::F32 => {
-                let off = self.row_off(layer, slot, 0);
-                self.k_f32[off..off + t * d].to_vec()
-            }
-            Mode::SimQuant => {
-                let off = self.row_off(layer, slot, 0);
-                let p = self.param_off(layer, slot);
-                let mut out = vec![0f32; t * d];
-                for r in 0..t {
-                    for c in 0..d {
-                        out[r * d + c] = self.k_q[off + r * d + c] as f32 * self.k_step[p + c]
-                            + self.k_min[p + c];
-                    }
-                }
-                out
-            }
-        }
+        let mut out = Vec::new();
+        self.decode_k_into(slot, layer, &mut out);
+        out
     }
 
     /// Build the decode-graph cache input tensors.
@@ -339,16 +382,15 @@ impl KvCache {
         let (l, b, c, d) = (self.n_layers, self.batch, self.ctx, self.d);
         match self.mode {
             Mode::F32 => vec![
-                Tensor::from_f32(vec![l, b, c, d], self.k_f32.clone()),
-                Tensor::from_f32(vec![l, b, c, d], self.v_f32.clone()),
+                Tensor::from_f32_slice(vec![l, b, c, d], &self.k_f32),
+                Tensor::from_f32_slice(vec![l, b, c, d], &self.v_f32),
             ],
             Mode::SimQuant => {
-                let expand = |params: &[f32]| {
-                    Tensor::from_f32(vec![l, b, 1, d], params.to_vec())
-                };
+                let expand =
+                    |params: &[f32]| Tensor::from_f32_slice(vec![l, b, 1, d], params);
                 vec![
-                    Tensor::from_u8(vec![l, b, c, d], self.k_q.clone()),
-                    Tensor::from_u8(vec![l, b, c, d], self.v_q.clone()),
+                    Tensor::from_u8_slice(vec![l, b, c, d], &self.k_q),
+                    Tensor::from_u8_slice(vec![l, b, c, d], &self.v_q),
                     expand(&self.k_min),
                     expand(&self.k_step),
                     expand(&self.v_min),
@@ -369,7 +411,7 @@ impl KvCache {
     /// the cache's own buffers — one copy (into the literal) instead of
     /// the two `graph_inputs()` pays (staging Tensor + literal). This is
     /// the decode hot path (EXPERIMENTS.md §Perf).
-    pub fn input_literals(&self) -> Result<Vec<xla::Literal>> {
+    pub fn input_literals(&self) -> Result<Vec<Literal>> {
         let (l, b, c, d) = (self.n_layers, self.batch, self.ctx, self.d);
         let cache_shape = [l, b, c, d];
         let param_shape = [l, b, 1, d];
@@ -422,6 +464,21 @@ mod tests {
         for (a, b) in k.iter().zip(&dk) {
             assert!((a - b).abs() < 0.05, "{a} vs {b}");
         }
+    }
+
+    #[test]
+    fn prefill_encode_matches_reference_kernel() {
+        // the in-place page encode must be bit-identical to the pinned
+        // scalar reference (same codes, same params)
+        let (t, d) = (6, 8);
+        let k = rows(t, d, 9, 1.5);
+        let mut kv = KvCache::new_simquant(1, 1, 16, d);
+        kv.ingest_prefill(0, 0, &k, &k, t);
+        let (rq, rmin, rstep) = crate::quant::reference::simquant_encode(&k, t, d, 8);
+        let ins = kv.graph_inputs();
+        assert_eq!(&ins[0].u8_view().unwrap()[..t * d], &rq[..]);
+        assert_eq!(&ins[2].f32_view().unwrap()[..d], &rmin[..]);
+        assert_eq!(&ins[3].f32_view().unwrap()[..d], &rstep[..]);
     }
 
     #[test]

@@ -12,9 +12,8 @@ use anyhow::{bail, Result};
 
 use crate::corpus::PAD;
 use crate::metrics::{Breakdown, Stage};
-use crate::runtime::{i32_bytes, literal_from_raw};
 use crate::quant::Variant;
-use crate::runtime::ModelHandle;
+use crate::runtime::{i32_bytes, literal_from_raw, Literal, ModelHandle};
 use crate::tensor::Tensor;
 
 use super::batcher::Batch;
@@ -85,9 +84,10 @@ impl Worker {
             let handle = &self.handle;
             bd.span(Stage::Gemm, || handle.prefill(&[tok_tensor]))?
         };
-        let logits = outs[0].as_f32()?; // [B, CTX, V]
-        let k_cache = outs[1].as_f32()?; // [L, B, CTX, D]
-        let v_cache = outs[2].as_f32()?;
+        // zero-copy views into the prefill outputs (no 4MB clones per batch)
+        let logits = outs[0].f32_view()?; // [B, CTX, V]
+        let k_cache = outs[1].f32_view()?; // [L, B, CTX, D]
+        let v_cache = outs[2].f32_view()?;
 
         let mut kv = self.fresh_kv();
         self.breakdown.span(Stage::Quant, || {
@@ -136,7 +136,7 @@ impl Worker {
             }
             // build literals straight from the KV buffers (input order:
             // token, pos, k_cache, v_cache, [params]) — no staging copies
-            let runtime_lits = self.breakdown.span(Stage::Load, || -> Result<Vec<xla::Literal>> {
+            let runtime_lits = self.breakdown.span(Stage::Load, || -> Result<Vec<Literal>> {
                 let mut lits = vec![
                     literal_from_raw(crate::tensor::DType::I32, &[b], i32_bytes(&token))?,
                     literal_from_raw(crate::tensor::DType::I32, &[b], i32_bytes(&pos))?,
@@ -150,9 +150,10 @@ impl Worker {
                 bd.span(Stage::Gemm, || handle.decode_literals(&runtime_lits))?
             };
             self.steps += 1;
-            let step_logits = outs[0].as_f32()?; // [B, V]
-            let k_new = outs[1].as_f32()?; // [L, B, D]
-            let v_new = outs[2].as_f32()?;
+            // zero-copy views into the decode-step outputs
+            let step_logits = outs[0].f32_view()?; // [B, V]
+            let k_new = outs[1].f32_view()?; // [L, B, D]
+            let v_new = outs[2].f32_view()?;
 
             self.breakdown.span(Stage::Quant, || {
                 for slot in 0..n_active {

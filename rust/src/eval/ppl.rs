@@ -55,7 +55,7 @@ pub fn perplexity(
             tokens[slot * ctx..(slot + 1) * ctx].copy_from_slice(&w[..ctx]);
         }
         let outs = handle.prefill(&[Tensor::from_i32(vec![batch, ctx], tokens)])?;
-        let logits = outs[0].as_f32()?; // [B, CTX, V]
+        let logits = outs[0].f32_view()?; // [B, CTX, V] (zero-copy)
         for (slot, w) in group.iter().enumerate() {
             for t in 0..ctx - 1 {
                 let target = w[t + 1];

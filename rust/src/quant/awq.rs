@@ -3,9 +3,13 @@
 //! Mirrors `python/compile/quantizers.py::awq_quantize`: grid-search the
 //! scaling exponent alpha over per-channel factors s_j = meanabs_j^alpha,
 //! quantize W*s per output channel, keep the alpha minimizing the
-//! diagonal-covariance-weighted reconstruction error.
+//! diagonal-covariance-weighted reconstruction error. The scaled weight,
+//! code, and scale buffers are reused across the whole alpha grid via the
+//! `_into` kernels (one allocation set instead of one per alpha).
 
-use super::schemes::symmetric_quantize_channel;
+use anyhow::Result;
+
+use super::kernels::{scale_rows_into, symmetric_quantize_channel_into};
 
 #[derive(Debug, Clone)]
 pub struct AwqResult {
@@ -31,20 +35,20 @@ pub fn awq_quantize(
     act_meanabs: &[f32],
     act_ex2: &[f32],
     bits: u32,
-) -> AwqResult {
-    let mut best: Option<AwqResult> = None;
+) -> Result<AwqResult> {
+    let mut ws = vec![0f32; k * n];
+    let mut q = vec![0i8; k * n];
+    let mut delta = vec![0f32; n];
+    // track only (alpha, err, s) during the grid; re-encode the winner
+    // once at the end instead of cloning the k*n codes per improvement
+    let mut best: Option<(f32, f64, Vec<f32>)> = None;
     for &alpha in &ALPHAS {
         let s: Vec<f32> = act_meanabs
             .iter()
             .map(|m| m.max(1e-8).powf(alpha).max(1e-8))
             .collect();
-        let mut ws = vec![0f32; k * n];
-        for row in 0..k {
-            for col in 0..n {
-                ws[row * n + col] = w[row * n + col] * s[row];
-            }
-        }
-        let (q, delta) = symmetric_quantize_channel(&ws, k, n, bits);
+        scale_rows_into(w, &s, n, &mut ws);
+        symmetric_quantize_channel_into(&ws, k, n, bits, &mut q, &mut delta)?;
         // err = sum_jk (w_hat - w)^2 * E[x_j^2]
         let mut err = 0f64;
         for row in 0..k {
@@ -54,11 +58,21 @@ pub fn awq_quantize(
                 err += e * e * act_ex2[row] as f64;
             }
         }
-        if best.as_ref().map_or(true, |b| err < b.err) {
-            best = Some(AwqResult { q, delta, s, alpha, err });
+        let improved = match &best {
+            None => true,
+            Some((_, best_err, _)) => err < *best_err,
+        };
+        if improved {
+            best = Some((alpha, err, s));
         }
     }
-    best.unwrap()
+    let (alpha, err, s) = best.expect("non-empty alpha grid");
+    if alpha != *ALPHAS.last().expect("non-empty alpha grid") {
+        // q/delta currently hold the last alpha's encode; redo the winner
+        scale_rows_into(w, &s, n, &mut ws);
+        symmetric_quantize_channel_into(&ws, k, n, bits, &mut q, &mut delta)?;
+    }
+    Ok(AwqResult { q, delta, s, alpha, err })
 }
 
 /// Reconstruct the effective f32 weight AWQ encodes.
@@ -76,6 +90,7 @@ pub fn awq_dequant(r: &AwqResult, k: usize, n: usize) -> Vec<f32> {
 mod tests {
     use super::*;
     use crate::corpus::XorShift64Star;
+    use crate::quant::schemes::symmetric_quantize_channel;
 
     fn setup(k: usize, n: usize, seed: u64) -> (Vec<f32>, Vec<f32>, Vec<f32>) {
         let mut r = XorShift64Star::new(seed);
@@ -91,9 +106,9 @@ mod tests {
     #[test]
     fn beats_plain_symmetric_on_outlier_channels() {
         let (w, meanabs, ex2) = setup(16, 8, 1);
-        let r = awq_quantize(&w, 16, 8, &meanabs, &ex2, 4); // 4-bit stresses it
+        let r = awq_quantize(&w, 16, 8, &meanabs, &ex2, 4).unwrap(); // 4-bit stresses it
         // plain symmetric (alpha = 0)
-        let (q0, d0) = symmetric_quantize_channel(&w, 16, 8, 4);
+        let (q0, d0) = symmetric_quantize_channel(&w, 16, 8, 4).unwrap();
         let mut err0 = 0f64;
         for row in 0..16 {
             for col in 0..8 {
@@ -108,7 +123,7 @@ mod tests {
     #[test]
     fn dequant_close_to_original() {
         let (w, meanabs, ex2) = setup(32, 16, 2);
-        let r = awq_quantize(&w, 32, 16, &meanabs, &ex2, 8);
+        let r = awq_quantize(&w, 32, 16, &meanabs, &ex2, 8).unwrap();
         let dw = awq_dequant(&r, 32, 16);
         let max_err = w
             .iter()
@@ -123,8 +138,14 @@ mod tests {
         // with uniform activation stats, all alphas are near-equivalent;
         // just assert it runs and yields finite error
         let (w, _, _) = setup(8, 8, 3);
-        let r = awq_quantize(&w, 8, 8, &vec![1.0; 8], &vec![1.0; 8], 8);
+        let r = awq_quantize(&w, 8, 8, &[1.0; 8], &[1.0; 8], 8).unwrap();
         assert!(r.err.is_finite());
         assert!(ALPHAS.contains(&r.alpha));
+    }
+
+    #[test]
+    fn invalid_bits_rejected() {
+        let (w, meanabs, ex2) = setup(4, 4, 4);
+        assert!(awq_quantize(&w, 4, 4, &meanabs, &ex2, 1).is_err());
     }
 }

@@ -101,15 +101,25 @@ impl EmaScaleTracker {
 
     /// Alg. 1 AsyncQuant: observe + quantize in one call.
     pub fn quantize(&mut self, x: &[f32]) -> (Vec<i8>, EmaState) {
+        let mut q = Vec::with_capacity(x.len());
+        let st = self.quantize_into(x, &mut q);
+        (q, st)
+    }
+
+    /// Observe + quantize into a caller-owned buffer (cleared and
+    /// refilled) — the buffer-reuse variant of `quantize`, matching the
+    /// `_into` contract of `quant::kernels`. The serving decode loop only
+    /// observes (the lowered graphs quantize on-device); this is for
+    /// online callers that consume codes host-side, e.g. the planned
+    /// quantized collectives (see ROADMAP "Parallel collective quantize").
+    pub fn quantize_into(&mut self, x: &[f32], out: &mut Vec<i8>) -> EmaState {
         let st = self.observe(x);
         let scale = (st.delta / 127.0).max(1e-12);
-        let q = x
-            .iter()
-            .map(|v| {
-                (round_ties_even(v / scale) + st.zero_point).clamp(-128.0, 127.0) as i8
-            })
-            .collect();
-        (q, st)
+        out.clear();
+        out.extend(x.iter().map(|v| {
+            (round_ties_even(v / scale) + st.zero_point).clamp(-128.0, 127.0) as i8
+        }));
+        st
     }
 }
 
@@ -166,6 +176,18 @@ mod tests {
             let back = (*c as f32 - st.zero_point) * scale;
             assert!((back - v).abs() <= scale, "{v} -> {back}");
         }
+    }
+
+    #[test]
+    fn quantize_into_matches_quantize() {
+        let x = vec![0.5, -0.25, 0.125, 0.0];
+        let mut a = EmaScaleTracker::new(0.9, 1e-6);
+        let mut b = a.clone();
+        let (q, st) = a.quantize(&x);
+        let mut buf = vec![7i8; 1]; // stale contents must be cleared
+        let st2 = b.quantize_into(&x, &mut buf);
+        assert_eq!(q, buf);
+        assert_eq!(st, st2);
     }
 
     #[test]

@@ -7,6 +7,9 @@
 //! Hessian mass, preserving the error-feedback structure that separates
 //! GPTQ from round-to-nearest.
 
+use anyhow::Result;
+
+use super::kernels::validate_bits;
 use super::{qrange, round_ties_even};
 
 #[derive(Debug, Clone)]
@@ -28,7 +31,8 @@ pub fn gptq_quantize(
     h_diag: &[f32],
     bits: u32,
     permute: bool,
-) -> GptqResult {
+) -> Result<GptqResult> {
+    validate_bits(bits)?;
     let (qmin, qmax) = qrange(bits);
     let h: Vec<f32> = h_diag.iter().map(|v| v.max(1e-8)).collect();
     let mut order: Vec<usize> = (0..k).collect();
@@ -60,7 +64,7 @@ pub fn gptq_quantize(
             err_carry[col] -= err_carry[col] * share;
         }
     }
-    GptqResult { q, delta, order }
+    Ok(GptqResult { q, delta, order })
 }
 
 pub fn gptq_dequant(r: &GptqResult, k: usize, n: usize) -> Vec<f32> {
@@ -95,7 +99,7 @@ mod tests {
         let (k, n) = (64, 16);
         let w: Vec<f32> = (0..k * n).map(|_| r.next_normal() as f32).collect();
         let h: Vec<f32> = (0..k).map(|_| (r.next_f64() * 10.0 + 0.1) as f32).collect();
-        let g = gptq_quantize(&w, k, n, &h, 3, true);
+        let g = gptq_quantize(&w, k, n, &h, 3, true).unwrap();
         let dw = gptq_dequant(&g, k, n);
         // round-to-nearest with the same scales
         let mut rtn = vec![0f32; k * n];
@@ -117,15 +121,20 @@ mod tests {
     fn order_is_by_decreasing_hessian() {
         let w = vec![0f32; 4 * 2];
         let h = vec![1.0, 5.0, 3.0, 0.5];
-        let g = gptq_quantize(&w, 4, 2, &h, 8, true);
+        let g = gptq_quantize(&w, 4, 2, &h, 8, true).unwrap();
         assert_eq!(g.order, vec![1, 2, 0, 3]);
     }
 
     #[test]
     fn no_permute_keeps_natural_order() {
         let w = vec![0f32; 3 * 2];
-        let g = gptq_quantize(&w, 3, 2, &[1.0, 2.0, 3.0], 8, false);
+        let g = gptq_quantize(&w, 3, 2, &[1.0, 2.0, 3.0], 8, false).unwrap();
         assert_eq!(g.order, vec![0, 1, 2]);
+    }
+
+    #[test]
+    fn invalid_bits_rejected() {
+        assert!(gptq_quantize(&[0.0; 4], 2, 2, &[1.0, 1.0], 1, true).is_err());
     }
 
     #[test]
@@ -134,7 +143,7 @@ mod tests {
         let (k, n) = (32, 8);
         let w: Vec<f32> = (0..k * n).map(|_| r.next_normal() as f32 * 0.05).collect();
         let h = vec![1.0f32; k];
-        let g = gptq_quantize(&w, k, n, &h, 8, true);
+        let g = gptq_quantize(&w, k, n, &h, 8, true).unwrap();
         let dw = gptq_dequant(&g, k, n);
         let max_err = w
             .iter()

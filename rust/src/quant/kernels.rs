@@ -1,0 +1,701 @@
+//! Fused, allocation-free, thread-parallel quantization kernels — the
+//! `_into` layer every hot-path caller routes through.
+//!
+//! Contracts (see also the `quant` module docs):
+//!
+//! * **Buffer reuse** — callers own the output buffers; kernels never
+//!   allocate O(K*N). The tuple-returning wrappers in `schemes` are thin
+//!   allocate-then-`_into` conveniences kept for tables/tests.
+//! * **Bit-exactness** — per-element math is byte-for-byte the scalar
+//!   reference (`quant::reference`): half-to-even rounding and a division
+//!   (never a reciprocal multiply) per element. Parallel column
+//!   reductions compute per-row-range partials and combine them in range
+//!   order on the calling thread; f32 `min`/`max` are associative, so the
+//!   result is identical for any thread count. `tests/kernel_equivalence.rs`
+//!   pins all of this property-style.
+//! * **Traversal** — all passes walk the matrix row-major in
+//!   bounds-check-free `chunks_exact` row slices; the per-(group, column)
+//!   amax of ZeroQuant is fused with its encode per row-group so a group
+//!   is read once while cache-hot.
+//!
+//! Thread fan-out uses `util::pool` (scoped `std::thread`, no pool
+//! dependency); inputs below ~32K elements stay single-threaded.
+
+use anyhow::{bail, Result};
+
+use crate::util::pool;
+
+use super::{qrange, round_ties_even};
+
+/// Shared epsilon floor for scales (matches `python/compile/kernels/ref.py`).
+pub(crate) const EPS: f32 = 1e-8;
+
+/// Below this many elements the scoped-thread fan-out costs more than it
+/// saves; kernels fall back to the single-chunk path.
+const PAR_MIN_ELEMS: usize = 32 * 1024;
+
+/// Validate a quantization bitwidth at the public entry points.
+/// `bits == 1` would make `qmax == 0` and every scale `amax / 0 = inf`;
+/// anything above 8 does not fit the i8/u8 code buffers.
+pub fn validate_bits(bits: u32) -> Result<()> {
+    if !(2..=8).contains(&bits) {
+        bail!(
+            "unsupported bitwidth {bits}: must be in 2..=8 \
+             (bits=1 makes qmax 0 and every scale divide to inf)"
+        );
+    }
+    Ok(())
+}
+
+/// SimQuant's unsigned min/max scheme is well-defined down to 1 bit
+/// (levels = 2^bits - 1 >= 1, finite step), unlike the signed symmetric
+/// schemes; only 0 and anything above 8 (codes no longer fit u8) are
+/// invalid.
+pub fn validate_simquant_bits(bits: u32) -> Result<()> {
+    if !(1..=8).contains(&bits) {
+        bail!("unsupported SimQuant bitwidth {bits}: must be in 1..=8 (u8 codes)");
+    }
+    Ok(())
+}
+
+fn check_len(what: &str, got: usize, want: usize) -> Result<()> {
+    if got != want {
+        bail!("{what} buffer holds {got} elements, kernel needs {want}");
+    }
+    Ok(())
+}
+
+fn row_chunks(rows: usize, width: usize, threads: usize) -> Vec<std::ops::Range<usize>> {
+    let min_rows = (PAR_MIN_ELEMS / width.max(1)).max(1);
+    pool::chunk_ranges(rows, threads, min_rows)
+}
+
+// ---------------------------------------------------------------------------
+// Symmetric per-output-channel (axis=1 of [K, N])
+// ---------------------------------------------------------------------------
+
+/// Per-column symmetric quantization of `w` [K, N] into caller buffers:
+/// `q` [K, N] codes, `delta` [N] scales. Parallel over row ranges with
+/// `threads` workers; bit-identical to `reference::symmetric_quantize_channel`.
+pub fn symmetric_quantize_channel_into_threads(
+    w: &[f32],
+    k: usize,
+    n: usize,
+    bits: u32,
+    q: &mut [i8],
+    delta: &mut [f32],
+    threads: usize,
+) -> Result<()> {
+    validate_bits(bits)?;
+    check_len("w", w.len(), k * n)?;
+    check_len("q", q.len(), k * n)?;
+    check_len("delta", delta.len(), n)?;
+    if n == 0 {
+        return Ok(()); // zero-width: nothing to write (reference parity)
+    }
+    let (qmin, qmax) = qrange(bits);
+    let ranges = row_chunks(k, n, threads);
+
+    // pass 1: per-column absmax, row-major, accumulated into `delta`
+    if ranges.len() <= 1 {
+        delta.fill(0.0);
+        for wrow in w.chunks_exact(n) {
+            for (a, v) in delta.iter_mut().zip(wrow) {
+                *a = a.max(v.abs());
+            }
+        }
+    } else {
+        let mut partials = vec![0f32; ranges.len() * n];
+        std::thread::scope(|s| {
+            for (r, part) in ranges.iter().zip(partials.chunks_exact_mut(n)) {
+                let wb = &w[r.start * n..r.end * n];
+                s.spawn(move || {
+                    for wrow in wb.chunks_exact(n) {
+                        for (a, v) in part.iter_mut().zip(wrow) {
+                            *a = a.max(v.abs());
+                        }
+                    }
+                });
+            }
+        });
+        // combine in range order on the calling thread (deterministic)
+        delta.fill(0.0);
+        for part in partials.chunks_exact(n) {
+            for (a, p) in delta.iter_mut().zip(part) {
+                *a = a.max(*p);
+            }
+        }
+    }
+    for a in delta.iter_mut() {
+        *a = a.max(EPS) / qmax as f32;
+    }
+
+    // pass 2: encode, row-parallel; division kept for jnp bit-exactness
+    let scales: &[f32] = delta;
+    let (lo, hi) = (qmin as f32, qmax as f32);
+    let encode = |wb: &[f32], qb: &mut [i8]| {
+        for (wrow, qrow) in wb.chunks_exact(n).zip(qb.chunks_exact_mut(n)) {
+            for ((wv, dv), qv) in wrow.iter().zip(scales).zip(qrow.iter_mut()) {
+                *qv = round_ties_even(wv / dv).clamp(lo, hi) as i8;
+            }
+        }
+    };
+    if ranges.len() <= 1 {
+        encode(w, q);
+    } else {
+        let qblocks = pool::split_rows(q, &ranges, n);
+        std::thread::scope(|s| {
+            for (r, qb) in ranges.iter().zip(qblocks) {
+                let wb = &w[r.start * n..r.end * n];
+                let encode = &encode;
+                s.spawn(move || encode(wb, qb));
+            }
+        });
+    }
+    Ok(())
+}
+
+/// [`symmetric_quantize_channel_into_threads`] at the process thread count.
+pub fn symmetric_quantize_channel_into(
+    w: &[f32],
+    k: usize,
+    n: usize,
+    bits: u32,
+    q: &mut [i8],
+    delta: &mut [f32],
+) -> Result<()> {
+    symmetric_quantize_channel_into_threads(w, k, n, bits, q, delta, pool::max_threads())
+}
+
+// ---------------------------------------------------------------------------
+// ZeroQuant group-wise weights
+// ---------------------------------------------------------------------------
+
+/// Group-wise symmetric quantization of `w` [K, N] into caller buffers:
+/// `q` [K, N], `delta` [K/group, N]. The per-(group, column) amax pass is
+/// row-major and fused with the encode pass per group (one cache-hot read
+/// per group); groups are independent, so the fan-out splits group ranges.
+#[allow(clippy::too_many_arguments)]
+pub fn zeroquant_group_quantize_into_threads(
+    w: &[f32],
+    k: usize,
+    n: usize,
+    group: usize,
+    bits: u32,
+    q: &mut [i8],
+    delta: &mut [f32],
+    threads: usize,
+) -> Result<()> {
+    validate_bits(bits)?;
+    if group == 0 || k % group != 0 {
+        bail!("K={k} not divisible by group={group}");
+    }
+    let groups = k / group;
+    check_len("w", w.len(), k * n)?;
+    check_len("q", q.len(), k * n)?;
+    check_len("delta", delta.len(), groups * n)?;
+    if n == 0 {
+        return Ok(()); // zero-width: nothing to write (reference parity)
+    }
+    let (qmin, qmax) = qrange(bits);
+    let (lo, hi) = (qmin as f32, qmax as f32);
+
+    let kernel = |wb: &[f32], qb: &mut [i8], db: &mut [f32]| {
+        for ((wg, qg), dg) in wb
+            .chunks_exact(group * n)
+            .zip(qb.chunks_exact_mut(group * n))
+            .zip(db.chunks_exact_mut(n))
+        {
+            dg.fill(0.0);
+            for wrow in wg.chunks_exact(n) {
+                for (a, v) in dg.iter_mut().zip(wrow) {
+                    *a = a.max(v.abs());
+                }
+            }
+            for a in dg.iter_mut() {
+                *a = a.max(EPS) / qmax as f32;
+            }
+            let dgr: &[f32] = dg;
+            for (wrow, qrow) in wg.chunks_exact(n).zip(qg.chunks_exact_mut(n)) {
+                for ((wv, dv), qv) in wrow.iter().zip(dgr).zip(qrow.iter_mut()) {
+                    *qv = round_ties_even(wv / dv).clamp(lo, hi) as i8;
+                }
+            }
+        }
+    };
+
+    let ranges = row_chunks(groups, group * n, threads);
+    if ranges.len() <= 1 {
+        kernel(w, q, delta);
+    } else {
+        let qblocks = pool::split_rows(q, &ranges, group * n);
+        let dblocks = pool::split_rows(delta, &ranges, n);
+        std::thread::scope(|s| {
+            for ((r, qb), db) in ranges.iter().zip(qblocks).zip(dblocks) {
+                let wb = &w[r.start * group * n..r.end * group * n];
+                let kernel = &kernel;
+                s.spawn(move || kernel(wb, qb, db));
+            }
+        });
+    }
+    Ok(())
+}
+
+/// [`zeroquant_group_quantize_into_threads`] at the process thread count.
+pub fn zeroquant_group_quantize_into(
+    w: &[f32],
+    k: usize,
+    n: usize,
+    group: usize,
+    bits: u32,
+    q: &mut [i8],
+    delta: &mut [f32],
+) -> Result<()> {
+    zeroquant_group_quantize_into_threads(w, k, n, group, bits, q, delta, pool::max_threads())
+}
+
+// ---------------------------------------------------------------------------
+// Token-wise (row-wise) activation quantization
+// ---------------------------------------------------------------------------
+
+/// Token-wise symmetric quantization of `x` [T, D] into caller buffers:
+/// `q` [T, D], `delta` [T]. Scale and encode passes are fused per row
+/// (one read while the row is cache-hot); rows are independent, so the
+/// fan-out splits row ranges.
+pub fn token_quantize_into_threads(
+    x: &[f32],
+    t: usize,
+    d: usize,
+    bits: u32,
+    q: &mut [i8],
+    delta: &mut [f32],
+    threads: usize,
+) -> Result<()> {
+    validate_bits(bits)?;
+    check_len("x", x.len(), t * d)?;
+    check_len("q", q.len(), t * d)?;
+    check_len("delta", delta.len(), t)?;
+    let (qmin, qmax) = qrange(bits);
+    if d == 0 {
+        // zero-width rows: the reference still emits the EPS-floor scale
+        delta.fill(EPS / qmax as f32);
+        return Ok(());
+    }
+    let (lo, hi) = (qmin as f32, qmax as f32);
+
+    let kernel = |xb: &[f32], qb: &mut [i8], db: &mut [f32]| {
+        for ((srow, qrow), dl_out) in xb
+            .chunks_exact(d)
+            .zip(qb.chunks_exact_mut(d))
+            .zip(db.iter_mut())
+        {
+            let amax = srow.iter().fold(0f32, |a, v| a.max(v.abs())).max(EPS);
+            let dl = amax / qmax as f32;
+            *dl_out = dl;
+            for (sv, qv) in srow.iter().zip(qrow.iter_mut()) {
+                *qv = round_ties_even(sv / dl).clamp(lo, hi) as i8;
+            }
+        }
+    };
+
+    let ranges = row_chunks(t, d, threads);
+    if ranges.len() <= 1 {
+        kernel(x, q, delta);
+    } else {
+        let qblocks = pool::split_rows(q, &ranges, d);
+        let dblocks = pool::split_rows(delta, &ranges, 1);
+        std::thread::scope(|s| {
+            for ((r, qb), db) in ranges.iter().zip(qblocks).zip(dblocks) {
+                let xb = &x[r.start * d..r.end * d];
+                let kernel = &kernel;
+                s.spawn(move || kernel(xb, qb, db));
+            }
+        });
+    }
+    Ok(())
+}
+
+/// [`token_quantize_into_threads`] at the process thread count.
+pub fn token_quantize_into(
+    x: &[f32],
+    t: usize,
+    d: usize,
+    bits: u32,
+    q: &mut [i8],
+    delta: &mut [f32],
+) -> Result<()> {
+    token_quantize_into_threads(x, t, d, bits, q, delta, pool::max_threads())
+}
+
+// ---------------------------------------------------------------------------
+// SimQuant per-channel min/max affine (KV cache)
+// ---------------------------------------------------------------------------
+
+/// Per-channel min/max encode of `x` [T, D] into caller buffers: `q`
+/// [T, D] unsigned codes, `vmin` [D], `step` [D]. `step` doubles as the
+/// vmax accumulator during the reduction pass, so the single-chunk path
+/// allocates nothing. `t == 0` yields the reference's zeroed params.
+#[allow(clippy::too_many_arguments)]
+pub fn simquant_encode_into_threads(
+    x: &[f32],
+    t: usize,
+    d: usize,
+    bits: u32,
+    q: &mut [u8],
+    vmin: &mut [f32],
+    step: &mut [f32],
+    threads: usize,
+) -> Result<()> {
+    validate_simquant_bits(bits)?;
+    check_len("x", x.len(), t * d)?;
+    check_len("q", q.len(), t * d)?;
+    check_len("vmin", vmin.len(), d)?;
+    check_len("step", step.len(), d)?;
+    if d == 0 {
+        return Ok(()); // zero-width: nothing to write (reference parity)
+    }
+    let levels = ((1u32 << bits) - 1) as f32;
+    let ranges = row_chunks(t, d, threads);
+
+    // pass 1: per-column min into `vmin`, max into `step`
+    if t == 0 {
+        vmin.fill(0.0);
+        step.fill(0.0);
+    } else if ranges.len() <= 1 {
+        vmin.fill(f32::INFINITY);
+        step.fill(f32::NEG_INFINITY);
+        for xrow in x.chunks_exact(d) {
+            for ((mn, mx), v) in vmin.iter_mut().zip(step.iter_mut()).zip(xrow) {
+                *mn = mn.min(*v);
+                *mx = mx.max(*v);
+            }
+        }
+    } else {
+        // per-range partials: [min_0 | max_0 | min_1 | max_1 | ...]
+        let mut partials = vec![0f32; ranges.len() * 2 * d];
+        std::thread::scope(|s| {
+            for (r, part) in ranges.iter().zip(partials.chunks_exact_mut(2 * d)) {
+                let xb = &x[r.start * d..r.end * d];
+                s.spawn(move || {
+                    let (mn, mx) = part.split_at_mut(d);
+                    mn.fill(f32::INFINITY);
+                    mx.fill(f32::NEG_INFINITY);
+                    for xrow in xb.chunks_exact(d) {
+                        for ((pmn, pmx), v) in mn.iter_mut().zip(mx.iter_mut()).zip(xrow) {
+                            *pmn = pmn.min(*v);
+                            *pmx = pmx.max(*v);
+                        }
+                    }
+                });
+            }
+        });
+        vmin.fill(f32::INFINITY);
+        step.fill(f32::NEG_INFINITY);
+        for part in partials.chunks_exact(2 * d) {
+            let (mn, mx) = part.split_at(d);
+            for ((gmn, gmx), (pmn, pmx)) in
+                vmin.iter_mut().zip(step.iter_mut()).zip(mn.iter().zip(mx))
+            {
+                *gmn = gmn.min(*pmn);
+                *gmx = gmx.max(*pmx);
+            }
+        }
+    }
+    // finalize: step currently holds vmax
+    for (st, mn) in step.iter_mut().zip(vmin.iter()) {
+        *st = (*st - mn).max(EPS) / levels;
+    }
+
+    // pass 2: encode, row-parallel
+    let vmin_ro: &[f32] = vmin;
+    let step_ro: &[f32] = step;
+    let encode = |xb: &[f32], qb: &mut [u8]| {
+        simquant_encode_with_params_into(xb, vmin_ro, step_ro, levels, qb)
+    };
+    if ranges.len() <= 1 {
+        encode(x, q);
+    } else {
+        let qblocks = pool::split_rows(q, &ranges, d);
+        std::thread::scope(|s| {
+            for (r, qb) in ranges.iter().zip(qblocks) {
+                let xb = &x[r.start * d..r.end * d];
+                let encode = &encode;
+                s.spawn(move || encode(xb, qb));
+            }
+        });
+    }
+    Ok(())
+}
+
+/// [`simquant_encode_into_threads`] at the process thread count.
+pub fn simquant_encode_into(
+    x: &[f32],
+    t: usize,
+    d: usize,
+    bits: u32,
+    q: &mut [u8],
+    vmin: &mut [f32],
+    step: &mut [f32],
+) -> Result<()> {
+    simquant_encode_into_threads(x, t, d, bits, q, vmin, step, pool::max_threads())
+}
+
+/// Encode rows of `x` with *given* per-channel params — the KV-cache
+/// append / page re-encode path, and pass 2 of `simquant_encode_into`:
+/// `out = round((x - vmin) / step)` clamped to `[0, levels]`. Panics on
+/// mismatched buffer lengths (the caller misuse contract for the
+/// infallible helpers; the fallible `_into` kernels return errors).
+pub fn simquant_encode_with_params_into(
+    x: &[f32],
+    vmin: &[f32],
+    step: &[f32],
+    levels: f32,
+    out: &mut [u8],
+) {
+    let d = vmin.len();
+    assert_eq!(step.len(), d, "step length != vmin length");
+    assert_eq!(x.len(), out.len(), "x/out length mismatch");
+    if d == 0 {
+        return;
+    }
+    assert_eq!(x.len() % d, 0, "x length not a multiple of d");
+    for (xrow, qrow) in x.chunks_exact(d).zip(out.chunks_exact_mut(d)) {
+        for (((xv, mn), st), qv) in xrow.iter().zip(vmin).zip(step).zip(qrow.iter_mut()) {
+            *qv = round_ties_even((xv - mn) / st).clamp(0.0, levels) as u8;
+        }
+    }
+}
+
+/// Per-channel affine decode of `q` [T, D] into `out` [T, D] — the
+/// buffer-reuse counterpart of `simquant_decode` (KV page re-encode and
+/// `KvCache::decode_k_into` route through this). Panics on mismatched
+/// buffer lengths.
+pub fn simquant_decode_into(
+    q: &[u8],
+    vmin: &[f32],
+    step: &[f32],
+    t: usize,
+    d: usize,
+    out: &mut [f32],
+) {
+    assert_eq!(q.len(), t * d, "codes length != t*d");
+    assert_eq!(out.len(), t * d, "out length != t*d");
+    assert_eq!(vmin.len(), d, "vmin length != d");
+    assert_eq!(step.len(), d, "step length != d");
+    if d == 0 {
+        return;
+    }
+    for (qrow, orow) in q.chunks_exact(d).zip(out.chunks_exact_mut(d)) {
+        for (((qv, st), mn), ov) in qrow.iter().zip(step).zip(vmin).zip(orow.iter_mut()) {
+            *ov = *qv as f32 * st + mn;
+        }
+    }
+}
+
+/// `out[r, :] = src[r, :] * scales[r]` — the per-row migration step
+/// SmoothQuant and AWQ share before their symmetric encode; lives here so
+/// the Python-parity math has exactly one Rust site. Panics on mismatched
+/// buffer lengths.
+pub fn scale_rows_into(src: &[f32], scales: &[f32], n: usize, out: &mut [f32]) {
+    assert_eq!(src.len(), out.len(), "src/out length mismatch");
+    assert_eq!(src.len(), scales.len() * n, "scales length != rows");
+    if n == 0 {
+        return;
+    }
+    for ((orow, srow), sv) in out
+        .chunks_exact_mut(n)
+        .zip(src.chunks_exact(n))
+        .zip(scales)
+    {
+        for (o, v) in orow.iter_mut().zip(srow) {
+            *o = v * sv;
+        }
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Pinned scalar reference
+// ---------------------------------------------------------------------------
+
+/// The original single-threaded, allocating implementations, kept
+/// verbatim as the bit-exactness oracle for `tests/kernel_equivalence.rs`
+/// (and as the plainest statement of the Python-parity semantics). Do not
+/// "optimize" these: their value is that they never change.
+pub mod reference {
+    use super::{qrange, round_ties_even, EPS};
+
+    /// See `quant::symmetric_quantize_channel`.
+    pub fn symmetric_quantize_channel(
+        w: &[f32],
+        k: usize,
+        n: usize,
+        bits: u32,
+    ) -> (Vec<i8>, Vec<f32>) {
+        let (qmin, qmax) = qrange(bits);
+        let mut amax = vec![0f32; n];
+        for row in 0..k {
+            for col in 0..n {
+                amax[col] = amax[col].max(w[row * n + col].abs());
+            }
+        }
+        let delta: Vec<f32> = amax.iter().map(|a| a.max(EPS) / qmax as f32).collect();
+        let mut q = vec![0i8; k * n];
+        for row in 0..k {
+            for col in 0..n {
+                q[row * n + col] = round_ties_even(w[row * n + col] / delta[col])
+                    .clamp(qmin as f32, qmax as f32) as i8;
+            }
+        }
+        (q, delta)
+    }
+
+    /// See `quant::zeroquant_group_quantize`.
+    pub fn zeroquant_group_quantize(
+        w: &[f32],
+        k: usize,
+        n: usize,
+        group: usize,
+        bits: u32,
+    ) -> (Vec<i8>, Vec<f32>) {
+        assert_eq!(k % group, 0, "K={k} not divisible by group={group}");
+        let (qmin, qmax) = qrange(bits);
+        let groups = k / group;
+        let mut delta = vec![0f32; groups * n];
+        for g in 0..groups {
+            for col in 0..n {
+                let mut amax = 0f32;
+                for r in 0..group {
+                    amax = amax.max(w[(g * group + r) * n + col].abs());
+                }
+                delta[g * n + col] = amax.max(EPS) / qmax as f32;
+            }
+        }
+        let mut q = vec![0i8; k * n];
+        for g in 0..groups {
+            for r in 0..group {
+                let row = g * group + r;
+                for col in 0..n {
+                    q[row * n + col] = round_ties_even(w[row * n + col] / delta[g * n + col])
+                        .clamp(qmin as f32, qmax as f32) as i8;
+                }
+            }
+        }
+        (q, delta)
+    }
+
+    /// See `quant::token_quantize`.
+    pub fn token_quantize(x: &[f32], t: usize, d: usize, bits: u32) -> (Vec<i8>, Vec<f32>) {
+        let (qmin, qmax) = qrange(bits);
+        let mut q = vec![0i8; t * d];
+        let mut delta = vec![0f32; t];
+        for row in 0..t {
+            let srow = &x[row * d..(row + 1) * d];
+            let amax = srow.iter().fold(0f32, |a, v| a.max(v.abs())).max(EPS);
+            let dl = amax / qmax as f32;
+            delta[row] = dl;
+            for col in 0..d {
+                q[row * d + col] =
+                    round_ties_even(srow[col] / dl).clamp(qmin as f32, qmax as f32) as i8;
+            }
+        }
+        (q, delta)
+    }
+
+    /// See `quant::simquant_encode`.
+    pub fn simquant_encode(
+        x: &[f32],
+        t: usize,
+        d: usize,
+        bits: u32,
+    ) -> (Vec<u8>, Vec<f32>, Vec<f32>) {
+        let levels = ((1u32 << bits) - 1) as f32;
+        let mut vmin = vec![f32::INFINITY; d];
+        let mut vmax = vec![f32::NEG_INFINITY; d];
+        for row in 0..t {
+            for col in 0..d {
+                let v = x[row * d + col];
+                vmin[col] = vmin[col].min(v);
+                vmax[col] = vmax[col].max(v);
+            }
+        }
+        if t == 0 {
+            vmin.iter_mut().for_each(|v| *v = 0.0);
+            vmax.iter_mut().for_each(|v| *v = 0.0);
+        }
+        let step: Vec<f32> = vmin
+            .iter()
+            .zip(&vmax)
+            .map(|(lo, hi)| (hi - lo).max(EPS) / levels)
+            .collect();
+        let mut q = vec![0u8; t * d];
+        for row in 0..t {
+            for col in 0..d {
+                q[row * d + col] = round_ties_even((x[row * d + col] - vmin[col]) / step[col])
+                    .clamp(0.0, levels) as u8;
+            }
+        }
+        (q, vmin, step)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn invalid_bits_rejected() {
+        for bits in [0u32, 1, 9, 16] {
+            assert!(validate_bits(bits).is_err(), "bits={bits}");
+            let x = vec![1.0f32; 8];
+            let mut q = vec![0i8; 8];
+            let mut delta = vec![0f32; 4];
+            assert!(
+                symmetric_quantize_channel_into(&x, 2, 4, bits, &mut q, &mut delta).is_err()
+            );
+            assert!(
+                zeroquant_group_quantize_into(&x, 2, 4, 2, bits, &mut q, &mut delta).is_err()
+            );
+            let mut dt = vec![0f32; 2];
+            assert!(token_quantize_into(&x, 2, 4, bits, &mut q, &mut dt).is_err());
+        }
+        // simquant accepts 1 bit (unsigned scheme), rejects 0 and > 8
+        let x = vec![1.0f32; 8];
+        let mut qu = vec![0u8; 8];
+        let mut mn = vec![0f32; 4];
+        let mut st = vec![0f32; 4];
+        assert!(simquant_encode_into(&x, 2, 4, 1, &mut qu, &mut mn, &mut st).is_ok());
+        for bits in [0u32, 9, 16] {
+            assert!(simquant_encode_into(&x, 2, 4, bits, &mut qu, &mut mn, &mut st).is_err());
+        }
+    }
+
+    #[test]
+    fn buffer_length_mismatch_rejected() {
+        let x = vec![1.0f32; 8];
+        let mut q = vec![0i8; 7]; // wrong
+        let mut delta = vec![0f32; 4];
+        assert!(symmetric_quantize_channel_into(&x, 2, 4, 8, &mut q, &mut delta).is_err());
+    }
+
+    #[test]
+    fn zeroquant_bad_group_rejected() {
+        let x = vec![1.0f32; 12];
+        let mut q = vec![0i8; 12];
+        let mut delta = vec![0f32; 4];
+        assert!(zeroquant_group_quantize_into(&x, 3, 4, 2, 8, &mut q, &mut delta).is_err());
+        assert!(zeroquant_group_quantize_into(&x, 3, 4, 0, 8, &mut q, &mut delta).is_err());
+    }
+
+    #[test]
+    fn simquant_empty_input_matches_reference() {
+        let x: Vec<f32> = Vec::new();
+        let mut q: Vec<u8> = Vec::new();
+        let mut vmin = vec![9.0f32; 4];
+        let mut step = vec![9.0f32; 4];
+        simquant_encode_into(&x, 0, 4, 8, &mut q, &mut vmin, &mut step).unwrap();
+        let (rq, rmin, rstep) = reference::simquant_encode(&x, 0, 4, 8);
+        assert_eq!(q, rq);
+        assert_eq!(vmin, rmin);
+        assert_eq!(step, rstep);
+    }
+}

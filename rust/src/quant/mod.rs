@@ -6,16 +6,58 @@
 //! path (`ema`, `simquant` page re-encode), and the AWQ/GPTQ baselines for
 //! the comparison tables. Rounding is half-to-even everywhere to stay
 //! bit-identical with `jnp.round` (the golden files pin this).
+//!
+//! # Hot-path architecture (`kernels`)
+//!
+//! The serving hot path never calls the tuple-returning schemes; it calls
+//! the fused `_into` kernels in [`kernels`] with caller-owned buffers:
+//!
+//! * **Buffer-reuse contract** — `*_into(src, dims.., bits, out_codes,
+//!   out_scales)` writes into exactly-sized caller buffers and allocates
+//!   no O(K*N) memory. Callers keep the buffers alive across calls
+//!   (`KvCache` encodes straight into its own code/param pages;
+//!   `awq_quantize` reuses one scratch set across its whole alpha grid).
+//!   Wrong buffer lengths and invalid bitwidths (signed schemes: 2..=8,
+//!   since `bits == 1` makes `qmax == 0`; SimQuant's unsigned scheme:
+//!   1..=8) are errors, not UB or `inf` scales.
+//! * **Bit-exactness invariant** — the fast kernels are bit-identical to
+//!   the pinned scalar reference (`quant::reference`, the Python-parity
+//!   semantics) for every shape and every thread count. Per-element math
+//!   is unchanged (half-to-even rounding, division — never a reciprocal
+//!   multiply); parallel column reductions combine per-row-range partials
+//!   in range order, which f32 min/max associativity makes exact.
+//!   `tests/kernel_equivalence.rs` enforces this property-style; golden
+//!   files pin the Python side.
+//! * **Parallelism** — row ranges fan out over scoped `std::thread`s
+//!   (`util::pool`), capped by `LLEQ_THREADS` (default: available
+//!   parallelism). Inputs under ~32K elements stay single-threaded.
+//!
+//! Measure it with `cargo bench --bench perf_hotpath` (from `rust/`):
+//! every row prints mean/p95 in µs and the run also writes
+//! `BENCH_hotpath.json` at the repo root — `[{"name", "mean_us",
+//! "p95_us"}, ...]` — so successive PRs can diff the perf trajectory.
+//! Rows that need PJRT artifacts are skipped (with a note) unless the
+//! crate is built with `--features xla`.
 
 mod awq;
 mod ema;
 mod gptq;
+pub mod kernels;
 pub mod prepare;
 mod schemes;
 
 pub use awq::{awq_dequant, awq_quantize, AwqResult};
 pub use ema::{EmaScaleTracker, EmaState};
 pub use gptq::{gptq_dequant, gptq_quantize, GptqResult};
+pub use kernels::reference;
+pub use kernels::{
+    scale_rows_into, simquant_decode_into, simquant_encode_into, simquant_encode_into_threads,
+    simquant_encode_with_params_into,
+    symmetric_quantize_channel_into, symmetric_quantize_channel_into_threads,
+    token_quantize_into, token_quantize_into_threads, validate_bits,
+    validate_simquant_bits, zeroquant_group_quantize_into,
+    zeroquant_group_quantize_into_threads,
+};
 pub use schemes::*;
 
 /// Signed symmetric integer range for a bitwidth: (qmin, qmax).

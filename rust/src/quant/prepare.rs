@@ -36,10 +36,16 @@ impl Checkpoint {
     }
 
     pub fn f32(&self, name: &str) -> Result<Vec<f32>> {
+        Ok(self.f32_view(name)?.to_vec())
+    }
+
+    /// Zero-copy borrow of an f32 tensor (the quantizers read weights and
+    /// calibration stats in place; nothing in `prepare` needs a clone).
+    pub fn f32_view(&self, name: &str) -> Result<&[f32]> {
         self.tensors
             .get(name)
             .ok_or_else(|| anyhow!("checkpoint missing tensor {name}"))?
-            .as_f32()
+            .f32_view()
     }
 
     pub fn shape(&self, name: &str) -> Result<&[usize]> {
@@ -50,8 +56,8 @@ impl Checkpoint {
             .shape)
     }
 
-    fn calib(&self, linear: &str, stat: &str) -> Result<Vec<f32>> {
-        self.f32(&format!("calib.{linear}.{stat}"))
+    fn calib_view(&self, linear: &str, stat: &str) -> Result<&[f32]> {
+        self.f32_view(&format!("calib.{linear}.{stat}"))
             .with_context(|| format!("calibration stats for {linear}"))
     }
 }
@@ -131,51 +137,48 @@ pub fn prepare_linear(
     let wname = format!("{linear}_w");
     let shape = ckpt.shape(&wname)?.to_vec();
     let (k, n) = (shape[0], shape[1]);
-    let w = ckpt.f32(&wname)?;
+    // zero-copy borrow: the quantizers read the checkpoint weight in place
+    let w = ckpt.f32_view(&wname)?;
     let mut m = BTreeMap::new();
     match variant {
         Variant::Fp => {
-            m.insert("w".into(), Tensor::from_f32(vec![k, n], w));
+            m.insert("w".into(), Tensor::from_f32_slice(vec![k, n], w));
         }
         Variant::AbsMax => {
-            let (q, delta) = schemes::absmax_quantize(&w, 8);
+            let (q, delta) = schemes::absmax_quantize(w, 8)?;
             m.insert("w_q".into(), Tensor::from_i8(vec![k, n], q));
             m.insert("w_delta".into(), Tensor::from_f32(vec![1, n], vec![delta; n]));
         }
         Variant::ZeroPoint => {
-            let (q, scale, zp) = schemes::zeropoint_quantize(&w, 8);
+            let (q, scale, zp) = schemes::zeropoint_quantize(w, 8)?;
             m.insert("w_q".into(), Tensor::from_i8(vec![k, n], q));
             m.insert("w_scale".into(), Tensor::from_f32(vec![1], vec![scale]));
             m.insert("w_zp".into(), Tensor::from_f32(vec![1], vec![zp]));
         }
         Variant::Sym8 | Variant::Int8 | Variant::SimQuant => {
-            let (q, delta) = schemes::symmetric_quantize_channel(&w, k, n, 8);
+            let (q, delta) = schemes::symmetric_quantize_channel(w, k, n, 8)?;
             m.insert("w_q".into(), Tensor::from_i8(vec![k, n], q));
             m.insert("w_delta".into(), Tensor::from_f32(vec![1, n], delta));
         }
         Variant::Smooth => {
-            let absmax = ckpt.calib(linear, "absmax")?;
-            let s = schemes::smoothquant_scales(&absmax, &w, k, n, sq_alpha);
+            let absmax = ckpt.calib_view(linear, "absmax")?;
+            let s = schemes::smoothquant_scales(absmax, w, k, n, sq_alpha);
             let mut ws = vec![0f32; k * n];
-            for row in 0..k {
-                for col in 0..n {
-                    ws[row * n + col] = w[row * n + col] * s[row];
-                }
-            }
-            let (q, delta) = schemes::symmetric_quantize_channel(&ws, k, n, 8);
+            super::kernels::scale_rows_into(w, &s, n, &mut ws);
+            let (q, delta) = schemes::symmetric_quantize_channel(&ws, k, n, 8)?;
             m.insert("s".into(), Tensor::from_f32(vec![1, k], s));
             m.insert("w_q".into(), Tensor::from_i8(vec![k, n], q));
             m.insert("w_delta".into(), Tensor::from_f32(vec![1, n], delta));
         }
         Variant::ZeroQuant => {
             let g = if k % zq_group == 0 { zq_group } else { k };
-            let (q, delta) = schemes::zeroquant_group_quantize(&w, k, n, g, 8);
+            let (q, delta) = schemes::zeroquant_group_quantize(w, k, n, g, 8)?;
             m.insert("w_q".into(), Tensor::from_i8(vec![k, n], q));
             m.insert("g_delta".into(), Tensor::from_f32(vec![k / g, 1, n], delta));
         }
         Variant::Awq => {
-            let meanabs = ckpt.calib(linear, "meanabs")?;
-            let sqsum = ckpt.calib(linear, "sqsum")?;
+            let meanabs = ckpt.calib_view(linear, "meanabs")?;
+            let sqsum = ckpt.calib_view(linear, "sqsum")?;
             let count = ckpt
                 .tensors
                 .get(&format!("calib.{linear}.count"))
@@ -183,12 +186,12 @@ pub fn prepare_linear(
                 .map(|v| v[0].max(1) as f32)
                 .unwrap_or(1.0);
             let ex2: Vec<f32> = sqsum.iter().map(|s| s / count).collect();
-            let r = awq_quantize(&w, k, n, &meanabs, &ex2, 8);
+            let r = awq_quantize(w, k, n, meanabs, &ex2, 8)?;
             m.insert("w".into(), Tensor::from_f32(vec![k, n], awq_dequant(&r, k, n)));
         }
         Variant::Gptq => {
-            let sqsum = ckpt.calib(linear, "sqsum")?;
-            let r = gptq_quantize(&w, k, n, &sqsum, 8, true);
+            let sqsum = ckpt.calib_view(linear, "sqsum")?;
+            let r = gptq_quantize(w, k, n, sqsum, 8, true)?;
             m.insert("w".into(), Tensor::from_f32(vec![k, n], gptq_dequant(&r, k, n)));
         }
     }
@@ -207,33 +210,33 @@ pub fn effective_weight(
     Ok(match variant {
         Variant::Fp | Variant::Awq | Variant::Gptq => prepared["w"].as_f32()?,
         Variant::AbsMax | Variant::Sym8 | Variant::Int8 | Variant::SimQuant => {
-            let q = prepared["w_q"].as_i8()?;
-            let delta = prepared["w_delta"].as_f32()?;
-            schemes::symmetric_dequantize_channel(&q, &delta, k, n)
+            let q = prepared["w_q"].i8_view()?;
+            let delta = prepared["w_delta"].f32_view()?;
+            schemes::symmetric_dequantize_channel(q, delta, k, n)
         }
         Variant::ZeroPoint => {
-            let q = prepared["w_q"].as_i8()?;
-            let scale = prepared["w_scale"].as_f32()?[0];
-            let zp = prepared["w_zp"].as_f32()?[0];
-            schemes::zeropoint_dequantize(&q, scale, zp)
+            let q = prepared["w_q"].i8_view()?;
+            let scale = prepared["w_scale"].f32_view()?[0];
+            let zp = prepared["w_zp"].f32_view()?[0];
+            schemes::zeropoint_dequantize(q, scale, zp)
         }
         Variant::Smooth => {
-            let q = prepared["w_q"].as_i8()?;
-            let delta = prepared["w_delta"].as_f32()?;
-            let s = prepared["s"].as_f32()?;
-            let mut w = schemes::symmetric_dequantize_channel(&q, &delta, k, n);
-            for row in 0..k {
-                for col in 0..n {
-                    w[row * n + col] /= s[row];
+            let q = prepared["w_q"].i8_view()?;
+            let delta = prepared["w_delta"].f32_view()?;
+            let s = prepared["s"].f32_view()?;
+            let mut w = schemes::symmetric_dequantize_channel(q, delta, k, n);
+            for (wrow, sv) in w.chunks_exact_mut(n).zip(s) {
+                for v in wrow.iter_mut() {
+                    *v /= sv;
                 }
             }
             w
         }
         Variant::ZeroQuant => {
-            let q = prepared["w_q"].as_i8()?;
-            let delta = prepared["g_delta"].as_f32()?;
+            let q = prepared["w_q"].i8_view()?;
+            let delta = prepared["g_delta"].f32_view()?;
             let g = if k % zq_group == 0 { zq_group } else { k };
-            schemes::zeroquant_group_dequantize(&q, &delta, k, n, g)
+            schemes::zeroquant_group_dequantize(q, delta, k, n, g)
         }
     })
 }

@@ -1,32 +1,43 @@
 //! Core quantization schemes over row-major f32 matrices [K, N].
 //!
 //! Bit-identical mirrors of `python/compile/kernels/ref.py` (same eps,
-//! same clip-after-round order, half-to-even rounding).
+//! same clip-after-round order, half-to-even rounding). The matrix
+//! schemes are thin allocate-then-encode wrappers over the fused,
+//! thread-parallel `_into` kernels in `quant::kernels`; the hot path
+//! calls those directly with reused buffers. Every quantize entry point
+//! validates its bitwidth (2..=8) and returns a proper error instead of
+//! silently producing `inf` scales (the `bits == 1` ⇒ `qmax == 0` trap).
 
+use anyhow::Result;
+
+use super::kernels::{
+    simquant_decode_into, simquant_encode_into, symmetric_quantize_channel_into,
+    token_quantize_into, validate_bits, zeroquant_group_quantize_into, EPS,
+};
 use super::{qrange, round_ties_even};
-
-const EPS: f32 = 1e-8;
 
 // ---------------------------------------------------------------------------
 // AbsMax (per-tensor symmetric)
 // ---------------------------------------------------------------------------
 
 /// Per-tensor absmax scale: delta = max(absmax(x), eps) / qmax.
-pub fn absmax_scale(x: &[f32], bits: u32) -> f32 {
+pub fn absmax_scale(x: &[f32], bits: u32) -> Result<f32> {
+    validate_bits(bits)?;
     let (_, qmax) = qrange(bits);
     let amax = x.iter().fold(0f32, |a, v| a.max(v.abs()));
-    amax.max(EPS) / qmax as f32
+    Ok(amax.max(EPS) / qmax as f32)
 }
 
 /// Per-tensor absmax quantization. Returns (codes, delta).
-pub fn absmax_quantize(x: &[f32], bits: u32) -> (Vec<i8>, f32) {
+pub fn absmax_quantize(x: &[f32], bits: u32) -> Result<(Vec<i8>, f32)> {
+    // validate (via absmax_scale) before qrange: qrange(0) would underflow
+    let delta = absmax_scale(x, bits)?;
     let (qmin, qmax) = qrange(bits);
-    let delta = absmax_scale(x, bits);
     let q = x
         .iter()
         .map(|v| round_ties_even(v / delta).clamp(qmin as f32, qmax as f32) as i8)
         .collect();
-    (q, delta)
+    Ok((q, delta))
 }
 
 pub fn absmax_dequantize(q: &[i8], delta: f32) -> Vec<f32> {
@@ -38,7 +49,8 @@ pub fn absmax_dequantize(q: &[i8], delta: f32) -> Vec<f32> {
 // ---------------------------------------------------------------------------
 
 /// Affine params: scale = (max-min)/(qmax-qmin), zp = round(qmin - min/scale).
-pub fn zeropoint_params(x: &[f32], bits: u32) -> (f32, f32) {
+pub fn zeropoint_params(x: &[f32], bits: u32) -> Result<(f32, f32)> {
+    validate_bits(bits)?;
     let (qmin, qmax) = qrange(bits);
     let (mut lo, mut hi) = (f32::INFINITY, f32::NEG_INFINITY);
     for v in x {
@@ -47,20 +59,21 @@ pub fn zeropoint_params(x: &[f32], bits: u32) -> (f32, f32) {
     }
     let scale = (hi - lo).max(EPS) / (qmax - qmin) as f32;
     let zp = round_ties_even(qmin as f32 - lo / scale);
-    (scale, zp)
+    Ok((scale, zp))
 }
 
 /// Per-tensor affine quantization. Returns (codes, scale, zero_point).
-pub fn zeropoint_quantize(x: &[f32], bits: u32) -> (Vec<i8>, f32, f32) {
+pub fn zeropoint_quantize(x: &[f32], bits: u32) -> Result<(Vec<i8>, f32, f32)> {
+    // validate (via zeropoint_params) before qrange: qrange(0) would underflow
+    let (scale, zp) = zeropoint_params(x, bits)?;
     let (qmin, qmax) = qrange(bits);
-    let (scale, zp) = zeropoint_params(x, bits);
     let q = x
         .iter()
         .map(|v| {
             (round_ties_even(v / scale) + zp).clamp(qmin as f32, qmax as f32) as i8
         })
         .collect();
-    (q, scale, zp)
+    Ok((q, scale, zp))
 }
 
 pub fn zeropoint_dequantize(q: &[i8], scale: f32, zp: f32) -> Vec<f32> {
@@ -72,33 +85,26 @@ pub fn zeropoint_dequantize(q: &[i8], scale: f32, zp: f32) -> Vec<f32> {
 // ---------------------------------------------------------------------------
 
 /// Per-column symmetric quantization of w [K, N]. Returns (codes, delta [N]).
-pub fn symmetric_quantize_channel(w: &[f32], k: usize, n: usize, bits: u32) -> (Vec<i8>, Vec<f32>) {
-    let (qmin, qmax) = qrange(bits);
-    let mut amax = vec![0f32; n];
-    for row in 0..k {
-        for col in 0..n {
-            amax[col] = amax[col].max(w[row * n + col].abs());
-        }
-    }
-    let delta: Vec<f32> = amax.iter().map(|a| a.max(EPS) / qmax as f32).collect();
-    // hot path (runs on every artifact load / bitwidth sweep): walk row
-    // slices so the inner loop is bounds-check-free; keep the division
-    // (not a reciprocal multiply) for bit-exactness with jnp
-    let (lo, hi) = (qmin as f32, qmax as f32);
+/// Allocates fresh outputs; the hot path uses
+/// `symmetric_quantize_channel_into` with reused buffers.
+pub fn symmetric_quantize_channel(
+    w: &[f32],
+    k: usize,
+    n: usize,
+    bits: u32,
+) -> Result<(Vec<i8>, Vec<f32>)> {
     let mut q = vec![0i8; k * n];
-    for (wrow, qrow) in w.chunks_exact(n).zip(q.chunks_exact_mut(n)) {
-        for ((wv, dv), qv) in wrow.iter().zip(&delta).zip(qrow.iter_mut()) {
-            *qv = round_ties_even(wv / dv).clamp(lo, hi) as i8;
-        }
-    }
-    (q, delta)
+    let mut delta = vec![0f32; n];
+    symmetric_quantize_channel_into(w, k, n, bits, &mut q, &mut delta)?;
+    Ok((q, delta))
 }
 
 pub fn symmetric_dequantize_channel(q: &[i8], delta: &[f32], k: usize, n: usize) -> Vec<f32> {
+    debug_assert_eq!(q.len(), k * n);
     let mut out = vec![0f32; k * n];
-    for row in 0..k {
-        for col in 0..n {
-            out[row * n + col] = q[row * n + col] as f32 * delta[col];
+    for (qrow, orow) in q.chunks_exact(n).zip(out.chunks_exact_mut(n)) {
+        for ((qv, dv), ov) in qrow.iter().zip(delta).zip(orow.iter_mut()) {
+            *ov = *qv as f32 * dv;
         }
     }
     out
@@ -116,31 +122,15 @@ pub fn zeroquant_group_quantize(
     n: usize,
     group: usize,
     bits: u32,
-) -> (Vec<i8>, Vec<f32>) {
-    assert_eq!(k % group, 0, "K={k} not divisible by group={group}");
-    let (qmin, qmax) = qrange(bits);
-    let groups = k / group;
-    let mut delta = vec![0f32; groups * n];
-    for g in 0..groups {
-        for col in 0..n {
-            let mut amax = 0f32;
-            for r in 0..group {
-                amax = amax.max(w[(g * group + r) * n + col].abs());
-            }
-            delta[g * n + col] = amax.max(EPS) / qmax as f32;
-        }
+) -> Result<(Vec<i8>, Vec<f32>)> {
+    validate_bits(bits)?;
+    if group == 0 || k % group != 0 {
+        anyhow::bail!("K={k} not divisible by group={group}");
     }
     let mut q = vec![0i8; k * n];
-    for g in 0..groups {
-        for r in 0..group {
-            let row = g * group + r;
-            for col in 0..n {
-                q[row * n + col] = round_ties_even(w[row * n + col] / delta[g * n + col])
-                    .clamp(qmin as f32, qmax as f32) as i8;
-            }
-        }
-    }
-    (q, delta)
+    let mut delta = vec![0f32; (k / group) * n];
+    zeroquant_group_quantize_into(w, k, n, group, bits, &mut q, &mut delta)?;
+    Ok((q, delta))
 }
 
 pub fn zeroquant_group_dequantize(
@@ -153,8 +143,13 @@ pub fn zeroquant_group_dequantize(
     let mut out = vec![0f32; k * n];
     for row in 0..k {
         let g = row / group;
-        for col in 0..n {
-            out[row * n + col] = q[row * n + col] as f32 * delta[g * n + col];
+        let dg = &delta[g * n..(g + 1) * n];
+        for ((qv, dv), ov) in q[row * n..(row + 1) * n]
+            .iter()
+            .zip(dg)
+            .zip(out[row * n..(row + 1) * n].iter_mut())
+        {
+            *ov = *qv as f32 * dv;
         }
     }
     out
@@ -162,24 +157,11 @@ pub fn zeroquant_group_dequantize(
 
 /// Token-wise (row-wise) symmetric activation quantization of x [T, D].
 /// Returns (codes, delta [T]).
-pub fn token_quantize(x: &[f32], t: usize, d: usize, bits: u32) -> (Vec<i8>, Vec<f32>) {
-    let (qmin, qmax) = qrange(bits);
+pub fn token_quantize(x: &[f32], t: usize, d: usize, bits: u32) -> Result<(Vec<i8>, Vec<f32>)> {
     let mut q = vec![0i8; t * d];
     let mut delta = vec![0f32; t];
-    let (lo, hi) = (qmin as f32, qmax as f32);
-    for ((srow, qrow), dl_out) in x
-        .chunks_exact(d)
-        .zip(q.chunks_exact_mut(d))
-        .zip(delta.iter_mut())
-    {
-        let amax = srow.iter().fold(0f32, |a, v| a.max(v.abs())).max(EPS);
-        let dl = amax / qmax as f32;
-        *dl_out = dl;
-        for (sv, qv) in srow.iter().zip(qrow.iter_mut()) {
-            *qv = round_ties_even(sv / dl).clamp(lo, hi) as i8;
-        }
-    }
-    (q, delta)
+    token_quantize_into(x, t, d, bits, &mut q, &mut delta)?;
+    Ok((q, delta))
 }
 
 // ---------------------------------------------------------------------------
@@ -188,13 +170,19 @@ pub fn token_quantize(x: &[f32], t: usize, d: usize, bits: u32) -> (Vec<i8>, Vec
 
 /// s_j = max|X_j|^alpha / max|W_j|^(1-alpha) over w [K, N] rows (eps 1e-5,
 /// matching ref.smoothquant_scales).
-pub fn smoothquant_scales(act_absmax: &[f32], w: &[f32], k: usize, n: usize, alpha: f32) -> Vec<f32> {
+pub fn smoothquant_scales(
+    act_absmax: &[f32],
+    w: &[f32],
+    k: usize,
+    n: usize,
+    alpha: f32,
+) -> Vec<f32> {
     const SQ_EPS: f32 = 1e-5;
     (0..k)
         .map(|j| {
             let mut wmax = 0f32;
-            for col in 0..n {
-                wmax = wmax.max(w[j * n + col].abs());
+            for v in &w[j * n..(j + 1) * n] {
+                wmax = wmax.max(v.abs());
             }
             let wmax = wmax.max(SQ_EPS);
             let amax = act_absmax[j].max(SQ_EPS);
@@ -209,44 +197,22 @@ pub fn smoothquant_scales(act_absmax: &[f32], w: &[f32], k: usize, n: usize, alp
 
 /// Per-channel (columns of x [T, D]) min/max encode to unsigned codes.
 /// Returns (codes u8, vmin [D], step [D]). Thm. A.2 bound holds per channel.
-pub fn simquant_encode(x: &[f32], t: usize, d: usize, bits: u32) -> (Vec<u8>, Vec<f32>, Vec<f32>) {
-    let levels = ((1u32 << bits) - 1) as f32;
-    let mut vmin = vec![f32::INFINITY; d];
-    let mut vmax = vec![f32::NEG_INFINITY; d];
-    for row in 0..t {
-        for col in 0..d {
-            let v = x[row * d + col];
-            vmin[col] = vmin[col].min(v);
-            vmax[col] = vmax[col].max(v);
-        }
-    }
-    if t == 0 {
-        vmin.iter_mut().for_each(|v| *v = 0.0);
-        vmax.iter_mut().for_each(|v| *v = 0.0);
-    }
-    let step: Vec<f32> = vmin
-        .iter()
-        .zip(&vmax)
-        .map(|(lo, hi)| (hi - lo).max(EPS) / levels)
-        .collect();
+pub fn simquant_encode(
+    x: &[f32],
+    t: usize,
+    d: usize,
+    bits: u32,
+) -> Result<(Vec<u8>, Vec<f32>, Vec<f32>)> {
     let mut q = vec![0u8; t * d];
-    for (xrow, qrow) in x.chunks_exact(d).zip(q.chunks_exact_mut(d)) {
-        for (((xv, mn), st), qv) in
-            xrow.iter().zip(&vmin).zip(&step).zip(qrow.iter_mut())
-        {
-            *qv = round_ties_even((xv - mn) / st).clamp(0.0, levels) as u8;
-        }
-    }
-    (q, vmin, step)
+    let mut vmin = vec![0f32; d];
+    let mut step = vec![0f32; d];
+    simquant_encode_into(x, t, d, bits, &mut q, &mut vmin, &mut step)?;
+    Ok((q, vmin, step))
 }
 
 pub fn simquant_decode(q: &[u8], vmin: &[f32], step: &[f32], t: usize, d: usize) -> Vec<f32> {
     let mut out = vec![0f32; t * d];
-    for row in 0..t {
-        for col in 0..d {
-            out[row * d + col] = q[row * d + col] as f32 * step[col] + vmin[col];
-        }
-    }
+    simquant_decode_into(q, vmin, step, t, d, &mut out);
     out
 }
 
@@ -263,7 +229,7 @@ mod tests {
     #[test]
     fn absmax_roundtrip_error_bounded() {
         let x = randn(1000, 1);
-        let (q, delta) = absmax_quantize(&x, 8);
+        let (q, delta) = absmax_quantize(&x, 8).unwrap();
         let dx = absmax_dequantize(&q, delta);
         for (a, b) in x.iter().zip(&dx) {
             assert!((a - b).abs() <= delta * 0.5 + 1e-6);
@@ -273,15 +239,30 @@ mod tests {
     #[test]
     fn absmax_extreme_hits_qmax() {
         let x = vec![-3.0, 0.0, 3.0];
-        let (q, _) = absmax_quantize(&x, 8);
+        let (q, _) = absmax_quantize(&x, 8).unwrap();
         assert_eq!(q, vec![-127, 0, 127]);
+    }
+
+    #[test]
+    fn one_bit_rejected_not_inf() {
+        assert!(absmax_scale(&[1.0, 2.0], 1).is_err());
+        assert!(absmax_quantize(&[1.0], 1).is_err());
+        assert!(zeropoint_quantize(&[1.0], 0).is_err());
+        assert!(symmetric_quantize_channel(&[1.0; 4], 2, 2, 1).is_err());
+        assert!(zeroquant_group_quantize(&[1.0; 4], 2, 2, 2, 9).is_err());
+        assert!(token_quantize(&[1.0; 4], 2, 2, 1).is_err());
+        // simquant's unsigned scheme is well-defined at 1 bit; only 0 and
+        // > 8 are invalid there
+        assert!(simquant_encode(&[1.0; 4], 2, 2, 1).is_ok());
+        assert!(simquant_encode(&[1.0; 4], 2, 2, 0).is_err());
+        assert!(simquant_encode(&[1.0; 4], 2, 2, 9).is_err());
     }
 
     #[test]
     fn zeropoint_roundtrip_error_bounded() {
         // shifted distribution — the case zeropoint handles better than absmax
         let x: Vec<f32> = randn(1000, 2).iter().map(|v| v + 5.0).collect();
-        let (q, scale, zp) = zeropoint_quantize(&x, 8);
+        let (q, scale, zp) = zeropoint_quantize(&x, 8).unwrap();
         let dx = zeropoint_dequantize(&q, scale, zp);
         for (a, b) in x.iter().zip(&dx) {
             assert!((a - b).abs() <= scale * 0.75 + 1e-6, "{a} vs {b}");
@@ -292,7 +273,7 @@ mod tests {
     fn symmetric_channel_scales_per_column() {
         // col 0 small range, col 1 large: per-channel must separate them
         let w = vec![0.01, 10.0, -0.02, -20.0]; // [2, 2]
-        let (q, delta) = symmetric_quantize_channel(&w, 2, 2, 8);
+        let (q, delta) = symmetric_quantize_channel(&w, 2, 2, 8).unwrap();
         assert!(delta[0] < delta[1] / 100.0);
         let dw = symmetric_dequantize_channel(&q, &delta, 2, 2);
         for (a, b) in w.iter().zip(&dw) {
@@ -306,7 +287,7 @@ mod tests {
         // keep group 0's error tiny, unlike per-tensor
         let mut w = vec![0.01f32; 4 * 2];
         w[6] = 100.0;
-        let (q, delta) = zeroquant_group_quantize(&w, 4, 2, 2, 8);
+        let (q, delta) = zeroquant_group_quantize(&w, 4, 2, 2, 8).unwrap();
         let dw = zeroquant_group_dequantize(&q, &delta, 4, 2, 2);
         assert!((dw[0] - 0.01).abs() < 1e-4);
         assert!((dw[6] - 100.0).abs() < 0.5);
@@ -315,7 +296,7 @@ mod tests {
     #[test]
     fn token_quantize_rowwise() {
         let x = vec![1.0, -1.0, 100.0, -50.0]; // rows: [1,-1], [100,-50]
-        let (q, delta) = token_quantize(&x, 2, 2, 8);
+        let (q, delta) = token_quantize(&x, 2, 2, 8).unwrap();
         assert_eq!(q[0], 127);
         assert_eq!(q[2], 127);
         assert!(delta[1] > delta[0] * 50.0);
@@ -324,7 +305,7 @@ mod tests {
     #[test]
     fn simquant_thm_a2_bound() {
         let x = randn(64 * 16, 3);
-        let (q, vmin, step) = simquant_encode(&x, 64, 16, 8);
+        let (q, vmin, step) = simquant_encode(&x, 64, 16, 8).unwrap();
         let dx = simquant_decode(&q, &vmin, &step, 64, 16);
         // per-channel bound: |x - dq| <= step/2 <= (max-min)/(2^b-1)
         for col in 0..16 {
@@ -338,8 +319,8 @@ mod tests {
     #[test]
     fn simquant_lower_bits_larger_error() {
         let x = randn(256, 4);
-        let (q8, m8, s8) = simquant_encode(&x, 16, 16, 8);
-        let (q4, m4, s4) = simquant_encode(&x, 16, 16, 4);
+        let (q8, m8, s8) = simquant_encode(&x, 16, 16, 8).unwrap();
+        let (q4, m4, s4) = simquant_encode(&x, 16, 16, 4).unwrap();
         let e8: f32 = simquant_decode(&q8, &m8, &s8, 16, 16)
             .iter()
             .zip(&x)

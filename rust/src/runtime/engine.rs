@@ -14,6 +14,10 @@ use anyhow::{anyhow, Context, Result};
 
 use crate::tensor::{DType, Tensor};
 
+/// The PJRT literal type callers pass around (`runtime::Literal` is the
+/// backend-independent name; the no-`xla` stub provides its own).
+pub type Literal = xla::Literal;
+
 fn element_type(dt: DType) -> xla::ElementType {
     match dt {
         DType::F32 => xla::ElementType::F32,
@@ -44,19 +48,6 @@ pub fn tensor_to_literal(t: &Tensor) -> Result<xla::Literal> {
 pub fn literal_from_raw(dtype: DType, shape: &[usize], bytes: &[u8]) -> Result<xla::Literal> {
     xla::Literal::create_from_shape_and_untyped_data(element_type(dtype), shape, bytes)
         .map_err(|e| anyhow!("literal creation failed: {e:?}"))
-}
-
-/// View a f32 slice as little-endian bytes (host is LE on all supported
-/// targets; PJRT consumes the same layout).
-pub fn f32_bytes(v: &[f32]) -> &[u8] {
-    // SAFETY: f32 has alignment >= u8 and no invalid bit patterns as bytes
-    unsafe { std::slice::from_raw_parts(v.as_ptr() as *const u8, v.len() * 4) }
-}
-
-/// View an i32 slice as little-endian bytes.
-pub fn i32_bytes(v: &[i32]) -> &[u8] {
-    // SAFETY: as above
-    unsafe { std::slice::from_raw_parts(v.as_ptr() as *const u8, v.len() * 4) }
 }
 
 /// Convert a PJRT literal back into a host tensor.

@@ -9,11 +9,34 @@
 //!
 //! Python never runs here; the rust binary is self-contained once
 //! `make artifacts` has produced the files.
+//!
+//! The PJRT backend is feature-gated: with `--features xla` the real
+//! `engine` (PJRT via the `xla` crate) is compiled; by default the
+//! API-identical `stub` backend is used instead, whose `Literal` is a
+//! host buffer and whose compile/execute calls return errors — everything
+//! else (quantizers, coordinator, benches) builds and runs offline.
 
+#[cfg(feature = "xla")]
+mod engine;
+#[cfg(not(feature = "xla"))]
+#[path = "stub.rs"]
 mod engine;
 mod manifest;
 mod registry;
 
-pub use engine::{f32_bytes, i32_bytes, literal_from_raw, literal_to_tensor, tensor_to_literal, Engine, Executable};
+pub use engine::{
+    literal_from_raw, literal_to_tensor, tensor_to_literal, Engine, Executable, Literal,
+};
 pub use manifest::{GraphKey, GraphSpec, Manifest, ModelCfg};
 pub use registry::{ModelHandle, Registry};
+
+/// View a f32 slice as little-endian bytes (host is LE on all supported
+/// targets; PJRT consumes the same layout).
+pub fn f32_bytes(v: &[f32]) -> &[u8] {
+    crate::tensor::pod_bytes(v)
+}
+
+/// View an i32 slice as little-endian bytes.
+pub fn i32_bytes(v: &[i32]) -> &[u8] {
+    crate::tensor::pod_bytes(v)
+}

@@ -15,13 +15,13 @@ use crate::quant::prepare::{self, Checkpoint};
 use crate::quant::Variant;
 use crate::tensor::{load_tensor_file, Tensor};
 
-use super::engine::{tensor_to_literal, Engine, Executable};
+use super::engine::{tensor_to_literal, Engine, Executable, Literal};
 
 use super::manifest::{GraphKey, Manifest, ModelCfg};
 
 /// Cached, prepared weight inputs for one (model, graph variant).
 struct PreparedWeights {
-    literals: Vec<xla::Literal>,
+    literals: Vec<Literal>,
     storage_bytes: usize,
 }
 
@@ -157,11 +157,11 @@ impl ModelHandle {
     fn run(&self, exe: &Executable, runtime_inputs: &[Tensor]) -> Result<Vec<Tensor>> {
         // weight literals were built once at load time; borrow them and
         // only materialize the (small) runtime inputs per call
-        let runtime_lits: Vec<xla::Literal> = runtime_inputs
+        let runtime_lits: Vec<Literal> = runtime_inputs
             .iter()
             .map(tensor_to_literal)
             .collect::<Result<_>>()?;
-        let mut refs: Vec<&xla::Literal> =
+        let mut refs: Vec<&Literal> =
             Vec::with_capacity(self.weights.literals.len() + runtime_lits.len());
         refs.extend(self.weights.literals.iter());
         refs.extend(runtime_lits.iter());
@@ -181,8 +181,8 @@ impl ModelHandle {
     /// Decode with caller-built literals (the zero-staging-copy hot path:
     /// the KV manager exposes raw byte views and the worker builds
     /// literals straight from them).
-    pub fn decode_literals(&self, runtime_lits: &[xla::Literal]) -> Result<Vec<Tensor>> {
-        let mut refs: Vec<&xla::Literal> =
+    pub fn decode_literals(&self, runtime_lits: &[Literal]) -> Result<Vec<Tensor>> {
+        let mut refs: Vec<&Literal> =
             Vec::with_capacity(self.weights.literals.len() + runtime_lits.len());
         refs.extend(self.weights.literals.iter());
         refs.extend(runtime_lits.iter());

@@ -1,0 +1,117 @@
+//! Default (no-`xla`) runtime backend: the same API surface as `engine`,
+//! with `Literal` as a plain host buffer and compile/execute returning
+//! errors. This keeps every caller — registry, workers, benches, the CLI —
+//! building and testable offline; rebuild with `--features xla` (and the
+//! `xla` crate available, see Cargo.toml) to execute real artifacts
+//! through PJRT.
+
+use std::path::Path;
+
+use anyhow::{bail, Result};
+
+use crate::tensor::{DType, Tensor};
+
+/// Host-side stand-in for a PJRT literal: packed bytes + shape + dtype.
+/// Creation copies once, like PJRT literal creation does.
+pub struct Literal {
+    dtype: DType,
+    shape: Vec<usize>,
+    data: Vec<u8>,
+}
+
+/// Convert a host tensor into a literal.
+pub fn tensor_to_literal(t: &Tensor) -> Result<Literal> {
+    literal_from_raw(t.dtype, &t.shape, t.bytes())
+}
+
+/// Build a literal directly from raw bytes — same single-copy semantics
+/// as the PJRT-backed path.
+pub fn literal_from_raw(dtype: DType, shape: &[usize], bytes: &[u8]) -> Result<Literal> {
+    let want = shape.iter().product::<usize>() * dtype.itemsize();
+    if bytes.len() != want {
+        bail!(
+            "literal bytes {} do not match shape {:?} ({} bytes)",
+            bytes.len(),
+            shape,
+            want
+        );
+    }
+    Ok(Literal { dtype, shape: shape.to_vec(), data: bytes.to_vec() })
+}
+
+/// Convert a literal back into a host tensor.
+pub fn literal_to_tensor(lit: &Literal) -> Result<Tensor> {
+    Tensor::from_bytes(lit.dtype, lit.shape.clone(), &lit.data)
+}
+
+fn unavailable<T>(what: &str) -> Result<T> {
+    bail!("{what} requires the PJRT runtime: rebuild with `--features xla` (see Cargo.toml)")
+}
+
+/// A compiled graph ready to execute — never constructible in this
+/// backend (compilation errors first), but the type and methods exist so
+/// callers typecheck identically with and without the `xla` feature.
+pub struct Executable {
+    _private: (),
+}
+
+impl Executable {
+    /// Execute with host tensors; returns the flattened output tuple.
+    pub fn run(&self, _inputs: &[Tensor]) -> Result<Vec<Tensor>> {
+        unavailable("graph execution")
+    }
+
+    /// Execute with pre-built literals.
+    pub fn run_literals(&self, _literals: &[Literal]) -> Result<Vec<Tensor>> {
+        unavailable("graph execution")
+    }
+
+    /// Execute with borrowed literals.
+    pub fn run_borrowed(&self, _literals: &[&Literal]) -> Result<Vec<Tensor>> {
+        unavailable("graph execution")
+    }
+}
+
+/// The (unavailable) PJRT client + compiler.
+pub struct Engine {
+    _private: (),
+}
+
+impl Engine {
+    pub fn cpu() -> Result<Self> {
+        unavailable("the PJRT CPU client")
+    }
+
+    pub fn platform(&self) -> String {
+        "unavailable (built without the xla feature)".to_string()
+    }
+
+    /// Compile an HLO text artifact.
+    pub fn compile_hlo_file(&self, _path: &Path) -> Result<Executable> {
+        unavailable("HLO compilation")
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn literal_roundtrip() {
+        let t = Tensor::from_f32(vec![2, 2], vec![1.0, 2.0, 3.0, 4.0]);
+        let lit = tensor_to_literal(&t).unwrap();
+        let back = literal_to_tensor(&lit).unwrap();
+        assert_eq!(t, back);
+    }
+
+    #[test]
+    fn literal_shape_mismatch_rejected() {
+        assert!(literal_from_raw(DType::F32, &[2, 2], &[0u8; 15]).is_err());
+    }
+
+    #[test]
+    fn engine_reports_missing_feature() {
+        let err = Engine::cpu().err().unwrap();
+        assert!(err.to_string().contains("xla"));
+    }
+}

@@ -72,9 +72,9 @@ pub fn export_model(cfg: &ModelCfg, ckpt: &Checkpoint, variant: Variant) -> Resu
             Variant::Fp | Variant::Awq | Variant::Gptq => {
                 // weight-only baselines export their dequantized f32 —
                 // re-quantize per-channel for the QDQ form
-                let w = prepared["w"].as_f32()?;
+                let w = prepared["w"].f32_view()?;
                 let (q, delta) =
-                    crate::quant::symmetric_quantize_channel(&w, k, n, 8);
+                    crate::quant::symmetric_quantize_channel(w, k, n, 8)?;
                 (q, delta, Vec::new(), 1)
             }
             Variant::AbsMax => (
@@ -103,7 +103,7 @@ pub fn export_model(cfg: &ModelCfg, ckpt: &Checkpoint, variant: Variant) -> Resu
                     variant, &prepared, k, n, cfg.zq_group,
                 )?;
                 let (q, delta) =
-                    crate::quant::symmetric_quantize_channel(&w, k, n, 8);
+                    crate::quant::symmetric_quantize_channel(&w, k, n, 8)?;
                 (q, delta, Vec::new(), 1)
             }
         };

@@ -1,4 +1,10 @@
 //! The `Tensor` type: shape + dtype + contiguous host data.
+//!
+//! Data lives in an 8-byte-aligned buffer so the typed views
+//! (`f32_view` & co.) can reinterpret the bytes in place — the zero-copy
+//! contract the serving hot path relies on (`runtime::tensor_to_literal`,
+//! the worker's prefill/decode output handling). The owned `as_*`
+//! accessors remain for callers that genuinely need a copy.
 
 use anyhow::{bail, Result};
 
@@ -50,16 +56,89 @@ impl DType {
     }
 }
 
+/// View a POD slice as its little-endian bytes (host is LE on all
+/// supported targets; PJRT and the tensor file format use the same
+/// layout). The crate's single byte-reinterpret site —
+/// `runtime::f32_bytes`/`i32_bytes` delegate here.
+pub(crate) fn pod_bytes<T: Copy>(v: &[T]) -> &[u8] {
+    // SAFETY: u8 has alignment 1 and any bit pattern of a POD element is
+    // a valid byte sequence; the length covers exactly the slice.
+    unsafe { std::slice::from_raw_parts(v.as_ptr() as *const u8, std::mem::size_of_val(v)) }
+}
+
+/// 8-byte-aligned byte buffer. A plain `Vec<u8>` only has alignment 1, so
+/// reinterpreting it as `&[f32]` would rely on allocator luck; backing the
+/// bytes with `u64` words makes the alignment a guarantee, which is what
+/// lets the dtype views below be safe unconditionally.
+#[derive(Clone)]
+struct AlignedBytes {
+    buf: Vec<u64>,
+    len: usize,
+}
+
+impl AlignedBytes {
+    fn from_slice(bytes: &[u8]) -> Self {
+        // one memcpy into a pre-sized, zero-initialized word buffer (any
+        // trailing pad bytes stay zero)
+        let mut buf = vec![0u64; bytes.len().div_ceil(8)];
+        // SAFETY: buf owns at least bytes.len() initialized, writable
+        // bytes; u8 has alignment 1; the regions cannot overlap.
+        unsafe {
+            std::ptr::copy_nonoverlapping(
+                bytes.as_ptr(),
+                buf.as_mut_ptr() as *mut u8,
+                bytes.len(),
+            );
+        }
+        AlignedBytes { buf, len: bytes.len() }
+    }
+
+    fn zeroed(len: usize) -> Self {
+        AlignedBytes { buf: vec![0u64; len.div_ceil(8)], len }
+    }
+
+    fn as_slice(&self) -> &[u8] {
+        // SAFETY: buf holds at least len bytes; u8 has alignment 1.
+        unsafe { std::slice::from_raw_parts(self.buf.as_ptr() as *const u8, self.len) }
+    }
+
+    /// Reinterpret as a typed slice. Only instantiated with POD element
+    /// types of alignment <= 8 (f32 / i32 / i8 / u8); callers guarantee
+    /// `len` is a multiple of the element size (enforced by the shape *
+    /// itemsize invariant of `Tensor`).
+    fn as_typed<T: Copy>(&self) -> &[T] {
+        let size = std::mem::size_of::<T>();
+        debug_assert!(std::mem::align_of::<T>() <= 8);
+        debug_assert_eq!(self.len % size, 0);
+        // SAFETY: the buffer is 8-byte aligned by construction, holds at
+        // least `len` initialized bytes, and T is POD.
+        unsafe { std::slice::from_raw_parts(self.buf.as_ptr() as *const T, self.len / size) }
+    }
+}
+
+impl std::fmt::Debug for AlignedBytes {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        write!(f, "AlignedBytes({} bytes)", self.len)
+    }
+}
+
+impl PartialEq for AlignedBytes {
+    fn eq(&self, other: &Self) -> bool {
+        self.as_slice() == other.as_slice()
+    }
+}
+
 /// A host tensor: contiguous row-major data with shape and dtype.
 #[derive(Debug, Clone, PartialEq)]
 pub struct Tensor {
     pub dtype: DType,
     pub shape: Vec<usize>,
-    data: Vec<u8>,
+    data: AlignedBytes,
 }
 
 impl Tensor {
-    pub fn from_bytes(dtype: DType, shape: Vec<usize>, data: Vec<u8>) -> Result<Self> {
+    /// Build from raw bytes (one copy into the aligned storage).
+    pub fn from_bytes(dtype: DType, shape: Vec<usize>, data: &[u8]) -> Result<Self> {
         let want = shape.iter().product::<usize>() * dtype.itemsize();
         if data.len() != want {
             bail!(
@@ -69,41 +148,43 @@ impl Tensor {
                 want
             );
         }
-        Ok(Tensor { dtype, shape, data })
+        Ok(Tensor { dtype, shape, data: AlignedBytes::from_slice(data) })
     }
 
     pub fn from_f32(shape: Vec<usize>, values: Vec<f32>) -> Self {
+        Self::from_f32_slice(shape, &values)
+    }
+
+    /// Build from a borrowed slice — one copy, no staging Vec (the
+    /// `graph_inputs` hot path).
+    pub fn from_f32_slice(shape: Vec<usize>, values: &[f32]) -> Self {
         assert_eq!(shape.iter().product::<usize>(), values.len());
-        let mut data = Vec::with_capacity(values.len() * 4);
-        for v in &values {
-            data.extend_from_slice(&v.to_le_bytes());
-        }
-        Tensor { dtype: DType::F32, shape, data }
+        Tensor { dtype: DType::F32, shape, data: AlignedBytes::from_slice(pod_bytes(values)) }
     }
 
     pub fn from_i8(shape: Vec<usize>, values: Vec<i8>) -> Self {
         assert_eq!(shape.iter().product::<usize>(), values.len());
-        let data = values.iter().map(|v| *v as u8).collect();
-        Tensor { dtype: DType::I8, shape, data }
+        Tensor { dtype: DType::I8, shape, data: AlignedBytes::from_slice(pod_bytes(&values)) }
     }
 
     pub fn from_u8(shape: Vec<usize>, values: Vec<u8>) -> Self {
+        Self::from_u8_slice(shape, &values)
+    }
+
+    /// Build from a borrowed slice — one copy, no staging Vec.
+    pub fn from_u8_slice(shape: Vec<usize>, values: &[u8]) -> Self {
         assert_eq!(shape.iter().product::<usize>(), values.len());
-        Tensor { dtype: DType::U8, shape, data: values }
+        Tensor { dtype: DType::U8, shape, data: AlignedBytes::from_slice(values) }
     }
 
     pub fn from_i32(shape: Vec<usize>, values: Vec<i32>) -> Self {
         assert_eq!(shape.iter().product::<usize>(), values.len());
-        let mut data = Vec::with_capacity(values.len() * 4);
-        for v in &values {
-            data.extend_from_slice(&v.to_le_bytes());
-        }
-        Tensor { dtype: DType::I32, shape, data }
+        Tensor { dtype: DType::I32, shape, data: AlignedBytes::from_slice(pod_bytes(&values)) }
     }
 
     pub fn zeros(dtype: DType, shape: Vec<usize>) -> Self {
         let n = shape.iter().product::<usize>() * dtype.itemsize();
-        Tensor { dtype, shape, data: vec![0u8; n] }
+        Tensor { dtype, shape, data: AlignedBytes::zeroed(n) }
     }
 
     pub fn len(&self) -> usize {
@@ -115,47 +196,63 @@ impl Tensor {
     }
 
     pub fn nbytes(&self) -> usize {
-        self.data.len()
+        self.data.len
     }
 
     pub fn bytes(&self) -> &[u8] {
-        &self.data
+        self.data.as_slice()
     }
 
-    pub fn as_f32(&self) -> Result<Vec<f32>> {
+    // -- zero-copy views ----------------------------------------------------
+
+    /// Borrow the elements as `&[f32]` without copying.
+    pub fn f32_view(&self) -> Result<&[f32]> {
         if self.dtype != DType::F32 {
             bail!("expected f32 tensor, got {:?}", self.dtype);
         }
-        Ok(self
-            .data
-            .chunks_exact(4)
-            .map(|c| f32::from_le_bytes([c[0], c[1], c[2], c[3]]))
-            .collect())
+        Ok(self.data.as_typed::<f32>())
     }
 
-    pub fn as_i8(&self) -> Result<Vec<i8>> {
+    /// Borrow the elements as `&[i8]` without copying.
+    pub fn i8_view(&self) -> Result<&[i8]> {
         if self.dtype != DType::I8 {
             bail!("expected i8 tensor, got {:?}", self.dtype);
         }
-        Ok(self.data.iter().map(|b| *b as i8).collect())
+        Ok(self.data.as_typed::<i8>())
     }
 
-    pub fn as_u8(&self) -> Result<Vec<u8>> {
+    /// Borrow the elements as `&[u8]` without copying.
+    pub fn u8_view(&self) -> Result<&[u8]> {
         if self.dtype != DType::U8 {
             bail!("expected u8 tensor, got {:?}", self.dtype);
         }
-        Ok(self.data.clone())
+        Ok(self.data.as_typed::<u8>())
     }
 
-    pub fn as_i32(&self) -> Result<Vec<i32>> {
+    /// Borrow the elements as `&[i32]` without copying.
+    pub fn i32_view(&self) -> Result<&[i32]> {
         if self.dtype != DType::I32 {
             bail!("expected i32 tensor, got {:?}", self.dtype);
         }
-        Ok(self
-            .data
-            .chunks_exact(4)
-            .map(|c| i32::from_le_bytes([c[0], c[1], c[2], c[3]]))
-            .collect())
+        Ok(self.data.as_typed::<i32>())
+    }
+
+    // -- owned accessors (copying; prefer the views on hot paths) -----------
+
+    pub fn as_f32(&self) -> Result<Vec<f32>> {
+        Ok(self.f32_view()?.to_vec())
+    }
+
+    pub fn as_i8(&self) -> Result<Vec<i8>> {
+        Ok(self.i8_view()?.to_vec())
+    }
+
+    pub fn as_u8(&self) -> Result<Vec<u8>> {
+        Ok(self.u8_view()?.to_vec())
+    }
+
+    pub fn as_i32(&self) -> Result<Vec<i32>> {
+        Ok(self.i32_view()?.to_vec())
     }
 
     /// Reinterpret with a new shape (same element count).
@@ -187,14 +284,50 @@ mod tests {
     }
 
     #[test]
+    fn views_are_zero_copy_and_equal_to_owned() {
+        let vals = vec![1.0f32, -2.5, 3.25, 0.0, 5.5];
+        let t = Tensor::from_f32(vec![5], vals.clone());
+        let v = t.f32_view().unwrap();
+        assert_eq!(v, &vals[..]);
+        // the view points into the tensor's own storage
+        assert_eq!(v.as_ptr() as usize, t.bytes().as_ptr() as usize);
+
+        let ti = Tensor::from_i32(vec![3], vec![-7, 0, 9]);
+        assert_eq!(ti.i32_view().unwrap(), &[-7, 0, 9]);
+        let tu = Tensor::from_u8(vec![3], vec![1, 2, 255]);
+        assert_eq!(tu.u8_view().unwrap(), &[1, 2, 255]);
+        let tb = Tensor::from_i8(vec![2], vec![-1, 1]);
+        assert_eq!(tb.i8_view().unwrap(), &[-1, 1]);
+    }
+
+    #[test]
+    fn view_buffers_are_aligned() {
+        // odd byte counts still yield 8-byte-aligned storage
+        for n in [1usize, 3, 5, 7, 9, 1023] {
+            let t = Tensor::from_u8(vec![n], vec![7u8; n]);
+            assert_eq!(t.bytes().as_ptr() as usize % 8, 0, "n={n}");
+        }
+        let t = Tensor::from_f32(vec![3], vec![1.0, 2.0, 3.0]);
+        assert_eq!(t.f32_view().unwrap().as_ptr() as usize % 4, 0);
+    }
+
+    #[test]
+    fn bytes_survive_roundtrip_through_file_format() {
+        let t = Tensor::from_f32(vec![2], vec![1.5, -2.5]);
+        let back = Tensor::from_bytes(DType::F32, vec![2], t.bytes()).unwrap();
+        assert_eq!(t, back);
+    }
+
+    #[test]
     fn shape_mismatch_rejected() {
-        assert!(Tensor::from_bytes(DType::F32, vec![2, 2], vec![0u8; 15]).is_err());
+        assert!(Tensor::from_bytes(DType::F32, vec![2, 2], &[0u8; 15]).is_err());
     }
 
     #[test]
     fn dtype_mismatch_rejected() {
         let t = Tensor::from_i8(vec![1], vec![3]);
         assert!(t.as_f32().is_err());
+        assert!(t.f32_view().is_err());
     }
 
     #[test]

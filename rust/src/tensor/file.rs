@@ -49,7 +49,7 @@ fn parse(data: &[u8]) -> Result<BTreeMap<String, Tensor>> {
         if off + nbytes > data.len() {
             bail!("truncated tensor data for {name}");
         }
-        let t = Tensor::from_bytes(dtype, shape, data[off..off + nbytes].to_vec())?;
+        let t = Tensor::from_bytes(dtype, shape, &data[off..off + nbytes])?;
         off += nbytes;
         out.insert(name, t);
     }

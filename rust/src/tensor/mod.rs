@@ -9,5 +9,6 @@
 mod array;
 mod file;
 
+pub(crate) use array::pod_bytes;
 pub use array::{DType, Tensor};
 pub use file::{load_tensor_file, save_tensor_file};

@@ -1,0 +1,117 @@
+//! Dependency-free scoped-thread row-parallel driver for the quantization
+//! hot path (`quant::kernels`), using the same plain `std::thread`
+//! substrate as `collective::ops` and `coordinator::server`.
+//!
+//! The model: split a `[rows, width]` row-major buffer into contiguous
+//! row ranges, hand each range (and the matching disjoint `&mut` output
+//! block) to one scoped thread, and — for column reductions — combine
+//! per-range partials *in range order* on the calling thread. Per-element
+//! math is untouched and f32 min/max are associative, so results are
+//! bit-identical to the single-threaded traversal for any thread count
+//! (`tests/kernel_equivalence.rs` pins this).
+
+use std::ops::Range;
+use std::sync::OnceLock;
+
+/// Worker threads to fan out to: the `LLEQ_THREADS` env override when set
+/// (>= 1), otherwise the machine's available parallelism. Cached for the
+/// process lifetime.
+pub fn max_threads() -> usize {
+    static CACHED: OnceLock<usize> = OnceLock::new();
+    *CACHED.get_or_init(|| {
+        std::env::var("LLEQ_THREADS")
+            .ok()
+            .and_then(|s| s.parse::<usize>().ok())
+            .filter(|n| *n >= 1)
+            .unwrap_or_else(|| {
+                std::thread::available_parallelism().map(|n| n.get()).unwrap_or(1)
+            })
+    })
+}
+
+/// Split `rows` into at most `max_chunks` contiguous ranges of at least
+/// `min_rows` rows each (sizes differ by at most one row). Returns a
+/// single range when the work is too small to be worth fanning out, and
+/// no ranges when `rows == 0`.
+pub fn chunk_ranges(rows: usize, max_chunks: usize, min_rows: usize) -> Vec<Range<usize>> {
+    if rows == 0 {
+        return Vec::new();
+    }
+    let cap = (rows / min_rows.max(1)).max(1);
+    let chunks = max_chunks.max(1).min(cap);
+    let base = rows / chunks;
+    let rem = rows % chunks;
+    let mut out = Vec::with_capacity(chunks);
+    let mut start = 0;
+    for i in 0..chunks {
+        let len = base + usize::from(i < rem);
+        out.push(start..start + len);
+        start += len;
+    }
+    out
+}
+
+/// Split a `rows * width` row-major buffer into one mutable block per
+/// range (ranges must be contiguous, ascending, and cover a prefix of the
+/// buffer — exactly what `chunk_ranges` produces).
+pub fn split_rows<'a, T>(
+    mut data: &'a mut [T],
+    ranges: &[Range<usize>],
+    width: usize,
+) -> Vec<&'a mut [T]> {
+    let mut out = Vec::with_capacity(ranges.len());
+    for r in ranges {
+        let (head, tail) = data.split_at_mut((r.end - r.start) * width);
+        out.push(head);
+        data = tail;
+    }
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn chunk_ranges_cover_rows_exactly() {
+        for rows in [1usize, 2, 7, 64, 513] {
+            for chunks in [1usize, 2, 3, 8] {
+                let rs = chunk_ranges(rows, chunks, 1);
+                assert!(rs.len() <= chunks);
+                assert_eq!(rs.first().unwrap().start, 0);
+                assert_eq!(rs.last().unwrap().end, rows);
+                for w in rs.windows(2) {
+                    assert_eq!(w[0].end, w[1].start);
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn chunk_ranges_respect_min_rows() {
+        // 10 rows at min 4 per chunk -> at most 2 chunks
+        let rs = chunk_ranges(10, 8, 4);
+        assert!(rs.len() <= 2);
+        // tiny work stays single-chunk
+        assert_eq!(chunk_ranges(3, 8, 4).len(), 1);
+        assert!(chunk_ranges(0, 8, 4).is_empty());
+    }
+
+    #[test]
+    fn split_rows_partitions_disjointly() {
+        let mut data = vec![0u32; 10 * 3];
+        let ranges = chunk_ranges(10, 4, 1);
+        let blocks = split_rows(&mut data, &ranges, 3);
+        assert_eq!(blocks.len(), ranges.len());
+        let total: usize = blocks.iter().map(|b| b.len()).sum();
+        assert_eq!(total, 30);
+        for (r, b) in ranges.iter().zip(&blocks) {
+            assert_eq!(b.len(), (r.end - r.start) * 3);
+        }
+    }
+
+    #[test]
+    fn max_threads_is_at_least_one() {
+        assert!(max_threads() >= 1);
+    }
+}

@@ -118,6 +118,37 @@ impl<A: Gen, B: Gen> Gen for Pair<A, B> {
     }
 }
 
+/// Triple generator (shrinks one coordinate at a time, like `Pair`).
+pub struct Triple<A, B, C>(pub A, pub B, pub C);
+
+impl<A: Gen, B: Gen, C: Gen> Gen for Triple<A, B, C> {
+    type Value = (A::Value, B::Value, C::Value);
+    fn draw(&self, rng: &mut XorShift64Star) -> Self::Value {
+        (self.0.draw(rng), self.1.draw(rng), self.2.draw(rng))
+    }
+    fn shrink(&self, v: &Self::Value) -> Vec<Self::Value> {
+        let mut out: Vec<Self::Value> = self
+            .0
+            .shrink(&v.0)
+            .into_iter()
+            .map(|a| (a, v.1.clone(), v.2.clone()))
+            .collect();
+        out.extend(
+            self.1
+                .shrink(&v.1)
+                .into_iter()
+                .map(|b| (v.0.clone(), b, v.2.clone())),
+        );
+        out.extend(
+            self.2
+                .shrink(&v.2)
+                .into_iter()
+                .map(|c| (v.0.clone(), v.1.clone(), c)),
+        );
+        out
+    }
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -143,5 +174,11 @@ mod tests {
     fn pair_draws_both() {
         let gen = Pair(UsizeRange(1, 4), UsizeRange(5, 8));
         check(4, 100, &gen, |(a, b)| *a <= 4 && *b >= 5);
+    }
+
+    #[test]
+    fn triple_draws_all_three() {
+        let gen = Triple(UsizeRange(1, 4), UsizeRange(5, 8), UsizeRange(9, 12));
+        check(5, 100, &gen, |(a, b, c)| *a <= 4 && *b >= 5 && *c >= 9);
     }
 }

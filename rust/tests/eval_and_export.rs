@@ -1,4 +1,5 @@
 //! Integration: perplexity evaluator + ONNX export over real artifacts.
+#![cfg(feature = "xla")] // needs the PJRT runtime + compiled artifacts
 
 use std::sync::Arc;
 

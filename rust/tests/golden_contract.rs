@@ -2,6 +2,7 @@
 //! own `quant::prepare`, executes the AOT HLO graphs through PJRT, and
 //! must reproduce the logits Python computed with its own quantizers and
 //! jax execution (artifacts/golden.bin, written by python/compile/aot.py).
+#![cfg(feature = "xla")] // needs the PJRT runtime + compiled artifacts
 //!
 //! This is the single test that pins all three layers together: if the
 //! Rust quantizer drifts from the Python reference by even one rounding

@@ -1,0 +1,203 @@
+//! Kernel equivalence: the fused/blocked/thread-parallel `_into` kernels
+//! (`quant::kernels`) must produce codes and scales **bit-identical** to
+//! the pinned scalar reference (`quant::reference`) — across ragged
+//! shapes (odd N, K not a multiple of the row-block size, `t == 0`
+//! SimQuant), across bitwidths, and across thread counts (1 vs N must
+//! agree exactly). Shapes large enough to actually fan out across
+//! several row ranges are included on purpose.
+
+use llmeasyquant::corpus::XorShift64Star;
+use llmeasyquant::quant::{self, reference};
+use llmeasyquant::util::proptest::{check, Triple, UsizeRange};
+
+fn randn(n: usize, seed: u64) -> Vec<f32> {
+    let mut r = XorShift64Star::new(seed);
+    (0..n).map(|_| r.next_normal() as f32).collect()
+}
+
+/// Scales must match to the last bit, not just approximately.
+fn bits_eq(a: &[f32], b: &[f32]) -> bool {
+    a.len() == b.len() && a.iter().zip(b).all(|(x, y)| x.to_bits() == y.to_bits())
+}
+
+/// Thread counts to pin: serial, even split, odd split.
+const THREADS: [usize; 3] = [1, 2, 5];
+
+/// Ragged + large-enough-to-parallelize [K, N] shapes.
+const SHAPES: [(usize, usize); 8] = [
+    (1, 1),
+    (3, 5),
+    (7, 33),
+    (64, 64),
+    (65, 31),
+    (513, 7),
+    (257, 300),  // splits into >= 2 row ranges
+    (1031, 129), // splits into >= 4 row ranges
+];
+
+fn check_symmetric(k: usize, n: usize, bits: u32, seed: u64) {
+    let w = randn(k * n, seed);
+    let (rq, rd) = reference::symmetric_quantize_channel(&w, k, n, bits);
+    let (q, d) = quant::symmetric_quantize_channel(&w, k, n, bits).unwrap();
+    assert_eq!(q, rq, "wrapper codes k={k} n={n}");
+    assert!(bits_eq(&d, &rd), "wrapper scales k={k} n={n}");
+    for &t in &THREADS {
+        let mut q2 = vec![0i8; k * n];
+        let mut d2 = vec![0f32; n];
+        quant::symmetric_quantize_channel_into_threads(&w, k, n, bits, &mut q2, &mut d2, t)
+            .unwrap();
+        assert_eq!(q2, rq, "codes k={k} n={n} threads={t}");
+        assert!(bits_eq(&d2, &rd), "scales k={k} n={n} threads={t}");
+    }
+}
+
+fn check_token(t_rows: usize, d: usize, bits: u32, seed: u64) {
+    let x = randn(t_rows * d, seed);
+    let (rq, rd) = reference::token_quantize(&x, t_rows, d, bits);
+    let (q, dl) = quant::token_quantize(&x, t_rows, d, bits).unwrap();
+    assert_eq!(q, rq, "wrapper codes t={t_rows} d={d}");
+    assert!(bits_eq(&dl, &rd), "wrapper scales t={t_rows} d={d}");
+    for &th in &THREADS {
+        let mut q2 = vec![0i8; t_rows * d];
+        let mut d2 = vec![0f32; t_rows];
+        quant::token_quantize_into_threads(&x, t_rows, d, bits, &mut q2, &mut d2, th).unwrap();
+        assert_eq!(q2, rq, "codes t={t_rows} d={d} threads={th}");
+        assert!(bits_eq(&d2, &rd), "scales t={t_rows} d={d} threads={th}");
+    }
+}
+
+fn check_simquant(t_rows: usize, d: usize, bits: u32, seed: u64) {
+    let x = randn(t_rows * d, seed);
+    let (rq, rmin, rstep) = reference::simquant_encode(&x, t_rows, d, bits);
+    let (q, vmin, step) = quant::simquant_encode(&x, t_rows, d, bits).unwrap();
+    assert_eq!(q, rq, "wrapper codes t={t_rows} d={d}");
+    assert!(bits_eq(&vmin, &rmin), "wrapper vmin t={t_rows} d={d}");
+    assert!(bits_eq(&step, &rstep), "wrapper step t={t_rows} d={d}");
+    for &th in &THREADS {
+        let mut q2 = vec![0u8; t_rows * d];
+        let mut mn2 = vec![7.0f32; d]; // stale contents must be overwritten
+        let mut st2 = vec![7.0f32; d];
+        quant::simquant_encode_into_threads(&x, t_rows, d, bits, &mut q2, &mut mn2, &mut st2, th)
+            .unwrap();
+        assert_eq!(q2, rq, "codes t={t_rows} d={d} threads={th}");
+        assert!(bits_eq(&mn2, &rmin), "vmin t={t_rows} d={d} threads={th}");
+        assert!(bits_eq(&st2, &rstep), "step t={t_rows} d={d} threads={th}");
+    }
+}
+
+fn check_zeroquant(groups: usize, group: usize, n: usize, bits: u32, seed: u64) {
+    let k = groups * group;
+    let w = randn(k * n, seed);
+    let (rq, rd) = reference::zeroquant_group_quantize(&w, k, n, group, bits);
+    let (q, d) = quant::zeroquant_group_quantize(&w, k, n, group, bits).unwrap();
+    assert_eq!(q, rq, "wrapper codes k={k} n={n} g={group}");
+    assert!(bits_eq(&d, &rd), "wrapper scales k={k} n={n} g={group}");
+    for &th in &THREADS {
+        let mut q2 = vec![0i8; k * n];
+        let mut d2 = vec![0f32; groups * n];
+        quant::zeroquant_group_quantize_into_threads(&w, k, n, group, bits, &mut q2, &mut d2, th)
+            .unwrap();
+        assert_eq!(q2, rq, "codes k={k} n={n} g={group} threads={th}");
+        assert!(bits_eq(&d2, &rd), "scales k={k} n={n} g={group} threads={th}");
+    }
+}
+
+#[test]
+fn symmetric_matches_reference_across_shapes() {
+    for (i, &(k, n)) in SHAPES.iter().enumerate() {
+        check_symmetric(k, n, 8, 100 + i as u64);
+    }
+    check_symmetric(65, 31, 4, 7); // low-bit path
+}
+
+#[test]
+fn token_matches_reference_across_shapes() {
+    for (i, &(t, d)) in SHAPES.iter().enumerate() {
+        check_token(t, d, 8, 200 + i as u64);
+    }
+    check_token(513, 7, 2, 8); // minimum valid bitwidth
+}
+
+#[test]
+fn simquant_matches_reference_across_shapes() {
+    for (i, &(t, d)) in SHAPES.iter().enumerate() {
+        check_simquant(t, d, 8, 300 + i as u64);
+    }
+    check_simquant(257, 300, 4, 9);
+    check_simquant(65, 31, 1, 12); // 1-bit is valid for the unsigned scheme
+    // t == 0: params must match the reference's zeroed form exactly
+    check_simquant(0, 16, 8, 10);
+}
+
+#[test]
+fn zeroquant_matches_reference_across_shapes() {
+    for &(groups, group, n) in &[
+        (1usize, 1usize, 1usize),
+        (4, 3, 5),
+        (4, 16, 33),
+        (1, 5, 7),
+        (128, 8, 66), // splits into >= 2 group ranges
+    ] {
+        check_zeroquant(groups, group, n, 8, (groups * group * n) as u64);
+    }
+    check_zeroquant(4, 4, 9, 3, 11);
+}
+
+#[test]
+fn zero_width_inputs_match_reference() {
+    // d == 0 / n == 0: the reference's index loops degenerate to no-ops
+    // (token still emits its EPS-floor scales); the fast kernels must too
+    check_symmetric(5, 0, 8, 1);
+    check_token(3, 0, 8, 2);
+    check_simquant(3, 0, 8, 3);
+    check_zeroquant(2, 2, 0, 8, 4);
+}
+
+#[test]
+fn all_zero_and_constant_inputs_match() {
+    // degenerate data exercises the EPS floors identically on both paths
+    for &(k, n) in &[(5usize, 9usize), (257, 300)] {
+        let zeros = vec![0f32; k * n];
+        let (rq, rd) = reference::symmetric_quantize_channel(&zeros, k, n, 8);
+        let (q, d) = quant::symmetric_quantize_channel(&zeros, k, n, 8).unwrap();
+        assert_eq!(q, rq);
+        assert!(bits_eq(&d, &rd));
+        let ones = vec![1f32; k * n];
+        let (rq, rmin, rstep) = reference::simquant_encode(&ones, k, n, 8);
+        let (q, mn, st) = quant::simquant_encode(&ones, k, n, 8).unwrap();
+        assert_eq!(q, rq);
+        assert!(bits_eq(&mn, &rmin));
+        assert!(bits_eq(&st, &rstep));
+    }
+}
+
+#[test]
+fn prop_random_shapes_bit_identical() {
+    // random small-to-medium shapes; shrinking reports the minimal (k, n)
+    let gen = Triple(UsizeRange(1, 48), UsizeRange(1, 48), UsizeRange(0, 10_000));
+    check(42, 60, &gen, |&(k, n, seed)| {
+        let w = randn(k * n, seed as u64);
+        let (rq, rd) = reference::symmetric_quantize_channel(&w, k, n, 8);
+        let (rtq, rtd) = reference::token_quantize(&w, k, n, 8);
+        let (rsq, rsm, rss) = reference::simquant_encode(&w, k, n, 8);
+        let mut ok = true;
+        for &th in &THREADS {
+            let mut q = vec![0i8; k * n];
+            let mut d = vec![0f32; n];
+            quant::symmetric_quantize_channel_into_threads(&w, k, n, 8, &mut q, &mut d, th)
+                .unwrap();
+            ok &= q == rq && bits_eq(&d, &rd);
+            let mut tq = vec![0i8; k * n];
+            let mut td = vec![0f32; k];
+            quant::token_quantize_into_threads(&w, k, n, 8, &mut tq, &mut td, th).unwrap();
+            ok &= tq == rtq && bits_eq(&td, &rtd);
+            let mut sq = vec![0u8; k * n];
+            let mut sm = vec![0f32; n];
+            let mut ss = vec![0f32; n];
+            quant::simquant_encode_into_threads(&w, k, n, 8, &mut sq, &mut sm, &mut ss, th)
+                .unwrap();
+            ok &= sq == rsq && bits_eq(&sm, &rsm) && bits_eq(&ss, &rss);
+        }
+        ok
+    });
+}

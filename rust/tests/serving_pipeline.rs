@@ -1,5 +1,6 @@
 //! End-to-end serving integration: registry -> server -> workers -> PJRT,
 //! across variants, shard counts, and failure cases. Requires artifacts.
+#![cfg(feature = "xla")] // needs the PJRT runtime + compiled artifacts
 
 use std::sync::Arc;
 use std::time::Duration;
