@@ -175,7 +175,10 @@ mod tests {
             let center = if i < 10 { 0.0 } else { 50.0 };
             pts.push((0..8).map(|_| center + r.next_normal()).collect::<Vec<f64>>());
         }
-        let emb = tsne(&pts, TsneConfig { iterations: 600, learning_rate: 50.0, ..Default::default() });
+        let emb = tsne(
+            &pts,
+            TsneConfig { iterations: 600, learning_rate: 50.0, ..Default::default() },
+        );
         // mean intra-cluster distance << inter-cluster distance
         let d = |a: (f64, f64), b: (f64, f64)| ((a.0 - b.0).powi(2) + (a.1 - b.1).powi(2)).sqrt();
         let ca = (

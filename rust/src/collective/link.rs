@@ -50,6 +50,28 @@ impl LinkModel {
         2.0 * (n - 1) as f64 * self.hop_time(bytes / n)
     }
 
+    /// Ring all-gather whose per-rank contribution is split into `chunks`
+    /// pipelined messages (the quantized-wire path): each of the (n-1)
+    /// steps pays one launch latency and streams its chunk train
+    /// back-to-back over the established channel; the extra `(c-1)`
+    /// fill term is the pipeline depth (first chunk in flight while the
+    /// rest are still being produced).
+    pub fn ring_allgather_chunked_time(&self, bytes: usize, n: usize, chunks: usize) -> f64 {
+        if n <= 1 {
+            return 0.0;
+        }
+        let c = chunks.max(1) as f64;
+        let per_rank = bytes as f64 / n as f64;
+        (n - 1) as f64 * (self.alpha_s + per_rank / self.beta_bps)
+            + (c - 1.0) * per_rank / c / self.beta_bps
+    }
+
+    /// Chunked ring all-reduce: reduce-scatter + all-gather, each step
+    /// carrying `chunks` messages of the per-rank contribution.
+    pub fn ring_allreduce_chunked_time(&self, bytes: usize, n: usize, chunks: usize) -> f64 {
+        2.0 * self.ring_allgather_chunked_time(bytes, n, chunks)
+    }
+
     /// Binomial-tree broadcast: ceil(log2 n) hops of the full payload.
     pub fn broadcast_time(&self, bytes: usize, n: usize) -> f64 {
         if n <= 1 {
@@ -111,6 +133,18 @@ mod tests {
         assert_eq!(l.ring_allgather_time(1024, 1), 0.0);
         assert_eq!(l.ring_allreduce_time(1024, 1), 0.0);
         assert_eq!(l.broadcast_time(1024, 1), 0.0);
+    }
+
+    #[test]
+    fn chunked_time_reduces_to_plain_at_one_chunk() {
+        let l = LinkModel::nvlink();
+        let (b, n) = (1 << 20, 4);
+        let plain = l.ring_allgather_time(b, n);
+        let one = l.ring_allgather_chunked_time(b, n, 1);
+        assert!((plain - one).abs() < 1e-15);
+        // more chunks -> same wire bytes, plus the pipeline-fill cost
+        assert!(l.ring_allgather_chunked_time(b, n, 16) > plain);
+        assert_eq!(l.ring_allgather_chunked_time(b, 1, 16), 0.0);
     }
 
     #[test]

@@ -9,11 +9,91 @@
 //!
 //! Transports mirror the paper's deployment modes: NVLink/RDMA ring for
 //! single-node multi-GPU, TCP fallback for edge / multi-node.
+//!
+//! The `_q` ops quantize at the ring endpoints (per-chunk token scales,
+//! bit-packed sub-byte codes) so the wire itself is low-bit; byte and
+//! sim-time accounting reflect the quantized payload sizes.
 
 mod link;
 mod ops;
 mod topology;
 
 pub use link::{CommStats, LinkModel};
-pub use ops::{Collective, OpError};
+pub use ops::{Collective, OpError, QUANT_CHUNK};
 pub use topology::{Topology, Transport};
+
+/// Spawn a `world`-rank ring, all-gather `len` synthetic f32 per rank
+/// over the given wire (`bits == 32` = raw f32, otherwise the quantized
+/// wire), and return rank 0's accumulated stats. Wire-byte and sim-time
+/// accounting depend only on the shape, not the values — this is the
+/// shared harness behind the wire-ratio bench, example, and acceptance
+/// test.
+pub fn wire_allgather_stats(
+    world: usize,
+    len: usize,
+    bits: u32,
+    transport: Transport,
+) -> CommStats {
+    let ring = Collective::ring(Topology::new(world, transport));
+    let handles: Vec<_> = ring
+        .into_iter()
+        .map(|mut c| {
+            std::thread::spawn(move || {
+                let local: Vec<f32> =
+                    (0..len).map(|i| ((i + c.rank()) as f32 * 0.37).sin()).collect();
+                if bits == 32 {
+                    c.all_gather(local).unwrap();
+                } else {
+                    c.all_gather_quant(&local, bits).unwrap();
+                }
+                c.stats()
+            })
+        })
+        .collect();
+    let stats: Vec<CommStats> = handles.into_iter().map(|h| h.join().unwrap()).collect();
+    stats[0]
+}
+
+/// One row of the wire-format comparison table.
+pub struct WireFormatRow {
+    /// 32 = raw f32, otherwise the quantized code width
+    pub bits: u32,
+    /// display label ("f32", "q8 packed", ...)
+    pub label: String,
+    pub bytes_per_rank: u64,
+    pub ratio_vs_f32: f64,
+    pub sim_time_s: f64,
+}
+
+/// Sweep the wire formats (f32 / q8 / packed q4 / packed q2) for one
+/// all-gather shape and return a comparison row per format — the shared
+/// data source behind the wire-ratio bench and example.
+pub fn wire_format_rows(world: usize, len: usize, transport: Transport) -> Vec<WireFormatRow> {
+    let mut rows = Vec::new();
+    let mut f32_bytes = 0u64;
+    for bits in [32u32, 8, 4, 2] {
+        let stats = wire_allgather_stats(world, len, bits, transport);
+        if bits == 32 {
+            f32_bytes = stats.bytes_sent;
+        }
+        let label = if bits == 32 {
+            "f32".to_string()
+        } else {
+            format!("q{bits} packed")
+        };
+        // a 1-rank ring sends nothing; report ratio 1.0 instead of 0/0
+        let ratio_vs_f32 = if f32_bytes == 0 {
+            1.0
+        } else {
+            stats.bytes_sent as f64 / f32_bytes as f64
+        };
+        rows.push(WireFormatRow {
+            bits,
+            label,
+            bytes_per_rank: stats.bytes_sent,
+            ratio_vs_f32,
+            sim_time_s: stats.sim_time_s,
+        });
+    }
+    rows
+}

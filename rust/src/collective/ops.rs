@@ -5,28 +5,111 @@
 //! against divergence — Thm. 4 consistency depends on it). Payloads travel
 //! over mpsc channels to the next rank in the ring; simulated wire time is
 //! accounted against the topology's link model.
+//!
+//! # Quantized wire
+//!
+//! The `_q` variants make the wire itself low-bit (the paper's claim that
+//! quantization must reach the communication layer): the send endpoint
+//! splits its contribution into chunks, token-quantizes each chunk (one
+//! f32 scale per chunk, `quant::kernels::token_quantize_packed_into`),
+//! and ships bit-packed codes; every receive endpoint decodes. Encoding
+//! chunk *k+1* happens after chunk *k* is already on the wire, so encode
+//! overlaps flight. All ranks — the contributor included — adopt the
+//! *dequantized* values, so the merged result is identical on every rank.
+//! `CommStats::bytes_sent` counts the quantized bytes actually shipped
+//! (codes + scales): 8-bit cuts wire bytes ~4x vs f32, packed 4/2-bit
+//! ~8/16x.
 
+use std::fmt;
 use std::sync::mpsc::{channel, Receiver, RecvTimeoutError, Sender};
+use std::sync::Arc;
 use std::time::{Duration, Instant};
 
-use thiserror::Error;
+use crate::quant::kernels;
 
 use super::{CommStats, LinkModel, Topology};
 
 const RECV_TIMEOUT: Duration = Duration::from_secs(30);
 
-#[derive(Debug, Error)]
+/// Elements per quantized wire chunk. Each chunk carries one token scale
+/// and goes on the wire the moment it is encoded, pipelining encode with
+/// the previous chunk's flight down the ring. Public so tests and
+/// benches derive error bounds and byte counts from the real value.
+pub const QUANT_CHUNK: usize = 4096;
+
+#[derive(Debug)]
 pub enum OpError {
-    #[error("rank {rank}: op sequence mismatch: got {got}, expected {expected} — ranks diverged")]
+    /// Ranks issued different op sequences — the SPMD contract broke.
     SequenceMismatch { rank: usize, got: u64, expected: u64 },
-    #[error("rank {rank}: recv timeout/disconnect in {op}")]
+    /// Receive timed out or the ring disconnected.
     Recv { rank: usize, op: &'static str },
+    /// A packet carried the wrong payload kind or malformed chunk bounds.
+    Payload { rank: usize, op: &'static str },
+    /// Quantized op requested with a bitwidth the packed wire format
+    /// cannot carry (must be 2, 4, or 8).
+    InvalidBits { rank: usize, bits: u32 },
+}
+
+impl fmt::Display for OpError {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        match self {
+            OpError::SequenceMismatch { rank, got, expected } => write!(
+                f,
+                "rank {rank}: op sequence mismatch: got {got}, expected {expected} — \
+                 ranks diverged"
+            ),
+            OpError::Recv { rank, op } => {
+                write!(f, "rank {rank}: recv timeout/disconnect in {op}")
+            }
+            OpError::Payload { rank, op } => {
+                write!(f, "rank {rank}: malformed or mismatched payload in {op}")
+            }
+            OpError::InvalidBits { rank, bits } => write!(
+                f,
+                "rank {rank}: quantized collective bits={bits} unsupported \
+                 (wire format packs 2, 4, or 8 bits)"
+            ),
+        }
+    }
+}
+
+impl std::error::Error for OpError {}
+
+/// Wire payload of one ring packet: raw f32, or bit-packed signed codes
+/// with their per-chunk token scales. The quantized buffers are behind
+/// `Arc` so forwarding a chunk down the ring clones a refcount, not the
+/// bytes.
+#[derive(Debug, Clone)]
+enum Payload {
+    F32(Vec<f32>),
+    Quant { bits: u32, n: usize, codes: Arc<Vec<u8>>, scales: Arc<Vec<f32>> },
+}
+
+impl Payload {
+    /// Bytes this payload occupies on the (simulated) wire.
+    fn wire_bytes(&self) -> usize {
+        match self {
+            Payload::F32(d) => d.len() * 4,
+            Payload::Quant { codes, scales, .. } => codes.len() + scales.len() * 4,
+        }
+    }
+}
+
+/// Wire shape of one rank's quantized contribution: (chunk count, bytes
+/// = packed codes + one f32 scale per chunk). The single source for the
+/// gather and the reduce sim-time accounting.
+fn quant_wire_shape(len: usize, bits: u32) -> (usize, usize) {
+    let n_chunks = len.div_ceil(QUANT_CHUNK);
+    (n_chunks, kernels::packed_len(len, bits) + n_chunks * 4)
 }
 
 struct Packet {
     seq: u64,
-    chunk_id: usize,
-    data: Vec<f32>,
+    /// rank whose contribution this packet carries
+    origin: usize,
+    /// chunk index within the origin's contribution (quantized path)
+    part: usize,
+    payload: Payload,
 }
 
 /// One rank's endpoint in the ring.
@@ -85,12 +168,12 @@ impl Collective {
         self.stats
     }
 
-    fn send(&mut self, chunk_id: usize, data: Vec<f32>) {
-        self.stats.bytes_sent += (data.len() * 4) as u64;
-        let _ = self.to_next.send(Packet { seq: self.seq, chunk_id, data });
+    fn send_packet(&mut self, origin: usize, part: usize, payload: Payload) {
+        self.stats.bytes_sent += payload.wire_bytes() as u64;
+        let _ = self.to_next.send(Packet { seq: self.seq, origin, part, payload });
     }
 
-    fn recv(&mut self, op: &'static str) -> Result<(usize, Vec<f32>), OpError> {
+    fn recv_packet(&mut self, op: &'static str) -> Result<Packet, OpError> {
         match self.from_prev.recv_timeout(RECV_TIMEOUT) {
             Ok(p) => {
                 if p.seq != self.seq {
@@ -100,7 +183,7 @@ impl Collective {
                         expected: self.seq,
                     });
                 }
-                Ok((p.chunk_id, p.data))
+                Ok(p)
             }
             Err(RecvTimeoutError::Timeout) | Err(RecvTimeoutError::Disconnected) => {
                 Err(OpError::Recv { rank: self.rank, op })
@@ -120,10 +203,19 @@ impl Collective {
         slots[self.rank] = Some(local.clone());
         let mut carry = (self.rank, local);
         for _ in 0..n.saturating_sub(1) {
-            self.send(carry.0, carry.1);
-            let (cid, data) = self.recv("all_gather")?;
-            slots[cid] = Some(data.clone());
-            carry = (cid, data);
+            self.send_packet(carry.0, 0, Payload::F32(carry.1));
+            let p = self.recv_packet("all_gather")?;
+            let data = match p.payload {
+                Payload::F32(d) => d,
+                Payload::Quant { .. } => {
+                    return Err(OpError::Payload { rank: self.rank, op: "all_gather" })
+                }
+            };
+            if p.origin >= n {
+                return Err(OpError::Payload { rank: self.rank, op: "all_gather" });
+            }
+            slots[p.origin] = Some(data.clone());
+            carry = (p.origin, data);
         }
         self.stats.ops += 1;
         self.stats.sim_time_s += self.link.ring_allgather_time(total_bytes, n);
@@ -182,6 +274,170 @@ impl Collective {
     pub fn barrier(&mut self) -> Result<(), OpError> {
         self.all_gather(Vec::new())?;
         Ok(())
+    }
+
+    // -----------------------------------------------------------------------
+    // Quantized-wire variants
+    // -----------------------------------------------------------------------
+
+    /// Ring all-gather over a quantized wire: contributions are encoded
+    /// at the send endpoint (per-chunk token scales, bit-packed codes),
+    /// shipped low-bit, and decoded at every receive endpoint. The
+    /// contributor adopts its own dequantized chunks too, so all ranks
+    /// return bit-identical vectors. Contributions must have the same
+    /// length on every rank (SPMD contract). `bits` must be 2, 4, or 8.
+    pub fn all_gather_quant(
+        &mut self,
+        local: &[f32],
+        bits: u32,
+    ) -> Result<Vec<Vec<f32>>, OpError> {
+        let t0 = Instant::now();
+        self.seq += 1;
+        if kernels::validate_bits(bits).is_err() || kernels::validate_pack_bits(bits).is_err() {
+            return Err(OpError::InvalidBits { rank: self.rank, bits });
+        }
+        let n = self.world;
+        let rank = self.rank;
+        let len = local.len();
+        let (n_chunks, contrib_bytes) = quant_wire_shape(len, bits);
+        let mut out: Vec<Vec<f32>> = (0..n).map(|_| vec![0f32; len]).collect();
+        if len == 0 {
+            self.stats.ops += 1;
+            self.stats.wall_time_s += t0.elapsed().as_secs_f64();
+            return Ok(out);
+        }
+
+        // step 0: encode chunk k, adopt its dequantized values locally
+        // (borrowed, no clone), then put it on the wire — chunk k is in
+        // flight while chunk k+1 is still being encoded
+        for (ci, chunk) in local.chunks(QUANT_CHUNK).enumerate() {
+            let mut codes = vec![0u8; kernels::packed_len(chunk.len(), bits)];
+            let mut scales = vec![0f32; 1];
+            kernels::token_quantize_packed_into(
+                chunk,
+                1,
+                chunk.len(),
+                bits,
+                &mut codes,
+                &mut scales,
+            )
+            .expect("exact-sized chunk buffers");
+            let start = ci * QUANT_CHUNK;
+            kernels::token_dequantize_packed_into(
+                &codes,
+                &scales,
+                1,
+                chunk.len(),
+                bits,
+                &mut out[rank][start..start + chunk.len()],
+            )
+            .expect("exact-sized chunk buffers");
+            if n > 1 {
+                let payload = Payload::Quant {
+                    bits,
+                    n: chunk.len(),
+                    codes: Arc::new(codes),
+                    scales: Arc::new(scales),
+                };
+                self.send_packet(rank, ci, payload);
+            }
+        }
+        // steps 1..n-1: forward each received chunk before decoding it,
+        // so the next hop is never stalled behind our decode
+        for step in 1..n {
+            let forward = step + 1 < n;
+            for _ in 0..n_chunks {
+                let p = self.recv_packet("all_gather_quant")?;
+                let clen = match &p.payload {
+                    Payload::Quant { n: clen, .. } => *clen,
+                    Payload::F32(_) => {
+                        return Err(OpError::Payload { rank, op: "all_gather_quant" })
+                    }
+                };
+                let start = p.part * QUANT_CHUNK;
+                if p.origin >= n || start + clen > len {
+                    return Err(OpError::Payload { rank, op: "all_gather_quant" });
+                }
+                if forward {
+                    self.send_packet(p.origin, p.part, p.payload.clone());
+                }
+                Self::decode_chunk(
+                    &p.payload,
+                    &mut out[p.origin][start..start + clen],
+                    rank,
+                    "all_gather_quant",
+                )?;
+            }
+        }
+        self.stats.ops += 1;
+        self.stats.sim_time_s +=
+            self.link.ring_allgather_chunked_time(contrib_bytes * n, n, n_chunks);
+        self.stats.wall_time_s += t0.elapsed().as_secs_f64();
+        Ok(out)
+    }
+
+    /// [`Collective::all_gather_quant`] on the INT8 wire — the 4x
+    /// wire-byte cut over f32 with no packing step.
+    pub fn all_gather_q8(&mut self, local: &[f32]) -> Result<Vec<Vec<f32>>, OpError> {
+        self.all_gather_quant(local, 8)
+    }
+
+    /// All-reduce (sum) over the quantized wire: gather dequantized
+    /// contributions, reduce locally. Identical on every rank because
+    /// each rank sums the same dequantized values.
+    pub fn all_reduce_sum_q(&mut self, local: &[f32], bits: u32) -> Result<Vec<f32>, OpError> {
+        self.all_reduce_q(local, bits, 0.0, |a, b| a + b)
+    }
+
+    /// Element-wise max reduction over the quantized wire — the scale
+    /// synchronizer's merge rule, shipped low-bit.
+    pub fn all_reduce_max_q(&mut self, local: &[f32], bits: u32) -> Result<Vec<f32>, OpError> {
+        self.all_reduce_q(local, bits, f32::NEG_INFINITY, f32::max)
+    }
+
+    /// Shared body of the quantized reductions: gather over the
+    /// quantized wire, swap the all-gather sim-time entry for the
+    /// all-reduce ring formula (same wire shape, via
+    /// [`quant_wire_shape`]), fold locally.
+    fn all_reduce_q(
+        &mut self,
+        local: &[f32],
+        bits: u32,
+        init: f32,
+        fold: fn(f32, f32) -> f32,
+    ) -> Result<Vec<f32>, OpError> {
+        let len = local.len();
+        let (n_chunks, contrib_bytes) = quant_wire_shape(len, bits);
+        let total = contrib_bytes * self.world;
+        let parts = self.all_gather_quant(local, bits)?;
+        if len > 0 {
+            self.stats.sim_time_s -=
+                self.link.ring_allgather_chunked_time(total, self.world, n_chunks);
+            self.stats.sim_time_s +=
+                self.link.ring_allreduce_chunked_time(total, self.world, n_chunks);
+        }
+        let mut out = vec![init; len];
+        for p in parts {
+            for (o, v) in out.iter_mut().zip(p) {
+                *o = fold(*o, v);
+            }
+        }
+        Ok(out)
+    }
+
+    fn decode_chunk(
+        payload: &Payload,
+        out: &mut [f32],
+        rank: usize,
+        op: &'static str,
+    ) -> Result<(), OpError> {
+        match payload {
+            Payload::Quant { bits, n, codes, scales } => {
+                kernels::token_dequantize_packed_into(codes, scales, 1, *n, *bits, out)
+                    .map_err(|_| OpError::Payload { rank, op })
+            }
+            Payload::F32(_) => Err(OpError::Payload { rank, op }),
+        }
     }
 }
 
@@ -264,5 +520,57 @@ mod tests {
     fn world_of_one_is_trivial() {
         let results = run_world(1, |mut c| c.all_gather(vec![7.0]).unwrap());
         assert_eq!(results[0], vec![vec![7.0]]);
+    }
+
+    #[test]
+    fn quant_all_gather_smoke() {
+        let results = run_world(4, |mut c| {
+            let local = vec![c.rank() as f32 + 0.5; 5];
+            (c.all_gather_q8(&local).unwrap(), c.stats())
+        });
+        for (parts, stats) in &results {
+            assert_eq!(parts.len(), 4);
+            for (rank, part) in parts.iter().enumerate() {
+                for v in part {
+                    assert!((v - (rank as f32 + 0.5)).abs() < 0.02, "rank {rank}: {v}");
+                }
+            }
+            assert_eq!(stats.ops, 1);
+            assert!(stats.sim_time_s > 0.0);
+        }
+        // all ranks hold bit-identical merged vectors
+        for (parts, _) in &results[1..] {
+            assert_eq!(parts, &results[0].0);
+        }
+    }
+
+    #[test]
+    fn quant_all_gather_world_of_one_and_empty() {
+        let results = run_world(1, |mut c| c.all_gather_q8(&[3.0, -3.0]).unwrap());
+        assert_eq!(results[0].len(), 1);
+        assert!((results[0][0][0] - 3.0).abs() < 0.05);
+        let results = run_world(2, |mut c| c.all_gather_q8(&[]).unwrap());
+        assert_eq!(results[0], vec![Vec::<f32>::new(); 2]);
+    }
+
+    #[test]
+    fn quant_rejects_unpackable_bits() {
+        let results = run_world(1, |mut c| c.all_gather_quant(&[1.0], 3).is_err());
+        assert!(results[0]);
+    }
+
+    #[test]
+    fn mixed_f32_and_quant_ops_keep_sequence() {
+        let results = run_world(3, |mut c| {
+            let a = c.all_gather(vec![c.rank() as f32]).unwrap();
+            let b = c.all_reduce_sum_q(&[1.0, 2.0], 8).unwrap();
+            let d = c.all_reduce_max(vec![c.rank() as f32]).unwrap();
+            (a, b, d)
+        });
+        for (a, b, d) in results {
+            assert_eq!(a.len(), 3);
+            assert!((b[0] - 3.0).abs() < 0.05 && (b[1] - 6.0).abs() < 0.1);
+            assert_eq!(d[0], 2.0);
+        }
     }
 }

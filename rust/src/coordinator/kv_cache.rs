@@ -9,25 +9,49 @@
 //! re-encode (dequantize codes, widen range, requantize) — the runtime
 //! adaptation that keeps Thm. A.2's bound tight as the sequence grows.
 //!
+//! Pages can store sub-byte codes bit-packed
+//! ([`KvCache::new_simquant_bits`] with 4 or 2 bits): each row occupies
+//! `packed_len(D, bits)` bytes, so `storage_bytes` reports the true
+//! 8x/16x ratio vs f32 instead of one byte per code. At 8 bits the page
+//! layout is byte-for-byte the unpacked one. Sub-byte graph inputs ship
+//! the packed rows (shape `[L, B, CTX, packed_row_bytes]`); the lowered
+//! graphs consuming that wire format are future work — the serving
+//! decode path runs at 8 bits.
+//!
 //! Hot-path contract: prefill ingestion encodes through
 //! `quant::kernels::simquant_encode_into` straight into the cache's own
-//! code/param pages (no staging vectors), page re-encodes run on reused
+//! code/param pages (no staging vectors) — and fans disjoint (slot,
+//! layer) pages out across the worker pool via
+//! [`KvCache::ingest_prefill_batch`]; page re-encodes run on reused
 //! scratch buffers, and `input_literals` builds PJRT literals directly
 //! from the cache buffers — one copy per decode step, total.
 
 use anyhow::Result;
 
 use crate::quant::kernels::{
-    simquant_decode_into, simquant_encode_into, simquant_encode_with_params_into,
+    pack_u8_into, packed_len, simquant_decode_into, simquant_encode_into,
+    simquant_encode_with_params_into, unpack_u8_into, validate_pack_bits,
+    validate_simquant_bits,
 };
 use crate::runtime::{f32_bytes, literal_from_raw, Literal};
 use crate::tensor::{DType, Tensor};
+use crate::util::pool;
 
 /// Whether the cache stores f32 rows or SimQuant u8 codes.
 #[derive(Debug, Clone, Copy, PartialEq, Eq)]
 enum Mode {
     F32,
     SimQuant,
+}
+
+/// One (slot, layer) prefill page for [`KvCache::ingest_prefill_batch`]:
+/// rows `[t_len, D]` per cache, destined for positions `0..t_len`.
+pub struct PrefillPage<'a> {
+    pub slot: usize,
+    pub layer: usize,
+    pub k_rows: &'a [f32],
+    pub v_rows: &'a [f32],
+    pub t_len: usize,
 }
 
 /// Batched KV cache for one worker shard.
@@ -37,6 +61,11 @@ pub struct KvCache {
     ctx: usize,
     d: usize,
     mode: Mode,
+    /// SimQuant code bitwidth (8, 4, 2, or 1); codes below 8 bits are
+    /// stored bit-packed, `row_bytes` per row
+    bits: u32,
+    /// bytes one packed row of codes occupies (== d at 8 bits)
+    row_bytes: usize,
     /// f32 mode: [L, B, CTX, D] values; simquant mode: codes as f32-free u8
     k_f32: Vec<f32>,
     v_f32: Vec<f32>,
@@ -53,6 +82,8 @@ pub struct KvCache {
     scratch: Vec<f32>,
     lo_scratch: Vec<f32>,
     hi_scratch: Vec<f32>,
+    /// reused unpacked-code staging for sub-byte pages
+    code_scratch: Vec<u8>,
     /// page re-encode counter (observability)
     pub reencodes: u64,
 }
@@ -65,6 +96,8 @@ impl KvCache {
             ctx,
             d,
             mode: Mode::F32,
+            bits: 8,
+            row_bytes: d,
             k_f32: vec![0.0; n_layers * batch * ctx * d],
             v_f32: vec![0.0; n_layers * batch * ctx * d],
             k_q: Vec::new(),
@@ -77,21 +110,39 @@ impl KvCache {
             scratch: Vec::new(),
             lo_scratch: Vec::new(),
             hi_scratch: Vec::new(),
+            code_scratch: Vec::new(),
             reencodes: 0,
         }
     }
 
     pub fn new_simquant(n_layers: usize, batch: usize, ctx: usize, d: usize) -> Self {
+        Self::new_simquant_bits(n_layers, batch, ctx, d, 8)
+    }
+
+    /// SimQuant cache storing `bits`-bit codes (8, 4, 2, or 1); sub-byte
+    /// pages are bit-packed, `packed_len(d, bits)` bytes per row.
+    pub fn new_simquant_bits(
+        n_layers: usize,
+        batch: usize,
+        ctx: usize,
+        d: usize,
+        bits: u32,
+    ) -> Self {
+        validate_simquant_bits(bits).expect("KvCache bits");
+        validate_pack_bits(bits).expect("KvCache bits must pack (1, 2, 4, or 8)");
+        let row_bytes = packed_len(d, bits);
         KvCache {
             n_layers,
             batch,
             ctx,
             d,
             mode: Mode::SimQuant,
+            bits,
+            row_bytes,
             k_f32: Vec::new(),
             v_f32: Vec::new(),
-            k_q: vec![0; n_layers * batch * ctx * d],
-            v_q: vec![0; n_layers * batch * ctx * d],
+            k_q: vec![0; n_layers * batch * ctx * row_bytes],
+            v_q: vec![0; n_layers * batch * ctx * row_bytes],
             k_min: vec![0.0; n_layers * batch * d],
             k_step: vec![1e-8; n_layers * batch * d],
             v_min: vec![0.0; n_layers * batch * d],
@@ -100,6 +151,7 @@ impl KvCache {
             scratch: Vec::new(),
             lo_scratch: Vec::new(),
             hi_scratch: Vec::new(),
+            code_scratch: Vec::new(),
             reencodes: 0,
         }
     }
@@ -108,12 +160,22 @@ impl KvCache {
         self.mode == Mode::SimQuant
     }
 
+    /// SimQuant code bitwidth (8 for the f32 cache, vacuously).
+    pub fn code_bits(&self) -> u32 {
+        self.bits
+    }
+
     pub fn len(&self, slot: usize) -> usize {
         self.lens[slot]
     }
 
     pub fn is_empty(&self) -> bool {
         self.lens.iter().all(|l| *l == 0)
+    }
+
+    /// Highest representable code for the current bitwidth.
+    fn levels(&self) -> f32 {
+        ((1u32 << self.bits) - 1) as f32
     }
 
     /// Clear one slot for reuse by a new request.
@@ -131,6 +193,8 @@ impl KvCache {
     }
 
     /// Bytes the cache occupies (memory accounting for the tables).
+    /// Sub-byte caches count their bit-packed code pages, so the reported
+    /// ratio vs f32 is the real one.
     pub fn storage_bytes(&self) -> usize {
         match self.mode {
             Mode::F32 => (self.k_f32.len() + self.v_f32.len()) * 4,
@@ -147,6 +211,12 @@ impl KvCache {
     #[inline]
     fn row_off(&self, layer: usize, slot: usize, t: usize) -> usize {
         ((layer * self.batch + slot) * self.ctx + t) * self.d
+    }
+
+    /// Byte offset of row `t` in the (packed) code pages.
+    #[inline]
+    fn code_off(&self, layer: usize, slot: usize, t: usize) -> usize {
+        ((layer * self.batch + slot) * self.ctx + t) * self.row_bytes
     }
 
     #[inline]
@@ -176,31 +246,128 @@ impl KvCache {
                 self.v_f32[off..off + t_len * d].copy_from_slice(v_rows);
             }
             Mode::SimQuant => {
-                let off = self.row_off(layer, slot, 0);
+                let off = self.code_off(layer, slot, 0);
                 let p = self.param_off(layer, slot);
-                simquant_encode_into(
+                let (bits, row_bytes) = (self.bits, self.row_bytes);
+                let mut scratch = std::mem::take(&mut self.code_scratch);
+                encode_page_packed(
                     k_rows,
                     t_len,
                     d,
-                    8,
-                    &mut self.k_q[off..off + t_len * d],
+                    bits,
+                    row_bytes,
+                    &mut self.k_q[off..off + t_len * row_bytes],
                     &mut self.k_min[p..p + d],
                     &mut self.k_step[p..p + d],
-                )
-                .expect("simquant encode (bits=8, sized buffers) cannot fail");
-                simquant_encode_into(
+                    &mut scratch,
+                );
+                encode_page_packed(
                     v_rows,
                     t_len,
                     d,
-                    8,
-                    &mut self.v_q[off..off + t_len * d],
+                    bits,
+                    row_bytes,
+                    &mut self.v_q[off..off + t_len * row_bytes],
                     &mut self.v_min[p..p + d],
                     &mut self.v_step[p..p + d],
-                )
-                .expect("simquant encode (bits=8, sized buffers) cannot fail");
+                    &mut scratch,
+                );
+                self.code_scratch = scratch;
             }
         }
         self.lens[slot] = self.lens[slot].max(t_len);
+    }
+
+    /// Ingest a batch of disjoint (slot, layer) prefill pages in
+    /// parallel: the cache's own buffers are split into per-page blocks
+    /// and the page encodes fan out across the persistent worker pool.
+    /// Panics if two pages target the same (slot, layer).
+    pub fn ingest_prefill_batch(&mut self, pages: &[PrefillPage<'_>]) {
+        for p in pages {
+            assert!(p.slot < self.batch && p.layer < self.n_layers, "page out of range");
+            assert!(p.t_len <= self.ctx);
+            assert_eq!(p.k_rows.len(), p.t_len * self.d);
+            assert_eq!(p.v_rows.len(), p.t_len * self.d);
+        }
+        let mut order: Vec<usize> = (0..pages.len()).collect();
+        order.sort_by_key(|&i| (pages[i].layer, pages[i].slot));
+        let idxs: Vec<usize> = order
+            .iter()
+            .map(|&i| pages[i].layer * self.batch + pages[i].slot)
+            .collect();
+        for w in idxs.windows(2) {
+            assert!(w[0] < w[1], "duplicate (slot, layer) prefill page");
+        }
+        let d = self.d;
+        match self.mode {
+            Mode::F32 => {
+                let page_len = self.ctx * d;
+                let kblocks = carve(&mut self.k_f32, &idxs, page_len);
+                let vblocks = carve(&mut self.v_f32, &idxs, page_len);
+                let mut tasks: Vec<pool::Task<'_>> = Vec::with_capacity(order.len());
+                for (&pi, (kb, vb)) in order.iter().zip(kblocks.into_iter().zip(vblocks)) {
+                    let p = &pages[pi];
+                    let n = p.t_len * d;
+                    let (k_rows, v_rows) = (p.k_rows, p.v_rows);
+                    tasks.push(Box::new(move || {
+                        kb[..n].copy_from_slice(k_rows);
+                        vb[..n].copy_from_slice(v_rows);
+                    }));
+                }
+                pool::run(tasks);
+            }
+            Mode::SimQuant => {
+                let (bits, row_bytes) = (self.bits, self.row_bytes);
+                let code_page = self.ctx * row_bytes;
+                let kq = carve(&mut self.k_q, &idxs, code_page);
+                let vq = carve(&mut self.v_q, &idxs, code_page);
+                let kmin = carve(&mut self.k_min, &idxs, d);
+                let kstep = carve(&mut self.k_step, &idxs, d);
+                let vmin = carve(&mut self.v_min, &idxs, d);
+                let vstep = carve(&mut self.v_step, &idxs, d);
+                let iter = order
+                    .iter()
+                    .zip(kq.into_iter().zip(vq))
+                    .zip(kmin.into_iter().zip(kstep))
+                    .zip(vmin.into_iter().zip(vstep));
+                let mut tasks: Vec<pool::Task<'_>> = Vec::with_capacity(order.len());
+                for (((&pi, (kqb, vqb)), (kmb, ksb)), (vmb, vsb)) in iter {
+                    let p = &pages[pi];
+                    let (k_rows, v_rows, t_len) = (p.k_rows, p.v_rows, p.t_len);
+                    tasks.push(Box::new(move || {
+                        // per-task staging (only allocated for sub-byte
+                        // pages; the 8-bit path encodes in place)
+                        let mut scratch = Vec::new();
+                        encode_page_packed(
+                            k_rows,
+                            t_len,
+                            d,
+                            bits,
+                            row_bytes,
+                            &mut kqb[..t_len * row_bytes],
+                            kmb,
+                            ksb,
+                            &mut scratch,
+                        );
+                        encode_page_packed(
+                            v_rows,
+                            t_len,
+                            d,
+                            bits,
+                            row_bytes,
+                            &mut vqb[..t_len * row_bytes],
+                            vmb,
+                            vsb,
+                            &mut scratch,
+                        );
+                    }));
+                }
+                pool::run(tasks);
+            }
+        }
+        for p in pages {
+            self.lens[p.slot] = self.lens[p.slot].max(p.t_len);
+        }
     }
 
     /// Append one decode-step row per cache; grows the slot by one.
@@ -236,6 +403,7 @@ impl KvCache {
     ) {
         let p = self.param_off(layer, slot);
         let d = self.d;
+        let levels = self.levels();
         // the zipped loops below would silently truncate a short row
         assert_eq!(row.len(), d, "KV row length != d");
         // check range; widen + re-encode the page if violated
@@ -247,7 +415,7 @@ impl KvCache {
                 (&self.v_min[p..p + d], &self.v_step[p..p + d])
             };
             for ((mn, st), v) in vmin.iter().zip(vstep).zip(row) {
-                let hi = mn + st * 255.0;
+                let hi = mn + st * levels;
                 if *v < mn - 1e-9 || *v > hi + 1e-9 {
                     needs_reencode = true;
                     break;
@@ -268,17 +436,48 @@ impl KvCache {
                 let lo = v.min(0.0);
                 let hi = v.max(0.0);
                 *mn = lo;
-                *st = (hi - lo).max(1e-8) / 255.0;
+                *st = (hi - lo).max(1e-8) / levels;
             }
         }
-        // encode the row with current params (cache pages are 8-bit)
-        let off = self.row_off(layer, slot, t);
-        let (vmin, vstep, codes) = if is_k {
-            (&self.k_min[p..p + d], &self.k_step[p..p + d], &mut self.k_q[off..off + d])
+        // encode the row with current params
+        let off = self.code_off(layer, slot, t);
+        let row_bytes = self.row_bytes;
+        if self.bits == 8 {
+            let (vmin, vstep, codes) = if is_k {
+                (
+                    &self.k_min[p..p + d],
+                    &self.k_step[p..p + d],
+                    &mut self.k_q[off..off + d],
+                )
+            } else {
+                (
+                    &self.v_min[p..p + d],
+                    &self.v_step[p..p + d],
+                    &mut self.v_q[off..off + d],
+                )
+            };
+            simquant_encode_with_params_into(row, vmin, vstep, levels, codes);
         } else {
-            (&self.v_min[p..p + d], &self.v_step[p..p + d], &mut self.v_q[off..off + d])
-        };
-        simquant_encode_with_params_into(row, vmin, vstep, 255.0, codes);
+            // sub-byte: encode into the reused staging row, then pack
+            let mut scratch = std::mem::take(&mut self.code_scratch);
+            scratch.clear();
+            scratch.resize(d, 0);
+            {
+                let (vmin, vstep) = if is_k {
+                    (&self.k_min[p..p + d], &self.k_step[p..p + d])
+                } else {
+                    (&self.v_min[p..p + d], &self.v_step[p..p + d])
+                };
+                simquant_encode_with_params_into(row, vmin, vstep, levels, &mut scratch);
+            }
+            let codes = if is_k {
+                &mut self.k_q[off..off + row_bytes]
+            } else {
+                &mut self.v_q[off..off + row_bytes]
+            };
+            pack_u8_into(&scratch, self.bits, codes).expect("sized packed row");
+            self.code_scratch = scratch;
+        }
     }
 
     /// Widen the page range to cover `row` and requantize existing codes.
@@ -286,18 +485,37 @@ impl KvCache {
     fn reencode_page(&mut self, slot: usize, layer: usize, t: usize, row: &[f32], is_k: bool) {
         let p = self.param_off(layer, slot);
         let d = self.d;
-        let base = self.row_off(layer, slot, 0);
-        // decode current page into the reused scratch
+        let levels = self.levels();
+        let (bits, row_bytes) = (self.bits, self.row_bytes);
+        let base = self.code_off(layer, slot, 0);
+        // decode current page into the reused scratch (unpacking sub-byte
+        // rows through the reused code staging first)
         let mut page = std::mem::take(&mut self.scratch);
         page.clear();
         page.resize(t * d, 0.0);
+        let mut ucodes = std::mem::take(&mut self.code_scratch);
         {
             let (codes, vmin, vstep) = if is_k {
-                (&self.k_q[base..base + t * d], &self.k_min[p..p + d], &self.k_step[p..p + d])
+                (
+                    &self.k_q[base..base + t * row_bytes],
+                    &self.k_min[p..p + d],
+                    &self.k_step[p..p + d],
+                )
             } else {
-                (&self.v_q[base..base + t * d], &self.v_min[p..p + d], &self.v_step[p..p + d])
+                (
+                    &self.v_q[base..base + t * row_bytes],
+                    &self.v_min[p..p + d],
+                    &self.v_step[p..p + d],
+                )
             };
-            simquant_decode_into(codes, vmin, vstep, t, d, &mut page);
+            if bits == 8 {
+                simquant_decode_into(codes, vmin, vstep, t, d, &mut page);
+            } else {
+                ucodes.clear();
+                ucodes.resize(t * d, 0);
+                unpack_rows(codes, t, d, bits, row_bytes, &mut ucodes);
+                simquant_decode_into(&ucodes, vmin, vstep, t, d, &mut page);
+            }
         }
         // widened per-channel range over page + new row
         let mut lo = std::mem::take(&mut self.lo_scratch);
@@ -327,23 +545,41 @@ impl KvCache {
                 vmin.iter_mut().zip(vstep.iter_mut()).zip(lo.iter().zip(&hi))
             {
                 *mn = *l;
-                *st = (h - l).max(1e-8) / 255.0;
+                *st = (h - l).max(1e-8) / levels;
             }
         }
         let (codes, vmin, vstep) = if is_k {
-            (&mut self.k_q[base..base + t * d], &self.k_min[p..p + d], &self.k_step[p..p + d])
+            (
+                &mut self.k_q[base..base + t * row_bytes],
+                &self.k_min[p..p + d],
+                &self.k_step[p..p + d],
+            )
         } else {
-            (&mut self.v_q[base..base + t * d], &self.v_min[p..p + d], &self.v_step[p..p + d])
+            (
+                &mut self.v_q[base..base + t * row_bytes],
+                &self.v_min[p..p + d],
+                &self.v_step[p..p + d],
+            )
         };
-        simquant_encode_with_params_into(&page, vmin, vstep, 255.0, codes);
+        if bits == 8 {
+            simquant_encode_with_params_into(&page, vmin, vstep, levels, codes);
+        } else {
+            ucodes.clear();
+            ucodes.resize(t * d, 0);
+            simquant_encode_with_params_into(&page, vmin, vstep, levels, &mut ucodes);
+            pack_rows(&ucodes, t, d, bits, row_bytes, codes);
+        }
         self.scratch = page;
         self.lo_scratch = lo;
         self.hi_scratch = hi;
+        self.code_scratch = ucodes;
     }
 
     /// Dequantize one slot's K page into a reused buffer (cleared and
     /// refilled) — the scratch-friendly variant of [`KvCache::decode_k`].
-    pub fn decode_k_into(&self, slot: usize, layer: usize, out: &mut Vec<f32>) {
+    /// Sub-byte pages unpack through the cache's reused code staging
+    /// (hence `&mut self`); no per-call allocation on any path.
+    pub fn decode_k_into(&mut self, slot: usize, layer: usize, out: &mut Vec<f32>) {
         let t = self.lens[slot];
         let d = self.d;
         out.clear();
@@ -354,22 +590,39 @@ impl KvCache {
                 out.copy_from_slice(&self.k_f32[off..off + t * d]);
             }
             Mode::SimQuant => {
-                let off = self.row_off(layer, slot, 0);
+                let off = self.code_off(layer, slot, 0);
                 let p = self.param_off(layer, slot);
-                simquant_decode_into(
-                    &self.k_q[off..off + t * d],
-                    &self.k_min[p..p + d],
-                    &self.k_step[p..p + d],
-                    t,
-                    d,
-                    out,
-                );
+                if self.bits == 8 {
+                    simquant_decode_into(
+                        &self.k_q[off..off + t * d],
+                        &self.k_min[p..p + d],
+                        &self.k_step[p..p + d],
+                        t,
+                        d,
+                        out,
+                    );
+                } else {
+                    let rb = self.row_bytes;
+                    let mut ucodes = std::mem::take(&mut self.code_scratch);
+                    ucodes.clear();
+                    ucodes.resize(t * d, 0);
+                    unpack_rows(&self.k_q[off..off + t * rb], t, d, self.bits, rb, &mut ucodes);
+                    simquant_decode_into(
+                        &ucodes,
+                        &self.k_min[p..p + d],
+                        &self.k_step[p..p + d],
+                        t,
+                        d,
+                        out,
+                    );
+                    self.code_scratch = ucodes;
+                }
             }
         }
     }
 
     /// Dequantize one slot's K page (tests + debugging).
-    pub fn decode_k(&self, slot: usize, layer: usize) -> Vec<f32> {
+    pub fn decode_k(&mut self, slot: usize, layer: usize) -> Vec<f32> {
         let mut out = Vec::new();
         self.decode_k_into(slot, layer, &mut out);
         out
@@ -377,7 +630,8 @@ impl KvCache {
 
     /// Build the decode-graph cache input tensors.
     /// f32 mode: [k_cache, v_cache]; simquant: [k_cache, v_cache, k_min,
-    /// k_step, v_min, v_step] in graph input order.
+    /// k_step, v_min, v_step] in graph input order. Sub-byte caches ship
+    /// their packed code rows (`[L, B, CTX, packed_row_bytes]`).
     pub fn graph_inputs(&self) -> Vec<Tensor> {
         let (l, b, c, d) = (self.n_layers, self.batch, self.ctx, self.d);
         match self.mode {
@@ -389,8 +643,8 @@ impl KvCache {
                 let expand =
                     |params: &[f32]| Tensor::from_f32_slice(vec![l, b, 1, d], params);
                 vec![
-                    Tensor::from_u8_slice(vec![l, b, c, d], &self.k_q),
-                    Tensor::from_u8_slice(vec![l, b, c, d], &self.v_q),
+                    Tensor::from_u8_slice(vec![l, b, c, self.row_bytes], &self.k_q),
+                    Tensor::from_u8_slice(vec![l, b, c, self.row_bytes], &self.v_q),
                     expand(&self.k_min),
                     expand(&self.k_step),
                     expand(&self.v_min),
@@ -414,6 +668,7 @@ impl KvCache {
     pub fn input_literals(&self) -> Result<Vec<Literal>> {
         let (l, b, c, d) = (self.n_layers, self.batch, self.ctx, self.d);
         let cache_shape = [l, b, c, d];
+        let code_shape = [l, b, c, self.row_bytes];
         let param_shape = [l, b, 1, d];
         Ok(match self.mode {
             Mode::F32 => vec![
@@ -421,8 +676,8 @@ impl KvCache {
                 literal_from_raw(DType::F32, &cache_shape, f32_bytes(&self.v_f32))?,
             ],
             Mode::SimQuant => vec![
-                literal_from_raw(DType::U8, &cache_shape, &self.k_q)?,
-                literal_from_raw(DType::U8, &cache_shape, &self.v_q)?,
+                literal_from_raw(DType::U8, &code_shape, &self.k_q)?,
+                literal_from_raw(DType::U8, &code_shape, &self.v_q)?,
                 literal_from_raw(DType::F32, &param_shape, f32_bytes(&self.k_min))?,
                 literal_from_raw(DType::F32, &param_shape, f32_bytes(&self.k_step))?,
                 literal_from_raw(DType::F32, &param_shape, f32_bytes(&self.v_min))?,
@@ -430,6 +685,73 @@ impl KvCache {
             ],
         })
     }
+}
+
+/// Encode a `[t_len, D]` page: params per channel, codes written row by
+/// row (bit-packed below 8 bits, `row_bytes` per row). `scratch` stages
+/// the unpacked codes for sub-byte pages and is untouched at 8 bits.
+#[allow(clippy::too_many_arguments)]
+fn encode_page_packed(
+    rows: &[f32],
+    t_len: usize,
+    d: usize,
+    bits: u32,
+    row_bytes: usize,
+    codes: &mut [u8],
+    vmin: &mut [f32],
+    step: &mut [f32],
+    scratch: &mut Vec<u8>,
+) {
+    if bits == 8 {
+        simquant_encode_into(rows, t_len, d, 8, codes, vmin, step)
+            .expect("simquant encode (bits=8, sized buffers) cannot fail");
+        return;
+    }
+    scratch.clear();
+    scratch.resize(t_len * d, 0);
+    simquant_encode_into(rows, t_len, d, bits, scratch, vmin, step)
+        .expect("simquant encode (sized buffers) cannot fail");
+    pack_rows(scratch, t_len, d, bits, row_bytes, codes);
+}
+
+/// Pack `t` unpacked code rows ([t, d] u8) into `row_bytes`-wide packed
+/// rows — the single site for the page row layout (see also
+/// [`unpack_rows`]).
+fn pack_rows(ucodes: &[u8], t: usize, d: usize, bits: u32, row_bytes: usize, codes: &mut [u8]) {
+    for (r, urow) in ucodes.chunks_exact(d).take(t).enumerate() {
+        pack_u8_into(urow, bits, &mut codes[r * row_bytes..(r + 1) * row_bytes])
+            .expect("sized packed row");
+    }
+}
+
+/// Inverse of [`pack_rows`]: unpack `t` packed rows into [t, d] u8 codes.
+fn unpack_rows(codes: &[u8], t: usize, d: usize, bits: u32, row_bytes: usize, ucodes: &mut [u8]) {
+    for r in 0..t {
+        unpack_u8_into(
+            &codes[r * row_bytes..(r + 1) * row_bytes],
+            bits,
+            &mut ucodes[r * d..(r + 1) * d],
+        )
+        .expect("sized packed row");
+    }
+}
+
+/// Split `buf` into one `page`-sized mutable block per index in `idxs`
+/// (strictly ascending); the blocks are disjoint, so they can fan out
+/// across pool tasks.
+fn carve<'a, T>(mut buf: &'a mut [T], idxs: &[usize], page: usize) -> Vec<&'a mut [T]> {
+    let mut out = Vec::with_capacity(idxs.len());
+    let mut pos = 0usize;
+    for &i in idxs {
+        let start = i * page;
+        debug_assert!(start >= pos, "indices must be sorted");
+        let (_, rest) = buf.split_at_mut(start - pos);
+        let (block, rest) = rest.split_at_mut(page);
+        out.push(block);
+        buf = rest;
+        pos = start + page;
+    }
+    out
 }
 
 #[cfg(test)]
@@ -479,6 +801,127 @@ mod tests {
         assert_eq!(&ins[0].u8_view().unwrap()[..t * d], &rq[..]);
         assert_eq!(&ins[2].f32_view().unwrap()[..d], &rmin[..]);
         assert_eq!(&ins[3].f32_view().unwrap()[..d], &rstep[..]);
+    }
+
+    #[test]
+    fn packed_page_roundtrip_matches_unpacked_codes() {
+        // 4-bit page: decode must reproduce exactly what the unpacked
+        // 4-bit reference codes decode to (packing is lossless on codes)
+        let (t, d) = (5, 7); // ragged: row_bytes = 4, last nibble padding
+        let k = rows(t, d, 21, 1.0);
+        let mut kv = KvCache::new_simquant_bits(1, 1, 8, d, 4);
+        kv.ingest_prefill(0, 0, &k, &k, t);
+        let (rq, rmin, rstep) = crate::quant::reference::simquant_encode(&k, t, d, 4);
+        let expect: Vec<f32> = rq
+            .iter()
+            .enumerate()
+            .map(|(j, q)| *q as f32 * rstep[j % d] + rmin[j % d])
+            .collect();
+        assert_eq!(kv.decode_k(0, 0), expect);
+    }
+
+    #[test]
+    fn packed_append_and_reencode_stay_bounded() {
+        let mut kv = KvCache::new_simquant_bits(1, 1, 16, 4, 4);
+        let k = vec![0.1, 0.1, 0.1, 0.1, 0.2, 0.2, 0.2, 0.2];
+        kv.ingest_prefill(0, 0, &k, &k, 2);
+        let big = [5.0, -4.0, 3.0, 7.0];
+        kv.append_row(0, 0, &big, &big);
+        kv.bump(0);
+        assert!(kv.reencodes > 0);
+        let dk = kv.decode_k(0, 0);
+        // 4-bit steps are coarse after widening to ~11.0: step ~ 0.74
+        for (a, b) in big.iter().zip(&dk[8..]) {
+            assert!((a - b).abs() < 0.5, "{a} vs {b}");
+        }
+    }
+
+    #[test]
+    fn packed_storage_is_half_of_8bit_and_8x_under_f32() {
+        let f = KvCache::new_f32(2, 4, 64, 32);
+        let q8 = KvCache::new_simquant(2, 4, 64, 32);
+        let q4 = KvCache::new_simquant_bits(2, 4, 64, 32, 4);
+        let q2 = KvCache::new_simquant_bits(2, 4, 64, 32, 2);
+        let codes8 = q8.storage_bytes();
+        let codes4 = q4.storage_bytes();
+        let codes2 = q2.storage_bytes();
+        assert!(codes4 < codes8 && codes2 < codes4);
+        let ratio4 = codes4 as f64 / f.storage_bytes() as f64;
+        assert!(ratio4 < 0.16, "4-bit ratio {ratio4}");
+        let ratio2 = codes2 as f64 / f.storage_bytes() as f64;
+        assert!(ratio2 < 0.10, "2-bit ratio {ratio2}");
+    }
+
+    #[test]
+    fn batch_ingest_matches_serial_ingest() {
+        let (l, b, ctx, d) = (3usize, 2usize, 8usize, 16usize);
+        for bits in [8u32, 4] {
+            let mut serial = KvCache::new_simquant_bits(l, b, ctx, d, bits);
+            let mut batch = KvCache::new_simquant_bits(l, b, ctx, d, bits);
+            let data: Vec<(usize, usize, Vec<f32>, Vec<f32>, usize)> = (0..l)
+                .flat_map(|layer| {
+                    (0..b).map(move |slot| {
+                        let t = 3 + slot;
+                        let seed = (layer * 10 + slot) as u64;
+                        (slot, layer, rows(t, d, seed, 1.0), rows(t, d, seed + 99, 1.0), t)
+                    })
+                })
+                .collect();
+            for (slot, layer, k, v, t) in &data {
+                serial.ingest_prefill(*slot, *layer, k, v, *t);
+            }
+            let pages: Vec<PrefillPage<'_>> = data
+                .iter()
+                .map(|(slot, layer, k, v, t)| PrefillPage {
+                    slot: *slot,
+                    layer: *layer,
+                    k_rows: k,
+                    v_rows: v,
+                    t_len: *t,
+                })
+                .collect();
+            batch.ingest_prefill_batch(&pages);
+            for slot in 0..b {
+                assert_eq!(serial.len(slot), batch.len(slot));
+                for layer in 0..l {
+                    assert_eq!(
+                        serial.decode_k(slot, layer),
+                        batch.decode_k(slot, layer),
+                        "bits={bits} slot={slot} layer={layer}"
+                    );
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn f32_batch_ingest_matches_serial() {
+        let (l, b, ctx, d) = (2usize, 2usize, 8usize, 4usize);
+        let mut serial = KvCache::new_f32(l, b, ctx, d);
+        let mut batch = KvCache::new_f32(l, b, ctx, d);
+        let k = rows(5, d, 1, 1.0);
+        let v = rows(5, d, 2, 1.0);
+        let mut pages = Vec::new();
+        for layer in 0..l {
+            serial.ingest_prefill(1, layer, &k, &v, 5);
+            pages.push(PrefillPage { slot: 1, layer, k_rows: &k, v_rows: &v, t_len: 5 });
+        }
+        batch.ingest_prefill_batch(&pages);
+        for layer in 0..l {
+            assert_eq!(serial.decode_k(1, layer), batch.decode_k(1, layer));
+        }
+    }
+
+    #[test]
+    #[should_panic(expected = "duplicate")]
+    fn batch_ingest_rejects_duplicate_pages() {
+        let mut kv = KvCache::new_f32(1, 1, 4, 2);
+        let k = vec![0.0; 4];
+        let pages = vec![
+            PrefillPage { slot: 0, layer: 0, k_rows: &k, v_rows: &k, t_len: 2 },
+            PrefillPage { slot: 0, layer: 0, k_rows: &k, v_rows: &k, t_len: 2 },
+        ];
+        kv.ingest_prefill_batch(&pages);
     }
 
     #[test]
@@ -536,6 +979,9 @@ mod tests {
         assert_eq!(ins.len(), 6);
         assert_eq!(ins[0].shape, vec![2, 3, 8, 4]);
         assert_eq!(ins[2].shape, vec![2, 3, 1, 4]);
+        // sub-byte caches ship packed rows
+        let kv4 = KvCache::new_simquant_bits(2, 3, 8, 4, 4);
+        assert_eq!(kv4.graph_inputs()[0].shape, vec![2, 3, 8, 2]);
         let f = KvCache::new_f32(2, 3, 8, 4);
         assert_eq!(f.graph_inputs().len(), 2);
     }

@@ -23,10 +23,13 @@ mod worker;
 pub mod workload;
 
 pub use batcher::{Batch, BatchPolicy, Batcher};
-pub use bitwidth::{quant_mse, search_bitwidths, size_reduction, BitwidthChoice, LayerInfo, SearchPolicy, BIT_CHOICES};
-pub use kv_cache::KvCache;
+pub use bitwidth::{
+    quant_mse, search_bitwidths, size_reduction, BitwidthChoice, LayerInfo, SearchPolicy,
+    BIT_CHOICES,
+};
+pub use kv_cache::{KvCache, PrefillPage};
 pub use request::{Request, RequestId, Response};
 pub use router::Router;
-pub use scale_sync::ScaleSync;
+pub use scale_sync::{ScaleSync, SYNC_WIRE_BITS};
 pub use server::{Server, ServerConfig, ServerReport};
 pub use worker::Worker;

@@ -2,18 +2,53 @@
 //!
 //! Every worker shard tracks activation scales with `EmaScaleTracker`s
 //! (Alg. 1). Periodically the shards run an all-reduce(max) over their
-//! deltas and an all-gather over zero points through the `collective`
-//! ring, then adopt the merged state — after a sync, all shards quantize
-//! with identical parameters, which Thm. 4's consistency argument
-//! requires.
+//! deltas and an all-reduce(sum) over zero points through the
+//! `collective` ring, then adopt the merged state — after a sync, all
+//! shards quantize with identical parameters, which Thm. 4's consistency
+//! argument requires.
+//!
+//! The sync traffic itself rides the quantized wire
+//! (`all_gather_quant` for deltas, `all_reduce_sum_q` for zero points,
+//! both at [`SYNC_WIRE_BITS`] bits): every shard decodes the same
+//! low-bit bytes, so the merged state is still bit-identical across
+//! shards, at ~4x fewer wire bytes.
+//!
+//! Deltas ship in the **log2 domain**: max commutes with the monotone
+//! log, so the merge semantics are unchanged, and the wire error becomes
+//! a *uniform relative* error (2^(half step) − 1; under ~5% even when
+//! tracked deltas span 2^±20) instead of an absolute error that
+//! collapses any delta below max/254 to zero. The merge stays
+//! **conservative** — no shard's range is clipped: each decoded
+//! contribution is padded by its sender's wire half-step (computable
+//! from the decoded amax, since the max-magnitude element decodes
+//! exactly), so the merged delta is always ≥ every shard's true max, at
+//! the cost of at most ~one wire step of overshoot. Adopted deltas are
+//! still floored at the tracker eps as a backstop — the padding, floor,
+//! and decode are identical on every shard, preserving Thm. 4 identity.
+//!
+//! Zero points are safe on the same wire: the tracker maintains
+//! `|mean| <= delta` (an EMA of batch means against an EMA of batch
+//! absmaxes), so `|zp| = |round(mean * 127 / delta)| <= 127`. The zp
+//! chunk's token scale is therefore <= ~1 and the quantized-sum error
+//! is under half a grid step per shard — after the `.round()`, the
+//! merged zero point lands within one step of the exact average
+//! (pinned by `zero_point_sync_error_bounded_to_one_grid_step`).
 
 use crate::collective::{Collective, OpError};
 use crate::quant::{EmaScaleTracker, EmaState};
+
+/// Wire bitwidth of the scale-sync collectives (paper §3.3: NCCL payloads
+/// ship low-bit). 8 keeps the log-domain delta error at the low percent
+/// level across any magnitude spread while cutting sync bytes ~4x vs f32.
+pub const SYNC_WIRE_BITS: u32 = 8;
 
 /// Per-shard synchronizer: a tracker per tracked region (e.g. one per
 /// layer input) plus the rank's collective endpoint.
 pub struct ScaleSync {
     trackers: Vec<EmaScaleTracker>,
+    /// tracker eps floor; also floors adopted deltas after a quantized
+    /// sync (identical on every shard, so Thm. 4 identity survives)
+    eps: f32,
     /// sync every `period` observations (0 = never)
     period: u64,
     observations: u64,
@@ -24,6 +59,7 @@ impl ScaleSync {
     pub fn new(n_regions: usize, alpha: f32, eps: f32, period: u64) -> Self {
         ScaleSync {
             trackers: (0..n_regions).map(|_| EmaScaleTracker::new(alpha, eps)).collect(),
+            eps,
             period,
             observations: 0,
             syncs: 0,
@@ -49,21 +85,47 @@ impl ScaleSync {
         self.period > 0 && self.observations > 0 && self.observations % self.period == 0
     }
 
-    /// Eqs. 7-8: merge scales across shards.
+    /// Eqs. 7-8: merge scales across shards over the quantized wire.
     ///
-    /// deltas merge with max (conservative: no shard's range is clipped);
-    /// zero points average. Returns the merged states all shards adopted.
+    /// deltas merge with a conservative max, shipped as log2(delta) so
+    /// the wire error is a uniform ~percent-level *relative* error for
+    /// every region regardless of magnitude spread; zero points
+    /// average. Every shard decodes the same quantized bytes and runs
+    /// the same merge, so all shards adopt bit-identical merged states
+    /// (Thm. 4). Returns those states.
     pub fn sync(&mut self, comm: &mut Collective) -> Result<Vec<EmaState>, OpError> {
-        let local_deltas: Vec<f32> = self.trackers.iter().map(|t| t.state().delta).collect();
+        // max commutes with the monotone log2, so merging logs merges
+        // deltas; trackers floor delta at eps > 0, keeping log2 finite
+        let local_log_deltas: Vec<f32> = self
+            .trackers
+            .iter()
+            .map(|t| t.state().delta.max(self.eps).log2())
+            .collect();
         let local_zps: Vec<f32> =
             self.trackers.iter().map(|t| t.state().zero_point).collect();
-        let merged_deltas = comm.all_reduce_max(local_deltas)?;
-        let zp_sum = comm.all_reduce_sum(local_zps)?;
+        let parts = comm.all_gather_quant(&local_log_deltas, SYNC_WIRE_BITS)?;
+        let zp_sum = comm.all_reduce_sum_q(&local_zps, SYNC_WIRE_BITS)?;
         let world = comm.world() as f32;
+        // Conservative max-merge: a decoded log can sit up to half its
+        // sender's wire step below the true value. That step is bounded
+        // by the decoded amax (the max-magnitude element decodes
+        // exactly, modulo f32 rounding — hence the 1e-5 headroom), so
+        // padding each contribution by its half-step bound guarantees
+        // merged >= every shard's true max ("no shard's range is
+        // clipped"), overshooting by at most ~one wire step.
+        let mut merged_logs = vec![f32::NEG_INFINITY; self.trackers.len()];
+        for v in &parts {
+            let amax = v.iter().fold(0f32, |a, x| a.max(x.abs())) * 1.00001;
+            let half_step = amax / 254.0;
+            for (m, x) in merged_logs.iter_mut().zip(v) {
+                *m = m.max(x + half_step);
+            }
+        }
         let mut out = Vec::with_capacity(self.trackers.len());
         for (i, t) in self.trackers.iter_mut().enumerate() {
             let st = EmaState {
-                delta: merged_deltas[i],
+                // eps floor as a backstop (identical on every shard)
+                delta: merged_logs[i].exp2().max(self.eps),
                 zero_point: (zp_sum[i] / world).round(),
             };
             t.adopt(st);
@@ -121,9 +183,74 @@ mod tests {
             s.observe(0, &[(rank as f32 + 1.0) * 2.0]);
             s.sync(&mut comm).unwrap()
         });
-        // max absmax across shards = 6.0
+        // max absmax across shards = 6.0; the merge is conservative:
+        // never below the true max, at most ~one wire step above
         for st in states {
-            assert!((st[0].delta - 6.0).abs() < 1e-5, "{:?}", st);
+            assert!(st[0].delta >= 6.0 * (1.0 - 1e-6), "clipped: {:?}", st);
+            assert!(st[0].delta <= 6.0 * 1.05, "overshot: {:?}", st);
+        }
+    }
+
+    #[test]
+    fn zero_point_sync_error_bounded_to_one_grid_step() {
+        // |mean| <= delta keeps |zp| <= 127, so the zp wire chunk scale
+        // is <= ~1 and the quantized sum can shift the merged grid by at
+        // most one step vs the exact average. Shards observe identical
+        // data, so the exact merged zp equals each local one.
+        let states = run_shards(4, |_rank, mut comm| {
+            let mut s = ScaleSync::new(3, 0.9, 1e-6, 0);
+            s.observe(0, &[0.9, 1.0, 0.95]); // mean near delta -> |zp| near 127
+            s.observe(1, &[-0.5, 0.5]); // zero-centered -> zp near 0
+            s.observe(2, &[0.001, 0.002, 3.0]); // mixed offset
+            let local: Vec<_> = (0..3).map(|r| s.state(r)).collect();
+            (local, s.sync(&mut comm).unwrap())
+        });
+        for (local, merged) in &states {
+            for (l, m) in local.iter().zip(merged) {
+                assert!(m.zero_point.abs() <= 127.0, "zp {}", m.zero_point);
+                assert!(
+                    (m.zero_point - l.zero_point).abs() <= 1.0,
+                    "zp drifted: {} -> {}",
+                    l.zero_point,
+                    m.zero_point
+                );
+            }
+        }
+    }
+
+    #[test]
+    fn tiny_delta_regions_survive_quantized_sync() {
+        // region 0 tracks tiny activations, region 1 huge ones — a
+        // 5x10^7 magnitude spread in one sync vector. The log2-domain
+        // wire keeps the error *relative* (≤ ~5% at this spread), so the
+        // tiny region's delta survives instead of collapsing to 0 (a
+        // linear 8-bit wire would quantize it to code 0).
+        let eps = 1e-6f32;
+        let states = run_shards(3, move |_rank, mut comm| {
+            let mut s = ScaleSync::new(2, 0.9, eps, 0);
+            s.observe(0, &[1e-5, -2e-5]);
+            s.observe(1, &[900.0, -1000.0]);
+            s.sync(&mut comm).unwrap()
+        });
+        for st in &states {
+            assert!(
+                (st[0].delta - 2e-5).abs() <= 2e-5 * 0.06,
+                "tiny delta drifted: {}",
+                st[0].delta
+            );
+            assert!(
+                (st[1].delta - 1000.0).abs() <= 1000.0 * 0.06,
+                "large delta drifted: {}",
+                st[1].delta
+            );
+            // and the merge stayed conservative (no range clipping)
+            assert!(st[0].delta >= 2e-5 * (1.0 - 1e-6));
+            assert!(st[1].delta >= 1000.0 * (1.0 - 1e-6));
+        }
+        for other in &states[1..] {
+            for (a, b) in states[0].iter().zip(other) {
+                assert_eq!(a.delta, b.delta);
+            }
         }
     }
 

@@ -17,7 +17,7 @@ use crate::runtime::{i32_bytes, literal_from_raw, Literal, ModelHandle};
 use crate::tensor::Tensor;
 
 use super::batcher::Batch;
-use super::kv_cache::KvCache;
+use super::kv_cache::{KvCache, PrefillPage};
 use super::request::Response;
 use super::scale_sync::ScaleSync;
 
@@ -91,19 +91,23 @@ impl Worker {
 
         let mut kv = self.fresh_kv();
         self.breakdown.span(Stage::Quant, || {
+            // the (slot, layer) pages are disjoint: fan the encodes out
+            // across the worker pool instead of ingesting serially
+            let mut pages = Vec::with_capacity(n_active * l);
             for slot in 0..n_active {
                 let plen = prompt_lens[slot];
                 for layer in 0..l {
                     let off = (layer * b + slot) * ctx * d;
-                    kv.ingest_prefill(
+                    pages.push(PrefillPage {
                         slot,
                         layer,
-                        &k_cache[off..off + plen * d],
-                        &v_cache[off..off + plen * d],
-                        plen,
-                    );
+                        k_rows: &k_cache[off..off + plen * d],
+                        v_rows: &v_cache[off..off + plen * d],
+                        t_len: plen,
+                    });
                 }
             }
+            kv.ingest_prefill_batch(&pages);
         });
 
         // first generated token per active slot + ttft

@@ -82,27 +82,75 @@ impl PaperModel {
     }
 
     pub fn gpt2_117m() -> Self {
-        PaperModel { name: "GPT-2 (117M)", d_model: 768, n_layers: 12, n_heads: 12, d_ff: 3072, vocab: 50257, mlp_mats: 2 }
+        PaperModel {
+            name: "GPT-2 (117M)",
+            d_model: 768,
+            n_layers: 12,
+            n_heads: 12,
+            d_ff: 3072,
+            vocab: 50257,
+            mlp_mats: 2,
+        }
     }
 
     pub fn gpt2_345m() -> Self {
-        PaperModel { name: "GPT-2 (345M)", d_model: 1024, n_layers: 24, n_heads: 16, d_ff: 4096, vocab: 50257, mlp_mats: 2 }
+        PaperModel {
+            name: "GPT-2 (345M)",
+            d_model: 1024,
+            n_layers: 24,
+            n_heads: 16,
+            d_ff: 4096,
+            vocab: 50257,
+            mlp_mats: 2,
+        }
     }
 
     pub fn llama_7b() -> Self {
-        PaperModel { name: "LLaMA-7B", d_model: 4096, n_layers: 32, n_heads: 32, d_ff: 11008, vocab: 32000, mlp_mats: 3 }
+        PaperModel {
+            name: "LLaMA-7B",
+            d_model: 4096,
+            n_layers: 32,
+            n_heads: 32,
+            d_ff: 11008,
+            vocab: 32000,
+            mlp_mats: 3,
+        }
     }
 
     pub fn llama_13b() -> Self {
-        PaperModel { name: "LLaMA-13B", d_model: 5120, n_layers: 40, n_heads: 40, d_ff: 13824, vocab: 32000, mlp_mats: 3 }
+        PaperModel {
+            name: "LLaMA-13B",
+            d_model: 5120,
+            n_layers: 40,
+            n_heads: 40,
+            d_ff: 13824,
+            vocab: 32000,
+            mlp_mats: 3,
+        }
     }
 
     pub fn mistral_7b() -> Self {
-        PaperModel { name: "Mistral-7B", d_model: 4096, n_layers: 32, n_heads: 32, d_ff: 14336, vocab: 32000, mlp_mats: 3 }
+        PaperModel {
+            name: "Mistral-7B",
+            d_model: 4096,
+            n_layers: 32,
+            n_heads: 32,
+            d_ff: 14336,
+            vocab: 32000,
+            mlp_mats: 3,
+        }
     }
 
     pub fn qwen3_14b() -> Self {
-        PaperModel { name: "Qwen3-14B", d_model: 5120, n_layers: 40, n_heads: 40, d_ff: 17408, vocab: 151936, mlp_mats: 3 }
+        PaperModel {
+            name: "Qwen3-14B",
+            d_model: 5120,
+            n_layers: 40,
+            n_heads: 40,
+            d_ff: 17408,
+            vocab: 151936,
+            mlp_mats: 3,
+        }
     }
 
     /// Weight parameters per transformer layer (qkv + out + 2 mlp mats).

@@ -5,6 +5,14 @@ use crate::quant::Variant;
 
 use super::gpu::{GpuSpec, PaperModel};
 
+/// Bytes per stored code at `bits` bits when bit-packed — the asymptotic
+/// byte/code rate of `quant::kernels::packed_len`, so the cost model
+/// prices sub-byte tensors at their true packed width instead of one
+/// byte per code.
+fn packed_bytes_per_code(bits: u32) -> f64 {
+    f64::from(bits) / 8.0
+}
+
 /// One simulated deployment: model shape x batch x context x world.
 #[derive(Debug, Clone, Copy)]
 pub struct Workload {
@@ -21,6 +29,11 @@ pub struct Workload {
     pub ctx: usize,
     /// tensor-parallel world size
     pub world: usize,
+    /// stored weight-code width for the quantized variants (bit-packed
+    /// below 8; 8 = classic int8 codes)
+    pub weight_bits: u32,
+    /// stored KV-code width for SimQuant pages (bit-packed below 8)
+    pub kv_bits: u32,
     pub gpu: GpuSpec,
     pub link: LinkModel,
     /// fused quantize+GEMM kernels (§A.8); false = separate kernels that
@@ -90,6 +103,8 @@ impl PipelineCost {
             batch,
             ctx,
             world,
+            weight_bits: 8,
+            kv_bits: 8,
             gpu,
             link,
             fused: true,
@@ -107,7 +122,8 @@ impl PipelineCost {
     fn weight_bytes(&self, v: Variant) -> f64 {
         let elem = match v {
             Variant::Fp => 2.0, // FP16 baseline
-            _ => 1.0,           // int8 codes (+ scales, below)
+            // bit-packed codes at their true width (+ scales, below)
+            _ => packed_bytes_per_code(self.w.weight_bits),
         };
         let scales = match v {
             Variant::Fp => 0.0,
@@ -125,9 +141,10 @@ impl PipelineCost {
     /// footprint is lowest.
     fn kv_elem_bytes(&self, v: Variant) -> f64 {
         match v {
-            Variant::SimQuant => 1.0,                       // codes + per-page params
+            // bit-packed codes + per-page params
+            Variant::SimQuant => packed_bytes_per_code(self.w.kv_bits),
             _ if v.quantizes_activations() => 1.0 + 4.0 / 64.0, // per-64-token scale rows
-            _ => 2.0,                                       // fp16 KV
+            _ => 2.0,                                           // fp16 KV
         }
     }
 
@@ -375,6 +392,27 @@ mod tests {
         let short = gpt2(64, 2048, 8).decode_layer(Variant::Fp);
         let long = gpt2(64, 32768, 8).decode_layer(Variant::Fp);
         assert!(long.load_s > short.load_s * 4.0);
+    }
+
+    #[test]
+    fn packed_bits_shrink_storage_accounting() {
+        // the storage ratio must reflect the true packed width: 4-bit
+        // weights+KV roughly halve the 8-bit quantized footprint
+        let mut c8 = gpt2(64, 32768, 8);
+        c8.w.kv_bits = 8;
+        let mut c4 = gpt2(64, 32768, 8);
+        c4.w.weight_bits = 4;
+        c4.w.kv_bits = 4;
+        let m8 = c8.memory_gb_total(Variant::SimQuant);
+        let m4 = c4.memory_gb_total(Variant::SimQuant);
+        assert!(m4 < m8 * 0.65, "4-bit {m4} vs 8-bit {m8}");
+        let mut c2 = gpt2(64, 32768, 8);
+        c2.w.weight_bits = 2;
+        c2.w.kv_bits = 2;
+        let m2 = c2.memory_gb_total(Variant::SimQuant);
+        assert!(m2 < m4, "2-bit {m2} vs 4-bit {m4}");
+        // fp baseline untouched by the bit knobs
+        assert_eq!(c8.memory_gb_total(Variant::Fp), c2.memory_gb_total(Variant::Fp));
     }
 
     #[test]

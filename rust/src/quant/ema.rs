@@ -110,8 +110,10 @@ impl EmaScaleTracker {
     /// refilled) — the buffer-reuse variant of `quantize`, matching the
     /// `_into` contract of `quant::kernels`. The serving decode loop only
     /// observes (the lowered graphs quantize on-device); this is for
-    /// online callers that consume codes host-side, e.g. the planned
-    /// quantized collectives (see ROADMAP "Parallel collective quantize").
+    /// online callers that consume codes host-side. (The quantized ring
+    /// collectives in `collective::ops` encode per-chunk token scales
+    /// through `token_quantize_packed_into` instead, so each chunk's
+    /// scale is exact rather than EMA-smoothed.)
     pub fn quantize_into(&mut self, x: &[f32], out: &mut Vec<i8>) -> EmaState {
         let st = self.observe(x);
         let scale = (st.delta / 127.0).max(1e-12);

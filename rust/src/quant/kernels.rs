@@ -18,8 +18,20 @@
 //!   amax of ZeroQuant is fused with its encode per row-group so a group
 //!   is read once while cache-hot.
 //!
-//! Thread fan-out uses `util::pool` (scoped `std::thread`, no pool
-//! dependency); inputs below ~32K elements stay single-threaded.
+//! Thread fan-out uses `util::pool`'s persistent parked-worker pool
+//! (no per-call thread spawn); inputs below ~32K elements stay
+//! single-threaded.
+//!
+//! # Bit-packed sub-byte codes
+//!
+//! The storage/wire layer packs codes to their true width — two 4-bit or
+//! four 2-bit codes per byte (`pack_i8_into` / `pack_u8_into`, plus the
+//! fused `token_quantize_packed_into`). `packed_len` is the accounting
+//! helper: `memsim`, `KvCache::storage_bytes`, and the collective byte
+//! counters all price sub-byte tensors through it instead of assuming one
+//! byte per code. Packing is little-endian within each byte (code *j*
+//! occupies bits `(j % (8/bits)) * bits ..` of byte `j / (8/bits)`) and
+//! round-trips bit-identically for every code the quantizers can emit.
 
 use anyhow::{bail, Result};
 
@@ -106,18 +118,21 @@ pub fn symmetric_quantize_channel_into_threads(
         }
     } else {
         let mut partials = vec![0f32; ranges.len() * n];
-        std::thread::scope(|s| {
-            for (r, part) in ranges.iter().zip(partials.chunks_exact_mut(n)) {
+        let tasks: Vec<pool::Task<'_>> = ranges
+            .iter()
+            .zip(partials.chunks_exact_mut(n))
+            .map(|(r, part)| {
                 let wb = &w[r.start * n..r.end * n];
-                s.spawn(move || {
+                Box::new(move || {
                     for wrow in wb.chunks_exact(n) {
                         for (a, v) in part.iter_mut().zip(wrow) {
                             *a = a.max(v.abs());
                         }
                     }
-                });
-            }
-        });
+                }) as pool::Task<'_>
+            })
+            .collect();
+        pool::run(tasks);
         // combine in range order on the calling thread (deterministic)
         delta.fill(0.0);
         for part in partials.chunks_exact(n) {
@@ -144,13 +159,16 @@ pub fn symmetric_quantize_channel_into_threads(
         encode(w, q);
     } else {
         let qblocks = pool::split_rows(q, &ranges, n);
-        std::thread::scope(|s| {
-            for (r, qb) in ranges.iter().zip(qblocks) {
+        let tasks: Vec<pool::Task<'_>> = ranges
+            .iter()
+            .zip(qblocks)
+            .map(|(r, qb)| {
                 let wb = &w[r.start * n..r.end * n];
                 let encode = &encode;
-                s.spawn(move || encode(wb, qb));
-            }
-        });
+                Box::new(move || encode(wb, qb)) as pool::Task<'_>
+            })
+            .collect();
+        pool::run(tasks);
     }
     Ok(())
 }
@@ -230,13 +248,17 @@ pub fn zeroquant_group_quantize_into_threads(
     } else {
         let qblocks = pool::split_rows(q, &ranges, group * n);
         let dblocks = pool::split_rows(delta, &ranges, n);
-        std::thread::scope(|s| {
-            for ((r, qb), db) in ranges.iter().zip(qblocks).zip(dblocks) {
+        let tasks: Vec<pool::Task<'_>> = ranges
+            .iter()
+            .zip(qblocks)
+            .zip(dblocks)
+            .map(|((r, qb), db)| {
                 let wb = &w[r.start * group * n..r.end * group * n];
                 let kernel = &kernel;
-                s.spawn(move || kernel(wb, qb, db));
-            }
-        });
+                Box::new(move || kernel(wb, qb, db)) as pool::Task<'_>
+            })
+            .collect();
+        pool::run(tasks);
     }
     Ok(())
 }
@@ -304,13 +326,17 @@ pub fn token_quantize_into_threads(
     } else {
         let qblocks = pool::split_rows(q, &ranges, d);
         let dblocks = pool::split_rows(delta, &ranges, 1);
-        std::thread::scope(|s| {
-            for ((r, qb), db) in ranges.iter().zip(qblocks).zip(dblocks) {
+        let tasks: Vec<pool::Task<'_>> = ranges
+            .iter()
+            .zip(qblocks)
+            .zip(dblocks)
+            .map(|((r, qb), db)| {
                 let xb = &x[r.start * d..r.end * d];
                 let kernel = &kernel;
-                s.spawn(move || kernel(xb, qb, db));
-            }
-        });
+                Box::new(move || kernel(xb, qb, db)) as pool::Task<'_>
+            })
+            .collect();
+        pool::run(tasks);
     }
     Ok(())
 }
@@ -373,10 +399,12 @@ pub fn simquant_encode_into_threads(
     } else {
         // per-range partials: [min_0 | max_0 | min_1 | max_1 | ...]
         let mut partials = vec![0f32; ranges.len() * 2 * d];
-        std::thread::scope(|s| {
-            for (r, part) in ranges.iter().zip(partials.chunks_exact_mut(2 * d)) {
+        let tasks: Vec<pool::Task<'_>> = ranges
+            .iter()
+            .zip(partials.chunks_exact_mut(2 * d))
+            .map(|(r, part)| {
                 let xb = &x[r.start * d..r.end * d];
-                s.spawn(move || {
+                Box::new(move || {
                     let (mn, mx) = part.split_at_mut(d);
                     mn.fill(f32::INFINITY);
                     mx.fill(f32::NEG_INFINITY);
@@ -386,9 +414,10 @@ pub fn simquant_encode_into_threads(
                             *pmx = pmx.max(*v);
                         }
                     }
-                });
-            }
-        });
+                }) as pool::Task<'_>
+            })
+            .collect();
+        pool::run(tasks);
         vmin.fill(f32::INFINITY);
         step.fill(f32::NEG_INFINITY);
         for part in partials.chunks_exact(2 * d) {
@@ -416,13 +445,16 @@ pub fn simquant_encode_into_threads(
         encode(x, q);
     } else {
         let qblocks = pool::split_rows(q, &ranges, d);
-        std::thread::scope(|s| {
-            for (r, qb) in ranges.iter().zip(qblocks) {
+        let tasks: Vec<pool::Task<'_>> = ranges
+            .iter()
+            .zip(qblocks)
+            .map(|(r, qb)| {
                 let xb = &x[r.start * d..r.end * d];
                 let encode = &encode;
-                s.spawn(move || encode(xb, qb));
-            }
-        });
+                Box::new(move || encode(xb, qb)) as pool::Task<'_>
+            })
+            .collect();
+        pool::run(tasks);
     }
     Ok(())
 }
@@ -511,6 +543,168 @@ pub fn scale_rows_into(src: &[f32], scales: &[f32], n: usize, out: &mut [f32]) {
             *o = v * sv;
         }
     }
+}
+
+// ---------------------------------------------------------------------------
+// Bit-packed sub-byte codes (storage / wire format)
+// ---------------------------------------------------------------------------
+
+/// Widths the packed storage/wire format supports: the divisors of 8, so
+/// a byte always holds a whole number of codes and no code straddles a
+/// byte boundary.
+pub fn validate_pack_bits(bits: u32) -> Result<()> {
+    if !matches!(bits, 1 | 2 | 4 | 8) {
+        bail!("unsupported packed bitwidth {bits}: must divide 8 (1, 2, 4, or 8)");
+    }
+    Ok(())
+}
+
+/// Bytes needed to store `elems` codes of `bits` bits each, packed — the
+/// accounting helper `memsim`, `KvCache::storage_bytes`, and the
+/// collective byte counters share (1 byte holds `8 / bits` codes; the
+/// last byte may be partial).
+pub fn packed_len(elems: usize, bits: u32) -> usize {
+    (elems * bits as usize).div_ceil(8)
+}
+
+/// Pack signed codes to `bits` bits each (two's-complement truncation),
+/// little-endian within each byte. Codes must fit `bits` bits (which
+/// every `qrange(bits)`-clamped quantizer output does); wider values are
+/// silently truncated.
+pub fn pack_i8_into(codes: &[i8], bits: u32, out: &mut [u8]) -> Result<()> {
+    validate_pack_bits(bits)?;
+    check_len("packed", out.len(), packed_len(codes.len(), bits))?;
+    let cpb = (8 / bits) as usize;
+    let mask = ((1u16 << bits) - 1) as u8;
+    for (ob, chunk) in out.iter_mut().zip(codes.chunks(cpb)) {
+        let mut acc = 0u8;
+        for (s, c) in chunk.iter().enumerate() {
+            acc |= ((*c as u8) & mask) << (s as u32 * bits);
+        }
+        *ob = acc;
+    }
+    Ok(())
+}
+
+/// Unpack `out.len()` sign-extended codes from a [`pack_i8_into`] buffer.
+pub fn unpack_i8_into(packed: &[u8], bits: u32, out: &mut [i8]) -> Result<()> {
+    validate_pack_bits(bits)?;
+    check_len("packed", packed.len(), packed_len(out.len(), bits))?;
+    let cpb = (8 / bits) as usize;
+    let shift = 8 - bits;
+    for (pb, chunk) in packed.iter().zip(out.chunks_mut(cpb)) {
+        for (s, o) in chunk.iter_mut().enumerate() {
+            let v = (pb >> (s as u32 * bits)) << shift;
+            *o = (v as i8) >> shift;
+        }
+    }
+    Ok(())
+}
+
+/// Pack unsigned codes (SimQuant pages) to `bits` bits each,
+/// little-endian within each byte.
+pub fn pack_u8_into(codes: &[u8], bits: u32, out: &mut [u8]) -> Result<()> {
+    validate_pack_bits(bits)?;
+    check_len("packed", out.len(), packed_len(codes.len(), bits))?;
+    let cpb = (8 / bits) as usize;
+    let mask = ((1u16 << bits) - 1) as u8;
+    for (ob, chunk) in out.iter_mut().zip(codes.chunks(cpb)) {
+        let mut acc = 0u8;
+        for (s, c) in chunk.iter().enumerate() {
+            acc |= (c & mask) << (s as u32 * bits);
+        }
+        *ob = acc;
+    }
+    Ok(())
+}
+
+/// Unpack `out.len()` unsigned codes from a [`pack_u8_into`] buffer.
+pub fn unpack_u8_into(packed: &[u8], bits: u32, out: &mut [u8]) -> Result<()> {
+    validate_pack_bits(bits)?;
+    check_len("packed", packed.len(), packed_len(out.len(), bits))?;
+    let cpb = (8 / bits) as usize;
+    let mask = ((1u16 << bits) - 1) as u8;
+    for (pb, chunk) in packed.iter().zip(out.chunks_mut(cpb)) {
+        for (s, o) in chunk.iter_mut().enumerate() {
+            *o = (pb >> (s as u32 * bits)) & mask;
+        }
+    }
+    Ok(())
+}
+
+/// Token-wise quantization of `x` [T, D] straight into a bit-packed code
+/// buffer (`packed` [packed_len(T*D, bits)]) plus per-row scales `delta`
+/// [T] — the ring collectives' send-endpoint encode. Per-element math is
+/// byte-for-byte [`token_quantize_into`]'s (same scales, same codes
+/// pre-pack), so unpacking yields exactly the reference's codes. The
+/// code stream is packed contiguously row-major; rows are not
+/// byte-aligned unless `d * bits % 8 == 0`.
+pub fn token_quantize_packed_into(
+    x: &[f32],
+    t: usize,
+    d: usize,
+    bits: u32,
+    packed: &mut [u8],
+    delta: &mut [f32],
+) -> Result<()> {
+    validate_bits(bits)?;
+    validate_pack_bits(bits)?;
+    check_len("x", x.len(), t * d)?;
+    check_len("packed", packed.len(), packed_len(t * d, bits))?;
+    check_len("delta", delta.len(), t)?;
+    let (qmin, qmax) = qrange(bits);
+    if d == 0 {
+        // zero-width rows: the reference still emits the EPS-floor scale
+        delta.fill(EPS / qmax as f32);
+        return Ok(());
+    }
+    let (lo, hi) = (qmin as f32, qmax as f32);
+    let cpb = (8 / bits) as usize;
+    let mask = ((1u16 << bits) - 1) as u8;
+    packed.fill(0);
+    for (r, (xrow, dl_out)) in x.chunks_exact(d).zip(delta.iter_mut()).enumerate() {
+        let amax = xrow.iter().fold(0f32, |a, v| a.max(v.abs())).max(EPS);
+        let dl = amax / qmax as f32;
+        *dl_out = dl;
+        for (c, v) in xrow.iter().enumerate() {
+            let q = round_ties_even(v / dl).clamp(lo, hi) as i8;
+            let j = r * d + c;
+            packed[j / cpb] |= ((q as u8) & mask) << ((j % cpb) as u32 * bits);
+        }
+    }
+    Ok(())
+}
+
+/// Decode a [`token_quantize_packed_into`] buffer back to f32:
+/// `out[r, c] = code[r, c] * delta[r]` — the ring collectives'
+/// receive-endpoint decode.
+pub fn token_dequantize_packed_into(
+    packed: &[u8],
+    delta: &[f32],
+    t: usize,
+    d: usize,
+    bits: u32,
+    out: &mut [f32],
+) -> Result<()> {
+    validate_bits(bits)?;
+    validate_pack_bits(bits)?;
+    check_len("packed", packed.len(), packed_len(t * d, bits))?;
+    check_len("delta", delta.len(), t)?;
+    check_len("out", out.len(), t * d)?;
+    if d == 0 {
+        return Ok(());
+    }
+    let cpb = (8 / bits) as usize;
+    let shift = 8 - bits;
+    for (r, (orow, dl)) in out.chunks_exact_mut(d).zip(delta).enumerate() {
+        for (c, o) in orow.iter_mut().enumerate() {
+            let j = r * d + c;
+            let v = (packed[j / cpb] >> ((j % cpb) as u32 * bits)) << shift;
+            let code = (v as i8) >> shift;
+            *o = code as f32 * dl;
+        }
+    }
+    Ok(())
 }
 
 // ---------------------------------------------------------------------------
@@ -684,6 +878,64 @@ mod tests {
         let mut delta = vec![0f32; 4];
         assert!(zeroquant_group_quantize_into(&x, 3, 4, 2, 8, &mut q, &mut delta).is_err());
         assert!(zeroquant_group_quantize_into(&x, 3, 4, 0, 8, &mut q, &mut delta).is_err());
+    }
+
+    #[test]
+    fn invalid_pack_bits_rejected() {
+        for bits in [0u32, 3, 5, 6, 7, 9, 16] {
+            assert!(validate_pack_bits(bits).is_err(), "bits={bits}");
+        }
+        for bits in [1u32, 2, 4, 8] {
+            assert!(validate_pack_bits(bits).is_ok(), "bits={bits}");
+        }
+        // signed packed quantize additionally excludes 1 bit (qmax == 0)
+        let x = vec![1.0f32; 8];
+        let mut packed = vec![0u8; 1];
+        let mut delta = vec![0f32; 2];
+        assert!(token_quantize_packed_into(&x, 2, 4, 1, &mut packed, &mut delta).is_err());
+    }
+
+    #[test]
+    fn packed_len_counts_partial_bytes() {
+        assert_eq!(packed_len(0, 4), 0);
+        assert_eq!(packed_len(1, 4), 1);
+        assert_eq!(packed_len(2, 4), 1);
+        assert_eq!(packed_len(3, 4), 2);
+        assert_eq!(packed_len(7, 2), 2);
+        assert_eq!(packed_len(9, 1), 2);
+        assert_eq!(packed_len(5, 8), 5);
+    }
+
+    #[test]
+    fn pack_unpack_i8_identity_on_ragged_lengths() {
+        for bits in [2u32, 4, 8] {
+            let (qmin, qmax) = qrange(bits);
+            for len in [0usize, 1, 2, 3, 5, 8, 17] {
+                let codes: Vec<i8> = (0..len)
+                    .map(|i| (qmin + (i as i32 % (qmax - qmin + 1))) as i8)
+                    .collect();
+                let mut packed = vec![0u8; packed_len(len, bits)];
+                pack_i8_into(&codes, bits, &mut packed).unwrap();
+                let mut back = vec![0i8; len];
+                unpack_i8_into(&packed, bits, &mut back).unwrap();
+                assert_eq!(back, codes, "bits={bits} len={len}");
+            }
+        }
+    }
+
+    #[test]
+    fn pack_unpack_u8_identity_on_ragged_lengths() {
+        for bits in [1u32, 2, 4, 8] {
+            let levels = (1u32 << bits) - 1;
+            for len in [0usize, 1, 3, 4, 9] {
+                let codes: Vec<u8> = (0..len).map(|i| (i as u32 % (levels + 1)) as u8).collect();
+                let mut packed = vec![0u8; packed_len(len, bits)];
+                pack_u8_into(&codes, bits, &mut packed).unwrap();
+                let mut back = vec![0u8; len];
+                unpack_u8_into(&packed, bits, &mut back).unwrap();
+                assert_eq!(back, codes, "bits={bits} len={len}");
+            }
+        }
     }
 
     #[test]

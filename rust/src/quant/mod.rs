@@ -28,9 +28,13 @@
 //!   in range order, which f32 min/max associativity makes exact.
 //!   `tests/kernel_equivalence.rs` enforces this property-style; golden
 //!   files pin the Python side.
-//! * **Parallelism** — row ranges fan out over scoped `std::thread`s
-//!   (`util::pool`), capped by `LLEQ_THREADS` (default: available
-//!   parallelism). Inputs under ~32K elements stay single-threaded.
+//! * **Parallelism** — row ranges fan out over `util::pool`'s persistent
+//!   parked-worker pool (no per-call thread spawn), capped by
+//!   `LLEQ_THREADS` (default: available parallelism). Inputs under ~32K
+//!   elements stay single-threaded.
+//! * **Sub-byte packing** — the storage/wire layer packs 2/4-bit codes to
+//!   their true width (`pack_i8_into` / `token_quantize_packed_into`);
+//!   `packed_len` is the shared byte-accounting helper.
 //!
 //! Measure it with `cargo bench --bench perf_hotpath` (from `rust/`):
 //! every row prints mean/p95 in µs and the run also writes
@@ -51,11 +55,12 @@ pub use ema::{EmaScaleTracker, EmaState};
 pub use gptq::{gptq_dequant, gptq_quantize, GptqResult};
 pub use kernels::reference;
 pub use kernels::{
-    scale_rows_into, simquant_decode_into, simquant_encode_into, simquant_encode_into_threads,
-    simquant_encode_with_params_into,
+    pack_i8_into, pack_u8_into, packed_len, scale_rows_into, simquant_decode_into,
+    simquant_encode_into, simquant_encode_into_threads, simquant_encode_with_params_into,
     symmetric_quantize_channel_into, symmetric_quantize_channel_into_threads,
-    token_quantize_into, token_quantize_into_threads, validate_bits,
-    validate_simquant_bits, zeroquant_group_quantize_into,
+    token_dequantize_packed_into, token_quantize_into, token_quantize_into_threads,
+    token_quantize_packed_into, unpack_i8_into, unpack_u8_into, validate_bits,
+    validate_pack_bits, validate_simquant_bits, zeroquant_group_quantize_into,
     zeroquant_group_quantize_into_threads,
 };
 pub use schemes::*;

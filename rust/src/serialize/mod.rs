@@ -2,4 +2,7 @@
 
 mod onnx;
 
-pub use onnx::{dequantize_initializer, export_model, export_to_file, from_json, import_model, save as save_graph, to_json, OnnxGraph, OnnxNode, QuantTensor};
+pub use onnx::{
+    dequantize_initializer, export_model, export_to_file, from_json, import_model,
+    save as save_graph, to_json, OnnxGraph, OnnxNode, QuantTensor,
+};

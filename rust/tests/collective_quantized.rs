@@ -1,0 +1,173 @@
+//! Quantized-wire collectives vs their f32 counterparts: numeric
+//! tolerance (the wire quantization error is bounded by one half-step of
+//! each chunk's token scale), cross-rank consistency (every rank decodes
+//! the same bytes, so merged results are bit-identical), and the wire
+//! byte accounting (8-bit ≤ 0.3x f32 with scales included; packed 4/2-bit
+//! ≤ 0.15x/0.08x) — the ISSUE 2 acceptance criteria.
+
+use llmeasyquant::collective::{
+    wire_allgather_stats, Collective, Topology, Transport, QUANT_CHUNK,
+};
+use llmeasyquant::corpus::XorShift64Star;
+
+fn run_world<F, T>(n: usize, f: F) -> Vec<T>
+where
+    F: Fn(Collective) -> T + Send + Sync + Clone + 'static,
+    T: Send + 'static,
+{
+    let ring = Collective::ring(Topology::new(n, Transport::NvlinkRdma));
+    let mut handles = Vec::new();
+    for c in ring {
+        let f = f.clone();
+        handles.push(std::thread::spawn(move || f(c)));
+    }
+    handles.into_iter().map(|h| h.join().unwrap()).collect()
+}
+
+fn randn(n: usize, seed: u64, scale: f32) -> Vec<f32> {
+    let mut r = XorShift64Star::new(seed);
+    (0..n).map(|_| r.next_normal() as f32 * scale).collect()
+}
+
+/// Largest |x| in any wire chunk bounds that chunk's scale; the wire
+/// error per element is at most half a step of that scale.
+fn chunk_error_bound(x: &[f32], bits: u32) -> f32 {
+    let qmax = ((1i32 << (bits - 1)) - 1) as f32;
+    x.chunks(QUANT_CHUNK)
+        .map(|c| c.iter().fold(0f32, |a, v| a.max(v.abs())) / qmax)
+        .fold(0f32, f32::max)
+}
+
+#[test]
+fn quantized_all_gather_tracks_f32_within_step_bound() {
+    // payload spans multiple chunks (> 4096 elements)
+    let len = 10_000;
+    for bits in [8u32, 4, 2] {
+        let results = run_world(4, move |mut c| {
+            let local = randn(len, 42 + c.rank() as u64, 1.5);
+            let q = c.all_gather_quant(&local, bits).unwrap();
+            (local, q)
+        });
+        for (rank, (local, _)) in results.iter().enumerate() {
+            let bound = chunk_error_bound(local, bits) * 0.5 + 1e-6;
+            for (_, q) in &results {
+                for (a, b) in local.iter().zip(&q[rank]) {
+                    assert!(
+                        (a - b).abs() <= bound,
+                        "bits={bits} rank={rank}: {a} vs {b} (bound {bound})"
+                    );
+                }
+            }
+        }
+    }
+}
+
+#[test]
+fn quantized_results_bit_identical_across_ranks() {
+    for bits in [8u32, 4] {
+        let results = run_world(5, move |mut c| {
+            let local = randn(6000, 7 + c.rank() as u64, 2.0);
+            c.all_gather_quant(&local, bits).unwrap()
+        });
+        for other in &results[1..] {
+            assert_eq!(other, &results[0], "bits={bits}");
+        }
+    }
+}
+
+#[test]
+fn quantized_all_reduce_sum_tracks_f32() {
+    let len = 5000;
+    let results = run_world(4, move |mut c| {
+        let local = randn(len, 100 + c.rank() as u64, 1.0);
+        let exact = c.all_reduce_sum(local.clone()).unwrap();
+        let quant = c.all_reduce_sum_q(&local, 8).unwrap();
+        (local, exact, quant)
+    });
+    // error accumulates at most the per-rank bound times the world size
+    let world_bound: f32 = results
+        .iter()
+        .map(|(l, _, _)| chunk_error_bound(l, 8) * 0.5 + 1e-6)
+        .sum();
+    for (_, exact, quant) in &results {
+        for (a, b) in exact.iter().zip(quant) {
+            assert!((a - b).abs() <= world_bound, "{a} vs {b} (bound {world_bound})");
+        }
+    }
+    // sums identical across ranks
+    for (_, _, q) in &results[1..] {
+        assert_eq!(q, &results[0].2);
+    }
+}
+
+#[test]
+fn quantized_all_reduce_max_tracks_f32() {
+    let results = run_world(3, move |mut c| {
+        let local = randn(2000, 55 + c.rank() as u64, 3.0);
+        let exact = c.all_reduce_max(local.clone()).unwrap();
+        let quant = c.all_reduce_max_q(&local, 8).unwrap();
+        (local, exact, quant)
+    });
+    let bound: f32 = results
+        .iter()
+        .map(|(l, _, _)| chunk_error_bound(l, 8) * 0.5 + 1e-6)
+        .fold(0f32, f32::max);
+    for (_, exact, quant) in &results {
+        for (a, b) in exact.iter().zip(quant) {
+            assert!((a - b).abs() <= bound, "{a} vs {b} (bound {bound})");
+        }
+    }
+}
+
+/// ISSUE 2 acceptance: 8-bit quantized all-gather ships ≤ 0.3x the f32
+/// bytes (scales included); packed sub-byte cuts further.
+#[test]
+fn wire_bytes_ratio_meets_acceptance() {
+    let (world, len) = (8usize, 262_144usize);
+    let gather_stats =
+        |bits: u32| wire_allgather_stats(world, len, bits, Transport::NvlinkRdma);
+    let f32_bytes = gather_stats(32).bytes_sent as f64;
+    let q8 = gather_stats(8).bytes_sent as f64 / f32_bytes;
+    let q4 = gather_stats(4).bytes_sent as f64 / f32_bytes;
+    let q2 = gather_stats(2).bytes_sent as f64 / f32_bytes;
+    assert!(q8 <= 0.3, "8-bit wire ratio {q8}");
+    assert!(q4 <= 0.15, "4-bit wire ratio {q4}");
+    assert!(q2 <= 0.08, "2-bit wire ratio {q2}");
+    // and the byte counter is exact: codes + one f32 scale per chunk
+    let n_chunks = len.div_ceil(QUANT_CHUNK);
+    let expect_q8 = ((len + n_chunks * 4) * (world - 1)) as u64;
+    assert_eq!(gather_stats(8).bytes_sent, expect_q8);
+}
+
+#[test]
+fn scale_sync_over_quantized_wire_cuts_bytes() {
+    use llmeasyquant::coordinator::ScaleSync;
+    // 256 tracked regions synced once: quantized wire must ship well
+    // under half the f32 bytes (2 ops x 256 f32 each)
+    let results = run_world(4, |rank_comm| {
+        let mut comm = rank_comm;
+        let mut s = ScaleSync::new(256, 0.9, 1e-6, 0);
+        for region in 0..256 {
+            let x = randn(32, region as u64 * 13 + comm.rank() as u64, 1.0);
+            s.observe(region, &x);
+        }
+        let states = s.sync(&mut comm).unwrap();
+        (states, comm.stats())
+    });
+    // Thm. 4 consistency holds over the quantized wire
+    for (states, _) in &results[1..] {
+        for (a, b) in results[0].0.iter().zip(states) {
+            assert_eq!(a.delta, b.delta);
+            assert_eq!(a.zero_point, b.zero_point);
+        }
+    }
+    // f32 wire would be 2 ops x 256 floats x 4 bytes x (world-1) forwards
+    let f32_wire = (2 * 256 * 4 * 3) as u64;
+    let (_, stats) = &results[0];
+    assert!(
+        stats.bytes_sent * 2 < f32_wire,
+        "quantized sync bytes {} vs f32 {}",
+        stats.bytes_sent,
+        f32_wire
+    );
+}

@@ -172,6 +172,74 @@ fn all_zero_and_constant_inputs_match() {
 }
 
 #[test]
+fn packed_token_quantize_matches_reference_across_shapes() {
+    // fused encode+pack must yield exactly the reference codes after
+    // unpacking, and bit-identical scales — across ragged shapes and the
+    // packable bitwidths
+    for bits in [2u32, 4, 8] {
+        for (i, &(t, d)) in SHAPES.iter().enumerate() {
+            let x = randn(t * d, 400 + i as u64 + bits as u64 * 31);
+            let (rq, rd) = reference::token_quantize(&x, t, d, bits);
+            let mut packed = vec![0u8; quant::packed_len(t * d, bits)];
+            let mut delta = vec![9.0f32; t]; // stale contents must be overwritten
+            quant::token_quantize_packed_into(&x, t, d, bits, &mut packed, &mut delta).unwrap();
+            assert!(bits_eq(&delta, &rd), "scales t={t} d={d} bits={bits}");
+            let mut codes = vec![0i8; t * d];
+            quant::unpack_i8_into(&packed, bits, &mut codes).unwrap();
+            assert_eq!(codes, rq, "codes t={t} d={d} bits={bits}");
+            // packed dequant == reference codes * reference scales
+            let mut deq = vec![0f32; t * d];
+            quant::token_dequantize_packed_into(&packed, &delta, t, d, bits, &mut deq).unwrap();
+            for (row, (qrow, dl)) in rq.chunks(d.max(1)).zip(rd.iter()).enumerate() {
+                for (col, q) in qrow.iter().enumerate() {
+                    let want = *q as f32 * dl;
+                    let got = deq[row * d + col];
+                    assert!(got.to_bits() == want.to_bits(), "deq [{row},{col}]");
+                }
+            }
+        }
+    }
+}
+
+#[test]
+fn prop_pack_roundtrip_identity() {
+    // pack -> unpack is the identity on quantizer codes for random
+    // lengths and every packable bitwidth (signed and unsigned)
+    let gen = Triple(UsizeRange(0, 2048), UsizeRange(0, 2), UsizeRange(0, 10_000));
+    check(7, 80, &gen, |&(len, bits_idx, seed)| {
+        let bits = [2u32, 4, 8][bits_idx];
+        let x = randn(len.max(1), seed as u64);
+        let (q, _) = reference::token_quantize(&x, 1, len.max(1), bits);
+        let q = &q[..len];
+        let mut packed = vec![0u8; quant::packed_len(len, bits)];
+        quant::pack_i8_into(q, bits, &mut packed).unwrap();
+        let mut back = vec![0i8; len];
+        quant::unpack_i8_into(&packed, bits, &mut back).unwrap();
+        if back != q {
+            return false;
+        }
+        // unsigned side: simquant codes
+        let (uq, _, _) = reference::simquant_encode(&x, 1, len.max(1), bits);
+        let uq = &uq[..len];
+        let mut upacked = vec![0u8; quant::packed_len(len, bits)];
+        quant::pack_u8_into(uq, bits, &mut upacked).unwrap();
+        let mut uback = vec![0u8; len];
+        quant::unpack_u8_into(&upacked, bits, &mut uback).unwrap();
+        uback == uq
+    });
+}
+
+#[test]
+fn packed_buffer_length_mismatch_rejected() {
+    let x = vec![1.0f32; 8];
+    let mut delta = vec![0f32; 2];
+    let mut too_small = vec![0u8; quant::packed_len(8, 4) - 1];
+    assert!(quant::token_quantize_packed_into(&x, 2, 4, 4, &mut too_small, &mut delta).is_err());
+    let mut codes = vec![0i8; 8];
+    assert!(quant::unpack_i8_into(&too_small, 4, &mut codes).is_err());
+}
+
+#[test]
 fn prop_random_shapes_bit_identical() {
     // random small-to-medium shapes; shrinking reports the minimal (k, n)
     let gen = Triple(UsizeRange(1, 48), UsizeRange(1, 48), UsizeRange(0, 10_000));
