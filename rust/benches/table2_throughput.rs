@@ -110,7 +110,9 @@ fn main() -> anyhow::Result<()> {
             label.into(),
             format!("{:.1}", report.tokens_per_s()),
             report.decode_steps.to_string(),
-            format!("{:.2}", report.weight_storage_bytes as f64 / 1e6),
+            // per-replica footprint (weight_storage_bytes now sums the
+            // shard replicas; Table 2 quotes one model's storage)
+            format!("{:.2}", report.shard_weight_bytes[0] as f64 / 1e6),
             format!("{:.2}", t0.elapsed().as_secs_f64()),
         ]);
     }

@@ -1,14 +1,17 @@
 //! End-to-end serving driver (EXPERIMENTS.md §End-to-end): load the
-//! trained gpt2-small checkpoint, serve the same batched workload under
-//! every quantization backend across 2 worker shards, and report measured
-//! latency / throughput / memory — the deployment decision a downstream
-//! user actually makes.
+//! trained gpt2-small checkpoint and serve the same workload under every
+//! quantization backend, sweeping scheduler mode (static run-to-completion
+//! batches vs continuous batching) and shard count — the deployment
+//! decision a downstream user actually makes, now including the
+//! scheduling discipline.
 //!
 //!   cargo run --release --example serving_comparison [n_requests] [max_new]
+//!
+//! Needs PJRT artifacts (`--features xla` + `make artifacts`).
 
 use std::sync::Arc;
 
-use llmeasyquant::coordinator::{Request, Server, ServerConfig};
+use llmeasyquant::coordinator::{Request, SchedulerMode, Server, ServerConfig};
 use llmeasyquant::corpus;
 use llmeasyquant::quant::Variant;
 use llmeasyquant::runtime::Registry;
@@ -19,52 +22,69 @@ fn main() -> anyhow::Result<()> {
     let n_requests: usize = args.get(1).and_then(|s| s.parse().ok()).unwrap_or(16);
     let max_new: usize = args.get(2).and_then(|s| s.parse().ok()).unwrap_or(12);
     let model = "gpt2-small";
-    let shards = 2;
 
     let registry = Arc::new(Registry::open(std::path::Path::new("artifacts"))?);
     let mut table = Table::new(&[
         "variant",
+        "mode",
+        "shards",
         "tok/s",
         "mean lat (ms)",
+        "p99 lat (ms)",
         "ttft (ms)",
-        "weights (MB)",
+        "weights (MB, all shards)",
         "steps",
     ]);
 
     for &variant in Variant::all() {
-        let mut cfg = ServerConfig::new(model, variant);
-        cfg.shards = shards;
-        cfg.policy.max_wait = std::time::Duration::from_millis(500);
-        eprintln!("[{}] compiling + serving ...", variant.name());
-        let server = Server::start(&registry, cfg)?;
-        let requests: Vec<Request> = (0..n_requests)
-            .map(|i| {
-                Request::new(
-                    i as u64 + 1,
-                    corpus::generate_tokens(32, 31_000 + i as u64),
-                    max_new,
-                )
-            })
-            .collect();
-        let report = server.run_workload(requests)?;
-        table.row(vec![
-            variant.name().into(),
-            format!("{:.1}", report.tokens_per_s()),
-            format!("{:.1}", report.latency_summary().mean * 1e3),
-            format!("{:.1}", report.ttft_summary().mean * 1e3),
-            format!("{:.2}", report.weight_storage_bytes as f64 / 1e6),
-            report.decode_steps.to_string(),
-        ]);
+        for shards in [1usize, 2] {
+            for mode in [SchedulerMode::Static, SchedulerMode::Continuous] {
+                let mut cfg = ServerConfig::new(model, variant);
+                cfg.shards = shards;
+                cfg.mode = mode;
+                cfg.policy.max_wait = std::time::Duration::from_millis(500);
+                eprintln!(
+                    "[{} / {} / {} shards] compiling + serving ...",
+                    variant.name(),
+                    mode.name(),
+                    shards
+                );
+                let server = Server::start(&registry, cfg)?;
+                let requests: Vec<Request> = (0..n_requests)
+                    .map(|i| {
+                        Request::new(
+                            i as u64 + 1,
+                            corpus::generate_tokens(32, 31_000 + i as u64),
+                            max_new,
+                        )
+                    })
+                    .collect();
+                let report = server.run_workload(requests)?;
+                table.row(vec![
+                    variant.name().into(),
+                    mode.name().into(),
+                    shards.to_string(),
+                    format!("{:.1}", report.tokens_per_s()),
+                    format!("{:.1}", report.latency_summary().mean * 1e3),
+                    format!("{:.1}", report.latency_percentile(0.99) * 1e3),
+                    format!("{:.1}", report.ttft_summary().mean * 1e3),
+                    format!("{:.2}", report.weight_storage_bytes as f64 / 1e6),
+                    report.decode_steps.to_string(),
+                ]);
+            }
+        }
     }
 
     println!(
-        "\nend-to-end serving comparison — {model}, {shards} shards, {n_requests} requests x {max_new} new tokens (CPU-PJRT measured):"
+        "\nend-to-end serving comparison — {model}, {n_requests} requests x {max_new} new \
+         tokens, static vs continuous x shards (CPU-PJRT measured):"
     );
     table.print();
     println!(
         "\nNote: CPU wallclock favors the fp graphs (interpret-mode Pallas \
          int8 paths pay per-op overhead XLA:CPU cannot fuse); the A100-scale \
-         picture comes from `llmeasyquant breakdown` / bench table2_throughput."
+         picture comes from `llmeasyquant breakdown` / bench table2_throughput. \
+         Weight MB is the sum over shard replicas."
     );
     Ok(())
 }

@@ -1,11 +1,37 @@
-//! Dynamic batcher: collect requests up to a max batch size or a deadline,
-//! whichever comes first (the classic serving tradeoff the ablation bench
-//! sweeps).
+//! Admission queue for both scheduler modes.
+//!
+//! In **static** mode this is the classic dynamic batcher: collect
+//! requests up to a max batch size or a deadline, whichever comes first,
+//! then hand the batch to a worker that runs it to completion. In
+//! **continuous** mode the queue is per-worker and drained at every step
+//! boundary (`take_up_to`, capped by the shard's free slots) — requests
+//! never wait for a batch to "form", only for capacity.
 
 use std::collections::VecDeque;
 use std::time::{Duration, Instant};
 
 use super::request::Request;
+
+/// How the serving engine schedules admitted requests onto workers.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Default)]
+pub enum SchedulerMode {
+    /// seed behavior: deadline-formed batches run to completion
+    /// (head-of-line blocking; the ablation baseline)
+    #[default]
+    Static,
+    /// step-driven workers: requests join in-flight batches at step
+    /// boundaries, finished slots retire and free capacity immediately
+    Continuous,
+}
+
+impl SchedulerMode {
+    pub fn name(self) -> &'static str {
+        match self {
+            SchedulerMode::Static => "static",
+            SchedulerMode::Continuous => "continuous",
+        }
+    }
+}
 
 /// Batching policy knobs.
 #[derive(Debug, Clone, Copy)]
@@ -73,6 +99,20 @@ impl Batcher {
             Some(r) => now.duration_since(r.arrival) >= self.policy.max_wait,
             None => false,
         }
+    }
+
+    /// When the oldest queued request's deadline expires (static-mode
+    /// release even if the batch is not full). `None` when empty.
+    pub fn next_deadline(&self) -> Option<Instant> {
+        self.queue.front().map(|r| r.arrival + self.policy.max_wait)
+    }
+
+    /// Continuous-mode admission: immediately pop up to `n` requests
+    /// (the shard's free slot count) in FIFO order — no deadline, no
+    /// batch formation.
+    pub fn take_up_to(&mut self, n: usize) -> Vec<Request> {
+        let k = self.queue.len().min(n);
+        self.queue.drain(..k).collect()
     }
 
     /// Release the next batch if the policy allows.
@@ -148,6 +188,38 @@ mod tests {
         let batch = b.take(Instant::now()).unwrap();
         let ids: Vec<u64> = batch.requests.iter().map(|r| r.id).collect();
         assert_eq!(ids, vec![0, 1, 2, 3]);
+    }
+
+    #[test]
+    fn take_up_to_pops_fifo_without_deadline() {
+        let mut b = Batcher::new(BatchPolicy { max_batch: 8, max_wait: Duration::from_secs(10) });
+        for i in 0..5 {
+            b.push(req(i));
+        }
+        // deadline far away, but continuous admission drains immediately
+        let got = b.take_up_to(3);
+        assert_eq!(got.iter().map(|r| r.id).collect::<Vec<_>>(), vec![0, 1, 2]);
+        assert_eq!(b.pending(), 2);
+        assert_eq!(b.take_up_to(9).len(), 2);
+        assert!(b.take_up_to(4).is_empty());
+    }
+
+    #[test]
+    fn next_deadline_tracks_oldest() {
+        let mut b = Batcher::new(BatchPolicy { max_batch: 8, max_wait: Duration::from_millis(7) });
+        assert!(b.next_deadline().is_none());
+        let r = req(1);
+        let expect = r.arrival + Duration::from_millis(7);
+        b.push(r);
+        b.push(req(2));
+        assert_eq!(b.next_deadline(), Some(expect));
+    }
+
+    #[test]
+    fn scheduler_mode_names() {
+        assert_eq!(SchedulerMode::default(), SchedulerMode::Static);
+        assert_eq!(SchedulerMode::Static.name(), "static");
+        assert_eq!(SchedulerMode::Continuous.name(), "continuous");
     }
 
     #[test]

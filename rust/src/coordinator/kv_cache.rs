@@ -78,6 +78,9 @@ pub struct KvCache {
     v_step: Vec<f32>,
     /// per-slot filled length
     lens: Vec<usize>,
+    /// slot free-list for the continuous-batching engine (descending, so
+    /// `pop` hands out the lowest free slot — deterministic assignment)
+    free: Vec<usize>,
     /// reused page-reencode scratch (decoded page, widened lo/hi)
     scratch: Vec<f32>,
     lo_scratch: Vec<f32>,
@@ -107,6 +110,7 @@ impl KvCache {
             v_min: Vec::new(),
             v_step: Vec::new(),
             lens: vec![0; batch],
+            free: (0..batch).rev().collect(),
             scratch: Vec::new(),
             lo_scratch: Vec::new(),
             hi_scratch: Vec::new(),
@@ -148,6 +152,7 @@ impl KvCache {
             v_min: vec![0.0; n_layers * batch * d],
             v_step: vec![1e-8; n_layers * batch * d],
             lens: vec![0; batch],
+            free: (0..batch).rev().collect(),
             scratch: Vec::new(),
             lo_scratch: Vec::new(),
             hi_scratch: Vec::new(),
@@ -178,18 +183,54 @@ impl KvCache {
         ((1u32 << self.bits) - 1) as f32
     }
 
-    /// Clear one slot for reuse by a new request.
+    /// Clear one slot for reuse by a new request: length, SimQuant page
+    /// params, and the pages themselves (the decode graphs consume full
+    /// `[CTX]` pages, so a retired request's rows must not leak into the
+    /// next occupant's cache inputs).
     pub fn reset_slot(&mut self, slot: usize) {
         self.lens[slot] = 0;
-        if self.mode == Mode::SimQuant {
-            for layer in 0..self.n_layers {
-                let p = (layer * self.batch + slot) * self.d;
-                self.k_min[p..p + self.d].fill(0.0);
-                self.k_step[p..p + self.d].fill(1e-8);
-                self.v_min[p..p + self.d].fill(0.0);
-                self.v_step[p..p + self.d].fill(1e-8);
+        for layer in 0..self.n_layers {
+            match self.mode {
+                Mode::F32 => {
+                    let off = self.row_off(layer, slot, 0);
+                    let page = self.ctx * self.d;
+                    self.k_f32[off..off + page].fill(0.0);
+                    self.v_f32[off..off + page].fill(0.0);
+                }
+                Mode::SimQuant => {
+                    let off = self.code_off(layer, slot, 0);
+                    let page = self.ctx * self.row_bytes;
+                    self.k_q[off..off + page].fill(0);
+                    self.v_q[off..off + page].fill(0);
+                    let p = (layer * self.batch + slot) * self.d;
+                    self.k_min[p..p + self.d].fill(0.0);
+                    self.k_step[p..p + self.d].fill(1e-8);
+                    self.v_min[p..p + self.d].fill(0.0);
+                    self.v_step[p..p + self.d].fill(1e-8);
+                }
             }
         }
+    }
+
+    /// Number of slots currently available to `acquire_slot`.
+    pub fn free_slots(&self) -> usize {
+        self.free.len()
+    }
+
+    /// Claim the lowest free slot for a new request (the caller ingests
+    /// prefill rows into it next). Returns `None` when the batch is full.
+    pub fn acquire_slot(&mut self) -> Option<usize> {
+        self.free.pop()
+    }
+
+    /// Retire a slot: clear it and return it to the free list so the
+    /// next admitted request can reuse its pages immediately.
+    pub fn release_slot(&mut self, slot: usize) {
+        debug_assert!(!self.free.contains(&slot), "double release of slot {slot}");
+        self.reset_slot(slot);
+        self.free.push(slot);
+        // keep descending order so `pop` stays lowest-first
+        self.free.sort_unstable_by(|a, b| b.cmp(a));
     }
 
     /// Bytes the cache occupies (memory accounting for the tables).
@@ -970,6 +1011,36 @@ mod tests {
         kv.ingest_prefill(1, 0, &k, &k, 4);
         kv.reset_slot(1);
         assert_eq!(kv.len(1), 0);
+    }
+
+    #[test]
+    fn slot_free_list_acquire_release_reuse() {
+        let mut kv = KvCache::new_simquant(1, 3, 8, 4);
+        assert_eq!(kv.free_slots(), 3);
+        // lowest-first, deterministic
+        assert_eq!(kv.acquire_slot(), Some(0));
+        assert_eq!(kv.acquire_slot(), Some(1));
+        assert_eq!(kv.acquire_slot(), Some(2));
+        assert_eq!(kv.acquire_slot(), None);
+        let k = rows(2, 4, 7, 1.0);
+        kv.ingest_prefill(1, 0, &k, &k, 2);
+        kv.release_slot(1);
+        assert_eq!(kv.free_slots(), 1);
+        assert_eq!(kv.len(1), 0);
+        // released slot is handed out again
+        assert_eq!(kv.acquire_slot(), Some(1));
+    }
+
+    #[test]
+    fn release_slot_scrubs_pages() {
+        let mut kv = KvCache::new_f32(1, 2, 4, 2);
+        let k = vec![1.0, 2.0, 3.0, 4.0];
+        kv.ingest_prefill(0, 0, &k, &k, 2);
+        assert_eq!(kv.acquire_slot(), Some(0));
+        kv.release_slot(0);
+        // the next occupant must not see the retired request's rows
+        let ins = kv.graph_inputs();
+        assert!(ins[0].f32_view().unwrap().iter().all(|x| *x == 0.0));
     }
 
     #[test]

@@ -1,16 +1,36 @@
 //! The serving coordinator — LLMEasyQuant's Distributed Controller Layer.
 //!
-//! Pieces (paper §2.1, §3):
-//!   router     — request admission + shard assignment (least-loaded)
-//!   batcher    — dynamic batching with a max-size / deadline policy
-//!   kv_cache   — per-slot KV pages, fp32 or SimQuant u8 codes with online
-//!                page re-encode (the "runtime adaptation" of §3.4)
-//!   scale_sync — Alg. 1 EMA trackers + Eqs. 7-8 collective synchronization
-//!   bitwidth   — Thm. 3 greedy per-layer mixed-precision search
-//!   worker     — one shard: owns a ModelHandle, runs prefill/decode
-//!   server     — ties it together: router -> batcher -> workers -> responses
+//! Since the continuous-batching refactor this layer is a step-driven
+//! serving engine (paper §2.1, §3; scheduling discipline modeled on
+//! production continuous-batching servers):
 //!
-//! Python never appears here: workers execute AOT artifacts through PJRT.
+//!   router     — admission (BOS/truncate) + least-loaded shard choice,
+//!                where load is in-flight *tokens*, not request count
+//!   batcher    — admission queue for both [`SchedulerMode`]s: static
+//!                deadline-formed batches, or per-shard step-boundary
+//!                draining (continuous)
+//!   kv_cache   — per-slot KV pages (fp32 or SimQuant codes with online
+//!                re-encode, §3.4) plus a slot free-list: retired slots
+//!                are scrubbed and reusable on the next step
+//!   worker     — the step core: `join` (fused prefill of joiners into
+//!                free slots, first token + TTFT) and `step` (one fused
+//!                decode across in-flight slots; finished slots retire
+//!                mid-flight). Backends: PJRT artifacts or the offline
+//!                deterministic `runtime::SimModel`
+//!   server     — event-driven dispatcher: open-loop `Arrival` replay or
+//!                closed-loop firehose, routing via `RouteDecision`,
+//!                per-token `ServeEvent` streaming back to the collector
+//!   scale_sync — Alg. 1 EMA trackers + Eqs. 7-8 collective sync
+//!   bitwidth   — Thm. 3 greedy per-layer mixed-precision search
+//!   workload   — Poisson arrival generator (open loop) + firehose
+//!
+//! Static mode survives as the ablation baseline: run-to-completion
+//! batches, exactly the pre-refactor behavior. Continuous mode retires
+//! finished slots immediately, so one long request no longer
+//! head-of-line-blocks the other slots of its batch.
+//!
+//! Python never appears here: workers execute AOT artifacts through PJRT
+//! (or the simulated backend offline).
 
 mod batcher;
 mod bitwidth;
@@ -22,14 +42,14 @@ mod server;
 mod worker;
 pub mod workload;
 
-pub use batcher::{Batch, BatchPolicy, Batcher};
+pub use batcher::{Batch, BatchPolicy, Batcher, SchedulerMode};
 pub use bitwidth::{
     quant_mse, search_bitwidths, size_reduction, BitwidthChoice, LayerInfo, SearchPolicy,
     BIT_CHOICES,
 };
 pub use kv_cache::{KvCache, PrefillPage};
-pub use request::{Request, RequestId, Response};
-pub use router::Router;
+pub use request::{Request, RequestId, Response, ServeEvent};
+pub use router::{request_cost, RouteDecision, Router};
 pub use scale_sync::{ScaleSync, SYNC_WIRE_BITS};
 pub use server::{Server, ServerConfig, ServerReport};
-pub use worker::Worker;
+pub use worker::{Backend, Worker, WorkerStats};

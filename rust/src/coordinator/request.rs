@@ -1,4 +1,4 @@
-//! Request / response types for the serving path.
+//! Request / response / event types for the serving path.
 
 use std::time::Instant;
 
@@ -11,6 +11,9 @@ pub struct Request {
     /// prompt token ids (BOS-prefixed by the router if absent)
     pub prompt: Vec<i32>,
     pub max_new_tokens: usize,
+    /// when the request entered the system; the open-loop dispatcher
+    /// re-stamps this at injection time so TTFT/latency measure real
+    /// queueing from arrival, not workload-generation time
     pub arrival: Instant,
 }
 
@@ -31,8 +34,26 @@ pub struct Response {
     pub latency_s: f64,
     /// time to first token
     pub ttft_s: f64,
+    /// absolute instant the first token was emitted (jitter-free TTFT
+    /// ordering for the scheduler invariant tests)
+    pub first_token_at: Instant,
     /// shard that served the request
     pub shard: usize,
+}
+
+/// One streamed serving event. Workers emit a `Token` per generated
+/// token as it happens (decode-step granularity) and a final `Done`
+/// carrying the complete response; per-sender channel order guarantees
+/// every `Token` of a request precedes its `Done`.
+#[derive(Debug, Clone)]
+pub enum ServeEvent {
+    Token {
+        id: RequestId,
+        token: i32,
+        /// true for the prefill-produced first token
+        first: bool,
+    },
+    Done(Response),
 }
 
 #[cfg(test)]
@@ -44,5 +65,16 @@ mod tests {
         let r = Request::new(1, vec![1, 2, 3], 16);
         assert!(r.arrival.elapsed().as_secs() < 1);
         assert_eq!(r.max_new_tokens, 16);
+    }
+
+    #[test]
+    fn serve_event_carries_first_flag() {
+        let e = ServeEvent::Token { id: 4, token: 9, first: true };
+        match e {
+            ServeEvent::Token { id, token, first } => {
+                assert_eq!((id, token, first), (4, 9, true));
+            }
+            ServeEvent::Done(_) => panic!("wrong arm"),
+        }
     }
 }

@@ -1,4 +1,10 @@
 //! Request router: admission control + least-loaded shard assignment.
+//!
+//! Load is tracked in in-flight *tokens* (admitted prompt length plus the
+//! decode budget `max_new_tokens`), not request count: a shard chewing on
+//! one 100-token generation is busier than one holding three 4-token
+//! requests, and the continuous-batching dispatcher routes on exactly
+//! this signal (`RouteDecision`).
 
 use std::collections::BTreeMap;
 
@@ -10,17 +16,26 @@ use super::request::{Request, RequestId};
 #[derive(Debug, Clone, Copy, PartialEq, Eq)]
 pub struct RouteDecision {
     pub shard: usize,
+    /// token cost charged to the shard (released on `complete`)
+    pub cost: usize,
 }
 
-/// The router tracks in-flight load per shard and a session table.
+/// Token cost of an admitted request: prompt tokens to prefill plus the
+/// decode budget. Computed after BOS-prefixing/truncation.
+pub fn request_cost(req: &Request) -> usize {
+    req.prompt.len() + req.max_new_tokens
+}
+
+/// The router tracks in-flight token load per shard and a session table.
 #[derive(Debug)]
 pub struct Router {
     n_shards: usize,
     max_prompt: usize,
-    /// in-flight request count per shard
+    /// in-flight token estimate per shard
     load: Vec<usize>,
-    /// request -> shard (sessions stay on their shard for KV affinity)
-    sessions: BTreeMap<RequestId, usize>,
+    /// request -> (shard, charged cost); sessions stay on their shard
+    /// for KV affinity
+    sessions: BTreeMap<RequestId, (usize, usize)>,
     next_id: RequestId,
 }
 
@@ -46,9 +61,9 @@ impl Router {
         id
     }
 
-    /// Admit a request: BOS-prefix, truncate the prompt to fit, assign the
-    /// least-loaded shard (ties -> lowest rank, keeps assignment
-    /// deterministic for the property tests).
+    /// Admit a request: BOS-prefix, truncate the prompt to fit, assign
+    /// the shard with the fewest in-flight tokens (ties -> lowest rank,
+    /// keeps assignment deterministic for the property tests).
     pub fn admit(&mut self, mut req: Request) -> (Request, RouteDecision) {
         if req.prompt.first() != Some(&BOS) {
             req.prompt.insert(0, BOS);
@@ -56,6 +71,7 @@ impl Router {
         if req.prompt.len() > self.max_prompt {
             req.prompt.truncate(self.max_prompt);
         }
+        let cost = request_cost(&req);
         let shard = self
             .load
             .iter()
@@ -63,22 +79,23 @@ impl Router {
             .min_by_key(|(i, l)| (**l, *i))
             .map(|(i, _)| i)
             .unwrap();
-        self.load[shard] += 1;
-        self.sessions.insert(req.id, shard);
-        (req, RouteDecision { shard })
+        self.load[shard] += cost;
+        self.sessions.insert(req.id, (shard, cost));
+        (req, RouteDecision { shard, cost })
     }
 
-    /// Mark a request complete, releasing its shard slot.
+    /// Mark a request complete, releasing its token charge.
     pub fn complete(&mut self, id: RequestId) {
-        if let Some(shard) = self.sessions.remove(&id) {
-            self.load[shard] = self.load[shard].saturating_sub(1);
+        if let Some((shard, cost)) = self.sessions.remove(&id) {
+            self.load[shard] = self.load[shard].saturating_sub(cost);
         }
     }
 
     pub fn shard_of(&self, id: RequestId) -> Option<usize> {
-        self.sessions.get(&id).copied()
+        self.sessions.get(&id).map(|(shard, _)| *shard)
     }
 
+    /// Per-shard in-flight token load.
     pub fn load(&self) -> &[usize] {
         &self.load
     }
@@ -129,6 +146,31 @@ mod tests {
     }
 
     #[test]
+    fn routes_by_tokens_not_request_count() {
+        let mut r = Router::new(2, 64);
+        // one heavy request to shard 0 ...
+        let (_, d1) = r.admit(Request::new(1, vec![5; 40], 16));
+        assert_eq!(d1.shard, 0);
+        // ... then two light ones both land on shard 1: 2 light requests
+        // are still cheaper than 1 heavy one
+        let (_, d2) = r.admit(Request::new(2, vec![5; 4], 2));
+        let (_, d3) = r.admit(Request::new(3, vec![5; 4], 2));
+        assert_eq!((d2.shard, d3.shard), (1, 1));
+    }
+
+    #[test]
+    fn decision_cost_matches_admitted_prompt() {
+        let mut r = Router::new(1, 8);
+        // 100-token prompt truncated to 8, + 4 new tokens
+        let (q, d) = r.admit(req(1, 100));
+        assert_eq!(d.cost, request_cost(&q));
+        assert_eq!(d.cost, 8 + 4);
+        assert_eq!(r.load(), &[12]);
+        r.complete(1);
+        assert_eq!(r.load(), &[0]);
+    }
+
+    #[test]
     fn complete_is_idempotent() {
         let mut r = Router::new(2, 16);
         let (_, _) = r.admit(req(1, 2));
@@ -139,32 +181,36 @@ mod tests {
     }
 
     #[test]
-    fn prop_load_balance_within_one() {
-        // property: after admitting K requests with no completions, shard
-        // loads differ by at most 1
+    fn prop_load_balance_within_one_request() {
+        // property: after admitting K equal-cost requests with no
+        // completions, shard loads differ by at most one request's cost
         check(7, 100, &UsizeRange(1, 64), |k| {
             let mut r = Router::new(4, 16);
+            let mut cost = 0;
             for i in 0..*k {
-                r.admit(Request::new(i as RequestId, vec![3, 4], 2));
+                let (_, d) = r.admit(Request::new(i as RequestId, vec![3, 4], 2));
+                cost = d.cost;
             }
             let mx = *r.load().iter().max().unwrap();
             let mn = *r.load().iter().min().unwrap();
-            mx - mn <= 1
+            mx - mn <= cost
         });
     }
 
     #[test]
     fn prop_load_conserved() {
-        // property: total load equals admitted - completed
+        // property: total token load equals (admitted - completed) x cost
         check(8, 100, &UsizeRange(1, 40), |k| {
             let mut r = Router::new(3, 16);
+            let mut cost = 0;
             for i in 0..*k {
-                r.admit(Request::new(i as RequestId, vec![3], 1));
+                let (_, d) = r.admit(Request::new(i as RequestId, vec![3], 1));
+                cost = d.cost;
             }
             for i in 0..(*k / 2) {
                 r.complete(i as RequestId);
             }
-            r.load().iter().sum::<usize>() == *k - *k / 2
+            r.load().iter().sum::<usize>() == (*k - *k / 2) * cost
         });
     }
 }

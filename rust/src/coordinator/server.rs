@@ -1,25 +1,41 @@
-//! The serving front-end: router -> batcher -> worker pool -> responses.
+//! The serving front-end: an event-driven dispatcher over step-driven
+//! worker shards.
 //!
-//! Workers run on std::thread shards (one per simulated GPU). The server
-//! API is synchronous-batch oriented: feed a workload of requests, get a
-//! report with every response plus merged metrics — the shape every bench
-//! and example drives.
+//! Each worker runs on its own std::thread (one per simulated GPU) and
+//! owns a step-driven [`Worker`]. The server's event loop:
+//!
+//!   * replays `Arrival.at_s` offsets (open loop, [`Server::run_open_loop`])
+//!     or injects everything at t=0 (closed-loop firehose,
+//!     [`Server::run_workload`]),
+//!   * routes each admitted request through the [`Router`]'s actual
+//!     `RouteDecision` — least loaded by in-flight *tokens*,
+//!   * injects it into that shard's in-flight batch at the next step
+//!     boundary (continuous mode) or forms deadline batches and
+//!     round-robins them (static mode, the ablation baseline),
+//!   * consumes the workers' streamed per-token [`ServeEvent`]s, so
+//!     TTFT / p50 / p99 are measured under real queueing.
+//!
+//! Scheduler selection is [`SchedulerMode`] on the config; `Static`
+//! preserves the pre-refactor run-to-completion behavior exactly.
 
-use std::sync::mpsc::{channel, Receiver, Sender};
+use std::collections::VecDeque;
+use std::sync::mpsc::{channel, Receiver, RecvTimeoutError, Sender, TryRecvError};
 use std::sync::Arc;
 use std::thread::JoinHandle;
 use std::time::{Duration, Instant};
 
-use anyhow::{anyhow, Result};
+use anyhow::{anyhow, bail, Result};
 
-use crate::metrics::{mean_ci95, Breakdown, Stage, Summary};
+use crate::metrics::{mean_ci95, percentile, Breakdown, Stage, Summary};
 use crate::quant::Variant;
-use crate::runtime::Registry;
+use crate::runtime::{Registry, SimCost, SimModel};
+use crate::util::pool;
 
-use super::batcher::{Batch, BatchPolicy, Batcher};
-use super::request::{Request, Response};
+use super::batcher::{Batch, BatchPolicy, Batcher, SchedulerMode};
+use super::request::{Request, Response, ServeEvent};
 use super::router::Router;
-use super::worker::Worker;
+use super::worker::{Backend, Worker, WorkerStats};
+use super::workload::Arrival;
 
 /// Server configuration.
 #[derive(Debug, Clone)]
@@ -31,6 +47,8 @@ pub struct ServerConfig {
     /// compiled graph batch size (1 or 8 in the shipped artifacts)
     pub batch: usize,
     pub policy: BatchPolicy,
+    /// scheduling discipline; `Static` is the seed behavior
+    pub mode: SchedulerMode,
 }
 
 impl ServerConfig {
@@ -41,8 +59,18 @@ impl ServerConfig {
             shards: 1,
             batch: 8,
             policy: BatchPolicy::default(),
+            mode: SchedulerMode::Static,
         }
     }
+}
+
+/// Messages from the dispatcher to a worker shard.
+enum ToWorker {
+    /// continuous mode: enqueue; the worker admits it at the next step
+    /// boundary (capacity permitting)
+    Inject(Request),
+    /// static mode: run this formed batch to completion
+    Batch(Vec<Request>),
 }
 
 /// Workload results + metrics.
@@ -51,10 +79,20 @@ pub struct ServerReport {
     pub responses: Vec<Response>,
     pub wall_s: f64,
     pub tokens_out: u64,
+    /// per-token events observed by the dispatcher (== tokens_out when
+    /// no request was lost in flight)
+    pub tokens_streamed: u64,
     pub decode_steps: u64,
     pub breakdown: Breakdown,
+    /// total weight bytes across all shards (each shard holds a replica)
     pub weight_storage_bytes: usize,
+    pub shard_weight_bytes: Vec<usize>,
     pub shard_tokens: Vec<u64>,
+    /// requests admitted into slots / retired from slots
+    pub joins: u64,
+    pub retires: u64,
+    /// max concurrently in-flight slots per shard
+    pub peak_active: Vec<usize>,
 }
 
 impl ServerReport {
@@ -71,6 +109,18 @@ impl ServerReport {
         let ts: Vec<f64> = self.responses.iter().map(|r| r.ttft_s).collect();
         mean_ci95(&ts)
     }
+
+    /// End-to-end latency percentile (q in [0, 1]).
+    pub fn latency_percentile(&self, q: f64) -> f64 {
+        let ls: Vec<f64> = self.responses.iter().map(|r| r.latency_s).collect();
+        percentile(&ls, q)
+    }
+
+    /// Time-to-first-token percentile (q in [0, 1]).
+    pub fn ttft_percentile(&self, q: f64) -> f64 {
+        let ts: Vec<f64> = self.responses.iter().map(|r| r.ttft_s).collect();
+        percentile(&ts, q)
+    }
 }
 
 /// Multi-shard server.
@@ -78,118 +128,317 @@ pub struct Server {
     cfg: ServerConfig,
     router: Router,
     batcher: Batcher,
-    senders: Vec<Sender<Batch>>,
-    results: Receiver<(usize, Result<Vec<Response>>)>,
-    handles: Vec<JoinHandle<(Breakdown, u64, u64)>>,
-    weight_storage_bytes: usize,
+    senders: Vec<Sender<ToWorker>>,
+    events: Receiver<(usize, Result<ServeEvent>)>,
+    handles: Vec<JoinHandle<WorkerStats>>,
+    shard_weight_bytes: Vec<usize>,
 }
 
 impl Server {
-    /// Spin up the worker pool (compiles executables on first use).
+    /// Spin up a PJRT-backed worker pool (compiles executables on first
+    /// use; requires `--features xla` + artifacts).
     pub fn start(registry: &Arc<Registry>, cfg: ServerConfig) -> Result<Self> {
-        let model_cfg = registry.model_cfg(&cfg.model)?;
-        let router = Router::new(cfg.shards, model_cfg.ctx - 8);
-        let batcher = Batcher::new(cfg.policy);
-
-        let (res_tx, res_rx) = channel();
-        let mut senders = Vec::new();
-        let mut handles = Vec::new();
-        let mut weight_storage_bytes = 0;
-        for shard in 0..cfg.shards {
+        let mut backends = Vec::with_capacity(cfg.shards);
+        for _ in 0..cfg.shards {
             let handle = registry.model_handle(&cfg.model, cfg.variant, cfg.batch)?;
-            weight_storage_bytes = handle.weight_storage_bytes();
-            let (tx, rx): (Sender<Batch>, Receiver<Batch>) = channel();
+            backends.push(Backend::Pjrt(handle));
+        }
+        Self::start_with(cfg, backends)
+    }
+
+    /// Spin up simulated worker shards (offline: scheduler tests and the
+    /// batching ablation). `cfg.model` is ignored; the sim graphs are
+    /// gpt2-tiny-shaped with the given wall-clock cost model.
+    pub fn start_sim(cfg: ServerConfig, cost: SimCost) -> Result<Self> {
+        let backends = (0..cfg.shards)
+            .map(|_| Backend::Sim(SimModel::tiny(cfg.variant, cfg.batch, cost)))
+            .collect();
+        Self::start_with(cfg, backends)
+    }
+
+    fn start_with(cfg: ServerConfig, backends: Vec<Backend>) -> Result<Self> {
+        if backends.len() != cfg.shards || cfg.shards == 0 {
+            bail!("need one backend per shard (got {})", backends.len());
+        }
+        let ctx = backends[0].cfg().ctx;
+        let router = Router::new(cfg.shards, ctx - 8);
+        let batcher = Batcher::new(cfg.policy);
+        // pool-aware batch shaping: size the shared kernel pool from the
+        // total slot count so per-shard fan-outs don't convoy
+        pool::reserve(cfg.shards * cfg.batch);
+
+        let (ev_tx, ev_rx) = channel();
+        let mut senders = Vec::with_capacity(cfg.shards);
+        let mut handles = Vec::with_capacity(cfg.shards);
+        let mut shard_weight_bytes = Vec::with_capacity(cfg.shards);
+        for (shard, backend) in backends.into_iter().enumerate() {
+            shard_weight_bytes.push(backend.weight_storage_bytes());
+            let (tx, rx): (Sender<ToWorker>, Receiver<ToWorker>) = channel();
             senders.push(tx);
-            let res_tx = res_tx.clone();
-            handles.push(std::thread::spawn(move || {
-                let mut worker = Worker::new(shard, handle);
-                while let Ok(batch) = rx.recv() {
-                    let out = worker.process_batch(batch);
-                    if res_tx.send((shard, out)).is_err() {
-                        break;
-                    }
-                }
-                (worker.breakdown, worker.steps, worker.tokens_out)
-            }));
+            let ev_tx = ev_tx.clone();
+            let worker = Worker::new(shard, backend);
+            handles.push(std::thread::spawn(move || worker_loop(worker, rx, ev_tx)));
         }
         Ok(Server {
             cfg,
             router,
             batcher,
             senders,
-            results: res_rx,
+            events: ev_rx,
             handles,
-            weight_storage_bytes,
+            shard_weight_bytes,
         })
     }
 
-    /// Run a full workload to completion and shut the pool down.
-    pub fn run_workload(mut self, requests: Vec<Request>) -> Result<ServerReport> {
+    /// Closed-loop firehose: every request arrives at t=0. Runs the
+    /// workload to completion and shuts the pool down.
+    pub fn run_workload(self, requests: Vec<Request>) -> Result<ServerReport> {
+        let arrivals = requests
+            .into_iter()
+            .map(|request| Arrival { at_s: 0.0, request })
+            .collect();
+        self.run_arrivals(arrivals)
+    }
+
+    /// Open-loop replay: each request is injected at its `Arrival.at_s`
+    /// offset from workload start, independent of service progress — the
+    /// arrival pressure under which TTFT/p99 are meaningful.
+    pub fn run_open_loop(self, arrivals: Vec<Arrival>) -> Result<ServerReport> {
+        self.run_arrivals(arrivals)
+    }
+
+    fn run_arrivals(mut self, mut arrivals: Vec<Arrival>) -> Result<ServerReport> {
+        arrivals.sort_by(|a, b| a.at_s.partial_cmp(&b.at_s).unwrap());
+        let total = arrivals.len();
+        let mut pending: VecDeque<Arrival> = arrivals.into();
         let t0 = Instant::now();
-        let total = requests.len();
-        // shard batches round-robin over workers via the router's
-        // least-loaded choice at batch granularity
+
+        let mut responses: Vec<Response> = Vec::with_capacity(total);
+        let mut shard_tokens = vec![0u64; self.cfg.shards];
+        let mut tokens_streamed = 0u64;
         let mut shard_rr = 0usize;
-        for req in requests {
-            let (req, _) = self.router.admit(req);
-            self.batcher.push(req);
-            // release full batches eagerly
-            while let Some(batch) = self.batcher.take(Instant::now()) {
-                self.dispatch(batch, &mut shard_rr)?;
+
+        while responses.len() < total {
+            // 1) inject every due arrival
+            let now_s = t0.elapsed().as_secs_f64();
+            while pending.front().is_some_and(|a| a.at_s <= now_s) {
+                let mut a = pending.pop_front().unwrap();
+                // the request enters the system *now*; TTFT/latency
+                // measure queueing from this instant
+                a.request.arrival = Instant::now();
+                let (req, decision) = self.router.admit(a.request);
+                match self.cfg.mode {
+                    SchedulerMode::Continuous => {
+                        self.senders[decision.shard]
+                            .send(ToWorker::Inject(req))
+                            .map_err(|_| anyhow!("worker {} is gone", decision.shard))?;
+                    }
+                    SchedulerMode::Static => self.batcher.push(req),
+                }
             }
-        }
-        // deadline-flush the tail
-        std::thread::sleep(self.batcher.policy().max_wait + Duration::from_millis(1));
-        for batch in self.batcher.flush() {
-            self.dispatch(batch, &mut shard_rr)?;
+            // 2) static mode: release every batch the policy allows; once
+            // the arrival stream is exhausted, flush the tail immediately
+            // instead of sleeping out the deadline (and skip entirely
+            // when the queue is empty)
+            if self.cfg.mode == SchedulerMode::Static {
+                while let Some(batch) = self.batcher.take(Instant::now()) {
+                    self.dispatch_static(batch, &mut shard_rr)?;
+                }
+                if pending.is_empty() && self.batcher.pending() > 0 {
+                    for batch in self.batcher.flush() {
+                        self.dispatch_static(batch, &mut shard_rr)?;
+                    }
+                }
+            }
+            // 3) nothing left to inject: close the injection side so
+            // idle workers can exit as soon as they drain
+            if pending.is_empty() && self.batcher.pending() == 0 {
+                self.senders.clear();
+            }
+            // 4) wait for the next event, the next arrival, or (static)
+            // the next batch deadline — whichever is first
+            let mut timeout = Duration::from_secs(600);
+            if let Some(a) = pending.front() {
+                let dt = Duration::from_secs_f64((a.at_s - t0.elapsed().as_secs_f64()).max(0.0));
+                timeout = timeout.min(dt);
+            }
+            if let Some(deadline) = self.batcher.next_deadline() {
+                timeout = timeout.min(deadline.saturating_duration_since(Instant::now()));
+            }
+            match self.events.recv_timeout(timeout) {
+                Ok((shard, Ok(ev))) => match ev {
+                    ServeEvent::Token { .. } => tokens_streamed += 1,
+                    ServeEvent::Done(r) => {
+                        self.router.complete(r.id);
+                        shard_tokens[shard] += r.tokens.len() as u64;
+                        responses.push(r);
+                    }
+                },
+                Ok((_, Err(e))) => return Err(e),
+                Err(RecvTimeoutError::Timeout) => {
+                    if pending.is_empty() && self.batcher.pending() == 0 {
+                        bail!("worker pool stalled ({}/{} served)", responses.len(), total);
+                    }
+                }
+                Err(RecvTimeoutError::Disconnected) => {
+                    bail!("workers exited with {}/{} served", responses.len(), total)
+                }
+            }
         }
 
-        // collect
-        let mut responses = Vec::with_capacity(total);
-        let mut shard_tokens = vec![0u64; self.cfg.shards];
-        while responses.len() < total {
-            let (shard, out) = self
-                .results
-                .recv_timeout(Duration::from_secs(600))
-                .map_err(|_| anyhow!("worker pool stalled"))?;
-            let rs = out?;
-            for r in &rs {
-                self.router.complete(r.id);
-                shard_tokens[shard] += r.tokens.len() as u64;
+        // every Token of a completed request precedes its Done in its
+        // sender's FIFO, so the stragglers are already buffered
+        while let Ok((_, ev)) = self.events.try_recv() {
+            if let Ok(ServeEvent::Token { .. }) = ev {
+                tokens_streamed += 1;
             }
-            responses.extend(rs);
         }
 
         // shut down workers, merge metrics
-        drop(self.senders);
+        self.senders.clear();
         let mut breakdown = Breakdown::new();
-        let mut steps = 0u64;
-        let mut tokens = 0u64;
+        let (mut steps, mut tokens, mut joins, mut retires) = (0u64, 0u64, 0u64, 0u64);
+        let mut peak_active = Vec::with_capacity(self.handles.len());
         for h in self.handles {
-            let (b, s, t) = h.join().map_err(|_| anyhow!("worker panicked"))?;
-            breakdown.merge(&b);
-            steps += s;
-            tokens += t;
+            let st = h.join().map_err(|_| anyhow!("worker panicked"))?;
+            breakdown.merge(&st.breakdown);
+            steps += st.steps;
+            tokens += st.tokens_out;
+            joins += st.joins;
+            retires += st.retires;
+            peak_active.push(st.peak_active);
         }
         // comm/sync stages are exercised by the cluster-sim path; on the
         // serve path they only appear if scale sync ran
         breakdown.add(Stage::Sync, 0.0);
+        let weight_storage_bytes = self.shard_weight_bytes.iter().sum();
         Ok(ServerReport {
             responses,
             wall_s: t0.elapsed().as_secs_f64(),
             tokens_out: tokens,
+            tokens_streamed,
             decode_steps: steps,
             breakdown,
-            weight_storage_bytes: self.weight_storage_bytes,
+            weight_storage_bytes,
+            shard_weight_bytes: self.shard_weight_bytes,
             shard_tokens,
+            joins,
+            retires,
+            peak_active,
         })
     }
 
-    fn dispatch(&mut self, batch: Batch, shard_rr: &mut usize) -> Result<()> {
+    /// Static-mode dispatch: round-robin formed batches over the shards
+    /// (seed behavior, kept as the ablation baseline).
+    fn dispatch_static(&mut self, batch: Batch, shard_rr: &mut usize) -> Result<()> {
         let shard = *shard_rr % self.senders.len();
         *shard_rr += 1;
         self.senders[shard]
-            .send(batch)
+            .send(ToWorker::Batch(batch.requests))
             .map_err(|_| anyhow!("worker {shard} is gone"))
+    }
+}
+
+/// One worker shard's thread: a step-driven scheduling loop. Continuous
+/// injections queue in a per-shard admission queue and join the in-flight
+/// batch at the next step boundary; static batches run to completion.
+/// Exits when the dispatcher hangs up and all local work is drained.
+fn worker_loop(
+    mut worker: Worker,
+    rx: Receiver<ToWorker>,
+    tx: Sender<(usize, Result<ServeEvent>)>,
+) -> WorkerStats {
+    let shard = worker.shard;
+    // per-shard admission queue (continuous mode): drained at step
+    // boundaries via `take_up_to`, capped by free slots — no deadline
+    let mut queue = Batcher::new(BatchPolicy {
+        max_batch: worker.capacity(),
+        max_wait: Duration::ZERO,
+    });
+    let mut open = true;
+    'serve: loop {
+        // drain the mailbox without blocking
+        while open {
+            match rx.try_recv() {
+                Ok(ToWorker::Inject(r)) => queue.push(r),
+                Ok(ToWorker::Batch(reqs)) => {
+                    if !run_static(&mut worker, reqs, &tx) {
+                        break 'serve;
+                    }
+                }
+                Err(TryRecvError::Empty) => break,
+                Err(TryRecvError::Disconnected) => open = false,
+            }
+        }
+        if queue.pending() == 0 && worker.active() == 0 {
+            if !open {
+                break;
+            }
+            // idle: park until the dispatcher sends work or hangs up
+            match rx.recv() {
+                Ok(ToWorker::Inject(r)) => queue.push(r),
+                Ok(ToWorker::Batch(reqs)) => {
+                    if !run_static(&mut worker, reqs, &tx) {
+                        break;
+                    }
+                }
+                Err(_) => break,
+            }
+            continue;
+        }
+        // step boundary: admit joiners into free slots, then one fused
+        // decode step across the in-flight batch
+        let free = worker.free_slots();
+        if free > 0 && queue.pending() > 0 {
+            let joiners = queue.take_up_to(free);
+            if !emit(worker.join(joiners), &tx, shard) {
+                break;
+            }
+        }
+        if worker.active() > 0 && !emit(worker.step(), &tx, shard) {
+            break;
+        }
+    }
+    worker.into_stats()
+}
+
+/// Run one static batch to completion, streaming its events.
+fn run_static(
+    worker: &mut Worker,
+    reqs: Vec<Request>,
+    tx: &Sender<(usize, Result<ServeEvent>)>,
+) -> bool {
+    let shard = worker.shard;
+    if !emit(worker.join(reqs), tx, shard) {
+        return false;
+    }
+    while worker.active() > 0 {
+        if !emit(worker.step(), tx, shard) {
+            return false;
+        }
+    }
+    true
+}
+
+/// Forward a step's events (or its error) to the dispatcher; false when
+/// the worker should stop (fatal error or dispatcher hung up).
+fn emit(
+    result: Result<Vec<ServeEvent>>,
+    tx: &Sender<(usize, Result<ServeEvent>)>,
+    shard: usize,
+) -> bool {
+    match result {
+        Ok(events) => {
+            for ev in events {
+                if tx.send((shard, Ok(ev))).is_err() {
+                    return false;
+                }
+            }
+            true
+        }
+        Err(e) => {
+            let _ = tx.send((shard, Err(e)));
+            false
+        }
     }
 }

@@ -1,10 +1,30 @@
-//! Worker shard: executes prefill/decode batches against its ModelHandle.
+//! Worker shard: a step-driven execution core over one model backend.
 //!
 //! One worker models one GPU of the paper's cluster. It owns a batched KV
-//! cache (fp32 or SimQuant codes depending on the variant), per-layer EMA
-//! scale trackers (Alg. 1), and the Eq. 12 breakdown instrumentation.
-//! Batches run to completion (static batching); the server overlaps
-//! batches across workers.
+//! cache (fp32 or SimQuant codes depending on the variant) with a slot
+//! free-list, per-layer EMA scale trackers (Alg. 1), and the Eq. 12
+//! breakdown instrumentation.
+//!
+//! The core is two step primitives the scheduler composes:
+//!
+//!   [`Worker::join`] — admit requests into free slots: one fused prefill
+//!   over the joining rows, KV pages ingested straight into the acquired
+//!   slots, first token + TTFT emitted per joiner.
+//!
+//!   [`Worker::step`] — one fused decode step across every in-flight
+//!   slot; finished slots retire *inside* the step, release their KV
+//!   pages back to the free list, and emit a `Done` response.
+//!
+//! Static batching is the degenerate composition (join everything, step
+//! until drained — [`Worker::process_batch`]); continuous batching
+//! interleaves `join` between `step`s at every boundary, which is what
+//! kills head-of-line blocking: a finished slot's capacity is reusable
+//! on the very next step instead of when the whole batch drains.
+//!
+//! Backends: [`Backend::Pjrt`] executes compiled AOT artifacts through
+//! the runtime engine; [`Backend::Sim`] is the deterministic simulated
+//! model (`runtime::SimModel`) the scheduler tests and the batching
+//! ablation run offline.
 
 use std::time::Instant;
 
@@ -13,88 +33,208 @@ use anyhow::{bail, Result};
 use crate::corpus::PAD;
 use crate::metrics::{Breakdown, Stage};
 use crate::quant::Variant;
-use crate::runtime::{i32_bytes, literal_from_raw, Literal, ModelHandle};
-use crate::tensor::Tensor;
+use crate::runtime::{i32_bytes, literal_from_raw, Literal, ModelCfg, ModelHandle, SimModel};
+use crate::tensor::{DType, Tensor};
 
 use super::batcher::Batch;
 use super::kv_cache::{KvCache, PrefillPage};
-use super::request::Response;
+use super::request::{Request, Response, ServeEvent};
 use super::scale_sync::ScaleSync;
+
+/// Model execution backend for one worker shard.
+pub enum Backend {
+    /// compiled AOT artifacts through PJRT (requires `--features xla`)
+    Pjrt(ModelHandle),
+    /// deterministic simulated graphs with a wall-clock cost model
+    Sim(SimModel),
+}
+
+impl Backend {
+    pub fn cfg(&self) -> &ModelCfg {
+        match self {
+            Backend::Pjrt(h) => &h.cfg,
+            Backend::Sim(m) => &m.cfg,
+        }
+    }
+
+    pub fn variant(&self) -> Variant {
+        match self {
+            Backend::Pjrt(h) => h.variant,
+            Backend::Sim(m) => m.variant,
+        }
+    }
+
+    /// Compiled graph batch size (slot count).
+    pub fn batch(&self) -> usize {
+        match self {
+            Backend::Pjrt(h) => h.batch,
+            Backend::Sim(m) => m.batch,
+        }
+    }
+
+    pub fn weight_storage_bytes(&self) -> usize {
+        match self {
+            Backend::Pjrt(h) => h.weight_storage_bytes(),
+            Backend::Sim(m) => m.weight_storage_bytes(),
+        }
+    }
+}
+
+/// One in-flight request occupying a batch slot.
+struct Slot {
+    req: Request,
+    prompt_len: usize,
+    generated: Vec<i32>,
+    ttft_s: f64,
+    first_token_at: Instant,
+}
+
+/// Counters a worker thread hands back at shutdown.
+#[derive(Debug)]
+pub struct WorkerStats {
+    pub breakdown: Breakdown,
+    pub steps: u64,
+    pub tokens_out: u64,
+    pub joins: u64,
+    pub retires: u64,
+    pub peak_active: usize,
+}
 
 pub struct Worker {
     pub shard: usize,
-    handle: ModelHandle,
+    backend: Backend,
+    kv: KvCache,
+    slots: Vec<Option<Slot>>,
     pub scales: ScaleSync,
     pub breakdown: Breakdown,
     /// decode steps executed (for per-step metrics)
     pub steps: u64,
     pub tokens_out: u64,
+    /// requests admitted into a slot
+    pub joins: u64,
+    /// requests retired from a slot
+    pub retires: u64,
+    /// max concurrently in-flight slots observed
+    pub peak_active: usize,
 }
 
 impl Worker {
-    pub fn new(shard: usize, handle: ModelHandle) -> Self {
-        let n_regions = handle.cfg.n_layers;
+    pub fn new(shard: usize, backend: Backend) -> Self {
+        let c = backend.cfg().clone();
+        let b = backend.batch();
+        let kv = if backend.variant() == Variant::SimQuant {
+            KvCache::new_simquant(c.n_layers, b, c.ctx, c.d_model)
+        } else {
+            KvCache::new_f32(c.n_layers, b, c.ctx, c.d_model)
+        };
+        let mut slots = Vec::with_capacity(b);
+        slots.resize_with(b, || None);
         Worker {
             shard,
-            handle,
-            scales: ScaleSync::new(n_regions, 0.9, 1e-6, 0),
+            backend,
+            kv,
+            slots,
+            scales: ScaleSync::new(c.n_layers, 0.9, 1e-6, 0),
             breakdown: Breakdown::new(),
             steps: 0,
             tokens_out: 0,
+            joins: 0,
+            retires: 0,
+            peak_active: 0,
         }
     }
 
     pub fn variant(&self) -> Variant {
-        self.handle.variant
+        self.backend.variant()
     }
 
-    fn fresh_kv(&self) -> KvCache {
-        let c = &self.handle.cfg;
-        if self.handle.variant == Variant::SimQuant {
-            KvCache::new_simquant(c.n_layers, self.handle.batch, c.ctx, c.d_model)
-        } else {
-            KvCache::new_f32(c.n_layers, self.handle.batch, c.ctx, c.d_model)
+    /// Compiled slot capacity.
+    pub fn capacity(&self) -> usize {
+        self.backend.batch()
+    }
+
+    /// Slots available for `join`.
+    pub fn free_slots(&self) -> usize {
+        self.kv.free_slots()
+    }
+
+    /// Requests currently in flight.
+    pub fn active(&self) -> usize {
+        self.capacity() - self.kv.free_slots()
+    }
+
+    pub fn into_stats(self) -> WorkerStats {
+        WorkerStats {
+            breakdown: self.breakdown,
+            steps: self.steps,
+            tokens_out: self.tokens_out,
+            joins: self.joins,
+            retires: self.retires,
+            peak_active: self.peak_active,
         }
     }
 
-    /// Run one batch to completion; returns a response per request.
-    pub fn process_batch(&mut self, batch: Batch) -> Result<Vec<Response>> {
-        let cfg = self.handle.cfg.clone();
-        let b = self.handle.batch;
+    /// Admit `reqs` into free slots at a step boundary: one fused prefill
+    /// over the joining rows, first token + TTFT per joiner. Requests
+    /// whose budget is a single token retire immediately.
+    pub fn join(&mut self, reqs: Vec<Request>) -> Result<Vec<ServeEvent>> {
+        if reqs.is_empty() {
+            return Ok(Vec::new());
+        }
+        let cfg = self.backend.cfg().clone();
+        let b = self.backend.batch();
         let (ctx, v, l, d) = (cfg.ctx, cfg.vocab, cfg.n_layers, cfg.d_model);
-        if batch.len() > b {
-            bail!("batch of {} exceeds compiled batch size {b}", batch.len());
+        if reqs.len() > self.kv.free_slots() {
+            bail!(
+                "batch of {} exceeds free capacity {} (compiled batch size {b})",
+                reqs.len(),
+                self.kv.free_slots()
+            );
         }
-        let n_active = batch.len();
-        let started = Instant::now();
 
-        // ---- prefill ------------------------------------------------------
+        // place each joiner in the lowest free slot (FIFO -> ascending)
         let mut tokens = vec![PAD; b * ctx];
         let mut prompt_lens = vec![0usize; b];
-        for (slot, req) in batch.requests.iter().enumerate() {
+        let mut joined: Vec<usize> = Vec::with_capacity(reqs.len());
+        for req in reqs {
+            let slot = self.kv.acquire_slot().expect("free capacity checked above");
             let plen = req.prompt.len().min(ctx - 1);
             prompt_lens[slot] = plen;
             tokens[slot * ctx..slot * ctx + plen].copy_from_slice(&req.prompt[..plen]);
+            self.slots[slot] = Some(Slot {
+                req,
+                prompt_len: plen,
+                generated: Vec::new(),
+                ttft_s: 0.0,
+                first_token_at: Instant::now(),
+            });
+            joined.push(slot);
         }
-        let tok_tensor = self.breakdown.span(Stage::Load, || {
-            Tensor::from_i32(vec![b, ctx], tokens)
-        });
-        let outs = {
-            let bd = &mut self.breakdown;
-            let handle = &self.handle;
-            bd.span(Stage::Gemm, || handle.prefill(&[tok_tensor]))?
+        self.joins += joined.len() as u64;
+        self.peak_active = self.peak_active.max(self.active());
+
+        // fused prefill over the joining rows
+        let outs = match &self.backend {
+            Backend::Pjrt(handle) => {
+                let bd = &mut self.breakdown;
+                let tok = bd.span(Stage::Load, || Tensor::from_i32(vec![b, ctx], tokens));
+                bd.span(Stage::Gemm, || handle.prefill(&[tok]))?
+            }
+            Backend::Sim(m) => {
+                let bd = &mut self.breakdown;
+                bd.span(Stage::Gemm, || m.prefill(&tokens, &prompt_lens))?
+            }
         };
-        // zero-copy views into the prefill outputs (no 4MB clones per batch)
         let logits = outs[0].f32_view()?; // [B, CTX, V]
         let k_cache = outs[1].f32_view()?; // [L, B, CTX, D]
         let v_cache = outs[2].f32_view()?;
 
-        let mut kv = self.fresh_kv();
-        self.breakdown.span(Stage::Quant, || {
-            // the (slot, layer) pages are disjoint: fan the encodes out
-            // across the worker pool instead of ingesting serially
-            let mut pages = Vec::with_capacity(n_active * l);
-            for slot in 0..n_active {
+        // ingest the joiners' KV pages (disjoint (slot, layer) fan-out)
+        {
+            let bd = &mut self.breakdown;
+            let kv = &mut self.kv;
+            let mut pages = Vec::with_capacity(joined.len() * l);
+            for &slot in &joined {
                 let plen = prompt_lens[slot];
                 for layer in 0..l {
                     let off = (layer * b + slot) * ctx * d;
@@ -107,103 +247,156 @@ impl Worker {
                     });
                 }
             }
-            kv.ingest_prefill_batch(&pages);
-        });
-
-        // first generated token per active slot + ttft
-        let mut generated: Vec<Vec<i32>> = vec![Vec::new(); b];
-        let mut done = vec![false; b];
-        let mut ttft = vec![0f64; b];
-        for slot in 0..n_active {
-            let plen = prompt_lens[slot];
-            let row = &logits[(slot * ctx + plen - 1) * v..(slot * ctx + plen) * v];
-            generated[slot].push(argmax(row));
-            ttft[slot] = batch.requests[slot].arrival.elapsed().as_secs_f64();
-            self.tokens_out += 1;
-            if batch.requests[slot].max_new_tokens <= 1 {
-                done[slot] = true;
-            }
-        }
-        for slot in n_active..b {
-            done[slot] = true;
+            bd.span(Stage::Quant, || kv.ingest_prefill_batch(&pages));
         }
 
-        // ---- decode loop ---------------------------------------------------
-        while !done.iter().all(|d| *d) {
-            let mut token = vec![PAD; b];
-            let mut pos = vec![0i32; b];
-            for slot in 0..n_active {
-                if !done[slot] {
-                    token[slot] = *generated[slot].last().unwrap();
-                    pos[slot] = kv.len(slot) as i32;
-                }
-            }
-            // build literals straight from the KV buffers (input order:
-            // token, pos, k_cache, v_cache, [params]) — no staging copies
-            let runtime_lits = self.breakdown.span(Stage::Load, || -> Result<Vec<Literal>> {
-                let mut lits = vec![
-                    literal_from_raw(crate::tensor::DType::I32, &[b], i32_bytes(&token))?,
-                    literal_from_raw(crate::tensor::DType::I32, &[b], i32_bytes(&pos))?,
-                ];
-                lits.extend(kv.input_literals()?);
-                Ok(lits)
-            })?;
-            let outs = {
-                let bd = &mut self.breakdown;
-                let handle = &self.handle;
-                bd.span(Stage::Gemm, || handle.decode_literals(&runtime_lits))?
+        // first token + TTFT per joiner, in admission order
+        let mut events = Vec::with_capacity(joined.len());
+        for &slot in &joined {
+            let done = {
+                let s = self.slots[slot].as_mut().expect("just joined");
+                let plen = s.prompt_len;
+                let row = &logits[(slot * ctx + plen - 1) * v..(slot * ctx + plen) * v];
+                let tok = argmax(row);
+                s.generated.push(tok);
+                s.ttft_s = s.req.arrival.elapsed().as_secs_f64();
+                s.first_token_at = Instant::now();
+                events.push(ServeEvent::Token { id: s.req.id, token: tok, first: true });
+                s.req.max_new_tokens <= 1
             };
-            self.steps += 1;
-            // zero-copy views into the decode-step outputs
-            let step_logits = outs[0].f32_view()?; // [B, V]
-            let k_new = outs[1].f32_view()?; // [L, B, D]
-            let v_new = outs[2].f32_view()?;
+            self.tokens_out += 1;
+            if done {
+                events.push(ServeEvent::Done(self.retire(slot)));
+            }
+        }
+        Ok(events)
+    }
 
-            self.breakdown.span(Stage::Quant, || {
-                for slot in 0..n_active {
-                    if done[slot] {
+    /// One fused decode step across every in-flight slot. Finished slots
+    /// retire inside the step and free their KV pages for the next join.
+    pub fn step(&mut self) -> Result<Vec<ServeEvent>> {
+        let cfg = self.backend.cfg().clone();
+        let b = self.backend.batch();
+        let (ctx, v, l, d) = (cfg.ctx, cfg.vocab, cfg.n_layers, cfg.d_model);
+
+        let mut active = vec![false; b];
+        let mut token = vec![PAD; b];
+        let mut pos = vec![0i32; b];
+        let mut any = false;
+        for slot in 0..b {
+            if let Some(s) = &self.slots[slot] {
+                active[slot] = true;
+                token[slot] = *s.generated.last().expect("joined slots hold >= 1 token");
+                pos[slot] = self.kv.len(slot) as i32;
+                any = true;
+            }
+        }
+        if !any {
+            return Ok(Vec::new());
+        }
+
+        let outs = match &self.backend {
+            Backend::Pjrt(handle) => {
+                // build literals straight from the KV buffers (input
+                // order: token, pos, k_cache, v_cache, [params])
+                let bd = &mut self.breakdown;
+                let kv = &self.kv;
+                let lits = bd.span(Stage::Load, || -> Result<Vec<Literal>> {
+                    let mut lits = vec![
+                        literal_from_raw(DType::I32, &[b], i32_bytes(&token))?,
+                        literal_from_raw(DType::I32, &[b], i32_bytes(&pos))?,
+                    ];
+                    lits.extend(kv.input_literals()?);
+                    Ok(lits)
+                })?;
+                bd.span(Stage::Gemm, || handle.decode_literals(&lits))?
+            }
+            Backend::Sim(m) => {
+                let bd = &mut self.breakdown;
+                bd.span(Stage::Gemm, || m.decode(&token, &pos, &active))?
+            }
+        };
+        self.steps += 1;
+        let step_logits = outs[0].f32_view()?; // [B, V]
+        let k_new = outs[1].f32_view()?; // [L, B, D]
+        let v_new = outs[2].f32_view()?;
+
+        // append the new KV rows + track activation ranges (Alg. 1)
+        {
+            let bd = &mut self.breakdown;
+            let kv = &mut self.kv;
+            let scales = &mut self.scales;
+            let slots = &self.slots;
+            bd.span(Stage::Quant, || {
+                for (slot, state) in slots.iter().enumerate() {
+                    if state.is_none() {
                         continue;
                     }
                     for layer in 0..l {
                         let off = (layer * b + slot) * d;
                         kv.append_row(slot, layer, &k_new[off..off + d], &v_new[off..off + d]);
-                        // Alg. 1: track activation ranges per layer region
-                        self.scales.observe(layer, &k_new[off..off + d]);
+                        scales.observe(layer, &k_new[off..off + d]);
                     }
                     kv.bump(slot);
                 }
             });
-
-            for slot in 0..n_active {
-                if done[slot] {
-                    continue;
-                }
-                let row = &step_logits[slot * v..(slot + 1) * v];
-                generated[slot].push(argmax(row));
-                self.tokens_out += 1;
-                let req = &batch.requests[slot];
-                if generated[slot].len() >= req.max_new_tokens
-                    || kv.len(slot) + 1 >= cfg.ctx
-                {
-                    done[slot] = true;
-                }
-            }
         }
 
-        let _ = started;
-        Ok((0..n_active)
-            .map(|slot| {
-                let req = &batch.requests[slot];
-                Response {
-                    id: req.id,
-                    tokens: generated[slot].clone(),
-                    prompt_len: prompt_lens[slot],
-                    latency_s: req.arrival.elapsed().as_secs_f64(),
-                    ttft_s: ttft[slot],
-                    shard: self.shard,
+        // emit this step's tokens; retire finished slots immediately
+        let mut events = Vec::new();
+        for slot in 0..b {
+            let done = {
+                let Some(s) = self.slots[slot].as_mut() else {
+                    continue;
+                };
+                let row = &step_logits[slot * v..(slot + 1) * v];
+                let tok = argmax(row);
+                s.generated.push(tok);
+                events.push(ServeEvent::Token { id: s.req.id, token: tok, first: false });
+                s.generated.len() >= s.req.max_new_tokens || self.kv.len(slot) + 1 >= ctx
+            };
+            self.tokens_out += 1;
+            if done {
+                events.push(ServeEvent::Done(self.retire(slot)));
+            }
+        }
+        Ok(events)
+    }
+
+    /// Run one batch to completion (static scheduling): join everything,
+    /// step until drained. Returns a response per request in completion
+    /// order.
+    pub fn process_batch(&mut self, batch: Batch) -> Result<Vec<Response>> {
+        let mut responses = Vec::with_capacity(batch.len());
+        let mut events = self.join(batch.requests)?;
+        loop {
+            for e in events {
+                if let ServeEvent::Done(r) = e {
+                    responses.push(r);
                 }
-            })
-            .collect())
+            }
+            if self.active() == 0 {
+                break;
+            }
+            events = self.step()?;
+        }
+        Ok(responses)
+    }
+
+    /// Free a finished slot and build its response.
+    fn retire(&mut self, slot: usize) -> Response {
+        let s = self.slots[slot].take().expect("retire of empty slot");
+        self.kv.release_slot(slot);
+        self.retires += 1;
+        Response {
+            id: s.req.id,
+            tokens: s.generated,
+            prompt_len: s.prompt_len,
+            latency_s: s.req.arrival.elapsed().as_secs_f64(),
+            ttft_s: s.ttft_s,
+            first_token_at: s.first_token_at,
+            shard: self.shard,
+        }
     }
 }
 
@@ -219,11 +412,118 @@ fn argmax(row: &[f32]) -> i32 {
 
 #[cfg(test)]
 mod tests {
-    use super::argmax;
+    use std::time::Instant;
+
+    use super::*;
+    use crate::runtime::SimCost;
+
+    fn sim_worker(variant: Variant, batch: usize) -> Worker {
+        Worker::new(0, Backend::Sim(SimModel::tiny(variant, batch, SimCost::fast())))
+    }
+
+    fn req(id: u64, prompt_len: usize, max_new: usize) -> Request {
+        Request::new(id, vec![2 + (id % 7) as i32; prompt_len], max_new)
+    }
 
     #[test]
     fn argmax_picks_first_max() {
         assert_eq!(argmax(&[0.1, 0.9, 0.9, 0.2]), 1);
         assert_eq!(argmax(&[-5.0, -1.0]), 1);
+    }
+
+    #[test]
+    fn join_then_steps_drain_batch() {
+        let mut w = sim_worker(Variant::Fp, 4);
+        let batch = Batch {
+            requests: vec![req(1, 4, 3), req(2, 6, 5)],
+            formed_at: Instant::now(),
+        };
+        let rs = w.process_batch(batch).unwrap();
+        assert_eq!(rs.len(), 2);
+        let by_id = |id: u64| rs.iter().find(|r| r.id == id).unwrap();
+        assert_eq!(by_id(1).tokens.len(), 3);
+        assert_eq!(by_id(2).tokens.len(), 5);
+        assert_eq!(w.active(), 0);
+        assert_eq!(w.free_slots(), 4);
+        assert_eq!(w.joins, 2);
+        assert_eq!(w.retires, 2);
+        // request 1 finished first (fewer tokens) -> completion order
+        assert_eq!(rs[0].id, 1);
+    }
+
+    #[test]
+    fn midflight_join_retires_independently() {
+        let mut w = sim_worker(Variant::SimQuant, 4);
+        let evs = w.join(vec![req(1, 4, 6)]).unwrap();
+        assert_eq!(evs.len(), 1, "first token only");
+        let _ = w.step().unwrap();
+        // join a second request two steps into the first one's decode
+        let _ = w.step().unwrap();
+        let evs = w.join(vec![req(2, 4, 2)]).unwrap();
+        assert_eq!(evs.len(), 1);
+        assert_eq!(w.active(), 2);
+        // one more step finishes request 2 (budget 2) but not request 1
+        let evs = w.step().unwrap();
+        let done: Vec<u64> = evs
+            .iter()
+            .filter_map(|e| match e {
+                ServeEvent::Done(r) => Some(r.id),
+                _ => None,
+            })
+            .collect();
+        assert_eq!(done, vec![2]);
+        assert_eq!(w.active(), 1);
+        assert_eq!(w.free_slots(), 3, "slot freed immediately at retirement");
+        // drain request 1
+        while w.active() > 0 {
+            let _ = w.step().unwrap();
+        }
+        assert_eq!(w.retires, 2);
+    }
+
+    #[test]
+    fn single_token_budget_retires_at_join() {
+        let mut w = sim_worker(Variant::Fp, 2);
+        let evs = w.join(vec![req(1, 4, 1)]).unwrap();
+        assert_eq!(evs.len(), 2, "token + done");
+        assert!(matches!(&evs[1], ServeEvent::Done(r) if r.tokens.len() == 1));
+        assert_eq!(w.active(), 0);
+        assert_eq!(w.steps, 0, "no decode steps for a 1-token budget");
+    }
+
+    #[test]
+    fn join_rejects_overflow() {
+        let mut w = sim_worker(Variant::Fp, 2);
+        let err = w
+            .join(vec![req(1, 4, 2), req(2, 4, 2), req(3, 4, 2)])
+            .unwrap_err();
+        assert!(err.to_string().contains("exceeds free capacity"), "{err}");
+    }
+
+    #[test]
+    fn trajectories_are_slot_independent() {
+        // the same request must generate the same tokens whether it runs
+        // alone or shares the batch — the scheduler-correctness anchor
+        let solo = {
+            let mut w = sim_worker(Variant::Fp, 4);
+            let rs = w
+                .process_batch(Batch {
+                    requests: vec![req(7, 5, 6)],
+                    formed_at: Instant::now(),
+                })
+                .unwrap();
+            rs[0].tokens.clone()
+        };
+        let shared = {
+            let mut w = sim_worker(Variant::Fp, 4);
+            let rs = w
+                .process_batch(Batch {
+                    requests: vec![req(9, 3, 4), req(7, 5, 6), req(11, 2, 2)],
+                    formed_at: Instant::now(),
+                })
+                .unwrap();
+            rs.iter().find(|r| r.id == 7).unwrap().tokens.clone()
+        };
+        assert_eq!(solo, shared);
     }
 }

@@ -64,6 +64,17 @@ pub fn requests(spec: &WorkloadSpec) -> Vec<Request> {
     generate(spec).into_iter().map(|a| a.request).collect()
 }
 
+/// Closed-loop firehose: the same request mix with every arrival at t=0,
+/// so the server is saturated from the first step (capacity measurement,
+/// no arrival-process queueing).
+pub fn firehose(spec: &WorkloadSpec) -> Vec<Arrival> {
+    let mut arr = generate(spec);
+    for a in &mut arr {
+        a.at_s = 0.0;
+    }
+    arr
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -97,6 +108,18 @@ mod tests {
             assert!(
                 (spec.max_new_min..=spec.max_new_max).contains(&a.request.max_new_tokens)
             );
+        }
+    }
+
+    #[test]
+    fn firehose_same_mix_zero_offsets() {
+        let spec = WorkloadSpec { n_requests: 20, ..Default::default() };
+        let open = generate(&spec);
+        let fire = firehose(&spec);
+        assert!(fire.iter().all(|a| a.at_s == 0.0));
+        for (o, f) in open.iter().zip(&fire) {
+            assert_eq!(o.request.prompt, f.request.prompt);
+            assert_eq!(o.request.max_new_tokens, f.request.max_new_tokens);
         }
     }
 

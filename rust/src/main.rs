@@ -16,8 +16,8 @@ use anyhow::{bail, Result};
 
 use llmeasyquant::collective::{Collective, Topology, Transport};
 use llmeasyquant::coordinator::{
-    search_bitwidths, size_reduction, BatchPolicy, LayerInfo, Request, ScaleSync, SearchPolicy,
-    Server, ServerConfig,
+    search_bitwidths, size_reduction, workload, BatchPolicy, LayerInfo, ScaleSync,
+    SchedulerMode, SearchPolicy, Server, ServerConfig,
 };
 use llmeasyquant::corpus;
 use llmeasyquant::eval::{perplexity, weight_errors};
@@ -55,7 +55,8 @@ USAGE: llmeasyquant <command> [--options]
 COMMANDS:
   info             list artifact registry contents
   serve            --model gpt2-tiny --variant smooth --shards 2 --requests 16
-                   --max-new 16 [--batch 8]
+                   --max-new 16 [--batch 8] [--mode static|continuous]
+                   [--rate REQS_PER_S]   (rate > 0: open-loop Poisson replay)
   eval-ppl         --model gpt2-tiny --variant all [--windows 8]
   breakdown        --ctx 32768 --batch 448 [--world 8] [--transport nccl]
   bitwidth-search  --model gpt2-tiny [--lambda 1e-4] [--policy greedy|grid|entropy]
@@ -103,33 +104,55 @@ fn serve(args: &Args) -> Result<()> {
     let n_requests = args.get_usize("requests", 16);
     let max_new = args.get_usize("max-new", 16);
     let batch = args.get_usize("batch", 8);
+    let mode = match args.get_or("mode", "continuous").as_str() {
+        "static" => SchedulerMode::Static,
+        "continuous" => SchedulerMode::Continuous,
+        m => bail!("unknown scheduler mode {m} (static|continuous)"),
+    };
+    // requests/second for open-loop Poisson replay; 0 = closed-loop
+    let rate = args.get_f64("rate", 0.0);
 
     let reg = registry(args)?;
     let mut cfg = ServerConfig::new(&model, variant);
     cfg.shards = shards;
     cfg.batch = batch;
     cfg.policy = BatchPolicy::default();
+    cfg.mode = mode;
     println!("compiling executables for {model}/{} ...", variant.name());
     let server = Server::start(&reg, cfg)?;
 
     // synthetic workload: prompts drawn from the corpus generator
-    let requests: Vec<Request> = (0..n_requests)
-        .map(|i| {
-            let prompt = corpus::generate_tokens(24, 9000 + i as u64);
-            Request::new(i as u64 + 1, prompt, max_new)
-        })
-        .collect();
-    let report = server.run_workload(requests)?;
+    let spec = workload::WorkloadSpec {
+        n_requests,
+        rate_per_s: if rate > 0.0 { rate } else { 100.0 },
+        prompt_min: 24,
+        prompt_max: 24,
+        max_new_min: max_new,
+        max_new_max: max_new,
+        seed: 9000,
+    };
+    let report = if rate > 0.0 {
+        server.run_open_loop(workload::generate(&spec))?
+    } else {
+        server.run_open_loop(workload::firehose(&spec))?
+    };
 
     let lat = report.latency_summary();
     println!(
-        "served {} requests | {:.1} tok/s | {} decode steps | latency mean {:.1} ms ci95 [{:.1}, {:.1}]",
+        "served {} requests ({} scheduling) | {:.1} tok/s | {} decode steps",
         report.responses.len(),
+        mode.name(),
         report.tokens_per_s(),
         report.decode_steps,
+    );
+    println!(
+        "latency mean {:.1} ms ci95 [{:.1}, {:.1}] p99 {:.1} ms | ttft mean {:.1} ms p99 {:.1} ms",
         lat.mean * 1e3,
         lat.ci95_lo * 1e3,
         lat.ci95_hi * 1e3,
+        report.latency_percentile(0.99) * 1e3,
+        report.ttft_summary().mean * 1e3,
+        report.ttft_percentile(0.99) * 1e3,
     );
     println!(
         "weights: {:.2} MB under {} | shard tokens: {:?}",

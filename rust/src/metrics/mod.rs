@@ -9,5 +9,5 @@ mod throughput;
 
 pub use breakdown::{Breakdown, Stage};
 pub use histogram::Histogram;
-pub use stats::{mean_ci95, paired_t_test, Summary, TTest};
+pub use stats::{mean_ci95, paired_t_test, percentile, Summary, TTest};
 pub use throughput::ThroughputCounter;

@@ -32,6 +32,19 @@ pub fn mean_ci95(xs: &[f64]) -> Summary {
     Summary { n, mean, std, ci95_lo: mean - half, ci95_hi: mean + half }
 }
 
+/// Sample percentile (nearest-rank on the sorted copy, q in [0, 1]).
+/// The single implementation behind every serving-latency p50/p99 the
+/// reports and benches quote.
+pub fn percentile(xs: &[f64], q: f64) -> f64 {
+    if xs.is_empty() {
+        return 0.0;
+    }
+    let mut v = xs.to_vec();
+    v.sort_by(|a, b| a.partial_cmp(b).unwrap());
+    let idx = (q.clamp(0.0, 1.0) * (v.len() - 1) as f64).round() as usize;
+    v[idx.min(v.len() - 1)]
+}
+
 /// Paired t-test result.
 #[derive(Debug, Clone, Copy)]
 pub struct TTest {
@@ -232,6 +245,18 @@ mod tests {
         let b: Vec<f64> = (0..40).map(|_| rng.next_normal()).collect();
         let t = paired_t_test(&a, &b);
         assert!(t.p_two_sided > 0.01, "p={}", t.p_two_sided);
+    }
+
+    #[test]
+    fn percentile_nearest_rank() {
+        let xs: Vec<f64> = (1..=100).map(|i| i as f64).collect();
+        assert_eq!(percentile(&xs, 0.0), 1.0);
+        assert_eq!(percentile(&xs, 1.0), 100.0);
+        assert_eq!(percentile(&xs, 0.5), 51.0);
+        assert!(percentile(&xs, 0.99) >= 98.0);
+        assert_eq!(percentile(&[], 0.5), 0.0);
+        // unsorted input is handled
+        assert_eq!(percentile(&[3.0, 1.0, 2.0], 1.0), 3.0);
     }
 
     #[test]

@@ -53,12 +53,7 @@ impl ThroughputCounter {
     }
 
     pub fn latency_percentile_s(&self, q: f64) -> f64 {
-        if self.latencies_s.is_empty() {
-            return 0.0;
-        }
-        let mut v = self.latencies_s.clone();
-        v.sort_by(|a, b| a.partial_cmp(b).unwrap());
-        v[((q * (v.len() - 1) as f64).round() as usize).min(v.len() - 1)]
+        super::percentile(&self.latencies_s, q)
     }
 
     pub fn mean_latency_s(&self) -> f64 {

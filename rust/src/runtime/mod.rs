@@ -23,12 +23,14 @@ mod engine;
 mod engine;
 mod manifest;
 mod registry;
+mod sim;
 
 pub use engine::{
     literal_from_raw, literal_to_tensor, tensor_to_literal, Engine, Executable, Literal,
 };
 pub use manifest::{GraphKey, GraphSpec, Manifest, ModelCfg};
 pub use registry::{ModelHandle, Registry};
+pub use sim::{SimCost, SimModel};
 
 /// View a f32 slice as little-endian bytes (host is LE on all supported
 /// targets; PJRT consumes the same layout).

@@ -1,0 +1,301 @@
+//! Simulated execution backend for the serving engine.
+//!
+//! PJRT needs compiled artifacts and the `xla` feature, so the scheduler
+//! layer (continuous batching, open-loop replay, the batching ablation)
+//! would otherwise be untestable in the default offline build. `SimModel`
+//! stands in for a compiled (prefill, decode) graph pair with the same
+//! tensor contract the workers consume:
+//!
+//!   prefill: tokens [B, CTX]            -> [logits [B, CTX, V],
+//!                                           k [L, B, CTX, D],
+//!                                           v [L, B, CTX, D]]
+//!   decode:  token [B], pos [B], caches -> [logits [B, V],
+//!                                           k_new [L, B, D],
+//!                                           v_new [L, B, D]]
+//!
+//! Outputs are a pure deterministic hash of (token, position), so
+//! generation is reproducible across runs, thread counts, and — crucially
+//! for the scheduler tests — across *scheduling orders*: static and
+//! continuous batching must produce token-identical responses, which
+//! pins "the scheduler never corrupts a request's (token, pos) stream".
+//!
+//! Each call burns a calibrated slice of wall-clock CPU ([`SimCost`],
+//! spin-waited for microsecond fidelity) so queueing, head-of-line
+//! blocking, TTFT, and tail latency are real measured quantities, not
+//! model outputs. The defaults approximate a small model on one GPU:
+//! a fused decode step costs a fixed launch overhead plus a per-active-
+//! slot increment, and prefill costs scale with ingested prompt tokens.
+
+use std::time::{Duration, Instant};
+
+use anyhow::{bail, Result};
+
+use crate::quant::Variant;
+use crate::tensor::Tensor;
+
+use super::manifest::ModelCfg;
+
+/// Wall-clock cost knobs (microseconds) for one simulated device.
+#[derive(Debug, Clone, Copy)]
+pub struct SimCost {
+    /// prefill cost per ingested prompt token
+    pub prefill_us_per_token: f64,
+    /// fixed per-decode-step launch cost (paid once per fused step)
+    pub decode_step_us: f64,
+    /// incremental decode cost per active slot in the step
+    pub decode_us_per_slot: f64,
+}
+
+impl Default for SimCost {
+    fn default() -> Self {
+        SimCost {
+            prefill_us_per_token: 2.0,
+            decode_step_us: 250.0,
+            decode_us_per_slot: 25.0,
+        }
+    }
+}
+
+impl SimCost {
+    /// Near-free cost model for fast scheduler unit tests.
+    pub fn fast() -> Self {
+        SimCost {
+            prefill_us_per_token: 0.2,
+            decode_step_us: 20.0,
+            decode_us_per_slot: 2.0,
+        }
+    }
+}
+
+/// A simulated (prefill, decode) graph pair for one worker shard.
+#[derive(Debug, Clone)]
+pub struct SimModel {
+    pub cfg: ModelCfg,
+    pub variant: Variant,
+    pub batch: usize,
+    pub cost: SimCost,
+    seed: u64,
+}
+
+impl SimModel {
+    pub fn new(cfg: ModelCfg, variant: Variant, batch: usize, cost: SimCost) -> Self {
+        SimModel { cfg, variant, batch, cost, seed: 0xC0FF_EE00 }
+    }
+
+    /// A gpt2-tiny-shaped config (vocab matches `corpus::VOCAB_SIZE`).
+    pub fn tiny(variant: Variant, batch: usize, cost: SimCost) -> Self {
+        let cfg = ModelCfg {
+            name: "sim-tiny".to_string(),
+            d_model: 16,
+            n_layers: 2,
+            n_heads: 2,
+            ctx: 128,
+            vocab: 32,
+            zq_group: 8,
+            n_params: 16 * 16 * 12,
+        };
+        Self::new(cfg, variant, batch, cost)
+    }
+
+    /// Simulated weight footprint: 4 bytes/param for the fp graphs, 1
+    /// byte/param (8-bit codes) for every quantized variant.
+    pub fn weight_storage_bytes(&self) -> usize {
+        match self.variant {
+            Variant::Fp => self.cfg.n_params * 4,
+            _ => self.cfg.n_params,
+        }
+    }
+
+    /// One logit row for (token, pos); `argmax` over it is the generated
+    /// token, so the trajectory is a pure function of the prompt.
+    fn fill_logits(&self, token: i32, pos: usize, out: &mut [f32]) {
+        let h = mix(self.seed ^ ((token as u64) << 1) ^ ((pos as u64) << 24));
+        for (j, o) in out.iter_mut().enumerate() {
+            *o = unit(mix(h ^ ((j as u64) << 40)));
+        }
+    }
+
+    /// One KV row for (layer, token, pos); bounded in [-1, 1) so the
+    /// SimQuant page ranges stay sane and re-encodes stay rare.
+    fn fill_kv(&self, layer: usize, token: i32, pos: usize, is_k: bool, out: &mut [f32]) {
+        let tag: u64 = if is_k { 0x5eed } else { 0xfeed };
+        let h = mix(
+            self.seed
+                ^ tag
+                ^ ((layer as u64) << 2)
+                ^ ((token as u64) << 12)
+                ^ ((pos as u64) << 32),
+        );
+        for (c, o) in out.iter_mut().enumerate() {
+            *o = unit(mix(h ^ ((c as u64) << 44)));
+        }
+    }
+
+    /// Run the simulated prefill graph over a `[B, CTX]` token matrix.
+    /// Rows with `prompt_lens[slot] == 0` are padding (not charged).
+    pub fn prefill(&self, tokens: &[i32], prompt_lens: &[usize]) -> Result<Vec<Tensor>> {
+        let (b, ctx, v) = (self.batch, self.cfg.ctx, self.cfg.vocab);
+        let (l, d) = (self.cfg.n_layers, self.cfg.d_model);
+        if tokens.len() != b * ctx || prompt_lens.len() != b {
+            bail!("sim prefill: tokens {} != {}x{}", tokens.len(), b, ctx);
+        }
+        let mut logits = vec![0f32; b * ctx * v];
+        let mut k = vec![0f32; l * b * ctx * d];
+        let mut vv = vec![0f32; l * b * ctx * d];
+        let mut total_tokens = 0usize;
+        for (slot, &plen) in prompt_lens.iter().enumerate() {
+            total_tokens += plen;
+            for t in 0..plen.min(ctx) {
+                let tok = tokens[slot * ctx + t];
+                let lo = (slot * ctx + t) * v;
+                self.fill_logits(tok, t, &mut logits[lo..lo + v]);
+                for layer in 0..l {
+                    let off = ((layer * b + slot) * ctx + t) * d;
+                    self.fill_kv(layer, tok, t, true, &mut k[off..off + d]);
+                    self.fill_kv(layer, tok, t, false, &mut vv[off..off + d]);
+                }
+            }
+        }
+        spin_us(self.cost.prefill_us_per_token * total_tokens as f64);
+        Ok(vec![
+            Tensor::from_f32(vec![b, ctx, v], logits),
+            Tensor::from_f32(vec![l, b, ctx, d], k),
+            Tensor::from_f32(vec![l, b, ctx, d], vv),
+        ])
+    }
+
+    /// Run one simulated fused decode step. `active[slot]` marks the
+    /// slots whose (token, pos) inputs are live; inactive rows are zero.
+    pub fn decode(&self, token: &[i32], pos: &[i32], active: &[bool]) -> Result<Vec<Tensor>> {
+        let (b, v) = (self.batch, self.cfg.vocab);
+        let (l, d) = (self.cfg.n_layers, self.cfg.d_model);
+        if token.len() != b || pos.len() != b || active.len() != b {
+            bail!("sim decode: expected {} slots, got {}", b, token.len());
+        }
+        let mut logits = vec![0f32; b * v];
+        let mut k = vec![0f32; l * b * d];
+        let mut vv = vec![0f32; l * b * d];
+        let mut n_active = 0usize;
+        for slot in 0..b {
+            if !active[slot] {
+                continue;
+            }
+            n_active += 1;
+            let p = pos[slot] as usize;
+            self.fill_logits(token[slot], p, &mut logits[slot * v..(slot + 1) * v]);
+            for layer in 0..l {
+                let off = (layer * b + slot) * d;
+                self.fill_kv(layer, token[slot], p, true, &mut k[off..off + d]);
+                self.fill_kv(layer, token[slot], p, false, &mut vv[off..off + d]);
+            }
+        }
+        spin_us(self.cost.decode_step_us + self.cost.decode_us_per_slot * n_active as f64);
+        Ok(vec![
+            Tensor::from_f32(vec![b, v], logits),
+            Tensor::from_f32(vec![l, b, d], k),
+            Tensor::from_f32(vec![l, b, d], vv),
+        ])
+    }
+}
+
+/// splitmix64 finalizer — a cheap, well-mixed stateless hash.
+fn mix(mut z: u64) -> u64 {
+    z = z.wrapping_add(0x9E37_79B9_7F4A_7C15);
+    z = (z ^ (z >> 30)).wrapping_mul(0xBF58_476D_1CE4_E5B9);
+    z = (z ^ (z >> 27)).wrapping_mul(0x94D0_49BB_1331_11EB);
+    z ^ (z >> 31)
+}
+
+/// Map a hash to f32 in [-1, 1).
+fn unit(h: u64) -> f32 {
+    ((h >> 11) as f64 / (1u64 << 53) as f64 * 2.0 - 1.0) as f32
+}
+
+/// Burn `us` microseconds of wall clock (spin, not sleep: OS sleep
+/// granularity is far too coarse for per-step costs).
+fn spin_us(us: f64) {
+    if us <= 0.0 {
+        return;
+    }
+    let dur = Duration::from_nanos((us * 1e3) as u64);
+    let t0 = Instant::now();
+    while t0.elapsed() < dur {
+        std::hint::spin_loop();
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn sim() -> SimModel {
+        SimModel::tiny(Variant::Fp, 4, SimCost::fast())
+    }
+
+    #[test]
+    fn prefill_shapes_and_determinism() {
+        let m = sim();
+        let (b, ctx) = (m.batch, m.cfg.ctx);
+        let mut tokens = vec![0i32; b * ctx];
+        tokens[..3].copy_from_slice(&[1, 5, 9]);
+        let mut lens = vec![0usize; b];
+        lens[0] = 3;
+        let a = m.prefill(&tokens, &lens).unwrap();
+        let c = m.prefill(&tokens, &lens).unwrap();
+        assert_eq!(a[0].shape, vec![b, ctx, m.cfg.vocab]);
+        assert_eq!(a[1].shape, vec![m.cfg.n_layers, b, ctx, m.cfg.d_model]);
+        assert_eq!(a[0].f32_view().unwrap(), c[0].f32_view().unwrap());
+        assert_eq!(a[1].f32_view().unwrap(), c[1].f32_view().unwrap());
+    }
+
+    #[test]
+    fn decode_depends_only_on_token_and_pos() {
+        let m = sim();
+        // slot 0 in one call must equal slot 2 in another for the same
+        // (token, pos) — the property that makes scheduling orders
+        // token-identical
+        let a = m
+            .decode(&[7, 0, 0, 0], &[4, 0, 0, 0], &[true, false, false, false])
+            .unwrap();
+        let c = m
+            .decode(&[0, 0, 7, 0], &[0, 0, 4, 0], &[false, false, true, false])
+            .unwrap();
+        let v = m.cfg.vocab;
+        let (av, cv) = (a[0].f32_view().unwrap(), c[0].f32_view().unwrap());
+        assert_eq!(&av[..v], &cv[2 * v..3 * v]);
+    }
+
+    #[test]
+    fn inactive_slots_stay_zero() {
+        let m = sim();
+        let out = m
+            .decode(&[3, 0, 0, 0], &[1, 0, 0, 0], &[true, false, false, false])
+            .unwrap();
+        let v = m.cfg.vocab;
+        assert!(out[0].f32_view().unwrap()[v..].iter().all(|x| *x == 0.0));
+    }
+
+    #[test]
+    fn kv_rows_bounded() {
+        let m = sim();
+        let out = m
+            .decode(&[3, 0, 0, 0], &[1, 0, 0, 0], &[true, false, false, false])
+            .unwrap();
+        assert!(out[1].f32_view().unwrap().iter().all(|x| x.abs() <= 1.0));
+    }
+
+    #[test]
+    fn weight_bytes_track_variant() {
+        let fp = SimModel::tiny(Variant::Fp, 4, SimCost::fast());
+        let q = SimModel::tiny(Variant::Int8, 4, SimCost::fast());
+        assert_eq!(fp.weight_storage_bytes(), 4 * q.weight_storage_bytes());
+    }
+
+    #[test]
+    fn spin_is_roughly_calibrated() {
+        let t0 = Instant::now();
+        spin_us(200.0);
+        let el = t0.elapsed().as_secs_f64();
+        assert!(el >= 190e-6, "spun only {el}s");
+    }
+}

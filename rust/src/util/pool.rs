@@ -35,6 +35,7 @@ use std::cell::Cell;
 use std::collections::VecDeque;
 use std::ops::Range;
 use std::panic::{catch_unwind, resume_unwind, AssertUnwindSafe};
+use std::sync::atomic::{AtomicUsize, Ordering};
 use std::sync::mpsc::{channel, Sender};
 use std::sync::{Condvar, Mutex, OnceLock};
 
@@ -53,7 +54,8 @@ struct Job {
 struct Pool {
     queue: Mutex<VecDeque<Job>>,
     available: Condvar,
-    workers: usize,
+    /// live worker threads; grows via [`reserve`], never shrinks
+    workers: AtomicUsize,
 }
 
 thread_local! {
@@ -69,7 +71,7 @@ fn pool() -> &'static Pool {
         let p: &'static Pool = Box::leak(Box::new(Pool {
             queue: Mutex::new(VecDeque::new()),
             available: Condvar::new(),
-            workers,
+            workers: AtomicUsize::new(workers),
         }));
         for i in 0..workers {
             std::thread::Builder::new()
@@ -79,6 +81,40 @@ fn pool() -> &'static Pool {
         }
         p
     })
+}
+
+/// Hard cap on pool growth: beyond this, extra parked threads only cost
+/// memory — concurrent callers help-drain anyway.
+const MAX_POOL_WORKERS: usize = 64;
+
+/// Grow the pool to at least `min_workers` threads (capped, never
+/// shrinks). The server sizes the pool from `shards x batch` at startup
+/// so the per-shard kernel fan-outs (prefill page encodes, row-parallel
+/// quantize) don't convoy behind one another at high shard counts.
+/// An explicit `LLEQ_THREADS` override stays authoritative: reserve
+/// never grows past the pool size that override implies, so
+/// `LLEQ_THREADS=1` still means strictly serial kernels on every path.
+pub fn reserve(min_workers: usize) {
+    static GROW: Mutex<()> = Mutex::new(());
+    let p = pool();
+    let cap = if std::env::var("LLEQ_THREADS").is_ok() {
+        max_threads().saturating_sub(1)
+    } else {
+        MAX_POOL_WORKERS
+    };
+    let want = min_workers.min(cap);
+    let _g = GROW.lock().unwrap_or_else(|e| e.into_inner());
+    let have = p.workers.load(Ordering::Relaxed);
+    if want <= have {
+        return;
+    }
+    for i in have..want {
+        std::thread::Builder::new()
+            .name(format!("lleq-pool-{i}"))
+            .spawn(move || worker_loop(p))
+            .expect("spawn pool worker");
+    }
+    p.workers.store(want, Ordering::Relaxed);
 }
 
 fn worker_loop(p: &'static Pool) {
@@ -123,7 +159,8 @@ pub fn run(tasks: Vec<Task<'_>>) {
     }
     let p = pool();
     let nested = IN_POOL_WORKER.with(|f| f.get());
-    if tasks.len() == 1 || nested || p.workers == 0 {
+    let workers = p.workers.load(Ordering::Relaxed);
+    if tasks.len() == 1 || nested || workers == 0 {
         for t in tasks {
             t();
         }
@@ -144,7 +181,7 @@ pub fn run(tasks: Vec<Task<'_>>) {
         }
     }
     // wake only as many workers as there are jobs (no thundering herd)
-    for _ in 0..total.min(p.workers) {
+    for _ in 0..total.min(workers) {
         p.available.notify_one();
     }
     // help drain: panics are caught and routed to the owning caller's
@@ -366,6 +403,25 @@ mod tests {
             .or_else(|| err.downcast_ref::<&str>().map(|s| s.to_string()))
             .unwrap_or_default();
         assert!(msg.contains("boom-2"), "payload lost: {msg:?}");
+    }
+
+    #[test]
+    fn reserve_grows_and_still_runs() {
+        let before = max_threads().saturating_sub(1);
+        reserve(before + 2);
+        // idempotent + capped
+        reserve(before + 2);
+        reserve(usize::MAX);
+        let hits = AtomicUsize::new(0);
+        let tasks: Vec<Task<'_>> = (0..32)
+            .map(|_| {
+                Box::new(|| {
+                    hits.fetch_add(1, Ordering::Relaxed);
+                }) as Task<'_>
+            })
+            .collect();
+        run(tasks);
+        assert_eq!(hits.load(Ordering::Relaxed), 32);
     }
 
     #[test]

@@ -12,8 +12,8 @@ use llmeasyquant::corpus::XorShift64Star;
 use llmeasyquant::util::proptest::{check, F32Vec, Gen, Pair, UsizeRange};
 
 /// Router invariant: sessions map exactly the in-flight requests and the
-/// load vector sums to the session count, under random admit/complete
-/// interleavings.
+/// load vector sums to the in-flight token charges, under random
+/// admit/complete interleavings.
 #[test]
 fn prop_router_session_accounting() {
     struct Ops;
@@ -35,20 +35,22 @@ fn prop_router_session_accounting() {
     }
     check(31, 200, &Ops, |ops| {
         let mut r = Router::new(4, 32);
-        let mut live = std::collections::BTreeSet::new();
+        // rid -> token cost charged at admission
+        let mut live = std::collections::BTreeMap::new();
         let mut next = 100u64;
         for (is_admit, id) in ops {
             if *is_admit {
                 let rid = next + id;
                 next += 16;
-                r.admit(Request::new(rid, vec![3, 4, 5], 2));
-                live.insert(rid);
-            } else if let Some(&rid) = live.iter().next() {
+                let (_, d) = r.admit(Request::new(rid, vec![3, 4, 5], 2));
+                live.insert(rid, d.cost);
+            } else if let Some((&rid, _)) = live.iter().next() {
                 r.complete(rid);
                 live.remove(&rid);
             }
         }
-        r.in_flight() == live.len() && r.load().iter().sum::<usize>() == live.len()
+        r.in_flight() == live.len()
+            && r.load().iter().sum::<usize>() == live.values().sum::<usize>()
     });
 }
 
