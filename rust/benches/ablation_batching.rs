@@ -1,20 +1,37 @@
-//! Ablation — static vs continuous batching on the serving engine.
+//! Ablation — scheduling discipline on the serving engine.
 //!
-//! Replays the same open-loop Poisson workload (per-shard offered load
-//! held constant) through both scheduler modes at 1 / 2 / 4 shards on
-//! the deterministic sim backend, so the comparison runs offline and in
-//! CI. Static mode forms deadline batches and runs them to completion
-//! (head-of-line blocking); continuous mode joins requests into in-flight
-//! batches at step boundaries and retires finished slots immediately.
+//! Two sweeps on the deterministic sim backend (offline, CI-safe):
 //!
-//! Besides the printed table, every run rewrites `BENCH_batching.json`
-//! at the repo root with tokens/s, mean/p99 TTFT, and p50/p99 latency
-//! per (mode, shards) so the serving perf trajectory is diffable across
-//! PRs. `LLEQ_SMOKE=1` shrinks the workload for the CI lane.
+//! **Sweep 1 — static vs continuous** (the PR 3 baseline): the same
+//! open-loop Poisson workload (per-shard offered load held constant)
+//! through both scheduler modes at 1 / 2 / 4 shards. Static forms
+//! deadline batches and runs them to completion (head-of-line blocking);
+//! continuous joins requests into in-flight batches at step boundaries
+//! and retires finished slots immediately.
+//!
+//! **Sweep 2 — chunked prefill x admission policy** (4 shards,
+//! continuous): a heavy-tailed prompt mix under a prefill-dominant cost
+//! model, whole-prompt vs chunked prefill crossed with
+//! `AdmissionPolicy::{Open, SheddingP99, Priority}`. Chunking must cut
+//! p99 inter-token (decode-stall) latency at throughput parity; shedding
+//! must hold served-request p99 inside the target that `Open` breaches.
+//! The cost model is loadable from a JSON profile (`LLEQ_SIM_PROFILE`,
+//! see `SimCost::from_profile`) so the sweep can replay against measured
+//! PJRT step times.
+//!
+//! Besides the printed tables, every run writes `BENCH_batching.json`
+//! (tokens/s, TTFT, latency percentiles, ITL p99, shed counts per row)
+//! so the serving perf trajectory is diffable across PRs and gated in CI
+//! (`benches/check_batching.rs`). `LLEQ_SMOKE=1` shrinks the workload
+//! for the CI lane and writes to `rust/target/` instead of the repo
+//! root, so smoke-sized numbers never overwrite the committed full-run
+//! file.
 
 use std::time::Duration;
 
-use llmeasyquant::coordinator::{workload, BatchPolicy, SchedulerMode, Server, ServerConfig};
+use llmeasyquant::coordinator::{
+    workload, AdmissionPolicy, BatchPolicy, SchedulerMode, Server, ServerConfig,
+};
 use llmeasyquant::quant::Variant;
 use llmeasyquant::runtime::SimCost;
 use llmeasyquant::util::bench::Table;
@@ -50,6 +67,7 @@ fn run_one(
         prompt_max: 48,
         max_new_min: 4,
         max_new_max: 24,
+        long_frac: 0.0,
         seed: 42,
     };
     let report = server.run_open_loop(workload::generate(&spec))?;
@@ -62,6 +80,90 @@ fn run_one(
         ttft_p99_ms: report.ttft_percentile(0.99) * 1e3,
         lat_p50_ms: report.latency_percentile(0.50) * 1e3,
         lat_p99_ms: report.latency_percentile(0.99) * 1e3,
+        requests: n_requests,
+    })
+}
+
+// ---------------------------------------------------------------------------
+// Sweep 2: chunked prefill x admission policy
+// ---------------------------------------------------------------------------
+
+/// Chunk size for the chunked arm: ~7x smaller than the longest prompt,
+/// so a joining 120-token prompt pays 8 bounded stalls instead of one
+/// long one.
+const PREFILL_CHUNK: usize = 16;
+
+/// p99 end-to-end latency target (ms) for the SLO arms, placed between
+/// the shed-mode and open-mode tails observed under this workload.
+const SLO_TARGET_MS: f64 = 60.0;
+
+/// Offered load per shard (req/s) for the SLO sweep: a sustained ~3x
+/// overload of the sim capacity, so open admission's backlog (and tail)
+/// grows for the whole burst while the gate holds shed-mode p99 at the
+/// target. Full-size runs need the longer burst for the breach to
+/// develop; the smoke burst stays under the trip point (no shedding),
+/// which the CI gate pins for the `open` rows.
+const SLO_RATE_PER_SHARD: f64 = 900.0;
+
+struct SloRow {
+    prefill: &'static str,
+    chunk: usize,
+    policy: AdmissionPolicy,
+    tok_per_s: f64,
+    ttft_mean_ms: f64,
+    lat_p99_ms: f64,
+    itl_p99_ms: f64,
+    served: usize,
+    shed: usize,
+    shed_rate: f64,
+    deprioritized: u64,
+    requests: usize,
+}
+
+fn run_slo(
+    chunk: usize,
+    policy: AdmissionPolicy,
+    n_requests: usize,
+    cost: SimCost,
+) -> anyhow::Result<SloRow> {
+    let shards = 4usize;
+    let mut cfg = ServerConfig::new("sim-tiny", Variant::SimQuant);
+    cfg.shards = shards;
+    cfg.batch = 8;
+    cfg.mode = SchedulerMode::Continuous;
+    cfg.prefill_chunk = chunk;
+    cfg.admission = policy;
+    let server = Server::start_sim(cfg, cost)?;
+    // heavy-tailed prompt mix: every fourth prompt is full-length, the
+    // stall source chunked prefill bounds
+    let spec = workload::WorkloadSpec {
+        n_requests,
+        rate_per_s: SLO_RATE_PER_SHARD * shards as f64,
+        prompt_min: 8,
+        prompt_max: 120,
+        max_new_min: 4,
+        max_new_max: 24,
+        long_frac: 0.25,
+        seed: 42,
+    };
+    let report = server.run_open_loop(workload::generate(&spec))?;
+    assert_eq!(
+        report.responses.len() + report.shed(),
+        n_requests,
+        "requests unaccounted for (served + shed != offered)"
+    );
+    Ok(SloRow {
+        prefill: if chunk == 0 { "whole" } else { "chunked" },
+        chunk,
+        policy,
+        tok_per_s: report.tokens_per_s(),
+        ttft_mean_ms: report.ttft_summary().mean * 1e3,
+        lat_p99_ms: report.latency_percentile(0.99) * 1e3,
+        itl_p99_ms: report.itl_percentile(0.99) * 1e3,
+        served: report.responses.len(),
+        shed: report.shed(),
+        shed_rate: report.shed_rate(),
+        deprioritized: report.deprioritized,
         requests: n_requests,
     })
 }
@@ -147,7 +249,111 @@ fn main() -> anyhow::Result<()> {
          latency tail collapse at equal throughput."
     );
 
-    // machine-readable trajectory output at the repo root
+    // ---- sweep 2: chunked prefill x admission policy (4 shards) -----------
+    // prefill-dominant cost model: ~12 us/prompt-token makes a 120-token
+    // prompt a ~1.4 ms whole-prompt stall against a ~0.25 ms decode step
+    // (overridable with a measured profile via LLEQ_SIM_PROFILE)
+    let slo_cost = match std::env::var("LLEQ_SIM_PROFILE") {
+        Ok(path) => SimCost::load_profile(std::path::Path::new(&path))?,
+        Err(_) => SimCost { prefill_us_per_token: 12.0, ..SimCost::default() },
+    };
+    let slo_requests = if smoke { 128 } else { 512 };
+    println!(
+        "\n== ablation: prefill chunking x admission policy (4 shards, continuous, \
+         {slo_requests} reqs, {SLO_RATE_PER_SHARD} req/s/shard, heavy-tail prompts, \
+         p99 target {SLO_TARGET_MS} ms) ==\n"
+    );
+    let mut slo_table = Table::new(&[
+        "prefill",
+        "policy",
+        "tok/s",
+        "ttft mean (ms)",
+        "lat p99 (ms)",
+        "itl p99 (ms)",
+        "served",
+        "shed",
+        "low-prio",
+    ]);
+    let policies = [
+        AdmissionPolicy::Open,
+        AdmissionPolicy::SheddingP99 { target_ms: SLO_TARGET_MS },
+        AdmissionPolicy::Priority { target_ms: SLO_TARGET_MS },
+    ];
+    let mut slo_rows: Vec<SloRow> = Vec::new();
+    for chunk in [0usize, PREFILL_CHUNK] {
+        for policy in policies {
+            let row = run_slo(chunk, policy, slo_requests, slo_cost)?;
+            slo_table.row(vec![
+                row.prefill.into(),
+                row.policy.name().into(),
+                format!("{:.0}", row.tok_per_s),
+                format!("{:.2}", row.ttft_mean_ms),
+                format!("{:.2}", row.lat_p99_ms),
+                format!("{:.3}", row.itl_p99_ms),
+                row.served.to_string(),
+                row.shed.to_string(),
+                row.deprioritized.to_string(),
+            ]);
+            slo_rows.push(row);
+        }
+    }
+    slo_table.print();
+
+    let find = |chunk: usize, name: &str| {
+        slo_rows.iter().find(|r| r.chunk == chunk && r.policy.name() == name)
+    };
+    if let (Some(wo), Some(co)) = (find(0, "open"), find(PREFILL_CHUNK, "open")) {
+        println!(
+            "\nchunked prefill: itl p99 {:.3} -> {:.3} ms ({:.1}x) at tok/s {:.0} vs {:.0}",
+            wo.itl_p99_ms,
+            co.itl_p99_ms,
+            wo.itl_p99_ms / co.itl_p99_ms.max(1e-9),
+            wo.tok_per_s,
+            co.tok_per_s,
+        );
+        if !smoke {
+            assert!(
+                co.itl_p99_ms < wo.itl_p99_ms,
+                "chunked prefill must cut p99 inter-token latency"
+            );
+            let ratio = co.tok_per_s / wo.tok_per_s.max(1e-9);
+            assert!(
+                (0.90..=1.10).contains(&ratio),
+                "chunking broke throughput parity: {ratio:.3}"
+            );
+        }
+    }
+    if let (Some(open), Some(shed)) = (find(PREFILL_CHUNK, "open"), find(PREFILL_CHUNK, "shed-p99"))
+    {
+        println!(
+            "admission: open p99 {:.1} ms vs shed p99 {:.1} ms (target {SLO_TARGET_MS} ms), \
+             shed rate {:.1}%",
+            open.lat_p99_ms,
+            shed.lat_p99_ms,
+            shed.shed_rate * 100.0,
+        );
+        assert_eq!(open.shed, 0, "open admission must never shed");
+        if !smoke {
+            assert!(
+                open.lat_p99_ms > SLO_TARGET_MS,
+                "workload too light: open admission did not breach the target"
+            );
+            assert!(
+                shed.lat_p99_ms <= SLO_TARGET_MS,
+                "shedding failed to hold p99 inside the target"
+            );
+        }
+    }
+    println!(
+        "\nshape: whole-prompt prefill freezes every in-flight slot for the \
+         joiner's full prompt (the ITL tail is the prompt length); chunking \
+         bounds the stall per step. Open admission lets queueing bursts blow \
+         the latency tail; shedding refuses load on breaching shards (tail \
+         capped, some requests refused); priority parks breach-time load \
+         behind normal traffic instead."
+    );
+
+    // machine-readable trajectory output
     let json_rows: Vec<Value> = rows
         .iter()
         .map(|r| {
@@ -163,18 +369,51 @@ fn main() -> anyhow::Result<()> {
             ])
         })
         .collect();
+    let slo_json: Vec<Value> = slo_rows
+        .iter()
+        .map(|r| {
+            Value::obj(vec![
+                ("prefill", Value::Str(r.prefill.into())),
+                ("prefill_chunk", Value::Num(r.chunk as f64)),
+                ("policy", Value::Str(r.policy.name().into())),
+                ("target_ms", r.policy.target_ms().map_or(Value::Null, Value::Num)),
+                ("requests", Value::Num(r.requests as f64)),
+                ("served", Value::Num(r.served as f64)),
+                ("shed", Value::Num(r.shed as f64)),
+                ("shed_rate", Value::Num(r.shed_rate)),
+                ("deprioritized", Value::Num(r.deprioritized as f64)),
+                ("tok_per_s", Value::Num(r.tok_per_s)),
+                ("ttft_mean_ms", Value::Num(r.ttft_mean_ms)),
+                ("lat_p99_ms", Value::Num(r.lat_p99_ms)),
+                ("itl_p99_ms", Value::Num(r.itl_p99_ms)),
+            ])
+        })
+        .collect();
     let out = Value::obj(vec![
         ("bench", Value::Str("ablation_batching".into())),
         ("backend", Value::Str("sim".into())),
         ("smoke", Value::Bool(smoke)),
         ("rate_per_shard", Value::Num(rate_per_shard)),
+        ("slo_rate_per_shard", Value::Num(SLO_RATE_PER_SHARD)),
+        ("slo_target_ms", Value::Num(SLO_TARGET_MS)),
+        ("prefill_chunk", Value::Num(PREFILL_CHUNK as f64)),
         ("note", Value::Str("measured by `cargo bench --bench ablation_batching`".into())),
         ("rows", Value::Arr(json_rows)),
+        ("slo_rows", Value::Arr(slo_json)),
     ]);
-    let path = std::path::Path::new(env!("CARGO_MANIFEST_DIR"))
-        .parent()
-        .map(|repo| repo.join("BENCH_batching.json"))
-        .unwrap_or_else(|| "BENCH_batching.json".into());
+    // smoke runs (CI) write to target/ so the committed full-run numbers
+    // at the repo root never drift to smoke-sized samples
+    let manifest = std::path::Path::new(env!("CARGO_MANIFEST_DIR"));
+    let path = if smoke {
+        let dir = manifest.join("target");
+        std::fs::create_dir_all(&dir)?;
+        dir.join("BENCH_batching.json")
+    } else {
+        manifest
+            .parent()
+            .map(|repo| repo.join("BENCH_batching.json"))
+            .unwrap_or_else(|| "BENCH_batching.json".into())
+    };
     std::fs::write(&path, json::to_string_pretty(&out))?;
     println!("\n(per-row JSON written to {})", path.display());
     Ok(())

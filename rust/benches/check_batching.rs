@@ -1,0 +1,162 @@
+//! CI regression gate over `BENCH_batching.json`.
+//!
+//! The batching ablation *measures*; this checker *fails the build* when
+//! the serving numbers regress past pinned thresholds, so scheduler
+//! changes can no longer land silently slower. Run it after the ablation
+//! (CI runs both in smoke mode):
+//!
+//!   cargo bench --bench ablation_batching          # writes the JSON
+//!   cargo bench --bench check_batching -- <path>   # gates it
+//!
+//! `<path>` defaults to the smoke output (`target/BENCH_batching.json`),
+//! falling back to the committed full-run file at the repo root.
+//!
+//! Thresholds are deliberately loose versions of the full-run
+//! acceptance asserts — smoke samples are small and CI runners noisy —
+//! but tight enough to catch a real regression (continuous batching
+//! losing its TTFT collapse, chunked prefill losing its ITL win, the
+//! admission gate shedding under a policy that must not).
+
+use std::process::ExitCode;
+
+use llmeasyquant::util::json::{self, Value};
+
+/// Continuous mean TTFT must stay at least this factor under static's
+/// (the full-run win is ~50x; losing 2x means the join path regressed).
+const TTFT_MAX_RATIO: f64 = 0.5;
+
+/// Continuous p99 latency may exceed static's by at most this factor
+/// (full-run continuous wins ~1.6x; >1.25x the other way is a regression,
+/// with slack for small smoke samples).
+const LAT_P99_MAX_RATIO: f64 = 1.25;
+
+/// Throughput parity band between the modes (both serve the same
+/// open-loop arrival stream).
+const TOK_RATIO_BAND: (f64, f64) = (0.85, 1.15);
+
+/// Chunked prefill must keep at least a 10% p99 inter-token win over
+/// whole-prompt prefill under the heavy-tail sweep (full-run win ~1.7x).
+const ITL_MAX_RATIO: f64 = 0.9;
+
+fn f(row: &Value, key: &str) -> f64 {
+    row.get(key).and_then(Value::as_f64).unwrap_or(f64::NAN)
+}
+
+fn s<'a>(row: &'a Value, key: &str) -> &'a str {
+    row.get(key).and_then(Value::as_str).unwrap_or("")
+}
+
+fn check_mode_rows(rows: &[Value], failures: &mut Vec<String>) {
+    for shards in [1usize, 2, 4] {
+        let pick = |mode: &str| {
+            rows.iter()
+                .find(|r| s(r, "mode") == mode && f(r, "shards") as usize == shards)
+        };
+        let (Some(st), Some(co)) = (pick("static"), pick("continuous")) else {
+            failures.push(format!("rows: missing static/continuous pair at {shards} shards"));
+            continue;
+        };
+        // NaN (a missing field) must fail, not pass: compare via the
+        // negated form explicitly
+        let ttft_ratio = f(co, "ttft_mean_ms") / f(st, "ttft_mean_ms").max(1e-12);
+        if ttft_ratio.is_nan() || ttft_ratio > TTFT_MAX_RATIO {
+            failures.push(format!(
+                "{shards} shards: continuous/static ttft mean ratio {ttft_ratio:.3} > \
+                 {TTFT_MAX_RATIO} — the continuous join path lost its TTFT collapse"
+            ));
+        }
+        let p99_ratio = f(co, "lat_p99_ms") / f(st, "lat_p99_ms").max(1e-12);
+        if p99_ratio.is_nan() || p99_ratio > LAT_P99_MAX_RATIO {
+            failures.push(format!(
+                "{shards} shards: continuous/static lat p99 ratio {p99_ratio:.3} > \
+                 {LAT_P99_MAX_RATIO}"
+            ));
+        }
+        let tok_ratio = f(co, "tok_per_s") / f(st, "tok_per_s").max(1e-12);
+        if !(TOK_RATIO_BAND.0..=TOK_RATIO_BAND.1).contains(&tok_ratio) {
+            failures.push(format!(
+                "{shards} shards: continuous/static tok/s ratio {tok_ratio:.3} outside \
+                 [{}, {}]",
+                TOK_RATIO_BAND.0, TOK_RATIO_BAND.1
+            ));
+        }
+    }
+}
+
+fn check_slo_rows(rows: &[Value], failures: &mut Vec<String>) {
+    for r in rows {
+        if s(r, "policy") == "open" && f(r, "shed") != 0.0 {
+            failures.push(format!(
+                "slo_rows: open-admission row (prefill={}) shed {} requests — \
+                 the Open policy must never shed",
+                s(r, "prefill"),
+                f(r, "shed"),
+            ));
+        }
+    }
+    let pick = |prefill: &str| {
+        rows.iter().find(|r| s(r, "prefill") == prefill && s(r, "policy") == "open")
+    };
+    let (Some(whole), Some(chunked)) = (pick("whole"), pick("chunked")) else {
+        failures.push("slo_rows: missing whole/chunked open-admission pair".to_string());
+        return;
+    };
+    let itl_ratio = f(chunked, "itl_p99_ms") / f(whole, "itl_p99_ms").max(1e-12);
+    if itl_ratio.is_nan() || itl_ratio > ITL_MAX_RATIO {
+        failures.push(format!(
+            "slo_rows: chunked/whole itl p99 ratio {itl_ratio:.3} > {ITL_MAX_RATIO} — \
+             chunked prefill lost its decode-stall win"
+        ));
+    }
+}
+
+fn main() -> ExitCode {
+    let manifest = std::path::Path::new(env!("CARGO_MANIFEST_DIR"));
+    // `cargo bench` invokes every bench binary with a `--bench` flag;
+    // the JSON path is the first non-flag argument
+    let arg = std::env::args().skip(1).find(|a| !a.starts_with("--"));
+    let path = arg.map(std::path::PathBuf::from).unwrap_or_else(|| {
+        let smoke = manifest.join("target").join("BENCH_batching.json");
+        if smoke.exists() {
+            smoke
+        } else {
+            manifest.parent().unwrap_or(manifest).join("BENCH_batching.json")
+        }
+    });
+    let text = match std::fs::read_to_string(&path) {
+        Ok(t) => t,
+        Err(e) => {
+            eprintln!("check_batching: cannot read {}: {e}", path.display());
+            return ExitCode::FAILURE;
+        }
+    };
+    let doc = match json::parse(&text) {
+        Ok(v) => v,
+        Err(e) => {
+            eprintln!("check_batching: bad JSON in {}: {e}", path.display());
+            return ExitCode::FAILURE;
+        }
+    };
+    let mut failures = Vec::new();
+    match doc.get("rows").and_then(Value::as_arr) {
+        Some(rows) => check_mode_rows(rows, &mut failures),
+        None => failures.push("missing `rows` array".to_string()),
+    }
+    match doc.get("slo_rows").and_then(Value::as_arr) {
+        Some(rows) => check_slo_rows(rows, &mut failures),
+        None => failures.push("missing `slo_rows` array".to_string()),
+    }
+    if failures.is_empty() {
+        println!(
+            "check_batching: {} OK (static-vs-continuous + chunked/admission gates hold)",
+            path.display()
+        );
+        ExitCode::SUCCESS
+    } else {
+        eprintln!("check_batching: {} FAILED:", path.display());
+        for msg in &failures {
+            eprintln!("  - {msg}");
+        }
+        ExitCode::FAILURE
+    }
+}

@@ -6,11 +6,57 @@
 //! **continuous** mode the queue is per-worker and drained at every step
 //! boundary (`take_up_to`, capped by the shard's free slots) — requests
 //! never wait for a batch to "form", only for capacity.
+//!
+//! The queue is two-tier: [`Batcher::push`] enqueues at normal priority,
+//! [`Batcher::push_low`] behind it. Low-priority requests are only
+//! released once the normal queue is drained — the [`AdmissionPolicy`]'s
+//! `Priority` mode parks load arriving during an SLO breach there
+//! instead of shedding it.
 
 use std::collections::VecDeque;
 use std::time::{Duration, Instant};
 
 use super::request::Request;
+
+/// What the serving engine does with new load while a shard is breaching
+/// its latency target. Decided at the dispatcher's join boundary against
+/// a rolling per-shard window of completed-request latencies; the gate
+/// trips below the target (detection-lag margin) and idle shards always
+/// admit (recovery probe) — see `coordinator::server`.
+#[derive(Debug, Clone, Copy, PartialEq, Default)]
+pub enum AdmissionPolicy {
+    /// admit everything (the pre-SLO behavior; one burst can blow p99
+    /// indefinitely)
+    #[default]
+    Open,
+    /// shed new requests routed to a shard whose rolling-window p99
+    /// end-to-end latency exceeds `target_ms`; shed requests get exactly
+    /// one terminal `ServeEvent::Shed` and are never served
+    SheddingP99 { target_ms: f64 },
+    /// admit everything, but requests arriving during a breach join the
+    /// low-priority queue and only reach a slot when no normal-priority
+    /// request is waiting
+    Priority { target_ms: f64 },
+}
+
+impl AdmissionPolicy {
+    pub fn name(self) -> &'static str {
+        match self {
+            AdmissionPolicy::Open => "open",
+            AdmissionPolicy::SheddingP99 { .. } => "shed-p99",
+            AdmissionPolicy::Priority { .. } => "priority",
+        }
+    }
+
+    /// Latency target in ms, if the policy has one.
+    pub fn target_ms(self) -> Option<f64> {
+        match self {
+            AdmissionPolicy::Open => None,
+            AdmissionPolicy::SheddingP99 { target_ms }
+            | AdmissionPolicy::Priority { target_ms } => Some(target_ms),
+        }
+    }
+}
 
 /// How the serving engine schedules admitted requests onto workers.
 #[derive(Debug, Clone, Copy, PartialEq, Eq, Default)]
@@ -65,17 +111,19 @@ impl Batch {
     }
 }
 
-/// FIFO queue + policy.
+/// Two-tier FIFO queue + policy: `queue` (normal) drains ahead of `low`
+/// (deprioritized by the admission policy).
 #[derive(Debug)]
 pub struct Batcher {
     policy: BatchPolicy,
     queue: VecDeque<Request>,
+    low: VecDeque<Request>,
 }
 
 impl Batcher {
     pub fn new(policy: BatchPolicy) -> Self {
         assert!(policy.max_batch >= 1);
-        Batcher { policy, queue: VecDeque::new() }
+        Batcher { policy, queue: VecDeque::new(), low: VecDeque::new() }
     }
 
     pub fn policy(&self) -> BatchPolicy {
@@ -86,16 +134,37 @@ impl Batcher {
         self.queue.push_back(req);
     }
 
+    /// Enqueue behind every normal-priority request (SLO-breach
+    /// deprioritization): released only when the normal queue is empty.
+    pub fn push_low(&mut self, req: Request) {
+        self.low.push_back(req);
+    }
+
     pub fn pending(&self) -> usize {
-        self.queue.len()
+        self.queue.len() + self.low.len()
+    }
+
+    /// Low-priority requests currently parked.
+    pub fn pending_low(&self) -> usize {
+        self.low.len()
+    }
+
+    /// Oldest request across both tiers — `ready` and `next_deadline`
+    /// must agree on it, or the dispatcher busy-spins between a due
+    /// deadline and a refused release.
+    fn oldest_front(&self) -> Option<&Request> {
+        match (self.queue.front(), self.low.front()) {
+            (Some(a), Some(b)) => Some(if a.arrival <= b.arrival { a } else { b }),
+            (a, b) => a.or(b),
+        }
     }
 
     /// Whether a batch should be released `now`.
     pub fn ready(&self, now: Instant) -> bool {
-        if self.queue.len() >= self.policy.max_batch {
+        if self.pending() >= self.policy.max_batch {
             return true;
         }
-        match self.queue.front() {
+        match self.oldest_front() {
             Some(r) => now.duration_since(r.arrival) >= self.policy.max_wait,
             None => false,
         }
@@ -104,15 +173,22 @@ impl Batcher {
     /// When the oldest queued request's deadline expires (static-mode
     /// release even if the batch is not full). `None` when empty.
     pub fn next_deadline(&self) -> Option<Instant> {
-        self.queue.front().map(|r| r.arrival + self.policy.max_wait)
+        self.oldest_front().map(|r| r.arrival + self.policy.max_wait)
+    }
+
+    /// Pop up to `n` requests, normal tier first, FIFO within each tier.
+    fn pop_tiered(&mut self, n: usize) -> Vec<Request> {
+        let k = self.queue.len().min(n);
+        let mut out: Vec<Request> = self.queue.drain(..k).collect();
+        let k = self.low.len().min(n - out.len());
+        out.extend(self.low.drain(..k));
+        out
     }
 
     /// Continuous-mode admission: immediately pop up to `n` requests
-    /// (the shard's free slot count) in FIFO order — no deadline, no
-    /// batch formation.
+    /// (the shard's free slot count) — no deadline, no batch formation.
     pub fn take_up_to(&mut self, n: usize) -> Vec<Request> {
-        let k = self.queue.len().min(n);
-        self.queue.drain(..k).collect()
+        self.pop_tiered(n)
     }
 
     /// Release the next batch if the policy allows.
@@ -120,18 +196,16 @@ impl Batcher {
         if !self.ready(now) {
             return None;
         }
-        let n = self.queue.len().min(self.policy.max_batch);
-        let requests: Vec<Request> = self.queue.drain(..n).collect();
+        let requests = self.pop_tiered(self.policy.max_batch);
         Some(Batch { requests, formed_at: now })
     }
 
     /// Drain everything regardless of deadline (shutdown path).
     pub fn flush(&mut self) -> Vec<Batch> {
         let mut out = Vec::new();
-        while !self.queue.is_empty() {
-            let n = self.queue.len().min(self.policy.max_batch);
+        while self.pending() > 0 {
             out.push(Batch {
-                requests: self.queue.drain(..n).collect(),
+                requests: self.pop_tiered(self.policy.max_batch),
                 formed_at: Instant::now(),
             });
         }
@@ -220,6 +294,64 @@ mod tests {
         assert_eq!(SchedulerMode::default(), SchedulerMode::Static);
         assert_eq!(SchedulerMode::Static.name(), "static");
         assert_eq!(SchedulerMode::Continuous.name(), "continuous");
+    }
+
+    #[test]
+    fn admission_policy_names_and_targets() {
+        assert_eq!(AdmissionPolicy::default(), AdmissionPolicy::Open);
+        assert_eq!(AdmissionPolicy::Open.name(), "open");
+        assert_eq!(AdmissionPolicy::Open.target_ms(), None);
+        let shed = AdmissionPolicy::SheddingP99 { target_ms: 25.0 };
+        assert_eq!(shed.name(), "shed-p99");
+        assert_eq!(shed.target_ms(), Some(25.0));
+        let prio = AdmissionPolicy::Priority { target_ms: 10.0 };
+        assert_eq!(prio.name(), "priority");
+        assert_eq!(prio.target_ms(), Some(10.0));
+    }
+
+    #[test]
+    fn low_priority_drains_after_normal() {
+        let mut b = Batcher::new(BatchPolicy { max_batch: 8, max_wait: Duration::ZERO });
+        b.push_low(req(10));
+        b.push(req(1));
+        b.push_low(req(11));
+        b.push(req(2));
+        assert_eq!(b.pending(), 4);
+        assert_eq!(b.pending_low(), 2);
+        // normal tier first even though a low request arrived earlier
+        let got = b.take_up_to(3);
+        assert_eq!(got.iter().map(|r| r.id).collect::<Vec<_>>(), vec![1, 2, 10]);
+        assert_eq!(b.take_up_to(9).iter().map(|r| r.id).collect::<Vec<_>>(), vec![11]);
+    }
+
+    #[test]
+    fn low_priority_alone_still_releases_on_deadline() {
+        let mut b = Batcher::new(BatchPolicy { max_batch: 8, max_wait: Duration::ZERO });
+        let r = req(1);
+        let expect = r.arrival + Duration::ZERO;
+        b.push_low(r);
+        // parked low request must not starve forever: the deadline and
+        // readiness checks see it
+        assert_eq!(b.next_deadline(), Some(expect));
+        let batch = b.take(Instant::now()).unwrap();
+        assert_eq!(batch.len(), 1);
+        assert_eq!(b.pending(), 0);
+    }
+
+    #[test]
+    fn flush_covers_both_tiers() {
+        let mut b = Batcher::new(BatchPolicy { max_batch: 3, max_wait: Duration::ZERO });
+        for i in 0..4 {
+            b.push(req(i));
+        }
+        for i in 4..6 {
+            b.push_low(req(i));
+        }
+        let batches = b.flush();
+        let total: usize = batches.iter().map(Batch::len).sum();
+        assert_eq!(total, 6);
+        let first: Vec<u64> = batches[0].requests.iter().map(|r| r.id).collect();
+        assert_eq!(first, vec![0, 1, 2]);
     }
 
     #[test]

@@ -25,6 +25,11 @@
 //! [`KvCache::ingest_prefill_batch`]; page re-encodes run on reused
 //! scratch buffers, and `input_literals` builds PJRT literals directly
 //! from the cache buffers — one copy per decode step, total.
+//!
+//! Chunked prefill resumes ingestion mid-prompt
+//! ([`KvCache::ingest_prefill_at`] / `PrefillPage.t0`): later chunks
+//! encode under the params fitted to the earlier ones, widening the page
+//! range at most once per chunk when a row escapes it.
 
 use anyhow::Result;
 
@@ -45,12 +50,16 @@ enum Mode {
 }
 
 /// One (slot, layer) prefill page for [`KvCache::ingest_prefill_batch`]:
-/// rows `[t_len, D]` per cache, destined for positions `0..t_len`.
+/// rows `[t_len, D]` per cache, destined for positions `t0..t0 + t_len`.
+/// `t0 > 0` resumes a page mid-prompt (chunked prefill): positions
+/// `0..t0` must already hold the earlier chunks' rows.
 pub struct PrefillPage<'a> {
     pub slot: usize,
     pub layer: usize,
     pub k_rows: &'a [f32],
     pub v_rows: &'a [f32],
+    /// first position the rows land at (0 for whole-prompt prefill)
+    pub t0: usize,
     pub t_len: usize,
 }
 
@@ -276,13 +285,31 @@ impl KvCache {
         v_rows: &[f32],
         t_len: usize,
     ) {
-        assert!(t_len <= self.ctx);
+        self.ingest_prefill_at(slot, layer, 0, k_rows, v_rows, t_len);
+    }
+
+    /// Resume-capable prefill ingest: store rows [T, D] at positions
+    /// `t0..t0 + t_len`. For `t0 > 0` (a later chunk of a chunked
+    /// prefill) the SimQuant page's params were fitted to the earlier
+    /// chunks; rows that escape that range widen it once per chunk (old
+    /// rows decoded, range recomputed over the union, page re-encoded) —
+    /// the same adaptation the decode append path performs per row.
+    pub fn ingest_prefill_at(
+        &mut self,
+        slot: usize,
+        layer: usize,
+        t0: usize,
+        k_rows: &[f32],
+        v_rows: &[f32],
+        t_len: usize,
+    ) {
+        assert!(t0 + t_len <= self.ctx, "prefill rows past ctx");
         assert_eq!(k_rows.len(), t_len * self.d);
         assert_eq!(v_rows.len(), t_len * self.d);
         let d = self.d;
         match self.mode {
             Mode::F32 => {
-                let off = self.row_off(layer, slot, 0);
+                let off = self.row_off(layer, slot, t0);
                 self.k_f32[off..off + t_len * d].copy_from_slice(k_rows);
                 self.v_f32[off..off + t_len * d].copy_from_slice(v_rows);
             }
@@ -290,33 +317,40 @@ impl KvCache {
                 let off = self.code_off(layer, slot, 0);
                 let p = self.param_off(layer, slot);
                 let (bits, row_bytes) = (self.bits, self.row_bytes);
-                let mut scratch = std::mem::take(&mut self.code_scratch);
-                encode_page_packed(
+                let page = (t0 + t_len) * row_bytes;
+                let mut cscratch = std::mem::take(&mut self.code_scratch);
+                let mut fscratch = std::mem::take(&mut self.scratch);
+                resume_page_packed(
                     k_rows,
+                    t0,
                     t_len,
                     d,
                     bits,
                     row_bytes,
-                    &mut self.k_q[off..off + t_len * row_bytes],
+                    &mut self.k_q[off..off + page],
                     &mut self.k_min[p..p + d],
                     &mut self.k_step[p..p + d],
-                    &mut scratch,
+                    &mut fscratch,
+                    &mut cscratch,
                 );
-                encode_page_packed(
+                resume_page_packed(
                     v_rows,
+                    t0,
                     t_len,
                     d,
                     bits,
                     row_bytes,
-                    &mut self.v_q[off..off + t_len * row_bytes],
+                    &mut self.v_q[off..off + page],
                     &mut self.v_min[p..p + d],
                     &mut self.v_step[p..p + d],
-                    &mut scratch,
+                    &mut fscratch,
+                    &mut cscratch,
                 );
-                self.code_scratch = scratch;
+                self.code_scratch = cscratch;
+                self.scratch = fscratch;
             }
         }
-        self.lens[slot] = self.lens[slot].max(t_len);
+        self.lens[slot] = self.lens[slot].max(t0 + t_len);
     }
 
     /// Ingest a batch of disjoint (slot, layer) prefill pages in
@@ -326,7 +360,7 @@ impl KvCache {
     pub fn ingest_prefill_batch(&mut self, pages: &[PrefillPage<'_>]) {
         for p in pages {
             assert!(p.slot < self.batch && p.layer < self.n_layers, "page out of range");
-            assert!(p.t_len <= self.ctx);
+            assert!(p.t0 + p.t_len <= self.ctx, "prefill rows past ctx");
             assert_eq!(p.k_rows.len(), p.t_len * self.d);
             assert_eq!(p.v_rows.len(), p.t_len * self.d);
         }
@@ -348,11 +382,11 @@ impl KvCache {
                 let mut tasks: Vec<pool::Task<'_>> = Vec::with_capacity(order.len());
                 for (&pi, (kb, vb)) in order.iter().zip(kblocks.into_iter().zip(vblocks)) {
                     let p = &pages[pi];
-                    let n = p.t_len * d;
+                    let (start, n) = (p.t0 * d, p.t_len * d);
                     let (k_rows, v_rows) = (p.k_rows, p.v_rows);
                     tasks.push(Box::new(move || {
-                        kb[..n].copy_from_slice(k_rows);
-                        vb[..n].copy_from_slice(v_rows);
+                        kb[start..start + n].copy_from_slice(k_rows);
+                        vb[start..start + n].copy_from_slice(v_rows);
                     }));
                 }
                 pool::run(tasks);
@@ -374,32 +408,39 @@ impl KvCache {
                 let mut tasks: Vec<pool::Task<'_>> = Vec::with_capacity(order.len());
                 for (((&pi, (kqb, vqb)), (kmb, ksb)), (vmb, vsb)) in iter {
                     let p = &pages[pi];
-                    let (k_rows, v_rows, t_len) = (p.k_rows, p.v_rows, p.t_len);
+                    let (k_rows, v_rows, t0, t_len) = (p.k_rows, p.v_rows, p.t0, p.t_len);
                     tasks.push(Box::new(move || {
                         // per-task staging (only allocated for sub-byte
-                        // pages; the 8-bit path encodes in place)
-                        let mut scratch = Vec::new();
-                        encode_page_packed(
+                        // or resumed pages; the fresh 8-bit path encodes
+                        // in place)
+                        let mut cscratch = Vec::new();
+                        let mut fscratch = Vec::new();
+                        let page = (t0 + t_len) * row_bytes;
+                        resume_page_packed(
                             k_rows,
+                            t0,
                             t_len,
                             d,
                             bits,
                             row_bytes,
-                            &mut kqb[..t_len * row_bytes],
+                            &mut kqb[..page],
                             kmb,
                             ksb,
-                            &mut scratch,
+                            &mut fscratch,
+                            &mut cscratch,
                         );
-                        encode_page_packed(
+                        resume_page_packed(
                             v_rows,
+                            t0,
                             t_len,
                             d,
                             bits,
                             row_bytes,
-                            &mut vqb[..t_len * row_bytes],
+                            &mut vqb[..page],
                             vmb,
                             vsb,
-                            &mut scratch,
+                            &mut fscratch,
+                            &mut cscratch,
                         );
                     }));
                 }
@@ -407,7 +448,7 @@ impl KvCache {
             }
         }
         for p in pages {
-            self.lens[p.slot] = self.lens[p.slot].max(p.t_len);
+            self.lens[p.slot] = self.lens[p.slot].max(p.t0 + p.t_len);
         }
     }
 
@@ -755,6 +796,78 @@ fn encode_page_packed(
     pack_rows(scratch, t_len, d, bits, row_bytes, codes);
 }
 
+/// Encode rows `[t_len, D]` into page positions `t0..t0 + t_len`.
+///
+/// `t0 == 0` is a fresh page encode (params fitted to the rows). For
+/// `t0 > 0` — resuming a chunked prefill — the page's first `t0` rows
+/// were encoded by earlier chunks under the current `(vmin, step)`:
+/// when every new row fits that range, the new rows are encoded with the
+/// existing params; otherwise the old rows are decoded, the per-channel
+/// range recomputed over old + new, and the whole page re-encoded — the
+/// decode append path's widening, amortized to at most once per chunk.
+/// `codes` must cover rows `0..t0 + t_len`.
+#[allow(clippy::too_many_arguments)]
+fn resume_page_packed(
+    rows: &[f32],
+    t0: usize,
+    t_len: usize,
+    d: usize,
+    bits: u32,
+    row_bytes: usize,
+    codes: &mut [u8],
+    vmin: &mut [f32],
+    step: &mut [f32],
+    fscratch: &mut Vec<f32>,
+    cscratch: &mut Vec<u8>,
+) {
+    if t0 == 0 {
+        encode_page_packed(rows, t_len, d, bits, row_bytes, codes, vmin, step, cscratch);
+        return;
+    }
+    let levels = ((1u32 << bits) - 1) as f32;
+    let in_range = rows.chunks_exact(d).take(t_len).all(|row| {
+        row.iter().zip(vmin.iter().zip(step.iter())).all(|(v, (mn, st))| {
+            let hi = mn + st * levels;
+            *v >= mn - 1e-9 && *v <= hi + 1e-9
+        })
+    });
+    if in_range {
+        for (r, row) in rows.chunks_exact(d).take(t_len).enumerate() {
+            let off = (t0 + r) * row_bytes;
+            if bits == 8 {
+                simquant_encode_with_params_into(
+                    row,
+                    vmin,
+                    step,
+                    levels,
+                    &mut codes[off..off + d],
+                );
+            } else {
+                cscratch.clear();
+                cscratch.resize(d, 0);
+                simquant_encode_with_params_into(row, vmin, step, levels, cscratch);
+                pack_u8_into(cscratch, bits, &mut codes[off..off + row_bytes])
+                    .expect("sized packed row");
+            }
+        }
+        return;
+    }
+    // widen: decode the earlier chunks' rows, append the new ones, and
+    // re-encode the union as one fresh page
+    fscratch.clear();
+    fscratch.resize((t0 + t_len) * d, 0.0);
+    if bits == 8 {
+        simquant_decode_into(&codes[..t0 * d], vmin, step, t0, d, &mut fscratch[..t0 * d]);
+    } else {
+        cscratch.clear();
+        cscratch.resize(t0 * d, 0);
+        unpack_rows(&codes[..t0 * row_bytes], t0, d, bits, row_bytes, cscratch);
+        simquant_decode_into(cscratch, vmin, step, t0, d, &mut fscratch[..t0 * d]);
+    }
+    fscratch[t0 * d..].copy_from_slice(&rows[..t_len * d]);
+    encode_page_packed(fscratch, t0 + t_len, d, bits, row_bytes, codes, vmin, step, cscratch);
+}
+
 /// Pack `t` unpacked code rows ([t, d] u8) into `row_bytes`-wide packed
 /// rows — the single site for the page row layout (see also
 /// [`unpack_rows`]).
@@ -918,6 +1031,7 @@ mod tests {
                     layer: *layer,
                     k_rows: k,
                     v_rows: v,
+                    t0: 0,
                     t_len: *t,
                 })
                 .collect();
@@ -945,7 +1059,7 @@ mod tests {
         let mut pages = Vec::new();
         for layer in 0..l {
             serial.ingest_prefill(1, layer, &k, &v, 5);
-            pages.push(PrefillPage { slot: 1, layer, k_rows: &k, v_rows: &v, t_len: 5 });
+            pages.push(PrefillPage { slot: 1, layer, k_rows: &k, v_rows: &v, t0: 0, t_len: 5 });
         }
         batch.ingest_prefill_batch(&pages);
         for layer in 0..l {
@@ -959,10 +1073,139 @@ mod tests {
         let mut kv = KvCache::new_f32(1, 1, 4, 2);
         let k = vec![0.0; 4];
         let pages = vec![
-            PrefillPage { slot: 0, layer: 0, k_rows: &k, v_rows: &k, t_len: 2 },
-            PrefillPage { slot: 0, layer: 0, k_rows: &k, v_rows: &k, t_len: 2 },
+            PrefillPage { slot: 0, layer: 0, k_rows: &k, v_rows: &k, t0: 0, t_len: 2 },
+            PrefillPage { slot: 0, layer: 0, k_rows: &k, v_rows: &k, t0: 0, t_len: 2 },
         ];
         kv.ingest_prefill_batch(&pages);
+    }
+
+    #[test]
+    fn f32_chunked_ingest_matches_whole() {
+        let (t, d) = (6usize, 4usize);
+        let k = rows(t, d, 31, 1.0);
+        let v = rows(t, d, 32, 1.0);
+        let mut whole = KvCache::new_f32(1, 1, 8, d);
+        whole.ingest_prefill(0, 0, &k, &v, t);
+        let mut chunked = KvCache::new_f32(1, 1, 8, d);
+        chunked.ingest_prefill_at(0, 0, 0, &k[..2 * d], &v[..2 * d], 2);
+        chunked.ingest_prefill_at(0, 0, 2, &k[2 * d..], &v[2 * d..], 4);
+        assert_eq!(chunked.len(0), t);
+        assert_eq!(whole.decode_k(0, 0), chunked.decode_k(0, 0));
+    }
+
+    #[test]
+    fn simquant_resume_within_range_keeps_params() {
+        for bits in [8u32, 4] {
+            let d = 8usize;
+            let mut kv = KvCache::new_simquant_bits(1, 1, 16, d, bits);
+            // first chunk spans [-4, 4] on every channel, so the smaller
+            // resume rows are guaranteed in range
+            let mut first = vec![0.5f32; 3 * d];
+            first[..d].fill(-4.0);
+            first[d..2 * d].fill(4.0);
+            let second: Vec<f32> = rows(2, d, 42, 0.5)
+                .into_iter()
+                .map(|x| x.clamp(-2.0, 2.0))
+                .collect();
+            kv.ingest_prefill_at(0, 0, 0, &first, &first, 3);
+            let params_before = kv.graph_inputs()[2].f32_view().unwrap().to_vec();
+            kv.ingest_prefill_at(0, 0, 3, &second, &second, 2);
+            let params_after = kv.graph_inputs()[2].f32_view().unwrap().to_vec();
+            assert_eq!(params_before, params_after, "bits={bits}: in-range resume re-fit");
+            assert_eq!(kv.len(0), 5);
+            // reconstruction bounded by half a step over the [-4, 4] range
+            let tol = 0.5 * 8.0 / (((1u32 << bits) - 1) as f32) + 1e-3;
+            let dk = kv.decode_k(0, 0);
+            for (a, b) in second.iter().zip(&dk[3 * d..]) {
+                assert!((a - b).abs() <= tol, "bits={bits}: {a} vs {b}");
+            }
+        }
+    }
+
+    #[test]
+    fn simquant_resume_widens_out_of_range_chunk() {
+        let d = 4usize;
+        let mut kv = KvCache::new_simquant(1, 1, 16, d);
+        let first = vec![0.1, 0.1, 0.1, 0.1, 0.2, 0.2, 0.2, 0.2];
+        kv.ingest_prefill_at(0, 0, 0, &first, &first, 2);
+        // second chunk far outside the first chunk's range
+        let second = vec![5.0, -4.0, 3.0, 7.0];
+        kv.ingest_prefill_at(0, 0, 2, &second, &second, 1);
+        let dk = kv.decode_k(0, 0);
+        // old rows survive the widening within the widened step bound
+        for (a, b) in first.iter().zip(&dk[..2 * d]) {
+            assert!((a - b).abs() < 0.05, "{a} vs {b}");
+        }
+        for (a, b) in second.iter().zip(&dk[2 * d..]) {
+            assert!((a - b).abs() < 0.05, "{a} vs {b}");
+        }
+    }
+
+    #[test]
+    fn batch_resume_matches_serial_resume() {
+        let (l, b, ctx, d) = (2usize, 2usize, 16usize, 8usize);
+        for bits in [8u32, 4] {
+            let mut serial = KvCache::new_simquant_bits(l, b, ctx, d, bits);
+            let mut batch = KvCache::new_simquant_bits(l, b, ctx, d, bits);
+            let chunk1: Vec<(usize, usize, Vec<f32>, Vec<f32>)> = (0..l)
+                .flat_map(|layer| {
+                    (0..b).map(move |slot| {
+                        let seed = (layer * 10 + slot) as u64;
+                        (slot, layer, rows(3, d, seed, 1.0), rows(3, d, seed + 50, 1.0))
+                    })
+                })
+                .collect();
+            let chunk2: Vec<(usize, usize, Vec<f32>, Vec<f32>)> = (0..l)
+                .flat_map(|layer| {
+                    (0..b).map(move |slot| {
+                        let seed = 777 + (layer * 10 + slot) as u64;
+                        // mix of in-range and widening chunks
+                        let scale = if slot == 0 { 0.5 } else { 3.0 };
+                        (slot, layer, rows(2, d, seed, scale), rows(2, d, seed + 50, scale))
+                    })
+                })
+                .collect();
+            for cache in [&mut serial, &mut batch] {
+                let pages: Vec<PrefillPage<'_>> = chunk1
+                    .iter()
+                    .map(|(slot, layer, k, v)| PrefillPage {
+                        slot: *slot,
+                        layer: *layer,
+                        k_rows: k,
+                        v_rows: v,
+                        t0: 0,
+                        t_len: 3,
+                    })
+                    .collect();
+                cache.ingest_prefill_batch(&pages);
+            }
+            for (slot, layer, k, v) in &chunk2 {
+                serial.ingest_prefill_at(*slot, *layer, 3, k, v, 2);
+            }
+            let pages: Vec<PrefillPage<'_>> = chunk2
+                .iter()
+                .map(|(slot, layer, k, v)| PrefillPage {
+                    slot: *slot,
+                    layer: *layer,
+                    k_rows: k,
+                    v_rows: v,
+                    t0: 3,
+                    t_len: 2,
+                })
+                .collect();
+            batch.ingest_prefill_batch(&pages);
+            for slot in 0..b {
+                assert_eq!(serial.len(slot), batch.len(slot));
+                assert_eq!(serial.len(slot), 5);
+                for layer in 0..l {
+                    assert_eq!(
+                        serial.decode_k(slot, layer),
+                        batch.decode_k(slot, layer),
+                        "bits={bits} slot={slot} layer={layer}"
+                    );
+                }
+            }
+        }
     }
 
     #[test]

@@ -1,28 +1,53 @@
 //! The serving coordinator — LLMEasyQuant's Distributed Controller Layer.
 //!
-//! Since the continuous-batching refactor this layer is a step-driven
-//! serving engine (paper §2.1, §3; scheduling discipline modeled on
-//! production continuous-batching servers):
+//! A step-driven serving engine (paper §2.1, §3; scheduling discipline
+//! modeled on production continuous-batching servers) that *enforces*
+//! latency SLOs rather than just measuring them:
 //!
-//!   router     — admission (BOS/truncate) + least-loaded shard choice,
-//!                where load is in-flight *tokens*, not request count
-//!   batcher    — admission queue for both [`SchedulerMode`]s: static
-//!                deadline-formed batches, or per-shard step-boundary
-//!                draining (continuous)
+//!   router     — admission rewrite (BOS/truncate) + least-loaded shard
+//!                choice, where load is in-flight *tokens*, not request
+//!                count; shed requests refund their charge (`release`)
+//!   batcher    — two-tier admission queue for both [`SchedulerMode`]s
+//!                (static deadline-formed batches, or per-shard
+//!                step-boundary draining) and the [`AdmissionPolicy`]
+//!                the dispatcher's SLO gate applies at the join boundary
 //!   kv_cache   — per-slot KV pages (fp32 or SimQuant codes with online
-//!                re-encode, §3.4) plus a slot free-list: retired slots
-//!                are scrubbed and reusable on the next step
-//!   worker     — the step core: `join` (fused prefill of joiners into
-//!                free slots, first token + TTFT) and `step` (one fused
-//!                decode across in-flight slots; finished slots retire
-//!                mid-flight). Backends: PJRT artifacts or the offline
-//!                deterministic `runtime::SimModel`
+//!                re-encode, §3.4) plus a slot free-list; prefill ingest
+//!                can resume mid-prompt (`ingest_prefill_at`) for
+//!                chunked prefill
+//!   worker     — the step core: `join` (admit into free slots, start
+//!                prefill) and `step` (one bounded prefill chunk for
+//!                mid-prefill slots, then one fused decode across
+//!                decoding slots; finished slots retire mid-flight).
+//!                Backends: PJRT artifacts or the offline deterministic
+//!                `runtime::SimModel`
 //!   server     — event-driven dispatcher: open-loop `Arrival` replay or
 //!                closed-loop firehose, routing via `RouteDecision`,
-//!                per-token `ServeEvent` streaming back to the collector
+//!                per-token `ServeEvent` streaming, and the SLO gate
+//!                (rolling per-shard latency windows feeding the
+//!                admission policy)
 //!   scale_sync — Alg. 1 EMA trackers + Eqs. 7-8 collective sync
 //!   bitwidth   — Thm. 3 greedy per-layer mixed-precision search
 //!   workload   — Poisson arrival generator (open loop) + firehose
+//!
+//! The two serving-time pressure valves (the paper's runtime-adaptation
+//! story, applied to scheduling):
+//!
+//! **Chunked prefill** (`ServerConfig::prefill_chunk`): a joining prompt
+//! is ingested at most `chunk` tokens per step boundary, interleaved
+//! with decode steps, so the decode stall a long prompt imposes on
+//! in-flight slots is bounded by the chunk — not the prompt length.
+//! Token streams are unchanged (chunk seams reproduce the whole-prompt
+//! rows exactly); only timing moves: joiners trade a later first token
+//! for their neighbors' bounded inter-token gaps.
+//!
+//! **SLO-aware admission** (`ServerConfig::admission`): every completion
+//! feeds a rolling per-shard latency window; when a shard's window p99
+//! breaches the configured target, `SheddingP99` refuses new load routed
+//! there (one terminal `ServeEvent::Shed` per request, router charge
+//! refunded) and `Priority` parks it in the low-priority queue tier
+//! behind all normal traffic. `Open` preserves the measure-only
+//! behavior.
 //!
 //! Static mode survives as the ablation baseline: run-to-completion
 //! batches, exactly the pre-refactor behavior. Continuous mode retires
@@ -42,7 +67,7 @@ mod server;
 mod worker;
 pub mod workload;
 
-pub use batcher::{Batch, BatchPolicy, Batcher, SchedulerMode};
+pub use batcher::{AdmissionPolicy, Batch, BatchPolicy, Batcher, SchedulerMode};
 pub use bitwidth::{
     quant_mse, search_bitwidths, size_reduction, BitwidthChoice, LayerInfo, SearchPolicy,
     BIT_CHOICES,

@@ -44,7 +44,10 @@ pub struct Response {
 /// One streamed serving event. Workers emit a `Token` per generated
 /// token as it happens (decode-step granularity) and a final `Done`
 /// carrying the complete response; per-sender channel order guarantees
-/// every `Token` of a request precedes its `Done`.
+/// every `Token` of a request precedes its `Done`. `Shed` is the other
+/// terminal event: the dispatcher's admission gate refused the request
+/// (SLO breach under `AdmissionPolicy::SheddingP99`) — a shed request
+/// emits exactly one `Shed` and never a `Token` or `Done`.
 #[derive(Debug, Clone)]
 pub enum ServeEvent {
     Token {
@@ -54,6 +57,11 @@ pub enum ServeEvent {
         first: bool,
     },
     Done(Response),
+    Shed {
+        id: RequestId,
+        /// shard whose latency window triggered the shed
+        shard: usize,
+    },
 }
 
 #[cfg(test)]
@@ -74,7 +82,13 @@ mod tests {
             ServeEvent::Token { id, token, first } => {
                 assert_eq!((id, token, first), (4, 9, true));
             }
-            ServeEvent::Done(_) => panic!("wrong arm"),
+            _ => panic!("wrong arm"),
         }
+    }
+
+    #[test]
+    fn shed_event_names_the_breaching_shard() {
+        let e = ServeEvent::Shed { id: 7, shard: 2 };
+        assert!(matches!(e, ServeEvent::Shed { id: 7, shard: 2 }));
     }
 }

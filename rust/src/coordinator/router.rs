@@ -91,6 +91,14 @@ impl Router {
         }
     }
 
+    /// Undo an admission that will never be served (the SLO gate shed
+    /// the request after routing): drops the session entry and refunds
+    /// the shard's token charge, so shed load does not poison the
+    /// least-loaded signal.
+    pub fn release(&mut self, id: RequestId) {
+        self.complete(id);
+    }
+
     pub fn shard_of(&self, id: RequestId) -> Option<usize> {
         self.sessions.get(&id).map(|(shard, _)| *shard)
     }
@@ -168,6 +176,19 @@ mod tests {
         assert_eq!(r.load(), &[12]);
         r.complete(1);
         assert_eq!(r.load(), &[0]);
+    }
+
+    #[test]
+    fn release_refunds_the_shed_charge() {
+        let mut r = Router::new(2, 16);
+        let (_, d) = r.admit(req(1, 4));
+        assert!(r.load()[d.shard] > 0);
+        r.release(1);
+        assert_eq!(r.load(), &[0, 0]);
+        assert_eq!(r.in_flight(), 0);
+        // the next admission sees the refunded shard as free again
+        let (_, d2) = r.admit(req(2, 4));
+        assert_eq!(d2.shard, 0);
     }
 
     #[test]

@@ -17,8 +17,16 @@
 //!
 //! Scheduler selection is [`SchedulerMode`] on the config; `Static`
 //! preserves the pre-refactor run-to-completion behavior exactly.
+//!
+//! The dispatcher is also where SLOs are *enforced*, not just measured:
+//! every completion feeds a rolling per-shard latency window
+//! ([`SloGate`]), and the configured [`AdmissionPolicy`] consults the
+//! routed shard's window at the join boundary — shedding new load
+//! (exactly one terminal [`ServeEvent::Shed`], charge refunded to the
+//! router) or parking it in the low-priority queue tier until the
+//! breach clears.
 
-use std::collections::VecDeque;
+use std::collections::{HashMap, VecDeque};
 use std::sync::mpsc::{channel, Receiver, RecvTimeoutError, Sender, TryRecvError};
 use std::sync::Arc;
 use std::thread::JoinHandle;
@@ -26,16 +34,29 @@ use std::time::{Duration, Instant};
 
 use anyhow::{anyhow, bail, Result};
 
-use crate::metrics::{mean_ci95, percentile, Breakdown, Stage, Summary};
+use crate::metrics::{mean_ci95, percentile, Breakdown, RollingWindow, Stage, Summary};
 use crate::quant::Variant;
 use crate::runtime::{Registry, SimCost, SimModel};
 use crate::util::pool;
 
-use super::batcher::{Batch, BatchPolicy, Batcher, SchedulerMode};
-use super::request::{Request, Response, ServeEvent};
+use super::batcher::{AdmissionPolicy, Batch, BatchPolicy, Batcher, SchedulerMode};
+use super::request::{Request, RequestId, Response, ServeEvent};
 use super::router::Router;
 use super::worker::{Backend, Worker, WorkerStats};
 use super::workload::Arrival;
+
+/// Completions the SLO gate remembers per shard; small enough to track
+/// current pressure (a breach ages out once the shard recovers), large
+/// enough for a usable tail estimate.
+const SLO_WINDOW: usize = 64;
+
+/// The gate trips at this fraction of the configured target. The window
+/// is a *trailing* signal — completion latencies, not the queue — so by
+/// the time served p99 reads at `target/2` the backlog already in
+/// flight is worth roughly the other half. Tripping early absorbs that
+/// detection lag, holding served p99 inside the target itself (pinned
+/// by the batching ablation's SLO sweep).
+const SLO_TRIP_FRACTION: f64 = 0.5;
 
 /// Server configuration.
 #[derive(Debug, Clone)]
@@ -49,6 +70,11 @@ pub struct ServerConfig {
     pub policy: BatchPolicy,
     /// scheduling discipline; `Static` is the seed behavior
     pub mode: SchedulerMode,
+    /// max prompt tokens prefilled per step boundary (0 = whole-prompt;
+    /// sim backend only — the compiled PJRT prefill graph is whole-prompt)
+    pub prefill_chunk: usize,
+    /// what to do with new load while a shard breaches its SLO
+    pub admission: AdmissionPolicy,
 }
 
 impl ServerConfig {
@@ -60,6 +86,8 @@ impl ServerConfig {
             batch: 8,
             policy: BatchPolicy::default(),
             mode: SchedulerMode::Static,
+            prefill_chunk: 0,
+            admission: AdmissionPolicy::Open,
         }
     }
 }
@@ -67,10 +95,87 @@ impl ServerConfig {
 /// Messages from the dispatcher to a worker shard.
 enum ToWorker {
     /// continuous mode: enqueue; the worker admits it at the next step
-    /// boundary (capacity permitting)
-    Inject(Request),
+    /// boundary (capacity permitting). `true` = low priority (arrived
+    /// during an SLO breach under `AdmissionPolicy::Priority`)
+    Inject(Request, bool),
     /// static mode: run this formed batch to completion
     Batch(Vec<Request>),
+}
+
+/// What the admission gate decided for one routed request.
+#[derive(Clone, Copy)]
+enum Gate {
+    Admit,
+    Low,
+    Shed,
+}
+
+/// Rolling latency windows + the admission policy that reads them.
+/// Lives in the dispatcher: completions stream through it anyway, so the
+/// gate sees every latency sample with no extra synchronization.
+///
+/// Continuous mode keeps one window per shard (the router's `decision.
+/// shard` is where the request will actually serve). Static mode
+/// dispatches formed batches round-robin — the router's shard choice is
+/// bookkeeping only — so the gate collapses to a single global window
+/// there; per-shard windows would read (and starve) the wrong shard.
+struct SloGate {
+    policy: AdmissionPolicy,
+    windows: Vec<RollingWindow>,
+}
+
+impl SloGate {
+    fn new(policy: AdmissionPolicy, shards: usize, global: bool) -> Self {
+        let n = if global { 1 } else { shards };
+        SloGate {
+            policy,
+            windows: (0..n).map(|_| RollingWindow::new(SLO_WINDOW)).collect(),
+        }
+    }
+
+    fn idx(&self, shard: usize) -> usize {
+        if self.windows.len() == 1 {
+            0
+        } else {
+            shard
+        }
+    }
+
+    /// Feed one completion's end-to-end latency into its shard's window.
+    fn observe(&mut self, shard: usize, latency_s: f64) {
+        let i = self.idx(shard);
+        self.windows[i].push(latency_s * 1e3);
+    }
+
+    /// Gate a request routed to `shard`. An empty window never breaches,
+    /// so cold shards admit. `established` is false when the shard holds
+    /// no other in-flight work — an idle shard always admits (a probe):
+    /// without it, shedding starves the window of fresh completions and
+    /// a breached gate could never observe the recovery.
+    fn decide(&self, shard: usize, established: bool) -> Gate {
+        let breached = |target_ms: f64| {
+            established
+                && self.windows[self.idx(shard)].percentile(0.99)
+                    > SLO_TRIP_FRACTION * target_ms
+        };
+        match self.policy {
+            AdmissionPolicy::Open => Gate::Admit,
+            AdmissionPolicy::SheddingP99 { target_ms } => {
+                if breached(target_ms) {
+                    Gate::Shed
+                } else {
+                    Gate::Admit
+                }
+            }
+            AdmissionPolicy::Priority { target_ms } => {
+                if breached(target_ms) {
+                    Gate::Low
+                } else {
+                    Gate::Admit
+                }
+            }
+        }
+    }
 }
 
 /// Workload results + metrics.
@@ -93,11 +198,38 @@ pub struct ServerReport {
     pub retires: u64,
     /// max concurrently in-flight slots per shard
     pub peak_active: Vec<usize>,
+    /// requests the admission gate refused (one terminal `Shed` each;
+    /// disjoint from `responses`)
+    pub shed_ids: Vec<RequestId>,
+    /// requests parked in the low-priority tier at admission
+    pub deprioritized: u64,
+    /// observed gaps between consecutive streamed tokens of the same
+    /// request (seconds) — the decode-stall signal chunked prefill bounds
+    pub inter_token_gap_s: Vec<f64>,
 }
 
 impl ServerReport {
     pub fn tokens_per_s(&self) -> f64 {
         self.tokens_out as f64 / self.wall_s.max(1e-9)
+    }
+
+    /// Requests shed by the admission gate.
+    pub fn shed(&self) -> usize {
+        self.shed_ids.len()
+    }
+
+    /// Shed fraction of the offered load.
+    pub fn shed_rate(&self) -> f64 {
+        let total = self.responses.len() + self.shed_ids.len();
+        if total == 0 {
+            return 0.0;
+        }
+        self.shed_ids.len() as f64 / total as f64
+    }
+
+    /// Inter-token (decode-stall) latency percentile (q in [0, 1]).
+    pub fn itl_percentile(&self, q: f64) -> f64 {
+        percentile(&self.inter_token_gap_s, q)
     }
 
     pub fn latency_summary(&self) -> Summary {
@@ -176,7 +308,7 @@ impl Server {
             let (tx, rx): (Sender<ToWorker>, Receiver<ToWorker>) = channel();
             senders.push(tx);
             let ev_tx = ev_tx.clone();
-            let worker = Worker::new(shard, backend);
+            let worker = Worker::new_chunked(shard, backend, cfg.prefill_chunk);
             handles.push(std::thread::spawn(move || worker_loop(worker, rx, ev_tx)));
         }
         Ok(Server {
@@ -217,9 +349,21 @@ impl Server {
         let mut shard_tokens = vec![0u64; self.cfg.shards];
         let mut tokens_streamed = 0u64;
         let mut shard_rr = 0usize;
+        let mut gate = SloGate::new(
+            self.cfg.admission,
+            self.cfg.shards,
+            self.cfg.mode == SchedulerMode::Static,
+        );
+        let mut shed_ids: Vec<RequestId> = Vec::new();
+        let mut deprioritized = 0u64;
+        // last streamed-token instant per in-flight request, for the
+        // inter-token (decode-stall) gap distribution
+        let mut last_token_at: HashMap<RequestId, Instant> = HashMap::new();
+        let mut gaps: Vec<f64> = Vec::new();
 
-        while responses.len() < total {
-            // 1) inject every due arrival
+        while responses.len() + shed_ids.len() < total {
+            // 1) inject every due arrival, gating each on its routed
+            // shard's SLO window
             let now_s = t0.elapsed().as_secs_f64();
             while pending.front().is_some_and(|a| a.at_s <= now_s) {
                 let mut a = pending.pop_front().unwrap();
@@ -227,12 +371,35 @@ impl Server {
                 // measure queueing from this instant
                 a.request.arrival = Instant::now();
                 let (req, decision) = self.router.admit(a.request);
+                // other in-flight work beyond this request's own charge?
+                // (static serves round-robin from one global queue, so
+                // its probe condition is system-wide, matching the
+                // gate's global window)
+                let established = match self.cfg.mode {
+                    SchedulerMode::Continuous => {
+                        self.router.load()[decision.shard] > decision.cost
+                    }
+                    SchedulerMode::Static => {
+                        self.router.load().iter().sum::<usize>() > decision.cost
+                    }
+                };
+                let verdict = gate.decide(decision.shard, established);
+                if let Gate::Shed = verdict {
+                    // terminal: refund the router charge, record exactly
+                    // one Shed event, never dispatch
+                    self.router.release(req.id);
+                    shed_ids.push(req.id);
+                    continue;
+                }
+                let low = matches!(verdict, Gate::Low);
+                deprioritized += low as u64;
                 match self.cfg.mode {
                     SchedulerMode::Continuous => {
                         self.senders[decision.shard]
-                            .send(ToWorker::Inject(req))
+                            .send(ToWorker::Inject(req, low))
                             .map_err(|_| anyhow!("worker {} is gone", decision.shard))?;
                     }
+                    SchedulerMode::Static if low => self.batcher.push_low(req),
                     SchedulerMode::Static => self.batcher.push(req),
                 }
             }
@@ -267,12 +434,25 @@ impl Server {
             }
             match self.events.recv_timeout(timeout) {
                 Ok((shard, Ok(ev))) => match ev {
-                    ServeEvent::Token { .. } => tokens_streamed += 1,
+                    ServeEvent::Token { id, first, .. } => {
+                        tokens_streamed += 1;
+                        let now = Instant::now();
+                        if first {
+                            last_token_at.insert(id, now);
+                        } else if let Some(prev) = last_token_at.insert(id, now) {
+                            gaps.push(now.duration_since(prev).as_secs_f64());
+                        }
+                    }
                     ServeEvent::Done(r) => {
                         self.router.complete(r.id);
+                        gate.observe(shard, r.latency_s);
+                        last_token_at.remove(&r.id);
                         shard_tokens[shard] += r.tokens.len() as u64;
                         responses.push(r);
                     }
+                    // workers never shed; defensive accounting if one
+                    // ever forwards a gate decision
+                    ServeEvent::Shed { id, .. } => shed_ids.push(id),
                 },
                 Ok((_, Err(e))) => return Err(e),
                 Err(RecvTimeoutError::Timeout) => {
@@ -325,6 +505,9 @@ impl Server {
             joins,
             retires,
             peak_active,
+            shed_ids,
+            deprioritized,
+            inter_token_gap_s: gaps,
         })
     }
 
@@ -360,7 +543,8 @@ fn worker_loop(
         // drain the mailbox without blocking
         while open {
             match rx.try_recv() {
-                Ok(ToWorker::Inject(r)) => queue.push(r),
+                Ok(ToWorker::Inject(r, false)) => queue.push(r),
+                Ok(ToWorker::Inject(r, true)) => queue.push_low(r),
                 Ok(ToWorker::Batch(reqs)) => {
                     if !run_static(&mut worker, reqs, &tx) {
                         break 'serve;
@@ -376,7 +560,8 @@ fn worker_loop(
             }
             // idle: park until the dispatcher sends work or hangs up
             match rx.recv() {
-                Ok(ToWorker::Inject(r)) => queue.push(r),
+                Ok(ToWorker::Inject(r, false)) => queue.push(r),
+                Ok(ToWorker::Inject(r, true)) => queue.push_low(r),
                 Ok(ToWorker::Batch(reqs)) => {
                     if !run_static(&mut worker, reqs, &tx) {
                         break;

@@ -7,19 +7,31 @@
 //!
 //! The core is two step primitives the scheduler composes:
 //!
-//!   [`Worker::join`] — admit requests into free slots: one fused prefill
-//!   over the joining rows, KV pages ingested straight into the acquired
-//!   slots, first token + TTFT emitted per joiner.
+//!   [`Worker::join`] — admit requests into free slots and start their
+//!   prefill: whole-prompt by default, or the first `prefill_chunk`
+//!   tokens when chunking is on. A slot whose prompt is fully ingested
+//!   emits its first token + TTFT; otherwise it parks in
+//!   `Phase::Prefilling { next_pos }` and resumes one chunk per step.
 //!
-//!   [`Worker::step`] — one fused decode step across every in-flight
-//!   slot; finished slots retire *inside* the step, release their KV
-//!   pages back to the free list, and emit a `Done` response.
+//!   [`Worker::step`] — one bounded prefill chunk for any mid-prefill
+//!   slots, then one fused decode step across every *decoding* slot;
+//!   finished slots retire inside the step, release their KV pages back
+//!   to the free list, and emit a `Done` response.
 //!
 //! Static batching is the degenerate composition (join everything, step
 //! until drained — [`Worker::process_batch`]); continuous batching
 //! interleaves `join` between `step`s at every boundary, which is what
 //! kills head-of-line blocking: a finished slot's capacity is reusable
 //! on the very next step instead of when the whole batch drains.
+//!
+//! Chunked prefill bounds the *other* stall: without it, a joining
+//! 2k-token prompt prefills whole between decode steps, freezing every
+//! in-flight slot for the duration. With `prefill_chunk = c`, each step
+//! pays at most `c` prefill tokens before decoding, so the inter-token
+//! gap a joiner imposes on its batch neighbors is bounded regardless of
+//! prompt length — at the price of a slightly later first token for the
+//! joiner itself. Token streams are unaffected: chunked and whole-prompt
+//! prefill ingest identical rows (pinned by the serving tests).
 //!
 //! Backends: [`Backend::Pjrt`] executes compiled AOT artifacts through
 //! the runtime engine; [`Backend::Sim`] is the deterministic simulated
@@ -80,10 +92,21 @@ impl Backend {
     }
 }
 
+/// Where a slot's request is in its lifecycle.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+enum Phase {
+    /// prompt ingested up to `next_pos`; the rest prefills one chunk per
+    /// step boundary
+    Prefilling { next_pos: usize },
+    /// prompt fully ingested; the slot decodes one token per step
+    Decoding,
+}
+
 /// One in-flight request occupying a batch slot.
 struct Slot {
     req: Request,
     prompt_len: usize,
+    phase: Phase,
     generated: Vec<i32>,
     ttft_s: f64,
     first_token_at: Instant,
@@ -105,6 +128,10 @@ pub struct Worker {
     backend: Backend,
     kv: KvCache,
     slots: Vec<Option<Slot>>,
+    /// max prompt tokens prefilled per step boundary (0 = whole prompt);
+    /// pinned to 0 on the PJRT backend, whose compiled prefill graph
+    /// ingests full prompts
+    prefill_chunk: usize,
     pub scales: ScaleSync,
     pub breakdown: Breakdown,
     /// decode steps executed (for per-step metrics)
@@ -120,12 +147,24 @@ pub struct Worker {
 
 impl Worker {
     pub fn new(shard: usize, backend: Backend) -> Self {
+        Self::new_chunked(shard, backend, 0)
+    }
+
+    /// Worker with a bounded prefill chunk: at most `prefill_chunk`
+    /// prompt tokens are ingested per step boundary (0 = whole-prompt
+    /// prefill, the pre-chunking behavior). The PJRT backend pins the
+    /// chunk to 0 — its compiled prefill graph is whole-prompt.
+    pub fn new_chunked(shard: usize, backend: Backend, prefill_chunk: usize) -> Self {
         let c = backend.cfg().clone();
         let b = backend.batch();
         let kv = if backend.variant() == Variant::SimQuant {
             KvCache::new_simquant(c.n_layers, b, c.ctx, c.d_model)
         } else {
             KvCache::new_f32(c.n_layers, b, c.ctx, c.d_model)
+        };
+        let prefill_chunk = match &backend {
+            Backend::Pjrt(_) => 0,
+            Backend::Sim(_) => prefill_chunk,
         };
         let mut slots = Vec::with_capacity(b);
         slots.resize_with(b, || None);
@@ -134,6 +173,7 @@ impl Worker {
             backend,
             kv,
             slots,
+            prefill_chunk,
             scales: ScaleSync::new(c.n_layers, 0.9, 1e-6, 0),
             breakdown: Breakdown::new(),
             steps: 0,
@@ -151,6 +191,11 @@ impl Worker {
     /// Compiled slot capacity.
     pub fn capacity(&self) -> usize {
         self.backend.batch()
+    }
+
+    /// Prefill chunk in effect (0 = whole-prompt).
+    pub fn prefill_chunk(&self) -> usize {
+        self.prefill_chunk
     }
 
     /// Slots available for `join`.
@@ -174,16 +219,17 @@ impl Worker {
         }
     }
 
-    /// Admit `reqs` into free slots at a step boundary: one fused prefill
-    /// over the joining rows, first token + TTFT per joiner. Requests
-    /// whose budget is a single token retire immediately.
+    /// Admit `reqs` into free slots at a step boundary and start their
+    /// prefill (whole prompt when `prefill_chunk == 0`, else the first
+    /// chunk). Joiners whose whole prompt fits the first ingest emit
+    /// their first token + TTFT immediately; requests whose budget is a
+    /// single token retire immediately.
     pub fn join(&mut self, reqs: Vec<Request>) -> Result<Vec<ServeEvent>> {
         if reqs.is_empty() {
             return Ok(Vec::new());
         }
-        let cfg = self.backend.cfg().clone();
+        let ctx = self.backend.cfg().ctx;
         let b = self.backend.batch();
-        let (ctx, v, l, d) = (cfg.ctx, cfg.vocab, cfg.n_layers, cfg.d_model);
         if reqs.len() > self.kv.free_slots() {
             bail!(
                 "batch of {} exceeds free capacity {} (compiled batch size {b})",
@@ -193,74 +239,113 @@ impl Worker {
         }
 
         // place each joiner in the lowest free slot (FIFO -> ascending)
-        let mut tokens = vec![PAD; b * ctx];
-        let mut prompt_lens = vec![0usize; b];
-        let mut joined: Vec<usize> = Vec::with_capacity(reqs.len());
+        let n = reqs.len();
         for req in reqs {
             let slot = self.kv.acquire_slot().expect("free capacity checked above");
             let plen = req.prompt.len().min(ctx - 1);
-            prompt_lens[slot] = plen;
-            tokens[slot * ctx..slot * ctx + plen].copy_from_slice(&req.prompt[..plen]);
             self.slots[slot] = Some(Slot {
                 req,
                 prompt_len: plen,
+                phase: Phase::Prefilling { next_pos: 0 },
                 generated: Vec::new(),
                 ttft_s: 0.0,
                 first_token_at: Instant::now(),
             });
-            joined.push(slot);
         }
-        self.joins += joined.len() as u64;
+        self.joins += n as u64;
         self.peak_active = self.peak_active.max(self.active());
+        self.advance_prefill()
+    }
 
-        // fused prefill over the joining rows
+    /// Run one bounded prefill chunk over every mid-prefill slot: one
+    /// fused prefill call over the chunk spans, KV rows ingested at their
+    /// positions. Slots whose prompt completes emit first token + TTFT
+    /// (admission order) and move to `Phase::Decoding`; the rest park
+    /// until the next step boundary.
+    fn advance_prefill(&mut self) -> Result<Vec<ServeEvent>> {
+        let cfg = self.backend.cfg().clone();
+        let b = self.backend.batch();
+        let (ctx, v, l, d) = (cfg.ctx, cfg.vocab, cfg.n_layers, cfg.d_model);
+
+        let mut tokens = vec![PAD; b * ctx];
+        let mut spans = vec![(0usize, 0usize); b];
+        let mut advancing: Vec<usize> = Vec::new();
+        for slot in 0..b {
+            let Some(s) = &self.slots[slot] else { continue };
+            let Phase::Prefilling { next_pos } = s.phase else { continue };
+            let remaining = s.prompt_len - next_pos;
+            let len = if self.prefill_chunk == 0 {
+                remaining
+            } else {
+                remaining.min(self.prefill_chunk)
+            };
+            tokens[slot * ctx..slot * ctx + s.prompt_len]
+                .copy_from_slice(&s.req.prompt[..s.prompt_len]);
+            spans[slot] = (next_pos, len);
+            advancing.push(slot);
+        }
+        if advancing.is_empty() {
+            return Ok(Vec::new());
+        }
+
+        // fused prefill over this round's chunk spans
         let outs = match &self.backend {
             Backend::Pjrt(handle) => {
+                // whole-prompt only (prefill_chunk pinned to 0): the
+                // compiled graph ingests the full token matrix
                 let bd = &mut self.breakdown;
                 let tok = bd.span(Stage::Load, || Tensor::from_i32(vec![b, ctx], tokens));
                 bd.span(Stage::Gemm, || handle.prefill(&[tok]))?
             }
             Backend::Sim(m) => {
                 let bd = &mut self.breakdown;
-                bd.span(Stage::Gemm, || m.prefill(&tokens, &prompt_lens))?
+                bd.span(Stage::Gemm, || m.prefill_range(&tokens, &spans))?
             }
         };
         let logits = outs[0].f32_view()?; // [B, CTX, V]
         let k_cache = outs[1].f32_view()?; // [L, B, CTX, D]
         let v_cache = outs[2].f32_view()?;
 
-        // ingest the joiners' KV pages (disjoint (slot, layer) fan-out)
+        // ingest the chunk KV pages (disjoint (slot, layer) fan-out)
         {
             let bd = &mut self.breakdown;
             let kv = &mut self.kv;
-            let mut pages = Vec::with_capacity(joined.len() * l);
-            for &slot in &joined {
-                let plen = prompt_lens[slot];
+            let mut pages = Vec::with_capacity(advancing.len() * l);
+            for &slot in &advancing {
+                let (start, len) = spans[slot];
                 for layer in 0..l {
-                    let off = (layer * b + slot) * ctx * d;
+                    let off = ((layer * b + slot) * ctx + start) * d;
                     pages.push(PrefillPage {
                         slot,
                         layer,
-                        k_rows: &k_cache[off..off + plen * d],
-                        v_rows: &v_cache[off..off + plen * d],
-                        t_len: plen,
+                        k_rows: &k_cache[off..off + len * d],
+                        v_rows: &v_cache[off..off + len * d],
+                        t0: start,
+                        t_len: len,
                     });
                 }
             }
             bd.span(Stage::Quant, || kv.ingest_prefill_batch(&pages));
         }
 
-        // first token + TTFT per joiner, in admission order
-        let mut events = Vec::with_capacity(joined.len());
-        for &slot in &joined {
+        // completed prefills emit their first token; unfinished slots
+        // record their resume position
+        let mut events = Vec::with_capacity(advancing.len());
+        for &slot in &advancing {
+            let (start, len) = spans[slot];
             let done = {
-                let s = self.slots[slot].as_mut().expect("just joined");
+                let s = self.slots[slot].as_mut().expect("advancing slot is occupied");
+                if start + len < s.prompt_len {
+                    s.phase = Phase::Prefilling { next_pos: start + len };
+                    continue;
+                }
                 let plen = s.prompt_len;
                 let row = &logits[(slot * ctx + plen - 1) * v..(slot * ctx + plen) * v];
                 let tok = argmax(row);
                 s.generated.push(tok);
                 s.ttft_s = s.req.arrival.elapsed().as_secs_f64();
                 s.first_token_at = Instant::now();
+                s.phase = Phase::Decoding;
                 events.push(ServeEvent::Token { id: s.req.id, token: tok, first: true });
                 s.req.max_new_tokens <= 1
             };
@@ -272,27 +357,40 @@ impl Worker {
         Ok(events)
     }
 
-    /// One fused decode step across every in-flight slot. Finished slots
-    /// retire inside the step and free their KV pages for the next join.
+    /// One step boundary: a bounded prefill chunk for any mid-prefill
+    /// slots, then one fused decode step across every decoding slot.
+    /// Finished slots retire inside the step and free their KV pages for
+    /// the next join.
     pub fn step(&mut self) -> Result<Vec<ServeEvent>> {
         let cfg = self.backend.cfg().clone();
         let b = self.backend.batch();
         let (ctx, v, l, d) = (cfg.ctx, cfg.vocab, cfg.n_layers, cfg.d_model);
 
+        // snapshot the decoding set *before* the prefill chunk: a slot
+        // whose prefill completes this step decodes from the next one,
+        // matching the whole-prompt path (join emits the first token,
+        // the following step produces the second)
         let mut active = vec![false; b];
         let mut token = vec![PAD; b];
         let mut pos = vec![0i32; b];
         let mut any = false;
         for slot in 0..b {
             if let Some(s) = &self.slots[slot] {
+                if s.phase != Phase::Decoding {
+                    continue;
+                }
                 active[slot] = true;
-                token[slot] = *s.generated.last().expect("joined slots hold >= 1 token");
+                token[slot] = *s.generated.last().expect("decoding slots hold >= 1 token");
                 pos[slot] = self.kv.len(slot) as i32;
                 any = true;
             }
         }
+
+        // the bounded prefill chunk this boundary pays (no-op when no
+        // slot is mid-prefill)
+        let mut events = self.advance_prefill()?;
         if !any {
-            return Ok(Vec::new());
+            return Ok(events);
         }
 
         let outs = match &self.backend {
@@ -321,15 +419,16 @@ impl Worker {
         let k_new = outs[1].f32_view()?; // [L, B, D]
         let v_new = outs[2].f32_view()?;
 
-        // append the new KV rows + track activation ranges (Alg. 1)
+        // append the new KV rows + track activation ranges (Alg. 1);
+        // mid-prefill slots were not decoded and get no rows
         {
             let bd = &mut self.breakdown;
             let kv = &mut self.kv;
             let scales = &mut self.scales;
-            let slots = &self.slots;
+            let act = &active;
             bd.span(Stage::Quant, || {
-                for (slot, state) in slots.iter().enumerate() {
-                    if state.is_none() {
+                for (slot, &live) in act.iter().enumerate() {
+                    if !live {
                         continue;
                     }
                     for layer in 0..l {
@@ -343,12 +442,12 @@ impl Worker {
         }
 
         // emit this step's tokens; retire finished slots immediately
-        let mut events = Vec::new();
         for slot in 0..b {
+            if !active[slot] {
+                continue;
+            }
             let done = {
-                let Some(s) = self.slots[slot].as_mut() else {
-                    continue;
-                };
+                let s = self.slots[slot].as_mut().expect("active slot is occupied");
                 let row = &step_logits[slot * v..(slot + 1) * v];
                 let tok = argmax(row);
                 s.generated.push(tok);
@@ -498,6 +597,94 @@ mod tests {
             .join(vec![req(1, 4, 2), req(2, 4, 2), req(3, 4, 2)])
             .unwrap_err();
         assert!(err.to_string().contains("exceeds free capacity"), "{err}");
+    }
+
+    fn chunked_worker(variant: Variant, batch: usize, chunk: usize) -> Worker {
+        Worker::new_chunked(
+            0,
+            Backend::Sim(SimModel::tiny(variant, batch, SimCost::fast())),
+            chunk,
+        )
+    }
+
+    #[test]
+    fn chunked_join_defers_first_token_until_prompt_ingested() {
+        let mut w = chunked_worker(Variant::Fp, 2, 4);
+        // 10-token prompt at chunk 4 -> join ingests 4, two more steps
+        // finish the prompt (4 + 4 + 2)
+        let evs = w.join(vec![req(1, 10, 3)]).unwrap();
+        assert!(evs.is_empty(), "first token before the prompt is ingested");
+        assert_eq!(w.active(), 1, "mid-prefill slot occupies capacity");
+        let evs = w.step().unwrap();
+        assert!(evs.is_empty(), "still mid-prefill");
+        let evs = w.step().unwrap();
+        assert_eq!(evs.len(), 1, "prompt complete -> first token");
+        assert!(matches!(&evs[0], ServeEvent::Token { first: true, .. }));
+        assert_eq!(w.steps, 0, "no decode steps ran while prefilling alone");
+        // drain the remaining budget
+        while w.active() > 0 {
+            let _ = w.step().unwrap();
+        }
+        assert_eq!(w.retires, 1);
+    }
+
+    #[test]
+    fn chunked_process_batch_matches_whole_prompt() {
+        // chunked and whole-prompt prefill must generate identical token
+        // streams — the sim trajectory is a pure function of (token, pos)
+        let run = |chunk: usize| {
+            let mut w = chunked_worker(Variant::SimQuant, 4, chunk);
+            let rs = w
+                .process_batch(Batch {
+                    requests: vec![req(1, 11, 5), req(2, 3, 4), req(3, 17, 3)],
+                    formed_at: Instant::now(),
+                })
+                .unwrap();
+            let mut rs: Vec<_> = rs.into_iter().map(|r| (r.id, r.tokens)).collect();
+            rs.sort();
+            rs
+        };
+        assert_eq!(run(0), run(4), "chunked prefill changed a token stream");
+        assert_eq!(run(0), run(1), "single-token chunks changed a token stream");
+    }
+
+    #[test]
+    fn inflight_slots_decode_between_chunks() {
+        let mut w = chunked_worker(Variant::Fp, 4, 4);
+        // request 1: short prompt, long budget -> decoding while 2 joins
+        let evs = w.join(vec![req(1, 4, 12)]).unwrap();
+        assert_eq!(evs.len(), 1, "whole 4-token prompt fits one chunk");
+        // request 2: 16-token prompt = 4 chunks (1 at join + 3 steps)
+        let evs = w.join(vec![req(2, 16, 2)]).unwrap();
+        assert!(evs.is_empty());
+        let mut r1_tokens_during_prefill = 0;
+        loop {
+            let evs = w.step().unwrap();
+            let r2_first = evs
+                .iter()
+                .any(|e| matches!(e, ServeEvent::Token { id: 2, first: true, .. }));
+            r1_tokens_during_prefill += evs
+                .iter()
+                .filter(|e| matches!(e, ServeEvent::Token { id: 1, .. }))
+                .count();
+            if r2_first {
+                break;
+            }
+        }
+        assert!(
+            r1_tokens_during_prefill >= 3,
+            "request 1 made only {r1_tokens_during_prefill} decode steps while 2 prefilled"
+        );
+    }
+
+    #[test]
+    fn prefill_chunk_knob_is_reported() {
+        // sim backends honor the knob (PJRT pins it to 0 — whole-prompt
+        // compiled graph); the accessor reports what is in effect
+        let w = chunked_worker(Variant::Fp, 2, 8);
+        assert_eq!(w.prefill_chunk(), 8);
+        let w0 = sim_worker(Variant::Fp, 2);
+        assert_eq!(w0.prefill_chunk(), 0);
     }
 
     #[test]

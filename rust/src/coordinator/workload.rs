@@ -16,6 +16,10 @@ pub struct WorkloadSpec {
     pub prompt_max: usize,
     pub max_new_min: usize,
     pub max_new_max: usize,
+    /// fraction of requests drawn as full `prompt_max`-length prompts —
+    /// the heavy tail that makes prefill stalls visible (0.0 keeps the
+    /// uniform mix)
+    pub long_frac: f64,
     pub seed: u64,
 }
 
@@ -28,6 +32,7 @@ impl Default for WorkloadSpec {
             prompt_max: 48,
             max_new_min: 4,
             max_new_max: 24,
+            long_frac: 0.0,
             seed: 42,
         }
     }
@@ -49,8 +54,15 @@ pub fn generate(spec: &WorkloadSpec) -> Vec<Arrival> {
         // exponential inter-arrival
         let u = rng.next_f64().max(1e-12);
         t += -u.ln() / spec.rate_per_s;
-        let plen = spec.prompt_min
-            + rng.next_below((spec.prompt_max - spec.prompt_min + 1) as u64) as usize;
+        // long_frac == 0.0 must consume no randomness so existing seeds
+        // reproduce their pinned workloads bit-for-bit
+        let is_long = spec.long_frac > 0.0 && rng.next_f64() < spec.long_frac;
+        let plen = if is_long {
+            spec.prompt_max
+        } else {
+            spec.prompt_min
+                + rng.next_below((spec.prompt_max - spec.prompt_min + 1) as u64) as usize
+        };
         let max_new = spec.max_new_min
             + rng.next_below((spec.max_new_max - spec.max_new_min + 1) as u64) as usize;
         let prompt = corpus::generate_tokens(plen, spec.seed.wrapping_add(1000 + i as u64));
@@ -121,6 +133,26 @@ mod tests {
             assert_eq!(o.request.prompt, f.request.prompt);
             assert_eq!(o.request.max_new_tokens, f.request.max_new_tokens);
         }
+    }
+
+    #[test]
+    fn long_frac_zero_consumes_no_extra_randomness() {
+        let base = generate(&WorkloadSpec::default());
+        let explicit = generate(&WorkloadSpec { long_frac: 0.0, ..Default::default() });
+        for (a, b) in base.iter().zip(&explicit) {
+            assert_eq!(a.request.prompt, b.request.prompt);
+            assert_eq!(a.at_s, b.at_s);
+        }
+    }
+
+    #[test]
+    fn long_frac_mixes_in_full_length_prompts() {
+        let spec = WorkloadSpec { n_requests: 200, long_frac: 0.3, ..Default::default() };
+        let arr = generate(&spec);
+        let long = arr.iter().filter(|a| a.request.prompt.len() == spec.prompt_max).count();
+        // ~60 expected; a uniform mix alone would give ~5
+        assert!((30..=100).contains(&long), "long prompts: {long}");
+        assert!(arr.iter().all(|a| a.request.prompt.len() >= spec.prompt_min));
     }
 
     #[test]

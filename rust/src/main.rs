@@ -16,8 +16,8 @@ use anyhow::{bail, Result};
 
 use llmeasyquant::collective::{Collective, Topology, Transport};
 use llmeasyquant::coordinator::{
-    search_bitwidths, size_reduction, workload, BatchPolicy, LayerInfo, ScaleSync,
-    SchedulerMode, SearchPolicy, Server, ServerConfig,
+    search_bitwidths, size_reduction, workload, AdmissionPolicy, BatchPolicy, LayerInfo,
+    ScaleSync, SchedulerMode, SearchPolicy, Server, ServerConfig,
 };
 use llmeasyquant::corpus;
 use llmeasyquant::eval::{perplexity, weight_errors};
@@ -57,6 +57,9 @@ COMMANDS:
   serve            --model gpt2-tiny --variant smooth --shards 2 --requests 16
                    --max-new 16 [--batch 8] [--mode static|continuous]
                    [--rate REQS_PER_S]   (rate > 0: open-loop Poisson replay)
+                   [--prefill-chunk N]   (bound prefill to N tokens/step; 0 = whole)
+                   [--slo-p99-ms MS --admission shed|priority]
+                                         (enforce a p99 latency target at admission)
   eval-ppl         --model gpt2-tiny --variant all [--windows 8]
   breakdown        --ctx 32768 --batch 448 [--world 8] [--transport nccl]
   bitwidth-search  --model gpt2-tiny [--lambda 1e-4] [--policy greedy|grid|entropy]
@@ -111,6 +114,19 @@ fn serve(args: &Args) -> Result<()> {
     };
     // requests/second for open-loop Poisson replay; 0 = closed-loop
     let rate = args.get_f64("rate", 0.0);
+    // prefill chunk in tokens per step boundary; 0 = whole-prompt
+    let prefill_chunk = args.get_usize("prefill-chunk", 0);
+    // p99 latency target; 0 = no SLO enforcement (AdmissionPolicy::Open)
+    let slo_p99_ms = args.get_f64("slo-p99-ms", 0.0);
+    let admission = if slo_p99_ms > 0.0 {
+        match args.get_or("admission", "shed").as_str() {
+            "shed" => AdmissionPolicy::SheddingP99 { target_ms: slo_p99_ms },
+            "priority" => AdmissionPolicy::Priority { target_ms: slo_p99_ms },
+            a => bail!("unknown admission policy {a} (shed|priority)"),
+        }
+    } else {
+        AdmissionPolicy::Open
+    };
 
     let reg = registry(args)?;
     let mut cfg = ServerConfig::new(&model, variant);
@@ -118,6 +134,8 @@ fn serve(args: &Args) -> Result<()> {
     cfg.batch = batch;
     cfg.policy = BatchPolicy::default();
     cfg.mode = mode;
+    cfg.prefill_chunk = prefill_chunk;
+    cfg.admission = admission;
     println!("compiling executables for {model}/{} ...", variant.name());
     let server = Server::start(&reg, cfg)?;
 
@@ -129,6 +147,7 @@ fn serve(args: &Args) -> Result<()> {
         prompt_max: 24,
         max_new_min: max_new,
         max_new_max: max_new,
+        long_frac: 0.0,
         seed: 9000,
     };
     let report = if rate > 0.0 {
@@ -139,12 +158,21 @@ fn serve(args: &Args) -> Result<()> {
 
     let lat = report.latency_summary();
     println!(
-        "served {} requests ({} scheduling) | {:.1} tok/s | {} decode steps",
+        "served {} requests ({} scheduling, {} admission) | {:.1} tok/s | {} decode steps",
         report.responses.len(),
         mode.name(),
+        admission.name(),
         report.tokens_per_s(),
         report.decode_steps,
     );
+    if slo_p99_ms > 0.0 {
+        println!(
+            "slo: target p99 {slo_p99_ms} ms | shed {} ({:.1}%) | deprioritized {}",
+            report.shed(),
+            report.shed_rate() * 100.0,
+            report.deprioritized,
+        );
+    }
     println!(
         "latency mean {:.1} ms ci95 [{:.1}, {:.1}] p99 {:.1} ms | ttft mean {:.1} ms p99 {:.1} ms",
         lat.mean * 1e3,
@@ -160,12 +188,13 @@ fn serve(args: &Args) -> Result<()> {
         variant.name(),
         report.shard_tokens
     );
-    let sample = &report.responses[0];
-    println!(
-        "sample completion (req {}): {:?}",
-        sample.id,
-        corpus::detokenize(&sample.tokens)
-    );
+    if let Some(sample) = report.responses.first() {
+        println!(
+            "sample completion (req {}): {:?}",
+            sample.id,
+            corpus::detokenize(&sample.tokens)
+        );
+    }
     Ok(())
 }
 

@@ -1,13 +1,15 @@
 //! Instrumentation: Eq. 12 latency breakdown spans, histograms,
-//! throughput counters, and the statistical machinery of §A.4
-//! (paired t-tests, confidence intervals).
+//! throughput counters, rolling SLO windows, and the statistical
+//! machinery of §A.4 (paired t-tests, confidence intervals).
 
 mod breakdown;
 mod histogram;
 mod stats;
 mod throughput;
+mod window;
 
 pub use breakdown::{Breakdown, Stage};
 pub use histogram::Histogram;
 pub use stats::{mean_ci95, paired_t_test, percentile, Summary, TTest};
 pub use throughput::ThroughputCounter;
+pub use window::RollingWindow;

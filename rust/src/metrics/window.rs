@@ -1,0 +1,103 @@
+//! Rolling observation window — the SLO tracker's memory.
+//!
+//! A bounded FIFO of recent samples (per-shard completion latencies on
+//! the serving path); the admission gate reads percentiles off it to
+//! decide whether a shard is currently breaching its latency target.
+//! Bounded so the signal tracks *current* pressure: old completions age
+//! out instead of diluting a breach (or a recovery) forever.
+
+use std::collections::VecDeque;
+
+use super::stats::percentile;
+
+/// Fixed-capacity rolling window of f64 samples.
+#[derive(Debug, Clone)]
+pub struct RollingWindow {
+    cap: usize,
+    buf: VecDeque<f64>,
+}
+
+impl RollingWindow {
+    pub fn new(cap: usize) -> Self {
+        assert!(cap >= 1, "window capacity must be >= 1");
+        RollingWindow { cap, buf: VecDeque::with_capacity(cap) }
+    }
+
+    /// Append a sample, evicting the oldest once full.
+    pub fn push(&mut self, v: f64) {
+        if self.buf.len() == self.cap {
+            self.buf.pop_front();
+        }
+        self.buf.push_back(v);
+    }
+
+    pub fn len(&self) -> usize {
+        self.buf.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.buf.is_empty()
+    }
+
+    /// Percentile (q in [0, 1]) over the window; 0.0 when empty — an
+    /// empty window never reads as a breach, so cold shards admit.
+    pub fn percentile(&self, q: f64) -> f64 {
+        let xs: Vec<f64> = self.buf.iter().copied().collect();
+        percentile(&xs, q)
+    }
+
+    pub fn mean(&self) -> f64 {
+        if self.buf.is_empty() {
+            return 0.0;
+        }
+        self.buf.iter().sum::<f64>() / self.buf.len() as f64
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn empty_window_reads_zero() {
+        let w = RollingWindow::new(4);
+        assert!(w.is_empty());
+        assert_eq!(w.percentile(0.99), 0.0);
+        assert_eq!(w.mean(), 0.0);
+    }
+
+    #[test]
+    fn pushes_and_percentiles() {
+        let mut w = RollingWindow::new(8);
+        for v in [1.0, 2.0, 3.0, 4.0] {
+            w.push(v);
+        }
+        assert_eq!(w.len(), 4);
+        assert_eq!(w.percentile(0.0), 1.0);
+        assert_eq!(w.percentile(1.0), 4.0);
+        assert_eq!(w.mean(), 2.5);
+    }
+
+    #[test]
+    fn evicts_oldest_at_capacity() {
+        let mut w = RollingWindow::new(3);
+        for v in [10.0, 20.0, 30.0, 40.0] {
+            w.push(v);
+        }
+        assert_eq!(w.len(), 3);
+        // 10.0 aged out: the window now spans [20, 40]
+        assert_eq!(w.percentile(0.0), 20.0);
+        assert_eq!(w.percentile(1.0), 40.0);
+    }
+
+    #[test]
+    fn recovery_is_visible_once_breach_ages_out() {
+        let mut w = RollingWindow::new(4);
+        w.push(100.0); // one slow completion
+        for _ in 0..4 {
+            w.push(1.0);
+        }
+        // the breach sample has been evicted; p99 reflects current load
+        assert_eq!(w.percentile(0.99), 1.0);
+    }
+}
