@@ -38,6 +38,23 @@ const TOK_RATIO_BAND: (f64, f64) = (0.85, 1.15);
 /// whole-prompt prefill under the heavy-tail sweep (full-run win ~1.7x).
 const ITL_MAX_RATIO: f64 = 0.9;
 
+/// Predictive admission may shed at most this factor of the trailing
+/// gate's shed count at the same workload (full runs pin `<=`; smoke
+/// samples get slack — and the comparison only applies when the
+/// trailing gate shed at all, since the smoke burst is too short for a
+/// trailing window to trip, which is exactly its blind spot).
+const PRED_SHED_MAX_RATIO: f64 = 1.25;
+
+/// Absolute slack on the shed comparison: on a slow smoke runner both
+/// gates shed a handful of requests and the ratio is dominated by
+/// quantization noise.
+const PRED_SHED_SLACK: f64 = 8.0;
+
+/// Interactive-priority p99 under the mixed 3x-overload sweep may
+/// exceed the configured target by at most this factor (full-run
+/// acceptance is `<= target`; smoke tails are noisy).
+const PRED_INT_P99_MAX_RATIO: f64 = 1.5;
+
 fn f(row: &Value, key: &str) -> f64 {
     row.get(key).and_then(Value::as_f64).unwrap_or(f64::NAN)
 }
@@ -110,6 +127,59 @@ fn check_slo_rows(rows: &[Value], failures: &mut Vec<String>) {
     }
 }
 
+fn check_predictive_rows(rows: &[Value], failures: &mut Vec<String>) {
+    // accounting + interactive protection hold for every predictive row
+    for r in rows.iter().filter(|r| s(r, "policy") == "predict") {
+        if f(r, "shed_interactive") != 0.0 {
+            failures.push(format!(
+                "predictive_rows: predict @ mix {} shed {} interactive requests — \
+                 interactive work must never shed while batch work is sheddable",
+                f(r, "interactive_frac"),
+                f(r, "shed_interactive"),
+            ));
+        }
+        let accounted = f(r, "served") + f(r, "shed");
+        if accounted != f(r, "requests") {
+            failures.push(format!(
+                "predictive_rows: predict @ mix {}: served {} + shed {} != offered {}",
+                f(r, "interactive_frac"),
+                f(r, "served"),
+                f(r, "shed"),
+                f(r, "requests"),
+            ));
+        }
+    }
+    // the mixed-priority pair: predictive must not out-shed the trailing
+    // gate (when trailing shed at all) and must hold the interactive tier
+    let pick = |policy: &str| {
+        rows.iter()
+            .find(|r| s(r, "policy") == policy && f(r, "interactive_frac") < 0.99)
+    };
+    let (Some(trail), Some(pred)) = (pick("shed-p99"), pick("predict")) else {
+        failures.push("predictive_rows: missing mixed-priority shed-p99/predict pair".into());
+        return;
+    };
+    let trail_shed = f(trail, "shed");
+    let pred_shed = f(pred, "shed");
+    if trail_shed > 0.0
+        && (pred_shed.is_nan() || pred_shed > PRED_SHED_MAX_RATIO * trail_shed + PRED_SHED_SLACK)
+    {
+        failures.push(format!(
+            "predictive_rows: predictive shed {pred_shed} > {PRED_SHED_MAX_RATIO}x \
+             trailing shed {trail_shed} (+{PRED_SHED_SLACK}) — prediction is over-shedding"
+        ));
+    }
+    let target = f(pred, "target_ms");
+    let int_p99 = f(pred, "interactive_p99_ms");
+    if int_p99.is_nan() || target.is_nan() || int_p99 > PRED_INT_P99_MAX_RATIO * target {
+        failures.push(format!(
+            "predictive_rows: interactive p99 {int_p99} ms > {PRED_INT_P99_MAX_RATIO}x \
+             target {target} ms under the 3x overload — the predictive gate lost the \
+             interactive tier"
+        ));
+    }
+}
+
 fn main() -> ExitCode {
     let manifest = std::path::Path::new(env!("CARGO_MANIFEST_DIR"));
     // `cargo bench` invokes every bench binary with a `--bench` flag;
@@ -146,9 +216,14 @@ fn main() -> ExitCode {
         Some(rows) => check_slo_rows(rows, &mut failures),
         None => failures.push("missing `slo_rows` array".to_string()),
     }
+    match doc.get("predictive_rows").and_then(Value::as_arr) {
+        Some(rows) => check_predictive_rows(rows, &mut failures),
+        None => failures.push("missing `predictive_rows` array".to_string()),
+    }
     if failures.is_empty() {
         println!(
-            "check_batching: {} OK (static-vs-continuous + chunked/admission gates hold)",
+            "check_batching: {} OK (static-vs-continuous + chunked/admission + \
+             predictive-admission gates hold)",
             path.display()
         );
         ExitCode::SUCCESS

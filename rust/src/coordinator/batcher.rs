@@ -18,11 +18,19 @@ use std::time::{Duration, Instant};
 
 use super::request::Request;
 
-/// What the serving engine does with new load while a shard is breaching
-/// its latency target. Decided at the dispatcher's join boundary against
-/// a rolling per-shard window of completed-request latencies; the gate
-/// trips below the target (detection-lag margin) and idle shards always
-/// admit (recovery probe) — see `coordinator::server`.
+/// What the serving engine does with new load while a shard is (or is
+/// predicted to be) breaching its latency target. Decided at the
+/// dispatcher's join boundary — see `coordinator::server`.
+///
+/// The trailing policies (`SheddingP99`, `Priority`) read a rolling
+/// per-shard window of *completed* latencies: the gate trips below the
+/// target (detection-lag margin), idle shards always admit (recovery
+/// probe), and windows with no recent completions age out so a
+/// full-shed interval cannot freeze the verdict. `Predictive` gates on
+/// the *future* instead: the candidate's completion time predicted from
+/// the shard's in-flight token backlog and the calibrated per-token
+/// cost (`coordinator::cost::CostEstimator`), so the shed decision
+/// lands during an arrival ramp rather than a window after it.
 #[derive(Debug, Clone, Copy, PartialEq, Default)]
 pub enum AdmissionPolicy {
     /// admit everything (the pre-SLO behavior; one burst can blow p99
@@ -37,6 +45,14 @@ pub enum AdmissionPolicy {
     /// low-priority queue and only reach a slot when no normal-priority
     /// request is waiting
     Priority { target_ms: f64 },
+    /// shed batch-priority requests whose *predicted* completion time
+    /// (backlog x calibrated per-token cost + chunked-prefill
+    /// serialization) would breach `target_ms` — the gate trips at half
+    /// the target to absorb the estimate's full-batch optimism, see
+    /// `coordinator::server`. Interactive requests are never shed: they
+    /// ride the normal tier ahead of all parked batch work, which
+    /// absorbs the shed instead
+    Predictive { target_ms: f64 },
 }
 
 impl AdmissionPolicy {
@@ -45,6 +61,7 @@ impl AdmissionPolicy {
             AdmissionPolicy::Open => "open",
             AdmissionPolicy::SheddingP99 { .. } => "shed-p99",
             AdmissionPolicy::Priority { .. } => "priority",
+            AdmissionPolicy::Predictive { .. } => "predict",
         }
     }
 
@@ -53,7 +70,8 @@ impl AdmissionPolicy {
         match self {
             AdmissionPolicy::Open => None,
             AdmissionPolicy::SheddingP99 { target_ms }
-            | AdmissionPolicy::Priority { target_ms } => Some(target_ms),
+            | AdmissionPolicy::Priority { target_ms }
+            | AdmissionPolicy::Predictive { target_ms } => Some(target_ms),
         }
     }
 }
@@ -307,6 +325,9 @@ mod tests {
         let prio = AdmissionPolicy::Priority { target_ms: 10.0 };
         assert_eq!(prio.name(), "priority");
         assert_eq!(prio.target_ms(), Some(10.0));
+        let pred = AdmissionPolicy::Predictive { target_ms: 40.0 };
+        assert_eq!(pred.name(), "predict");
+        assert_eq!(pred.target_ms(), Some(40.0));
     }
 
     #[test]

@@ -1,0 +1,174 @@
+//! Calibrated per-token cost model for *predictive* admission.
+//!
+//! The trailing SLO gate (`metrics::RollingWindow` over completed
+//! latencies) only learns about an overload after slow completions land;
+//! during an arrival ramp it sheds after the breach instead of before
+//! it. The [`CostEstimator`] closes that loop: fitted from the same
+//! calibrated knobs the sim backend burns ([`SimCost`]) — or from the
+//! measured `BENCH_hotpath.json` PJRT profile — it converts a shard's
+//! in-flight token backlog into a *predicted completion time* for a
+//! candidate request:
+//!
+//! ```text
+//! t_pred = (backlog_prefill + prompt_len)  * prefill_s_per_token
+//!        + (backlog_decode  + decode_len)  * decode_s_per_token
+//!        + chunk_serialization(prompt_len, prefill_chunk)
+//! ```
+//!
+//! where `decode_s_per_token` amortizes the fused step launch across the
+//! compiled batch (a step generates up to `batch` tokens for one launch),
+//! and the serialization term charges one interleaved decode-step launch
+//! per extra prefill chunk — the price chunked prefill pays for bounding
+//! its neighbors' stalls. The dispatcher gates on `t_pred` *at arrival*,
+//! so the shed decision lands during the ramp, not a window later.
+
+use std::path::Path;
+
+use anyhow::{Context, Result};
+
+use crate::runtime::SimCost;
+
+/// Per-token completion-time model for one worker shard.
+#[derive(Debug, Clone, Copy)]
+pub struct CostEstimator {
+    /// seconds to ingest one prompt token
+    prefill_s_per_token: f64,
+    /// effective seconds per generated token with the fused-step launch
+    /// amortized across the compiled batch
+    decode_s_per_token: f64,
+    /// fixed fused-step launch cost (seconds) — what an extra prefill
+    /// chunk boundary serializes behind
+    step_s: f64,
+    /// compiled graph batch size the decode amortization assumes
+    batch: usize,
+}
+
+impl CostEstimator {
+    /// Fit from the sim backend's calibrated cost knobs (the same model
+    /// `SimModel` spin-waits, so sim-backend predictions are tautologically
+    /// calibrated — the interesting fit is `from_hotpath_profile`).
+    pub fn from_sim_cost(cost: &SimCost, batch: usize) -> Self {
+        let b = batch.max(1);
+        CostEstimator {
+            prefill_s_per_token: cost.prefill_us_per_token * 1e-6,
+            decode_s_per_token: cost.decode_us_per_token(b) * 1e-6,
+            step_s: cost.decode_step_us * 1e-6,
+            batch: b,
+        }
+    }
+
+    /// Fit from a `BENCH_hotpath.json` profile (either the row array
+    /// `perf_hotpath` writes — fitted via `SimCost::fit_hotpath` — or an
+    /// explicit cost-knob object). This is the PJRT path: measure step
+    /// times once, then gate real serving on the measured costs.
+    pub fn from_hotpath_profile(path: &Path, batch: usize) -> Result<Self> {
+        let cost = SimCost::load_profile(path)
+            .with_context(|| format!("fit cost estimator from {}", path.display()))?;
+        Ok(Self::from_sim_cost(&cost, batch))
+    }
+
+    /// Compiled batch size the decode amortization assumes.
+    pub fn batch(&self) -> usize {
+        self.batch
+    }
+
+    /// Serialization cost (seconds) chunked prefill adds for a prompt:
+    /// each chunk boundary after the first waits behind one fused decode
+    /// step before the next chunk is paid. `prefill_chunk == 0` is
+    /// whole-prompt (one stall, no extra boundaries).
+    pub fn chunk_serialization_s(&self, prompt_len: usize, prefill_chunk: usize) -> f64 {
+        if prefill_chunk == 0 || prompt_len == 0 {
+            return 0.0;
+        }
+        let chunks = prompt_len.div_ceil(prefill_chunk);
+        (chunks.saturating_sub(1)) as f64 * self.step_s
+    }
+
+    /// Predicted completion time (seconds) for a candidate with
+    /// `prompt_len` prompt tokens and `decode_len` budgeted output
+    /// tokens joining a shard whose in-flight backlog (excluding the
+    /// candidate) is `(backlog_prefill, backlog_decode)` tokens.
+    pub fn predict_s(
+        &self,
+        backlog: (usize, usize),
+        prompt_len: usize,
+        decode_len: usize,
+        prefill_chunk: usize,
+    ) -> f64 {
+        let (bp, bd) = backlog;
+        (bp + prompt_len) as f64 * self.prefill_s_per_token
+            + (bd + decode_len) as f64 * self.decode_s_per_token
+            + self.chunk_serialization_s(prompt_len, prefill_chunk)
+    }
+
+    /// [`CostEstimator::predict_s`] in milliseconds — the unit the
+    /// admission targets are configured in.
+    pub fn predict_ms(
+        &self,
+        backlog: (usize, usize),
+        prompt_len: usize,
+        decode_len: usize,
+        prefill_chunk: usize,
+    ) -> f64 {
+        self.predict_s(backlog, prompt_len, decode_len, prefill_chunk) * 1e3
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn est() -> CostEstimator {
+        // prefill 2 us/tok, step 250 us, slot 25 us, batch 8
+        CostEstimator::from_sim_cost(&SimCost::default(), 8)
+    }
+
+    #[test]
+    fn decode_rate_amortizes_the_step_launch() {
+        let e = est();
+        // 250/8 + 25 = 56.25 us/token
+        assert!((e.decode_s_per_token - 56.25e-6).abs() < 1e-12);
+        assert!((e.prefill_s_per_token - 2e-6).abs() < 1e-15);
+        assert_eq!(e.batch(), 8);
+    }
+
+    #[test]
+    fn empty_backlog_costs_only_the_candidate() {
+        let e = est();
+        let t = e.predict_s((0, 0), 16, 8, 0);
+        assert!((t - (16.0 * 2e-6 + 8.0 * 56.25e-6)).abs() < 1e-12, "{t}");
+    }
+
+    #[test]
+    fn prediction_grows_with_backlog() {
+        let e = est();
+        let idle = e.predict_ms((0, 0), 8, 4, 0);
+        let busy = e.predict_ms((800, 400), 8, 4, 0);
+        assert!(busy > idle);
+        // backlog contribution is linear in tokens
+        let busier = e.predict_ms((1600, 800), 8, 4, 0);
+        assert!((busier - idle) > 1.99 * (busy - idle) - 1e-9);
+    }
+
+    #[test]
+    fn chunk_serialization_charges_extra_boundaries_only() {
+        let e = est();
+        assert_eq!(e.chunk_serialization_s(120, 0), 0.0, "whole-prompt");
+        assert_eq!(e.chunk_serialization_s(0, 16), 0.0, "empty prompt");
+        // 120 tokens at chunk 16 -> 8 chunks -> 7 extra boundaries
+        assert!((e.chunk_serialization_s(120, 16) - 7.0 * 250e-6).abs() < 1e-12);
+        // one chunk covers the whole prompt -> no serialization
+        assert_eq!(e.chunk_serialization_s(10, 16), 0.0);
+        // and the prediction includes it
+        let whole = e.predict_s((0, 0), 120, 4, 0);
+        let chunked = e.predict_s((0, 0), 120, 4, 16);
+        assert!((chunked - whole - 7.0 * 250e-6).abs() < 1e-12);
+    }
+
+    #[test]
+    fn zero_batch_is_clamped() {
+        let e = CostEstimator::from_sim_cost(&SimCost::default(), 0);
+        assert_eq!(e.batch(), 1);
+        assert!(e.predict_s((0, 0), 1, 1, 0).is_finite());
+    }
+}

@@ -6,7 +6,13 @@
 //!
 //!   router     — admission rewrite (BOS/truncate) + least-loaded shard
 //!                choice, where load is in-flight *tokens*, not request
-//!                count; shed requests refund their charge (`release`)
+//!                count, split per shard into (prefill, decode) backlog
+//!                for the predictive gate; shed requests refund their
+//!                charge (`release`) exactly once
+//!   cost       — [`CostEstimator`]: the calibrated per-token completion
+//!                -time model predictive admission prices backlog with,
+//!                fitted from `SimCost` (sim) or `BENCH_hotpath.json`
+//!                (PJRT)
 //!   batcher    — two-tier admission queue for both [`SchedulerMode`]s
 //!                (static deadline-formed batches, or per-shard
 //!                step-boundary draining) and the [`AdmissionPolicy`]
@@ -41,13 +47,38 @@
 //! rows exactly); only timing moves: joiners trade a later first token
 //! for their neighbors' bounded inter-token gaps.
 //!
-//! **SLO-aware admission** (`ServerConfig::admission`): every completion
-//! feeds a rolling per-shard latency window; when a shard's window p99
-//! breaches the configured target, `SheddingP99` refuses new load routed
-//! there (one terminal `ServeEvent::Shed` per request, router charge
-//! refunded) and `Priority` parks it in the low-priority queue tier
-//! behind all normal traffic. `Open` preserves the measure-only
-//! behavior.
+//! **SLO-aware admission** (`ServerConfig::admission`): the trailing
+//! policies feed every completion into a rolling per-shard latency
+//! window — when its p99 breaches the configured target, `SheddingP99`
+//! refuses new load routed there (one terminal `ServeEvent::Shed` per
+//! request, router charge refunded) and `Priority` parks it in the
+//! low-priority queue tier. Window samples age out past a staleness
+//! horizon, so a sustained full-shed interval (zero fresh completions)
+//! re-evaluates instead of freezing its last verdict. `Open` preserves
+//! the measure-only behavior.
+//!
+//! **Predictive admission** (`AdmissionPolicy::Predictive`): the
+//! trailing window only trips *after* slow completions land; during an
+//! arrival ramp that is a window too late. The predictive gate instead
+//! prices each candidate at arrival:
+//!
+//! ```text
+//! t_pred = (backlog_prefill + prompt) * prefill_s/token
+//!        + (backlog_decode + decode_budget) * decode_s/token
+//!        + chunk_serialization(prompt, prefill_chunk)
+//! ```
+//!
+//! with per-token rates calibrated from the sim cost model or the
+//! measured PJRT hotpath profile (`cost::CostEstimator`), and sheds a
+//! batch-priority candidate whose predicted completion would breach the
+//! target — before the window ever sees a slow completion.
+//!
+//! **Client priority** ([`Priority`]): every request carries an
+//! `Interactive` | `Batch` hint. Batch work rides the low queue tier
+//! (interactive traffic preempts it at every drain) and sheds first;
+//! interactive requests are never shed while batch work remains
+//! sheddable. Queueing delay is reported separately from decode cadence
+//! (`Response::queued_s` vs emission-stamped inter-token gaps).
 //!
 //! Static mode survives as the ablation baseline: run-to-completion
 //! batches, exactly the pre-refactor behavior. Continuous mode retires
@@ -59,6 +90,7 @@
 
 mod batcher;
 mod bitwidth;
+mod cost;
 mod kv_cache;
 mod request;
 mod router;
@@ -68,12 +100,13 @@ mod worker;
 pub mod workload;
 
 pub use batcher::{AdmissionPolicy, Batch, BatchPolicy, Batcher, SchedulerMode};
+pub use cost::CostEstimator;
 pub use bitwidth::{
     quant_mse, search_bitwidths, size_reduction, BitwidthChoice, LayerInfo, SearchPolicy,
     BIT_CHOICES,
 };
 pub use kv_cache::{KvCache, PrefillPage};
-pub use request::{Request, RequestId, Response, ServeEvent};
+pub use request::{Priority, Request, RequestId, Response, ServeEvent};
 pub use router::{request_cost, RouteDecision, Router};
 pub use scale_sync::{ScaleSync, SYNC_WIRE_BITS};
 pub use server::{Server, ServerConfig, ServerReport};

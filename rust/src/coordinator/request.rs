@@ -4,6 +4,36 @@ use std::time::Instant;
 
 pub type RequestId = u64;
 
+/// Client priority hint, carried first-class on every request.
+///
+/// `Interactive` traffic is latency-sensitive: it rides the normal
+/// queue tier and the admission gate never sheds it while batch work
+/// remains sheddable. `Batch` traffic is throughput work: it parks in
+/// the low queue tier (drained only when no interactive request waits)
+/// and is shed *first* when the predictive gate sees a breach coming.
+/// This replaces the PR 4 behavior where the low tier was derived
+/// purely from breach timing — with one legacy exception: under
+/// `AdmissionPolicy::Priority`, a tripped window still demotes *every*
+/// breach-time arrival (interactive included) to the low tier; that
+/// demotion is that policy's entire mechanism.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Default)]
+pub enum Priority {
+    /// latency-sensitive; never shed while batch work is sheddable
+    #[default]
+    Interactive,
+    /// throughput work; parks behind interactive traffic, sheds first
+    Batch,
+}
+
+impl Priority {
+    pub fn name(self) -> &'static str {
+        match self {
+            Priority::Interactive => "interactive",
+            Priority::Batch => "batch",
+        }
+    }
+}
+
 /// One generation request.
 #[derive(Debug, Clone)]
 pub struct Request {
@@ -11,6 +41,8 @@ pub struct Request {
     /// prompt token ids (BOS-prefixed by the router if absent)
     pub prompt: Vec<i32>,
     pub max_new_tokens: usize,
+    /// client priority hint (admission tier + shed order)
+    pub priority: Priority,
     /// when the request entered the system; the open-loop dispatcher
     /// re-stamps this at injection time so TTFT/latency measure real
     /// queueing from arrival, not workload-generation time
@@ -19,7 +51,20 @@ pub struct Request {
 
 impl Request {
     pub fn new(id: RequestId, prompt: Vec<i32>, max_new_tokens: usize) -> Self {
-        Request { id, prompt, max_new_tokens, arrival: Instant::now() }
+        Request {
+            id,
+            prompt,
+            max_new_tokens,
+            priority: Priority::Interactive,
+            arrival: Instant::now(),
+        }
+    }
+
+    /// Builder-style priority override (`Request::new` defaults to
+    /// `Interactive`, the pre-priority behavior).
+    pub fn with_priority(mut self, priority: Priority) -> Self {
+        self.priority = priority;
+        self
     }
 }
 
@@ -30,10 +75,16 @@ pub struct Response {
     pub tokens: Vec<i32>,
     /// prompt length actually used (after truncation)
     pub prompt_len: usize,
+    /// priority the request was served under
+    pub priority: Priority,
     /// end-to-end latency from arrival
     pub latency_s: f64,
     /// time to first token
     pub ttft_s: f64,
+    /// time spent queued before the request was admitted into a worker
+    /// slot — the park/batch-formation interval, reported separately so
+    /// inter-token latency reflects decode cadence only
+    pub queued_s: f64,
     /// absolute instant the first token was emitted (jitter-free TTFT
     /// ordering for the scheduler invariant tests)
     pub first_token_at: Instant,
@@ -44,10 +95,13 @@ pub struct Response {
 /// One streamed serving event. Workers emit a `Token` per generated
 /// token as it happens (decode-step granularity) and a final `Done`
 /// carrying the complete response; per-sender channel order guarantees
-/// every `Token` of a request precedes its `Done`. `Shed` is the other
-/// terminal event: the dispatcher's admission gate refused the request
-/// (SLO breach under `AdmissionPolicy::SheddingP99`) — a shed request
-/// emits exactly one `Shed` and never a `Token` or `Done`.
+/// every `Token` of a request precedes its `Done`. Tokens carry their
+/// *emission* instant (`at`): inter-token gaps are measured between
+/// emission stamps, not dispatcher receive times, so a dispatcher busy
+/// parking or shedding arrivals cannot inflate the decode-cadence
+/// signal. `Shed` is the other terminal event: the dispatcher's
+/// admission gate refused the request — a shed request emits exactly
+/// one `Shed` and never a `Token` or `Done`.
 #[derive(Debug, Clone)]
 pub enum ServeEvent {
     Token {
@@ -55,11 +109,14 @@ pub enum ServeEvent {
         token: i32,
         /// true for the prefill-produced first token
         first: bool,
+        /// instant the worker emitted the token
+        at: Instant,
     },
     Done(Response),
     Shed {
         id: RequestId,
-        /// shard whose latency window triggered the shed
+        /// shard whose gate (latency window or predicted backlog)
+        /// triggered the shed
         shard: usize,
     },
 }
@@ -73,14 +130,26 @@ mod tests {
         let r = Request::new(1, vec![1, 2, 3], 16);
         assert!(r.arrival.elapsed().as_secs() < 1);
         assert_eq!(r.max_new_tokens, 16);
+        assert_eq!(r.priority, Priority::Interactive, "default priority");
     }
 
     #[test]
-    fn serve_event_carries_first_flag() {
-        let e = ServeEvent::Token { id: 4, token: 9, first: true };
+    fn priority_builder_and_names() {
+        let r = Request::new(2, vec![1], 4).with_priority(Priority::Batch);
+        assert_eq!(r.priority, Priority::Batch);
+        assert_eq!(Priority::default(), Priority::Interactive);
+        assert_eq!(Priority::Interactive.name(), "interactive");
+        assert_eq!(Priority::Batch.name(), "batch");
+    }
+
+    #[test]
+    fn serve_event_carries_first_flag_and_stamp() {
+        let before = Instant::now();
+        let e = ServeEvent::Token { id: 4, token: 9, first: true, at: Instant::now() };
         match e {
-            ServeEvent::Token { id, token, first } => {
+            ServeEvent::Token { id, token, first, at } => {
                 assert_eq!((id, token, first), (4, 9, true));
+                assert!(at >= before);
             }
             _ => panic!("wrong arm"),
         }

@@ -26,16 +26,31 @@ pub fn request_cost(req: &Request) -> usize {
     req.prompt.len() + req.max_new_tokens
 }
 
+/// One request's in-flight charge: where it routed and how many prompt
+/// (prefill) vs budgeted output (decode) tokens it holds. The split is
+/// what the predictive admission gate prices: prefill and decode tokens
+/// cost different calibrated rates (`coordinator::cost`).
+#[derive(Debug, Clone, Copy)]
+struct Charge {
+    shard: usize,
+    prefill: usize,
+    decode: usize,
+}
+
 /// The router tracks in-flight token load per shard and a session table.
 #[derive(Debug)]
 pub struct Router {
     n_shards: usize,
     max_prompt: usize,
-    /// in-flight token estimate per shard
+    /// in-flight token estimate per shard (prefill + decode)
     load: Vec<usize>,
-    /// request -> (shard, charged cost); sessions stay on their shard
-    /// for KV affinity
-    sessions: BTreeMap<RequestId, (usize, usize)>,
+    /// in-flight prompt tokens per shard (not yet known to be ingested —
+    /// an upper bound on remaining prefill work)
+    prefill_load: Vec<usize>,
+    /// in-flight decode-budget tokens per shard
+    decode_load: Vec<usize>,
+    /// request -> charge; sessions stay on their shard for KV affinity
+    sessions: BTreeMap<RequestId, Charge>,
     next_id: RequestId,
 }
 
@@ -46,6 +61,8 @@ impl Router {
             n_shards,
             max_prompt,
             load: vec![0; n_shards],
+            prefill_load: vec![0; n_shards],
+            decode_load: vec![0; n_shards],
             sessions: BTreeMap::new(),
             next_id: 1,
         }
@@ -80,14 +97,21 @@ impl Router {
             .map(|(i, _)| i)
             .unwrap();
         self.load[shard] += cost;
-        self.sessions.insert(req.id, (shard, cost));
+        self.prefill_load[shard] += req.prompt.len();
+        self.decode_load[shard] += req.max_new_tokens;
+        self.sessions.insert(
+            req.id,
+            Charge { shard, prefill: req.prompt.len(), decode: req.max_new_tokens },
+        );
         (req, RouteDecision { shard, cost })
     }
 
     /// Mark a request complete, releasing its token charge.
     pub fn complete(&mut self, id: RequestId) {
-        if let Some((shard, cost)) = self.sessions.remove(&id) {
-            self.load[shard] = self.load[shard].saturating_sub(cost);
+        if let Some(c) = self.sessions.remove(&id) {
+            self.load[c.shard] = self.load[c.shard].saturating_sub(c.prefill + c.decode);
+            self.prefill_load[c.shard] = self.prefill_load[c.shard].saturating_sub(c.prefill);
+            self.decode_load[c.shard] = self.decode_load[c.shard].saturating_sub(c.decode);
         }
     }
 
@@ -100,12 +124,26 @@ impl Router {
     }
 
     pub fn shard_of(&self, id: RequestId) -> Option<usize> {
-        self.sessions.get(&id).map(|(shard, _)| *shard)
+        self.sessions.get(&id).map(|c| c.shard)
     }
 
     /// Per-shard in-flight token load.
     pub fn load(&self) -> &[usize] {
         &self.load
+    }
+
+    /// One shard's in-flight token backlog, split into (prefill, decode)
+    /// tokens — the quantity the predictive admission gate prices with
+    /// the calibrated per-token costs.
+    pub fn backlog(&self, shard: usize) -> (usize, usize) {
+        (self.prefill_load[shard], self.decode_load[shard])
+    }
+
+    /// Total in-flight (prefill, decode) backlog across all shards
+    /// (static mode dispatches round-robin from one global queue, so its
+    /// gate prices the system-wide backlog).
+    pub fn backlog_total(&self) -> (usize, usize) {
+        (self.prefill_load.iter().sum(), self.decode_load.iter().sum())
     }
 
     pub fn in_flight(&self) -> usize {
@@ -189,6 +227,27 @@ mod tests {
         // the next admission sees the refunded shard as free again
         let (_, d2) = r.admit(req(2, 4));
         assert_eq!(d2.shard, 0);
+    }
+
+    #[test]
+    fn backlog_splits_prefill_and_decode_tokens() {
+        let mut r = Router::new(2, 64);
+        // shard 0: prompt 4 (+BOS = 5), decode 4
+        let (_, d1) = r.admit(req(1, 4));
+        assert_eq!(d1.shard, 0);
+        assert_eq!(r.backlog(0), (5, 4));
+        assert_eq!(r.backlog(1), (0, 0));
+        let (_, d2) = r.admit(req(2, 10));
+        assert_eq!(d2.shard, 1);
+        assert_eq!(r.backlog(1), (11, 4));
+        assert_eq!(r.backlog_total(), (16, 8));
+        // load stays the sum of the split
+        assert_eq!(r.load()[0], 5 + 4);
+        r.complete(1);
+        assert_eq!(r.backlog(0), (0, 0));
+        assert_eq!(r.backlog_total(), (11, 4));
+        r.release(2);
+        assert_eq!(r.backlog_total(), (0, 0));
     }
 
     #[test]

@@ -18,15 +18,20 @@
 //! Scheduler selection is [`SchedulerMode`] on the config; `Static`
 //! preserves the pre-refactor run-to-completion behavior exactly.
 //!
-//! The dispatcher is also where SLOs are *enforced*, not just measured:
-//! every completion feeds a rolling per-shard latency window
-//! ([`SloGate`]), and the configured [`AdmissionPolicy`] consults the
-//! routed shard's window at the join boundary — shedding new load
-//! (exactly one terminal [`ServeEvent::Shed`], charge refunded to the
-//! router) or parking it in the low-priority queue tier until the
-//! breach clears.
+//! The dispatcher is also where SLOs are *enforced*, not just measured
+//! ([`SloGate`]): the trailing policies feed every completion into a
+//! rolling per-shard latency window (aged by [`STALE_AFTER_TARGETS`] so
+//! a full-shed interval cannot freeze the verdict), while
+//! [`AdmissionPolicy::Predictive`] prices each candidate's completion
+//! time from the routed shard's in-flight token backlog and the
+//! calibrated [`CostEstimator`] — shedding *before* the window would
+//! ever see a slow completion. Shed requests get exactly one terminal
+//! [`ServeEvent::Shed`] with their router charge refunded; batch-
+//! priority load rides the low queue tier, which interactive traffic
+//! preempts.
 
-use std::collections::{HashMap, VecDeque};
+use std::collections::{HashMap, HashSet, VecDeque};
+use std::path::PathBuf;
 use std::sync::mpsc::{channel, Receiver, RecvTimeoutError, Sender, TryRecvError};
 use std::sync::Arc;
 use std::thread::JoinHandle;
@@ -40,7 +45,8 @@ use crate::runtime::{Registry, SimCost, SimModel};
 use crate::util::pool;
 
 use super::batcher::{AdmissionPolicy, Batch, BatchPolicy, Batcher, SchedulerMode};
-use super::request::{Request, RequestId, Response, ServeEvent};
+use super::cost::CostEstimator;
+use super::request::{Priority, Request, RequestId, Response, ServeEvent};
 use super::router::Router;
 use super::worker::{Backend, Worker, WorkerStats};
 use super::workload::Arrival;
@@ -50,13 +56,33 @@ use super::workload::Arrival;
 /// enough for a usable tail estimate.
 const SLO_WINDOW: usize = 64;
 
-/// The gate trips at this fraction of the configured target. The window
-/// is a *trailing* signal — completion latencies, not the queue — so by
-/// the time served p99 reads at `target/2` the backlog already in
-/// flight is worth roughly the other half. Tripping early absorbs that
-/// detection lag, holding served p99 inside the target itself (pinned
-/// by the batching ablation's SLO sweep).
+/// Both gates trip at this fraction of the configured target, for dual
+/// reasons. Trailing windows are a *lagging* signal — completion
+/// latencies, not the queue — so by the time served p99 reads at
+/// `target/2` the backlog already in flight is worth roughly the other
+/// half; tripping early absorbs that detection lag. The predictive
+/// estimate is an *optimistic* signal — it prices decode at the
+/// full-batch amortized rate and ignores preemption by later
+/// interactive arrivals, which under-predicts by up to ~2x in the
+/// prefill-heavy overload regime — so tripping at half the target
+/// absorbs the calibration optimism. Both margins hold served p99
+/// inside the target itself (pinned by the batching ablation's SLO and
+/// predictive sweeps).
 const SLO_TRIP_FRACTION: f64 = 0.5;
+
+/// Trailing-window staleness horizon, in multiples of the latency
+/// target: a window sample older than `STALE_AFTER_TARGETS x target`
+/// (floored at [`STALE_FLOOR_MS`]) is expired before the gate reads the
+/// window. The window only records *served* completions, so under a
+/// sustained full-shed interval it would otherwise hold its breach-time
+/// samples forever and the gate's verdict would freeze; aging lets a
+/// shard with zero recent completions re-evaluate (an empty window
+/// never breaches), complementing the idle-shard probe.
+const STALE_AFTER_TARGETS: f64 = 8.0;
+
+/// Floor (ms) for the staleness horizon, so aggressive test targets do
+/// not expire the window faster than completions can possibly land.
+const STALE_FLOOR_MS: f64 = 250.0;
 
 /// Server configuration.
 #[derive(Debug, Clone)]
@@ -95,8 +121,9 @@ impl ServerConfig {
 /// Messages from the dispatcher to a worker shard.
 enum ToWorker {
     /// continuous mode: enqueue; the worker admits it at the next step
-    /// boundary (capacity permitting). `true` = low priority (arrived
-    /// during an SLO breach under `AdmissionPolicy::Priority`)
+    /// boundary (capacity permitting). `true` = low queue tier (batch
+    /// client priority, or breach-time arrival under
+    /// `AdmissionPolicy::Priority`)
     Inject(Request, bool),
     /// static mode: run this formed batch to completion
     Batch(Vec<Request>),
@@ -119,17 +146,44 @@ enum Gate {
 /// dispatches formed batches round-robin — the router's shard choice is
 /// bookkeeping only — so the gate collapses to a single global window
 /// there; per-shard windows would read (and starve) the wrong shard.
+///
+/// The `Predictive` policy ignores the windows entirely: it prices the
+/// candidate against the routed shard's in-flight token backlog with
+/// the calibrated [`CostEstimator`], so its signal can neither trail
+/// nor go stale (no backlog, no breach).
 struct SloGate {
     policy: AdmissionPolicy,
     windows: Vec<RollingWindow>,
+    estimator: Option<CostEstimator>,
+    /// server's prefill chunk (serialization term of the prediction)
+    prefill_chunk: usize,
+    /// trailing policies only: samples older than this are expired
+    /// before every read (the stale-window fix)
+    stale_after: Option<Duration>,
 }
 
 impl SloGate {
-    fn new(policy: AdmissionPolicy, shards: usize, global: bool) -> Self {
+    fn new(
+        policy: AdmissionPolicy,
+        shards: usize,
+        global: bool,
+        estimator: Option<CostEstimator>,
+        prefill_chunk: usize,
+    ) -> Self {
         let n = if global { 1 } else { shards };
+        let stale_after = match policy {
+            AdmissionPolicy::SheddingP99 { target_ms }
+            | AdmissionPolicy::Priority { target_ms } => Some(Duration::from_secs_f64(
+                (target_ms * STALE_AFTER_TARGETS).max(STALE_FLOOR_MS) / 1e3,
+            )),
+            _ => None,
+        };
         SloGate {
             policy,
             windows: (0..n).map(|_| RollingWindow::new(SLO_WINDOW)).collect(),
+            estimator,
+            prefill_chunk,
+            stale_after,
         }
     }
 
@@ -147,31 +201,77 @@ impl SloGate {
         self.windows[i].push(latency_s * 1e3);
     }
 
-    /// Gate a request routed to `shard`. An empty window never breaches,
-    /// so cold shards admit. `established` is false when the shard holds
-    /// no other in-flight work — an idle shard always admits (a probe):
+    /// Gate a request routed to `shard`.
+    ///
+    /// Trailing policies: an empty window never breaches, so cold
+    /// shards admit; `established` is false when the shard holds no
+    /// other in-flight work — an idle shard always admits (a probe):
     /// without it, shedding starves the window of fresh completions and
-    /// a breached gate could never observe the recovery.
-    fn decide(&self, shard: usize, established: bool) -> Gate {
-        let breached = |target_ms: f64| {
-            established
-                && self.windows[self.idx(shard)].percentile(0.99)
-                    > SLO_TRIP_FRACTION * target_ms
+    /// a breached gate could never observe the recovery. Stale samples
+    /// are expired before the read so a full-shed interval cannot
+    /// freeze the verdict.
+    ///
+    /// Predictive: `backlog` is the shard's in-flight (prefill, decode)
+    /// token backlog *excluding* the candidate; the gate sheds a
+    /// batch-priority candidate whose predicted completion would breach
+    /// the target. Interactive candidates are never shed — they ride
+    /// the normal tier ahead of parked batch work, which absorbs the
+    /// shed instead.
+    ///
+    /// The queue tier comes from the request's first-class priority:
+    /// batch-priority work parks in the low tier even with a healthy
+    /// gate. One legacy exception: `AdmissionPolicy::Priority` demotes
+    /// *every* breach-time arrival (interactive included) to the low
+    /// tier — that demotion is the policy's entire mechanism.
+    fn decide(
+        &mut self,
+        shard: usize,
+        established: bool,
+        req: &Request,
+        backlog: (usize, usize),
+    ) -> Gate {
+        let i = self.idx(shard);
+        if let Some(age) = self.stale_after {
+            self.windows[i].expire_older_than(age);
+        }
+        let tier = match req.priority {
+            Priority::Interactive => Gate::Admit,
+            Priority::Batch => Gate::Low,
+        };
+        let breached = |w: &RollingWindow, target_ms: f64| {
+            established && w.percentile(0.99) > SLO_TRIP_FRACTION * target_ms
         };
         match self.policy {
-            AdmissionPolicy::Open => Gate::Admit,
+            AdmissionPolicy::Open => tier,
             AdmissionPolicy::SheddingP99 { target_ms } => {
-                if breached(target_ms) {
+                if breached(&self.windows[i], target_ms) {
                     Gate::Shed
                 } else {
-                    Gate::Admit
+                    tier
                 }
             }
             AdmissionPolicy::Priority { target_ms } => {
-                if breached(target_ms) {
+                if breached(&self.windows[i], target_ms) {
                     Gate::Low
                 } else {
-                    Gate::Admit
+                    tier
+                }
+            }
+            AdmissionPolicy::Predictive { target_ms } => {
+                let est = self
+                    .estimator
+                    .as_ref()
+                    .expect("predictive gate requires a cost estimator (checked at start)");
+                let predicted_ms = est.predict_ms(
+                    backlog,
+                    req.prompt.len(),
+                    req.max_new_tokens,
+                    self.prefill_chunk,
+                );
+                if req.priority == Priority::Batch && predicted_ms > SLO_TRIP_FRACTION * target_ms {
+                    Gate::Shed
+                } else {
+                    tier
                 }
             }
         }
@@ -201,11 +301,24 @@ pub struct ServerReport {
     /// requests the admission gate refused (one terminal `Shed` each;
     /// disjoint from `responses`)
     pub shed_ids: Vec<RequestId>,
-    /// requests parked in the low-priority tier at admission
+    /// shed requests that carried `Priority::Interactive` — the
+    /// predictive gate must keep this at zero while batch work remains
+    /// sheddable
+    pub shed_interactive: u64,
+    /// requests parked in the low-priority tier at admission (batch
+    /// priority, or breach-time load under `AdmissionPolicy::Priority`)
     pub deprioritized: u64,
-    /// observed gaps between consecutive streamed tokens of the same
-    /// request (seconds) — the decode-stall signal chunked prefill bounds
+    /// observed gaps between consecutive token *emission* stamps of the
+    /// same request (seconds) — decode cadence only; queueing/park time
+    /// is reported per response as `Response::queued_s`
     pub inter_token_gap_s: Vec<f64>,
+    /// router sessions still holding a token charge at shutdown — a
+    /// shed/complete accounting leak if nonzero (every request must be
+    /// released exactly once)
+    pub router_in_flight: usize,
+    /// in-flight tokens still charged to shards at shutdown (0 when the
+    /// refund/complete path is exact)
+    pub router_inflight_tokens: usize,
 }
 
 impl ServerReport {
@@ -227,9 +340,35 @@ impl ServerReport {
         self.shed_ids.len() as f64 / total as f64
     }
 
-    /// Inter-token (decode-stall) latency percentile (q in [0, 1]).
+    /// Inter-token (decode-stall) latency percentile (q in [0, 1]),
+    /// measured between worker emission stamps — park intervals and
+    /// dispatcher-side queueing never inflate it.
     pub fn itl_percentile(&self, q: f64) -> f64 {
         percentile(&self.inter_token_gap_s, q)
+    }
+
+    /// Queueing-delay percentile (q in [0, 1]) over served requests:
+    /// arrival -> slot admission, the park/batch-formation interval
+    /// reported separately from decode cadence.
+    pub fn queue_delay_percentile(&self, q: f64) -> f64 {
+        let qs: Vec<f64> = self.responses.iter().map(|r| r.queued_s).collect();
+        percentile(&qs, q)
+    }
+
+    /// Served requests carrying `priority`.
+    pub fn served_for(&self, priority: Priority) -> usize {
+        self.responses.iter().filter(|r| r.priority == priority).count()
+    }
+
+    /// End-to-end latency percentile over one priority class only.
+    pub fn latency_percentile_for(&self, priority: Priority, q: f64) -> f64 {
+        let ls: Vec<f64> = self
+            .responses
+            .iter()
+            .filter(|r| r.priority == priority)
+            .map(|r| r.latency_s)
+            .collect();
+        percentile(&ls, q)
     }
 
     pub fn latency_summary(&self) -> Summary {
@@ -264,28 +403,78 @@ pub struct Server {
     events: Receiver<(usize, Result<ServeEvent>)>,
     handles: Vec<JoinHandle<WorkerStats>>,
     shard_weight_bytes: Vec<usize>,
+    /// calibrated per-token cost model for the predictive gate:
+    /// `start_sim` fits it from the sim cost knobs, the PJRT path loads
+    /// the measured `BENCH_hotpath.json` profile
+    estimator: Option<CostEstimator>,
 }
 
 impl Server {
     /// Spin up a PJRT-backed worker pool (compiles executables on first
-    /// use; requires `--features xla` + artifacts).
+    /// use; requires `--features xla` + artifacts). Predictive admission
+    /// additionally needs a measured cost profile: `LLEQ_HOTPATH_PROFILE`
+    /// if set, else `BENCH_hotpath.json` in the working directory or at
+    /// the repo root (where `cargo bench --bench perf_hotpath --features
+    /// xla` writes it). The profile is resolved *before* any executable
+    /// compiles, so a missing file fails fast instead of after minutes
+    /// of compilation.
     pub fn start(registry: &Arc<Registry>, cfg: ServerConfig) -> Result<Self> {
+        let estimator = match cfg.admission {
+            AdmissionPolicy::Predictive { .. } => Some(Self::hotpath_estimator(cfg.batch)?),
+            _ => None,
+        };
         let mut backends = Vec::with_capacity(cfg.shards);
         for _ in 0..cfg.shards {
             let handle = registry.model_handle(&cfg.model, cfg.variant, cfg.batch)?;
             backends.push(Backend::Pjrt(handle));
         }
-        Self::start_with(cfg, backends)
+        let mut server = Self::start_with(cfg, backends)?;
+        server.estimator = estimator;
+        Ok(server)
+    }
+
+    /// Resolve the measured hotpath profile for the PJRT predictive
+    /// gate: the env override wins; otherwise probe the working
+    /// directory and the repo root (`perf_hotpath` writes to the root,
+    /// one level above the crate, so a `cargo run` from `rust/` still
+    /// finds it).
+    fn hotpath_estimator(batch: usize) -> Result<CostEstimator> {
+        let path = match std::env::var("LLEQ_HOTPATH_PROFILE") {
+            Ok(p) => PathBuf::from(p),
+            Err(_) => {
+                let cwd = PathBuf::from("BENCH_hotpath.json");
+                let root = std::path::Path::new(env!("CARGO_MANIFEST_DIR"))
+                    .join("..")
+                    .join("BENCH_hotpath.json");
+                if cwd.exists() {
+                    cwd
+                } else {
+                    root
+                }
+            }
+        };
+        CostEstimator::from_hotpath_profile(&path, batch).map_err(|e| {
+            anyhow!(
+                "predictive admission on the PJRT backend needs a measured cost \
+                 profile: {e}; run `cargo bench --bench perf_hotpath --features xla` \
+                 (writes BENCH_hotpath.json at the repo root) or point \
+                 LLEQ_HOTPATH_PROFILE at a profile JSON"
+            )
+        })
     }
 
     /// Spin up simulated worker shards (offline: scheduler tests and the
     /// batching ablation). `cfg.model` is ignored; the sim graphs are
-    /// gpt2-tiny-shaped with the given wall-clock cost model.
+    /// gpt2-tiny-shaped with the given wall-clock cost model, and the
+    /// predictive gate's estimator is fitted from the same cost knobs.
     pub fn start_sim(cfg: ServerConfig, cost: SimCost) -> Result<Self> {
+        let batch = cfg.batch;
         let backends = (0..cfg.shards)
             .map(|_| Backend::Sim(SimModel::tiny(cfg.variant, cfg.batch, cost)))
             .collect();
-        Self::start_with(cfg, backends)
+        let mut server = Self::start_with(cfg, backends)?;
+        server.estimator = Some(CostEstimator::from_sim_cost(&cost, batch));
+        Ok(server)
     }
 
     fn start_with(cfg: ServerConfig, backends: Vec<Backend>) -> Result<Self> {
@@ -319,6 +508,7 @@ impl Server {
             events: ev_rx,
             handles,
             shard_weight_bytes,
+            estimator: None,
         })
     }
 
@@ -340,6 +530,15 @@ impl Server {
     }
 
     fn run_arrivals(mut self, mut arrivals: Vec<Arrival>) -> Result<ServerReport> {
+        if matches!(self.cfg.admission, AdmissionPolicy::Predictive { .. })
+            && self.estimator.is_none()
+        {
+            bail!(
+                "predictive admission needs a calibrated cost estimator \
+                 (Server::start_sim fits one from SimCost; the PJRT path loads \
+                 BENCH_hotpath.json / LLEQ_HOTPATH_PROFILE)"
+            );
+        }
         arrivals.sort_by(|a, b| a.at_s.partial_cmp(&b.at_s).unwrap());
         let total = arrivals.len();
         let mut pending: VecDeque<Arrival> = arrivals.into();
@@ -353,11 +552,22 @@ impl Server {
             self.cfg.admission,
             self.cfg.shards,
             self.cfg.mode == SchedulerMode::Static,
+            self.estimator,
+            self.cfg.prefill_chunk,
         );
         let mut shed_ids: Vec<RequestId> = Vec::new();
+        // every shed id exactly once, even if a worker ever forwarded a
+        // duplicate terminal event (exactly-once shed accounting)
+        let mut shed_seen: HashSet<RequestId> = HashSet::new();
+        let mut shed_interactive = 0u64;
+        // priority of every dispatched in-flight request, so a worker-
+        // forwarded terminal event can still be attributed to its class
+        let mut priority_of: HashMap<RequestId, Priority> = HashMap::new();
         let mut deprioritized = 0u64;
-        // last streamed-token instant per in-flight request, for the
-        // inter-token (decode-stall) gap distribution
+        // last token *emission* stamp per in-flight request, for the
+        // inter-token (decode-stall) gap distribution; emission stamps,
+        // not dispatcher receive times, so park/shed work in this loop
+        // cannot inflate the decode-cadence signal
         let mut last_token_at: HashMap<RequestId, Instant> = HashMap::new();
         let mut gaps: Vec<f64> = Vec::new();
 
@@ -371,28 +581,51 @@ impl Server {
                 // measure queueing from this instant
                 a.request.arrival = Instant::now();
                 let (req, decision) = self.router.admit(a.request);
-                // other in-flight work beyond this request's own charge?
-                // (static serves round-robin from one global queue, so
-                // its probe condition is system-wide, matching the
-                // gate's global window)
-                let established = match self.cfg.mode {
+                // one mode match feeds the gate both of its signals:
+                // `established` (other in-flight work beyond this
+                // request's own charge — the idle-probe condition) and
+                // the token backlog the predictive gate prices,
+                // excluding the candidate's own freshly-routed charge.
+                // Static serves round-robin from one global queue, so
+                // its probe is system-wide (matching the gate's global
+                // window) and its backlog is the per-shard share of the
+                // global total.
+                let (established, backlog) = match self.cfg.mode {
                     SchedulerMode::Continuous => {
-                        self.router.load()[decision.shard] > decision.cost
+                        let (p, d) = self.router.backlog(decision.shard);
+                        (
+                            self.router.load()[decision.shard] > decision.cost,
+                            (
+                                p.saturating_sub(req.prompt.len()),
+                                d.saturating_sub(req.max_new_tokens),
+                            ),
+                        )
                     }
                     SchedulerMode::Static => {
-                        self.router.load().iter().sum::<usize>() > decision.cost
+                        let (p, d) = self.router.backlog_total();
+                        (
+                            self.router.load().iter().sum::<usize>() > decision.cost,
+                            (
+                                p.saturating_sub(req.prompt.len()) / self.cfg.shards,
+                                d.saturating_sub(req.max_new_tokens) / self.cfg.shards,
+                            ),
+                        )
                     }
                 };
-                let verdict = gate.decide(decision.shard, established);
+                let verdict = gate.decide(decision.shard, established, &req, backlog);
                 if let Gate::Shed = verdict {
                     // terminal: refund the router charge, record exactly
                     // one Shed event, never dispatch
                     self.router.release(req.id);
-                    shed_ids.push(req.id);
+                    if shed_seen.insert(req.id) {
+                        shed_interactive += (req.priority == Priority::Interactive) as u64;
+                        shed_ids.push(req.id);
+                    }
                     continue;
                 }
                 let low = matches!(verdict, Gate::Low);
                 deprioritized += low as u64;
+                priority_of.insert(req.id, req.priority);
                 match self.cfg.mode {
                     SchedulerMode::Continuous => {
                         self.senders[decision.shard]
@@ -434,25 +667,39 @@ impl Server {
             }
             match self.events.recv_timeout(timeout) {
                 Ok((shard, Ok(ev))) => match ev {
-                    ServeEvent::Token { id, first, .. } => {
+                    ServeEvent::Token { id, first, at, .. } => {
                         tokens_streamed += 1;
-                        let now = Instant::now();
                         if first {
-                            last_token_at.insert(id, now);
-                        } else if let Some(prev) = last_token_at.insert(id, now) {
-                            gaps.push(now.duration_since(prev).as_secs_f64());
+                            last_token_at.insert(id, at);
+                        } else if let Some(prev) = last_token_at.insert(id, at) {
+                            gaps.push(at.duration_since(prev).as_secs_f64());
                         }
                     }
                     ServeEvent::Done(r) => {
                         self.router.complete(r.id);
                         gate.observe(shard, r.latency_s);
                         last_token_at.remove(&r.id);
+                        priority_of.remove(&r.id);
                         shard_tokens[shard] += r.tokens.len() as u64;
                         responses.push(r);
                     }
                     // workers never shed; defensive accounting if one
-                    // ever forwards a gate decision
-                    ServeEvent::Shed { id, .. } => shed_ids.push(id),
+                    // ever forwards a gate decision: refund the router
+                    // charge (idempotent), count the terminal event
+                    // exactly once, and attribute it to the request's
+                    // priority class — so a shed decision racing a
+                    // worker join at the step boundary can neither
+                    // double-release nor leak the in-flight charge nor
+                    // undercount an interactive shed
+                    ServeEvent::Shed { id, .. } => {
+                        self.router.release(id);
+                        if shed_seen.insert(id) {
+                            if priority_of.remove(&id) == Some(Priority::Interactive) {
+                                shed_interactive += 1;
+                            }
+                            shed_ids.push(id);
+                        }
+                    }
                 },
                 Ok((_, Err(e))) => return Err(e),
                 Err(RecvTimeoutError::Timeout) => {
@@ -506,8 +753,11 @@ impl Server {
             retires,
             peak_active,
             shed_ids,
+            shed_interactive,
             deprioritized,
             inter_token_gap_s: gaps,
+            router_in_flight: self.router.in_flight(),
+            router_inflight_tokens: self.router.load().iter().sum(),
         })
     }
 

@@ -109,6 +109,9 @@ struct Slot {
     phase: Phase,
     generated: Vec<i32>,
     ttft_s: f64,
+    /// arrival -> slot admission: the queueing/park interval, reported
+    /// separately from decode cadence
+    queued_s: f64,
     first_token_at: Instant,
 }
 
@@ -243,12 +246,17 @@ impl Worker {
         for req in reqs {
             let slot = self.kv.acquire_slot().expect("free capacity checked above");
             let plen = req.prompt.len().min(ctx - 1);
+            // admission into a slot ends the queueing phase: everything
+            // before this instant is park/batch-formation delay, not
+            // serving cadence
+            let queued_s = req.arrival.elapsed().as_secs_f64();
             self.slots[slot] = Some(Slot {
                 req,
                 prompt_len: plen,
                 phase: Phase::Prefilling { next_pos: 0 },
                 generated: Vec::new(),
                 ttft_s: 0.0,
+                queued_s,
                 first_token_at: Instant::now(),
             });
         }
@@ -346,7 +354,12 @@ impl Worker {
                 s.ttft_s = s.req.arrival.elapsed().as_secs_f64();
                 s.first_token_at = Instant::now();
                 s.phase = Phase::Decoding;
-                events.push(ServeEvent::Token { id: s.req.id, token: tok, first: true });
+                events.push(ServeEvent::Token {
+                    id: s.req.id,
+                    token: tok,
+                    first: true,
+                    at: s.first_token_at,
+                });
                 s.req.max_new_tokens <= 1
             };
             self.tokens_out += 1;
@@ -451,7 +464,12 @@ impl Worker {
                 let row = &step_logits[slot * v..(slot + 1) * v];
                 let tok = argmax(row);
                 s.generated.push(tok);
-                events.push(ServeEvent::Token { id: s.req.id, token: tok, first: false });
+                events.push(ServeEvent::Token {
+                    id: s.req.id,
+                    token: tok,
+                    first: false,
+                    at: Instant::now(),
+                });
                 s.generated.len() >= s.req.max_new_tokens || self.kv.len(slot) + 1 >= ctx
             };
             self.tokens_out += 1;
@@ -491,8 +509,10 @@ impl Worker {
             id: s.req.id,
             tokens: s.generated,
             prompt_len: s.prompt_len,
+            priority: s.req.priority,
             latency_s: s.req.arrival.elapsed().as_secs_f64(),
             ttft_s: s.ttft_s,
+            queued_s: s.queued_s,
             first_token_at: s.first_token_at,
             shard: self.shard,
         }

@@ -4,7 +4,7 @@
 
 use crate::corpus::{self, XorShift64Star};
 
-use super::request::Request;
+use super::request::{Priority, Request};
 
 /// Workload shape parameters.
 #[derive(Debug, Clone, Copy)]
@@ -20,6 +20,10 @@ pub struct WorkloadSpec {
     /// the heavy tail that makes prefill stalls visible (0.0 keeps the
     /// uniform mix)
     pub long_frac: f64,
+    /// fraction of requests tagged `Priority::Interactive`; the rest are
+    /// `Priority::Batch` (CLI `--priority-mix`). 1.0 keeps the
+    /// pre-priority all-interactive workload
+    pub interactive_frac: f64,
     pub seed: u64,
 }
 
@@ -33,6 +37,7 @@ impl Default for WorkloadSpec {
             max_new_min: 4,
             max_new_max: 24,
             long_frac: 0.0,
+            interactive_frac: 1.0,
             seed: 42,
         }
     }
@@ -65,8 +70,17 @@ pub fn generate(spec: &WorkloadSpec) -> Vec<Arrival> {
         };
         let max_new = spec.max_new_min
             + rng.next_below((spec.max_new_max - spec.max_new_min + 1) as u64) as usize;
+        // interactive_frac >= 1.0 must consume no randomness so existing
+        // seeds reproduce their pinned workloads bit-for-bit
+        let mut priority = Priority::Interactive;
+        if spec.interactive_frac < 1.0 && rng.next_f64() >= spec.interactive_frac {
+            priority = Priority::Batch;
+        }
         let prompt = corpus::generate_tokens(plen, spec.seed.wrapping_add(1000 + i as u64));
-        out.push(Arrival { at_s: t, request: Request::new(i as u64 + 1, prompt, max_new) });
+        out.push(Arrival {
+            at_s: t,
+            request: Request::new(i as u64 + 1, prompt, max_new).with_priority(priority),
+        });
     }
     out
 }
@@ -153,6 +167,42 @@ mod tests {
         // ~60 expected; a uniform mix alone would give ~5
         assert!((30..=100).contains(&long), "long prompts: {long}");
         assert!(arr.iter().all(|a| a.request.prompt.len() >= spec.prompt_min));
+    }
+
+    #[test]
+    fn all_interactive_consumes_no_extra_randomness() {
+        let base = generate(&WorkloadSpec::default());
+        let explicit = generate(&WorkloadSpec { interactive_frac: 1.0, ..Default::default() });
+        for (a, b) in base.iter().zip(&explicit) {
+            assert_eq!(a.request.prompt, b.request.prompt);
+            assert_eq!(a.at_s, b.at_s);
+            assert_eq!(a.request.priority, Priority::Interactive);
+        }
+    }
+
+    #[test]
+    fn priority_mix_tags_batch_requests() {
+        let spec =
+            WorkloadSpec { n_requests: 200, interactive_frac: 0.5, ..Default::default() };
+        let arr = generate(&spec);
+        let batch =
+            arr.iter().filter(|a| a.request.priority == Priority::Batch).count();
+        // ~100 expected; wide band for the deterministic PRNG draw
+        assert!((60..=140).contains(&batch), "batch-priority requests: {batch}");
+        // mix is reproducible under the seed
+        let again = generate(&spec);
+        for (a, b) in arr.iter().zip(&again) {
+            assert_eq!(a.request.priority, b.request.priority);
+        }
+    }
+
+    #[test]
+    fn zero_interactive_frac_tags_everything_batch() {
+        let spec =
+            WorkloadSpec { n_requests: 50, interactive_frac: 0.0, ..Default::default() };
+        assert!(generate(&spec)
+            .iter()
+            .all(|a| a.request.priority == Priority::Batch));
     }
 
     #[test]

@@ -17,7 +17,7 @@ use anyhow::{bail, Result};
 use llmeasyquant::collective::{Collective, Topology, Transport};
 use llmeasyquant::coordinator::{
     search_bitwidths, size_reduction, workload, AdmissionPolicy, BatchPolicy, LayerInfo,
-    ScaleSync, SchedulerMode, SearchPolicy, Server, ServerConfig,
+    Priority, ScaleSync, SchedulerMode, SearchPolicy, Server, ServerConfig,
 };
 use llmeasyquant::corpus;
 use llmeasyquant::eval::{perplexity, weight_errors};
@@ -58,8 +58,15 @@ COMMANDS:
                    --max-new 16 [--batch 8] [--mode static|continuous]
                    [--rate REQS_PER_S]   (rate > 0: open-loop Poisson replay)
                    [--prefill-chunk N]   (bound prefill to N tokens/step; 0 = whole)
-                   [--slo-p99-ms MS --admission shed|priority]
-                                         (enforce a p99 latency target at admission)
+                   [--slo-p99-ms MS --admission shed|priority|predict]
+                                         (enforce a p99 latency target at admission;
+                                          `predict` gates on completion time predicted
+                                          from the in-flight backlog x calibrated
+                                          per-token cost — PJRT needs BENCH_hotpath.json
+                                          or LLEQ_HOTPATH_PROFILE)
+                   [--priority-mix F]    (fraction of requests tagged interactive;
+                                          the rest are batch priority: low queue
+                                          tier, shed first. default 1.0)
   eval-ppl         --model gpt2-tiny --variant all [--windows 8]
   breakdown        --ctx 32768 --batch 448 [--world 8] [--transport nccl]
   bitwidth-search  --model gpt2-tiny [--lambda 1e-4] [--policy greedy|grid|entropy]
@@ -122,11 +129,27 @@ fn serve(args: &Args) -> Result<()> {
         match args.get_or("admission", "shed").as_str() {
             "shed" => AdmissionPolicy::SheddingP99 { target_ms: slo_p99_ms },
             "priority" => AdmissionPolicy::Priority { target_ms: slo_p99_ms },
-            a => bail!("unknown admission policy {a} (shed|priority)"),
+            "predict" => AdmissionPolicy::Predictive { target_ms: slo_p99_ms },
+            a => bail!("unknown admission policy {a} (shed|priority|predict)"),
         }
     } else {
         AdmissionPolicy::Open
     };
+    // fraction of requests tagged interactive priority (rest are batch)
+    let priority_mix = args.get_f64("priority-mix", 1.0);
+    if !(0.0..=1.0).contains(&priority_mix) {
+        bail!("--priority-mix must be in [0, 1] (got {priority_mix})");
+    }
+    // predict sheds batch-priority work only: an all-interactive mix
+    // leaves nothing sheddable and the gate silently degrades to open —
+    // surface that at the point of use instead
+    if matches!(admission, AdmissionPolicy::Predictive { .. }) && priority_mix >= 1.0 {
+        bail!(
+            "--admission predict sheds batch-priority requests only, but --priority-mix \
+             {priority_mix} tags every request interactive (nothing sheddable); pass \
+             --priority-mix < 1.0 or use --admission shed"
+        );
+    }
 
     let reg = registry(args)?;
     let mut cfg = ServerConfig::new(&model, variant);
@@ -148,6 +171,7 @@ fn serve(args: &Args) -> Result<()> {
         max_new_min: max_new,
         max_new_max: max_new,
         long_frac: 0.0,
+        interactive_frac: priority_mix,
         seed: 9000,
     };
     let report = if rate > 0.0 {
@@ -167,10 +191,23 @@ fn serve(args: &Args) -> Result<()> {
     );
     if slo_p99_ms > 0.0 {
         println!(
-            "slo: target p99 {slo_p99_ms} ms | shed {} ({:.1}%) | deprioritized {}",
+            "slo: target p99 {slo_p99_ms} ms | shed {} ({:.1}%, {} interactive) | \
+             deprioritized {}",
             report.shed(),
             report.shed_rate() * 100.0,
+            report.shed_interactive,
             report.deprioritized,
+        );
+    }
+    if priority_mix < 1.0 {
+        println!(
+            "priority: interactive {} served p99 {:.1} ms | batch {} served p99 {:.1} ms \
+             | queue delay p99 {:.1} ms",
+            report.served_for(Priority::Interactive),
+            report.latency_percentile_for(Priority::Interactive, 0.99) * 1e3,
+            report.served_for(Priority::Batch),
+            report.latency_percentile_for(Priority::Batch, 0.99) * 1e3,
+            report.queue_delay_percentile(0.99) * 1e3,
         );
     }
     println!(

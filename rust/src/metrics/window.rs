@@ -5,16 +5,26 @@
 //! decide whether a shard is currently breaching its latency target.
 //! Bounded so the signal tracks *current* pressure: old completions age
 //! out instead of diluting a breach (or a recovery) forever.
+//!
+//! Samples are timestamped at insertion. Count-based eviction alone has
+//! a blind spot: the window only ever records *served* completions, so
+//! under a sustained full-shed interval nothing new arrives, the buffer
+//! holds its breach-time samples indefinitely, and a trailing gate
+//! reading it freezes its last verdict. [`RollingWindow::expire_older_than`]
+//! closes that hole — callers drop samples past a staleness horizon
+//! before reading, so a shard with zero recent completions re-evaluates
+//! (an empty window never breaches) instead of shedding forever.
 
 use std::collections::VecDeque;
+use std::time::{Duration, Instant};
 
 use super::stats::percentile;
 
-/// Fixed-capacity rolling window of f64 samples.
+/// Fixed-capacity rolling window of timestamped f64 samples.
 #[derive(Debug, Clone)]
 pub struct RollingWindow {
     cap: usize,
-    buf: VecDeque<f64>,
+    buf: VecDeque<(Instant, f64)>,
 }
 
 impl RollingWindow {
@@ -23,12 +33,35 @@ impl RollingWindow {
         RollingWindow { cap, buf: VecDeque::with_capacity(cap) }
     }
 
-    /// Append a sample, evicting the oldest once full.
+    /// Append a sample stamped `now`, evicting the oldest once full.
     pub fn push(&mut self, v: f64) {
+        self.push_at(Instant::now(), v);
+    }
+
+    /// Append a sample with an explicit timestamp (tests; replay).
+    /// Samples are assumed to arrive in time order — eviction and
+    /// expiry both pop from the front.
+    pub fn push_at(&mut self, at: Instant, v: f64) {
         if self.buf.len() == self.cap {
             self.buf.pop_front();
         }
-        self.buf.push_back(v);
+        self.buf.push_back((at, v));
+    }
+
+    /// Drop samples older than `age`. Returns how many were expired.
+    /// A gate calling this before every read cannot freeze on a stale
+    /// verdict: once the last breach-time sample passes the horizon the
+    /// window reads empty (never a breach) and admission resumes.
+    pub fn expire_older_than(&mut self, age: Duration) -> usize {
+        let Some(cutoff) = Instant::now().checked_sub(age) else {
+            return 0;
+        };
+        let mut expired = 0;
+        while self.buf.front().is_some_and(|(t, _)| *t < cutoff) {
+            self.buf.pop_front();
+            expired += 1;
+        }
+        expired
     }
 
     pub fn len(&self) -> usize {
@@ -42,7 +75,7 @@ impl RollingWindow {
     /// Percentile (q in [0, 1]) over the window; 0.0 when empty — an
     /// empty window never reads as a breach, so cold shards admit.
     pub fn percentile(&self, q: f64) -> f64 {
-        let xs: Vec<f64> = self.buf.iter().copied().collect();
+        let xs: Vec<f64> = self.buf.iter().map(|(_, v)| *v).collect();
         percentile(&xs, q)
     }
 
@@ -50,7 +83,7 @@ impl RollingWindow {
         if self.buf.is_empty() {
             return 0.0;
         }
-        self.buf.iter().sum::<f64>() / self.buf.len() as f64
+        self.buf.iter().map(|(_, v)| *v).sum::<f64>() / self.buf.len() as f64
     }
 }
 
@@ -99,5 +132,36 @@ mod tests {
         }
         // the breach sample has been evicted; p99 reflects current load
         assert_eq!(w.percentile(0.99), 1.0);
+    }
+
+    #[test]
+    fn stale_samples_expire_by_age() {
+        let mut w = RollingWindow::new(8);
+        let now = Instant::now();
+        // breach-time samples from 10 s ago, one fresh sample
+        for _ in 0..3 {
+            w.push_at(now - Duration::from_secs(10), 500.0);
+        }
+        w.push_at(now, 1.0);
+        assert_eq!(w.len(), 4);
+        assert!(w.percentile(0.99) > 100.0, "stale breach still dominates");
+        let expired = w.expire_older_than(Duration::from_secs(5));
+        assert_eq!(expired, 3);
+        assert_eq!(w.len(), 1);
+        assert_eq!(w.percentile(0.99), 1.0, "fresh sample survives");
+        // expiring everything leaves an empty (never-breaching) window
+        let expired = w.expire_older_than(Duration::ZERO);
+        assert_eq!(expired, 1);
+        assert!(w.is_empty());
+        assert_eq!(w.percentile(0.99), 0.0);
+    }
+
+    #[test]
+    fn expire_on_fresh_window_is_a_noop() {
+        let mut w = RollingWindow::new(4);
+        w.push(2.0);
+        w.push(3.0);
+        assert_eq!(w.expire_older_than(Duration::from_secs(60)), 0);
+        assert_eq!(w.len(), 2);
     }
 }

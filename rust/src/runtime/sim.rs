@@ -68,6 +68,21 @@ impl SimCost {
         }
     }
 
+    /// Wall-clock microseconds one fused decode step costs with `active`
+    /// live slots — exactly what [`SimModel::decode`] spin-waits.
+    pub fn step_us(&self, active: usize) -> f64 {
+        self.decode_step_us + self.decode_us_per_slot * active as f64
+    }
+
+    /// Effective decode cost per generated token when `batch` slots
+    /// share each fused step: the step launch amortizes across the
+    /// batch, the per-slot increment does not. This is the calibrated
+    /// per-token rate the predictive admission estimator
+    /// (`coordinator::cost::CostEstimator`) prices decode backlog with.
+    pub fn decode_us_per_token(&self, batch: usize) -> f64 {
+        self.decode_step_us / batch.max(1) as f64 + self.decode_us_per_slot
+    }
+
     /// Read a cost profile from parsed JSON. Accepts two shapes:
     ///
     ///   * a profile object: `{"prefill_us_per_token": ..,
@@ -438,6 +453,19 @@ mod tests {
         assert!((c.decode_step_us + 8.0 * c.decode_us_per_slot - 800.0).abs() < 1e-9);
         let offline = json::parse(r#"[{"name": "token_quantize", "mean_us": 1}]"#).unwrap();
         assert!(SimCost::fit_hotpath(&offline).is_none());
+    }
+
+    #[test]
+    fn per_token_hooks_match_the_spun_model() {
+        let c = SimCost::default();
+        // a full b=8 fused step costs launch + 8 slot increments ...
+        assert_eq!(c.step_us(8), 250.0 + 8.0 * 25.0);
+        assert_eq!(c.step_us(0), 250.0);
+        // ... and generates 8 tokens, so per-token cost is step/8 + slot
+        assert!((c.decode_us_per_token(8) - (250.0 / 8.0 + 25.0)).abs() < 1e-12);
+        assert_eq!(c.decode_us_per_token(8) * 8.0, c.step_us(8));
+        // batch 0 clamps instead of dividing by zero
+        assert!(c.decode_us_per_token(0).is_finite());
     }
 
     #[test]

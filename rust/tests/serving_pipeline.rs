@@ -13,8 +13,8 @@
 use std::time::Duration;
 
 use llmeasyquant::coordinator::{
-    workload, AdmissionPolicy, Backend, Batch, BatchPolicy, Request, Response,
-    SchedulerMode, Server, ServerConfig, Worker,
+    workload, AdmissionPolicy, Backend, Batch, BatchPolicy, CostEstimator, Priority,
+    Request, Response, SchedulerMode, Server, ServerConfig, Worker,
 };
 use llmeasyquant::corpus::{self, BOS};
 use llmeasyquant::quant::Variant;
@@ -186,6 +186,7 @@ fn open_loop_replay_completes_under_pressure() {
         max_new_min: 2,
         max_new_max: 6,
         long_frac: 0.0,
+        interactive_frac: 1.0,
         seed: 11,
     };
     let arrivals = workload::generate(&spec);
@@ -369,6 +370,220 @@ fn inter_token_gaps_are_recorded() {
     assert_eq!(report.inter_token_gap_s.len() as u64, expected);
     assert!(report.inter_token_gap_s.iter().all(|g| *g >= 0.0));
     assert!(report.itl_percentile(0.99) >= report.itl_percentile(0.50));
+}
+
+/// One simultaneous burst of `n` same-shape requests on one shard: the
+/// trailing gate's blind spot. Every arrival is injected before any
+/// completion lands, so a completion-window policy cannot shed during
+/// the burst — while the predictive gate prices the growing in-flight
+/// backlog at each arrival.
+fn burst(n: usize, priority: Priority) -> Vec<workload::Arrival> {
+    (0..n)
+        .map(|i| {
+            let mut prompt = corpus::generate_tokens(8, 20_000 + i as u64);
+            prompt[0] = BOS;
+            workload::Arrival {
+                at_s: 0.0,
+                request: Request::new(i as u64 + 1, prompt, 6).with_priority(priority),
+            }
+        })
+        .collect()
+}
+
+#[test]
+fn predictive_sheds_during_the_ramp_where_the_trailing_gate_is_blind() {
+    // SimCost::fast at batch 4: one request predicts ~44 us of work
+    // (8 prompt tokens x 0.2 us + 6 decode tokens x 7 us), so a 0.2 ms
+    // target (trip point: 0.1 ms) admits the first couple and sheds
+    // once the predicted backlog crosses the trip point — during the
+    // burst, before any completion
+    let mut cfg = sim_cfg(SchedulerMode::Continuous, 1, 4);
+    cfg.admission = AdmissionPolicy::Predictive { target_ms: 0.2 };
+    let server = Server::start_sim(cfg, SimCost::fast()).unwrap();
+    let report = server.run_open_loop(burst(12, Priority::Batch)).unwrap();
+    assert_eq!(report.responses.len() + report.shed(), 12, "requests unaccounted for");
+    assert!(report.shed() > 0, "predictive gate must shed during the burst");
+    assert!(!report.responses.is_empty(), "predictive gate must not shed everything");
+
+    // the same burst under the trailing gate: every request is injected
+    // before a single completion lands, the window is empty, nothing
+    // sheds — the blind spot the predictive gate closes
+    let mut cfg = sim_cfg(SchedulerMode::Continuous, 1, 4);
+    cfg.admission = AdmissionPolicy::SheddingP99 { target_ms: 0.2 };
+    let server = Server::start_sim(cfg, SimCost::fast()).unwrap();
+    let report = server.run_open_loop(burst(12, Priority::Batch)).unwrap();
+    assert_eq!(
+        report.shed(),
+        0,
+        "trailing gate cannot shed before a completion lands (if this fires, the \
+         blind-spot premise of the predictive test changed)"
+    );
+}
+
+#[test]
+fn predictive_never_sheds_interactive_while_batch_sheds() {
+    // impossible target: every batch-priority candidate predicts a
+    // breach even against an empty backlog; interactive candidates must
+    // still all be admitted and served
+    let mut cfg = sim_cfg(SchedulerMode::Continuous, 1, 4);
+    cfg.admission = AdmissionPolicy::Predictive { target_ms: 0.01 };
+    let server = Server::start_sim(cfg, SimCost::fast()).unwrap();
+    let arrivals: Vec<workload::Arrival> = (0..16)
+        .map(|i| {
+            let mut prompt = corpus::generate_tokens(8, 21_000 + i as u64);
+            prompt[0] = BOS;
+            let prio = if i % 2 == 0 { Priority::Interactive } else { Priority::Batch };
+            workload::Arrival {
+                at_s: 0.0,
+                request: Request::new(i as u64 + 1, prompt, 6).with_priority(prio),
+            }
+        })
+        .collect();
+    let report = server.run_open_loop(arrivals).unwrap();
+    // interactive requests have odd ids (i even -> id i+1)
+    assert_eq!(report.shed(), 8, "every batch request sheds under an impossible target");
+    assert_eq!(report.shed_interactive, 0, "an interactive request was shed");
+    assert!(report.shed_ids.iter().all(|id| id % 2 == 0), "shed set must be batch-only");
+    for id in (1..=16u64).step_by(2) {
+        assert!(
+            report.responses.iter().any(|r| r.id == id),
+            "interactive request {id} was not served"
+        );
+    }
+}
+
+#[test]
+fn predicted_completion_error_is_bounded_on_the_calibrated_profile() {
+    // saturated closed loop on one shard: fused steps run with full
+    // batches, the regime the estimator's amortized decode rate models.
+    // The last request to complete saw (n-1) requests of backlog ahead
+    // of it; its predicted completion must land within a small constant
+    // factor of the measured one.
+    let cost = SimCost::default();
+    let n = 24usize;
+    let (plen, dlen) = (16usize, 8usize);
+    let reqs: Vec<Request> = (0..n)
+        .map(|i| {
+            let mut prompt = corpus::generate_tokens(plen, 30_000 + i as u64);
+            prompt[0] = BOS;
+            Request::new(i as u64 + 1, prompt, dlen)
+        })
+        .collect();
+    let est = CostEstimator::from_sim_cost(&cost, 8);
+    let predicted_s = est.predict_s(((n - 1) * plen, (n - 1) * dlen), plen, dlen, 0);
+    let server = Server::start_sim(sim_cfg(SchedulerMode::Continuous, 1, 8), cost).unwrap();
+    let report = server.run_workload(reqs).unwrap();
+    assert_eq!(report.responses.len(), n);
+    let actual_s = report.responses.iter().map(|r| r.latency_s).fold(0.0f64, f64::max);
+    let ratio = predicted_s / actual_s;
+    assert!(
+        (0.25..=4.0).contains(&ratio),
+        "predicted {predicted_s:.4}s vs actual {actual_s:.4}s (ratio {ratio:.2})"
+    );
+}
+
+#[test]
+fn router_charge_returns_to_zero_after_an_overload_burst() {
+    // the shed path must release each refused request's token charge
+    // exactly once: after a burst in which some requests shed and some
+    // serve, the router must hold zero sessions and zero in-flight
+    // tokens (a leak or double-release would show up here)
+    let mut cfg = sim_cfg(SchedulerMode::Continuous, 1, 4);
+    cfg.admission = AdmissionPolicy::Predictive { target_ms: 0.2 };
+    let server = Server::start_sim(cfg, SimCost::fast()).unwrap();
+    let report = server.run_open_loop(burst(24, Priority::Batch)).unwrap();
+    assert!(report.shed() > 0);
+    assert_eq!(report.responses.len() + report.shed(), 24);
+    assert_eq!(report.router_in_flight, 0, "router session leaked through the shed path");
+    assert_eq!(report.router_inflight_tokens, 0, "token charge not refunded exactly once");
+
+    // and under the trailing gate (waves give it completions to trip on)
+    let mut cfg = sim_cfg(SchedulerMode::Continuous, 1, 4);
+    cfg.admission = AdmissionPolicy::SheddingP99 { target_ms: 1e-4 };
+    let server = Server::start_sim(cfg, SimCost::fast()).unwrap();
+    let report = server.run_open_loop(waves(6)).unwrap();
+    assert!(report.shed() > 0);
+    assert_eq!(report.router_in_flight, 0);
+    assert_eq!(report.router_inflight_tokens, 0);
+}
+
+#[test]
+fn stale_breach_window_ages_out_and_readmits() {
+    // two early waves breach an impossible target and shed their
+    // followers; a third wave 400 ms later — past the 250 ms staleness
+    // floor — must be admitted in full: the breach-time samples have
+    // aged out and an empty window never breaches. Without aging, the
+    // window (which only ever records served completions) would hold
+    // its breach verdict forever.
+    let mut cfg = sim_cfg(SchedulerMode::Continuous, 1, 4);
+    cfg.admission = AdmissionPolicy::SheddingP99 { target_ms: 1e-4 };
+    let server = Server::start_sim(cfg, SimCost::fast()).unwrap();
+    let mut arrivals = Vec::new();
+    let mut id = 0u64;
+    for at in [0.0f64, 0.02, 0.4] {
+        for _ in 0..4 {
+            id += 1;
+            let mut prompt = corpus::generate_tokens(8, 40_000 + id);
+            prompt[0] = BOS;
+            arrivals.push(workload::Arrival { at_s: at, request: Request::new(id, prompt, 6) });
+        }
+    }
+    let report = server.run_open_loop(arrivals).unwrap();
+    assert!(report.shed() > 0, "early waves must shed followers");
+    for id in 9..=12u64 {
+        assert!(
+            report.responses.iter().any(|r| r.id == id),
+            "request {id} was shed by a stale breach window"
+        );
+    }
+}
+
+#[test]
+fn queueing_delay_reported_separately_from_decode_cadence() {
+    // one slot: later requests park while the first serves; the park
+    // time must land in Response::queued_s, and inter-token gaps stay
+    // emission-stamped decode cadence (one per non-first token)
+    let server = sim_server(SchedulerMode::Continuous, 1, 1);
+    let report = server.run_workload(mixed_requests(6)).unwrap();
+    assert_eq!(report.responses.len(), 6);
+    for r in &report.responses {
+        assert!(r.queued_s >= 0.0);
+        assert!(
+            r.queued_s <= r.latency_s + 1e-9,
+            "queueing {} exceeds end-to-end latency {}",
+            r.queued_s,
+            r.latency_s
+        );
+    }
+    assert!(
+        report.queue_delay_percentile(1.0) > 0.0,
+        "someone must have waited behind the single slot"
+    );
+    let expected: u64 = report.tokens_out - report.responses.len() as u64;
+    assert_eq!(report.inter_token_gap_s.len() as u64, expected);
+    assert!(report.inter_token_gap_s.iter().all(|g| *g >= 0.0));
+}
+
+#[test]
+fn batch_priority_parks_behind_interactive_even_under_open_admission() {
+    // static mode, one-slot batches: the batch-priority request arrives
+    // first but the interactive one must reach a slot first — the low
+    // tier is drained only when the normal tier is empty
+    let server = sim_server(SchedulerMode::Static, 1, 1);
+    let mut reqs = mixed_requests(2);
+    let parked = reqs[0].clone().with_priority(Priority::Batch);
+    reqs[0] = parked;
+    let report = server.run_workload(reqs).unwrap();
+    assert_eq!(report.responses.len(), 2);
+    let batch = by_id(&report.responses, 1);
+    let interactive = by_id(&report.responses, 2);
+    assert!(
+        interactive.first_token_at <= batch.first_token_at,
+        "interactive must preempt the parked batch request"
+    );
+    assert_eq!(report.deprioritized, 1, "exactly the batch request parks low");
+    assert_eq!(batch.priority, Priority::Batch);
+    assert_eq!(interactive.priority, Priority::Interactive);
 }
 
 #[test]
