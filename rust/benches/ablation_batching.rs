@@ -317,7 +317,9 @@ fn main() -> anyhow::Result<()> {
     // prompt a ~1.4 ms whole-prompt stall against a ~0.25 ms decode step
     // (overridable with a measured profile via LLEQ_SIM_PROFILE)
     let slo_cost = match std::env::var("LLEQ_SIM_PROFILE") {
-        Ok(path) => SimCost::load_profile(std::path::Path::new(&path))?,
+        // a typo'd profile degrades to defaults with a stderr warning
+        // naming the offending key — it should cost accuracy, not the run
+        Ok(path) => SimCost::load_profile_or_default(std::path::Path::new(&path)),
         Err(_) => SimCost { prefill_us_per_token: 12.0, ..SimCost::default() },
     };
     let slo_requests = if smoke { 128 } else { 512 };

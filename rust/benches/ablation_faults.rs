@@ -1,0 +1,236 @@
+//! Ablation — fault injection and recovery on the serving engine.
+//!
+//! The recovery drill (sim backend, offline, CI-safe): a 4-shard
+//! continuous-batching server replays the same open-loop Poisson
+//! workload twice — once fault-free (the goodput baseline), once under
+//! a seeded [`FaultPlan`] that crashes shard 1 at decode step 40. The
+//! dispatcher has to notice from the outside (an injected crash is
+//! silent), migrate the dead shard's in-flight requests onto the
+//! survivors, and keep every client-visible token stream exactly-once.
+//!
+//! Because the sim trajectory is a pure function of (token, position),
+//! re-prefilling `prompt ++ delivered` on a survivor continues each
+//! stream token-identically — so the drill's strongest check is a
+//! per-request diff of the delivered streams against the fault-free
+//! run: `mismatched_streams` must be zero, alongside zero lost tokens
+//! and zero leaked router charges.
+//!
+//! The run appends `fault_rows` (plus a `fault` metadata block) into
+//! the `BENCH_batching.json` written by `ablation_batching` — run that
+//! bench first; CI gates the rows in `benches/check_batching.rs`
+//! (zero lost/duplicated-delivered tokens, detection within
+//! `max_misses + 1` step deadlines, goodput >= 60% of fault-free).
+//! `LLEQ_SMOKE=1` shrinks the workload and targets the smoke file in
+//! `rust/target/` instead of the committed full-run file.
+
+use std::collections::HashMap;
+use std::time::Duration;
+
+use llmeasyquant::coordinator::{
+    workload, FaultPlan, FaultSpec, RequestId, SchedulerMode, Server, ServerConfig, ServerReport,
+};
+use llmeasyquant::quant::Variant;
+use llmeasyquant::runtime::SimCost;
+use llmeasyquant::util::bench::Table;
+use llmeasyquant::util::json::{self, Value};
+
+const SHARDS: usize = 4;
+/// Offered load per shard (req/s): moderate utilization, so the
+/// survivors have headroom to absorb the dead shard's load — the gate
+/// measures recovery overhead, not a capacity cliff.
+const RATE_PER_SHARD: f64 = 75.0;
+const CRASH_SHARD: usize = 1;
+/// Fused-step index at which the victim's device dies: late enough
+/// that it holds in-flight streams (so migration is exercised), early
+/// enough that every workload size reaches it.
+const CRASH_STEP: u64 = 40;
+/// Liveness deadline for the drill, shortened from the serving default
+/// so the timeout detection path stays fast on the bench clock. The
+/// detection gate is expressed in *deadline units*, so it is invariant
+/// to this knob.
+const STEP_DEADLINE_MS: u64 = 50;
+const WORKLOAD_SEED: u64 = 7;
+const FAULT_SEED: u64 = 7;
+
+fn spec(n_requests: usize) -> workload::WorkloadSpec {
+    workload::WorkloadSpec {
+        n_requests,
+        rate_per_s: RATE_PER_SHARD * SHARDS as f64,
+        prompt_min: 8,
+        prompt_max: 48,
+        max_new_min: 4,
+        max_new_max: 24,
+        long_frac: 0.0,
+        interactive_frac: 1.0,
+        seed: WORKLOAD_SEED,
+    }
+}
+
+fn run(n_requests: usize, plan: Option<FaultPlan>) -> anyhow::Result<ServerReport> {
+    let mut cfg = ServerConfig::new("sim-tiny", Variant::SimQuant);
+    cfg.shards = SHARDS;
+    cfg.batch = 8;
+    cfg.mode = SchedulerMode::Continuous;
+    cfg.prefill_chunk = 16;
+    if let Some(plan) = plan {
+        cfg.fault = FaultSpec::with_plan(plan);
+        cfg.fault.step_deadline = Duration::from_millis(STEP_DEADLINE_MS);
+    }
+    let server = Server::start_sim(cfg, SimCost::default())?;
+    server.run_open_loop(workload::generate(&spec(n_requests)))
+}
+
+/// Delivered token streams per request id.
+fn streams(report: &ServerReport) -> HashMap<RequestId, Vec<i32>> {
+    report.responses.iter().map(|r| (r.id, r.tokens.clone())).collect()
+}
+
+fn main() -> anyhow::Result<()> {
+    let smoke = std::env::var("LLEQ_SMOKE").is_ok();
+    let n_requests = if smoke { 96 } else { 384 };
+
+    println!(
+        "== ablation: shard failure + recovery (sim backend, {SHARDS} shards, \
+         continuous, {n_requests} reqs, {RATE_PER_SHARD} req/s/shard, kill shard \
+         {CRASH_SHARD} at step {CRASH_STEP}) ==\n"
+    );
+
+    let baseline = run(n_requests, None)?;
+    assert_eq!(baseline.responses.len(), n_requests, "fault-free run lost requests");
+    assert_eq!(baseline.shed(), 0, "open admission must never shed");
+    assert_eq!(baseline.router_in_flight, 0, "fault-free run leaked router charges");
+
+    let plan = FaultPlan::new(FAULT_SEED).crash(CRASH_SHARD, CRASH_STEP);
+    let faulted = run(n_requests, Some(plan))?;
+    assert_eq!(
+        faulted.responses.len() + faulted.shed(),
+        n_requests,
+        "requests unaccounted for under the fault plan"
+    );
+    assert_eq!(faulted.shed(), 0, "survivors had capacity; nothing should shed");
+    assert!(
+        faulted.dead_shards.contains(&CRASH_SHARD),
+        "the injected crash was never detected (dead: {:?})",
+        faulted.dead_shards
+    );
+    assert_eq!(faulted.lost_tokens, 0, "token positions were lost in migration");
+    assert_eq!(faulted.router_in_flight, 0, "recovery leaked router charges");
+
+    // exactly-once + determinism: every delivered stream must match the
+    // fault-free run token for token
+    let expect = streams(&baseline);
+    let got = streams(&faulted);
+    let mismatched_streams = expect
+        .iter()
+        .filter(|(id, tokens)| got.get(*id) != Some(*tokens))
+        .count()
+        + got.keys().filter(|id| !expect.contains_key(*id)).count();
+    assert_eq!(mismatched_streams, 0, "recovered streams diverged from the fault-free run");
+
+    let detect_deadlines =
+        faulted.detection_deadlines.iter().fold(0.0f64, |acc, d| acc.max(*d));
+    let fault_free_tps = baseline.tokens_streamed as f64 / baseline.wall_s.max(1e-9);
+    let goodput_tps = faulted.tokens_streamed as f64 / faulted.wall_s.max(1e-9);
+    let goodput_ratio = goodput_tps / fault_free_tps.max(1e-9);
+
+    let mut table = Table::new(&[
+        "scenario",
+        "served",
+        "dead",
+        "detect (deadlines)",
+        "migrated",
+        "re-prefill tok",
+        "dup",
+        "lost",
+        "stream diffs",
+        "goodput tok/s",
+        "vs fault-free",
+    ]);
+    table.row(vec![
+        format!("kill-1-of-{SHARDS}"),
+        faulted.responses.len().to_string(),
+        format!("{:?}", faulted.dead_shards),
+        format!("{detect_deadlines:.2}"),
+        faulted.migrated().to_string(),
+        faulted.reprefill_tokens.to_string(),
+        faulted.dup_tokens.to_string(),
+        faulted.lost_tokens.to_string(),
+        mismatched_streams.to_string(),
+        format!("{goodput_tps:.0}"),
+        format!("{:.2}x", goodput_ratio),
+    ]);
+    table.print();
+    println!(
+        "\nshape: the crash is silent — the dispatcher learns of it from missed \
+         step deadlines (or a failed inject), refunds and re-routes the victims, \
+         and re-prefills each admitted prompt plus its delivered tokens on a \
+         survivor; the deterministic trajectory then continues the stream \
+         token-identically, with position dedup keeping delivery exactly-once."
+    );
+
+    let fault_rows = vec![Value::obj(vec![
+        ("scenario", Value::Str(format!("kill-1-of-{SHARDS}"))),
+        ("requests", Value::Num(n_requests as f64)),
+        ("served", Value::Num(faulted.responses.len() as f64)),
+        ("shed", Value::Num(faulted.shed() as f64)),
+        (
+            "dead_shards",
+            Value::Arr(faulted.dead_shards.iter().map(|s| Value::Num(*s as f64)).collect()),
+        ),
+        ("detect_deadlines", Value::Num(detect_deadlines)),
+        ("migrated", Value::Num(faulted.migrated() as f64)),
+        ("reprefill_tokens", Value::Num(faulted.reprefill_tokens as f64)),
+        ("dup_tokens", Value::Num(faulted.dup_tokens as f64)),
+        ("lost_tokens", Value::Num(faulted.lost_tokens as f64)),
+        ("mismatched_streams", Value::Num(mismatched_streams as f64)),
+        ("router_in_flight", Value::Num(faulted.router_in_flight as f64)),
+        ("fault_free_tps", Value::Num(fault_free_tps)),
+        ("goodput_tps", Value::Num(goodput_tps)),
+        ("goodput_ratio", Value::Num(goodput_ratio)),
+    ])];
+    let fault_meta = Value::obj(vec![
+        ("crash_shard", Value::Num(CRASH_SHARD as f64)),
+        ("crash_step", Value::Num(CRASH_STEP as f64)),
+        ("step_deadline_ms", Value::Num(STEP_DEADLINE_MS as f64)),
+        ("max_misses", Value::Num(FaultSpec::default().max_misses as f64)),
+        ("rate_per_shard", Value::Num(RATE_PER_SHARD)),
+        ("workload_seed", Value::Num(WORKLOAD_SEED as f64)),
+        ("fault_seed", Value::Num(FAULT_SEED as f64)),
+        ("smoke", Value::Bool(smoke)),
+        ("note", Value::Str("measured by `cargo bench --bench ablation_faults`".into())),
+    ]);
+
+    // merge into the trajectory file ablation_batching writes (same
+    // smoke-vs-full path split), preserving its rows
+    let manifest = std::path::Path::new(env!("CARGO_MANIFEST_DIR"));
+    let path = if smoke {
+        let dir = manifest.join("target");
+        std::fs::create_dir_all(&dir)?;
+        dir.join("BENCH_batching.json")
+    } else {
+        manifest
+            .parent()
+            .map(|repo| repo.join("BENCH_batching.json"))
+            .unwrap_or_else(|| "BENCH_batching.json".into())
+    };
+    let mut doc = match std::fs::read_to_string(&path) {
+        Ok(s) => json::parse(&s)?,
+        // no batching run yet: start a minimal document so the fault
+        // rows are still recorded (check_batching will flag the
+        // missing sweeps)
+        Err(_) => Value::obj(vec![
+            ("bench", Value::Str("ablation_batching".into())),
+            ("smoke", Value::Bool(smoke)),
+        ]),
+    };
+    match &mut doc {
+        Value::Obj(m) => {
+            m.insert("fault_rows".into(), Value::Arr(fault_rows));
+            m.insert("fault".into(), fault_meta);
+        }
+        _ => anyhow::bail!("{} is not a JSON object", path.display()),
+    }
+    std::fs::write(&path, json::to_string_pretty(&doc))?;
+    println!("\n(fault rows merged into {})", path.display());
+    Ok(())
+}

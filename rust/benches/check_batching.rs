@@ -6,6 +6,7 @@
 //! (CI runs both in smoke mode):
 //!
 //!   cargo bench --bench ablation_batching          # writes the JSON
+//!   cargo bench --bench ablation_faults            # merges fault_rows in
 //!   cargo bench --bench check_batching -- <path>   # gates it
 //!
 //! `<path>` defaults to the smoke output (`target/BENCH_batching.json`),
@@ -54,6 +55,18 @@ const PRED_SHED_SLACK: f64 = 8.0;
 /// exceed the configured target by at most this factor (full-run
 /// acceptance is `<= target`; smoke tails are noisy).
 const PRED_INT_P99_MAX_RATIO: f64 = 1.5;
+
+/// A shard kill must be detected within `max_misses + 1` step deadlines
+/// (the liveness sweep runs once per deadline, so detection lands in
+/// `[max_misses, max_misses + 1)`; the failed-inject fast path lands
+/// well under one).
+const FAULT_DETECT_MAX_DEADLINES: f64 = 4.0;
+
+/// Delivered-token throughput under the kill-1-of-4 drill must stay at
+/// least this fraction of the fault-free run: losing a quarter of the
+/// fleet mid-run plus detection latency and re-prefill work justifies a
+/// dip, but below this the recovery path itself is the bottleneck.
+const FAULT_GOODPUT_MIN_RATIO: f64 = 0.6;
 
 fn f(row: &Value, key: &str) -> f64 {
     row.get(key).and_then(Value::as_f64).unwrap_or(f64::NAN)
@@ -180,6 +193,51 @@ fn check_predictive_rows(rows: &[Value], failures: &mut Vec<String>) {
     }
 }
 
+fn check_fault_rows(rows: &[Value], failures: &mut Vec<String>) {
+    if rows.is_empty() {
+        failures.push("fault_rows: empty — the recovery drill produced no rows".to_string());
+        return;
+    }
+    for r in rows {
+        let scenario = s(r, "scenario");
+        // exactly-once delivery: no position may ever be skipped or
+        // double-delivered to the client, and every recovered stream
+        // must match the fault-free run token for token
+        for key in ["lost_tokens", "mismatched_streams", "router_in_flight", "shed"] {
+            let v = f(r, key);
+            if v.is_nan() || v != 0.0 {
+                failures.push(format!(
+                    "fault_rows: {scenario}: {key} = {v} (must be 0) — recovery broke \
+                     exactly-once delivery or leaked accounting"
+                ));
+            }
+        }
+        let accounted = f(r, "served") + f(r, "shed");
+        if accounted != f(r, "requests") {
+            failures.push(format!(
+                "fault_rows: {scenario}: served {} + shed {} != offered {}",
+                f(r, "served"),
+                f(r, "shed"),
+                f(r, "requests"),
+            ));
+        }
+        let detect = f(r, "detect_deadlines");
+        if detect.is_nan() || detect > FAULT_DETECT_MAX_DEADLINES {
+            failures.push(format!(
+                "fault_rows: {scenario}: detection took {detect} step deadlines > \
+                 {FAULT_DETECT_MAX_DEADLINES} — the liveness sweep missed its window"
+            ));
+        }
+        let goodput = f(r, "goodput_ratio");
+        if goodput.is_nan() || goodput < FAULT_GOODPUT_MIN_RATIO {
+            failures.push(format!(
+                "fault_rows: {scenario}: goodput ratio {goodput:.3} < \
+                 {FAULT_GOODPUT_MIN_RATIO} of fault-free — recovery overhead regressed"
+            ));
+        }
+    }
+}
+
 fn main() -> ExitCode {
     let manifest = std::path::Path::new(env!("CARGO_MANIFEST_DIR"));
     // `cargo bench` invokes every bench binary with a `--bench` flag;
@@ -220,10 +278,14 @@ fn main() -> ExitCode {
         Some(rows) => check_predictive_rows(rows, &mut failures),
         None => failures.push("missing `predictive_rows` array".to_string()),
     }
+    match doc.get("fault_rows").and_then(Value::as_arr) {
+        Some(rows) => check_fault_rows(rows, &mut failures),
+        None => failures.push("missing `fault_rows` array (run ablation_faults)".to_string()),
+    }
     if failures.is_empty() {
         println!(
             "check_batching: {} OK (static-vs-continuous + chunked/admission + \
-             predictive-admission gates hold)",
+             predictive-admission + fault-recovery gates hold)",
             path.display()
         );
         ExitCode::SUCCESS

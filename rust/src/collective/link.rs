@@ -1,4 +1,6 @@
-//! Alpha-beta link model: transfer time = alpha + bytes / beta.
+//! Alpha-beta link model: transfer time = alpha + bytes / beta — plus
+//! the seeded per-delivery corruption schedule ([`LinkFaults`]) the
+//! checksummed quantized wire is exercised against.
 
 /// Per-hop link characteristics.
 #[derive(Debug, Clone, Copy, PartialEq)]
@@ -81,11 +83,56 @@ impl LinkModel {
     }
 }
 
+/// Seeded corruption schedule for one rank's incoming ring link: an
+/// independent splitmix64 stream drawn once per chunk *delivery
+/// attempt* (a retransmission draws again), so a faulty-link run
+/// replays bit-identically under the same seed. Built from a
+/// `FaultPlan` in the coordinator (`FaultPlan::link_faults(rank)`
+/// folds the rank into the plan seed); the ring transport consumes it
+/// at the receive endpoint, where the per-chunk checksum — not this
+/// schedule — is what detects the bad delivery.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct LinkFaults {
+    /// corruption probability per delivery attempt, as a fixed 2^-53
+    /// threshold against the top 53 bits of each draw
+    threshold: u64,
+    state: u64,
+}
+
+impl LinkFaults {
+    pub fn new(p: f64, seed: u64) -> Self {
+        let threshold = (p.clamp(0.0, 1.0) * (1u64 << 53) as f64) as u64;
+        LinkFaults { threshold, state: seed }
+    }
+
+    fn next_u64(&mut self) -> u64 {
+        self.state = self.state.wrapping_add(0x9E37_79B9_7F4A_7C15);
+        let mut z = self.state;
+        z = (z ^ (z >> 30)).wrapping_mul(0xBF58_476D_1CE4_E5B9);
+        z = (z ^ (z >> 27)).wrapping_mul(0x94D0_49BB_1331_11EB);
+        z ^ (z >> 31)
+    }
+
+    /// Draw the next delivery attempt: true = this chunk arrives
+    /// corrupted on the wire.
+    pub fn corrupt_next(&mut self) -> bool {
+        (self.next_u64() >> 11) < self.threshold
+    }
+
+    /// Byte index to flip in a corrupted `len`-byte delivery.
+    pub fn victim_byte(&mut self, len: usize) -> usize {
+        (self.next_u64() % len.max(1) as u64) as usize
+    }
+}
+
 /// Accumulated accounting for one rank's collective traffic.
 #[derive(Debug, Clone, Copy, Default, PartialEq)]
 pub struct CommStats {
     pub ops: u64,
     pub bytes_sent: u64,
+    /// chunk deliveries that failed their checksum and were re-pulled
+    /// from the sender's refcounted original (injected link faults)
+    pub retransmits: u64,
     /// simulated wire time (seconds) under the link model
     pub sim_time_s: f64,
     /// wall-clock spent inside collective calls (seconds)
@@ -96,6 +143,7 @@ impl CommStats {
     pub fn merge(&mut self, other: &CommStats) {
         self.ops += other.ops;
         self.bytes_sent += other.bytes_sent;
+        self.retransmits += other.retransmits;
         self.sim_time_s += other.sim_time_s;
         self.wall_time_s += other.wall_time_s;
     }
@@ -152,5 +200,21 @@ mod tests {
         let l = LinkModel::nvlink();
         let (ar, ag) = (l.ring_allreduce_time(1 << 20, 4), l.ring_allgather_time(1 << 20, 4));
         assert!((ar - 2.0 * ag).abs() < 1e-12);
+    }
+
+    #[test]
+    fn link_faults_extremes_and_replay() {
+        let mut never = LinkFaults::new(0.0, 42);
+        assert!((0..256).all(|_| !never.corrupt_next()), "p=0 must never corrupt");
+        let mut always = LinkFaults::new(1.0, 42);
+        assert!((0..256).all(|_| always.corrupt_next()), "p=1 must always corrupt");
+        let (mut a, mut b) = (LinkFaults::new(0.3, 7), LinkFaults::new(0.3, 7));
+        let da: Vec<bool> = (0..512).map(|_| a.corrupt_next()).collect();
+        let db: Vec<bool> = (0..512).map(|_| b.corrupt_next()).collect();
+        assert_eq!(da, db, "same seed replays identically");
+        let hits = da.iter().filter(|c| **c).count();
+        assert!((100..220).contains(&hits), "p=0.3 over 512 draws, got {hits}");
+        assert!(LinkFaults::new(0.5, 1).victim_byte(16) < 16);
+        assert_eq!(LinkFaults::new(0.5, 1).victim_byte(0), 0, "empty buffer is safe");
     }
 }

@@ -18,8 +18,8 @@ mod link;
 mod ops;
 mod topology;
 
-pub use link::{CommStats, LinkModel};
-pub use ops::{Collective, OpError, QUANT_CHUNK};
+pub use link::{CommStats, LinkFaults, LinkModel};
+pub use ops::{Collective, OpError, CHUNK_RETRY_LIMIT, QUANT_CHUNK};
 pub use topology::{Topology, Transport};
 
 /// Spawn a `world`-rank ring, all-gather `len` synthetic f32 per rank

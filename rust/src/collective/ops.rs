@@ -19,6 +19,21 @@
 //! `CommStats::bytes_sent` counts the quantized bytes actually shipped
 //! (codes + scales): 8-bit cuts wire bytes ~4x vs f32, packed 4/2-bit
 //! ~8/16x.
+//!
+//! # Wire integrity
+//!
+//! Every quantized chunk carries an FNV-1a checksum over its packed
+//! codes and scales, computed at encode and verified at *every* decode
+//! — always on, not just under fault injection. A rank armed with
+//! [`LinkFaults`] draws corruption per delivery attempt; a detected
+//! chunk (checksum mismatch — the delivered view really is corrupted,
+//! a byte is flipped) counts one `CommStats::retransmits` and is
+//! re-pulled from the sender's refcounted original. After
+//! [`CHUNK_RETRY_LIMIT`] consecutive bad deliveries the receiving rank
+//! *ejects* ([`OpError::Corrupt`]): it abandons the op, its channel
+//! endpoints drop, and the neighbors' next receive fails fast
+//! (disconnect, not timeout) — the surviving ranks rebuild a smaller
+//! ring and redo the op, which is the policy the eject test pins.
 
 use std::fmt;
 use std::sync::mpsc::{channel, Receiver, RecvTimeoutError, Sender};
@@ -27,7 +42,7 @@ use std::time::{Duration, Instant};
 
 use crate::quant::kernels;
 
-use super::{CommStats, LinkModel, Topology};
+use super::{CommStats, LinkFaults, LinkModel, Topology};
 
 const RECV_TIMEOUT: Duration = Duration::from_secs(30);
 
@@ -36,6 +51,10 @@ const RECV_TIMEOUT: Duration = Duration::from_secs(30);
 /// the previous chunk's flight down the ring. Public so tests and
 /// benches derive error bounds and byte counts from the real value.
 pub const QUANT_CHUNK: usize = 4096;
+
+/// Consecutive checksum failures on one chunk delivery before the
+/// receiving rank gives up on the link and ejects from the ring.
+pub const CHUNK_RETRY_LIMIT: u32 = 3;
 
 #[derive(Debug)]
 pub enum OpError {
@@ -48,6 +67,10 @@ pub enum OpError {
     /// Quantized op requested with a bitwidth the packed wire format
     /// cannot carry (must be 2, 4, or 8).
     InvalidBits { rank: usize, bits: u32 },
+    /// One chunk failed its checksum `attempts` consecutive deliveries:
+    /// the link is declared bad and this rank ejects — callers rebuild
+    /// the ring over the surviving ranks.
+    Corrupt { rank: usize, op: &'static str, attempts: u32 },
 }
 
 impl fmt::Display for OpError {
@@ -69,6 +92,11 @@ impl fmt::Display for OpError {
                 "rank {rank}: quantized collective bits={bits} unsupported \
                  (wire format packs 2, 4, or 8 bits)"
             ),
+            OpError::Corrupt { rank, op, attempts } => write!(
+                f,
+                "rank {rank}: chunk failed its checksum {attempts} consecutive \
+                 deliveries in {op} — link declared bad, rank ejecting from the ring"
+            ),
         }
     }
 }
@@ -82,7 +110,7 @@ impl std::error::Error for OpError {}
 #[derive(Debug, Clone)]
 enum Payload {
     F32(Vec<f32>),
-    Quant { bits: u32, n: usize, codes: Arc<Vec<u8>>, scales: Arc<Vec<f32>> },
+    Quant { bits: u32, n: usize, codes: Arc<Vec<u8>>, scales: Arc<Vec<f32>>, checksum: u64 },
 }
 
 impl Payload {
@@ -93,6 +121,25 @@ impl Payload {
             Payload::Quant { codes, scales, .. } => codes.len() + scales.len() * 4,
         }
     }
+}
+
+/// FNV-1a over a chunk's packed codes then its scales' little-endian
+/// bytes — computed once at encode, carried in the packet, verified at
+/// every decode. A single flipped byte always changes the digest
+/// (xor-then-multiply-by-odd-prime is a bijection on u64).
+fn chunk_checksum(codes: &[u8], scales: &[f32]) -> u64 {
+    const OFFSET: u64 = 0xcbf2_9ce4_8422_2325;
+    const PRIME: u64 = 0x0000_0100_0000_01b3;
+    let mut h = OFFSET;
+    for &b in codes {
+        h = (h ^ b as u64).wrapping_mul(PRIME);
+    }
+    for s in scales {
+        for b in s.to_le_bytes() {
+            h = (h ^ b as u64).wrapping_mul(PRIME);
+        }
+    }
+    h
 }
 
 /// Wire shape of one rank's quantized contribution: (chunk count, bytes
@@ -121,6 +168,8 @@ pub struct Collective {
     from_prev: Receiver<Packet>,
     seq: u64,
     stats: CommStats,
+    /// seeded corruption schedule for this rank's incoming link
+    faults: Option<LinkFaults>,
 }
 
 impl Collective {
@@ -151,6 +200,7 @@ impl Collective {
                 from_prev,
                 seq: 0,
                 stats: CommStats::default(),
+                faults: None,
             });
         }
         out
@@ -166,6 +216,14 @@ impl Collective {
 
     pub fn stats(&self) -> CommStats {
         self.stats
+    }
+
+    /// Arm this endpoint's incoming link with a seeded corruption
+    /// schedule — every received quantized chunk then draws once per
+    /// delivery attempt.
+    pub fn with_link_faults(mut self, faults: LinkFaults) -> Self {
+        self.faults = Some(faults);
+        self
     }
 
     fn send_packet(&mut self, origin: usize, part: usize, payload: Payload) {
@@ -220,7 +278,11 @@ impl Collective {
         self.stats.ops += 1;
         self.stats.sim_time_s += self.link.ring_allgather_time(total_bytes, n);
         self.stats.wall_time_s += t0.elapsed().as_secs_f64();
-        Ok(slots.into_iter().map(|s| s.expect("ring hole")).collect())
+        let rank = self.rank;
+        slots
+            .into_iter()
+            .map(|s| s.ok_or(OpError::Payload { rank, op: "all_gather" }))
+            .collect()
     }
 
     /// All-reduce (sum): all-gather + local reduction (metadata-sized
@@ -321,7 +383,7 @@ impl Collective {
                 &mut codes,
                 &mut scales,
             )
-            .expect("exact-sized chunk buffers");
+            .map_err(|_| OpError::Payload { rank, op: "all_gather_quant" })?;
             let start = ci * QUANT_CHUNK;
             kernels::token_dequantize_packed_into(
                 &codes,
@@ -331,13 +393,15 @@ impl Collective {
                 bits,
                 &mut out[rank][start..start + chunk.len()],
             )
-            .expect("exact-sized chunk buffers");
+            .map_err(|_| OpError::Payload { rank, op: "all_gather_quant" })?;
             if n > 1 {
+                let checksum = chunk_checksum(&codes, &scales);
                 let payload = Payload::Quant {
                     bits,
                     n: chunk.len(),
                     codes: Arc::new(codes),
                     scales: Arc::new(scales),
+                    checksum,
                 };
                 self.send_packet(rank, ci, payload);
             }
@@ -358,11 +422,12 @@ impl Collective {
                 if p.origin >= n || start + clen > len {
                     return Err(OpError::Payload { rank, op: "all_gather_quant" });
                 }
+                let payload = self.deliver_checked(p.payload, "all_gather_quant")?;
                 if forward {
-                    self.send_packet(p.origin, p.part, p.payload.clone());
+                    self.send_packet(p.origin, p.part, payload.clone());
                 }
                 Self::decode_chunk(
-                    &p.payload,
+                    &payload,
                     &mut out[p.origin][start..start + clen],
                     rank,
                     "all_gather_quant",
@@ -425,6 +490,43 @@ impl Collective {
         Ok(out)
     }
 
+    /// Verify one received chunk against its carried checksum, replaying
+    /// the delivery under the armed [`LinkFaults`] schedule: a corrupted
+    /// attempt flips one byte of the delivered view, the mismatch counts
+    /// one `CommStats::retransmits`, and the chunk is re-pulled from the
+    /// sender's refcounted original — up to [`CHUNK_RETRY_LIMIT`]
+    /// attempts, after which this rank ejects with [`OpError::Corrupt`].
+    fn deliver_checked(&mut self, payload: Payload, op: &'static str) -> Result<Payload, OpError> {
+        let (codes, scales, checksum) = match &payload {
+            Payload::Quant { codes, scales, checksum, .. } => {
+                (Arc::clone(codes), Arc::clone(scales), *checksum)
+            }
+            Payload::F32(_) => return Ok(payload),
+        };
+        let mut attempts = 0u32;
+        loop {
+            attempts += 1;
+            let corrupted = self.faults.as_mut().is_some_and(|f| f.corrupt_next());
+            let delivered_ok = if corrupted {
+                let mut view = (*codes).clone();
+                let victim = self.faults.as_mut().map_or(0, |f| f.victim_byte(view.len()));
+                if let Some(b) = view.get_mut(victim) {
+                    *b ^= 0x40;
+                }
+                chunk_checksum(&view, &scales) == checksum
+            } else {
+                chunk_checksum(&codes, &scales) == checksum
+            };
+            if delivered_ok && !corrupted {
+                return Ok(payload);
+            }
+            self.stats.retransmits += 1;
+            if attempts >= CHUNK_RETRY_LIMIT {
+                return Err(OpError::Corrupt { rank: self.rank, op, attempts });
+            }
+        }
+    }
+
     fn decode_chunk(
         payload: &Payload,
         out: &mut [f32],
@@ -432,7 +534,10 @@ impl Collective {
         op: &'static str,
     ) -> Result<(), OpError> {
         match payload {
-            Payload::Quant { bits, n, codes, scales } => {
+            Payload::Quant { bits, n, codes, scales, checksum } => {
+                if chunk_checksum(codes, scales) != *checksum {
+                    return Err(OpError::Payload { rank, op });
+                }
                 kernels::token_dequantize_packed_into(codes, scales, 1, *n, *bits, out)
                     .map_err(|_| OpError::Payload { rank, op })
             }
@@ -444,7 +549,7 @@ impl Collective {
 #[cfg(test)]
 mod tests {
     use super::*;
-    use crate::collective::Transport;
+    use crate::collective::{LinkFaults, Transport};
 
     fn run_world<F, T>(n: usize, f: F) -> Vec<T>
     where
@@ -557,6 +662,98 @@ mod tests {
     fn quant_rejects_unpackable_bits() {
         let results = run_world(1, |mut c| c.all_gather_quant(&[1.0], 3).is_err());
         assert!(results[0]);
+    }
+
+    #[test]
+    fn chunk_checksum_detects_any_byte_flip() {
+        let codes = vec![1u8, 2, 3, 250];
+        let scales = vec![0.5f32, 2.0];
+        let good = chunk_checksum(&codes, &scales);
+        for i in 0..codes.len() {
+            let mut bad = codes.clone();
+            bad[i] ^= 0x40;
+            assert_ne!(chunk_checksum(&bad, &scales), good, "flip at byte {i}");
+        }
+        assert_ne!(chunk_checksum(&codes, &[0.5, 2.5]), good, "scale change");
+    }
+
+    #[test]
+    fn checksum_retry_heals_transient_corruption() {
+        // a seed whose draw sequence is corrupt-then-clean, mirroring
+        // deliver_checked's draws (victim_byte consumes one when corrupt)
+        let seed = (0u64..)
+            .find(|s| {
+                let mut f = LinkFaults::new(0.5, *s);
+                f.corrupt_next() && {
+                    f.victim_byte(8);
+                    !f.corrupt_next()
+                }
+            })
+            .expect("some seed draws corrupt-then-clean");
+        let mut ring = Collective::ring(Topology::new(1, Transport::NvlinkRdma));
+        let mut c = ring.pop().unwrap().with_link_faults(LinkFaults::new(0.5, seed));
+        let data: Vec<f32> = (0..16).map(|i| i as f32 - 8.0).collect();
+        let mut codes = vec![0u8; kernels::packed_len(data.len(), 8)];
+        let mut scales = vec![0f32; 1];
+        kernels::token_quantize_packed_into(&data, 1, data.len(), 8, &mut codes, &mut scales)
+            .unwrap();
+        let checksum = chunk_checksum(&codes, &scales);
+        let payload = Payload::Quant {
+            bits: 8,
+            n: data.len(),
+            codes: Arc::new(codes),
+            scales: Arc::new(scales),
+            checksum,
+        };
+        let healed = c.deliver_checked(payload, "test").expect("retry heals the chunk");
+        assert_eq!(c.stats().retransmits, 1, "exactly one retransmit");
+        match healed {
+            Payload::Quant { checksum: cs, .. } => assert_eq!(cs, checksum),
+            Payload::F32(_) => panic!("payload kind changed in delivery"),
+        }
+    }
+
+    #[test]
+    fn corrupt_link_ejects_and_survivors_rebuild() {
+        let ring = Collective::ring(Topology::new(3, Transport::NvlinkRdma));
+        let mut handles = Vec::new();
+        for endpoint in ring {
+            handles.push(std::thread::spawn(move || {
+                let mut c = if endpoint.rank() == 1 {
+                    endpoint.with_link_faults(LinkFaults::new(1.0, 7))
+                } else {
+                    endpoint
+                };
+                let rank = c.rank();
+                let res = c.all_gather_q8(&[rank as f32; 8]);
+                let stats = c.stats();
+                // dropping c here is the eject: its channel endpoints
+                // close, so the neighbors disconnect instead of timing out
+                (res, stats)
+            }));
+        }
+        let results: Vec<_> = handles.into_iter().map(|h| h.join().unwrap()).collect();
+        match &results[1].0 {
+            Err(OpError::Corrupt { rank: 1, attempts, .. }) => {
+                assert_eq!(*attempts, CHUNK_RETRY_LIMIT);
+            }
+            other => panic!("rank 1 should eject with Corrupt, got {other:?}"),
+        }
+        assert_eq!(results[1].1.retransmits, CHUNK_RETRY_LIMIT as u64);
+        // rank 2 receives directly from the dead rank: its next recv is a
+        // fast disconnect, not a timeout
+        assert!(
+            matches!(results[2].0, Err(OpError::Recv { .. })),
+            "rank 2 should see the disconnect"
+        );
+        // rank 0 sat downstream of every forward already buffered before
+        // the cut, so it drains them and completes deterministically
+        let parts = results[0].0.as_ref().expect("rank 0 drains buffered forwards");
+        assert_eq!(parts.len(), 3);
+        // the survivors rebuild a smaller ring and the op goes through
+        let redo = run_world(2, |mut c| c.all_gather_q8(&[c.rank() as f32; 8]).unwrap());
+        assert_eq!(redo[0], redo[1]);
+        assert_eq!(redo[0].len(), 2);
     }
 
     #[test]

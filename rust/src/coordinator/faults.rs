@@ -1,0 +1,285 @@
+//! Seeded fault injection: the deterministic failure schedule the
+//! recovery machinery is tested against.
+//!
+//! A [`FaultPlan`] names *what goes wrong and when* — shard crashes at a
+//! decode step, transient stalls of K steps, link chunk corruption with
+//! probability p — under a single seed, so a failing recovery run
+//! replays bit-identically. The plan itself does nothing: it compiles
+//! into per-shard [`runtime::ShardFaults`] executed inside the sim
+//! backend (the "device" dies; the scheduler has to notice) and
+//! per-rank [`collective::LinkFaults`] drawn by the ring transport.
+//!
+//! [`FaultSpec`] carries the server-side handling knobs next to the
+//! plan: the per-shard step deadline and the miss budget `M` driving
+//! the Healthy → Suspect → Dead lifecycle ([`ShardHealth`]). Liveness
+//! tracking is armed only when a plan is present — on a healthy
+//! deployment (and on slow CI runners) there is no wall-clock deadline
+//! that could false-kill a busy shard.
+
+use std::time::Duration;
+
+use anyhow::{anyhow, bail, Result};
+
+use crate::collective::LinkFaults;
+use crate::runtime::ShardFaults;
+
+/// Permanent crash of one shard at a 0-based fused-decode step.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct CrashFault {
+    pub shard: usize,
+    pub at_step: u64,
+}
+
+/// Transient stall: at `at_step`, the shard burns `steps` extra
+/// fused-step costs of wall clock, then resumes.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct StallFault {
+    pub shard: usize,
+    pub at_step: u64,
+    pub steps: u64,
+}
+
+/// A seeded, reproducible failure schedule for one serving run.
+#[derive(Debug, Clone, PartialEq, Default)]
+pub struct FaultPlan {
+    pub crashes: Vec<CrashFault>,
+    pub stalls: Vec<StallFault>,
+    /// per-chunk wire corruption probability in [0, 1]
+    pub corrupt_p: f64,
+    pub seed: u64,
+}
+
+impl FaultPlan {
+    pub fn new(seed: u64) -> Self {
+        FaultPlan { seed, ..Default::default() }
+    }
+
+    /// Schedule a permanent crash of `shard` at decode step `at_step`.
+    pub fn crash(mut self, shard: usize, at_step: u64) -> Self {
+        self.crashes.push(CrashFault { shard, at_step });
+        self
+    }
+
+    /// Schedule a `steps`-step transient stall on `shard` at `at_step`.
+    pub fn stall(mut self, shard: usize, at_step: u64, steps: u64) -> Self {
+        self.stalls.push(StallFault { shard, at_step, steps });
+        self
+    }
+
+    /// Set the per-chunk wire corruption probability.
+    pub fn corrupt(mut self, p: f64) -> Self {
+        self.corrupt_p = p;
+        self
+    }
+
+    /// Compile the schedule one sim shard executes. Multiple crash
+    /// clauses for a shard collapse to the earliest (a device dies
+    /// once); stalls keep the first clause.
+    pub fn shard_faults(&self, shard: usize) -> ShardFaults {
+        ShardFaults {
+            crash_at_step: self
+                .crashes
+                .iter()
+                .filter(|c| c.shard == shard)
+                .map(|c| c.at_step)
+                .min(),
+            stall: self
+                .stalls
+                .iter()
+                .find(|s| s.shard == shard)
+                .map(|s| (s.at_step, s.steps)),
+        }
+    }
+
+    /// Per-rank corruption schedule for the ring transport, derived
+    /// from the plan seed so ranks draw independent but reproducible
+    /// streams.
+    pub fn link_faults(&self, rank: usize) -> LinkFaults {
+        LinkFaults::new(
+            self.corrupt_p,
+            self.seed ^ (rank as u64 + 1).wrapping_mul(0x9E37_79B9_7F4A_7C15),
+        )
+    }
+
+    /// Parse a plan from the `--fault-plan` CLI spec: comma-separated
+    /// clauses `crash:<shard>@<step>`, `stall:<shard>@<step>x<steps>`,
+    /// `corrupt:<p>`, `seed:<n>`. Example:
+    ///
+    /// ```text
+    /// crash:1@40,stall:2@10x5,corrupt:0.01,seed:7
+    /// ```
+    pub fn parse(spec: &str) -> Result<FaultPlan> {
+        fn num<T: std::str::FromStr>(what: &str, clause: &str, s: &str) -> Result<T> {
+            s.trim()
+                .parse::<T>()
+                .map_err(|_| anyhow!("fault clause `{clause}`: bad {what} `{}`", s.trim()))
+        }
+        let mut plan = FaultPlan::default();
+        for clause in spec.split(',').map(str::trim).filter(|c| !c.is_empty()) {
+            let (kind, rest) = clause
+                .split_once(':')
+                .ok_or_else(|| anyhow!("fault clause `{clause}` needs a `kind:` prefix"))?;
+            match kind {
+                "crash" => {
+                    let (shard, step) = rest.split_once('@').ok_or_else(|| {
+                        anyhow!("crash clause `{clause}` needs `shard@step`")
+                    })?;
+                    plan.crashes.push(CrashFault {
+                        shard: num("shard", clause, shard)?,
+                        at_step: num("step", clause, step)?,
+                    });
+                }
+                "stall" => {
+                    let (shard, at) = rest.split_once('@').ok_or_else(|| {
+                        anyhow!("stall clause `{clause}` needs `shard@step x steps`")
+                    })?;
+                    let (step, steps) = at.split_once('x').ok_or_else(|| {
+                        anyhow!("stall clause `{clause}` needs `@<step>x<steps>`")
+                    })?;
+                    plan.stalls.push(StallFault {
+                        shard: num("shard", clause, shard)?,
+                        at_step: num("step", clause, step)?,
+                        steps: num("steps", clause, steps)?,
+                    });
+                }
+                "corrupt" => {
+                    let p: f64 = num("probability", clause, rest)?;
+                    if !(0.0..=1.0).contains(&p) {
+                        bail!("fault clause `{clause}`: probability must be in [0, 1]");
+                    }
+                    plan.corrupt_p = p;
+                }
+                "seed" => plan.seed = num("seed", clause, rest)?,
+                other => bail!(
+                    "unknown fault clause kind `{other}` (expected crash | stall | \
+                     corrupt | seed)"
+                ),
+            }
+        }
+        Ok(plan)
+    }
+}
+
+/// Server-side fault handling: the (optional) injection plan plus the
+/// detection knobs. With `plan: None` (the default) no fault is
+/// injected and liveness tracking stays disarmed.
+#[derive(Debug, Clone, PartialEq)]
+pub struct FaultSpec {
+    pub plan: Option<FaultPlan>,
+    /// a shard with runnable work that stays silent past this deadline
+    /// accrues one miss
+    pub step_deadline: Duration,
+    /// consecutive misses before Suspect becomes Dead (the `M` in the
+    /// detection-latency gate: detection must land within `M + 1`
+    /// deadlines)
+    pub max_misses: u32,
+}
+
+impl Default for FaultSpec {
+    fn default() -> Self {
+        FaultSpec { plan: None, step_deadline: Duration::from_millis(250), max_misses: 3 }
+    }
+}
+
+impl FaultSpec {
+    pub fn with_plan(plan: FaultPlan) -> Self {
+        FaultSpec { plan: Some(plan), ..Default::default() }
+    }
+
+    /// Liveness tracking runs only when a plan is configured.
+    pub fn active(&self) -> bool {
+        self.plan.is_some()
+    }
+
+    /// Total silence (with runnable work) after which a shard is Dead.
+    pub fn death_deadline(&self) -> Duration {
+        self.step_deadline * self.max_misses.max(1)
+    }
+}
+
+/// Shard lifecycle as seen by the dispatcher's liveness tracker.
+///
+/// `Healthy` shards met their last step deadline. A shard with
+/// runnable work that misses one deadline is `Suspect` (still routed
+/// to — stalls recover); missing `max_misses` consecutive deadlines is
+/// `Dead`: its sender is dropped, its in-flight requests migrate, and
+/// it never rejoins the routing set.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Default)]
+pub enum ShardHealth {
+    #[default]
+    Healthy,
+    Suspect,
+    Dead,
+}
+
+impl ShardHealth {
+    pub fn name(self) -> &'static str {
+        match self {
+            ShardHealth::Healthy => "healthy",
+            ShardHealth::Suspect => "suspect",
+            ShardHealth::Dead => "dead",
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn parse_full_spec() {
+        let p = FaultPlan::parse("crash:1@40, stall:2@10x5, corrupt:0.01, seed:7").unwrap();
+        assert_eq!(p.crashes, vec![CrashFault { shard: 1, at_step: 40 }]);
+        assert_eq!(p.stalls, vec![StallFault { shard: 2, at_step: 10, steps: 5 }]);
+        assert_eq!(p.corrupt_p, 0.01);
+        assert_eq!(p.seed, 7);
+        assert_eq!(FaultPlan::parse("").unwrap(), FaultPlan::default());
+    }
+
+    #[test]
+    fn parse_rejects_malformed_clauses() {
+        for bad in [
+            "crash:1",          // missing @step
+            "crash:x@4",        // bad shard
+            "stall:2@10",       // missing xsteps
+            "corrupt:1.5",      // out of range
+            "corrupt:x",        // not a number
+            "explode:1@2",      // unknown kind
+            "seed",             // no colon
+        ] {
+            assert!(FaultPlan::parse(bad).is_err(), "`{bad}` should not parse");
+        }
+    }
+
+    #[test]
+    fn compiles_per_shard_schedules() {
+        let p = FaultPlan::new(3).crash(1, 40).crash(1, 20).stall(0, 5, 3);
+        assert_eq!(p.shard_faults(1).crash_at_step, Some(20), "earliest crash wins");
+        assert_eq!(p.shard_faults(0).stall, Some((5, 3)));
+        assert!(p.shard_faults(2).is_empty());
+    }
+
+    #[test]
+    fn link_faults_are_seeded_per_rank() {
+        let p = FaultPlan::new(9).corrupt(0.5);
+        let mut a = p.link_faults(0);
+        let mut b = p.link_faults(0);
+        let draws_a: Vec<bool> = (0..64).map(|_| a.corrupt_next()).collect();
+        let draws_b: Vec<bool> = (0..64).map(|_| b.corrupt_next()).collect();
+        assert_eq!(draws_a, draws_b, "same rank + seed must replay identically");
+        assert!(draws_a.iter().any(|c| *c) && !draws_a.iter().all(|c| *c));
+        let mut c = p.link_faults(1);
+        let draws_c: Vec<bool> = (0..64).map(|_| c.corrupt_next()).collect();
+        assert_ne!(draws_a, draws_c, "ranks draw independent streams");
+    }
+
+    #[test]
+    fn spec_defaults_are_disarmed() {
+        let s = FaultSpec::default();
+        assert!(!s.active());
+        assert_eq!(s.death_deadline(), Duration::from_millis(750));
+        assert!(FaultSpec::with_plan(FaultPlan::new(1).crash(0, 1)).active());
+        assert_eq!(ShardHealth::default(), ShardHealth::Healthy);
+        assert_eq!(ShardHealth::Dead.name(), "dead");
+    }
+}

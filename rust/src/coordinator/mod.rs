@@ -29,9 +29,13 @@
 //!                `runtime::SimModel`
 //!   server     — event-driven dispatcher: open-loop `Arrival` replay or
 //!                closed-loop firehose, routing via `RouteDecision`,
-//!                per-token `ServeEvent` streaming, and the SLO gate
+//!                per-token `ServeEvent` streaming, the SLO gate
 //!                (rolling per-shard latency windows feeding the
-//!                admission policy)
+//!                admission policy), and the fault-recovery machinery
+//!                (liveness tracking, kill, migrate)
+//!   faults     — seeded [`FaultPlan`] (shard crash @ step, transient
+//!                stall, link chunk corruption) + the [`FaultSpec`]
+//!                detection knobs and the [`ShardHealth`] lifecycle
 //!   scale_sync — Alg. 1 EMA trackers + Eqs. 7-8 collective sync
 //!   bitwidth   — Thm. 3 greedy per-layer mixed-precision search
 //!   workload   — Poisson arrival generator (open loop) + firehose
@@ -85,12 +89,34 @@
 //! finished slots immediately, so one long request no longer
 //! head-of-line-blocks the other slots of its batch.
 //!
+//! **Fault tolerance** (continuous mode, armed by a seeded
+//! [`FaultPlan`] on `ServerConfig::fault`): every worker event doubles
+//! as its shard's liveness beat. The lifecycle is Healthy → Suspect →
+//! Dead ([`ShardHealth`]): a shard with runnable work that misses one
+//! `step_deadline` is Suspect (still routed to — injected stalls
+//! recover), and `max_misses` consecutive silent deadlines make it
+//! Dead. Death is permanent: the shard leaves the routing set, and
+//! each in-flight request migrates with exactly-once delivery — the
+//! router charge refunds idempotently, the admitted prompt plus every
+//! already-delivered token re-prefills as a prefix on the least-loaded
+//! survivor (the deterministic trajectory continues token-identically),
+//! and the new stream's worker-local positions are rebased by the
+//! handoff offset so each global position is delivered once: buffered
+//! pre-crash duplicates are suppressed, gaps are an anomaly gated to
+//! zero. Lost capacity flows into admission by construction — the dead
+//! shard's load lands on the survivors' backlog, which the predictive
+//! gate prices, shedding batch traffic instead of breaching the SLO.
+//! On the wire, ring collectives carry per-chunk checksums with
+//! bounded retry-then-eject (`collective`), so link corruption either
+//! heals or removes the rank rather than corrupting scales.
+//!
 //! Python never appears here: workers execute AOT artifacts through PJRT
 //! (or the simulated backend offline).
 
 mod batcher;
 mod bitwidth;
 mod cost;
+mod faults;
 mod kv_cache;
 mod request;
 mod router;
@@ -105,9 +131,10 @@ pub use bitwidth::{
     quant_mse, search_bitwidths, size_reduction, BitwidthChoice, LayerInfo, SearchPolicy,
     BIT_CHOICES,
 };
+pub use faults::{CrashFault, FaultPlan, FaultSpec, ShardHealth, StallFault};
 pub use kv_cache::{KvCache, PrefillPage};
 pub use request::{Priority, Request, RequestId, Response, ServeEvent};
 pub use router::{request_cost, RouteDecision, Router};
-pub use scale_sync::{ScaleSync, SYNC_WIRE_BITS};
+pub use scale_sync::{sync_wire_bits_for, ScaleSync, SYNC_WIRE_BITS};
 pub use server::{Server, ServerConfig, ServerReport};
 pub use worker::{Backend, Worker, WorkerStats};

@@ -99,14 +99,21 @@ pub struct Response {
 /// *emission* instant (`at`): inter-token gaps are measured between
 /// emission stamps, not dispatcher receive times, so a dispatcher busy
 /// parking or shedding arrivals cannot inflate the decode-cadence
-/// signal. `Shed` is the other terminal event: the dispatcher's
-/// admission gate refused the request — a shed request emits exactly
-/// one `Shed` and never a `Token` or `Done`.
+/// signal. Tokens also carry `seq`, their 0-based position in the
+/// *emitting worker's* stream — after a failover re-prefills the
+/// delivered prefix on a new shard, the dispatcher rebases `seq` by the
+/// handoff offset and dedupes by global position, which is what makes
+/// delivery exactly-once across a migration. `Shed` is the other
+/// terminal event: the dispatcher's admission gate refused the request
+/// — a shed request emits exactly one `Shed` and never a `Token` or
+/// `Done`.
 #[derive(Debug, Clone)]
 pub enum ServeEvent {
     Token {
         id: RequestId,
         token: i32,
+        /// 0-based position in the emitting worker's output stream
+        seq: usize,
         /// true for the prefill-produced first token
         first: bool,
         /// instant the worker emitted the token
@@ -143,12 +150,12 @@ mod tests {
     }
 
     #[test]
-    fn serve_event_carries_first_flag_and_stamp() {
+    fn serve_event_carries_first_flag_seq_and_stamp() {
         let before = Instant::now();
-        let e = ServeEvent::Token { id: 4, token: 9, first: true, at: Instant::now() };
+        let e = ServeEvent::Token { id: 4, token: 9, seq: 0, first: true, at: Instant::now() };
         match e {
-            ServeEvent::Token { id, token, first, at } => {
-                assert_eq!((id, token, first), (4, 9, true));
+            ServeEvent::Token { id, token, seq, first, at } => {
+                assert_eq!((id, token, seq, first), (4, 9, 0, true));
                 assert!(at >= before);
             }
             _ => panic!("wrong arm"),

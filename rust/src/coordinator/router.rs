@@ -51,6 +51,13 @@ pub struct Router {
     decode_load: Vec<usize>,
     /// request -> charge; sessions stay on their shard for KV affinity
     sessions: BTreeMap<RequestId, Charge>,
+    /// shards still in the routing set; a dead shard never rejoins.
+    /// Killing a shard concentrates subsequent load (and therefore
+    /// `backlog`) on the survivors, which is exactly how capacity loss
+    /// reaches the predictive admission gate: the same target now
+    /// prices against 1/(n-1) more backlog per shard and sheds batch
+    /// traffic instead of breaching the SLO.
+    alive: Vec<bool>,
     next_id: RequestId,
 }
 
@@ -64,6 +71,7 @@ impl Router {
             prefill_load: vec![0; n_shards],
             decode_load: vec![0; n_shards],
             sessions: BTreeMap::new(),
+            alive: vec![true; n_shards],
             next_id: 1,
         }
     }
@@ -79,8 +87,10 @@ impl Router {
     }
 
     /// Admit a request: BOS-prefix, truncate the prompt to fit, assign
-    /// the shard with the fewest in-flight tokens (ties -> lowest rank,
-    /// keeps assignment deterministic for the property tests).
+    /// the live shard with the fewest in-flight tokens (ties -> lowest
+    /// rank, keeps assignment deterministic for the property tests).
+    /// With every shard dead (degenerate — the dispatcher sheds before
+    /// routing in that state) shard 0 absorbs the charge.
     pub fn admit(&mut self, mut req: Request) -> (Request, RouteDecision) {
         if req.prompt.first() != Some(&BOS) {
             req.prompt.insert(0, BOS);
@@ -89,21 +99,58 @@ impl Router {
             req.prompt.truncate(self.max_prompt);
         }
         let cost = request_cost(&req);
-        let shard = self
-            .load
+        let shard = self.least_loaded_alive().unwrap_or(0);
+        self.charge(shard, &req);
+        (req, RouteDecision { shard, cost })
+    }
+
+    /// Route a failover request to a healthy shard *without* the
+    /// admission rewrite: the prompt was already BOS-prefixed/truncated
+    /// at original admission and has since been extended with the
+    /// delivered tokens (so it may legitimately exceed `max_prompt`;
+    /// the worker caps ingestion at ctx - 1 and the trajectory is a
+    /// pure function of the prefix, so the continuation is
+    /// token-identical). Returns `None` when no live shard remains.
+    pub fn route_migrated(&mut self, req: &Request) -> Option<RouteDecision> {
+        let shard = self.least_loaded_alive()?;
+        self.charge(shard, req);
+        Some(RouteDecision { shard, cost: request_cost(req) })
+    }
+
+    fn least_loaded_alive(&self) -> Option<usize> {
+        self.load
             .iter()
             .enumerate()
+            .filter(|(i, _)| self.alive[*i])
             .min_by_key(|(i, l)| (**l, *i))
             .map(|(i, _)| i)
-            .unwrap();
-        self.load[shard] += cost;
+    }
+
+    fn charge(&mut self, shard: usize, req: &Request) {
+        self.load[shard] += request_cost(req);
         self.prefill_load[shard] += req.prompt.len();
         self.decode_load[shard] += req.max_new_tokens;
         self.sessions.insert(
             req.id,
             Charge { shard, prefill: req.prompt.len(), decode: req.max_new_tokens },
         );
-        (req, RouteDecision { shard, cost })
+    }
+
+    /// Permanently remove a shard from the routing set. Its outstanding
+    /// sessions are the dispatcher's to release (refund) and re-route;
+    /// the shard itself never rejoins.
+    pub fn mark_dead(&mut self, shard: usize) {
+        if let Some(a) = self.alive.get_mut(shard) {
+            *a = false;
+        }
+    }
+
+    pub fn is_alive(&self, shard: usize) -> bool {
+        self.alive.get(shard).copied().unwrap_or(false)
+    }
+
+    pub fn alive_count(&self) -> usize {
+        self.alive.iter().filter(|a| **a).count()
     }
 
     /// Mark a request complete, releasing its token charge.
@@ -258,6 +305,41 @@ mod tests {
         r.complete(1);
         assert_eq!(r.in_flight(), 0);
         assert_eq!(r.load(), &[0, 0]);
+    }
+
+    #[test]
+    fn dead_shards_leave_the_routing_set() {
+        let mut r = Router::new(3, 16);
+        assert_eq!(r.alive_count(), 3);
+        r.mark_dead(1);
+        assert!(!r.is_alive(1) && r.is_alive(0));
+        assert_eq!(r.alive_count(), 2);
+        // four admissions split over the two survivors, never shard 1
+        for i in 1..=4 {
+            let (_, d) = r.admit(req(i, 2));
+            assert_ne!(d.shard, 1, "routed to a dead shard");
+        }
+        assert_eq!(r.load()[1], 0);
+    }
+
+    #[test]
+    fn route_migrated_skips_the_admission_rewrite() {
+        let mut r = Router::new(2, 8);
+        r.mark_dead(0);
+        // a failover prompt longer than max_prompt (original admitted
+        // prompt + delivered tokens) must survive untouched
+        let m = Request::new(9, vec![5; 20], 3);
+        let d = r.route_migrated(&m).unwrap();
+        assert_eq!(d.shard, 1);
+        assert_eq!(d.cost, 20 + 3, "no truncation, no BOS insert");
+        assert_eq!(r.backlog(1), (20, 3));
+        assert_eq!(r.shard_of(9), Some(1));
+        r.complete(9);
+        assert_eq!(r.backlog_total(), (0, 0));
+        // no live shard -> no route
+        r.mark_dead(1);
+        assert!(r.route_migrated(&Request::new(10, vec![5; 4], 1)).is_none());
+        assert_eq!(r.alive_count(), 0);
     }
 
     #[test]

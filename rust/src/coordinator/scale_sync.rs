@@ -9,9 +9,12 @@
 //!
 //! The sync traffic itself rides the quantized wire
 //! (`all_gather_quant` for deltas, `all_reduce_sum_q` for zero points,
-//! both at [`SYNC_WIRE_BITS`] bits): every shard decodes the same
-//! low-bit bytes, so the merged state is still bit-identical across
-//! shards, at ~4x fewer wire bytes.
+//! both at the synchronizer's wire bitwidth — [`SYNC_WIRE_BITS`] by
+//! default, [`sync_wire_bits_for`] per transport tier): every shard
+//! decodes the same low-bit bytes, so the merged state is still
+//! bit-identical across shards, at ~4x fewer wire bytes (8-bit) or ~8x
+//! (the 4-bit edge/TCP tier, trading wire bytes for a coarser — still
+//! conservative — merge).
 //!
 //! Deltas ship in the **log2 domain**: max commutes with the monotone
 //! log, so the merge semantics are unchanged, and the wire error becomes
@@ -34,13 +37,28 @@
 //! merged zero point lands within one step of the exact average
 //! (pinned by `zero_point_sync_error_bounded_to_one_grid_step`).
 
-use crate::collective::{Collective, OpError};
+use crate::collective::{Collective, OpError, Transport};
 use crate::quant::{EmaScaleTracker, EmaState};
 
-/// Wire bitwidth of the scale-sync collectives (paper §3.3: NCCL payloads
-/// ship low-bit). 8 keeps the log-domain delta error at the low percent
-/// level across any magnitude spread while cutting sync bytes ~4x vs f32.
+/// Default wire bitwidth of the scale-sync collectives (paper §3.3: NCCL
+/// payloads ship low-bit). 8 keeps the log-domain delta error at the low
+/// percent level across any magnitude spread while cutting sync bytes
+/// ~4x vs f32.
 pub const SYNC_WIRE_BITS: u32 = 8;
+
+/// Sync wire bitwidth for a transport tier: datacenter fabrics ship the
+/// default 8-bit sync; the TCP fallback (paper's edge / CPU-GPU hybrid
+/// tier, also where degraded links land) drops to 4 — the log-domain
+/// delta error grows from the percent level to the ~10% level and zero
+/// points coarsen, but sync bytes halve again on the slowest links. The
+/// merge stays conservative at any width (the half-step pad scales with
+/// the wire's qmax).
+pub fn sync_wire_bits_for(transport: Transport) -> u32 {
+    match transport {
+        Transport::NvlinkRdma | Transport::Infiniband => SYNC_WIRE_BITS,
+        Transport::Tcp => 4,
+    }
+}
 
 /// Per-shard synchronizer: a tracker per tracked region (e.g. one per
 /// layer input) plus the rank's collective endpoint.
@@ -51,6 +69,8 @@ pub struct ScaleSync {
     eps: f32,
     /// sync every `period` observations (0 = never)
     period: u64,
+    /// wire bitwidth of the sync collectives (2, 4, or 8)
+    wire_bits: u32,
     observations: u64,
     pub syncs: u64,
 }
@@ -61,9 +81,23 @@ impl ScaleSync {
             trackers: (0..n_regions).map(|_| EmaScaleTracker::new(alpha, eps)).collect(),
             eps,
             period,
+            wire_bits: SYNC_WIRE_BITS,
             observations: 0,
             syncs: 0,
         }
+    }
+
+    /// Override the sync wire bitwidth — must be 2, 4, or 8 (anything
+    /// else is rejected by the collective at sync time, as
+    /// `OpError::InvalidBits`). Every shard must pick the same width
+    /// (SPMD contract); [`sync_wire_bits_for`] maps transport tiers.
+    pub fn with_wire_bits(mut self, bits: u32) -> Self {
+        self.wire_bits = bits;
+        self
+    }
+
+    pub fn wire_bits(&self) -> u32 {
+        self.wire_bits
     }
 
     pub fn n_regions(&self) -> usize {
@@ -103,20 +137,21 @@ impl ScaleSync {
             .collect();
         let local_zps: Vec<f32> =
             self.trackers.iter().map(|t| t.state().zero_point).collect();
-        let parts = comm.all_gather_quant(&local_log_deltas, SYNC_WIRE_BITS)?;
-        let zp_sum = comm.all_reduce_sum_q(&local_zps, SYNC_WIRE_BITS)?;
+        let parts = comm.all_gather_quant(&local_log_deltas, self.wire_bits)?;
+        let zp_sum = comm.all_reduce_sum_q(&local_zps, self.wire_bits)?;
         let world = comm.world() as f32;
         // Conservative max-merge: a decoded log can sit up to half its
-        // sender's wire step below the true value. That step is bounded
-        // by the decoded amax (the max-magnitude element decodes
-        // exactly, modulo f32 rounding — hence the 1e-5 headroom), so
-        // padding each contribution by its half-step bound guarantees
-        // merged >= every shard's true max ("no shard's range is
-        // clipped"), overshooting by at most ~one wire step.
+        // sender's wire step (amax / (2*qmax)) below the true value.
+        // That step is bounded by the decoded amax (the max-magnitude
+        // element decodes exactly, modulo f32 rounding — hence the 1e-5
+        // headroom), so padding each contribution by its half-step bound
+        // guarantees merged >= every shard's true max ("no shard's range
+        // is clipped"), overshooting by at most ~one wire step.
+        let qmax = ((1u32 << (self.wire_bits - 1)) - 1) as f32;
         let mut merged_logs = vec![f32::NEG_INFINITY; self.trackers.len()];
         for v in &parts {
             let amax = v.iter().fold(0f32, |a, x| a.max(x.abs())) * 1.00001;
-            let half_step = amax / 254.0;
+            let half_step = amax / (2.0 * qmax);
             for (m, x) in merged_logs.iter_mut().zip(v) {
                 *m = m.max(x + half_step);
             }
@@ -251,6 +286,34 @@ mod tests {
             for (a, b) in states[0].iter().zip(other) {
                 assert_eq!(a.delta, b.delta);
             }
+        }
+    }
+
+    #[test]
+    fn transport_tiers_map_to_wire_bits() {
+        assert_eq!(sync_wire_bits_for(Transport::NvlinkRdma), SYNC_WIRE_BITS);
+        assert_eq!(sync_wire_bits_for(Transport::Infiniband), SYNC_WIRE_BITS);
+        assert_eq!(sync_wire_bits_for(Transport::Tcp), 4);
+        let s = ScaleSync::new(1, 0.9, 1e-6, 0).with_wire_bits(sync_wire_bits_for(Transport::Tcp));
+        assert_eq!(s.wire_bits(), 4);
+    }
+
+    #[test]
+    fn four_bit_wire_sync_stays_identical_and_conservative() {
+        // the edge/TCP tier: coarser wire, same guarantees — bit-identical
+        // adopted states and no shard's range clipped
+        let states = run_shards(3, |rank, mut comm| {
+            let mut s = ScaleSync::new(1, 0.9, 1e-6, 0).with_wire_bits(4);
+            s.observe(0, &[(rank as f32 + 1.0) * 2.0]);
+            s.sync(&mut comm).unwrap()
+        });
+        for st in &states {
+            assert!(st[0].delta >= 6.0 * (1.0 - 1e-6), "clipped: {:?}", st);
+            assert!(st[0].delta <= 6.0 * 1.5, "overshot past one 4-bit step: {:?}", st);
+        }
+        for other in &states[1..] {
+            assert_eq!(states[0][0].delta, other[0].delta);
+            assert_eq!(states[0][0].zero_point, other[0].zero_point);
         }
     }
 

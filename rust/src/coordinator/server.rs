@@ -29,7 +29,31 @@
 //! [`ServeEvent::Shed`] with their router charge refunded; batch-
 //! priority load rides the low queue tier, which interactive traffic
 //! preempts.
+//!
+//! **Fault tolerance** (armed by `ServerConfig::fault` carrying a
+//! seeded `FaultPlan`; continuous mode only): the dispatcher tracks
+//! every in-flight request in a [`Flight`] table and treats each
+//! worker event as that shard's liveness beat. A shard with runnable
+//! work that stays silent past `step_deadline` turns `Suspect`; past
+//! `max_misses` consecutive deadlines it is `Dead` — its sender drops,
+//! the router removes it from the routing set permanently, and every
+//! in-flight request it held migrates: the router charge is refunded
+//! idempotently, the admitted prompt plus all already-delivered tokens
+//! re-prefill as a prefix on the least-loaded survivor, and the new
+//! stream is rebased by the handoff offset so the dispatcher delivers
+//! each token position exactly once (duplicates from a resurrected or
+//! buffered stream are suppressed, gaps are impossible by
+//! construction — both are counted in the report). Capacity loss flows
+//! into admission automatically: survivors absorb the dead shard's
+//! backlog, so the predictive gate prices the thinner fleet and sheds
+//! batch work instead of breaching the SLO. An injected sim crash is
+//! silent (`runtime::is_injected_crash`) — detection must come from
+//! the missing beats, exactly as with a real dead rank; any *other*
+//! worker error is surfaced: recorded in `ServerReport::worker_errors`
+//! and handled as a kill when fault handling is armed, or propagated
+//! as before when it is not.
 
+use std::cmp::Ordering;
 use std::collections::{HashMap, HashSet, VecDeque};
 use std::path::PathBuf;
 use std::sync::mpsc::{channel, Receiver, RecvTimeoutError, Sender, TryRecvError};
@@ -41,11 +65,12 @@ use anyhow::{anyhow, bail, Result};
 
 use crate::metrics::{mean_ci95, percentile, Breakdown, RollingWindow, Stage, Summary};
 use crate::quant::Variant;
-use crate::runtime::{Registry, SimCost, SimModel};
+use crate::runtime::{is_injected_crash, Registry, SimCost, SimModel};
 use crate::util::pool;
 
 use super::batcher::{AdmissionPolicy, Batch, BatchPolicy, Batcher, SchedulerMode};
 use super::cost::CostEstimator;
+use super::faults::{FaultSpec, ShardHealth};
 use super::request::{Priority, Request, RequestId, Response, ServeEvent};
 use super::router::Router;
 use super::worker::{Backend, Worker, WorkerStats};
@@ -101,6 +126,10 @@ pub struct ServerConfig {
     pub prefill_chunk: usize,
     /// what to do with new load while a shard breaches its SLO
     pub admission: AdmissionPolicy,
+    /// fault injection plan + liveness/detection knobs; the default is
+    /// disarmed (no plan, no wall-clock deadlines). Continuous mode
+    /// only — static batches run to completion and cannot migrate.
+    pub fault: FaultSpec,
 }
 
 impl ServerConfig {
@@ -114,6 +143,7 @@ impl ServerConfig {
             mode: SchedulerMode::Static,
             prefill_chunk: 0,
             admission: AdmissionPolicy::Open,
+            fault: FaultSpec::default(),
         }
     }
 }
@@ -258,10 +288,12 @@ impl SloGate {
                 }
             }
             AdmissionPolicy::Predictive { target_ms } => {
-                let est = self
-                    .estimator
-                    .as_ref()
-                    .expect("predictive gate requires a cost estimator (checked at start)");
+                // run_arrivals refuses to start predictive without an
+                // estimator; if that invariant ever slips, degrade to
+                // the open tier instead of panicking mid-serve
+                let Some(est) = self.estimator.as_ref() else {
+                    return tier;
+                };
                 let predicted_ms = est.predict_ms(
                     backlog,
                     req.prompt.len(),
@@ -319,6 +351,30 @@ pub struct ServerReport {
     /// in-flight tokens still charged to shards at shutdown (0 when the
     /// refund/complete path is exact)
     pub router_inflight_tokens: usize,
+    /// requests migrated off a dead shard, in migration order (a request
+    /// surviving two kills appears twice)
+    pub migrated_ids: Vec<RequestId>,
+    /// prompt-prefix tokens re-ingested on survivor shards (admitted
+    /// prompt + already-delivered tokens, summed over migrations) — the
+    /// recovery cost the ablation reports
+    pub reprefill_tokens: u64,
+    /// duplicate token positions *suppressed* by the dispatcher's
+    /// position dedup (buffered pre-crash stream overlapping the
+    /// re-prefilled one); the client-visible stream stays exactly-once
+    pub dup_tokens: u64,
+    /// position gaps observed (a token arrived past the next expected
+    /// position) — must be zero; nonzero means delivery broke
+    pub lost_tokens: u64,
+    /// shards declared Dead, in detection order
+    pub dead_shards: Vec<usize>,
+    /// final lifecycle state per shard
+    pub shard_health: Vec<ShardHealth>,
+    /// per-kill detection latency in units of the step deadline
+    /// (liveness kills land in [max_misses, max_misses + 1])
+    pub detection_deadlines: Vec<f64>,
+    /// worker errors contained by fault handling instead of tearing the
+    /// serve down (empty when disarmed — those still propagate)
+    pub worker_errors: Vec<String>,
 }
 
 impl ServerReport {
@@ -329,6 +385,11 @@ impl ServerReport {
     /// Requests shed by the admission gate.
     pub fn shed(&self) -> usize {
         self.shed_ids.len()
+    }
+
+    /// Requests migrated off a dead shard.
+    pub fn migrated(&self) -> usize {
+        self.migrated_ids.len()
     }
 
     /// Shed fraction of the offered load.
@@ -394,15 +455,361 @@ impl ServerReport {
     }
 }
 
+/// Dispatcher-side state of one in-flight request: everything needed to
+/// rebuild it on a survivor shard (admitted prompt, budget, priority)
+/// plus the delivered token stream that makes handoff exactly-once.
+struct Track {
+    /// admitted prompt (post-router rewrite) — the re-prefill prefix
+    prompt: Vec<i32>,
+    /// admitted prompt length, preserved across migration for the
+    /// response
+    prompt_len: usize,
+    /// original token budget
+    max_new: usize,
+    priority: Priority,
+    /// low queue tier at admission; migrations keep the tier
+    low: bool,
+    /// injection-time arrival stamp (latency/TTFT baseline)
+    arrival: Instant,
+    /// shard currently serving the request
+    shard: usize,
+    /// delivered count at the last (re)assignment: a worker-local `seq`
+    /// maps to global position `offset + seq`
+    offset: usize,
+    /// tokens delivered to the client so far, in position order
+    delivered: Vec<i32>,
+    ttft_s: f64,
+    first_token_at: Option<Instant>,
+    last_token_at: Option<Instant>,
+    migrations: u32,
+    /// terminal event consumed (Done, synthesized Done, or Shed); late
+    /// duplicates from a resurrected stream are dropped against this
+    done: bool,
+}
+
+impl Track {
+    fn new(req: &Request, shard: usize, low: bool) -> Self {
+        Track {
+            prompt: req.prompt.clone(),
+            prompt_len: req.prompt.len(),
+            max_new: req.max_new_tokens,
+            priority: req.priority,
+            low,
+            arrival: req.arrival,
+            shard,
+            offset: 0,
+            delivered: Vec::new(),
+            ttft_s: 0.0,
+            first_token_at: None,
+            last_token_at: None,
+            migrations: 0,
+            done: false,
+        }
+    }
+
+    /// Synthesize the response for a stream whose every token was
+    /// already delivered when its shard died (the worker's own `Done`
+    /// is either buffered — later deduped — or was never produced).
+    fn response(&self, id: RequestId, shard: usize) -> Response {
+        Response {
+            id,
+            tokens: self.delivered.clone(),
+            prompt_len: self.prompt_len,
+            priority: self.priority,
+            latency_s: self.arrival.elapsed().as_secs_f64(),
+            ttft_s: self.ttft_s,
+            queued_s: 0.0,
+            first_token_at: self.first_token_at.unwrap_or(self.arrival),
+            shard,
+        }
+    }
+}
+
+/// Fault-recovery accounting accumulated by the dispatcher.
+#[derive(Default)]
+struct Recovery {
+    dead_shards: Vec<usize>,
+    detection_deadlines: Vec<f64>,
+    migrated_ids: Vec<RequestId>,
+    reprefill_tokens: u64,
+    dup_tokens: u64,
+    lost_tokens: u64,
+    worker_errors: Vec<String>,
+}
+
+/// The dispatcher's in-flight table plus terminal accounting: token
+/// delivery (position-deduped), completions, sheds, per-shard liveness
+/// clocks, and the kill/migrate machinery. Router and senders are
+/// passed in per call — they live on [`Server`] and mutate together
+/// with this table during a kill.
+struct Flight {
+    tracks: HashMap<RequestId, Track>,
+    responses: Vec<Response>,
+    shed_ids: Vec<RequestId>,
+    /// every shed id exactly once, even if a worker ever forwarded a
+    /// duplicate terminal event (exactly-once shed accounting)
+    shed_seen: HashSet<RequestId>,
+    shed_interactive: u64,
+    /// observed gaps between consecutive *delivered* token emission
+    /// stamps of the same request
+    gaps: Vec<f64>,
+    tokens_streamed: u64,
+    /// per-shard liveness clock: last event received (or last idle
+    /// observation) — a busy shard silent past the death deadline dies
+    last_event_at: Vec<Instant>,
+    health: Vec<ShardHealth>,
+    recovery: Recovery,
+    /// backend context length; a migrated prefix at or past `ctx` can't
+    /// extend, so its stream is synthesized complete instead
+    ctx: usize,
+}
+
+impl Flight {
+    fn new(shards: usize, ctx: usize) -> Self {
+        Flight {
+            tracks: HashMap::new(),
+            responses: Vec::new(),
+            shed_ids: Vec::new(),
+            shed_seen: HashSet::new(),
+            shed_interactive: 0,
+            gaps: Vec::new(),
+            tokens_streamed: 0,
+            last_event_at: vec![Instant::now(); shards],
+            health: vec![ShardHealth::Healthy; shards],
+            recovery: Recovery::default(),
+            ctx,
+        }
+    }
+
+    fn undone(&self) -> usize {
+        self.responses.len() + self.shed_ids.len()
+    }
+
+    fn busy(&self, shard: usize) -> bool {
+        self.tracks.values().any(|t| !t.done && t.shard == shard)
+    }
+
+    /// Record a dispatched request. Resets the shard's liveness clock
+    /// when this is its first runnable work — an idle shard's clock is
+    /// stale by design and must not count against it.
+    fn insert(&mut self, req: &Request, shard: usize, low: bool) {
+        if !self.busy(shard) {
+            self.last_event_at[shard] = Instant::now();
+        }
+        self.tracks.insert(req.id, Track::new(req, shard, low));
+    }
+
+    /// Deliver one token at global position `offset + seq`, exactly
+    /// once: the next expected position appends and streams, an earlier
+    /// position is a suppressed duplicate (re-prefilled prefix racing
+    /// the dead shard's buffered tail), a later one is a gap — which
+    /// the migration protocol makes impossible, so it is counted as an
+    /// anomaly and gated to zero.
+    fn deliver(&mut self, id: RequestId, token: i32, seq: usize, at: Instant) {
+        let Some(t) = self.tracks.get_mut(&id) else { return };
+        if t.done {
+            return;
+        }
+        let pos = t.offset + seq;
+        match pos.cmp(&t.delivered.len()) {
+            Ordering::Equal => {
+                if pos == 0 {
+                    t.ttft_s = at.duration_since(t.arrival).as_secs_f64();
+                    t.first_token_at = Some(at);
+                } else if let Some(prev) = t.last_token_at {
+                    self.gaps.push(at.duration_since(prev).as_secs_f64());
+                }
+                t.last_token_at = Some(at);
+                t.delivered.push(token);
+                self.tokens_streamed += 1;
+            }
+            Ordering::Less => self.recovery.dup_tokens += 1,
+            Ordering::Greater => self.recovery.lost_tokens += 1,
+        }
+    }
+
+    /// Consume a worker `Done`. Returns the completed response's
+    /// latency (for the SLO gate), or None for an untracked or
+    /// duplicate terminal. A migrated request's response is rebuilt
+    /// from the track: full delivered stream, original prompt length,
+    /// client-observed TTFT.
+    fn complete(&mut self, r: Response) -> Option<f64> {
+        let Some(t) = self.tracks.get_mut(&r.id) else {
+            // untracked Done — keep the response rather than lose a
+            // request, but nothing to rebuild from
+            let lat = r.latency_s;
+            self.responses.push(r);
+            return Some(lat);
+        };
+        if t.done {
+            return None;
+        }
+        t.done = true;
+        let resp = if t.migrations == 0 {
+            r
+        } else {
+            Response {
+                id: r.id,
+                tokens: t.delivered.clone(),
+                prompt_len: t.prompt_len,
+                priority: t.priority,
+                latency_s: r.latency_s,
+                ttft_s: t.ttft_s,
+                queued_s: r.queued_s,
+                first_token_at: t.first_token_at.unwrap_or(r.first_token_at),
+                shard: r.shard,
+            }
+        };
+        let lat = resp.latency_s;
+        self.responses.push(resp);
+        Some(lat)
+    }
+
+    /// Terminal shed: exactly one record per id, marking any track done
+    /// so late worker events for it are dropped.
+    fn shed(&mut self, id: RequestId, priority: Priority) {
+        if let Some(t) = self.tracks.get_mut(&id) {
+            t.done = true;
+        }
+        if self.shed_seen.insert(id) {
+            self.shed_interactive += (priority == Priority::Interactive) as u64;
+            self.shed_ids.push(id);
+        }
+    }
+
+    /// Liveness sweep: kill every routable shard with runnable work
+    /// that stayed silent past the death deadline; one missed deadline
+    /// is only `Suspect` (stalls recover). Idle shards get their clock
+    /// reset — silence without work is not a miss.
+    fn check_liveness(
+        &mut self,
+        router: &mut Router,
+        senders: &mut [Option<Sender<ToWorker>>],
+        spec: &FaultSpec,
+    ) {
+        for shard in 0..senders.len() {
+            if self.health[shard] == ShardHealth::Dead || senders[shard].is_none() {
+                continue;
+            }
+            if !self.busy(shard) {
+                self.health[shard] = ShardHealth::Healthy;
+                self.last_event_at[shard] = Instant::now();
+                continue;
+            }
+            let elapsed = self.last_event_at[shard].elapsed();
+            if elapsed >= spec.death_deadline() {
+                self.kill_shard(router, senders, spec, shard);
+            } else if elapsed >= spec.step_deadline {
+                self.health[shard] = ShardHealth::Suspect;
+            } else {
+                self.health[shard] = ShardHealth::Healthy;
+            }
+        }
+    }
+
+    /// Declare `first` dead and migrate everything it held. Worklist-
+    /// driven: a migration target whose sender turns out dead (send
+    /// fails) is marked dead in the router immediately — so rerouting
+    /// can't pick it again — queued for its own kill pass, and the
+    /// request retries against the remaining survivors. With no
+    /// survivor left the request sheds terminally (capacity is gone;
+    /// the charge was already refunded).
+    fn kill_shard(
+        &mut self,
+        router: &mut Router,
+        senders: &mut [Option<Sender<ToWorker>>],
+        spec: &FaultSpec,
+        first: usize,
+    ) {
+        let mut queue = vec![first];
+        while let Some(dead) = queue.pop() {
+            let newly = senders[dead].is_some() || router.is_alive(dead);
+            router.mark_dead(dead);
+            senders[dead] = None;
+            if newly {
+                self.health[dead] = ShardHealth::Dead;
+                self.recovery.dead_shards.push(dead);
+                let units = self.last_event_at[dead].elapsed().as_secs_f64()
+                    / spec.step_deadline.as_secs_f64().max(1e-9);
+                self.recovery.detection_deadlines.push(units);
+            }
+            let mut ids: Vec<RequestId> = self
+                .tracks
+                .iter()
+                .filter(|(_, t)| !t.done && t.shard == dead)
+                .map(|(id, _)| *id)
+                .collect();
+            ids.sort_unstable();
+            for id in ids {
+                // idempotent refund of the dead shard's charge; a
+                // successful reroute re-charges the survivor
+                router.release(id);
+                let Some(t) = self.tracks.get_mut(&id) else { continue };
+                let remaining = t.max_new.saturating_sub(t.delivered.len());
+                let priority = t.priority;
+                let low = t.low;
+                let mut prompt = t.prompt.clone();
+                prompt.extend_from_slice(&t.delivered);
+                if remaining == 0 || prompt.len() >= self.ctx {
+                    // stream already fully delivered (its Done is either
+                    // buffered — later deduped — or died unemitted), or
+                    // the prefix can't extend within the context window,
+                    // matching where the original would have KV-capped
+                    t.done = true;
+                    let resp = t.response(id, dead);
+                    self.responses.push(resp);
+                    continue;
+                }
+                let arrival = t.arrival;
+                let mut req = Request::new(id, prompt, remaining);
+                req.priority = priority;
+                req.arrival = arrival;
+                let mut routed = None;
+                while let Some(d) = router.route_migrated(&req) {
+                    let live = senders[d.shard]
+                        .as_ref()
+                        .is_some_and(|tx| tx.send(ToWorker::Inject(req.clone(), low)).is_ok());
+                    if live {
+                        routed = Some(d.shard);
+                        break;
+                    }
+                    // target died undetected: refund, eject it from
+                    // routing now, queue its own kill pass, retry
+                    router.release(id);
+                    router.mark_dead(d.shard);
+                    queue.push(d.shard);
+                }
+                match routed {
+                    Some(target) => {
+                        if !self.busy(target) {
+                            self.last_event_at[target] = Instant::now();
+                        }
+                        if let Some(t) = self.tracks.get_mut(&id) {
+                            t.offset = t.delivered.len();
+                            t.shard = target;
+                            t.migrations += 1;
+                        }
+                        self.recovery.migrated_ids.push(id);
+                        self.recovery.reprefill_tokens += req.prompt.len() as u64;
+                    }
+                    None => self.shed(id, priority),
+                }
+            }
+        }
+    }
+}
+
 /// Multi-shard server.
 pub struct Server {
     cfg: ServerConfig,
     router: Router,
     batcher: Batcher,
-    senders: Vec<Sender<ToWorker>>,
+    senders: Vec<Option<Sender<ToWorker>>>,
     events: Receiver<(usize, Result<ServeEvent>)>,
     handles: Vec<JoinHandle<WorkerStats>>,
     shard_weight_bytes: Vec<usize>,
+    /// backend context length (migration headroom bound)
+    ctx: usize,
     /// calibrated per-token cost model for the predictive gate:
     /// `start_sim` fits it from the sim cost knobs, the PJRT path loads
     /// the measured `BENCH_hotpath.json` profile
@@ -467,10 +874,21 @@ impl Server {
     /// batching ablation). `cfg.model` is ignored; the sim graphs are
     /// gpt2-tiny-shaped with the given wall-clock cost model, and the
     /// predictive gate's estimator is fitted from the same cost knobs.
+    /// A configured `cfg.fault` plan compiles into per-shard
+    /// [`crate::runtime::ShardFaults`] executed inside each sim backend
+    /// — the "device" crashes or stalls; the dispatcher has to notice
+    /// from the outside. (The PJRT path ignores the plan: real devices
+    /// supply their own faults.)
     pub fn start_sim(cfg: ServerConfig, cost: SimCost) -> Result<Self> {
         let batch = cfg.batch;
         let backends = (0..cfg.shards)
-            .map(|_| Backend::Sim(SimModel::tiny(cfg.variant, cfg.batch, cost)))
+            .map(|shard| {
+                let mut m = SimModel::tiny(cfg.variant, cfg.batch, cost);
+                if let Some(plan) = &cfg.fault.plan {
+                    m = m.with_faults(plan.shard_faults(shard));
+                }
+                Backend::Sim(m)
+            })
             .collect();
         let mut server = Self::start_with(cfg, backends)?;
         server.estimator = Some(CostEstimator::from_sim_cost(&cost, batch));
@@ -495,7 +913,7 @@ impl Server {
         for (shard, backend) in backends.into_iter().enumerate() {
             shard_weight_bytes.push(backend.weight_storage_bytes());
             let (tx, rx): (Sender<ToWorker>, Receiver<ToWorker>) = channel();
-            senders.push(tx);
+            senders.push(Some(tx));
             let ev_tx = ev_tx.clone();
             let worker = Worker::new_chunked(shard, backend, cfg.prefill_chunk);
             handles.push(std::thread::spawn(move || worker_loop(worker, rx, ev_tx)));
@@ -508,6 +926,7 @@ impl Server {
             events: ev_rx,
             handles,
             shard_weight_bytes,
+            ctx,
             estimator: None,
         })
     }
@@ -539,47 +958,46 @@ impl Server {
                  BENCH_hotpath.json / LLEQ_HOTPATH_PROFILE)"
             );
         }
-        arrivals.sort_by(|a, b| a.at_s.partial_cmp(&b.at_s).unwrap());
+        if self.cfg.fault.plan.is_some() && self.cfg.mode != SchedulerMode::Continuous {
+            bail!(
+                "fault plans require SchedulerMode::Continuous — a static batch \
+                 runs to completion inside its worker and cannot migrate"
+            );
+        }
+        // liveness deadlines are wall-clock; arm them only when a plan
+        // is configured so a loaded CI runner can't false-kill a shard
+        let liveness = self.cfg.fault.active() && self.cfg.mode == SchedulerMode::Continuous;
+        arrivals.sort_by(|a, b| a.at_s.total_cmp(&b.at_s));
         let total = arrivals.len();
         let mut pending: VecDeque<Arrival> = arrivals.into();
         let t0 = Instant::now();
 
-        let mut responses: Vec<Response> = Vec::with_capacity(total);
+        let mut flight = Flight::new(self.cfg.shards, self.ctx);
         let mut shard_tokens = vec![0u64; self.cfg.shards];
-        let mut tokens_streamed = 0u64;
         let mut shard_rr = 0usize;
         let mut gate = SloGate::new(
             self.cfg.admission,
             self.cfg.shards,
             self.cfg.mode == SchedulerMode::Static,
-            self.estimator,
+            self.estimator.take(),
             self.cfg.prefill_chunk,
         );
-        let mut shed_ids: Vec<RequestId> = Vec::new();
-        // every shed id exactly once, even if a worker ever forwarded a
-        // duplicate terminal event (exactly-once shed accounting)
-        let mut shed_seen: HashSet<RequestId> = HashSet::new();
-        let mut shed_interactive = 0u64;
-        // priority of every dispatched in-flight request, so a worker-
-        // forwarded terminal event can still be attributed to its class
-        let mut priority_of: HashMap<RequestId, Priority> = HashMap::new();
         let mut deprioritized = 0u64;
-        // last token *emission* stamp per in-flight request, for the
-        // inter-token (decode-stall) gap distribution; emission stamps,
-        // not dispatcher receive times, so park/shed work in this loop
-        // cannot inflate the decode-cadence signal
-        let mut last_token_at: HashMap<RequestId, Instant> = HashMap::new();
-        let mut gaps: Vec<f64> = Vec::new();
 
-        while responses.len() + shed_ids.len() < total {
+        while flight.undone() < total {
             // 1) inject every due arrival, gating each on its routed
             // shard's SLO window
             let now_s = t0.elapsed().as_secs_f64();
             while pending.front().is_some_and(|a| a.at_s <= now_s) {
-                let mut a = pending.pop_front().unwrap();
+                let Some(mut a) = pending.pop_front() else { break };
                 // the request enters the system *now*; TTFT/latency
                 // measure queueing from this instant
                 a.request.arrival = Instant::now();
+                // a dead fleet can't serve: terminal shed, no charge
+                if liveness && self.router.alive_count() == 0 {
+                    flight.shed(a.request.id, a.request.priority);
+                    continue;
+                }
                 let (req, decision) = self.router.admit(a.request);
                 // one mode match feeds the gate both of its signals:
                 // `established` (other in-flight work beyond this
@@ -617,23 +1035,43 @@ impl Server {
                     // terminal: refund the router charge, record exactly
                     // one Shed event, never dispatch
                     self.router.release(req.id);
-                    if shed_seen.insert(req.id) {
-                        shed_interactive += (req.priority == Priority::Interactive) as u64;
-                        shed_ids.push(req.id);
-                    }
+                    flight.shed(req.id, req.priority);
                     continue;
                 }
                 let low = matches!(verdict, Gate::Low);
                 deprioritized += low as u64;
-                priority_of.insert(req.id, req.priority);
                 match self.cfg.mode {
                     SchedulerMode::Continuous => {
-                        self.senders[decision.shard]
-                            .send(ToWorker::Inject(req, low))
-                            .map_err(|_| anyhow!("worker {} is gone", decision.shard))?;
+                        // tracked *before* the send so a failed send can
+                        // migrate this request along with the rest of
+                        // the shard's in-flight work
+                        flight.insert(&req, decision.shard, low);
+                        let sent = self.senders[decision.shard]
+                            .as_ref()
+                            .is_some_and(|tx| tx.send(ToWorker::Inject(req, low)).is_ok());
+                        if !sent {
+                            if liveness {
+                                // hard evidence of death: the worker
+                                // hung up before the deadline noticed
+                                flight.kill_shard(
+                                    &mut self.router,
+                                    &mut self.senders,
+                                    &self.cfg.fault,
+                                    decision.shard,
+                                );
+                            } else {
+                                bail!("worker {} is gone", decision.shard);
+                            }
+                        }
                     }
-                    SchedulerMode::Static if low => self.batcher.push_low(req),
-                    SchedulerMode::Static => self.batcher.push(req),
+                    SchedulerMode::Static => {
+                        flight.insert(&req, decision.shard, low);
+                        if low {
+                            self.batcher.push_low(req);
+                        } else {
+                            self.batcher.push(req);
+                        }
+                    }
                 }
             }
             // 2) static mode: release every batch the policy allows; once
@@ -651,12 +1089,18 @@ impl Server {
                 }
             }
             // 3) nothing left to inject: close the injection side so
-            // idle workers can exit as soon as they drain
-            if pending.is_empty() && self.batcher.pending() == 0 {
-                self.senders.clear();
+            // idle workers can exit as soon as they drain. With fault
+            // handling armed the senders stay open — a kill after the
+            // last arrival still needs live mailboxes to migrate into.
+            if !liveness && pending.is_empty() && self.batcher.pending() == 0 {
+                for s in &mut self.senders {
+                    *s = None;
+                }
             }
             // 4) wait for the next event, the next arrival, or (static)
-            // the next batch deadline — whichever is first
+            // the next batch deadline — whichever is first; armed
+            // liveness caps the wait at the step deadline so a silent
+            // shard is noticed on schedule
             let mut timeout = Duration::from_secs(600);
             if let Some(a) = pending.front() {
                 let dt = Duration::from_secs_f64((a.at_s - t0.elapsed().as_secs_f64()).max(0.0));
@@ -665,64 +1109,96 @@ impl Server {
             if let Some(deadline) = self.batcher.next_deadline() {
                 timeout = timeout.min(deadline.saturating_duration_since(Instant::now()));
             }
+            if liveness {
+                timeout = timeout.min(self.cfg.fault.step_deadline);
+            }
             match self.events.recv_timeout(timeout) {
-                Ok((shard, Ok(ev))) => match ev {
-                    ServeEvent::Token { id, first, at, .. } => {
-                        tokens_streamed += 1;
-                        if first {
-                            last_token_at.insert(id, at);
-                        } else if let Some(prev) = last_token_at.insert(id, at) {
-                            gaps.push(at.duration_since(prev).as_secs_f64());
+                Ok((shard, Ok(ev))) => {
+                    // any event is that shard's liveness beat
+                    if let Some(beat) = flight.last_event_at.get_mut(shard) {
+                        *beat = Instant::now();
+                    }
+                    match ev {
+                        ServeEvent::Token { id, token, seq, at, .. } => {
+                            flight.deliver(id, token, seq, at);
                         }
-                    }
-                    ServeEvent::Done(r) => {
-                        self.router.complete(r.id);
-                        gate.observe(shard, r.latency_s);
-                        last_token_at.remove(&r.id);
-                        priority_of.remove(&r.id);
-                        shard_tokens[shard] += r.tokens.len() as u64;
-                        responses.push(r);
-                    }
-                    // workers never shed; defensive accounting if one
-                    // ever forwards a gate decision: refund the router
-                    // charge (idempotent), count the terminal event
-                    // exactly once, and attribute it to the request's
-                    // priority class — so a shed decision racing a
-                    // worker join at the step boundary can neither
-                    // double-release nor leak the in-flight charge nor
-                    // undercount an interactive shed
-                    ServeEvent::Shed { id, .. } => {
-                        self.router.release(id);
-                        if shed_seen.insert(id) {
-                            if priority_of.remove(&id) == Some(Priority::Interactive) {
-                                shed_interactive += 1;
+                        ServeEvent::Done(r) => {
+                            self.router.complete(r.id);
+                            let n_tokens = r.tokens.len() as u64;
+                            // None = duplicate Done from a stream that
+                            // already terminated (migration race); the
+                            // first terminal won, drop this one
+                            if let Some(latency_s) = flight.complete(r) {
+                                shard_tokens[shard] += n_tokens;
+                                gate.observe(shard, latency_s);
                             }
-                            shed_ids.push(id);
+                        }
+                        // workers never shed; defensive accounting if
+                        // one ever forwards a gate decision: refund the
+                        // router charge (idempotent), count the terminal
+                        // event exactly once, and attribute it to the
+                        // request's priority class
+                        ServeEvent::Shed { id, .. } => {
+                            self.router.release(id);
+                            let priority = flight
+                                .tracks
+                                .get(&id)
+                                .map(|t| t.priority)
+                                .unwrap_or(Priority::Batch);
+                            flight.shed(id, priority);
                         }
                     }
-                },
-                Ok((_, Err(e))) => return Err(e),
+                }
+                Ok((shard, Err(e))) => {
+                    if liveness {
+                        // a surfaced worker error is contained: record
+                        // it, declare the shard dead, migrate its work
+                        flight.recovery.worker_errors.push(format!("shard {shard}: {e:#}"));
+                        flight.kill_shard(
+                            &mut self.router,
+                            &mut self.senders,
+                            &self.cfg.fault,
+                            shard,
+                        );
+                    } else {
+                        return Err(e);
+                    }
+                }
                 Err(RecvTimeoutError::Timeout) => {
-                    if pending.is_empty() && self.batcher.pending() == 0 {
-                        bail!("worker pool stalled ({}/{} served)", responses.len(), total);
+                    // armed liveness turns silence into detection (the
+                    // sweep below); disarmed, a silent drained pool is
+                    // a stall
+                    if !liveness && pending.is_empty() && self.batcher.pending() == 0 {
+                        bail!(
+                            "worker pool stalled ({}/{} served)",
+                            flight.responses.len(),
+                            total
+                        );
                     }
                 }
                 Err(RecvTimeoutError::Disconnected) => {
-                    bail!("workers exited with {}/{} served", responses.len(), total)
+                    bail!("workers exited with {}/{} served", flight.responses.len(), total)
                 }
+            }
+            if liveness {
+                flight.check_liveness(&mut self.router, &mut self.senders, &self.cfg.fault);
             }
         }
 
         // every Token of a completed request precedes its Done in its
-        // sender's FIFO, so the stragglers are already buffered
+        // sender's FIFO, so the stragglers are already buffered; run
+        // them through the same position dedup (a migrated stream's
+        // buffered tail must not double-count)
         while let Ok((_, ev)) = self.events.try_recv() {
-            if let Ok(ServeEvent::Token { .. }) = ev {
-                tokens_streamed += 1;
+            if let Ok(ServeEvent::Token { id, token, seq, at, .. }) = ev {
+                flight.deliver(id, token, seq, at);
             }
         }
 
         // shut down workers, merge metrics
-        self.senders.clear();
+        for s in &mut self.senders {
+            *s = None;
+        }
         let mut breakdown = Breakdown::new();
         let (mut steps, mut tokens, mut joins, mut retires) = (0u64, 0u64, 0u64, 0u64);
         let mut peak_active = Vec::with_capacity(self.handles.len());
@@ -740,10 +1216,10 @@ impl Server {
         breakdown.add(Stage::Sync, 0.0);
         let weight_storage_bytes = self.shard_weight_bytes.iter().sum();
         Ok(ServerReport {
-            responses,
+            responses: flight.responses,
             wall_s: t0.elapsed().as_secs_f64(),
             tokens_out: tokens,
-            tokens_streamed,
+            tokens_streamed: flight.tokens_streamed,
             decode_steps: steps,
             breakdown,
             weight_storage_bytes,
@@ -752,23 +1228,38 @@ impl Server {
             joins,
             retires,
             peak_active,
-            shed_ids,
-            shed_interactive,
+            shed_ids: flight.shed_ids,
+            shed_interactive: flight.shed_interactive,
             deprioritized,
-            inter_token_gap_s: gaps,
+            inter_token_gap_s: flight.gaps,
             router_in_flight: self.router.in_flight(),
             router_inflight_tokens: self.router.load().iter().sum(),
+            migrated_ids: flight.recovery.migrated_ids,
+            reprefill_tokens: flight.recovery.reprefill_tokens,
+            dup_tokens: flight.recovery.dup_tokens,
+            lost_tokens: flight.recovery.lost_tokens,
+            dead_shards: flight.recovery.dead_shards,
+            shard_health: flight.health,
+            detection_deadlines: flight.recovery.detection_deadlines,
+            worker_errors: flight.recovery.worker_errors,
         })
     }
 
     /// Static-mode dispatch: round-robin formed batches over the shards
-    /// (seed behavior, kept as the ablation baseline).
+    /// (seed behavior, kept as the ablation baseline; fault handling is
+    /// continuous-only, so every sender is normally live here).
     fn dispatch_static(&mut self, batch: Batch, shard_rr: &mut usize) -> Result<()> {
-        let shard = *shard_rr % self.senders.len();
-        *shard_rr += 1;
-        self.senders[shard]
-            .send(ToWorker::Batch(batch.requests))
-            .map_err(|_| anyhow!("worker {shard} is gone"))
+        let n = self.senders.len();
+        for _ in 0..n {
+            let shard = *shard_rr % n;
+            *shard_rr += 1;
+            if let Some(tx) = self.senders[shard].as_ref() {
+                return tx
+                    .send(ToWorker::Batch(batch.requests))
+                    .map_err(|_| anyhow!("worker {shard} is gone"));
+            }
+        }
+        bail!("no live worker to dispatch a static batch")
     }
 }
 
@@ -856,7 +1347,10 @@ fn run_static(
 }
 
 /// Forward a step's events (or its error) to the dispatcher; false when
-/// the worker should stop (fatal error or dispatcher hung up).
+/// the worker should stop (fatal error or dispatcher hung up). An
+/// *injected* crash is deliberately silent — a dead device announces
+/// nothing, so the dispatcher must detect it from the missed step
+/// deadlines, which is exactly what the fault drill exercises.
 fn emit(
     result: Result<Vec<ServeEvent>>,
     tx: &Sender<(usize, Result<ServeEvent>)>,
@@ -872,7 +1366,9 @@ fn emit(
             true
         }
         Err(e) => {
-            let _ = tx.send((shard, Err(e)));
+            if !is_injected_crash(&e) {
+                let _ = tx.send((shard, Err(e)));
+            }
             false
         }
     }

@@ -357,6 +357,7 @@ impl Worker {
                 events.push(ServeEvent::Token {
                     id: s.req.id,
                     token: tok,
+                    seq: 0,
                     first: true,
                     at: s.first_token_at,
                 });
@@ -467,6 +468,7 @@ impl Worker {
                 events.push(ServeEvent::Token {
                     id: s.req.id,
                     token: tok,
+                    seq: s.generated.len() - 1,
                     first: false,
                     at: Instant::now(),
                 });
@@ -705,6 +707,31 @@ mod tests {
         assert_eq!(w.prefill_chunk(), 8);
         let w0 = sim_worker(Variant::Fp, 2);
         assert_eq!(w0.prefill_chunk(), 0);
+    }
+
+    #[test]
+    fn token_seq_counts_per_stream_position() {
+        // `seq` is the token's 0-based position in its request's stream
+        // — the dedup key exactly-once failover delivery rebases on
+        let mut w = sim_worker(Variant::Fp, 4);
+        let mut seqs: Vec<(u64, usize)> = Vec::new();
+        let mut evs = w.join(vec![req(1, 4, 4), req(2, 4, 2)]).unwrap();
+        loop {
+            for e in &evs {
+                if let ServeEvent::Token { id, seq, .. } = e {
+                    seqs.push((*id, *seq));
+                }
+            }
+            if w.active() == 0 {
+                break;
+            }
+            evs = w.step().unwrap();
+        }
+        let of = |id: u64| -> Vec<usize> {
+            seqs.iter().filter(|(i, _)| *i == id).map(|(_, s)| *s).collect()
+        };
+        assert_eq!(of(1), vec![0, 1, 2, 3]);
+        assert_eq!(of(2), vec![0, 1]);
     }
 
     #[test]

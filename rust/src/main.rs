@@ -16,8 +16,9 @@ use anyhow::{bail, Result};
 
 use llmeasyquant::collective::{Collective, Topology, Transport};
 use llmeasyquant::coordinator::{
-    search_bitwidths, size_reduction, workload, AdmissionPolicy, BatchPolicy, LayerInfo,
-    Priority, ScaleSync, SchedulerMode, SearchPolicy, Server, ServerConfig,
+    search_bitwidths, size_reduction, sync_wire_bits_for, workload, AdmissionPolicy,
+    BatchPolicy, FaultPlan, FaultSpec, LayerInfo, Priority, ScaleSync, SchedulerMode,
+    SearchPolicy, Server, ServerConfig,
 };
 use llmeasyquant::corpus;
 use llmeasyquant::eval::{perplexity, weight_errors};
@@ -67,6 +68,14 @@ COMMANDS:
                    [--priority-mix F]    (fraction of requests tagged interactive;
                                           the rest are batch priority: low queue
                                           tier, shed first. default 1.0)
+                   [--fault-plan SPEC]   (seeded fault injection + recovery; SPEC is
+                                          comma-separated `crash:<shard>@<step>`,
+                                          `stall:<shard>@<step>x<steps>`, `corrupt:<p>`,
+                                          `seed:<n>`, e.g. crash:1@40,seed:7.
+                                          continuous mode only: dead shards are
+                                          detected by missed step deadlines and
+                                          their in-flight requests migrate with
+                                          exactly-once token delivery)
   eval-ppl         --model gpt2-tiny --variant all [--windows 8]
   breakdown        --ctx 32768 --batch 448 [--world 8] [--transport nccl]
   bitwidth-search  --model gpt2-tiny [--lambda 1e-4] [--policy greedy|grid|entropy]
@@ -135,6 +144,11 @@ fn serve(args: &Args) -> Result<()> {
     } else {
         AdmissionPolicy::Open
     };
+    // seeded fault-injection plan; empty = no faults, liveness disarmed
+    let fault_plan = match args.get("fault-plan") {
+        Some(spec) => Some(FaultPlan::parse(spec)?),
+        None => None,
+    };
     // fraction of requests tagged interactive priority (rest are batch)
     let priority_mix = args.get_f64("priority-mix", 1.0);
     if !(0.0..=1.0).contains(&priority_mix) {
@@ -159,6 +173,10 @@ fn serve(args: &Args) -> Result<()> {
     cfg.mode = mode;
     cfg.prefill_chunk = prefill_chunk;
     cfg.admission = admission;
+    if let Some(plan) = fault_plan {
+        cfg.fault = FaultSpec::with_plan(plan);
+    }
+    let fault_active = cfg.fault.active();
     println!("compiling executables for {model}/{} ...", variant.name());
     let server = Server::start(&reg, cfg)?;
 
@@ -197,6 +215,23 @@ fn serve(args: &Args) -> Result<()> {
             report.shed_rate() * 100.0,
             report.shed_interactive,
             report.deprioritized,
+        );
+    }
+    if fault_active {
+        println!(
+            "faults: dead shards {:?} (health {:?}) | detection {:?} deadlines | \
+             migrated {} reqs ({} re-prefill tokens) | dup suppressed {} | lost {}",
+            report.dead_shards,
+            report.shard_health.iter().map(|h| h.name()).collect::<Vec<_>>(),
+            report
+                .detection_deadlines
+                .iter()
+                .map(|d| (d * 100.0).round() / 100.0)
+                .collect::<Vec<_>>(),
+            report.migrated(),
+            report.reprefill_tokens,
+            report.dup_tokens,
+            report.lost_tokens,
         );
     }
     if priority_mix < 1.0 {
@@ -374,7 +409,9 @@ fn cluster_sim(args: &Args) -> Result<()> {
     let mut handles = Vec::new();
     for (rank, mut comm) in ring.into_iter().enumerate() {
         handles.push(std::thread::spawn(move || {
-            let mut sync = ScaleSync::new(regions, 0.9, 1e-6, 8);
+            // edge/TCP tiers drop the sync wire to 4-bit
+            let mut sync = ScaleSync::new(regions, 0.9, 1e-6, 8)
+                .with_wire_bits(sync_wire_bits_for(transport));
             let mut rng = corpus::XorShift64Star::new(100 + rank as u64);
             for _ in 0..steps {
                 for region in 0..regions {

@@ -30,7 +30,7 @@ pub use engine::{
 };
 pub use manifest::{GraphKey, GraphSpec, Manifest, ModelCfg};
 pub use registry::{ModelHandle, Registry};
-pub use sim::{SimCost, SimModel};
+pub use sim::{is_injected_crash, InjectedCrash, ShardFaults, SimCost, SimModel};
 
 /// View a f32 slice as little-endian bytes (host is LE on all supported
 /// targets; PJRT consumes the same layout).

@@ -26,6 +26,7 @@
 //! a fused decode step costs a fixed launch overhead plus a per-active-
 //! slot increment, and prefill costs scale with ingested prompt tokens.
 
+use std::cell::Cell;
 use std::path::Path;
 use std::time::{Duration, Instant};
 
@@ -127,6 +128,22 @@ impl SimCost {
         let text = std::fs::read_to_string(path)
             .map_err(|e| anyhow!("read sim cost profile {}: {e}", path.display()))?;
         Self::from_profile(&json::parse(&text)?)
+            .map_err(|e| anyhow!("sim cost profile {}: {e}", path.display()))
+    }
+
+    /// Like [`SimCost::load_profile`], but a malformed profile degrades
+    /// to the defaults with a stderr warning (naming the offending key
+    /// via [`SimCost::from_profile`]'s diagnostics) instead of killing
+    /// the run — an opt-in `LLEQ_SIM_PROFILE` typo should cost accuracy,
+    /// not the bench.
+    pub fn load_profile_or_default(path: &Path) -> SimCost {
+        match Self::load_profile(path) {
+            Ok(c) => c,
+            Err(e) => {
+                eprintln!("warning: {e:#}; falling back to SimCost::default()");
+                SimCost::default()
+            }
+        }
     }
 
     /// Fit a cost model from `perf_hotpath` rows (`[{"name", "mean_us",
@@ -157,6 +174,52 @@ impl SimCost {
     }
 }
 
+/// Deterministic fault schedule for one simulated shard, counted in
+/// fused decode calls. Built from a seeded `coordinator::FaultPlan`;
+/// executed here so the failure originates inside the "device", exactly
+/// where a real crash would, and the scheduler layer above has to
+/// *detect* it rather than being told.
+#[derive(Debug, Clone, Copy, Default)]
+pub struct ShardFaults {
+    /// Crash permanently at this decode call (0-based): the call and
+    /// every later prefill/decode return an [`InjectedCrash`] error.
+    pub crash_at_step: Option<u64>,
+    /// `(at_step, extra_steps)`: at this decode call, burn
+    /// `extra_steps` additional fused-step costs of wall clock once — a
+    /// transient stall (GC pause, preempted VM) the liveness tracker
+    /// must ride out without declaring death.
+    pub stall: Option<(u64, u64)>,
+}
+
+impl ShardFaults {
+    pub fn is_empty(&self) -> bool {
+        self.crash_at_step.is_none() && self.stall.is_none()
+    }
+}
+
+/// Marker error for a scheduled [`ShardFaults`] crash. Injected faults
+/// must stay distinguishable from real bugs: the worker loop swallows
+/// this one silently (a crashed device says nothing) while any other
+/// error is surfaced to the dispatcher.
+#[derive(Debug, Clone, Copy)]
+pub struct InjectedCrash {
+    /// decode call at which the shard died
+    pub step: u64,
+}
+
+impl std::fmt::Display for InjectedCrash {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        write!(f, "injected shard crash at decode step {}", self.step)
+    }
+}
+
+impl std::error::Error for InjectedCrash {}
+
+/// True when `e` is (or wraps) a scheduled [`InjectedCrash`].
+pub fn is_injected_crash(e: &anyhow::Error) -> bool {
+    e.chain().any(|c| c.is::<InjectedCrash>())
+}
+
 /// A simulated (prefill, decode) graph pair for one worker shard.
 #[derive(Debug, Clone)]
 pub struct SimModel {
@@ -165,11 +228,37 @@ pub struct SimModel {
     pub batch: usize,
     pub cost: SimCost,
     seed: u64,
+    faults: ShardFaults,
+    /// decode calls issued so far (interior: `decode` takes `&self`)
+    decode_calls: Cell<u64>,
+    crashed: Cell<bool>,
 }
 
 impl SimModel {
     pub fn new(cfg: ModelCfg, variant: Variant, batch: usize, cost: SimCost) -> Self {
-        SimModel { cfg, variant, batch, cost, seed: 0xC0FF_EE00 }
+        SimModel {
+            cfg,
+            variant,
+            batch,
+            cost,
+            seed: 0xC0FF_EE00,
+            faults: ShardFaults::default(),
+            decode_calls: Cell::new(0),
+            crashed: Cell::new(false),
+        }
+    }
+
+    /// Attach a fault schedule (builder-style; default is fault-free).
+    pub fn with_faults(mut self, faults: ShardFaults) -> Self {
+        self.faults = faults;
+        self
+    }
+
+    fn check_crashed(&self) -> Result<()> {
+        if self.crashed.get() {
+            return Err(anyhow::Error::new(InjectedCrash { step: self.decode_calls.get() }));
+        }
+        Ok(())
     }
 
     /// A gpt2-tiny-shaped config (vocab matches `corpus::VOCAB_SIZE`).
@@ -240,6 +329,7 @@ impl SimModel {
         tokens: &[i32],
         spans: &[(usize, usize)],
     ) -> Result<Vec<Tensor>> {
+        self.check_crashed()?;
         let (b, ctx, v) = (self.batch, self.cfg.ctx, self.cfg.vocab);
         let (l, d) = (self.cfg.n_layers, self.cfg.d_model);
         if tokens.len() != b * ctx || spans.len() != b {
@@ -274,6 +364,15 @@ impl SimModel {
     /// Run one simulated fused decode step. `active[slot]` marks the
     /// slots whose (token, pos) inputs are live; inactive rows are zero.
     pub fn decode(&self, token: &[i32], pos: &[i32], active: &[bool]) -> Result<Vec<Tensor>> {
+        self.check_crashed()?;
+        let call = self.decode_calls.get();
+        self.decode_calls.set(call + 1);
+        if let Some(at) = self.faults.crash_at_step {
+            if call >= at {
+                self.crashed.set(true);
+                return Err(anyhow::Error::new(InjectedCrash { step: call }));
+            }
+        }
         let (b, v) = (self.batch, self.cfg.vocab);
         let (l, d) = (self.cfg.n_layers, self.cfg.d_model);
         if token.len() != b || pos.len() != b || active.len() != b {
@@ -297,6 +396,11 @@ impl SimModel {
             }
         }
         spin_us(self.cost.decode_step_us + self.cost.decode_us_per_slot * n_active as f64);
+        if let Some((at, extra)) = self.faults.stall {
+            if call == at {
+                spin_us(extra as f64 * self.cost.step_us(n_active));
+            }
+        }
         Ok(vec![
             Tensor::from_f32(vec![b, v], logits),
             Tensor::from_f32(vec![l, b, d], k),
@@ -466,6 +570,44 @@ mod tests {
         assert_eq!(c.decode_us_per_token(8) * 8.0, c.step_us(8));
         // batch 0 clamps instead of dividing by zero
         assert!(c.decode_us_per_token(0).is_finite());
+    }
+
+    #[test]
+    fn injected_crash_fires_at_the_scheduled_step_and_sticks() {
+        let m = sim().with_faults(ShardFaults { crash_at_step: Some(2), stall: None });
+        let (tok, pos, act) = ([3, 0, 0, 0], [1, 0, 0, 0], [true, false, false, false]);
+        assert!(m.decode(&tok, &pos, &act).is_ok()); // call 0
+        assert!(m.decode(&tok, &pos, &act).is_ok()); // call 1
+        let err = m.decode(&tok, &pos, &act).unwrap_err(); // call 2: dies
+        assert!(is_injected_crash(&err), "{err:#}");
+        // the crash is permanent: decode and prefill both keep failing
+        assert!(is_injected_crash(&m.decode(&tok, &pos, &act).unwrap_err()));
+        let tokens = vec![0i32; m.batch * m.cfg.ctx];
+        let lens = vec![0usize; m.batch];
+        assert!(is_injected_crash(&m.prefill(&tokens, &lens).unwrap_err()));
+        // a real contract violation is NOT an injected crash
+        let healthy = sim();
+        let err = healthy.decode(&[1], &[0], &[true]).unwrap_err();
+        assert!(!is_injected_crash(&err));
+    }
+
+    #[test]
+    fn stall_burns_extra_wall_clock_without_perturbing_outputs() {
+        let clean = sim();
+        let stalled =
+            sim().with_faults(ShardFaults { crash_at_step: None, stall: Some((0, 100)) });
+        let (tok, pos, act) = ([7, 0, 0, 0], [4, 0, 0, 0], [true, false, false, false]);
+        let t0 = Instant::now();
+        let a = stalled.decode(&tok, &pos, &act).unwrap();
+        let el = t0.elapsed().as_secs_f64();
+        // 100 extra fast-cost steps at 1 active slot = 100 * 22 us
+        assert!(el >= 1.5e-3, "stall spun only {el}s");
+        let b = clean.decode(&tok, &pos, &act).unwrap();
+        assert_eq!(a[0].f32_view().unwrap(), b[0].f32_view().unwrap());
+        // one-shot: the next call pays only the normal step cost
+        let t1 = Instant::now();
+        stalled.decode(&tok, &pos, &act).unwrap();
+        assert!(t1.elapsed().as_secs_f64() < 1.5e-3);
     }
 
     #[test]

@@ -13,8 +13,8 @@
 use std::time::Duration;
 
 use llmeasyquant::coordinator::{
-    workload, AdmissionPolicy, Backend, Batch, BatchPolicy, CostEstimator, Priority,
-    Request, Response, SchedulerMode, Server, ServerConfig, Worker,
+    workload, AdmissionPolicy, Backend, Batch, BatchPolicy, CostEstimator, FaultPlan,
+    FaultSpec, Priority, Request, Response, SchedulerMode, Server, ServerConfig, Worker,
 };
 use llmeasyquant::corpus::{self, BOS};
 use llmeasyquant::quant::Variant;
@@ -584,6 +584,124 @@ fn batch_priority_parks_behind_interactive_even_under_open_admission() {
     assert_eq!(report.deprioritized, 1, "exactly the batch request parks low");
     assert_eq!(batch.priority, Priority::Batch);
     assert_eq!(interactive.priority, Priority::Interactive);
+}
+
+// ---------------------------------------------------------------------------
+// Fault injection + recovery (sim backend)
+// ---------------------------------------------------------------------------
+
+/// Continuous config with a seeded fault plan armed and the liveness
+/// deadline shortened to keep the tests fast; the detection gates are in
+/// deadline units, so the shorter clock changes nothing they measure.
+fn fault_cfg(shards: usize, plan: FaultPlan) -> ServerConfig {
+    let mut cfg = sim_cfg(SchedulerMode::Continuous, shards, 4);
+    cfg.prefill_chunk = 8;
+    cfg.fault = FaultSpec::with_plan(plan);
+    cfg.fault.step_deadline = Duration::from_millis(25);
+    cfg
+}
+
+#[test]
+fn shard_kill_migrates_streams_token_identically() {
+    // the sim trajectory is a pure function of (token, pos), so
+    // re-prefilling prompt ++ delivered on a survivor must continue
+    // every stream exactly where the dead shard left it — the recovered
+    // run is diffed token for token against a fault-free reference
+    let n = 32;
+    let reference = {
+        let mut cfg = sim_cfg(SchedulerMode::Continuous, 2, 4);
+        cfg.prefill_chunk = 8;
+        let server = Server::start_sim(cfg, SimCost::fast()).unwrap();
+        server.run_workload(long_mixed_requests(n)).unwrap()
+    };
+    let cfg = fault_cfg(2, FaultPlan::new(5).crash(1, 6));
+    let server = Server::start_sim(cfg, SimCost::fast()).unwrap();
+    let report = server.run_workload(long_mixed_requests(n)).unwrap();
+
+    assert_eq!(report.responses.len(), n, "a survivor must absorb the dead shard's work");
+    assert_eq!(report.dead_shards, vec![1], "the injected crash was not detected");
+    assert!(report.migrated() > 0, "the dead shard held no in-flight work to migrate");
+    assert_eq!(report.lost_tokens, 0, "a token position was skipped");
+    assert_eq!(report.router_in_flight, 0);
+    assert_eq!(report.router_inflight_tokens, 0);
+    // detection: the crash is silent, so the liveness sweep must notice
+    // within the miss budget (max_misses deadlines, +1 of sweep slack,
+    // +0.5 for CI scheduling jitter)
+    assert!(
+        report.detection_deadlines.iter().all(|d| *d <= 4.5),
+        "detection overran the deadline budget: {:?}",
+        report.detection_deadlines
+    );
+    for id in 1..=n as u64 {
+        assert_eq!(
+            by_id(&reference.responses, id).tokens,
+            by_id(&report.responses, id).tokens,
+            "id {id} diverged after migration"
+        );
+    }
+}
+
+#[test]
+fn exactly_one_terminal_event_per_request_under_fault_and_overload() {
+    // the hostile composition: a predictive gate shedding batch work
+    // under a simultaneous overload burst while a shard dies mid-run.
+    // Every request must still get exactly one terminal event (served
+    // xor shed) and every router charge must return to zero.
+    let mut cfg = fault_cfg(2, FaultPlan::new(9).crash(0, 4));
+    cfg.admission = AdmissionPolicy::Predictive { target_ms: 0.5 };
+    let server = Server::start_sim(cfg, SimCost::fast()).unwrap();
+    let n = 32;
+    let report = server.run_open_loop(burst(n, Priority::Batch)).unwrap();
+
+    let mut ids: Vec<u64> = report
+        .responses
+        .iter()
+        .map(|r| r.id)
+        .chain(report.shed_ids.iter().copied())
+        .collect();
+    ids.sort_unstable();
+    assert_eq!(
+        ids,
+        (1..=n as u64).collect::<Vec<_>>(),
+        "terminal events must partition the request set exactly"
+    );
+    assert!(report.shed() > 0, "the overload burst must shed some batch work");
+    assert!(!report.responses.is_empty(), "the gate must not shed everything");
+    assert!(report.dead_shards.contains(&0), "the injected crash was not detected");
+    assert_eq!(report.lost_tokens, 0);
+    assert_eq!(report.router_in_flight, 0, "a router charge leaked through recovery");
+    assert_eq!(report.router_inflight_tokens, 0);
+}
+
+#[test]
+fn transient_stall_recovers_without_a_kill() {
+    // a stall burns extra wall clock but stays far under the death
+    // deadline: the shard may turn Suspect, must never be killed, and
+    // every request serves without migration
+    let cfg = fault_cfg(2, FaultPlan::new(3).stall(0, 3, 50));
+    let server = Server::start_sim(cfg, SimCost::fast()).unwrap();
+    let n = 16;
+    let report = server.run_workload(mixed_requests(n)).unwrap();
+    assert_eq!(report.responses.len(), n);
+    assert!(report.dead_shards.is_empty(), "a transient stall must not kill the shard");
+    assert_eq!(report.migrated(), 0);
+    assert_eq!(report.lost_tokens, 0);
+    assert_eq!(report.router_in_flight, 0);
+}
+
+#[test]
+fn losing_every_shard_sheds_the_remainder_terminally() {
+    // no survivor: whatever the dead fleet cannot serve must shed
+    // terminally (capacity is gone), with all accounting exact
+    let cfg = fault_cfg(1, FaultPlan::new(2).crash(0, 5));
+    let server = Server::start_sim(cfg, SimCost::fast()).unwrap();
+    let n = 12;
+    let report = server.run_workload(mixed_requests(n)).unwrap();
+    assert_eq!(report.responses.len() + report.shed(), n, "requests unaccounted for");
+    assert!(report.shed() > 0, "with no survivor the remainder must shed");
+    assert_eq!(report.dead_shards, vec![0]);
+    assert_eq!(report.router_in_flight, 0);
+    assert_eq!(report.router_inflight_tokens, 0);
 }
 
 #[test]
