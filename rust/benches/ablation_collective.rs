@@ -11,7 +11,9 @@
 
 use std::path::Path;
 
-use llmeasyquant::collective::{wire_format_rows, Collective, Topology, Transport};
+use llmeasyquant::collective::{
+    adaptive_chunk, wire_format_rows, Collective, Topology, Transport,
+};
 use llmeasyquant::util::bench::Table;
 use llmeasyquant::util::json::{self, Value};
 
@@ -46,6 +48,35 @@ fn run_broadcast(transport: Transport, world: usize, floats: usize, rounds: usiz
         })
         .collect();
     handles.into_iter().map(|h| h.join().unwrap()).next().unwrap()
+}
+
+/// Weight-shard distribution over the wire: rank 0 broadcasts a weight
+/// partition to the fleet, f32 (`bits == 32`) or over the quantized
+/// wire. Returns rank 0's (sim wire seconds, bytes sent).
+fn run_weight_broadcast(
+    transport: Transport,
+    world: usize,
+    floats: usize,
+    bits: u32,
+) -> (f64, u64) {
+    let ring = Collective::ring(Topology::new(world, transport));
+    let handles: Vec<_> = ring
+        .into_iter()
+        .map(|mut c| {
+            std::thread::spawn(move || {
+                let local: Vec<f32> =
+                    (0..floats).map(|i| ((i + c.rank()) as f32 * 0.13).sin()).collect();
+                if bits == 32 {
+                    c.broadcast(0, local).unwrap();
+                } else {
+                    c.broadcast_quant(0, &local, bits).unwrap();
+                }
+                c.stats()
+            })
+        })
+        .collect();
+    let stats: Vec<_> = handles.into_iter().map(|h| h.join().unwrap()).collect();
+    (stats[0].sim_time_s, stats[0].bytes_sent)
 }
 
 fn main() -> anyhow::Result<()> {
@@ -133,8 +164,75 @@ fn main() -> anyhow::Result<()> {
          4/2-bit ~0.13x/0.06x — the comm-layer half of the paper's claim."
     );
 
+    // ---- quantized weight-shard distribution (rejoin re-shard path) ------
+    println!(
+        "\n== ablation: weight-shard broadcast ({qfloats} f32 partition, {qworld} shards, \
+         nvlink) ==\n"
+    );
+    let mut t5 = Table::new(&["wire", "bytes/rank (KB)", "ratio vs f32", "sim wire (ms)"]);
+    let mut bcast_rows = Vec::new();
+    let (f32_sim, f32_bytes) = run_weight_broadcast(Transport::NvlinkRdma, qworld, qfloats, 32);
+    for bits in [32u32, 8, 4] {
+        let (sim, bytes) = if bits == 32 {
+            (f32_sim, f32_bytes)
+        } else {
+            run_weight_broadcast(Transport::NvlinkRdma, qworld, qfloats, bits)
+        };
+        let label = if bits == 32 { "f32".to_string() } else { format!("q{bits} packed") };
+        let ratio = bytes as f64 / f32_bytes.max(1) as f64;
+        t5.row(vec![
+            label.clone(),
+            format!("{:.1}", bytes as f64 / 1e3),
+            format!("{:.4}", ratio),
+            format!("{:.3}", sim * 1e3),
+        ]);
+        bcast_rows.push(Value::obj(vec![
+            ("name", Value::Str(format!("weight_broadcast {label}"))),
+            ("bits", Value::Num(f64::from(bits))),
+            ("world", Value::Num(qworld as f64)),
+            ("payload_f32", Value::Num(qfloats as f64)),
+            ("bytes_per_rank", Value::Num(bytes as f64)),
+            ("ratio_vs_f32", Value::Num(ratio)),
+            ("sim_time_ms", Value::Num(sim * 1e3)),
+        ]));
+    }
+    t5.print();
+    println!(
+        "\nthe rejoin path re-shards weights over this wire: a recovering shard\n\
+         pulls its partition at ~0.25x (8-bit) the f32 bytes."
+    );
+
+    // ---- adaptive wire chunking: the BDP-derived chunk per link ----------
+    println!("\n== adaptive wire chunk (elements, from the link BDP) ==\n");
+    let mut t6 = Table::new(&["transport", "q8", "q4", "q2"]);
+    let mut chunk_rows = Vec::new();
+    for tr in [Transport::NvlinkRdma, Transport::Infiniband, Transport::Tcp] {
+        let chunks: Vec<usize> =
+            [8u32, 4, 2].iter().map(|&b| adaptive_chunk(&tr.link(), b)).collect();
+        t6.row(vec![
+            tr.name().into(),
+            chunks[0].to_string(),
+            chunks[1].to_string(),
+            chunks[2].to_string(),
+        ]);
+        chunk_rows.push(Value::obj(vec![
+            ("transport", Value::Str(tr.name().into())),
+            ("bdp_bytes", Value::Num(tr.link().bdp_bytes())),
+            ("chunk_q8", Value::Num(chunks[0] as f64)),
+            ("chunk_q4", Value::Num(chunks[1] as f64)),
+            ("chunk_q2", Value::Num(chunks[2] as f64)),
+        ]));
+    }
+    t6.print();
+
     // machine-readable trajectory output at the repo root
-    let out = json::to_string_pretty(&Value::Arr(json_rows));
+    let doc = Value::obj(vec![
+        ("bench", Value::Str("ablation_collective".into())),
+        ("wire_rows", Value::Arr(json_rows)),
+        ("broadcast_rows", Value::Arr(bcast_rows)),
+        ("adaptive_chunk", Value::Arr(chunk_rows)),
+    ]);
+    let out = json::to_string_pretty(&doc);
     let path = Path::new(env!("CARGO_MANIFEST_DIR"))
         .parent()
         .map(|repo| repo.join("BENCH_collective.json"))

@@ -56,6 +56,12 @@ const PRED_SHED_SLACK: f64 = 8.0;
 /// acceptance is `<= target`; smoke tails are noisy).
 const PRED_INT_P99_MAX_RATIO: f64 = 1.5;
 
+/// A promoted rejoin must earn back at least this fraction of a fair
+/// 1/alive routing split over the admissions between its promotion and
+/// drain (1.0 is exactly fair; the router is deterministic least-loaded,
+/// so the slack only covers the thinning drain tail).
+const REJOIN_ADMIT_SHARE_MIN: f64 = 0.8;
+
 /// A shard kill must be detected within `max_misses + 1` step deadlines
 /// (the liveness sweep runs once per deadline, so detection lands in
 /// `[max_misses, max_misses + 1)`; the failed-inject fast path lands
@@ -238,6 +244,87 @@ fn check_fault_rows(rows: &[Value], failures: &mut Vec<String>) {
     }
 }
 
+fn check_recovery_rows(rows: &[Value], failures: &mut Vec<String>) {
+    // exactly-once + accounting invariants hold for every elastic row,
+    // kill or not
+    for r in rows {
+        let scenario = s(r, "scenario");
+        for key in ["lost_tokens", "dup_tokens", "mismatched_streams", "router_in_flight"] {
+            let v = f(r, key);
+            if v.is_nan() || v != 0.0 {
+                failures.push(format!(
+                    "recovery_rows: {scenario}: {key} = {v} (must be 0) — the elastic \
+                     arc broke exactly-once delivery or leaked accounting"
+                ));
+            }
+        }
+        if f(r, "shed_interactive") != 0.0 {
+            failures.push(format!(
+                "recovery_rows: {scenario}: shed {} interactive requests — degraded \
+                 capacity may only shed batch-priority work",
+                f(r, "shed_interactive"),
+            ));
+        }
+        if f(r, "served") + f(r, "shed") != f(r, "requests") {
+            failures.push(format!(
+                "recovery_rows: {scenario}: served {} + shed {} != offered {}",
+                f(r, "served"),
+                f(r, "shed"),
+                f(r, "requests"),
+            ));
+        }
+    }
+    let pick = |scenario: &str| rows.iter().find(|r| s(r, "scenario") == scenario);
+    let (Some(fixed), Some(degraded)) = (pick("kill-rejoin-fixed"), pick("kill-rejoin-degraded"))
+    else {
+        failures.push(
+            "recovery_rows: missing kill-rejoin-fixed/kill-rejoin-degraded pair".to_string(),
+        );
+        return;
+    };
+    for r in [fixed, degraded] {
+        let scenario = s(r, "scenario");
+        match r.get("rejoined").and_then(Value::as_arr) {
+            Some(shards) if !shards.is_empty() => {}
+            _ => failures.push(format!(
+                "recovery_rows: {scenario}: the killed shard never rejoined"
+            )),
+        }
+        let share = f(r, "rejoin_admit_share");
+        if share.is_nan() || share < REJOIN_ADMIT_SHARE_MIN {
+            failures.push(format!(
+                "recovery_rows: {scenario}: rejoin admit share {share:.3} < \
+                 {REJOIN_ADMIT_SHARE_MIN} — the promoted shard never earned back a \
+                 fair routing split"
+            ));
+        }
+        let rebroadcast = f(r, "rebroadcast_bytes");
+        if rebroadcast.is_nan() || rebroadcast <= 0.0 {
+            failures.push(format!(
+                "recovery_rows: {scenario}: rejoin re-broadcast no weight bytes — the \
+                 re-shard went unaccounted"
+            ));
+        }
+    }
+    if f(degraded, "degrade_enters") < 1.0 {
+        failures.push(
+            "recovery_rows: kill-rejoin-degraded: the degrade ladder never entered \
+             under a shrunken fleet"
+                .to_string(),
+        );
+    }
+    // the point of degraded mode: the same kill sheds strictly less
+    // when the survivors fall back to narrow KV reads
+    let (shed_fixed, shed_degraded) = (f(fixed, "shed"), f(degraded, "shed"));
+    if shed_fixed.is_nan() || shed_degraded.is_nan() || shed_degraded >= shed_fixed {
+        failures.push(format!(
+            "recovery_rows: degraded shed {shed_degraded} must be strictly below the \
+             fixed-width control's {shed_fixed} — bitwidth fallback bought no \
+             admission headroom"
+        ));
+    }
+}
+
 fn main() -> ExitCode {
     let manifest = std::path::Path::new(env!("CARGO_MANIFEST_DIR"));
     // `cargo bench` invokes every bench binary with a `--bench` flag;
@@ -282,10 +369,15 @@ fn main() -> ExitCode {
         Some(rows) => check_fault_rows(rows, &mut failures),
         None => failures.push("missing `fault_rows` array (run ablation_faults)".to_string()),
     }
+    match doc.get("recovery_rows").and_then(Value::as_arr) {
+        Some(rows) => check_recovery_rows(rows, &mut failures),
+        None => failures.push("missing `recovery_rows` array (run ablation_faults)".to_string()),
+    }
     if failures.is_empty() {
         println!(
             "check_batching: {} OK (static-vs-continuous + chunked/admission + \
-             predictive-admission + fault-recovery gates hold)",
+             predictive-admission + fault-recovery + elastic kill/degrade/rejoin \
+             gates hold)",
             path.display()
         );
         ExitCode::SUCCESS

@@ -34,6 +34,15 @@ impl LinkModel {
         self.alpha_s + bytes as f64 / self.beta_bps
     }
 
+    /// Bandwidth-delay product (bytes): how much data fits "in flight"
+    /// on this link. The natural wire-chunk size — chunks much smaller
+    /// than the BDP waste the pipe on per-message latency, much larger
+    /// ones stop overlapping encode with flight (`ops::adaptive_chunk`
+    /// derives the quantized-wire chunk from this).
+    pub fn bdp_bytes(&self) -> f64 {
+        self.alpha_s * self.beta_bps
+    }
+
     /// Ring all-gather of `bytes` total payload across `n` ranks:
     /// (n-1) steps, each moving bytes/n per hop.
     pub fn ring_allgather_time(&self, bytes: usize, n: usize) -> f64 {
@@ -164,6 +173,20 @@ mod tests {
     fn tcp_slower_than_nvlink() {
         let b = 1 << 24;
         assert!(LinkModel::tcp().hop_time(b) > LinkModel::nvlink().hop_time(b) * 100.0);
+    }
+
+    #[test]
+    fn bdp_orders_the_transport_tiers() {
+        // nvlink ~3 MB, infiniband ~200 KB, tcp ~75 KB in flight
+        let (nv, ib, tcp) = (
+            LinkModel::nvlink().bdp_bytes(),
+            LinkModel::infiniband().bdp_bytes(),
+            LinkModel::tcp().bdp_bytes(),
+        );
+        assert!(nv > ib && ib > tcp, "nv {nv} ib {ib} tcp {tcp}");
+        assert!((nv - 3e6).abs() < 1e3);
+        assert!((ib - 200e3).abs() < 1e2);
+        assert!((tcp - 75e3).abs() < 1e2);
     }
 
     #[test]

@@ -19,7 +19,9 @@ mod ops;
 mod topology;
 
 pub use link::{CommStats, LinkFaults, LinkModel};
-pub use ops::{Collective, OpError, CHUNK_RETRY_LIMIT, QUANT_CHUNK};
+pub use ops::{
+    adaptive_chunk, Collective, OpError, CHUNK_RETRY_LIMIT, MAX_QUANT_CHUNK, QUANT_CHUNK,
+};
 pub use topology::{Topology, Transport};
 
 /// Spawn a `world`-rank ring, all-gather `len` synthetic f32 per rank

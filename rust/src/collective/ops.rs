@@ -46,11 +46,35 @@ use super::{CommStats, LinkFaults, LinkModel, Topology};
 
 const RECV_TIMEOUT: Duration = Duration::from_secs(30);
 
-/// Elements per quantized wire chunk. Each chunk carries one token scale
-/// and goes on the wire the moment it is encoded, pipelining encode with
-/// the previous chunk's flight down the ring. Public so tests and
-/// benches derive error bounds and byte counts from the real value.
+/// Floor (and granularity) of the quantized wire chunk, in elements.
+/// Each chunk carries one token scale and goes on the wire the moment
+/// it is encoded, pipelining encode with the previous chunk's flight
+/// down the ring. The chunk size actually used by an endpoint is
+/// derived from its link's bandwidth-delay product ([`adaptive_chunk`])
+/// and is always a multiple of this floor. Public so tests and benches
+/// derive error bounds and byte counts from the real values.
 pub const QUANT_CHUNK: usize = 4096;
+
+/// Ceiling of the adaptive wire chunk (elements): past this, a chunk no
+/// longer overlaps encode with flight and the per-chunk scale stops
+/// tracking local dynamic range.
+pub const MAX_QUANT_CHUNK: usize = 1 << 18;
+
+/// Elements per quantized wire chunk for a link, derived from its
+/// bandwidth-delay product: the chunk's wire bytes (~`bits/8` per
+/// element) should roughly fill the link's in-flight window, so fast
+/// fat links (NVLink, ~3 MB BDP) stream big chunks while the TCP tier
+/// (~75 KB BDP) keeps chunks small enough that per-chunk latency still
+/// hides behind flight. Lower wire bitwidths pack more elements into
+/// the same in-flight bytes, so the element chunk grows as bits shrink.
+/// Clamped to `[QUANT_CHUNK, MAX_QUANT_CHUNK]` and quantized to a
+/// multiple of [`QUANT_CHUNK`]; every rank derives the same value from
+/// the shared topology link (SPMD contract).
+pub fn adaptive_chunk(link: &LinkModel, bits: u32) -> usize {
+    let elems = (link.bdp_bytes() * 8.0 / bits.max(1) as f64) as usize;
+    let floored = (elems / QUANT_CHUNK) * QUANT_CHUNK;
+    floored.clamp(QUANT_CHUNK, MAX_QUANT_CHUNK)
+}
 
 /// Consecutive checksum failures on one chunk delivery before the
 /// receiving rank gives up on the link and ejects from the ring.
@@ -142,11 +166,11 @@ fn chunk_checksum(codes: &[u8], scales: &[f32]) -> u64 {
     h
 }
 
-/// Wire shape of one rank's quantized contribution: (chunk count, bytes
-/// = packed codes + one f32 scale per chunk). The single source for the
-/// gather and the reduce sim-time accounting.
-fn quant_wire_shape(len: usize, bits: u32) -> (usize, usize) {
-    let n_chunks = len.div_ceil(QUANT_CHUNK);
+/// Wire shape of one rank's quantized contribution at a given chunk
+/// size: (chunk count, bytes = packed codes + one f32 scale per chunk).
+/// The single source for the gather and the reduce sim-time accounting.
+fn quant_wire_shape(len: usize, bits: u32, chunk: usize) -> (usize, usize) {
+    let n_chunks = len.div_ceil(chunk.max(1));
     (n_chunks, kernels::packed_len(len, bits) + n_chunks * 4)
 }
 
@@ -361,7 +385,8 @@ impl Collective {
         let n = self.world;
         let rank = self.rank;
         let len = local.len();
-        let (n_chunks, contrib_bytes) = quant_wire_shape(len, bits);
+        let chunk = adaptive_chunk(&self.link, bits);
+        let (n_chunks, contrib_bytes) = quant_wire_shape(len, bits, chunk);
         let mut out: Vec<Vec<f32>> = (0..n).map(|_| vec![0f32; len]).collect();
         if len == 0 {
             self.stats.ops += 1;
@@ -372,33 +397,33 @@ impl Collective {
         // step 0: encode chunk k, adopt its dequantized values locally
         // (borrowed, no clone), then put it on the wire — chunk k is in
         // flight while chunk k+1 is still being encoded
-        for (ci, chunk) in local.chunks(QUANT_CHUNK).enumerate() {
-            let mut codes = vec![0u8; kernels::packed_len(chunk.len(), bits)];
+        for (ci, piece) in local.chunks(chunk).enumerate() {
+            let mut codes = vec![0u8; kernels::packed_len(piece.len(), bits)];
             let mut scales = vec![0f32; 1];
             kernels::token_quantize_packed_into(
-                chunk,
+                piece,
                 1,
-                chunk.len(),
+                piece.len(),
                 bits,
                 &mut codes,
                 &mut scales,
             )
             .map_err(|_| OpError::Payload { rank, op: "all_gather_quant" })?;
-            let start = ci * QUANT_CHUNK;
+            let start = ci * chunk;
             kernels::token_dequantize_packed_into(
                 &codes,
                 &scales,
                 1,
-                chunk.len(),
+                piece.len(),
                 bits,
-                &mut out[rank][start..start + chunk.len()],
+                &mut out[rank][start..start + piece.len()],
             )
             .map_err(|_| OpError::Payload { rank, op: "all_gather_quant" })?;
             if n > 1 {
                 let checksum = chunk_checksum(&codes, &scales);
                 let payload = Payload::Quant {
                     bits,
-                    n: chunk.len(),
+                    n: piece.len(),
                     codes: Arc::new(codes),
                     scales: Arc::new(scales),
                     checksum,
@@ -418,7 +443,7 @@ impl Collective {
                         return Err(OpError::Payload { rank, op: "all_gather_quant" })
                     }
                 };
-                let start = p.part * QUANT_CHUNK;
+                let start = p.part * chunk;
                 if p.origin >= n || start + clen > len {
                     return Err(OpError::Payload { rank, op: "all_gather_quant" });
                 }
@@ -460,6 +485,36 @@ impl Collective {
         self.all_reduce_q(local, bits, f32::NEG_INFINITY, f32::max)
     }
 
+    /// Broadcast from `root` over the quantized wire — the weight-shard
+    /// distribution path (a rejoining shard pulls its weight partition
+    /// from the fleet low-bit instead of as raw f32). Every rank adopts
+    /// the root's *dequantized* chunks, so all ranks — the root included
+    /// — hold bit-identical values. Sim time is accounted with the
+    /// binomial-tree broadcast formula over the quantized contribution
+    /// bytes; `CommStats::bytes_sent` counts the packed bytes actually
+    /// shipped.
+    pub fn broadcast_quant(
+        &mut self,
+        root: usize,
+        local: &[f32],
+        bits: u32,
+    ) -> Result<Vec<f32>, OpError> {
+        if root >= self.world {
+            return Err(OpError::Payload { rank: self.rank, op: "broadcast_quant" });
+        }
+        let len = local.len();
+        let chunk = adaptive_chunk(&self.link, bits);
+        let (n_chunks, contrib_bytes) = quant_wire_shape(len, bits, chunk);
+        let parts = self.all_gather_quant(local, bits)?;
+        if len > 0 {
+            self.stats.sim_time_s -= self
+                .link
+                .ring_allgather_chunked_time(contrib_bytes * self.world, self.world, n_chunks);
+            self.stats.sim_time_s += self.link.broadcast_time(contrib_bytes, self.world);
+        }
+        Ok(parts[root].clone())
+    }
+
     /// Shared body of the quantized reductions: gather over the
     /// quantized wire, swap the all-gather sim-time entry for the
     /// all-reduce ring formula (same wire shape, via
@@ -472,7 +527,8 @@ impl Collective {
         fold: fn(f32, f32) -> f32,
     ) -> Result<Vec<f32>, OpError> {
         let len = local.len();
-        let (n_chunks, contrib_bytes) = quant_wire_shape(len, bits);
+        let chunk = adaptive_chunk(&self.link, bits);
+        let (n_chunks, contrib_bytes) = quant_wire_shape(len, bits, chunk);
         let total = contrib_bytes * self.world;
         let parts = self.all_gather_quant(local, bits)?;
         if len > 0 {
@@ -662,6 +718,85 @@ mod tests {
     fn quant_rejects_unpackable_bits() {
         let results = run_world(1, |mut c| c.all_gather_quant(&[1.0], 3).is_err());
         assert!(results[0]);
+    }
+
+    #[test]
+    fn adaptive_chunk_tracks_the_links_bdp() {
+        let nv = adaptive_chunk(&LinkModel::nvlink(), 8);
+        let ib = adaptive_chunk(&LinkModel::infiniband(), 8);
+        let tcp = adaptive_chunk(&LinkModel::tcp(), 8);
+        assert!(nv >= ib && ib > tcp, "nv {nv} ib {ib} tcp {tcp}");
+        for c in [nv, ib, tcp] {
+            assert_eq!(c % QUANT_CHUNK, 0, "chunk {c} not a multiple of the floor");
+            assert!((QUANT_CHUNK..=MAX_QUANT_CHUNK).contains(&c));
+        }
+        // lower wire bits pack more elements into the same in-flight bytes
+        assert!(adaptive_chunk(&LinkModel::tcp(), 4) > tcp);
+        // nvlink's ~3 MB BDP saturates the ceiling
+        assert_eq!(nv, MAX_QUANT_CHUNK);
+        // a degenerate link still yields a sane floor chunk
+        let slow = LinkModel { alpha_s: 1e-6, beta_bps: 1e6 };
+        assert_eq!(adaptive_chunk(&slow, 8), QUANT_CHUNK);
+    }
+
+    #[test]
+    fn quant_broadcast_delivers_root_payload_on_every_rank() {
+        let results = run_world(4, |mut c| {
+            let local: Vec<f32> =
+                (0..100).map(|i| (10 * c.rank()) as f32 + i as f32 * 0.01).collect();
+            (c.broadcast_quant(2, &local, 8).unwrap(), c.stats())
+        });
+        for (r, stats) in &results {
+            for (i, v) in r.iter().enumerate() {
+                let expect = 20.0 + i as f32 * 0.01;
+                assert!((v - expect).abs() < 0.15, "elem {i}: {v} vs {expect}");
+            }
+            assert!(stats.sim_time_s > 0.0);
+            // the wire shipped packed 8-bit bytes, not f32
+            assert!(
+                stats.bytes_sent < (100 * 4 * 3) as u64,
+                "broadcast shipped f32-sized payloads: {} bytes",
+                stats.bytes_sent
+            );
+        }
+        // all ranks adopt bit-identical dequantized values
+        for (r, _) in &results[1..] {
+            assert_eq!(r, &results[0].0);
+        }
+        // out-of-range root is a typed payload error, not a panic
+        let bad = run_world(2, |mut c| c.broadcast_quant(7, &[1.0], 8).is_err());
+        assert!(bad[0] && bad[1]);
+    }
+
+    #[test]
+    fn quant_broadcast_costs_less_wire_time_than_f32() {
+        // one rank: no wire traffic, but the accounting formulas still
+        // apply — the quantized broadcast models ~4x fewer bytes
+        let results = run_world(4, |mut c| {
+            let local = vec![c.rank() as f32; 64 * 1024];
+            if c.rank() == 0 {
+                let t_f32 = {
+                    let mut probe = c.stats().sim_time_s;
+                    c.broadcast(0, local.clone()).unwrap();
+                    probe = c.stats().sim_time_s - probe;
+                    probe
+                };
+                let t_q = {
+                    let mut probe = c.stats().sim_time_s;
+                    c.broadcast_quant(0, &local, 8).unwrap();
+                    probe = c.stats().sim_time_s - probe;
+                    probe
+                };
+                (t_f32, t_q)
+            } else {
+                c.broadcast(0, local.clone()).unwrap();
+                c.broadcast_quant(0, &local, 8).unwrap();
+                (0.0, 0.0)
+            }
+        });
+        let (t_f32, t_q) = results[0];
+        assert!(t_q > 0.0 && t_f32 > 0.0);
+        assert!(t_q < t_f32 / 2.0, "quantized broadcast wire time {t_q} vs f32 {t_f32}");
     }
 
     #[test]

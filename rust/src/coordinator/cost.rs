@@ -72,6 +72,31 @@ impl CostEstimator {
         self.batch
     }
 
+    /// Fixed fused-step launch cost (seconds). Doubles as the
+    /// dispatcher's decode-step clock: fault-plan steps (`crash@N`,
+    /// `recover@N`) are counted in fused decode calls, so `N * step_s()`
+    /// converts a plan step into elapsed serving time.
+    pub fn step_s(&self) -> f64 {
+        self.step_s
+    }
+
+    /// The estimator for degraded-mode serving at `kv_bits`-wide KV
+    /// pages. Fused decode is memory-bound on streaming the KV cache, so
+    /// the per-slot share of the decode rate scales with `kv_bits / 8`
+    /// (mirroring `SimModel::set_kv_bits`); the step launch and prefill
+    /// rates are width-independent. The dispatcher swaps this in when
+    /// the fleet degrades so admission prices the *actual* (higher)
+    /// capacity and sheds less.
+    pub fn degraded(&self, kv_bits: u32) -> Self {
+        let scale = kv_bits.clamp(1, 8) as f64 / 8.0;
+        let launch_share = self.step_s / self.batch as f64;
+        let slot_share = (self.decode_s_per_token - launch_share).max(0.0);
+        CostEstimator {
+            decode_s_per_token: launch_share + slot_share * scale,
+            ..*self
+        }
+    }
+
     /// Serialization cost (seconds) chunked prefill adds for a prompt:
     /// each chunk boundary after the first waits behind one fused decode
     /// step before the next chunk is paid. `prefill_chunk == 0` is
@@ -163,6 +188,25 @@ mod tests {
         let whole = e.predict_s((0, 0), 120, 4, 0);
         let chunked = e.predict_s((0, 0), 120, 4, 16);
         assert!((chunked - whole - 7.0 * 250e-6).abs() < 1e-12);
+    }
+
+    #[test]
+    fn degraded_estimator_scales_the_slot_share_only() {
+        let e = est();
+        let d = e.degraded(4);
+        // launch share 250/8 = 31.25 us stays; slot share 25 -> 12.5 us
+        assert!((d.decode_s_per_token - (31.25e-6 + 12.5e-6)).abs() < 1e-12);
+        assert_eq!(d.prefill_s_per_token, e.prefill_s_per_token);
+        assert_eq!(d.step_s(), e.step_s());
+        assert_eq!(d.batch(), e.batch());
+        // degraded capacity is strictly higher: same backlog, lower t_pred
+        assert!(d.predict_s((0, 400), 8, 16, 0) < e.predict_s((0, 400), 8, 16, 0));
+        // native width is the identity
+        let same = e.degraded(8);
+        assert_eq!(same.decode_s_per_token, e.decode_s_per_token);
+        // clamped below, and the step clock is the sim launch cost
+        assert!(e.degraded(0).decode_s_per_token > 31.25e-6);
+        assert!((e.step_s() - 250e-6).abs() < 1e-15);
     }
 
     #[test]

@@ -3,15 +3,28 @@
 //!
 //! A [`FaultPlan`] names *what goes wrong and when* — shard crashes at a
 //! decode step, transient stalls of K steps, link chunk corruption with
-//! probability p — under a single seed, so a failing recovery run
-//! replays bit-identically. The plan itself does nothing: it compiles
-//! into per-shard [`runtime::ShardFaults`] executed inside the sim
-//! backend (the "device" dies; the scheduler has to notice) and
-//! per-rank [`collective::LinkFaults`] drawn by the ring transport.
+//! probability p, scheduled recoveries — under a single seed, so a
+//! failing recovery run replays bit-identically. The plan itself does
+//! nothing: it compiles into per-shard [`runtime::ShardFaults`] executed
+//! inside the sim backend (the "device" dies; the scheduler has to
+//! notice) and per-rank [`collective::LinkFaults`] drawn by the ring
+//! transport.
+//!
+//! A `recover:<shard>@<step>` clause schedules a *replacement device*
+//! for the shard: at recovery step `at_step` (counted in calibrated
+//! fused-decode step times on the dispatcher's clock) the device is
+//! available, and the shard rejoins as soon as it is both available and
+//! Dead. Each rejoin starts a fresh *incarnation* of the shard;
+//! [`FaultPlan::shard_faults_incarnation`] hands incarnation `k` the
+//! k-th scheduled crash (steps counted on that incarnation's own decode
+//! clock), which is how a flapping shard — crash, recover, crash again
+//! — is scripted deterministically.
 //!
 //! [`FaultSpec`] carries the server-side handling knobs next to the
-//! plan: the per-shard step deadline and the miss budget `M` driving
-//! the Healthy → Suspect → Dead lifecycle ([`ShardHealth`]). Liveness
+//! plan: the per-shard step deadline, the miss budget `M` driving the
+//! Healthy → Suspect → Dead lifecycle ([`ShardHealth`]), and the rejoin
+//! ramp length (clean deadlines a recovered shard must string together
+//! on probe traffic before regaining its full routing share). Liveness
 //! tracking is armed only when a plan is present — on a healthy
 //! deployment (and on slow CI runners) there is no wall-clock deadline
 //! that could false-kill a busy shard.
@@ -39,11 +52,23 @@ pub struct StallFault {
     pub steps: u64,
 }
 
+/// Scheduled recovery: a replacement device for `shard` becomes
+/// available at dispatcher recovery step `at_step` (units of the
+/// calibrated fused-decode step time). The shard rejoins at the later
+/// of availability and death detection — a replacement cannot rejoin a
+/// shard that is still alive.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct RecoverFault {
+    pub shard: usize,
+    pub at_step: u64,
+}
+
 /// A seeded, reproducible failure schedule for one serving run.
 #[derive(Debug, Clone, PartialEq, Default)]
 pub struct FaultPlan {
     pub crashes: Vec<CrashFault>,
     pub stalls: Vec<StallFault>,
+    pub recovers: Vec<RecoverFault>,
     /// per-chunk wire corruption probability in [0, 1]
     pub corrupt_p: f64,
     pub seed: u64,
@@ -72,23 +97,65 @@ impl FaultPlan {
         self
     }
 
+    /// Schedule a replacement device for `shard` at recovery step
+    /// `at_step`.
+    pub fn recover(mut self, shard: usize, at_step: u64) -> Self {
+        self.recovers.push(RecoverFault { shard, at_step });
+        self
+    }
+
     /// Compile the schedule one sim shard executes. Multiple crash
     /// clauses for a shard collapse to the earliest (a device dies
     /// once); stalls keep the first clause.
     pub fn shard_faults(&self, shard: usize) -> ShardFaults {
+        self.shard_faults_incarnation(shard, 0)
+    }
+
+    /// Compile the schedule for incarnation `incarnation` of a shard
+    /// (0 = the original device, 1 = the first replacement, ...).
+    /// Incarnation `k` receives the shard's k-th scheduled crash (by
+    /// ascending step), with the step counted on that incarnation's own
+    /// decode clock — so `crash:1@40,recover:1@120,crash:1@60` crashes
+    /// the replacement at *its* step 60. Stalls apply to the original
+    /// incarnation only.
+    pub fn shard_faults_incarnation(&self, shard: usize, incarnation: usize) -> ShardFaults {
+        let mut crash_steps: Vec<u64> = self
+            .crashes
+            .iter()
+            .filter(|c| c.shard == shard)
+            .map(|c| c.at_step)
+            .collect();
+        crash_steps.sort_unstable();
         ShardFaults {
-            crash_at_step: self
-                .crashes
-                .iter()
-                .filter(|c| c.shard == shard)
-                .map(|c| c.at_step)
-                .min(),
-            stall: self
-                .stalls
-                .iter()
-                .find(|s| s.shard == shard)
-                .map(|s| (s.at_step, s.steps)),
+            crash_at_step: crash_steps.get(incarnation).copied(),
+            stall: if incarnation == 0 {
+                self.stalls
+                    .iter()
+                    .find(|s| s.shard == shard)
+                    .map(|s| (s.at_step, s.steps))
+            } else {
+                None
+            },
         }
+    }
+
+    /// Recovery steps scheduled for a shard, ascending. One rejoin is
+    /// granted per clause: a shard that dies again after consuming its
+    /// last clause stays dead.
+    pub fn recover_steps(&self, shard: usize) -> Vec<u64> {
+        let mut steps: Vec<u64> = self
+            .recovers
+            .iter()
+            .filter(|r| r.shard == shard)
+            .map(|r| r.at_step)
+            .collect();
+        steps.sort_unstable();
+        steps
+    }
+
+    /// Whether any recovery is scheduled (arms the rejoin machinery).
+    pub fn has_recovery(&self) -> bool {
+        !self.recovers.is_empty()
     }
 
     /// Per-rank corruption schedule for the ring transport, derived
@@ -103,10 +170,10 @@ impl FaultPlan {
 
     /// Parse a plan from the `--fault-plan` CLI spec: comma-separated
     /// clauses `crash:<shard>@<step>`, `stall:<shard>@<step>x<steps>`,
-    /// `corrupt:<p>`, `seed:<n>`. Example:
+    /// `recover:<shard>@<step>`, `corrupt:<p>`, `seed:<n>`. Example:
     ///
     /// ```text
-    /// crash:1@40,stall:2@10x5,corrupt:0.01,seed:7
+    /// crash:1@40,recover:1@120,stall:2@10x5,corrupt:0.01,seed:7
     /// ```
     pub fn parse(spec: &str) -> Result<FaultPlan> {
         fn num<T: std::str::FromStr>(what: &str, clause: &str, s: &str) -> Result<T> {
@@ -142,6 +209,15 @@ impl FaultPlan {
                         steps: num("steps", clause, steps)?,
                     });
                 }
+                "recover" => {
+                    let (shard, step) = rest.split_once('@').ok_or_else(|| {
+                        anyhow!("recover clause `{clause}` needs `shard@step`")
+                    })?;
+                    plan.recovers.push(RecoverFault {
+                        shard: num("shard", clause, shard)?,
+                        at_step: num("step", clause, step)?,
+                    });
+                }
                 "corrupt" => {
                     let p: f64 = num("probability", clause, rest)?;
                     if !(0.0..=1.0).contains(&p) {
@@ -152,7 +228,7 @@ impl FaultPlan {
                 "seed" => plan.seed = num("seed", clause, rest)?,
                 other => bail!(
                     "unknown fault clause kind `{other}` (expected crash | stall | \
-                     corrupt | seed)"
+                     recover | corrupt | seed)"
                 ),
             }
         }
@@ -173,11 +249,20 @@ pub struct FaultSpec {
     /// detection-latency gate: detection must land within `M + 1`
     /// deadlines)
     pub max_misses: u32,
+    /// rejoin ramp: clean step deadlines a recovered shard must string
+    /// together on probe traffic (at most one in-flight request) before
+    /// it regains its full routing share
+    pub ramp_deadlines: u32,
 }
 
 impl Default for FaultSpec {
     fn default() -> Self {
-        FaultSpec { plan: None, step_deadline: Duration::from_millis(250), max_misses: 3 }
+        FaultSpec {
+            plan: None,
+            step_deadline: Duration::from_millis(250),
+            max_misses: 3,
+            ramp_deadlines: 3,
+        }
     }
 }
 
@@ -203,7 +288,11 @@ impl FaultSpec {
 /// runnable work that misses one deadline is `Suspect` (still routed
 /// to — stalls recover); missing `max_misses` consecutive deadlines is
 /// `Dead`: its sender is dropped, its in-flight requests migrate, and
-/// it never rejoins the routing set.
+/// it leaves the routing set. A `Dead` shard re-enters as `Healthy`
+/// only through the rejoin path (a scheduled `recover:` clause or a
+/// promoted warm standby), behind the router's probe ramp; every
+/// transition is idempotent — re-declaring a dead shard dead, or
+/// re-recovering an alive one, is a no-op.
 #[derive(Debug, Clone, Copy, PartialEq, Eq, Default)]
 pub enum ShardHealth {
     #[default]
@@ -228,12 +317,18 @@ mod tests {
 
     #[test]
     fn parse_full_spec() {
-        let p = FaultPlan::parse("crash:1@40, stall:2@10x5, corrupt:0.01, seed:7").unwrap();
+        let p = FaultPlan::parse(
+            "crash:1@40, recover:1@120, stall:2@10x5, corrupt:0.01, seed:7",
+        )
+        .unwrap();
         assert_eq!(p.crashes, vec![CrashFault { shard: 1, at_step: 40 }]);
+        assert_eq!(p.recovers, vec![RecoverFault { shard: 1, at_step: 120 }]);
         assert_eq!(p.stalls, vec![StallFault { shard: 2, at_step: 10, steps: 5 }]);
         assert_eq!(p.corrupt_p, 0.01);
         assert_eq!(p.seed, 7);
+        assert!(p.has_recovery());
         assert_eq!(FaultPlan::parse("").unwrap(), FaultPlan::default());
+        assert!(!FaultPlan::default().has_recovery());
     }
 
     #[test]
@@ -242,6 +337,8 @@ mod tests {
             "crash:1",          // missing @step
             "crash:x@4",        // bad shard
             "stall:2@10",       // missing xsteps
+            "recover:1",        // missing @step
+            "recover:x@4",      // bad shard
             "corrupt:1.5",      // out of range
             "corrupt:x",        // not a number
             "explode:1@2",      // unknown kind
@@ -257,6 +354,29 @@ mod tests {
         assert_eq!(p.shard_faults(1).crash_at_step, Some(20), "earliest crash wins");
         assert_eq!(p.shard_faults(0).stall, Some((5, 3)));
         assert!(p.shard_faults(2).is_empty());
+    }
+
+    #[test]
+    fn incarnations_take_crashes_in_step_order() {
+        // flap script: original dies at 40, the replacement at its own
+        // step 60, a second replacement never crashes
+        let p = FaultPlan::new(5).crash(1, 60).crash(1, 40).stall(1, 5, 2);
+        assert_eq!(p.shard_faults_incarnation(1, 0).crash_at_step, Some(40));
+        assert_eq!(p.shard_faults_incarnation(1, 0).stall, Some((5, 2)));
+        let second = p.shard_faults_incarnation(1, 1);
+        assert_eq!(second.crash_at_step, Some(60));
+        assert_eq!(second.stall, None, "stalls apply to the original incarnation only");
+        assert!(p.shard_faults_incarnation(1, 2).is_empty());
+        assert!(p.shard_faults_incarnation(0, 0).is_empty());
+    }
+
+    #[test]
+    fn recover_steps_sort_ascending_per_shard() {
+        let p = FaultPlan::new(1).recover(2, 90).recover(1, 120).recover(2, 30);
+        assert_eq!(p.recover_steps(2), vec![30, 90]);
+        assert_eq!(p.recover_steps(1), vec![120]);
+        assert!(p.recover_steps(0).is_empty());
+        assert!(p.has_recovery());
     }
 
     #[test]

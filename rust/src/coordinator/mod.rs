@@ -95,9 +95,9 @@
 //! Dead ([`ShardHealth`]): a shard with runnable work that misses one
 //! `step_deadline` is Suspect (still routed to — injected stalls
 //! recover), and `max_misses` consecutive silent deadlines make it
-//! Dead. Death is permanent: the shard leaves the routing set, and
-//! each in-flight request migrates with exactly-once delivery — the
-//! router charge refunds idempotently, the admitted prompt plus every
+//! Dead. On death the shard leaves the routing set, and each in-flight
+//! request migrates with exactly-once delivery — the router charge
+//! refunds idempotently, the admitted prompt plus every
 //! already-delivered token re-prefills as a prefix on the least-loaded
 //! survivor (the deterministic trajectory continues token-identically),
 //! and the new stream's worker-local positions are rebased by the
@@ -109,6 +109,42 @@
 //! On the wire, ring collectives carry per-chunk checksums with
 //! bounded retry-then-eject (`collective`), so link corruption either
 //! heals or removes the rank rather than corrupting scales.
+//!
+//! **Elastic recovery** (the full arc is kill → degrade → rejoin →
+//! restore; death is permanent only when no replacement is
+//! provisioned):
+//!
+//!   degrade — a shrunken fleet (or sustained decode backlog above a
+//!             high watermark) drops every survivor's KV reads from
+//!             8-bit to `ServerConfig::degrade_bits`; fused decode is
+//!             memory-bound on KV pages, so the narrower reads raise
+//!             effective capacity, and the predictive gate reprices
+//!             with [`CostEstimator::degraded`] so it sheds less than
+//!             a fixed-width fleet under the same kill. The ladder is
+//!             hysteretic: enter on a death or on the high watermark
+//!             held for consecutive deadline ticks, exit only at full
+//!             fleet strength with backlog under the low watermark —
+//!             one pressure episode moves the width once, not per
+//!             oscillation.
+//!   rejoin  — a `recover:<shard>@<step>` clause ([`RecoverFault`]) or
+//!             a warm spare (`ServerConfig::standby`, at most one per
+//!             detected death) brings a Dead shard back: the dispatcher
+//!             spawns the next incarnation's worker, accounts the
+//!             quantized (one byte per parameter) weight re-broadcast
+//!             that re-shards its partition over the survivor ring,
+//!             and re-enters it behind a probe ramp.
+//!   restore — a probing shard holds at most one stream at a time (an
+//!             idle prober takes routing priority, so the probe always
+//!             lands) until it stays Healthy for
+//!             `FaultSpec::ramp_deadlines` clean deadlines; then
+//!             `Router::promote` restores its full least-loaded share.
+//!             Health transitions are typed and idempotent
+//!             ([`Transition`]): double-kill, double-recover, and
+//!             promote-after-death are no-ops, so a flapping shard
+//!             replays the ladder per incarnation without double
+//!             counting. Streams stay exactly-once across
+//!             kill → rejoin because migration already rebased them
+//!             and a rejoined incarnation starts with fresh streams.
 //!
 //! Python never appears here: workers execute AOT artifacts through PJRT
 //! (or the simulated backend offline).
@@ -131,10 +167,10 @@ pub use bitwidth::{
     quant_mse, search_bitwidths, size_reduction, BitwidthChoice, LayerInfo, SearchPolicy,
     BIT_CHOICES,
 };
-pub use faults::{CrashFault, FaultPlan, FaultSpec, ShardHealth, StallFault};
+pub use faults::{CrashFault, FaultPlan, FaultSpec, RecoverFault, ShardHealth, StallFault};
 pub use kv_cache::{KvCache, PrefillPage};
 pub use request::{Priority, Request, RequestId, Response, ServeEvent};
-pub use router::{request_cost, RouteDecision, Router};
+pub use router::{request_cost, RouteDecision, Router, Transition};
 pub use scale_sync::{sync_wire_bits_for, ScaleSync, SYNC_WIRE_BITS};
 pub use server::{Server, ServerConfig, ServerReport};
 pub use worker::{Backend, Worker, WorkerStats};

@@ -20,6 +20,18 @@ pub struct RouteDecision {
     pub cost: usize,
 }
 
+/// Outcome of a routing-set health transition ([`Router::mark_dead`],
+/// [`Router::revive`], [`Router::promote`]): `Noop` means the
+/// transition had already been applied — killing a dead shard twice,
+/// or double-applying a `recover:` clause, must not corrupt the
+/// routing set, so re-entrant calls are typed no-ops instead of
+/// silent state churn.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum Transition {
+    Applied,
+    Noop,
+}
+
 /// Token cost of an admitted request: prompt tokens to prefill plus the
 /// decode budget. Computed after BOS-prefixing/truncation.
 pub fn request_cost(req: &Request) -> usize {
@@ -51,13 +63,22 @@ pub struct Router {
     decode_load: Vec<usize>,
     /// request -> charge; sessions stay on their shard for KV affinity
     sessions: BTreeMap<RequestId, Charge>,
-    /// shards still in the routing set; a dead shard never rejoins.
-    /// Killing a shard concentrates subsequent load (and therefore
-    /// `backlog`) on the survivors, which is exactly how capacity loss
-    /// reaches the predictive admission gate: the same target now
-    /// prices against 1/(n-1) more backlog per shard and sheds batch
-    /// traffic instead of breaching the SLO.
+    /// shards currently in the routing set. Killing a shard
+    /// concentrates subsequent load (and therefore `backlog`) on the
+    /// survivors, which is exactly how capacity loss reaches the
+    /// predictive admission gate: the same target now prices against
+    /// 1/(n-1) more backlog per shard and sheds batch traffic instead
+    /// of breaching the SLO. A dead shard re-enters only via `revive`
+    /// (rejoin / standby promotion), and then behind the probe ramp.
     alive: Vec<bool>,
+    /// rejoin ramp: a revived shard is `probing` until promoted — it is
+    /// only eligible for a new request while it has *zero* in-flight
+    /// tokens (one probe stream at a time), so a flapping shard can
+    /// never hold more than one migratable request
+    probing: Vec<bool>,
+    /// requests charged to each shard since construction (admissions +
+    /// migrations) — the fair-share signal the rejoin drill measures
+    admitted: Vec<u64>,
     next_id: RequestId,
 }
 
@@ -72,6 +93,8 @@ impl Router {
             decode_load: vec![0; n_shards],
             sessions: BTreeMap::new(),
             alive: vec![true; n_shards],
+            probing: vec![false; n_shards],
+            admitted: vec![0; n_shards],
             next_id: 1,
         }
     }
@@ -117,31 +140,87 @@ impl Router {
         Some(RouteDecision { shard, cost: request_cost(req) })
     }
 
+    /// The next shard a request should land on. An *idle* probing
+    /// (just-rejoined) shard takes priority — the probe stream is what
+    /// validates it, and it can hold only one at a time, so this cannot
+    /// starve the full-share shards. Otherwise full-share live shards
+    /// compete on in-flight tokens as before (a busy prober is not a
+    /// candidate). If every live shard is a busy prober (degenerate),
+    /// fall back to least-loaded among all live shards rather than
+    /// stalling admission.
     fn least_loaded_alive(&self) -> Option<usize> {
-        self.load
+        let probe =
+            (0..self.n_shards).find(|&i| self.alive[i] && self.probing[i] && self.load[i] == 0);
+        if probe.is_some() {
+            return probe;
+        }
+        let eligible = self
+            .load
             .iter()
             .enumerate()
-            .filter(|(i, _)| self.alive[*i])
+            .filter(|(i, _)| self.alive[*i] && !self.probing[*i])
             .min_by_key(|(i, l)| (**l, *i))
-            .map(|(i, _)| i)
+            .map(|(i, _)| i);
+        eligible.or_else(|| {
+            self.load
+                .iter()
+                .enumerate()
+                .filter(|(i, _)| self.alive[*i])
+                .min_by_key(|(i, l)| (**l, *i))
+                .map(|(i, _)| i)
+        })
     }
 
     fn charge(&mut self, shard: usize, req: &Request) {
         self.load[shard] += request_cost(req);
         self.prefill_load[shard] += req.prompt.len();
         self.decode_load[shard] += req.max_new_tokens;
+        self.admitted[shard] += 1;
         self.sessions.insert(
             req.id,
             Charge { shard, prefill: req.prompt.len(), decode: req.max_new_tokens },
         );
     }
 
-    /// Permanently remove a shard from the routing set. Its outstanding
-    /// sessions are the dispatcher's to release (refund) and re-route;
-    /// the shard itself never rejoins.
-    pub fn mark_dead(&mut self, shard: usize) {
-        if let Some(a) = self.alive.get_mut(shard) {
-            *a = false;
+    /// Remove a shard from the routing set. Its outstanding sessions
+    /// are the dispatcher's to release (refund) and re-route. Killing
+    /// an already-dead shard is a typed no-op (re-entrant liveness
+    /// ticks and double kill paths must not churn the routing state).
+    pub fn mark_dead(&mut self, shard: usize) -> Transition {
+        match self.alive.get_mut(shard) {
+            Some(a) if *a => {
+                *a = false;
+                self.probing[shard] = false;
+                Transition::Applied
+            }
+            _ => Transition::Noop,
+        }
+    }
+
+    /// Re-enter a recovered (or standby-promoted) shard into the
+    /// routing set behind the probe ramp: until [`Router::promote`],
+    /// it is eligible only while idle. Reviving a shard that is
+    /// already alive — a double `recover:` clause — is a typed no-op.
+    pub fn revive(&mut self, shard: usize) -> Transition {
+        match self.alive.get_mut(shard) {
+            Some(a) if !*a => {
+                *a = true;
+                self.probing[shard] = true;
+                Transition::Applied
+            }
+            _ => Transition::Noop,
+        }
+    }
+
+    /// Complete the rejoin ramp: the shard regains its full routing
+    /// share. No-op unless the shard is alive and still probing.
+    pub fn promote(&mut self, shard: usize) -> Transition {
+        match self.probing.get_mut(shard) {
+            Some(p) if *p && self.alive[shard] => {
+                *p = false;
+                Transition::Applied
+            }
+            _ => Transition::Noop,
         }
     }
 
@@ -149,8 +228,19 @@ impl Router {
         self.alive.get(shard).copied().unwrap_or(false)
     }
 
+    /// Whether a shard is alive but still in its probe ramp.
+    pub fn is_probing(&self, shard: usize) -> bool {
+        self.probing.get(shard).copied().unwrap_or(false)
+    }
+
     pub fn alive_count(&self) -> usize {
         self.alive.iter().filter(|a| **a).count()
+    }
+
+    /// Requests charged per shard since construction (admissions plus
+    /// migrations) — monotone counters for routing-share measurements.
+    pub fn admitted(&self) -> &[u64] {
+        &self.admitted
     }
 
     /// Mark a request complete, releasing its token charge.
@@ -320,6 +410,77 @@ mod tests {
             assert_ne!(d.shard, 1, "routed to a dead shard");
         }
         assert_eq!(r.load()[1], 0);
+    }
+
+    #[test]
+    fn health_transitions_are_typed_and_idempotent() {
+        let mut r = Router::new(2, 16);
+        assert_eq!(r.mark_dead(1), Transition::Applied);
+        assert_eq!(r.mark_dead(1), Transition::Noop, "double kill");
+        assert_eq!(r.mark_dead(99), Transition::Noop, "out-of-range shard");
+        assert_eq!(r.revive(1), Transition::Applied);
+        assert_eq!(r.revive(1), Transition::Noop, "double recover");
+        assert_eq!(r.revive(0), Transition::Noop, "reviving an alive shard");
+        assert_eq!(r.revive(99), Transition::Noop);
+        assert_eq!(r.promote(1), Transition::Applied);
+        assert_eq!(r.promote(1), Transition::Noop, "double promote");
+        assert_eq!(r.promote(0), Transition::Noop, "promoting a full-share shard");
+        assert!(r.is_alive(1) && !r.is_probing(1));
+    }
+
+    #[test]
+    fn probing_shard_gets_one_probe_stream_at_a_time() {
+        let mut r = Router::new(2, 16);
+        r.mark_dead(1);
+        r.revive(1);
+        assert!(r.is_probing(1));
+        // idle prober is the least-loaded candidate -> takes the probe
+        let (_, d1) = r.admit(req(1, 2));
+        assert_eq!(d1.shard, 1, "idle prober should absorb the probe request");
+        // while the probe is in flight, everything else lands on shard 0
+        for i in 2..=5 {
+            let (_, d) = r.admit(req(i, 2));
+            assert_eq!(d.shard, 0, "busy prober must not take a second stream");
+        }
+        // probe completes -> prober is idle-eligible again
+        r.complete(1);
+        let (_, d6) = r.admit(req(6, 2));
+        assert_eq!(d6.shard, 1);
+        // promotion restores full least-loaded competition
+        r.promote(1);
+        assert!(!r.is_probing(1));
+        for i in 7..=10 {
+            let _ = r.admit(req(i, 2));
+        }
+        assert!(r.load()[1] > 0 && r.load()[0] > 0);
+    }
+
+    #[test]
+    fn death_during_ramp_clears_the_probe_state() {
+        let mut r = Router::new(2, 16);
+        r.mark_dead(1);
+        r.revive(1);
+        assert!(r.is_probing(1));
+        // the prober flaps before promotion: probing must not leak into
+        // the next incarnation's bookkeeping
+        r.mark_dead(1);
+        assert!(!r.is_probing(1));
+        assert_eq!(r.promote(1), Transition::Noop, "dead shard cannot promote");
+        r.revive(1);
+        assert!(r.is_probing(1), "each revival restarts its own ramp");
+    }
+
+    #[test]
+    fn admitted_counters_track_charges_per_shard() {
+        let mut r = Router::new(2, 16);
+        for i in 1..=4 {
+            let _ = r.admit(req(i, 2));
+        }
+        assert_eq!(r.admitted(), &[2, 2]);
+        r.mark_dead(0);
+        let m = Request::new(9, vec![5; 4], 2);
+        r.route_migrated(&m).unwrap();
+        assert_eq!(r.admitted(), &[2, 3], "migrations count as charges");
     }
 
     #[test]

@@ -114,6 +114,28 @@ impl ScaleSync {
         self.trackers[region].state()
     }
 
+    /// Rejoin re-sync: adopt a snapshot of per-region states wholesale —
+    /// the fleet-side half of shard recovery. A rejoining shard has no
+    /// observation history, so instead of waiting a full sync period (and
+    /// quantizing with stale defaults meanwhile), it clones a healthy
+    /// survivor's post-sync states; Thm. 4 identity holds immediately
+    /// because every survivor already holds the same merged states.
+    /// Extra regions in the snapshot are ignored; missing ones keep the
+    /// tracker's current state. Returns how many regions were adopted.
+    pub fn adopt_states(&mut self, states: &[EmaState]) -> usize {
+        let n = self.trackers.len().min(states.len());
+        for (t, st) in self.trackers.iter_mut().zip(states) {
+            t.adopt(EmaState { delta: st.delta.max(self.eps), ..*st });
+        }
+        n
+    }
+
+    /// Snapshot every region's current state (what a rejoining shard
+    /// clones via [`ScaleSync::adopt_states`]).
+    pub fn states(&self) -> Vec<EmaState> {
+        self.trackers.iter().map(|t| t.state()).collect()
+    }
+
     /// Whether the sync period has elapsed.
     pub fn due(&self) -> bool {
         self.period > 0 && self.observations > 0 && self.observations % self.period == 0
@@ -315,6 +337,34 @@ mod tests {
             assert_eq!(states[0][0].delta, other[0].delta);
             assert_eq!(states[0][0].zero_point, other[0].zero_point);
         }
+    }
+
+    #[test]
+    fn adopted_snapshot_matches_the_survivors() {
+        // recovery path: survivors sync, a fresh shard adopts a snapshot
+        // of one survivor's states and must quantize identically
+        let merged = run_shards(3, |rank, mut comm| {
+            let mut s = ScaleSync::new(2, 0.9, 1e-6, 0);
+            s.observe(0, &[(rank as f32 + 1.0) * 2.0]);
+            s.observe(1, &[0.5]);
+            s.sync(&mut comm).unwrap()
+        });
+        let mut fresh = ScaleSync::new(2, 0.9, 1e-6, 0);
+        assert_eq!(fresh.adopt_states(&merged[0]), 2);
+        for (region, st) in merged[0].iter().enumerate() {
+            assert_eq!(fresh.state(region).delta, st.delta);
+            assert_eq!(fresh.state(region).zero_point, st.zero_point);
+        }
+        // shape mismatches are tolerated, not fatal
+        let mut narrow = ScaleSync::new(1, 0.9, 1e-6, 0);
+        assert_eq!(narrow.adopt_states(&merged[0]), 1);
+        let before = fresh.state(1);
+        assert_eq!(fresh.adopt_states(&merged[0][..1]), 1);
+        assert_eq!(fresh.state(1).delta, before.delta, "missing region untouched");
+        // the eps floor still backstops a degenerate snapshot
+        let mut floored = ScaleSync::new(1, 0.9, 1e-3, 0);
+        floored.adopt_states(&[EmaState { delta: 0.0, zero_point: 0.0 }]);
+        assert!(floored.state(0).delta >= 1e-3);
     }
 
     #[test]

@@ -52,6 +52,32 @@
 //! worker error is surfaced: recorded in `ServerReport::worker_errors`
 //! and handled as a kill when fault handling is armed, or propagated
 //! as before when it is not.
+//!
+//! **Elastic recovery** extends the arc past detection into
+//! kill -> degrade -> rejoin -> restore. A `recover:<shard>@<step>`
+//! clause in the fault plan (or a `ServerConfig::standby` warm spare,
+//! consumed at most one per detected death) brings a replacement online
+//! once the shard is Dead: the dispatcher spawns a fresh sim worker for
+//! the next incarnation of the shard's fault schedule, accounts the
+//! quantized (8-bit) weight re-broadcast that re-shards its partition
+//! over the survivor ring, and re-enters it behind a probe ramp — the
+//! router routes a probing shard at most one stream at a time until it
+//! stays healthy for `FaultSpec::ramp_deadlines` clean step deadlines,
+//! then `Router::promote` restores its full share. Streams stay
+//! exactly-once across kill -> rejoin: migration rebased them when the
+//! shard died, and the rejoined incarnation is a fresh worker with
+//! fresh streams, so the position dedup needs no new cases. Meanwhile
+//! **degraded mode** (`ServerConfig::degrade_bits`) converts a shrunken
+//! fleet into capacity instead of shed load: survivors drop their KV
+//! read width (`SimModel::set_kv_bits` — fused decode is memory-bound
+//! on KV pages, so 8 -> 4 roughly halves the per-slot step cost), the
+//! predictive gate reprices with `CostEstimator::degraded`, and a
+//! hysteretic ladder (enter on a death or on sustained backlog above
+//! the high watermark; exit only at full fleet strength with backlog
+//! below the low watermark) restores native width without oscillating
+//! within one pressure episode. PJRT shards neither respawn nor change
+//! width at runtime (compiled graphs pin both) — elastic recovery is a
+//! sim-backend facility, like fault injection itself.
 
 use std::cmp::Ordering;
 use std::collections::{HashMap, HashSet, VecDeque};
@@ -130,6 +156,19 @@ pub struct ServerConfig {
     /// disarmed (no plan, no wall-clock deadlines). Continuous mode
     /// only — static batches run to completion and cannot migrate.
     pub fault: FaultSpec,
+    /// warm-spare pool: replacements held ready beside the serving
+    /// fleet. At most one spare promotes per detected death, rejoining
+    /// the dead shard's rank immediately instead of waiting for a
+    /// scheduled `recover:` clause. Sim backend only.
+    pub standby: usize,
+    /// degraded-mode KV width: `Some(bits)` arms the runtime bitwidth
+    /// ladder — under capacity pressure (a dead shard, or sustained
+    /// decode backlog) survivors drop their KV reads from 8-bit to
+    /// `bits`, raising effective throughput so admission sheds less;
+    /// the ladder restores native width hysteretically once the fleet
+    /// is whole and pressure clears. `None` (default) = fixed-width
+    /// serving, bit-identical to the pre-ladder behavior.
+    pub degrade_bits: Option<u32>,
 }
 
 impl ServerConfig {
@@ -144,6 +183,8 @@ impl ServerConfig {
             prefill_chunk: 0,
             admission: AdmissionPolicy::Open,
             fault: FaultSpec::default(),
+            standby: 0,
+            degrade_bits: None,
         }
     }
 }
@@ -157,6 +198,9 @@ enum ToWorker {
     Inject(Request, bool),
     /// static mode: run this formed batch to completion
     Batch(Vec<Request>),
+    /// degrade ladder: switch the backend's KV read width (no-op on
+    /// PJRT backends, whose compiled graphs pin the width)
+    SetKvBits(u32),
 }
 
 /// What the admission gate decided for one routed request.
@@ -185,6 +229,9 @@ struct SloGate {
     policy: AdmissionPolicy,
     windows: Vec<RollingWindow>,
     estimator: Option<CostEstimator>,
+    /// native-width estimator the degrade ladder reprices from (the
+    /// active `estimator` may be a `degraded()` variant of this)
+    base_estimator: Option<CostEstimator>,
     /// server's prefill chunk (serialization term of the prediction)
     prefill_chunk: usize,
     /// trailing policies only: samples older than this are expired
@@ -212,9 +259,19 @@ impl SloGate {
             policy,
             windows: (0..n).map(|_| RollingWindow::new(SLO_WINDOW)).collect(),
             estimator,
+            base_estimator: estimator,
             prefill_chunk,
             stale_after,
         }
+    }
+
+    /// Degrade-ladder repricing: swap the predictive estimator for its
+    /// `kv_bits`-scaled variant so admission prices the fleet's *actual*
+    /// per-token rate — degraded survivors decode faster, so the gate
+    /// sheds less instead of pricing phantom backlog at native speed.
+    /// `kv_bits == 8` restores the native-width estimator exactly.
+    fn reprice(&mut self, kv_bits: u32) {
+        self.estimator = self.base_estimator.map(|e| e.degraded(kv_bits));
     }
 
     fn idx(&self, shard: usize) -> usize {
@@ -328,7 +385,8 @@ pub struct ServerReport {
     /// requests admitted into slots / retired from slots
     pub joins: u64,
     pub retires: u64,
-    /// max concurrently in-flight slots per shard
+    /// max concurrently in-flight slots per worker incarnation (one
+    /// entry per shard, plus one per rejoin-spawned replacement)
     pub peak_active: Vec<usize>,
     /// requests the admission gate refused (one terminal `Shed` each;
     /// disjoint from `responses`)
@@ -375,6 +433,25 @@ pub struct ServerReport {
     /// worker errors contained by fault handling instead of tearing the
     /// serve down (empty when disarmed — those still propagate)
     pub worker_errors: Vec<String>,
+    /// shards brought back online, in rejoin order (a flapping shard
+    /// that recovers twice appears twice)
+    pub rejoined: Vec<usize>,
+    /// warm spares consumed (at most one per detected death, bounded by
+    /// `ServerConfig::standby`)
+    pub standby_promotions: u64,
+    /// degrade-ladder entries (8-bit -> `degrade_bits` KV reads); one
+    /// pressure episode must produce exactly one
+    pub degrade_enters: u64,
+    /// degrade-ladder exits (native width restored)
+    pub degrade_exits: u64,
+    /// quantized weight bytes re-broadcast to rejoining shards (8-bit
+    /// codes: one byte per parameter of the shard's replica)
+    pub rebroadcast_bytes: u64,
+    /// per promoted rejoin, the shard's routing share relative to a
+    /// fair 1/alive split, measured over admissions from its promotion
+    /// to drain (1.0 = exactly fair; no admissions after promotion
+    /// reports 1.0)
+    pub rejoin_admit_share: Vec<f64>,
 }
 
 impl ServerReport {
@@ -799,6 +876,83 @@ impl Flight {
     }
 }
 
+/// Degrade-ladder watermarks, in decode-backlog tokens per fleet slot.
+/// Above HI for [`DEGRADE_TICKS`] consecutive step-deadline ticks the
+/// ladder degrades; below LO (at full fleet strength) for the same
+/// count it restores. The band between them is the hysteresis that
+/// keeps one pressure episode from oscillating the width.
+const DEGRADE_HI_PER_SLOT: f64 = 8.0;
+const DEGRADE_LO_PER_SLOT: f64 = 2.0;
+/// Consecutive pressure ticks a watermark must hold before the ladder
+/// moves (a death bypasses this and degrades immediately — capacity
+/// loss is a fact, not a noisy signal).
+const DEGRADE_TICKS: u32 = 3;
+
+/// Sim-only replacement-worker factory: `(shard, incarnation)` -> a
+/// fresh worker running that incarnation's slice of the fault plan
+/// (`FaultPlan::shard_faults_incarnation`), so a flapping shard's next
+/// scheduled crash arms on the replacement's own decode clock.
+type RespawnFn = Box<dyn Fn(usize, usize) -> Worker + Send>;
+
+/// Per-run elastic-recovery state: rejoin schedule, warm-spare pool,
+/// probe-ramp clocks, and the degrade ladder.
+struct Elastic {
+    /// next incarnation per shard (the initial worker is incarnation 0)
+    incarnations: Vec<usize>,
+    /// pending scheduled replacements: `(shard, ready-at offset from
+    /// serve start)` — a replacement rejoins at the later of its
+    /// availability and the shard's death detection
+    recoveries: Vec<(usize, Duration)>,
+    standby_left: usize,
+    /// prefix of `recovery.dead_shards` already offered a warm spare
+    deaths_seen: usize,
+    /// probe-ramp clock per shard: start of the current clean window
+    probe_since: Vec<Option<Instant>>,
+    /// admitted-counter snapshot at each promotion (fair-share basis)
+    promote_snaps: Vec<(usize, Vec<u64>)>,
+    rejoined: Vec<usize>,
+    standby_promotions: u64,
+    rebroadcast_bytes: u64,
+    degraded: bool,
+    hi_ticks: u32,
+    lo_ticks: u32,
+    degrade_enters: u64,
+    degrade_exits: u64,
+    last_pressure_tick: Instant,
+}
+
+impl Elastic {
+    fn new(cfg: &ServerConfig, step_s: f64) -> Self {
+        let mut recoveries: Vec<(usize, Duration)> = Vec::new();
+        if let Some(plan) = &cfg.fault.plan {
+            for r in &plan.recovers {
+                if r.shard < cfg.shards {
+                    recoveries
+                        .push((r.shard, Duration::from_secs_f64(r.at_step as f64 * step_s)));
+                }
+            }
+        }
+        recoveries.sort_by_key(|&(_, at)| at);
+        Elastic {
+            incarnations: vec![1; cfg.shards],
+            recoveries,
+            standby_left: cfg.standby,
+            deaths_seen: 0,
+            probe_since: vec![None; cfg.shards],
+            promote_snaps: Vec::new(),
+            rejoined: Vec::new(),
+            standby_promotions: 0,
+            rebroadcast_bytes: 0,
+            degraded: false,
+            hi_ticks: 0,
+            lo_ticks: 0,
+            degrade_enters: 0,
+            degrade_exits: 0,
+            last_pressure_tick: Instant::now(),
+        }
+    }
+}
+
 /// Multi-shard server.
 pub struct Server {
     cfg: ServerConfig,
@@ -806,6 +960,11 @@ pub struct Server {
     batcher: Batcher,
     senders: Vec<Option<Sender<ToWorker>>>,
     events: Receiver<(usize, Result<ServeEvent>)>,
+    /// dispatcher-held clone of the workers' event sender, kept only
+    /// while rejoin is possible (a respawned worker needs a fresh
+    /// clone); dropped otherwise so a fully-exited pool still reads as
+    /// disconnected
+    ev_tx: Option<Sender<(usize, Result<ServeEvent>)>>,
     handles: Vec<JoinHandle<WorkerStats>>,
     shard_weight_bytes: Vec<usize>,
     /// backend context length (migration headroom bound)
@@ -814,6 +973,9 @@ pub struct Server {
     /// `start_sim` fits it from the sim cost knobs, the PJRT path loads
     /// the measured `BENCH_hotpath.json` profile
     estimator: Option<CostEstimator>,
+    /// sim-only factory for rejoin/standby replacement workers (None on
+    /// the PJRT path: compiled shards don't respawn)
+    respawn: Option<RespawnFn>,
 }
 
 impl Server {
@@ -890,8 +1052,23 @@ impl Server {
                 Backend::Sim(m)
             })
             .collect();
+        let respawn_cfg = cfg.clone();
         let mut server = Self::start_with(cfg, backends)?;
         server.estimator = Some(CostEstimator::from_sim_cost(&cost, batch));
+        // replacement workers for rejoin/standby: incarnation k of a
+        // shard runs the k-th slice of its fault schedule on a fresh
+        // device clock (its ScaleSync starts fresh, exactly like every
+        // shard's did at t=0 — the serve path runs per-shard trackers
+        // with sync disarmed; when periodic sync is armed, a rejoiner
+        // adopts a survivor's merged snapshot via
+        // `ScaleSync::adopt_states` instead of waiting out a period)
+        server.respawn = Some(Box::new(move |shard, incarnation| {
+            let mut m = SimModel::tiny(respawn_cfg.variant, respawn_cfg.batch, cost);
+            if let Some(plan) = &respawn_cfg.fault.plan {
+                m = m.with_faults(plan.shard_faults_incarnation(shard, incarnation));
+            }
+            Worker::new_chunked(shard, Backend::Sim(m), respawn_cfg.prefill_chunk)
+        }));
         Ok(server)
     }
 
@@ -924,10 +1101,12 @@ impl Server {
             batcher,
             senders,
             events: ev_rx,
+            ev_tx: Some(ev_tx),
             handles,
             shard_weight_bytes,
             ctx,
             estimator: None,
+            respawn: None,
         })
     }
 
@@ -967,6 +1146,23 @@ impl Server {
         // liveness deadlines are wall-clock; arm them only when a plan
         // is configured so a loaded CI runner can't false-kill a shard
         let liveness = self.cfg.fault.active() && self.cfg.mode == SchedulerMode::Continuous;
+        // elastic recovery: the dispatcher's decode-step clock converts
+        // plan steps (`recover:<shard>@<step>`) into serve-time offsets
+        let step_s = self.estimator.as_ref().map(|e| e.step_s()).unwrap_or(0.0);
+        let mut elastic = Elastic::new(&self.cfg, step_s);
+        let elastic_armed = self.cfg.mode == SchedulerMode::Continuous
+            && (liveness || self.cfg.degrade_bits.is_some() || self.cfg.standby > 0);
+        // rejoin needs a fresh event-sender clone for the replacement
+        // worker; keep ours only when one can actually spawn, so a
+        // fully-exited pool still reads as disconnected otherwise
+        let rejoin_possible = liveness
+            && self.respawn.is_some()
+            && (!elastic.recoveries.is_empty() || self.cfg.standby > 0);
+        if !rejoin_possible {
+            self.ev_tx = None;
+            elastic.recoveries.clear();
+            elastic.standby_left = 0;
+        }
         arrivals.sort_by(|a, b| a.at_s.total_cmp(&b.at_s));
         let total = arrivals.len();
         let mut pending: VecDeque<Arrival> = arrivals.into();
@@ -1091,8 +1287,10 @@ impl Server {
             // 3) nothing left to inject: close the injection side so
             // idle workers can exit as soon as they drain. With fault
             // handling armed the senders stay open — a kill after the
-            // last arrival still needs live mailboxes to migrate into.
-            if !liveness && pending.is_empty() && self.batcher.pending() == 0 {
+            // last arrival still needs live mailboxes to migrate into —
+            // and so does the degrade ladder: a width move after the
+            // last arrival still needs a mailbox to send SetKvBits into.
+            if !liveness && !elastic_armed && pending.is_empty() && self.batcher.pending() == 0 {
                 for s in &mut self.senders {
                     *s = None;
                 }
@@ -1111,6 +1309,12 @@ impl Server {
             }
             if liveness {
                 timeout = timeout.min(self.cfg.fault.step_deadline);
+            } else if elastic_armed {
+                // degrade ticks piggyback on the event stream (pressure
+                // implies in-flight work implies events every step);
+                // this cap only bounds stall detection while the
+                // senders are held open for SetKvBits
+                timeout = timeout.min(Duration::from_secs(1));
             }
             match self.events.recv_timeout(timeout) {
                 Ok((shard, Ok(ev))) => {
@@ -1183,6 +1387,9 @@ impl Server {
             if liveness {
                 flight.check_liveness(&mut self.router, &mut self.senders, &self.cfg.fault);
             }
+            if elastic_armed {
+                self.recovery_tick(&mut flight, &mut elastic, &mut gate, t0);
+            }
         }
 
         // every Token of a completed request precedes its Done in its
@@ -1215,6 +1422,27 @@ impl Server {
         // serve path they only appear if scale sync ran
         breakdown.add(Stage::Sync, 0.0);
         let weight_storage_bytes = self.shard_weight_bytes.iter().sum();
+        // fair-share audit for each promoted rejoin: its admissions
+        // since promotion vs a 1/alive split of the fleet's
+        let final_admitted = self.router.admitted().to_vec();
+        let alive = self.router.alive_count().max(1);
+        let rejoin_admit_share: Vec<f64> = elastic
+            .promote_snaps
+            .iter()
+            .map(|(shard, snap)| {
+                let mine = final_admitted[*shard].saturating_sub(snap[*shard]);
+                let fleet: u64 = final_admitted
+                    .iter()
+                    .zip(snap)
+                    .map(|(a, s)| a.saturating_sub(*s))
+                    .sum();
+                if fleet == 0 {
+                    1.0
+                } else {
+                    mine as f64 * alive as f64 / fleet as f64
+                }
+            })
+            .collect();
         Ok(ServerReport {
             responses: flight.responses,
             wall_s: t0.elapsed().as_secs_f64(),
@@ -1242,7 +1470,170 @@ impl Server {
             shard_health: flight.health,
             detection_deadlines: flight.recovery.detection_deadlines,
             worker_errors: flight.recovery.worker_errors,
+            rejoined: elastic.rejoined,
+            standby_promotions: elastic.standby_promotions,
+            degrade_enters: elastic.degrade_enters,
+            degrade_exits: elastic.degrade_exits,
+            rebroadcast_bytes: elastic.rebroadcast_bytes,
+            rejoin_admit_share,
         })
+    }
+
+    /// Bring a replacement online for a Dead `shard`: spawn the next
+    /// incarnation's worker (sim only), account the quantized weight
+    /// re-broadcast that re-shards its partition over the survivor
+    /// ring, reopen the shard's mailbox, and re-enter routing behind
+    /// the probe ramp. Idempotent: a shard that is not Dead (double
+    /// `recover:`, a spare already promoted) is a no-op returning
+    /// false, as is any rejoin without a respawn factory (PJRT).
+    fn rejoin(&mut self, flight: &mut Flight, el: &mut Elastic, shard: usize) -> bool {
+        if flight.health[shard] != ShardHealth::Dead {
+            return false;
+        }
+        let (Some(factory), Some(ev_tx)) = (self.respawn.as_ref(), self.ev_tx.clone()) else {
+            return false;
+        };
+        let worker = factory(shard, el.incarnations[shard]);
+        el.incarnations[shard] += 1;
+        // a rejoiner enters at the fleet's current width
+        if el.degraded {
+            if let Some(bits) = self.cfg.degrade_bits {
+                worker.set_kv_bits(bits);
+            }
+        }
+        // weight re-shard over the survivor ring rides the quantized
+        // wire (`collective::broadcast_quant`): 8-bit codes, one byte
+        // per parameter of the shard's replica
+        let params = match self.cfg.variant {
+            Variant::Fp => self.shard_weight_bytes[shard] / 4,
+            _ => self.shard_weight_bytes[shard],
+        };
+        el.rebroadcast_bytes += params as u64;
+        let (tx, rx) = channel();
+        self.senders[shard] = Some(tx);
+        self.handles.push(std::thread::spawn(move || worker_loop(worker, rx, ev_tx)));
+        flight.health[shard] = ShardHealth::Healthy;
+        flight.last_event_at[shard] = Instant::now();
+        self.router.revive(shard);
+        el.probe_since[shard] = Some(Instant::now());
+        el.rejoined.push(shard);
+        true
+    }
+
+    /// One elastic pass, run at every event-loop turn while armed:
+    /// consume warm spares for newly detected deaths, fire scheduled
+    /// `recover:` replacements that are both ready and needed, move the
+    /// degrade ladder, and promote probing shards that survived their
+    /// ramp window.
+    fn recovery_tick(
+        &mut self,
+        flight: &mut Flight,
+        el: &mut Elastic,
+        gate: &mut SloGate,
+        t0: Instant,
+    ) {
+        // warm standby: at most one spare per detected death, promoted
+        // immediately (no schedule to wait out)
+        while el.deaths_seen < flight.recovery.dead_shards.len() {
+            let dead = flight.recovery.dead_shards[el.deaths_seen];
+            el.deaths_seen += 1;
+            if el.standby_left > 0 && self.rejoin(flight, el, dead) {
+                el.standby_left -= 1;
+                el.standby_promotions += 1;
+            }
+        }
+        // scheduled replacements fire at the later of availability and
+        // death detection; a `recover:` for an alive shard stays
+        // pending — a no-op unless/until the shard dies again, which is
+        // exactly the flapping semantics
+        let mut i = 0;
+        while i < el.recoveries.len() {
+            let (shard, at) = el.recoveries[i];
+            if t0.elapsed() >= at
+                && flight.health[shard] == ShardHealth::Dead
+                && self.rejoin(flight, el, shard)
+            {
+                el.recoveries.remove(i);
+            } else {
+                i += 1;
+            }
+        }
+        // degrade ladder: a death degrades immediately (capacity loss
+        // is a fact); backlog pressure needs DEGRADE_TICKS consecutive
+        // step-deadline ticks over the high watermark. Restore needs
+        // the fleet whole again AND the same tick count under the low
+        // watermark — the band between the marks is the hysteresis.
+        if let Some(bits) = self.cfg.degrade_bits {
+            let alive = self.router.alive_count().max(1);
+            let fleet_shrunk = alive < self.cfg.shards;
+            let tick = el.last_pressure_tick.elapsed() >= self.cfg.fault.step_deadline;
+            if tick {
+                el.last_pressure_tick = Instant::now();
+            }
+            let pressure = || {
+                let (_, bd) = self.router.backlog_total();
+                bd as f64 / (alive * self.cfg.batch) as f64
+            };
+            if !el.degraded {
+                let mut enter = fleet_shrunk;
+                if !enter && tick {
+                    if pressure() >= DEGRADE_HI_PER_SLOT {
+                        el.hi_ticks += 1;
+                    } else {
+                        el.hi_ticks = 0;
+                    }
+                    enter = el.hi_ticks >= DEGRADE_TICKS;
+                }
+                if enter {
+                    el.degraded = true;
+                    el.degrade_enters += 1;
+                    el.hi_ticks = 0;
+                    el.lo_ticks = 0;
+                    self.set_fleet_kv_bits(bits);
+                    gate.reprice(bits);
+                }
+            } else if tick {
+                if !fleet_shrunk && pressure() <= DEGRADE_LO_PER_SLOT {
+                    el.lo_ticks += 1;
+                } else {
+                    el.lo_ticks = 0;
+                }
+                if el.lo_ticks >= DEGRADE_TICKS {
+                    el.degraded = false;
+                    el.degrade_exits += 1;
+                    el.lo_ticks = 0;
+                    self.set_fleet_kv_bits(8);
+                    gate.reprice(8);
+                }
+            }
+        }
+        // probe ramp: a probing shard healthy for `ramp_deadlines`
+        // clean step deadlines gets its full share back; Suspect
+        // restarts the clean window, death clears the probe entirely
+        let ramp = self.cfg.fault.step_deadline * self.cfg.fault.ramp_deadlines;
+        for shard in 0..self.cfg.shards {
+            if !self.router.is_probing(shard) {
+                continue;
+            }
+            match flight.health[shard] {
+                ShardHealth::Suspect => el.probe_since[shard] = Some(Instant::now()),
+                ShardHealth::Healthy => {
+                    if el.probe_since[shard].is_some_and(|s| s.elapsed() >= ramp) {
+                        self.router.promote(shard);
+                        el.probe_since[shard] = None;
+                        el.promote_snaps.push((shard, self.router.admitted().to_vec()));
+                    }
+                }
+                ShardHealth::Dead => el.probe_since[shard] = None,
+            }
+        }
+    }
+
+    /// Broadcast a KV-width switch to every live shard (degrade ladder).
+    fn set_fleet_kv_bits(&self, bits: u32) {
+        for tx in self.senders.iter().flatten() {
+            let _ = tx.send(ToWorker::SetKvBits(bits));
+        }
     }
 
     /// Static-mode dispatch: round-robin formed batches over the shards
@@ -1286,6 +1677,9 @@ fn worker_loop(
             match rx.try_recv() {
                 Ok(ToWorker::Inject(r, false)) => queue.push(r),
                 Ok(ToWorker::Inject(r, true)) => queue.push_low(r),
+                Ok(ToWorker::SetKvBits(bits)) => {
+                    worker.set_kv_bits(bits);
+                }
                 Ok(ToWorker::Batch(reqs)) => {
                     if !run_static(&mut worker, reqs, &tx) {
                         break 'serve;
@@ -1303,6 +1697,9 @@ fn worker_loop(
             match rx.recv() {
                 Ok(ToWorker::Inject(r, false)) => queue.push(r),
                 Ok(ToWorker::Inject(r, true)) => queue.push_low(r),
+                Ok(ToWorker::SetKvBits(bits)) => {
+                    worker.set_kv_bits(bits);
+                }
                 Ok(ToWorker::Batch(reqs)) => {
                     if !run_static(&mut worker, reqs, &tx) {
                         break;

@@ -90,6 +90,19 @@ impl Backend {
             Backend::Sim(m) => m.weight_storage_bytes(),
         }
     }
+
+    /// Switch the KV read width for degraded-mode serving. Only the sim
+    /// backend supports runtime width changes (PJRT graphs compile the
+    /// width in); returns whether the request was applied.
+    pub fn set_kv_bits(&self, bits: u32) -> bool {
+        match self {
+            Backend::Pjrt(_) => false,
+            Backend::Sim(m) => {
+                m.set_kv_bits(bits);
+                true
+            }
+        }
+    }
 }
 
 /// Where a slot's request is in its lifecycle.
@@ -199,6 +212,13 @@ impl Worker {
     /// Prefill chunk in effect (0 = whole-prompt).
     pub fn prefill_chunk(&self) -> usize {
         self.prefill_chunk
+    }
+
+    /// Degraded-mode control: switch the backend's KV read width (no-op
+    /// on PJRT, whose compiled graphs pin the width). Returns whether
+    /// the width was applied.
+    pub fn set_kv_bits(&self, bits: u32) -> bool {
+        self.backend.set_kv_bits(bits)
     }
 
     /// Slots available for `join`.

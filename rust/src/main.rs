@@ -24,7 +24,7 @@ use llmeasyquant::corpus;
 use llmeasyquant::eval::{perplexity, weight_errors};
 use llmeasyquant::memsim::{GpuSpec, PaperModel, PipelineCost};
 use llmeasyquant::quant::Variant;
-use llmeasyquant::runtime::Registry;
+use llmeasyquant::runtime::{Registry, SimCost};
 use llmeasyquant::serialize;
 use llmeasyquant::util::args::Args;
 use llmeasyquant::util::bench::Table;
@@ -57,6 +57,11 @@ COMMANDS:
   info             list artifact registry contents
   serve            --model gpt2-tiny --variant smooth --shards 2 --requests 16
                    --max-new 16 [--batch 8] [--mode static|continuous]
+                   [--backend pjrt|sim]  (sim: calibrated spin-wait shards, no
+                                          artifacts needed; required for the
+                                          rejoin/standby/degrade options below —
+                                          compiled PJRT shards neither respawn
+                                          nor change KV width at runtime)
                    [--rate REQS_PER_S]   (rate > 0: open-loop Poisson replay)
                    [--prefill-chunk N]   (bound prefill to N tokens/step; 0 = whole)
                    [--slo-p99-ms MS --admission shed|priority|predict]
@@ -71,11 +76,28 @@ COMMANDS:
                    [--fault-plan SPEC]   (seeded fault injection + recovery; SPEC is
                                           comma-separated `crash:<shard>@<step>`,
                                           `stall:<shard>@<step>x<steps>`, `corrupt:<p>`,
-                                          `seed:<n>`, e.g. crash:1@40,seed:7.
+                                          `recover:<shard>@<step>`, `seed:<n>`,
+                                          e.g. crash:1@40,recover:1@120,seed:7.
                                           continuous mode only: dead shards are
                                           detected by missed step deadlines and
                                           their in-flight requests migrate with
-                                          exactly-once token delivery)
+                                          exactly-once token delivery. `recover:`
+                                          respawns the shard at the plan step —
+                                          it re-shards weights over the ring,
+                                          re-syncs scales, then ramps back into
+                                          routing behind probe traffic; sim
+                                          backend only)
+                   [--standby N]         (warm spare pool: at most one spare
+                                          promotes per detected shard death,
+                                          rejoining through the same probe
+                                          ramp; sim backend only)
+                   [--degrade-bits B]    (degraded-mode serving: while the fleet
+                                          is shrunk or decode backlog stays hot,
+                                          survivors drop KV pages from 8-bit to
+                                          B-bit — faster decode, more effective
+                                          capacity, fewer sheds — and restore
+                                          native width once the fleet is whole
+                                          and pressure clears; sim backend only)
   eval-ppl         --model gpt2-tiny --variant all [--windows 8]
   breakdown        --ctx 32768 --batch 448 [--world 8] [--transport nccl]
   bitwidth-search  --model gpt2-tiny [--lambda 1e-4] [--policy greedy|grid|entropy]
@@ -149,6 +171,27 @@ fn serve(args: &Args) -> Result<()> {
         Some(spec) => Some(FaultPlan::parse(spec)?),
         None => None,
     };
+    let backend = args.get_or("backend", "pjrt");
+    if backend != "pjrt" && backend != "sim" {
+        bail!("unknown backend {backend} (pjrt|sim)");
+    }
+    // warm spare pool + degraded-mode KV width (0 = native 8-bit only)
+    let standby = args.get_usize("standby", 0);
+    let degrade_bits = args.get_usize("degrade-bits", 0);
+    if backend != "sim" {
+        // compiled PJRT shards neither respawn nor change KV width at
+        // runtime — reject the elastic options instead of silently
+        // serving without them (and mispricing admission)
+        if degrade_bits > 0 {
+            bail!("--degrade-bits needs --backend sim (PJRT graphs compile at a fixed KV width)");
+        }
+        if standby > 0 || fault_plan.as_ref().is_some_and(|p| p.has_recovery()) {
+            bail!(
+                "--standby / recover: clauses need --backend sim (compiled PJRT \
+                 shards don't respawn; PJRT recovery is detection + migration only)"
+            );
+        }
+    }
     // fraction of requests tagged interactive priority (rest are batch)
     let priority_mix = args.get_f64("priority-mix", 1.0);
     if !(0.0..=1.0).contains(&priority_mix) {
@@ -165,7 +208,6 @@ fn serve(args: &Args) -> Result<()> {
         );
     }
 
-    let reg = registry(args)?;
     let mut cfg = ServerConfig::new(&model, variant);
     cfg.shards = shards;
     cfg.batch = batch;
@@ -173,12 +215,20 @@ fn serve(args: &Args) -> Result<()> {
     cfg.mode = mode;
     cfg.prefill_chunk = prefill_chunk;
     cfg.admission = admission;
+    cfg.standby = standby;
+    cfg.degrade_bits = (degrade_bits > 0).then_some(degrade_bits as u32);
     if let Some(plan) = fault_plan {
         cfg.fault = FaultSpec::with_plan(plan);
     }
     let fault_active = cfg.fault.active();
-    println!("compiling executables for {model}/{} ...", variant.name());
-    let server = Server::start(&reg, cfg)?;
+    let server = if backend == "sim" {
+        println!("spinning up {shards} sim shards ({}) ...", variant.name());
+        Server::start_sim(cfg, SimCost::default())?
+    } else {
+        let reg = registry(args)?;
+        println!("compiling executables for {model}/{} ...", variant.name());
+        Server::start(&reg, cfg)?
+    };
 
     // synthetic workload: prompts drawn from the corpus generator
     let spec = workload::WorkloadSpec {
@@ -232,6 +282,25 @@ fn serve(args: &Args) -> Result<()> {
             report.reprefill_tokens,
             report.dup_tokens,
             report.lost_tokens,
+        );
+    }
+    if !report.rejoined.is_empty()
+        || report.standby_promotions > 0
+        || report.degrade_enters > 0
+    {
+        println!(
+            "recovery: rejoined {:?} (admit share {:?}) | standby promotions {} | \
+             degrade enter/exit {}/{} | rebroadcast {:.2} MB quantized weights",
+            report.rejoined,
+            report
+                .rejoin_admit_share
+                .iter()
+                .map(|s| (s * 100.0).round() / 100.0)
+                .collect::<Vec<_>>(),
+            report.standby_promotions,
+            report.degrade_enters,
+            report.degrade_exits,
+            report.rebroadcast_bytes as f64 / 1e6,
         );
     }
     if priority_mix < 1.0 {

@@ -232,6 +232,12 @@ pub struct SimModel {
     /// decode calls issued so far (interior: `decode` takes `&self`)
     decode_calls: Cell<u64>,
     crashed: Cell<bool>,
+    /// KV-cache code width (bits) the simulated decode step reads at.
+    /// Fused decode is dominated by streaming the KV pages, so the
+    /// per-active-slot cost scales with `kv_bits / 8` — dropping 8 -> 4
+    /// halves the per-slot term. Runtime-adjustable (interior): the
+    /// dispatcher flips it mid-run for degraded-mode serving.
+    kv_bits: Cell<u32>,
 }
 
 impl SimModel {
@@ -245,7 +251,20 @@ impl SimModel {
             faults: ShardFaults::default(),
             decode_calls: Cell::new(0),
             crashed: Cell::new(false),
+            kv_bits: Cell::new(8),
         }
+    }
+
+    /// Switch the KV read width for subsequent decode steps (degraded-
+    /// mode serving). Clamped to [1, 8]: 8 is the native page width, so
+    /// wider makes no sense, and 0 would make decode free.
+    pub fn set_kv_bits(&self, bits: u32) {
+        self.kv_bits.set(bits.clamp(1, 8));
+    }
+
+    /// Current KV read width (bits).
+    pub fn kv_bits(&self) -> u32 {
+        self.kv_bits.get()
     }
 
     /// Attach a fault schedule (builder-style; default is fault-free).
@@ -395,7 +414,10 @@ impl SimModel {
                 self.fill_kv(layer, token[slot], p, false, &mut vv[off..off + d]);
             }
         }
-        spin_us(self.cost.decode_step_us + self.cost.decode_us_per_slot * n_active as f64);
+        let kv_scale = self.kv_bits.get() as f64 / 8.0;
+        spin_us(
+            self.cost.decode_step_us + self.cost.decode_us_per_slot * kv_scale * n_active as f64,
+        );
         if let Some((at, extra)) = self.faults.stall {
             if call == at {
                 spin_us(extra as f64 * self.cost.step_us(n_active));
@@ -608,6 +630,36 @@ mod tests {
         let t1 = Instant::now();
         stalled.decode(&tok, &pos, &act).unwrap();
         assert!(t1.elapsed().as_secs_f64() < 1.5e-3);
+    }
+
+    #[test]
+    fn kv_bits_scale_the_per_slot_decode_cost_only() {
+        // all cost in the per-slot term so the kv width dominates timing
+        let cost = SimCost {
+            prefill_us_per_token: 0.0,
+            decode_step_us: 0.0,
+            decode_us_per_slot: 1000.0,
+        };
+        let m = SimModel::tiny(Variant::Fp, 4, cost);
+        let (tok, pos, act) = ([7, 3, 9, 2], [4, 1, 2, 3], [true; 4]);
+        assert_eq!(m.kv_bits(), 8, "native width is the default");
+        let t0 = Instant::now();
+        let full = m.decode(&tok, &pos, &act).unwrap();
+        let full_el = t0.elapsed().as_secs_f64();
+        assert!(full_el >= 3.5e-3, "8-bit spun only {full_el}s");
+        m.set_kv_bits(4);
+        let t1 = Instant::now();
+        let half = m.decode(&tok, &pos, &act).unwrap();
+        let half_el = t1.elapsed().as_secs_f64();
+        assert!(half_el < 3.0e-3, "4-bit kv still spun {half_el}s");
+        // degraded decode is cheaper, never different: the trajectory is
+        // a pure (token, pos) hash regardless of kv width
+        assert_eq!(full[0].f32_view().unwrap(), half[0].f32_view().unwrap());
+        // clamped to a sane range
+        m.set_kv_bits(0);
+        assert_eq!(m.kv_bits(), 1);
+        m.set_kv_bits(99);
+        assert_eq!(m.kv_bits(), 8);
     }
 
     #[test]

@@ -704,6 +704,165 @@ fn losing_every_shard_sheds_the_remainder_terminally() {
     assert_eq!(report.router_inflight_tokens, 0);
 }
 
+// ---------------------------------------------------------------------------
+// Elastic recovery: rejoin, warm standby, degraded-mode serving
+// ---------------------------------------------------------------------------
+
+#[test]
+fn stream_identity_across_kill_and_rejoin() {
+    // kill -> migrate -> rejoin: the client-visible token streams must
+    // be bit-identical to a fault-free run (the sim trajectory is a
+    // pure function of (token, pos)), and the rejoin must re-broadcast
+    // exactly the shard's quantized weight replica
+    let n = 32;
+    let reference = {
+        let mut cfg = sim_cfg(SchedulerMode::Continuous, 2, 4);
+        cfg.prefill_chunk = 8;
+        let server = Server::start_sim(cfg, SimCost::fast()).unwrap();
+        server.run_workload(long_mixed_requests(n)).unwrap()
+    };
+    let cfg = fault_cfg(2, FaultPlan::new(5).crash(1, 6).recover(1, 8));
+    let server = Server::start_sim(cfg, SimCost::fast()).unwrap();
+    let report = server.run_workload(long_mixed_requests(n)).unwrap();
+
+    assert_eq!(report.responses.len(), n);
+    assert_eq!(report.dead_shards, vec![1], "the injected crash was not detected");
+    assert_eq!(report.rejoined, vec![1], "the recover: clause must bring shard 1 back");
+    assert_eq!(report.standby_promotions, 0, "no spare pool was configured");
+    assert!(report.migrated() > 0, "the dead shard held no in-flight work to migrate");
+    assert_eq!(report.lost_tokens, 0, "a token position was skipped across the rejoin");
+    assert_eq!(report.router_in_flight, 0);
+    assert_eq!(report.router_inflight_tokens, 0);
+    // re-sharding the replacement's weights rides the quantized wire:
+    // one byte per parameter of the shard's replica
+    assert_eq!(report.rebroadcast_bytes, report.shard_weight_bytes[1] as u64);
+    // one replacement worker incarnation joined the pool
+    assert_eq!(report.peak_active.len(), 3);
+    for id in 1..=n as u64 {
+        assert_eq!(
+            by_id(&reference.responses, id).tokens,
+            by_id(&report.responses, id).tokens,
+            "id {id} diverged across kill -> rejoin"
+        );
+    }
+}
+
+#[test]
+fn flapping_shard_serves_exactly_once_with_zero_residual_charge() {
+    // crash -> recover -> crash again on the replacement's own decode
+    // clock -> recover again: every request still gets exactly one
+    // terminal event with its full budget, and every router charge
+    // returns to zero. Arrivals come in simultaneous pairs so the
+    // second of each pair overflows onto shard 1 (idle fleets tie
+    // toward shard 0), guaranteeing both incarnations receive work.
+    let plan = FaultPlan::new(7).crash(1, 2).crash(1, 3).recover(1, 4).recover(1, 6);
+    let server = Server::start_sim(fault_cfg(2, plan), SimCost::fast()).unwrap();
+    let n_pairs = 30;
+    let mut arrivals = Vec::new();
+    for p in 0..n_pairs {
+        for j in 0..2 {
+            let id = (2 * p + j + 1) as u64;
+            let mut prompt = corpus::generate_tokens(10, 50_000 + id);
+            prompt[0] = BOS;
+            arrivals.push(workload::Arrival {
+                at_s: p as f64 * 0.01,
+                request: Request::new(id, prompt, 6),
+            });
+        }
+    }
+    let n = arrivals.len();
+    let report = server.run_open_loop(arrivals).unwrap();
+
+    assert_eq!(report.responses.len(), n, "a flap lost or duplicated a request");
+    let mut ids: Vec<u64> = report.responses.iter().map(|r| r.id).collect();
+    ids.sort_unstable();
+    assert_eq!(ids, (1..=n as u64).collect::<Vec<_>>());
+    for r in &report.responses {
+        assert_eq!(r.tokens.len(), 6, "id {} lost budget across the flap", r.id);
+    }
+    assert_eq!(report.dead_shards, vec![1, 1], "both incarnations must die on schedule");
+    assert_eq!(report.rejoined, vec![1, 1], "each recover: clause grants one rejoin");
+    assert_eq!(report.lost_tokens, 0);
+    assert_eq!(report.router_in_flight, 0, "a charge leaked through the flap");
+    assert_eq!(report.router_inflight_tokens, 0);
+    // two rejoins -> two quantized weight re-broadcasts
+    assert_eq!(report.rebroadcast_bytes, 2 * report.shard_weight_bytes[1] as u64);
+}
+
+#[test]
+fn degrade_ladder_enters_once_per_pressure_episode() {
+    // one sustained backlog episode on a fixed fleet: the hysteresis
+    // band must yield exactly one degrade entry (no oscillation), and
+    // the width change must not perturb any token stream
+    let reqs = |seed: u64| -> Vec<Request> {
+        (0..64)
+            .map(|i| {
+                let mut prompt = corpus::generate_tokens(8, seed + i as u64);
+                prompt[0] = BOS;
+                Request::new(i as u64 + 1, prompt, 24)
+            })
+            .collect()
+    };
+    let run = |degrade: Option<u32>| {
+        let mut cfg = sim_cfg(SchedulerMode::Continuous, 1, 4);
+        cfg.degrade_bits = degrade;
+        // tick the pressure clock fast enough for the test; no fault
+        // plan, so liveness stays disarmed and this is pressure-only
+        cfg.fault.step_deadline = Duration::from_millis(10);
+        let server = Server::start_sim(cfg, SimCost::default()).unwrap();
+        server.run_workload(reqs(60_000)).unwrap()
+    };
+    let fixed = run(None);
+    let degraded = run(Some(4));
+    assert_eq!(fixed.degrade_enters, 0, "an unarmed ladder must never move");
+    assert_eq!(
+        degraded.degrade_enters,
+        1,
+        "one pressure episode must enter degraded mode exactly once"
+    );
+    assert!(
+        degraded.degrade_exits <= 1,
+        "the ladder oscillated within one episode: {} exits",
+        degraded.degrade_exits
+    );
+    assert_eq!(degraded.responses.len(), 64);
+    assert_eq!(degraded.lost_tokens, 0);
+    for id in 1..=64u64 {
+        assert_eq!(
+            by_id(&fixed.responses, id).tokens,
+            by_id(&degraded.responses, id).tokens,
+            "id {id}: a KV width move must not change the greedy stream"
+        );
+    }
+}
+
+#[test]
+fn standby_promotes_at_most_once_per_death() {
+    // two warm spares, one death: exactly one spare is consumed, the
+    // shard rejoins through the probe ramp, and the pool holds the rest
+    let n = 24;
+    let mut cfg = fault_cfg(2, FaultPlan::new(11).crash(1, 4));
+    cfg.standby = 2;
+    let server = Server::start_sim(cfg, SimCost::fast()).unwrap();
+    let report = server.run_workload(long_mixed_requests(n)).unwrap();
+
+    assert_eq!(report.responses.len(), n);
+    assert_eq!(report.dead_shards, vec![1]);
+    assert_eq!(
+        report.standby_promotions,
+        1,
+        "one death must consume exactly one spare (pool of 2)"
+    );
+    assert_eq!(report.rejoined, vec![1], "the promoted spare rejoins the dead rank");
+    assert_eq!(report.lost_tokens, 0);
+    assert_eq!(report.router_in_flight, 0);
+    assert_eq!(report.router_inflight_tokens, 0);
+    assert_eq!(report.rebroadcast_bytes, report.shard_weight_bytes[1] as u64);
+    for (i, req) in long_mixed_requests(n).iter().enumerate() {
+        assert_eq!(by_id(&report.responses, req.id).tokens.len(), 2 + (i % 5));
+    }
+}
+
 #[test]
 fn weight_bytes_summed_across_shards() {
     let one_server = sim_server(SchedulerMode::Continuous, 1, 4);
