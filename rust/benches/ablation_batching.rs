@@ -28,6 +28,15 @@
 //! interactive request, and hold interactive p99 inside the target that
 //! the trailing gate overshoots during the ramp.
 //!
+//! **Sweep 4 — shared-prefix chat workload x prefix cache** (paged KV):
+//! a workload where most requests share one of four synthetic system
+//! prompts, run with the prefix cache on vs off (token streams must be
+//! identical). Cached TTFT must collapse — shared arrivals skip prefill
+//! straight to their first uncached block — at tokens/s parity. A third
+//! arm shrinks the KV block pool until interactive arrivals preempt
+//! batch residents (table unmap, prefix-cached resume): every preempted
+//! request must still complete with zero lost/duplicated tokens.
+//!
 //! Besides the printed tables, every run writes `BENCH_batching.json`
 //! (tokens/s, TTFT, latency percentiles, ITL p99, shed counts per row)
 //! so the serving perf trajectory is diffable across PRs and gated in CI
@@ -78,6 +87,7 @@ fn run_one(
         max_new_max: 24,
         long_frac: 0.0,
         interactive_frac: 1.0,
+        shared_prefix_frac: 0.0,
         seed: 42,
     };
     let report = server.run_open_loop(workload::generate(&spec))?;
@@ -153,6 +163,7 @@ fn slo_spec(n_requests: usize, interactive_frac: f64) -> workload::WorkloadSpec 
         max_new_max: 24,
         long_frac: 0.25,
         interactive_frac,
+        shared_prefix_frac: 0.0,
         seed: 42,
     }
 }
@@ -228,6 +239,117 @@ fn run_predictive(
         batch_p99_ms: report.latency_percentile_for(Priority::Batch, 0.99) * 1e3,
         queue_p99_ms: report.queue_delay_percentile(0.99) * 1e3,
         requests: n_requests,
+    })
+}
+
+// ---------------------------------------------------------------------------
+// Sweep 4: shared-prefix chat workload x prefix cache (paged KV)
+// ---------------------------------------------------------------------------
+
+/// Fraction of the chat workload sharing a 63-token system prompt from
+/// the synthetic bank (`workload::system_prompt_bank`) — with the BOS
+/// that is exactly four full KV blocks of cacheable prefix.
+const SHARED_PREFIX_FRAC: f64 = 0.85;
+
+/// Offered load (req/s total, 2 shards) for the cached/uncached pair:
+/// well under sim capacity, so TTFT measures prefill work (warm vs
+/// cold), not queueing, and tokens/s tracks the arrival process in
+/// both arms.
+const PREFIX_RATE_PER_S: f64 = 200.0;
+
+/// Offered load for the preemption arm: far over what two block-starved
+/// residents per shard can drain, so the pool stays dry and interactive
+/// arrivals must preempt batch residents to admit within a step.
+const PRESSURE_RATE_PER_S: f64 = 2000.0;
+
+/// KV block pool per shard for the preemption arm: room for two
+/// resident requests (~6 blocks each at these lengths), so the eight
+/// lanes are never the binding constraint — blocks are.
+const PRESSURE_KV_BLOCKS: usize = 12;
+
+struct PrefixRow {
+    scenario: &'static str,
+    prefix_cache: bool,
+    kv_blocks: usize,
+    rate_per_s: f64,
+    interactive_frac: f64,
+    tok_per_s: f64,
+    ttft_mean_ms: f64,
+    ttft_p99_ms: f64,
+    prefix_hit_tokens: u64,
+    preemptions: u64,
+    resume_reprefill_tokens: u64,
+    lost_tokens: u64,
+    dup_tokens: u64,
+    served: usize,
+    requests: usize,
+    /// token streams keyed by request id (stream-identity cross-check)
+    streams: std::collections::HashMap<u64, Vec<i32>>,
+}
+
+/// Shared-prefix chat mix: short unique tails behind the bank prompt,
+/// so prefill cost is dominated by the (cacheable) system prompt.
+fn prefix_spec(
+    n_requests: usize,
+    rate_per_s: f64,
+    interactive_frac: f64,
+) -> workload::WorkloadSpec {
+    workload::WorkloadSpec {
+        n_requests,
+        rate_per_s,
+        prompt_min: 8,
+        prompt_max: 16,
+        max_new_min: 8,
+        max_new_max: 16,
+        long_frac: 0.0,
+        interactive_frac,
+        shared_prefix_frac: SHARED_PREFIX_FRAC,
+        seed: 4242,
+    }
+}
+
+fn run_prefix(
+    scenario: &'static str,
+    prefix_cache: bool,
+    kv_blocks: usize,
+    rate_per_s: f64,
+    interactive_frac: f64,
+    n_requests: usize,
+    cost: SimCost,
+) -> anyhow::Result<PrefixRow> {
+    let mut cfg = ServerConfig::new("sim-tiny", Variant::SimQuant);
+    cfg.shards = 2;
+    cfg.batch = 8;
+    cfg.mode = SchedulerMode::Continuous;
+    cfg.prefill_chunk = PREFILL_CHUNK;
+    cfg.prefix_cache = prefix_cache;
+    cfg.kv_blocks = (kv_blocks > 0).then_some(kv_blocks);
+    let server = Server::start_sim(cfg, cost)?;
+    let spec = prefix_spec(n_requests, rate_per_s, interactive_frac);
+    let report = server.run_open_loop(workload::generate(&spec))?;
+    assert_eq!(
+        report.responses.len(),
+        n_requests,
+        "{scenario}: open admission must serve every request"
+    );
+    assert_eq!(report.router_in_flight, 0, "{scenario}: router charge leaked");
+    Ok(PrefixRow {
+        scenario,
+        prefix_cache,
+        kv_blocks,
+        rate_per_s,
+        interactive_frac,
+        tok_per_s: report.tokens_per_s(),
+        ttft_mean_ms: report.ttft_summary().mean * 1e3,
+        ttft_p99_ms: report.ttft_percentile(0.99) * 1e3,
+        prefix_hit_tokens: report.prefix_hit_tokens,
+        preemptions: report.preemptions,
+        resume_reprefill_tokens: report.resume_reprefill_tokens,
+        lost_tokens: report.lost_tokens,
+        dup_tokens: report.dup_tokens,
+        served: report.responses.len(),
+        requests: n_requests,
+        streams: report.responses.iter().map(|r| (r.id, r.tokens.clone())).collect(),
     })
 }
 
@@ -520,6 +642,120 @@ fn main() -> anyhow::Result<()> {
          before the breach, and keeps the interactive tier inside the target."
     );
 
+    // ---- sweep 4: shared-prefix chat workload x prefix cache --------------
+    let prefix_requests = if smoke { 32 } else { 128 };
+    println!(
+        "\n== ablation: shared-prefix chat x prefix cache (2 shards, continuous, \
+         chunked prefill {PREFILL_CHUNK}, {prefix_requests} reqs, \
+         {:.0}% shared system prompts) ==\n",
+        SHARED_PREFIX_FRAC * 100.0
+    );
+    let prefix_rows = vec![
+        run_prefix("uncached", false, 0, PREFIX_RATE_PER_S, 1.0, prefix_requests, slo_cost)?,
+        run_prefix("cached", true, 0, PREFIX_RATE_PER_S, 1.0, prefix_requests, slo_cost)?,
+        run_prefix(
+            "pressure",
+            true,
+            PRESSURE_KV_BLOCKS,
+            PRESSURE_RATE_PER_S,
+            0.25,
+            prefix_requests,
+            slo_cost,
+        )?,
+    ];
+    let mut prefix_table = Table::new(&[
+        "scenario",
+        "cache",
+        "kv-blocks",
+        "tok/s",
+        "ttft mean (ms)",
+        "ttft p99 (ms)",
+        "hit tokens",
+        "preempt",
+        "resume re-prefill",
+        "lost",
+        "dup",
+    ]);
+    for r in &prefix_rows {
+        prefix_table.row(vec![
+            r.scenario.into(),
+            if r.prefix_cache { "on".into() } else { "off".into() },
+            if r.kv_blocks == 0 { "default".into() } else { r.kv_blocks.to_string() },
+            format!("{:.0}", r.tok_per_s),
+            format!("{:.2}", r.ttft_mean_ms),
+            format!("{:.2}", r.ttft_p99_ms),
+            r.prefix_hit_tokens.to_string(),
+            r.preemptions.to_string(),
+            r.resume_reprefill_tokens.to_string(),
+            r.lost_tokens.to_string(),
+            r.dup_tokens.to_string(),
+        ]);
+    }
+    prefix_table.print();
+
+    let by_scenario = |name: &str| prefix_rows.iter().find(|r| r.scenario == name);
+    if let (Some(cold), Some(warm), Some(pressure)) =
+        (by_scenario("uncached"), by_scenario("cached"), by_scenario("pressure"))
+    {
+        println!(
+            "\nprefix cache: ttft mean {:.2} -> {:.2} ms ({:.1}x) at tok/s {:.0} vs {:.0}; \
+             {} hit tokens | pressure arm: {} preemptions, {} resume re-prefill tokens, \
+             lost {} dup {}",
+            cold.ttft_mean_ms,
+            warm.ttft_mean_ms,
+            cold.ttft_mean_ms / warm.ttft_mean_ms.max(1e-9),
+            cold.tok_per_s,
+            warm.tok_per_s,
+            warm.prefix_hit_tokens,
+            pressure.preemptions,
+            pressure.resume_reprefill_tokens,
+            pressure.lost_tokens,
+            pressure.dup_tokens,
+        );
+        // stream identity: the cache may only move time, never tokens
+        assert_eq!(
+            cold.streams, warm.streams,
+            "prefix cache changed a token stream — hits must be byte-identical to cold prefill"
+        );
+        assert!(warm.prefix_hit_tokens > 0, "cached arm never hit the prefix cache");
+        assert_eq!(cold.prefix_hit_tokens, 0, "uncached arm must not hit a disabled cache");
+        for r in [cold, warm, pressure] {
+            assert_eq!(
+                (r.lost_tokens, r.dup_tokens),
+                (0, 0),
+                "{}: paged serving lost or duplicated tokens",
+                r.scenario
+            );
+        }
+        if !smoke {
+            let ttft_ratio = warm.ttft_mean_ms / cold.ttft_mean_ms.max(1e-9);
+            assert!(
+                ttft_ratio <= 0.5,
+                "prefix-cached ttft must halve the cold ttft (ratio {ttft_ratio:.3})"
+            );
+            let tok_ratio = warm.tok_per_s / cold.tok_per_s.max(1e-9);
+            assert!(
+                (0.85..=1.15).contains(&tok_ratio),
+                "prefix caching broke throughput parity: {tok_ratio:.3}"
+            );
+            assert!(
+                pressure.preemptions > 0,
+                "block-starved pool never forced a preemption"
+            );
+            assert!(
+                pressure.resume_reprefill_tokens > 0,
+                "preempted requests resumed without re-prefill accounting"
+            );
+        }
+    }
+    println!(
+        "\nshape: shared-prefix arrivals attach the retained blocks of their \
+         system prompt and prefill only the unique tail, so TTFT collapses at \
+         unchanged streams and throughput; when the block pool is the binding \
+         constraint, an interactive arrival unmaps the youngest batch table \
+         (one-step interference) and the victim resumes through the same cache."
+    );
+
     // machine-readable trajectory output
     let json_rows: Vec<Value> = rows
         .iter()
@@ -576,6 +812,28 @@ fn main() -> anyhow::Result<()> {
             ])
         })
         .collect();
+    let prefix_json: Vec<Value> = prefix_rows
+        .iter()
+        .map(|r| {
+            Value::obj(vec![
+                ("scenario", Value::Str(r.scenario.into())),
+                ("prefix_cache", Value::Bool(r.prefix_cache)),
+                ("kv_blocks", Value::Num(r.kv_blocks as f64)),
+                ("rate_per_s", Value::Num(r.rate_per_s)),
+                ("interactive_frac", Value::Num(r.interactive_frac)),
+                ("requests", Value::Num(r.requests as f64)),
+                ("served", Value::Num(r.served as f64)),
+                ("tok_per_s", Value::Num(r.tok_per_s)),
+                ("ttft_mean_ms", Value::Num(r.ttft_mean_ms)),
+                ("ttft_p99_ms", Value::Num(r.ttft_p99_ms)),
+                ("prefix_hit_tokens", Value::Num(r.prefix_hit_tokens as f64)),
+                ("preemptions", Value::Num(r.preemptions as f64)),
+                ("resume_reprefill_tokens", Value::Num(r.resume_reprefill_tokens as f64)),
+                ("lost_tokens", Value::Num(r.lost_tokens as f64)),
+                ("dup_tokens", Value::Num(r.dup_tokens as f64)),
+            ])
+        })
+        .collect();
     let out = Value::obj(vec![
         ("bench", Value::Str("ablation_batching".into())),
         ("backend", Value::Str("sim".into())),
@@ -584,10 +842,12 @@ fn main() -> anyhow::Result<()> {
         ("slo_rate_per_shard", Value::Num(SLO_RATE_PER_SHARD)),
         ("slo_target_ms", Value::Num(SLO_TARGET_MS)),
         ("prefill_chunk", Value::Num(PREFILL_CHUNK as f64)),
+        ("shared_prefix_frac", Value::Num(SHARED_PREFIX_FRAC)),
         ("note", Value::Str("measured by `cargo bench --bench ablation_batching`".into())),
         ("rows", Value::Arr(json_rows)),
         ("slo_rows", Value::Arr(slo_json)),
         ("predictive_rows", Value::Arr(pred_json)),
+        ("prefix_rows", Value::Arr(prefix_json)),
     ]);
     // smoke runs (CI) write to target/ so the committed full-run numbers
     // at the repo root never drift to smoke-sized samples

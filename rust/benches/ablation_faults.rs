@@ -148,6 +148,7 @@ fn spec(n_requests: usize) -> workload::WorkloadSpec {
         max_new_max: 24,
         long_frac: 0.0,
         interactive_frac: 1.0,
+        shared_prefix_frac: 0.0,
         seed: WORKLOAD_SEED,
     }
 }

@@ -74,6 +74,12 @@ const FAULT_DETECT_MAX_DEADLINES: f64 = 4.0;
 /// dip, but below this the recovery path itself is the bottleneck.
 const FAULT_GOODPUT_MIN_RATIO: f64 = 0.6;
 
+/// Prefix-cached mean TTFT must stay at or under half the cold run's:
+/// shared arrivals skip four blocks of system-prompt prefill, so the
+/// full-run ratio sits well below this (the gate catches the cache
+/// silently stopping to hit).
+const PREFIX_TTFT_MAX_RATIO: f64 = 0.5;
+
 fn f(row: &Value, key: &str) -> f64 {
     row.get(key).and_then(Value::as_f64).unwrap_or(f64::NAN)
 }
@@ -325,6 +331,86 @@ fn check_recovery_rows(rows: &[Value], failures: &mut Vec<String>) {
     }
 }
 
+fn check_prefix_rows(rows: &[Value], smoke: bool, failures: &mut Vec<String>) {
+    // exactly-once delivery and full completion hold for every paged
+    // row, preempted or not — preemption may move time, never tokens
+    for r in rows {
+        let scenario = s(r, "scenario");
+        for key in ["lost_tokens", "dup_tokens"] {
+            let v = f(r, key);
+            if v.is_nan() || v != 0.0 {
+                failures.push(format!(
+                    "prefix_rows: {scenario}: {key} = {v} (must be 0) — paged KV broke \
+                     exactly-once token delivery"
+                ));
+            }
+        }
+        if f(r, "served") != f(r, "requests") {
+            failures.push(format!(
+                "prefix_rows: {scenario}: served {} != offered {} — a paged/preempted \
+                 request never completed",
+                f(r, "served"),
+                f(r, "requests"),
+            ));
+        }
+    }
+    let pick = |scenario: &str| rows.iter().find(|r| s(r, "scenario") == scenario);
+    let (Some(cold), Some(warm), Some(pressure)) =
+        (pick("uncached"), pick("cached"), pick("pressure"))
+    else {
+        failures.push("prefix_rows: missing uncached/cached/pressure scenarios".to_string());
+        return;
+    };
+    let warm_hits = f(warm, "prefix_hit_tokens");
+    if warm_hits.is_nan() || warm_hits <= 0.0 {
+        failures.push(
+            "prefix_rows: cached run recorded no prefix_hit_tokens — the prefix cache \
+             never attached a retained block"
+                .to_string(),
+        );
+    }
+    if f(cold, "prefix_hit_tokens") != 0.0 {
+        failures.push(format!(
+            "prefix_rows: uncached run hit a disabled cache ({} tokens)",
+            f(cold, "prefix_hit_tokens"),
+        ));
+    }
+    let ttft_ratio = f(warm, "ttft_mean_ms") / f(cold, "ttft_mean_ms").max(1e-12);
+    if ttft_ratio.is_nan() || ttft_ratio > PREFIX_TTFT_MAX_RATIO {
+        failures.push(format!(
+            "prefix_rows: cached/uncached ttft mean ratio {ttft_ratio:.3} > \
+             {PREFIX_TTFT_MAX_RATIO} — prefix caching lost its TTFT collapse"
+        ));
+    }
+    let tok_ratio = f(warm, "tok_per_s") / f(cold, "tok_per_s").max(1e-12);
+    if !(TOK_RATIO_BAND.0..=TOK_RATIO_BAND.1).contains(&tok_ratio) {
+        failures.push(format!(
+            "prefix_rows: cached/uncached tok/s ratio {tok_ratio:.3} outside \
+             [{}, {}] — the TTFT win must come at throughput parity",
+            TOK_RATIO_BAND.0, TOK_RATIO_BAND.1
+        ));
+    }
+    // the block-starved arm must actually exercise preemption; the smoke
+    // burst is short enough that the count is timing-sensitive, so the
+    // >0 gates apply to full runs only (completion/exactly-once above
+    // gate both sizes)
+    if !smoke {
+        if f(pressure, "preemptions") < 1.0 {
+            failures.push(
+                "prefix_rows: pressure run recorded no preemptions — the starved block \
+                 pool never forced a batch table unmap"
+                    .to_string(),
+            );
+        }
+        if f(pressure, "resume_reprefill_tokens") <= 0.0 {
+            failures.push(
+                "prefix_rows: pressure run resumed without re-prefill accounting"
+                    .to_string(),
+            );
+        }
+    }
+}
+
 fn main() -> ExitCode {
     let manifest = std::path::Path::new(env!("CARGO_MANIFEST_DIR"));
     // `cargo bench` invokes every bench binary with a `--bench` flag;
@@ -373,11 +459,16 @@ fn main() -> ExitCode {
         Some(rows) => check_recovery_rows(rows, &mut failures),
         None => failures.push("missing `recovery_rows` array (run ablation_faults)".to_string()),
     }
+    let smoke = matches!(doc.get("smoke"), Some(Value::Bool(true)));
+    match doc.get("prefix_rows").and_then(Value::as_arr) {
+        Some(rows) => check_prefix_rows(rows, smoke, &mut failures),
+        None => failures.push("missing `prefix_rows` array".to_string()),
+    }
     if failures.is_empty() {
         println!(
             "check_batching: {} OK (static-vs-continuous + chunked/admission + \
-             predictive-admission + fault-recovery + elastic kill/degrade/rejoin \
-             gates hold)",
+             predictive-admission + fault-recovery + elastic kill/degrade/rejoin + \
+             prefix-cache/preemption gates hold)",
             path.display()
         );
         ExitCode::SUCCESS

@@ -16,7 +16,7 @@
 use std::collections::VecDeque;
 use std::time::{Duration, Instant};
 
-use super::request::Request;
+use super::request::{Priority, Request};
 
 /// What the serving engine does with new load while a shard is (or is
 /// predicted to be) breaching its latency target. Decided at the
@@ -156,6 +156,32 @@ impl Batcher {
     /// deprioritization): released only when the normal queue is empty.
     pub fn push_low(&mut self, req: Request) {
         self.low.push_back(req);
+    }
+
+    /// Return a request to the *front* of the normal tier. The paged
+    /// dispatcher uses this for block-budget bounces: a request taken at
+    /// a step boundary that found no KV blocks goes back first-in-line
+    /// (its arrival order is preserved) instead of re-queuing behind
+    /// newer load.
+    pub fn push_front(&mut self, req: Request) {
+        self.queue.push_front(req);
+    }
+
+    /// [`Batcher::push_front`] for the low tier.
+    pub fn push_low_front(&mut self, req: Request) {
+        self.low.push_front(req);
+    }
+
+    /// Whether the next request `take_up_to` would release is
+    /// interactive-priority. The paged dispatcher peeks this when a
+    /// shard's lanes are full: an interactive head-of-line may still
+    /// admit within one step by preempting a batch residency, so it is
+    /// worth taking even at zero free slots.
+    pub fn front_interactive(&self) -> bool {
+        self.queue
+            .front()
+            .or_else(|| self.low.front())
+            .is_some_and(|r| r.priority == Priority::Interactive)
     }
 
     pub fn pending(&self) -> usize {
@@ -373,6 +399,46 @@ mod tests {
         assert_eq!(total, 6);
         let first: Vec<u64> = batches[0].requests.iter().map(|r| r.id).collect();
         assert_eq!(first, vec![0, 1, 2]);
+    }
+
+    #[test]
+    fn push_front_returns_a_bounce_first_in_line() {
+        let mut b = Batcher::new(BatchPolicy { max_batch: 8, max_wait: Duration::ZERO });
+        b.push(req(1));
+        b.push(req(2));
+        let mut got = b.take_up_to(2);
+        assert_eq!(got.len(), 2);
+        // request 1 found no KV blocks: back to the front, not the back
+        b.push(req(3));
+        b.push_front(got.remove(0));
+        assert_eq!(
+            b.take_up_to(9).iter().map(|r| r.id).collect::<Vec<_>>(),
+            vec![1, 3],
+            "bounced request keeps its arrival-order position"
+        );
+        // low-tier bounce stays in the low tier, ahead of newer low load
+        b.push_low(req(20));
+        b.push_low_front(req(10));
+        b.push(req(4));
+        assert_eq!(b.take_up_to(9).iter().map(|r| r.id).collect::<Vec<_>>(), vec![4, 10, 20]);
+    }
+
+    #[test]
+    fn front_interactive_peeks_the_next_release() {
+        use super::super::request::Priority;
+        let mut b = Batcher::new(BatchPolicy::default());
+        assert!(!b.front_interactive(), "empty queue has no interactive head");
+        b.push(req(1).with_priority(Priority::Batch));
+        b.push(req(2));
+        assert!(!b.front_interactive(), "batch request is head-of-line");
+        let _ = b.take_up_to(1);
+        assert!(b.front_interactive());
+        let _ = b.take_up_to(1);
+        // low tier is peeked once normal drains
+        b.push_low(req(3));
+        assert!(b.front_interactive());
+        b.push(req(4).with_priority(Priority::Batch));
+        assert!(!b.front_interactive(), "normal tier releases first");
     }
 
     #[test]

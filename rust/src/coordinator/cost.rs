@@ -137,6 +137,28 @@ impl CostEstimator {
     ) -> f64 {
         self.predict_s(backlog, prompt_len, decode_len, prefill_chunk) * 1e3
     }
+
+    /// KV blocks a request's full residency occupies in a paged cache:
+    /// `ceil((prompt + decode budget) / block_size)`. The block-budget
+    /// admission question the paged KV cache replaces the hard
+    /// slot-count cap with.
+    pub fn blocks_for(prompt_len: usize, decode_len: usize, block_size: usize) -> usize {
+        if block_size == 0 {
+            return 0;
+        }
+        (prompt_len + decode_len).div_ceil(block_size)
+    }
+
+    /// Seconds of decode progress needed to free `deficit_blocks` KV
+    /// blocks: a retiring residency returns its blocks only after its
+    /// remaining tokens decode, so the drain rate is the shard's decode
+    /// rate over the deficit's token mass. The predictive gate adds this
+    /// on top of `predict_s` when a candidate's block demand exceeds the
+    /// shard's free pool — block pressure becomes latency the gate can
+    /// price instead of an invisible admission stall.
+    pub fn block_drain_s(&self, deficit_blocks: usize, block_size: usize) -> f64 {
+        (deficit_blocks * block_size) as f64 * self.decode_s_per_token
+    }
 }
 
 #[cfg(test)]
@@ -214,5 +236,25 @@ mod tests {
         let e = CostEstimator::from_sim_cost(&SimCost::default(), 0);
         assert_eq!(e.batch(), 1);
         assert!(e.predict_s((0, 0), 1, 1, 0).is_finite());
+    }
+
+    #[test]
+    fn blocks_for_rounds_residency_up_to_whole_blocks() {
+        assert_eq!(CostEstimator::blocks_for(16, 0, 16), 1);
+        assert_eq!(CostEstimator::blocks_for(17, 0, 16), 2);
+        assert_eq!(CostEstimator::blocks_for(10, 6, 16), 1, "prompt + decode share a block");
+        assert_eq!(CostEstimator::blocks_for(10, 7, 16), 2);
+        assert_eq!(CostEstimator::blocks_for(0, 0, 16), 0);
+        assert_eq!(CostEstimator::blocks_for(100, 100, 0), 0, "paging disabled");
+    }
+
+    #[test]
+    fn block_drain_prices_deficit_at_the_decode_rate() {
+        let e = est();
+        // 3 blocks of 16 tokens at 56.25 us/token
+        assert!((e.block_drain_s(3, 16) - 48.0 * 56.25e-6).abs() < 1e-12);
+        assert_eq!(e.block_drain_s(0, 16), 0.0);
+        // degraded width drains faster — deficit latency shrinks with it
+        assert!(e.degraded(4).block_drain_s(3, 16) < e.block_drain_s(3, 16));
     }
 }

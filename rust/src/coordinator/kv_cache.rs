@@ -1,35 +1,54 @@
-//! KV-cache manager: batch-slot cache buffers, fp32 or SimQuant-compressed.
+//! Paged KV-cache manager: fixed-size token blocks in a shard-wide pool,
+//! per-request block tables, fp32 or SimQuant-compressed storage.
 //!
-//! Layout matches the decode graphs' inputs: `[L, B, CTX, D]` caches plus,
-//! for SimQuant, per-(layer, slot) channel params `[L, B, 1, D]`.
+//! **Paged layout** (the vLLM-style design): the cache owns a pool of
+//! `n_blocks` physical blocks of `block_size` token rows each. A lane
+//! (batch slot) maps logical token positions to physical blocks through
+//! its block table: position `t` lives at row `t % block_size` of block
+//! `table[t / block_size]`. One physical block spans *all* layers — the
+//! storage region for (layer `l`, block `b`) starts at
+//! `((l * n_blocks + b) * block_size) * d`. Blocks and lanes are handed
+//! out lowest-first from ordered free pools (`BTreeSet`, O(log n)
+//! insert/pop — no sort-per-release), keeping assignment deterministic.
 //!
-//! SimQuant mode implements the paper's online KV quantization (§3.4):
-//! each (layer, slot) page carries per-channel (vmin, step); appending a
-//! row that falls outside the page's range triggers an in-place page
-//! re-encode (dequantize codes, widen range, requantize) — the runtime
-//! adaptation that keeps Thm. A.2's bound tight as the sequence grows.
+//! **Sharing and copy-on-write**: every block carries a refcount. A
+//! forked lane ([`KvCache::fork_slot`]) or a prefix-cache attach
+//! ([`KvCache::attach_cached_blocks`]) maps the same physical block into
+//! several tables; any write through a table whose block is shared first
+//! copies the block (all layers + params) and remaps — readers never
+//! observe a neighbour's mutation. Blocks can additionally be *retained*
+//! ([`KvCache::retain_block`]): at refcount 0 they stay allocated
+//! (holding a reusable prefix) instead of returning to the free pool,
+//! until the prefix cache evicts them ([`KvCache::free_retained_block`]).
 //!
-//! Pages can store sub-byte codes bit-packed
-//! ([`KvCache::new_simquant_bits`] with 4 or 2 bits): each row occupies
-//! `packed_len(D, bits)` bytes, so `storage_bytes` reports the true
-//! 8x/16x ratio vs f32 instead of one byte per code. At 8 bits the page
-//! layout is byte-for-byte the unpacked one. Sub-byte graph inputs ship
-//! the packed rows (shape `[L, B, CTX, packed_row_bytes]`); the lowered
-//! graphs consuming that wire format are future work — the serving
-//! decode path runs at 8 bits.
+//! **SimQuant pages** implement the paper's online KV quantization
+//! (§3.4) at block granularity: each (layer, block) carries per-channel
+//! (vmin, step); appending a row that falls outside the block's range
+//! triggers an in-place block re-encode (dequantize codes, widen range,
+//! requantize). Sub-byte codes (4/2/1 bits) stay bit-packed —
+//! `packed_len(D, bits)` bytes per row — so `storage_bytes` reports the
+//! true packed width through the paged refactor. Chunked prefill resumes
+//! mid-block: a chunk landing at `t0` inside a partially-filled block
+//! encodes under that block's fitted params, widening at most once per
+//! chunk ([`KvCache::ingest_prefill_at`]).
 //!
-//! Hot-path contract: prefill ingestion encodes through
-//! `quant::kernels::simquant_encode_into` straight into the cache's own
-//! code/param pages (no staging vectors) — and fans disjoint (slot,
-//! layer) pages out across the worker pool via
-//! [`KvCache::ingest_prefill_batch`]; page re-encodes run on reused
-//! scratch buffers, and `input_literals` builds PJRT literals directly
-//! from the cache buffers — one copy per decode step, total.
+//! **Graph contract**: the decode graphs still consume dense
+//! `[L, B, CTX, *]` inputs with one param row per (layer, lane). `graph_
+//! inputs`/`input_literals` gather the mapped blocks into that dense
+//! form; when every block of a (layer, lane) shares bitwise-identical
+//! params (always true for single-block residencies) the codes are
+//! copied verbatim — bit-identical to the unpaged encode — otherwise the
+//! rows re-encode under the per-channel union range of the blocks'
+//! params. The gather is the per-step cost paging pays on the PJRT path;
+//! the sim backend only builds it in tests.
 //!
-//! Chunked prefill resumes ingestion mid-prompt
-//! ([`KvCache::ingest_prefill_at`] / `PrefillPage.t0`): later chunks
-//! encode under the params fitted to the earlier ones, widening the page
-//! range at most once per chunk when a row escapes it.
+//! Hot-path contract: prefill ingestion encodes straight into the
+//! cache's own block regions (no staging vectors) and fans disjoint
+//! (layer, block) segments out across the worker pool via
+//! [`KvCache::ingest_prefill_batch`]; block re-encodes run on reused
+//! scratch buffers.
+
+use std::collections::BTreeSet;
 
 use anyhow::Result;
 
@@ -41,6 +60,11 @@ use crate::quant::kernels::{
 use crate::runtime::{f32_bytes, literal_from_raw, Literal};
 use crate::tensor::{DType, Tensor};
 use crate::util::pool;
+
+/// Default tokens per KV block. 16 keeps a whole short prompt in one
+/// block (the verbatim-gather fast path) while leaving prefix-cache
+/// sharing granular enough for chat-style system prompts.
+pub const DEFAULT_BLOCK_SIZE: usize = 16;
 
 /// Whether the cache stores f32 rows or SimQuant u8 codes.
 #[derive(Debug, Clone, Copy, PartialEq, Eq)]
@@ -63,7 +87,7 @@ pub struct PrefillPage<'a> {
     pub t_len: usize,
 }
 
-/// Batched KV cache for one worker shard.
+/// Paged, batched KV cache for one worker shard.
 pub struct KvCache {
     n_layers: usize,
     batch: usize,
@@ -75,33 +99,67 @@ pub struct KvCache {
     bits: u32,
     /// bytes one packed row of codes occupies (== d at 8 bits)
     row_bytes: usize,
-    /// f32 mode: [L, B, CTX, D] values; simquant mode: codes as f32-free u8
+    /// tokens per block
+    block_size: usize,
+    /// physical blocks in the pool
+    n_blocks: usize,
+    /// f32 mode: [L, n_blocks, block_size, D] rows; simquant mode empty
     k_f32: Vec<f32>,
     v_f32: Vec<f32>,
+    /// simquant mode: [L, n_blocks, block_size, row_bytes] packed codes
     k_q: Vec<u8>,
     v_q: Vec<u8>,
-    /// per (layer, slot, channel) params, [L, B, D]
+    /// per (layer, block, channel) params, [L, n_blocks, D]
     k_min: Vec<f32>,
     k_step: Vec<f32>,
     v_min: Vec<f32>,
     v_step: Vec<f32>,
-    /// per-slot filled length
+    /// per-lane filled length
     lens: Vec<usize>,
-    /// slot free-list for the continuous-batching engine (descending, so
-    /// `pop` hands out the lowest free slot — deterministic assignment)
-    free: Vec<usize>,
-    /// reused page-reencode scratch (decoded page, widened lo/hi)
+    /// per-lane block table: logical block index -> physical block
+    tables: Vec<Vec<usize>>,
+    /// ordered lane free pool (lowest-first handout, O(log n) release)
+    free_lanes: BTreeSet<usize>,
+    /// ordered block free pool (lowest-first handout, O(log n) release)
+    free_blocks: BTreeSet<usize>,
+    /// per-block table references (lanes mapping the block)
+    ref_counts: Vec<u32>,
+    /// per-block prefix-cache retention: at refcount 0 a retained block
+    /// stays allocated (its prefix is reusable) until evicted
+    retained: Vec<bool>,
+    /// reused block-reencode scratch (decoded rows, widened lo/hi)
     scratch: Vec<f32>,
     lo_scratch: Vec<f32>,
     hi_scratch: Vec<f32>,
-    /// reused unpacked-code staging for sub-byte pages
+    /// reused unpacked-code staging for sub-byte blocks
     code_scratch: Vec<u8>,
-    /// page re-encode counter (observability)
+    /// block re-encode counter (observability)
     pub reencodes: u64,
+}
+
+fn blocks_of(tokens: usize, block_size: usize) -> usize {
+    (tokens + block_size - 1) / block_size
 }
 
 impl KvCache {
     pub fn new_f32(n_layers: usize, batch: usize, ctx: usize, d: usize) -> Self {
+        let bs = DEFAULT_BLOCK_SIZE.min(ctx).max(1);
+        Self::new_f32_paged(n_layers, batch, ctx, d, bs, batch * blocks_of(ctx, bs))
+    }
+
+    /// F32 cache with an explicit block geometry. `n_blocks` below
+    /// `batch * ceil(ctx / block_size)` under-provisions the pool: lanes
+    /// then compete for blocks ([`KvCache::try_reserve`]) and the
+    /// serving layer preempts or bounces on exhaustion.
+    pub fn new_f32_paged(
+        n_layers: usize,
+        batch: usize,
+        ctx: usize,
+        d: usize,
+        block_size: usize,
+        n_blocks: usize,
+    ) -> Self {
+        assert!(block_size >= 1 && block_size <= ctx, "block_size must be in 1..=ctx");
         KvCache {
             n_layers,
             batch,
@@ -110,8 +168,10 @@ impl KvCache {
             mode: Mode::F32,
             bits: 8,
             row_bytes: d,
-            k_f32: vec![0.0; n_layers * batch * ctx * d],
-            v_f32: vec![0.0; n_layers * batch * ctx * d],
+            block_size,
+            n_blocks,
+            k_f32: vec![0.0; n_layers * n_blocks * block_size * d],
+            v_f32: vec![0.0; n_layers * n_blocks * block_size * d],
             k_q: Vec::new(),
             v_q: Vec::new(),
             k_min: Vec::new(),
@@ -119,7 +179,11 @@ impl KvCache {
             v_min: Vec::new(),
             v_step: Vec::new(),
             lens: vec![0; batch],
-            free: (0..batch).rev().collect(),
+            tables: vec![Vec::new(); batch],
+            free_lanes: (0..batch).collect(),
+            free_blocks: (0..n_blocks).collect(),
+            ref_counts: vec![0; n_blocks],
+            retained: vec![false; n_blocks],
             scratch: Vec::new(),
             lo_scratch: Vec::new(),
             hi_scratch: Vec::new(),
@@ -141,8 +205,25 @@ impl KvCache {
         d: usize,
         bits: u32,
     ) -> Self {
+        let bs = DEFAULT_BLOCK_SIZE.min(ctx).max(1);
+        Self::new_simquant_bits_paged(n_layers, batch, ctx, d, bits, bs, batch * blocks_of(ctx, bs))
+    }
+
+    /// SimQuant cache with an explicit block geometry (see
+    /// [`KvCache::new_f32_paged`] for the pool semantics).
+    #[allow(clippy::too_many_arguments)]
+    pub fn new_simquant_bits_paged(
+        n_layers: usize,
+        batch: usize,
+        ctx: usize,
+        d: usize,
+        bits: u32,
+        block_size: usize,
+        n_blocks: usize,
+    ) -> Self {
         validate_simquant_bits(bits).expect("KvCache bits");
         validate_pack_bits(bits).expect("KvCache bits must pack (1, 2, 4, or 8)");
+        assert!(block_size >= 1 && block_size <= ctx, "block_size must be in 1..=ctx");
         let row_bytes = packed_len(d, bits);
         KvCache {
             n_layers,
@@ -152,16 +233,22 @@ impl KvCache {
             mode: Mode::SimQuant,
             bits,
             row_bytes,
+            block_size,
+            n_blocks,
             k_f32: Vec::new(),
             v_f32: Vec::new(),
-            k_q: vec![0; n_layers * batch * ctx * row_bytes],
-            v_q: vec![0; n_layers * batch * ctx * row_bytes],
-            k_min: vec![0.0; n_layers * batch * d],
-            k_step: vec![1e-8; n_layers * batch * d],
-            v_min: vec![0.0; n_layers * batch * d],
-            v_step: vec![1e-8; n_layers * batch * d],
+            k_q: vec![0; n_layers * n_blocks * block_size * row_bytes],
+            v_q: vec![0; n_layers * n_blocks * block_size * row_bytes],
+            k_min: vec![0.0; n_layers * n_blocks * d],
+            k_step: vec![1e-8; n_layers * n_blocks * d],
+            v_min: vec![0.0; n_layers * n_blocks * d],
+            v_step: vec![1e-8; n_layers * n_blocks * d],
             lens: vec![0; batch],
-            free: (0..batch).rev().collect(),
+            tables: vec![Vec::new(); batch],
+            free_lanes: (0..batch).collect(),
+            free_blocks: (0..n_blocks).collect(),
+            ref_counts: vec![0; n_blocks],
+            retained: vec![false; n_blocks],
             scratch: Vec::new(),
             lo_scratch: Vec::new(),
             hi_scratch: Vec::new(),
@@ -187,31 +274,233 @@ impl KvCache {
         self.lens.iter().all(|l| *l == 0)
     }
 
+    /// Tokens per physical block.
+    pub fn block_size(&self) -> usize {
+        self.block_size
+    }
+
+    /// Physical blocks in the pool.
+    pub fn total_blocks(&self) -> usize {
+        self.n_blocks
+    }
+
+    /// Blocks currently in the free pool (excludes retained blocks).
+    pub fn free_block_count(&self) -> usize {
+        self.free_blocks.len()
+    }
+
+    /// Blocks currently held by the prefix cache (retained flag set).
+    pub fn retained_count(&self) -> usize {
+        self.retained.iter().filter(|r| **r).count()
+    }
+
+    /// Blocks a residency of `tokens` (clamped to ctx) occupies.
+    pub fn blocks_needed(&self, tokens: usize) -> usize {
+        blocks_of(tokens.min(self.ctx), self.block_size)
+    }
+
+    /// Lane-table references on a block (prefix retention not counted).
+    pub fn ref_count(&self, block: usize) -> u32 {
+        self.ref_counts[block]
+    }
+
+    pub fn is_retained(&self, block: usize) -> bool {
+        self.retained[block]
+    }
+
+    /// One lane's block table (logical block index -> physical block).
+    pub fn table(&self, slot: usize) -> &[usize] {
+        &self.tables[slot]
+    }
+
     /// Highest representable code for the current bitwidth.
     fn levels(&self) -> f32 {
         ((1u32 << self.bits) - 1) as f32
     }
 
-    /// Clear one slot for reuse by a new request: length, SimQuant page
-    /// params, and the pages themselves (the decode graphs consume full
-    /// `[CTX]` pages, so a retired request's rows must not leak into the
-    /// next occupant's cache inputs).
+    /// Unmap one lane: every table entry drops a reference; blocks at
+    /// refcount 0 are scrubbed and returned to the free pool unless the
+    /// prefix cache retains them (the decode graphs consume full dense
+    /// pages, so a retired request's rows must not leak into the next
+    /// occupant's cache inputs).
     pub fn reset_slot(&mut self, slot: usize) {
+        let table = std::mem::take(&mut self.tables[slot]);
+        for b in table {
+            self.ref_counts[b] -= 1;
+            if self.ref_counts[b] == 0 && !self.retained[b] {
+                self.scrub_block(b);
+                let fresh = self.free_blocks.insert(b);
+                debug_assert!(fresh, "double free of block {b}");
+            }
+        }
         self.lens[slot] = 0;
+    }
+
+    /// Number of lanes currently available to `acquire_slot`.
+    pub fn free_slots(&self) -> usize {
+        self.free_lanes.len()
+    }
+
+    /// Claim the lowest free lane for a new request (the caller attaches
+    /// cached blocks and/or ingests prefill rows into it next). Returns
+    /// `None` when the batch is full.
+    pub fn acquire_slot(&mut self) -> Option<usize> {
+        let slot = self.free_lanes.pop_first()?;
+        debug_assert!(self.tables[slot].is_empty() && self.lens[slot] == 0);
+        Some(slot)
+    }
+
+    /// Retire a lane: unmap its blocks and return it to the ordered free
+    /// pool so the next admitted request reuses the lowest lane.
+    pub fn release_slot(&mut self, slot: usize) {
+        self.reset_slot(slot);
+        let fresh = self.free_lanes.insert(slot);
+        debug_assert!(fresh, "double release of slot {slot}");
+    }
+
+    /// Clone one lane's residency into a fresh lane, sharing every block
+    /// copy-on-write (refcounts bumped; first write through either table
+    /// copies the block). Returns `None` when no lane is free.
+    pub fn fork_slot(&mut self, src: usize) -> Option<usize> {
+        let lane = self.acquire_slot()?;
+        let table = self.tables[src].clone();
+        for &b in &table {
+            self.ref_counts[b] += 1;
+        }
+        self.tables[lane] = table;
+        self.lens[lane] = self.lens[src];
+        Some(lane)
+    }
+
+    /// Map already-encoded shared blocks (a prefix-cache hit) into an
+    /// empty lane: the lane starts `cached_len` tokens long and prefill
+    /// resumes at the first uncached position. The blocks stay shared
+    /// (refcounted); the lane's own writes land in fresh blocks past the
+    /// cached prefix.
+    pub fn attach_cached_blocks(&mut self, slot: usize, blocks: &[usize], cached_len: usize) {
+        assert!(
+            self.tables[slot].is_empty() && self.lens[slot] == 0,
+            "attach into a dirty slot"
+        );
+        assert!(cached_len <= blocks.len() * self.block_size, "cached_len past blocks");
+        for &b in blocks {
+            self.ref_counts[b] += 1;
+            self.tables[slot].push(b);
+        }
+        self.lens[slot] = cached_len;
+    }
+
+    /// Mark a block retained: at refcount 0 it stays allocated for the
+    /// prefix cache instead of returning to the free pool.
+    pub fn retain_block(&mut self, block: usize) {
+        self.retained[block] = true;
+    }
+
+    /// Prefix-cache eviction: scrub a retained, unreferenced block and
+    /// return it to the free pool.
+    pub fn free_retained_block(&mut self, block: usize) {
+        assert!(
+            self.retained[block] && self.ref_counts[block] == 0,
+            "evicting a live block {block}"
+        );
+        self.retained[block] = false;
+        self.scrub_block(block);
+        let fresh = self.free_blocks.insert(block);
+        debug_assert!(fresh, "double free of block {block}");
+    }
+
+    /// Eagerly extend a lane's table to cover `target_tokens` (clamped
+    /// to ctx). Returns `false` — leaving any blocks it did claim mapped,
+    /// so a bouncing caller releases the lane to undo — when the free
+    /// pool cannot cover the remainder. Reserving up front means decode
+    /// appends never fail mid-flight.
+    pub fn try_reserve(&mut self, slot: usize, target_tokens: usize) -> bool {
+        let need = blocks_of(target_tokens.min(self.ctx), self.block_size);
+        while self.tables[slot].len() < need {
+            match self.alloc_block() {
+                Some(b) => self.tables[slot].push(b),
+                None => return false,
+            }
+        }
+        true
+    }
+
+    /// Lowest free block, scrubbed-clean, refcount 1.
+    fn alloc_block(&mut self) -> Option<usize> {
+        let b = self.free_blocks.pop_first()?;
+        debug_assert!(self.ref_counts[b] == 0 && !self.retained[b]);
+        self.ref_counts[b] = 1;
+        Some(b)
+    }
+
+    /// Grow the table so position `upto - 1` is mapped; panics when the
+    /// pool is exhausted (serving paths reserve eagerly and preempt or
+    /// bounce instead of reaching this).
+    fn ensure_capacity(&mut self, slot: usize, upto: usize) {
+        let need = blocks_of(upto, self.block_size);
+        while self.tables[slot].len() < need {
+            let b = self
+                .alloc_block()
+                .unwrap_or_else(|| panic!("KV block pool exhausted (slot {slot})"));
+            self.tables[slot].push(b);
+        }
+    }
+
+    /// Copy-on-write barrier: writing through `table[bi]` while the
+    /// block is shared first copies it (all layers + params) into a
+    /// fresh block and remaps this lane.
+    fn ensure_private(&mut self, slot: usize, bi: usize) {
+        let block = self.tables[slot][bi];
+        if self.ref_counts[block] <= 1 && !self.retained[block] {
+            return;
+        }
+        let fresh = self
+            .alloc_block()
+            .unwrap_or_else(|| panic!("KV block pool exhausted (copy-on-write)"));
         for layer in 0..self.n_layers {
             match self.mode {
                 Mode::F32 => {
-                    let off = self.row_off(layer, slot, 0);
-                    let page = self.ctx * self.d;
-                    self.k_f32[off..off + page].fill(0.0);
-                    self.v_f32[off..off + page].fill(0.0);
+                    let n = self.block_size * self.d;
+                    let src = self.block_row_off(layer, block, 0);
+                    let dst = self.block_row_off(layer, fresh, 0);
+                    self.k_f32.copy_within(src..src + n, dst);
+                    self.v_f32.copy_within(src..src + n, dst);
                 }
                 Mode::SimQuant => {
-                    let off = self.code_off(layer, slot, 0);
-                    let page = self.ctx * self.row_bytes;
-                    self.k_q[off..off + page].fill(0);
-                    self.v_q[off..off + page].fill(0);
-                    let p = (layer * self.batch + slot) * self.d;
+                    let n = self.block_size * self.row_bytes;
+                    let src = self.block_code_off(layer, block, 0);
+                    let dst = self.block_code_off(layer, fresh, 0);
+                    self.k_q.copy_within(src..src + n, dst);
+                    self.v_q.copy_within(src..src + n, dst);
+                    let ps = self.block_param_off(layer, block);
+                    let pd = self.block_param_off(layer, fresh);
+                    self.k_min.copy_within(ps..ps + self.d, pd);
+                    self.k_step.copy_within(ps..ps + self.d, pd);
+                    self.v_min.copy_within(ps..ps + self.d, pd);
+                    self.v_step.copy_within(ps..ps + self.d, pd);
+                }
+            }
+        }
+        self.ref_counts[block] -= 1;
+        self.tables[slot][bi] = fresh;
+    }
+
+    /// Zero one block's rows and reset its params across all layers.
+    fn scrub_block(&mut self, block: usize) {
+        for layer in 0..self.n_layers {
+            match self.mode {
+                Mode::F32 => {
+                    let n = self.block_size * self.d;
+                    let off = self.block_row_off(layer, block, 0);
+                    self.k_f32[off..off + n].fill(0.0);
+                    self.v_f32[off..off + n].fill(0.0);
+                }
+                Mode::SimQuant => {
+                    let n = self.block_size * self.row_bytes;
+                    let off = self.block_code_off(layer, block, 0);
+                    self.k_q[off..off + n].fill(0);
+                    self.v_q[off..off + n].fill(0);
+                    let p = self.block_param_off(layer, block);
                     self.k_min[p..p + self.d].fill(0.0);
                     self.k_step[p..p + self.d].fill(1e-8);
                     self.v_min[p..p + self.d].fill(0.0);
@@ -221,30 +510,10 @@ impl KvCache {
         }
     }
 
-    /// Number of slots currently available to `acquire_slot`.
-    pub fn free_slots(&self) -> usize {
-        self.free.len()
-    }
-
-    /// Claim the lowest free slot for a new request (the caller ingests
-    /// prefill rows into it next). Returns `None` when the batch is full.
-    pub fn acquire_slot(&mut self) -> Option<usize> {
-        self.free.pop()
-    }
-
-    /// Retire a slot: clear it and return it to the free list so the
-    /// next admitted request can reuse its pages immediately.
-    pub fn release_slot(&mut self, slot: usize) {
-        debug_assert!(!self.free.contains(&slot), "double release of slot {slot}");
-        self.reset_slot(slot);
-        self.free.push(slot);
-        // keep descending order so `pop` stays lowest-first
-        self.free.sort_unstable_by(|a, b| b.cmp(a));
-    }
-
     /// Bytes the cache occupies (memory accounting for the tables).
-    /// Sub-byte caches count their bit-packed code pages, so the reported
-    /// ratio vs f32 is the real one.
+    /// Sub-byte caches count their bit-packed code pages, so the
+    /// reported ratio vs f32 is the real one; SimQuant adds the
+    /// per-(layer, block) channel params.
     pub fn storage_bytes(&self) -> usize {
         match self.mode {
             Mode::F32 => (self.k_f32.len() + self.v_f32.len()) * 4,
@@ -259,23 +528,23 @@ impl KvCache {
     }
 
     #[inline]
-    fn row_off(&self, layer: usize, slot: usize, t: usize) -> usize {
-        ((layer * self.batch + slot) * self.ctx + t) * self.d
+    fn block_row_off(&self, layer: usize, block: usize, r: usize) -> usize {
+        ((layer * self.n_blocks + block) * self.block_size + r) * self.d
     }
 
-    /// Byte offset of row `t` in the (packed) code pages.
+    /// Byte offset of row `r` in a block's (packed) code region.
     #[inline]
-    fn code_off(&self, layer: usize, slot: usize, t: usize) -> usize {
-        ((layer * self.batch + slot) * self.ctx + t) * self.row_bytes
+    fn block_code_off(&self, layer: usize, block: usize, r: usize) -> usize {
+        ((layer * self.n_blocks + block) * self.block_size + r) * self.row_bytes
     }
 
     #[inline]
-    fn param_off(&self, layer: usize, slot: usize) -> usize {
-        (layer * self.batch + slot) * self.d
+    fn block_param_off(&self, layer: usize, block: usize) -> usize {
+        (layer * self.n_blocks + block) * self.d
     }
 
     /// Ingest prefill caches for one slot: rows [T, D] per layer, stored
-    /// (and for SimQuant: page-encoded, straight into the cache pages)
+    /// (and for SimQuant: block-encoded, straight into the block pool)
     /// at positions 0..t_len.
     pub fn ingest_prefill(
         &mut self,
@@ -289,11 +558,13 @@ impl KvCache {
     }
 
     /// Resume-capable prefill ingest: store rows [T, D] at positions
-    /// `t0..t0 + t_len`. For `t0 > 0` (a later chunk of a chunked
-    /// prefill) the SimQuant page's params were fitted to the earlier
-    /// chunks; rows that escape that range widen it once per chunk (old
-    /// rows decoded, range recomputed over the union, page re-encoded) —
-    /// the same adaptation the decode append path performs per row.
+    /// `t0..t0 + t_len`, split across the lane's blocks. A chunk landing
+    /// mid-block (`t0 % block_size != 0`) resumes that block: its params
+    /// were fitted to the earlier rows, and rows that escape the range
+    /// widen it once per chunk (old rows decoded, range recomputed over
+    /// the union, block re-encoded) — the same adaptation the decode
+    /// append path performs per row. Fresh blocks fit their params to
+    /// their own first segment.
     pub fn ingest_prefill_at(
         &mut self,
         slot: usize,
@@ -306,57 +577,71 @@ impl KvCache {
         assert!(t0 + t_len <= self.ctx, "prefill rows past ctx");
         assert_eq!(k_rows.len(), t_len * self.d);
         assert_eq!(v_rows.len(), t_len * self.d);
-        let d = self.d;
-        match self.mode {
-            Mode::F32 => {
-                let off = self.row_off(layer, slot, t0);
-                self.k_f32[off..off + t_len * d].copy_from_slice(k_rows);
-                self.v_f32[off..off + t_len * d].copy_from_slice(v_rows);
-            }
-            Mode::SimQuant => {
-                let off = self.code_off(layer, slot, 0);
-                let p = self.param_off(layer, slot);
-                let (bits, row_bytes) = (self.bits, self.row_bytes);
-                let page = (t0 + t_len) * row_bytes;
-                let mut cscratch = std::mem::take(&mut self.code_scratch);
-                let mut fscratch = std::mem::take(&mut self.scratch);
-                resume_page_packed(
-                    k_rows,
-                    t0,
-                    t_len,
-                    d,
-                    bits,
-                    row_bytes,
-                    &mut self.k_q[off..off + page],
-                    &mut self.k_min[p..p + d],
-                    &mut self.k_step[p..p + d],
-                    &mut fscratch,
-                    &mut cscratch,
-                );
-                resume_page_packed(
-                    v_rows,
-                    t0,
-                    t_len,
-                    d,
-                    bits,
-                    row_bytes,
-                    &mut self.v_q[off..off + page],
-                    &mut self.v_min[p..p + d],
-                    &mut self.v_step[p..p + d],
-                    &mut fscratch,
-                    &mut cscratch,
-                );
-                self.code_scratch = cscratch;
-                self.scratch = fscratch;
+        if t_len == 0 {
+            return;
+        }
+        self.ensure_capacity(slot, t0 + t_len);
+        let (bs, d) = (self.block_size, self.d);
+        for bi in (t0 / bs)..=((t0 + t_len - 1) / bs) {
+            self.ensure_private(slot, bi);
+            let block = self.tables[slot][bi];
+            let seg_start = t0.max(bi * bs);
+            let seg_end = (t0 + t_len).min((bi + 1) * bs);
+            let (r0, n) = (seg_start - bi * bs, seg_end - seg_start);
+            let src = (seg_start - t0) * d;
+            match self.mode {
+                Mode::F32 => {
+                    let off = self.block_row_off(layer, block, r0);
+                    self.k_f32[off..off + n * d].copy_from_slice(&k_rows[src..src + n * d]);
+                    self.v_f32[off..off + n * d].copy_from_slice(&v_rows[src..src + n * d]);
+                }
+                Mode::SimQuant => {
+                    let (bits, row_bytes) = (self.bits, self.row_bytes);
+                    let off = self.block_code_off(layer, block, 0);
+                    let p = self.block_param_off(layer, block);
+                    let page = (r0 + n) * row_bytes;
+                    let mut cscratch = std::mem::take(&mut self.code_scratch);
+                    let mut fscratch = std::mem::take(&mut self.scratch);
+                    resume_page_packed(
+                        &k_rows[src..src + n * d],
+                        r0,
+                        n,
+                        d,
+                        bits,
+                        row_bytes,
+                        &mut self.k_q[off..off + page],
+                        &mut self.k_min[p..p + d],
+                        &mut self.k_step[p..p + d],
+                        &mut fscratch,
+                        &mut cscratch,
+                    );
+                    resume_page_packed(
+                        &v_rows[src..src + n * d],
+                        r0,
+                        n,
+                        d,
+                        bits,
+                        row_bytes,
+                        &mut self.v_q[off..off + page],
+                        &mut self.v_min[p..p + d],
+                        &mut self.v_step[p..p + d],
+                        &mut fscratch,
+                        &mut cscratch,
+                    );
+                    self.code_scratch = cscratch;
+                    self.scratch = fscratch;
+                }
             }
         }
         self.lens[slot] = self.lens[slot].max(t0 + t_len);
     }
 
     /// Ingest a batch of disjoint (slot, layer) prefill pages in
-    /// parallel: the cache's own buffers are split into per-page blocks
-    /// and the page encodes fan out across the persistent worker pool.
-    /// Panics if two pages target the same (slot, layer).
+    /// parallel: each page is split into its per-(layer, block) segments
+    /// and the segment encodes fan out across the persistent worker pool
+    /// (distinct lanes own disjoint blocks after the COW barrier, so the
+    /// carved regions never alias). Panics if two pages target the same
+    /// (slot, layer).
     pub fn ingest_prefill_batch(&mut self, pages: &[PrefillPage<'_>]) {
         for p in pages {
             assert!(p.slot < self.batch && p.layer < self.n_layers, "page out of range");
@@ -364,62 +649,93 @@ impl KvCache {
             assert_eq!(p.k_rows.len(), p.t_len * self.d);
             assert_eq!(p.v_rows.len(), p.t_len * self.d);
         }
-        let mut order: Vec<usize> = (0..pages.len()).collect();
-        order.sort_by_key(|&i| (pages[i].layer, pages[i].slot));
-        let idxs: Vec<usize> = order
-            .iter()
-            .map(|&i| pages[i].layer * self.batch + pages[i].slot)
-            .collect();
-        for w in idxs.windows(2) {
+        let mut keys: Vec<usize> =
+            pages.iter().map(|p| p.layer * self.batch + p.slot).collect();
+        keys.sort_unstable();
+        for w in keys.windows(2) {
             assert!(w[0] < w[1], "duplicate (slot, layer) prefill page");
         }
-        let d = self.d;
+        let (bs, d) = (self.block_size, self.d);
+        // map + privatize up front so the segment expansion below sees
+        // final, lane-owned physical blocks
+        for p in pages {
+            if p.t_len == 0 {
+                continue;
+            }
+            self.ensure_capacity(p.slot, p.t0 + p.t_len);
+            for bi in (p.t0 / bs)..=((p.t0 + p.t_len - 1) / bs) {
+                self.ensure_private(p.slot, bi);
+            }
+        }
+        // (pool index, page, src offset, block-local row, rows)
+        let mut segs: Vec<(usize, usize, usize, usize, usize)> = Vec::new();
+        for (i, p) in pages.iter().enumerate() {
+            if p.t_len == 0 {
+                continue;
+            }
+            for bi in (p.t0 / bs)..=((p.t0 + p.t_len - 1) / bs) {
+                let block = self.tables[p.slot][bi];
+                let seg_start = p.t0.max(bi * bs);
+                let seg_end = (p.t0 + p.t_len).min((bi + 1) * bs);
+                segs.push((
+                    p.layer * self.n_blocks + block,
+                    i,
+                    (seg_start - p.t0) * d,
+                    seg_start - bi * bs,
+                    seg_end - seg_start,
+                ));
+            }
+        }
+        segs.sort_unstable_by_key(|s| s.0);
+        let idxs: Vec<usize> = segs.iter().map(|s| s.0).collect();
+        debug_assert!(idxs.windows(2).all(|w| w[0] < w[1]), "aliased block segments");
         match self.mode {
             Mode::F32 => {
-                let page_len = self.ctx * d;
+                let page_len = bs * d;
                 let kblocks = carve(&mut self.k_f32, &idxs, page_len);
                 let vblocks = carve(&mut self.v_f32, &idxs, page_len);
-                let mut tasks: Vec<pool::Task<'_>> = Vec::with_capacity(order.len());
-                for (&pi, (kb, vb)) in order.iter().zip(kblocks.into_iter().zip(vblocks)) {
+                let mut tasks: Vec<pool::Task<'_>> = Vec::with_capacity(segs.len());
+                for ((&(_, pi, src, r0, n), kb), vb) in
+                    segs.iter().zip(kblocks).zip(vblocks)
+                {
                     let p = &pages[pi];
-                    let (start, n) = (p.t0 * d, p.t_len * d);
                     let (k_rows, v_rows) = (p.k_rows, p.v_rows);
                     tasks.push(Box::new(move || {
-                        kb[start..start + n].copy_from_slice(k_rows);
-                        vb[start..start + n].copy_from_slice(v_rows);
+                        kb[r0 * d..(r0 + n) * d].copy_from_slice(&k_rows[src..src + n * d]);
+                        vb[r0 * d..(r0 + n) * d].copy_from_slice(&v_rows[src..src + n * d]);
                     }));
                 }
                 pool::run(tasks);
             }
             Mode::SimQuant => {
                 let (bits, row_bytes) = (self.bits, self.row_bytes);
-                let code_page = self.ctx * row_bytes;
+                let code_page = bs * row_bytes;
                 let kq = carve(&mut self.k_q, &idxs, code_page);
                 let vq = carve(&mut self.v_q, &idxs, code_page);
                 let kmin = carve(&mut self.k_min, &idxs, d);
                 let kstep = carve(&mut self.k_step, &idxs, d);
                 let vmin = carve(&mut self.v_min, &idxs, d);
                 let vstep = carve(&mut self.v_step, &idxs, d);
-                let iter = order
+                let iter = segs
                     .iter()
                     .zip(kq.into_iter().zip(vq))
                     .zip(kmin.into_iter().zip(kstep))
                     .zip(vmin.into_iter().zip(vstep));
-                let mut tasks: Vec<pool::Task<'_>> = Vec::with_capacity(order.len());
-                for (((&pi, (kqb, vqb)), (kmb, ksb)), (vmb, vsb)) in iter {
+                let mut tasks: Vec<pool::Task<'_>> = Vec::with_capacity(segs.len());
+                for (((&(_, pi, src, r0, n), (kqb, vqb)), (kmb, ksb)), (vmb, vsb)) in iter {
                     let p = &pages[pi];
-                    let (k_rows, v_rows, t0, t_len) = (p.k_rows, p.v_rows, p.t0, p.t_len);
+                    let (k_rows, v_rows) = (p.k_rows, p.v_rows);
                     tasks.push(Box::new(move || {
                         // per-task staging (only allocated for sub-byte
-                        // or resumed pages; the fresh 8-bit path encodes
-                        // in place)
+                        // or resumed segments; the fresh 8-bit path
+                        // encodes in place)
                         let mut cscratch = Vec::new();
                         let mut fscratch = Vec::new();
-                        let page = (t0 + t_len) * row_bytes;
+                        let page = (r0 + n) * row_bytes;
                         resume_page_packed(
-                            k_rows,
-                            t0,
-                            t_len,
+                            &k_rows[src..src + n * d],
+                            r0,
+                            n,
                             d,
                             bits,
                             row_bytes,
@@ -430,9 +746,9 @@ impl KvCache {
                             &mut cscratch,
                         );
                         resume_page_packed(
-                            v_rows,
-                            t0,
-                            t_len,
+                            &v_rows[src..src + n * d],
+                            r0,
+                            n,
                             d,
                             bits,
                             row_bytes,
@@ -456,15 +772,20 @@ impl KvCache {
     pub fn append_row(&mut self, slot: usize, layer: usize, k_row: &[f32], v_row: &[f32]) {
         let t = self.lens[slot];
         assert!(t < self.ctx, "slot {slot} KV overflow");
+        self.ensure_capacity(slot, t + 1);
+        let bi = t / self.block_size;
+        self.ensure_private(slot, bi);
+        let block = self.tables[slot][bi];
+        let r = t % self.block_size;
         match self.mode {
             Mode::F32 => {
-                let off = self.row_off(layer, slot, t);
+                let off = self.block_row_off(layer, block, r);
                 self.k_f32[off..off + self.d].copy_from_slice(k_row);
                 self.v_f32[off..off + self.d].copy_from_slice(v_row);
             }
             Mode::SimQuant => {
-                self.append_quantized(slot, layer, t, k_row, true);
-                self.append_quantized(slot, layer, t, v_row, false);
+                self.append_quantized(block, layer, r, k_row, true);
+                self.append_quantized(block, layer, r, v_row, false);
             }
         }
         // the caller bumps the length once after appending all layers
@@ -477,18 +798,19 @@ impl KvCache {
 
     fn append_quantized(
         &mut self,
-        slot: usize,
+        block: usize,
         layer: usize,
-        t: usize,
+        r: usize,
         row: &[f32],
         is_k: bool,
     ) {
-        let p = self.param_off(layer, slot);
+        let p = self.block_param_off(layer, block);
         let d = self.d;
         let levels = self.levels();
         // the zipped loops below would silently truncate a short row
         assert_eq!(row.len(), d, "KV row length != d");
-        // check range; widen + re-encode the page if violated
+        // check range against the block's params; widen + re-encode the
+        // block if violated
         let mut needs_reencode = false;
         {
             let (vmin, vstep) = if is_k {
@@ -504,11 +826,11 @@ impl KvCache {
                 }
             }
         }
-        if needs_reencode && t > 0 {
-            self.reencode_page(slot, layer, t, row, is_k);
+        if needs_reencode && r > 0 {
+            self.reencode_block(block, layer, r, row, is_k);
             self.reencodes += 1;
         } else if needs_reencode {
-            // empty page: seed params from the row itself
+            // fresh block: seed params from the row itself
             let (vmin, vstep) = if is_k {
                 (&mut self.k_min[p..p + d], &mut self.k_step[p..p + d])
             } else {
@@ -522,7 +844,7 @@ impl KvCache {
             }
         }
         // encode the row with current params
-        let off = self.code_off(layer, slot, t);
+        let off = self.block_code_off(layer, block, r);
         let row_bytes = self.row_bytes;
         if self.bits == 8 {
             let (vmin, vstep, codes) = if is_k {
@@ -562,44 +884,46 @@ impl KvCache {
         }
     }
 
-    /// Widen the page range to cover `row` and requantize existing codes.
-    /// Runs entirely on the cache's reused scratch buffers.
-    fn reencode_page(&mut self, slot: usize, layer: usize, t: usize, row: &[f32], is_k: bool) {
-        let p = self.param_off(layer, slot);
+    /// Widen one block's range to cover `row` and requantize its first
+    /// `r` rows. Runs entirely on the cache's reused scratch buffers.
+    /// The re-encode scope is the block, not the residency — the paged
+    /// win over the old whole-page widening.
+    fn reencode_block(&mut self, block: usize, layer: usize, r: usize, row: &[f32], is_k: bool) {
+        let p = self.block_param_off(layer, block);
         let d = self.d;
         let levels = self.levels();
         let (bits, row_bytes) = (self.bits, self.row_bytes);
-        let base = self.code_off(layer, slot, 0);
-        // decode current page into the reused scratch (unpacking sub-byte
-        // rows through the reused code staging first)
+        let base = self.block_code_off(layer, block, 0);
+        // decode current rows into the reused scratch (unpacking
+        // sub-byte rows through the reused code staging first)
         let mut page = std::mem::take(&mut self.scratch);
         page.clear();
-        page.resize(t * d, 0.0);
+        page.resize(r * d, 0.0);
         let mut ucodes = std::mem::take(&mut self.code_scratch);
         {
             let (codes, vmin, vstep) = if is_k {
                 (
-                    &self.k_q[base..base + t * row_bytes],
+                    &self.k_q[base..base + r * row_bytes],
                     &self.k_min[p..p + d],
                     &self.k_step[p..p + d],
                 )
             } else {
                 (
-                    &self.v_q[base..base + t * row_bytes],
+                    &self.v_q[base..base + r * row_bytes],
                     &self.v_min[p..p + d],
                     &self.v_step[p..p + d],
                 )
             };
             if bits == 8 {
-                simquant_decode_into(codes, vmin, vstep, t, d, &mut page);
+                simquant_decode_into(codes, vmin, vstep, r, d, &mut page);
             } else {
                 ucodes.clear();
-                ucodes.resize(t * d, 0);
-                unpack_rows(codes, t, d, bits, row_bytes, &mut ucodes);
-                simquant_decode_into(&ucodes, vmin, vstep, t, d, &mut page);
+                ucodes.resize(r * d, 0);
+                unpack_rows(codes, r, d, bits, row_bytes, &mut ucodes);
+                simquant_decode_into(&ucodes, vmin, vstep, r, d, &mut page);
             }
         }
-        // widened per-channel range over page + new row
+        // widened per-channel range over the block's rows + new row
         let mut lo = std::mem::take(&mut self.lo_scratch);
         let mut hi = std::mem::take(&mut self.hi_scratch);
         lo.clear();
@@ -632,13 +956,13 @@ impl KvCache {
         }
         let (codes, vmin, vstep) = if is_k {
             (
-                &mut self.k_q[base..base + t * row_bytes],
+                &mut self.k_q[base..base + r * row_bytes],
                 &self.k_min[p..p + d],
                 &self.k_step[p..p + d],
             )
         } else {
             (
-                &mut self.v_q[base..base + t * row_bytes],
+                &mut self.v_q[base..base + r * row_bytes],
                 &self.v_min[p..p + d],
                 &self.v_step[p..p + d],
             )
@@ -647,9 +971,9 @@ impl KvCache {
             simquant_encode_with_params_into(&page, vmin, vstep, levels, codes);
         } else {
             ucodes.clear();
-            ucodes.resize(t * d, 0);
+            ucodes.resize(r * d, 0);
             simquant_encode_with_params_into(&page, vmin, vstep, levels, &mut ucodes);
-            pack_rows(&ucodes, t, d, bits, row_bytes, codes);
+            pack_rows(&ucodes, r, d, bits, row_bytes, codes);
         }
         self.scratch = page;
         self.lo_scratch = lo;
@@ -657,80 +981,291 @@ impl KvCache {
         self.code_scratch = ucodes;
     }
 
-    /// Dequantize one slot's K page into a reused buffer (cleared and
-    /// refilled) — the scratch-friendly variant of [`KvCache::decode_k`].
-    /// Sub-byte pages unpack through the cache's reused code staging
-    /// (hence `&mut self`); no per-call allocation on any path.
+    /// Dequantize one slot's K rows into a reused buffer (cleared and
+    /// refilled), gathering through the block table — the
+    /// scratch-friendly variant of [`KvCache::decode_k`]. Sub-byte
+    /// blocks unpack through the cache's reused code staging (hence
+    /// `&mut self`); no per-call allocation on any path.
     pub fn decode_k_into(&mut self, slot: usize, layer: usize, out: &mut Vec<f32>) {
         let t = self.lens[slot];
         let d = self.d;
         out.clear();
         out.resize(t * d, 0.0);
-        match self.mode {
-            Mode::F32 => {
-                let off = self.row_off(layer, slot, 0);
-                out.copy_from_slice(&self.k_f32[off..off + t * d]);
-            }
-            Mode::SimQuant => {
-                let off = self.code_off(layer, slot, 0);
-                let p = self.param_off(layer, slot);
-                if self.bits == 8 {
-                    simquant_decode_into(
-                        &self.k_q[off..off + t * d],
-                        &self.k_min[p..p + d],
-                        &self.k_step[p..p + d],
-                        t,
-                        d,
-                        out,
-                    );
-                } else {
-                    let rb = self.row_bytes;
-                    let mut ucodes = std::mem::take(&mut self.code_scratch);
-                    ucodes.clear();
-                    ucodes.resize(t * d, 0);
-                    unpack_rows(&self.k_q[off..off + t * rb], t, d, self.bits, rb, &mut ucodes);
-                    simquant_decode_into(
-                        &ucodes,
-                        &self.k_min[p..p + d],
-                        &self.k_step[p..p + d],
-                        t,
-                        d,
-                        out,
-                    );
-                    self.code_scratch = ucodes;
+        if t == 0 {
+            return;
+        }
+        let bs = self.block_size;
+        let mut ucodes = std::mem::take(&mut self.code_scratch);
+        for bi in 0..=(t - 1) / bs {
+            let block = self.tables[slot][bi];
+            let n = (t - bi * bs).min(bs);
+            let dst = bi * bs * d;
+            match self.mode {
+                Mode::F32 => {
+                    let off = self.block_row_off(layer, block, 0);
+                    out[dst..dst + n * d].copy_from_slice(&self.k_f32[off..off + n * d]);
+                }
+                Mode::SimQuant => {
+                    let off = self.block_code_off(layer, block, 0);
+                    let p = self.block_param_off(layer, block);
+                    if self.bits == 8 {
+                        simquant_decode_into(
+                            &self.k_q[off..off + n * d],
+                            &self.k_min[p..p + d],
+                            &self.k_step[p..p + d],
+                            n,
+                            d,
+                            &mut out[dst..dst + n * d],
+                        );
+                    } else {
+                        let rb = self.row_bytes;
+                        ucodes.clear();
+                        ucodes.resize(n * d, 0);
+                        unpack_rows(
+                            &self.k_q[off..off + n * rb],
+                            n,
+                            d,
+                            self.bits,
+                            rb,
+                            &mut ucodes,
+                        );
+                        simquant_decode_into(
+                            &ucodes,
+                            &self.k_min[p..p + d],
+                            &self.k_step[p..p + d],
+                            n,
+                            d,
+                            &mut out[dst..dst + n * d],
+                        );
+                    }
                 }
             }
         }
+        self.code_scratch = ucodes;
     }
 
-    /// Dequantize one slot's K page (tests + debugging).
+    /// Dequantize one slot's K rows (tests + debugging).
     pub fn decode_k(&mut self, slot: usize, layer: usize) -> Vec<f32> {
         let mut out = Vec::new();
         self.decode_k_into(slot, layer, &mut out);
         out
     }
 
-    /// Build the decode-graph cache input tensors.
+    /// Gather the paged f32 pool into dense `[L, B, CTX, D]` caches.
+    fn dense_f32(&self) -> (Vec<f32>, Vec<f32>) {
+        let (l, b, c, d, bs) = (self.n_layers, self.batch, self.ctx, self.d, self.block_size);
+        let mut k = vec![0.0f32; l * b * c * d];
+        let mut v = vec![0.0f32; l * b * c * d];
+        for slot in 0..b {
+            let t = self.lens[slot];
+            if t == 0 {
+                continue;
+            }
+            for layer in 0..l {
+                for bi in 0..=(t - 1) / bs {
+                    let block = self.tables[slot][bi];
+                    let n = (t - bi * bs).min(bs);
+                    let src = self.block_row_off(layer, block, 0);
+                    let dst = ((layer * b + slot) * c + bi * bs) * d;
+                    k[dst..dst + n * d].copy_from_slice(&self.k_f32[src..src + n * d]);
+                    v[dst..dst + n * d].copy_from_slice(&self.v_f32[src..src + n * d]);
+                }
+            }
+        }
+        (k, v)
+    }
+
+    /// Re-encode one (layer, slot)'s rows under the union of its blocks'
+    /// param ranges, writing dense codes + the union params. Only runs
+    /// when the blocks' params diverge (the dense graph consumes one
+    /// param row per lane).
+    #[allow(clippy::too_many_arguments)]
+    fn union_reencode(
+        &self,
+        slot: usize,
+        layer: usize,
+        t: usize,
+        is_k: bool,
+        fbuf: &mut Vec<f32>,
+        ubuf: &mut Vec<u8>,
+        codes_out: &mut [u8],
+        min_out: &mut [f32],
+        step_out: &mut [f32],
+    ) {
+        let (d, bs, rb, bits) = (self.d, self.block_size, self.row_bytes, self.bits);
+        let levels = self.levels();
+        let (q, pmin, pstep) = if is_k {
+            (&self.k_q, &self.k_min, &self.k_step)
+        } else {
+            (&self.v_q, &self.v_min, &self.v_step)
+        };
+        let nb = (t - 1) / bs + 1;
+        // union per-channel range from the block params (step_out holds
+        // the running hi until the final conversion)
+        min_out.fill(f32::INFINITY);
+        step_out.fill(f32::NEG_INFINITY);
+        for bi in 0..nb {
+            let p = self.block_param_off(layer, self.tables[slot][bi]);
+            for ch in 0..d {
+                let lo = pmin[p + ch];
+                let hi = lo + pstep[p + ch] * levels;
+                min_out[ch] = min_out[ch].min(lo);
+                step_out[ch] = step_out[ch].max(hi);
+            }
+        }
+        for ch in 0..d {
+            step_out[ch] = (step_out[ch] - min_out[ch]).max(1e-8) / levels;
+        }
+        // decode each block's rows under its own params
+        fbuf.clear();
+        fbuf.resize(t * d, 0.0);
+        for bi in 0..nb {
+            let block = self.tables[slot][bi];
+            let n = (t - bi * bs).min(bs);
+            let src = self.block_code_off(layer, block, 0);
+            let p = self.block_param_off(layer, block);
+            let dst = bi * bs * d;
+            if bits == 8 {
+                simquant_decode_into(
+                    &q[src..src + n * d],
+                    &pmin[p..p + d],
+                    &pstep[p..p + d],
+                    n,
+                    d,
+                    &mut fbuf[dst..dst + n * d],
+                );
+            } else {
+                ubuf.clear();
+                ubuf.resize(n * d, 0);
+                unpack_rows(&q[src..src + n * rb], n, d, bits, rb, ubuf);
+                simquant_decode_into(
+                    ubuf,
+                    &pmin[p..p + d],
+                    &pstep[p..p + d],
+                    n,
+                    d,
+                    &mut fbuf[dst..dst + n * d],
+                );
+            }
+        }
+        // re-encode the gathered rows under the union params
+        if bits == 8 {
+            simquant_encode_with_params_into(
+                &fbuf[..t * d],
+                min_out,
+                step_out,
+                levels,
+                &mut codes_out[..t * d],
+            );
+        } else {
+            ubuf.clear();
+            ubuf.resize(t * d, 0);
+            simquant_encode_with_params_into(&fbuf[..t * d], min_out, step_out, levels, ubuf);
+            pack_rows(ubuf, t, d, bits, rb, &mut codes_out[..t * rb]);
+        }
+    }
+
+    /// Gather the paged SimQuant pool into dense `[L, B, CTX,
+    /// row_bytes]` codes + `[L, B, D]` params. Uniform-params lanes
+    /// (every mapped block bitwise-identical, always true single-block)
+    /// copy codes verbatim; diverging lanes re-encode under the union
+    /// range.
+    #[allow(clippy::type_complexity)]
+    fn dense_simquant(&self) -> (Vec<u8>, Vec<u8>, Vec<f32>, Vec<f32>, Vec<f32>, Vec<f32>) {
+        let (l, b, c, d, rb, bs) =
+            (self.n_layers, self.batch, self.ctx, self.d, self.row_bytes, self.block_size);
+        let mut kq = vec![0u8; l * b * c * rb];
+        let mut vq = vec![0u8; l * b * c * rb];
+        let mut kmin = vec![0.0f32; l * b * d];
+        let mut kstep = vec![1e-8f32; l * b * d];
+        let mut vmin = vec![0.0f32; l * b * d];
+        let mut vstep = vec![1e-8f32; l * b * d];
+        let mut fbuf: Vec<f32> = Vec::new();
+        let mut ubuf: Vec<u8> = Vec::new();
+        for slot in 0..b {
+            let t = self.lens[slot];
+            if t == 0 {
+                continue;
+            }
+            let nb = (t - 1) / bs + 1;
+            for layer in 0..l {
+                let cbase = ((layer * b + slot) * c) * rb;
+                let pdst = (layer * b + slot) * d;
+                let p0 = self.block_param_off(layer, self.tables[slot][0]);
+                let uniform = (1..nb).all(|bi| {
+                    let p = self.block_param_off(layer, self.tables[slot][bi]);
+                    self.k_min[p..p + d] == self.k_min[p0..p0 + d]
+                        && self.k_step[p..p + d] == self.k_step[p0..p0 + d]
+                        && self.v_min[p..p + d] == self.v_min[p0..p0 + d]
+                        && self.v_step[p..p + d] == self.v_step[p0..p0 + d]
+                });
+                if uniform {
+                    for bi in 0..nb {
+                        let block = self.tables[slot][bi];
+                        let n = (t - bi * bs).min(bs);
+                        let src = self.block_code_off(layer, block, 0);
+                        let dst = cbase + bi * bs * rb;
+                        kq[dst..dst + n * rb].copy_from_slice(&self.k_q[src..src + n * rb]);
+                        vq[dst..dst + n * rb].copy_from_slice(&self.v_q[src..src + n * rb]);
+                    }
+                    kmin[pdst..pdst + d].copy_from_slice(&self.k_min[p0..p0 + d]);
+                    kstep[pdst..pdst + d].copy_from_slice(&self.k_step[p0..p0 + d]);
+                    vmin[pdst..pdst + d].copy_from_slice(&self.v_min[p0..p0 + d]);
+                    vstep[pdst..pdst + d].copy_from_slice(&self.v_step[p0..p0 + d]);
+                } else {
+                    self.union_reencode(
+                        slot,
+                        layer,
+                        t,
+                        true,
+                        &mut fbuf,
+                        &mut ubuf,
+                        &mut kq[cbase..cbase + c * rb],
+                        &mut kmin[pdst..pdst + d],
+                        &mut kstep[pdst..pdst + d],
+                    );
+                    self.union_reencode(
+                        slot,
+                        layer,
+                        t,
+                        false,
+                        &mut fbuf,
+                        &mut ubuf,
+                        &mut vq[cbase..cbase + c * rb],
+                        &mut vmin[pdst..pdst + d],
+                        &mut vstep[pdst..pdst + d],
+                    );
+                }
+            }
+        }
+        (kq, vq, kmin, kstep, vmin, vstep)
+    }
+
+    /// Build the decode-graph cache input tensors by gathering the block
+    /// tables into the dense layout the graphs consume.
     /// f32 mode: [k_cache, v_cache]; simquant: [k_cache, v_cache, k_min,
     /// k_step, v_min, v_step] in graph input order. Sub-byte caches ship
     /// their packed code rows (`[L, B, CTX, packed_row_bytes]`).
     pub fn graph_inputs(&self) -> Vec<Tensor> {
         let (l, b, c, d) = (self.n_layers, self.batch, self.ctx, self.d);
         match self.mode {
-            Mode::F32 => vec![
-                Tensor::from_f32_slice(vec![l, b, c, d], &self.k_f32),
-                Tensor::from_f32_slice(vec![l, b, c, d], &self.v_f32),
-            ],
-            Mode::SimQuant => {
-                let expand =
-                    |params: &[f32]| Tensor::from_f32_slice(vec![l, b, 1, d], params);
+            Mode::F32 => {
+                let (k, v) = self.dense_f32();
                 vec![
-                    Tensor::from_u8_slice(vec![l, b, c, self.row_bytes], &self.k_q),
-                    Tensor::from_u8_slice(vec![l, b, c, self.row_bytes], &self.v_q),
-                    expand(&self.k_min),
-                    expand(&self.k_step),
-                    expand(&self.v_min),
-                    expand(&self.v_step),
+                    Tensor::from_f32_slice(vec![l, b, c, d], &k),
+                    Tensor::from_f32_slice(vec![l, b, c, d], &v),
+                ]
+            }
+            Mode::SimQuant => {
+                let (kq, vq, kmin, kstep, vmin, vstep) = self.dense_simquant();
+                let expand = |params: &[f32]| Tensor::from_f32_slice(vec![l, b, 1, d], params);
+                vec![
+                    Tensor::from_u8_slice(vec![l, b, c, self.row_bytes], &kq),
+                    Tensor::from_u8_slice(vec![l, b, c, self.row_bytes], &vq),
+                    expand(&kmin),
+                    expand(&kstep),
+                    expand(&vmin),
+                    expand(&vstep),
                 ]
             }
         }
@@ -743,28 +1278,35 @@ impl KvCache {
         }
     }
 
-    /// Build the decode-graph cache inputs as PJRT literals directly from
-    /// the cache's own buffers — one copy (into the literal) instead of
-    /// the two `graph_inputs()` pays (staging Tensor + literal). This is
-    /// the decode hot path (EXPERIMENTS.md §Perf).
+    /// Build the decode-graph cache inputs as PJRT literals from the
+    /// gathered dense pages. The gather (one pass over the mapped
+    /// blocks) is the per-step cost the paged cache pays on the PJRT
+    /// decode path, in exchange for prefix sharing and O(block)
+    /// preemption.
     pub fn input_literals(&self) -> Result<Vec<Literal>> {
         let (l, b, c, d) = (self.n_layers, self.batch, self.ctx, self.d);
         let cache_shape = [l, b, c, d];
         let code_shape = [l, b, c, self.row_bytes];
         let param_shape = [l, b, 1, d];
         Ok(match self.mode {
-            Mode::F32 => vec![
-                literal_from_raw(DType::F32, &cache_shape, f32_bytes(&self.k_f32))?,
-                literal_from_raw(DType::F32, &cache_shape, f32_bytes(&self.v_f32))?,
-            ],
-            Mode::SimQuant => vec![
-                literal_from_raw(DType::U8, &code_shape, &self.k_q)?,
-                literal_from_raw(DType::U8, &code_shape, &self.v_q)?,
-                literal_from_raw(DType::F32, &param_shape, f32_bytes(&self.k_min))?,
-                literal_from_raw(DType::F32, &param_shape, f32_bytes(&self.k_step))?,
-                literal_from_raw(DType::F32, &param_shape, f32_bytes(&self.v_min))?,
-                literal_from_raw(DType::F32, &param_shape, f32_bytes(&self.v_step))?,
-            ],
+            Mode::F32 => {
+                let (k, v) = self.dense_f32();
+                vec![
+                    literal_from_raw(DType::F32, &cache_shape, f32_bytes(&k))?,
+                    literal_from_raw(DType::F32, &cache_shape, f32_bytes(&v))?,
+                ]
+            }
+            Mode::SimQuant => {
+                let (kq, vq, kmin, kstep, vmin, vstep) = self.dense_simquant();
+                vec![
+                    literal_from_raw(DType::U8, &code_shape, &kq)?,
+                    literal_from_raw(DType::U8, &code_shape, &vq)?,
+                    literal_from_raw(DType::F32, &param_shape, f32_bytes(&kmin))?,
+                    literal_from_raw(DType::F32, &param_shape, f32_bytes(&kstep))?,
+                    literal_from_raw(DType::F32, &param_shape, f32_bytes(&vmin))?,
+                    literal_from_raw(DType::F32, &param_shape, f32_bytes(&vstep))?,
+                ]
+            }
         })
     }
 }
@@ -799,13 +1341,13 @@ fn encode_page_packed(
 /// Encode rows `[t_len, D]` into page positions `t0..t0 + t_len`.
 ///
 /// `t0 == 0` is a fresh page encode (params fitted to the rows). For
-/// `t0 > 0` — resuming a chunked prefill — the page's first `t0` rows
-/// were encoded by earlier chunks under the current `(vmin, step)`:
-/// when every new row fits that range, the new rows are encoded with the
-/// existing params; otherwise the old rows are decoded, the per-channel
-/// range recomputed over old + new, and the whole page re-encoded — the
-/// decode append path's widening, amortized to at most once per chunk.
-/// `codes` must cover rows `0..t0 + t_len`.
+/// `t0 > 0` — resuming a chunked prefill mid-block — the page's first
+/// `t0` rows were encoded by earlier chunks under the current `(vmin,
+/// step)`: when every new row fits that range, the new rows are encoded
+/// with the existing params; otherwise the old rows are decoded, the
+/// per-channel range recomputed over old + new, and the whole page
+/// re-encoded — the decode append path's widening, amortized to at most
+/// once per chunk. `codes` must cover rows `0..t0 + t_len`.
 #[allow(clippy::too_many_arguments)]
 fn resume_page_packed(
     rows: &[f32],
@@ -1306,5 +1848,203 @@ mod tests {
         let mut kv = KvCache::new_f32(1, 1, 2, 2);
         kv.ingest_prefill(0, 0, &[0.0; 4], &[0.0; 4], 2);
         kv.append_row(0, 0, &[1.0, 1.0], &[1.0, 1.0]);
+    }
+
+    // ---- paged-allocator tests ----
+
+    #[test]
+    fn block_pool_hands_out_lowest_first() {
+        let mut kv = KvCache::new_f32_paged(1, 2, 8, 2, 2, 3);
+        assert_eq!(kv.block_size(), 2);
+        assert_eq!(kv.total_blocks(), 3);
+        assert_eq!(kv.free_block_count(), 3);
+        let s = kv.acquire_slot().unwrap();
+        assert!(kv.try_reserve(s, 4));
+        assert_eq!(kv.table(s), &[0, 1]);
+        kv.release_slot(s);
+        assert_eq!(kv.free_block_count(), 3);
+        // released blocks are handed out again, lowest-first
+        let s2 = kv.acquire_slot().unwrap();
+        assert!(kv.try_reserve(s2, 2));
+        assert_eq!(kv.table(s2), &[0]);
+    }
+
+    #[test]
+    fn try_reserve_fails_on_exhausted_pool_and_release_restores() {
+        let mut kv = KvCache::new_f32_paged(1, 2, 8, 2, 2, 3);
+        let a = kv.acquire_slot().unwrap();
+        let b = kv.acquire_slot().unwrap();
+        assert!(kv.try_reserve(a, 4)); // 2 blocks
+        assert!(!kv.try_reserve(b, 4)); // needs 2, only 1 free
+        // the partial claim stays mapped; bouncing releases the lane
+        assert_eq!(kv.free_block_count(), 0);
+        kv.release_slot(b);
+        assert_eq!(kv.free_block_count(), 1);
+        kv.release_slot(a);
+        assert_eq!(kv.free_block_count(), 3);
+        assert_eq!(kv.free_slots(), 2);
+    }
+
+    #[test]
+    fn cow_fork_shares_then_copies_on_write() {
+        let mut kv = KvCache::new_f32_paged(1, 2, 8, 2, 4, 4);
+        let s = kv.acquire_slot().unwrap();
+        let k = rows(4, 2, 11, 1.0);
+        let v = rows(4, 2, 12, 1.0);
+        kv.ingest_prefill(s, 0, &k, &v, 4);
+        assert_eq!(kv.free_block_count(), 3);
+        let f = kv.fork_slot(s).unwrap();
+        // fork shares the block (no copy yet)
+        assert_eq!(kv.free_block_count(), 3);
+        assert_eq!(kv.table(s), kv.table(f));
+        assert_eq!(kv.ref_count(kv.table(s)[0]), 2);
+        assert_eq!(kv.decode_k(s, 0), kv.decode_k(f, 0));
+        // writing through the fork copies the block and leaves the
+        // original untouched
+        let k2 = rows(2, 2, 13, 2.0);
+        kv.ingest_prefill_at(f, 0, 0, &k2, &k2, 2);
+        assert_ne!(kv.table(s)[0], kv.table(f)[0]);
+        assert_eq!(kv.ref_count(kv.table(s)[0]), 1);
+        assert_eq!(kv.ref_count(kv.table(f)[0]), 1);
+        assert_eq!(kv.decode_k(s, 0), k);
+        assert_eq!(&kv.decode_k(f, 0)[..4], &k2[..]);
+        // drain: every block returns to the pool
+        kv.release_slot(s);
+        kv.release_slot(f);
+        assert_eq!(kv.free_block_count(), 4);
+        assert_eq!(kv.free_slots(), 2);
+    }
+
+    #[test]
+    fn paged_matches_single_block_cache_across_block_sizes() {
+        // same rows through a 4-token-block pool and a one-block-per-
+        // slot pool: decode and gathered graph inputs are identical
+        let (t, d, ctx) = (7usize, 4usize, 8usize);
+        let k = rows(t, d, 41, 1.0);
+        let v = rows(t, d, 42, 1.0);
+        let mut small = KvCache::new_f32_paged(2, 1, ctx, d, 4, 4);
+        let mut whole = KvCache::new_f32_paged(2, 1, ctx, d, ctx, 2);
+        for kv in [&mut small, &mut whole] {
+            for layer in 0..2 {
+                kv.ingest_prefill(0, layer, &k, &v, t);
+            }
+        }
+        for layer in 0..2 {
+            assert_eq!(small.decode_k(0, layer), whole.decode_k(0, layer));
+        }
+        let (a, b) = (small.graph_inputs(), whole.graph_inputs());
+        assert_eq!(a[0].f32_view().unwrap(), b[0].f32_view().unwrap());
+        assert_eq!(a[1].f32_view().unwrap(), b[1].f32_view().unwrap());
+    }
+
+    #[test]
+    fn mid_block_chunked_resume_matches_whole() {
+        // chunk boundary at t=3 inside the first 4-token block: the
+        // resume lands mid-block and must splice, not restart
+        let (t, d, ctx, bs) = (6usize, 4usize, 8usize, 4usize);
+        let k = rows(t, d, 51, 1.0);
+        let v = rows(t, d, 52, 1.0);
+        let mut whole = KvCache::new_f32_paged(1, 1, ctx, d, bs, 2);
+        whole.ingest_prefill(0, 0, &k, &v, t);
+        let mut chunked = KvCache::new_f32_paged(1, 1, ctx, d, bs, 2);
+        chunked.ingest_prefill_at(0, 0, 0, &k[..3 * d], &v[..3 * d], 3);
+        chunked.ingest_prefill_at(0, 0, 3, &k[3 * d..], &v[3 * d..], 3);
+        assert_eq!(chunked.len(0), t);
+        assert_eq!(whole.decode_k(0, 0), chunked.decode_k(0, 0));
+    }
+
+    #[test]
+    fn simquant_mid_block_resume_in_range_matches_whole() {
+        // first chunk carries the per-channel extremes, so the mid-block
+        // resume encodes under identical block params → exact equality
+        for bits in [8u32, 4] {
+            let (d, ctx, bs) = (4usize, 8usize, 4usize);
+            let mut data = vec![0.5f32; 6 * d];
+            data[..d].fill(-4.0);
+            data[d..2 * d].fill(4.0);
+            for x in &mut data[3 * d..] {
+                *x = 1.25;
+            }
+            let mut whole = KvCache::new_simquant_bits_paged(1, 1, ctx, d, bits, bs, 2);
+            whole.ingest_prefill(0, 0, &data, &data, 6);
+            let mut chunked = KvCache::new_simquant_bits_paged(1, 1, ctx, d, bits, bs, 2);
+            chunked.ingest_prefill_at(0, 0, 0, &data[..3 * d], &data[..3 * d], 3);
+            chunked.ingest_prefill_at(0, 0, 3, &data[3 * d..], &data[3 * d..], 3);
+            assert_eq!(
+                whole.decode_k(0, 0),
+                chunked.decode_k(0, 0),
+                "bits={bits}"
+            );
+        }
+    }
+
+    #[test]
+    fn retained_blocks_survive_release_and_evict() {
+        let mut kv = KvCache::new_f32_paged(1, 1, 8, 2, 4, 2);
+        let s = kv.acquire_slot().unwrap();
+        let k = rows(4, 2, 61, 1.0);
+        kv.ingest_prefill(s, 0, &k, &k, 4);
+        let block = kv.table(s)[0];
+        kv.retain_block(block);
+        kv.release_slot(s);
+        // refcount 0 but retained: stays out of the free pool
+        assert_eq!(kv.ref_count(block), 0);
+        assert_eq!(kv.free_block_count(), 1);
+        assert_eq!(kv.retained_count(), 1);
+        // a prefix hit re-maps the retained block with its rows intact
+        let s2 = kv.acquire_slot().unwrap();
+        kv.attach_cached_blocks(s2, &[block], 4);
+        assert_eq!(kv.ref_count(block), 1);
+        assert_eq!(kv.decode_k(s2, 0), k);
+        kv.release_slot(s2);
+        // eviction scrubs and returns it
+        kv.free_retained_block(block);
+        assert!(!kv.is_retained(block));
+        assert_eq!(kv.retained_count(), 0);
+        assert_eq!(kv.free_block_count(), 2);
+    }
+
+    #[test]
+    fn graph_inputs_union_covers_mixed_block_params() {
+        // two blocks with very different ranges: the dense gather must
+        // re-encode under the per-channel union so one param row covers
+        // both blocks' rows
+        let (d, ctx, bs) = (4usize, 8usize, 4usize);
+        let mut kv = KvCache::new_simquant_bits_paged(1, 1, ctx, d, 8, bs, 2);
+        let narrow = rows(4, d, 71, 0.5);
+        let wide = rows(4, d, 72, 4.0);
+        kv.ingest_prefill_at(0, 0, 0, &narrow, &narrow, 4);
+        kv.ingest_prefill_at(0, 0, 4, &wide, &wide, 4);
+        let ins = kv.graph_inputs();
+        let codes = ins[0].u8_view().unwrap();
+        let vmin = ins[2].f32_view().unwrap();
+        let vstep = ins[3].f32_view().unwrap();
+        let expect: Vec<f32> = narrow.iter().chain(&wide).copied().collect();
+        for (i, e) in expect.iter().enumerate() {
+            let ch = i % d;
+            let got = codes[i] as f32 * vstep[ch] + vmin[ch];
+            // union step over a ~[-16, 16] range plus the first
+            // quantization's error
+            assert!((got - e).abs() < 0.2, "row {i}: {got} vs {e}");
+        }
+    }
+
+    #[test]
+    fn attach_skips_reprefill_positions() {
+        // attaching a cached block starts the lane mid-prompt: only the
+        // tail needs prefill, and the decode matches a cold lane
+        let (d, ctx, bs) = (2usize, 8usize, 4usize);
+        let k = rows(6, d, 81, 1.0);
+        let mut cold = KvCache::new_f32_paged(1, 2, ctx, d, bs, 4);
+        let a = cold.acquire_slot().unwrap();
+        cold.ingest_prefill(a, 0, &k, &k, 6);
+        let shared = cold.table(a)[0];
+        cold.retain_block(shared);
+        cold.release_slot(a);
+        let b = cold.acquire_slot().unwrap();
+        cold.attach_cached_blocks(b, &[shared], 4);
+        assert_eq!(cold.len(b), 4);
+        cold.ingest_prefill_at(b, 0, 4, &k[4 * d..], &k[4 * d..], 2);
+        assert_eq!(cold.decode_k(b, 0), k);
     }
 }

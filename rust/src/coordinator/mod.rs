@@ -17,14 +17,32 @@
 //!                (static deadline-formed batches, or per-shard
 //!                step-boundary draining) and the [`AdmissionPolicy`]
 //!                the dispatcher's SLO gate applies at the join boundary
-//!   kv_cache   — per-slot KV pages (fp32 or SimQuant codes with online
-//!                re-encode, §3.4) plus a slot free-list; prefill ingest
-//!                can resume mid-prompt (`ingest_prefill_at`) for
-//!                chunked prefill
-//!   worker     — the step core: `join` (admit into free slots, start
-//!                prefill) and `step` (one bounded prefill chunk for
-//!                mid-prefill slots, then one fused decode across
-//!                decoding slots; finished slots retire mid-flight).
+//!   kv_cache   — paged KV storage (fp32 or SimQuant codes with online
+//!                re-encode, §3.4): a shard-wide pool of fixed-size
+//!                blocks (`DEFAULT_BLOCK_SIZE` tokens each, lowest-index
+//!                -first allocation from a `BTreeSet` free pool) mapped
+//!                into per-lane *block tables*. Forks share blocks
+//!                copy-on-write under refcounts; prefix-cache hits
+//!                attach retained blocks instead of re-prefilling; and
+//!                releasing a table is O(blocks) pointer returns — which
+//!                is what makes preemption cheap. Prefill ingest can
+//!                resume mid-prompt *and* mid-block (`ingest_prefill_at`)
+//!                for chunked prefill, and sub-byte SimQuant pages keep
+//!                their true packed width in `storage_bytes`
+//!   prefix_cache — [`PrefixCacheManager`]: hashes token-prefix chains
+//!                (block-aligned, parent-linked) to retained KV blocks;
+//!                a shared-prefix arrival skips prefill to its first
+//!                uncached block. Idle chains (refcount 0) evict LRU
+//!                leaf-first when the pool runs dry
+//!   worker     — the step core: `join` (admit into free lanes, reserve
+//!                blocks, start prefill) and `step` (one bounded prefill
+//!                chunk for mid-prefill slots, then one fused decode
+//!                across decoding slots; finished slots retire
+//!                mid-flight). An interactive arrival finding no free
+//!                blocks *preempts* the youngest batch slot: its table
+//!                unmaps (blocks return to the pool), the slot parks,
+//!                and it resumes later by re-prefilling through the
+//!                prefix cache — interference bounded to one step.
 //!                Backends: PJRT artifacts or the offline deterministic
 //!                `runtime::SimModel`
 //!   server     — event-driven dispatcher: open-loop `Arrival` replay or
@@ -154,6 +172,7 @@ mod bitwidth;
 mod cost;
 mod faults;
 mod kv_cache;
+mod prefix_cache;
 mod request;
 mod router;
 mod scale_sync;
@@ -168,7 +187,8 @@ pub use bitwidth::{
     BIT_CHOICES,
 };
 pub use faults::{CrashFault, FaultPlan, FaultSpec, RecoverFault, ShardHealth, StallFault};
-pub use kv_cache::{KvCache, PrefillPage};
+pub use kv_cache::{KvCache, PrefillPage, DEFAULT_BLOCK_SIZE};
+pub use prefix_cache::PrefixCacheManager;
 pub use request::{Priority, Request, RequestId, Response, ServeEvent};
 pub use router::{request_cost, RouteDecision, Router, Transition};
 pub use scale_sync::{sync_wire_bits_for, ScaleSync, SYNC_WIRE_BITS};

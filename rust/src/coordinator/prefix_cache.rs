@@ -1,0 +1,324 @@
+//! Prefix cache: maps token-prefix chains to retained KV blocks so a
+//! shared-prefix arrival (system prompt, replayed chat history) skips
+//! prefill straight to its first uncached block.
+//!
+//! Entries form hash chains at block granularity: block `i` of a prompt
+//! is keyed by an FNV-1a hash folded over the parent block's hash and
+//! the block's own tokens, so a chain lookup is one hash + map probe
+//! per block and two prompts share exactly their common full-block
+//! prefix. Each entry pins one physical block in the [`KvCache`]
+//! ([`KvCache::retain_block`]): at lane refcount 0 the block stays
+//! allocated, holding the encoded rows for the next hit. Entries store
+//! their exact tokens, so a hash collision degrades to a miss instead
+//! of serving another prompt's KV rows.
+//!
+//! Eviction is LRU over refcount-0 *leaf* entries (`children == 0` and
+//! no lane mapping the block), ties broken by block index — child
+//! chains always evict before their parents, so a surviving entry's
+//! ancestors are always present and lookups never dangle. Only full
+//! prompt blocks are ever registered; the lookup additionally caps the
+//! cached length at `prompt_len - 1` so at least one token always
+//! prefills (the first output token's logits come from the last prompt
+//! position).
+
+use std::collections::HashMap;
+
+use super::kv_cache::KvCache;
+
+const FNV_OFFSET: u64 = 0xcbf2_9ce4_8422_2325;
+const FNV_PRIME: u64 = 0x0000_0100_0000_01b3;
+
+fn fnv1a_fold(mut h: u64, bytes: &[u8]) -> u64 {
+    for b in bytes {
+        h ^= *b as u64;
+        h = h.wrapping_mul(FNV_PRIME);
+    }
+    h
+}
+
+/// Hash of one chain link: parent hash folded with the block's tokens.
+fn chain_hash(parent: Option<u64>, tokens: &[i32]) -> u64 {
+    let mut h = fnv1a_fold(FNV_OFFSET, &parent.unwrap_or(0).to_le_bytes());
+    for t in tokens {
+        h = fnv1a_fold(h, &t.to_le_bytes());
+    }
+    h
+}
+
+struct Entry {
+    /// physical block in the KvCache pool holding these tokens' rows
+    block: usize,
+    /// chain parent (hash of the previous block), None for block 0
+    parent: Option<u64>,
+    /// live child entries (an entry with children never evicts)
+    children: u32,
+    /// exact tokens — collision guard
+    tokens: Vec<i32>,
+    /// logical LRU clock at last hit/registration
+    last_use: u64,
+}
+
+/// Per-worker prefix cache over the shard's KV block pool.
+pub struct PrefixCacheManager {
+    block_size: usize,
+    by_hash: HashMap<u64, Entry>,
+    clock: u64,
+}
+
+impl PrefixCacheManager {
+    pub fn new(block_size: usize) -> Self {
+        PrefixCacheManager { block_size, by_hash: HashMap::new(), clock: 0 }
+    }
+
+    /// Cached entries (tests + observability).
+    pub fn len(&self) -> usize {
+        self.by_hash.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.by_hash.is_empty()
+    }
+
+    /// Longest cached full-block prefix of `prompt`, capped so at least
+    /// one prompt token is left to prefill. Attaches the matched blocks
+    /// to `slot` (which must be freshly acquired) and returns the
+    /// cached token count (0 on a cold miss).
+    pub fn attach(&mut self, prompt: &[i32], slot: usize, kv: &mut KvCache) -> usize {
+        let bs = self.block_size;
+        if prompt.len() < 2 {
+            return 0;
+        }
+        let max_blocks = (prompt.len() - 1) / bs;
+        let mut blocks = Vec::new();
+        let mut parent = None;
+        self.clock += 1;
+        for i in 0..max_blocks {
+            let tokens = &prompt[i * bs..(i + 1) * bs];
+            let h = chain_hash(parent, tokens);
+            match self.by_hash.get_mut(&h) {
+                Some(e) if e.tokens == tokens => {
+                    e.last_use = self.clock;
+                    blocks.push(e.block);
+                    parent = Some(h);
+                }
+                _ => break,
+            }
+        }
+        if blocks.is_empty() {
+            return 0;
+        }
+        let cached_len = blocks.len() * bs;
+        kv.attach_cached_blocks(slot, &blocks, cached_len);
+        cached_len
+    }
+
+    /// Register `slot`'s full prompt blocks after its prefill completed:
+    /// each becomes (or refreshes) a chain entry whose physical block
+    /// the KvCache retains past the lane's release. A block already
+    /// chained (this lane hit it, or another lane registered the same
+    /// prefix first) just refreshes its LRU stamp.
+    pub fn register(&mut self, prompt: &[i32], slot: usize, kv: &mut KvCache) {
+        let bs = self.block_size;
+        let n = (prompt.len() / bs).min(kv.table(slot).len());
+        let mut parent = None;
+        self.clock += 1;
+        for i in 0..n {
+            let tokens = &prompt[i * bs..(i + 1) * bs];
+            let h = chain_hash(parent, tokens);
+            match self.by_hash.get_mut(&h) {
+                Some(e) => {
+                    debug_assert!(e.tokens == tokens, "prefix chain hash collision");
+                    e.last_use = self.clock;
+                }
+                None => {
+                    let block = kv.table(slot)[i];
+                    kv.retain_block(block);
+                    if let Some(p) = parent {
+                        if let Some(pe) = self.by_hash.get_mut(&p) {
+                            pe.children += 1;
+                        }
+                    }
+                    self.by_hash.insert(
+                        h,
+                        Entry {
+                            block,
+                            parent,
+                            children: 0,
+                            tokens: tokens.to_vec(),
+                            last_use: self.clock,
+                        },
+                    );
+                }
+            }
+            parent = Some(h);
+        }
+    }
+
+    /// Evict the least-recently-used idle leaf (no children, no lane
+    /// mapping its block), returning its block to the free pool. Ties
+    /// break on block index, so eviction is deterministic. Returns
+    /// `false` when every entry is pinned (live lanes or interior
+    /// chain links).
+    pub fn evict_one(&mut self, kv: &mut KvCache) -> bool {
+        let victim = self
+            .by_hash
+            .iter()
+            .filter(|(_, e)| e.children == 0 && kv.ref_count(e.block) == 0)
+            .min_by_key(|(_, e)| (e.last_use, e.block))
+            .map(|(h, _)| *h);
+        let Some(h) = victim else {
+            return false;
+        };
+        let e = self.by_hash.remove(&h).expect("victim vanished");
+        if let Some(p) = e.parent {
+            if let Some(pe) = self.by_hash.get_mut(&p) {
+                pe.children -= 1;
+            }
+        }
+        kv.free_retained_block(e.block);
+        true
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::corpus::generate_tokens;
+
+    fn cache(batch: usize, n_blocks: usize) -> KvCache {
+        KvCache::new_f32_paged(1, batch, 16, 2, 4, n_blocks)
+    }
+
+    fn kv_rows(t: usize, seed: u64) -> Vec<f32> {
+        use crate::corpus::XorShift64Star;
+        let mut r = XorShift64Star::new(seed);
+        (0..t * 2).map(|_| r.next_normal() as f32).collect()
+    }
+
+    /// Prefill a lane with `prompt.len()` rows and register its blocks.
+    fn admit_and_register(
+        pc: &mut PrefixCacheManager,
+        kv: &mut KvCache,
+        prompt: &[i32],
+        seed: u64,
+    ) -> usize {
+        let slot = kv.acquire_slot().expect("lane");
+        let cached = pc.attach(prompt, slot, kv);
+        let t = prompt.len();
+        let rows = kv_rows(t - cached, seed);
+        kv.ingest_prefill_at(slot, 0, cached, &rows, &rows, t - cached);
+        pc.register(prompt, slot, kv);
+        slot
+    }
+
+    #[test]
+    fn cold_miss_then_hit_skips_full_blocks() {
+        let mut kv = cache(2, 8);
+        let mut pc = PrefixCacheManager::new(4);
+        let prompt = generate_tokens(10, 7); // 2 full blocks + tail
+        let s = admit_and_register(&mut pc, &mut kv, &prompt, 1);
+        assert_eq!(pc.len(), 2);
+        kv.release_slot(s);
+        assert_eq!(kv.retained_count(), 2);
+        // same prompt again: both full blocks hit
+        let s2 = kv.acquire_slot().unwrap();
+        let cached = pc.attach(&prompt, s2, &mut kv);
+        assert_eq!(cached, 8);
+        assert_eq!(kv.len(s2), 8);
+    }
+
+    #[test]
+    fn hit_caps_below_full_prompt() {
+        // an exact-multiple prompt still leaves one token to prefill
+        let mut kv = cache(2, 8);
+        let mut pc = PrefixCacheManager::new(4);
+        let prompt = generate_tokens(8, 9);
+        let s = admit_and_register(&mut pc, &mut kv, &prompt, 2);
+        kv.release_slot(s);
+        let s2 = kv.acquire_slot().unwrap();
+        let cached = pc.attach(&prompt, s2, &mut kv);
+        assert_eq!(cached, 4, "cap at prompt_len - 1 leaves the last block cold");
+    }
+
+    #[test]
+    fn divergent_prompt_shares_only_common_prefix() {
+        let mut kv = cache(2, 8);
+        let mut pc = PrefixCacheManager::new(4);
+        let a = generate_tokens(10, 11);
+        let mut b = a.clone();
+        b[6] = b[6].wrapping_add(1); // diverge inside block 1
+        let s = admit_and_register(&mut pc, &mut kv, &a, 3);
+        kv.release_slot(s);
+        let s2 = kv.acquire_slot().unwrap();
+        let cached = pc.attach(&b, s2, &mut kv);
+        assert_eq!(cached, 4, "only block 0 is shared");
+    }
+
+    #[test]
+    fn attached_rows_match_the_registered_lanes_rows() {
+        let mut kv = cache(2, 8);
+        let mut pc = PrefixCacheManager::new(4);
+        let prompt = generate_tokens(10, 13);
+        let s = admit_and_register(&mut pc, &mut kv, &prompt, 4);
+        let original = kv.decode_k(s, 0);
+        kv.release_slot(s);
+        let s2 = kv.acquire_slot().unwrap();
+        let cached = pc.attach(&prompt, s2, &mut kv);
+        assert_eq!(&kv.decode_k(s2, 0), &original[..cached * 2]);
+    }
+
+    #[test]
+    fn evicts_lru_leaf_child_before_parent() {
+        let mut kv = cache(2, 8);
+        let mut pc = PrefixCacheManager::new(4);
+        let prompt = generate_tokens(10, 17); // chain of 2 entries
+        let s = admit_and_register(&mut pc, &mut kv, &prompt, 5);
+        kv.release_slot(s);
+        assert_eq!(pc.len(), 2);
+        // first eviction must take the leaf (block 1 of the chain)
+        assert!(pc.evict_one(&mut kv));
+        assert_eq!(pc.len(), 1);
+        assert_eq!(kv.retained_count(), 1);
+        let s2 = kv.acquire_slot().unwrap();
+        assert_eq!(pc.attach(&prompt, s2, &mut kv), 4, "parent still serves hits");
+        kv.release_slot(s2);
+        assert!(pc.evict_one(&mut kv));
+        assert!(pc.is_empty());
+        assert_eq!(kv.retained_count(), 0);
+        assert_eq!(kv.free_block_count(), 8, "all blocks back in the pool");
+        assert!(!pc.evict_one(&mut kv), "nothing left to evict");
+    }
+
+    #[test]
+    fn live_blocks_never_evict() {
+        let mut kv = cache(2, 8);
+        let mut pc = PrefixCacheManager::new(4);
+        let prompt = generate_tokens(6, 19); // 1 full block
+        let _s = admit_and_register(&mut pc, &mut kv, &prompt, 6);
+        // the registering lane still maps the block (refcount 1)
+        assert!(!pc.evict_one(&mut kv));
+        assert_eq!(pc.len(), 1);
+    }
+
+    #[test]
+    fn lru_order_prefers_older_chains() {
+        let mut kv = cache(3, 12);
+        let mut pc = PrefixCacheManager::new(4);
+        let a = generate_tokens(6, 23);
+        let b = generate_tokens(6, 29);
+        let sa = admit_and_register(&mut pc, &mut kv, &a, 7);
+        kv.release_slot(sa);
+        let sb = admit_and_register(&mut pc, &mut kv, &b, 8);
+        kv.release_slot(sb);
+        // touch a: b becomes the LRU victim
+        let s = kv.acquire_slot().unwrap();
+        assert_eq!(pc.attach(&a, s, &mut kv), 4);
+        kv.release_slot(s);
+        assert!(pc.evict_one(&mut kv));
+        let s2 = kv.acquire_slot().unwrap();
+        assert_eq!(pc.attach(&a, s2, &mut kv), 4, "a survives");
+        kv.release_slot(s2);
+        let s3 = kv.acquire_slot().unwrap();
+        assert_eq!(pc.attach(&b, s3, &mut kv), 0, "b was evicted");
+    }
+}

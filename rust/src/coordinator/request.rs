@@ -11,6 +11,11 @@ pub type RequestId = u64;
 /// remains sheddable. `Batch` traffic is throughput work: it parks in
 /// the low queue tier (drained only when no interactive request waits)
 /// and is shed *first* when the predictive gate sees a breach coming.
+/// Under the paged KV cache, priority also decides *preemption*: an
+/// interactive arrival finding no free lane or KV blocks unmaps the
+/// youngest batch slot's block table (the victim parks with its
+/// generated tokens and resumes via prefix-cached re-prefill, its
+/// stream continuing loss/dup-free under the same `seq` numbering).
 /// This replaces the PR 4 behavior where the low tier was derived
 /// purely from breach timing — with one legacy exception: under
 /// `AdmissionPolicy::Priority`, a tripped window still demotes *every*
@@ -103,7 +108,10 @@ pub struct Response {
 /// *emitting worker's* stream — after a failover re-prefills the
 /// delivered prefix on a new shard, the dispatcher rebases `seq` by the
 /// handoff offset and dedupes by global position, which is what makes
-/// delivery exactly-once across a migration. `Shed` is the other
+/// delivery exactly-once across a migration. Preemption needs no such
+/// rebase: a preempted request resumes on the *same* worker with its
+/// generated tokens intact, so `seq` simply continues where it stopped
+/// — already-served positions are never re-emitted. `Shed` is the other
 /// terminal event: the dispatcher's admission gate refused the request
 /// — a shed request emits exactly one `Shed` and never a `Token` or
 /// `Done`.

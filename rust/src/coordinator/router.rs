@@ -5,11 +5,20 @@
 //! one 100-token generation is busier than one holding three 4-token
 //! requests, and the continuous-batching dispatcher routes on exactly
 //! this signal (`RouteDecision`).
+//!
+//! With a paged KV cache the router additionally tracks in-flight **KV
+//! blocks** per shard ([`Router::set_block_budget`] /
+//! [`Router::block_backlog`]): each charge prices
+//! `ceil((prompt + decode budget) / block_size)` blocks, the same unit
+//! the shard's allocator hands out, so the predictive admission gate can
+//! compare a candidate's block demand against the shard pool instead of
+//! relying on a hard slot-count cap.
 
 use std::collections::BTreeMap;
 
 use crate::corpus::BOS;
 
+use super::cost::CostEstimator;
 use super::request::{Request, RequestId};
 
 /// Routing decision for one request.
@@ -47,6 +56,9 @@ struct Charge {
     shard: usize,
     prefill: usize,
     decode: usize,
+    /// KV blocks the full residency occupies (0 when block accounting
+    /// is disabled)
+    blocks: usize,
 }
 
 /// The router tracks in-flight token load per shard and a session table.
@@ -61,6 +73,10 @@ pub struct Router {
     prefill_load: Vec<usize>,
     /// in-flight decode-budget tokens per shard
     decode_load: Vec<usize>,
+    /// KV block size the shards allocate at (0 = block accounting off)
+    block_size: usize,
+    /// in-flight KV blocks per shard at full residency
+    block_load: Vec<usize>,
     /// request -> charge; sessions stay on their shard for KV affinity
     sessions: BTreeMap<RequestId, Charge>,
     /// shards currently in the routing set. Killing a shard
@@ -91,6 +107,8 @@ impl Router {
             load: vec![0; n_shards],
             prefill_load: vec![0; n_shards],
             decode_load: vec![0; n_shards],
+            block_size: 0,
+            block_load: vec![0; n_shards],
             sessions: BTreeMap::new(),
             alive: vec![true; n_shards],
             probing: vec![false; n_shards],
@@ -172,13 +190,16 @@ impl Router {
     }
 
     fn charge(&mut self, shard: usize, req: &Request) {
+        let blocks =
+            CostEstimator::blocks_for(req.prompt.len(), req.max_new_tokens, self.block_size);
         self.load[shard] += request_cost(req);
         self.prefill_load[shard] += req.prompt.len();
         self.decode_load[shard] += req.max_new_tokens;
+        self.block_load[shard] += blocks;
         self.admitted[shard] += 1;
         self.sessions.insert(
             req.id,
-            Charge { shard, prefill: req.prompt.len(), decode: req.max_new_tokens },
+            Charge { shard, prefill: req.prompt.len(), decode: req.max_new_tokens, blocks },
         );
     }
 
@@ -249,6 +270,7 @@ impl Router {
             self.load[c.shard] = self.load[c.shard].saturating_sub(c.prefill + c.decode);
             self.prefill_load[c.shard] = self.prefill_load[c.shard].saturating_sub(c.prefill);
             self.decode_load[c.shard] = self.decode_load[c.shard].saturating_sub(c.decode);
+            self.block_load[c.shard] = self.block_load[c.shard].saturating_sub(c.blocks);
         }
     }
 
@@ -269,11 +291,27 @@ impl Router {
         &self.load
     }
 
+    /// Enable KV-block accounting: subsequent charges also price
+    /// `ceil((prompt + decode budget) / block_size)` blocks per request.
+    /// `block_size == 0` disables it (the pre-paged behavior). Call
+    /// before admitting — existing charges are not re-priced.
+    pub fn set_block_budget(&mut self, block_size: usize) {
+        self.block_size = block_size;
+    }
+
     /// One shard's in-flight token backlog, split into (prefill, decode)
     /// tokens — the quantity the predictive admission gate prices with
     /// the calibrated per-token costs.
     pub fn backlog(&self, shard: usize) -> (usize, usize) {
         (self.prefill_load[shard], self.decode_load[shard])
+    }
+
+    /// One shard's in-flight KV-block demand at full residency — what
+    /// the predictive gate compares against the shard's block pool to
+    /// price block-pressure drain time. Zero when block accounting is
+    /// disabled.
+    pub fn block_backlog(&self, shard: usize) -> usize {
+        self.block_load[shard]
     }
 
     /// Total in-flight (prefill, decode) backlog across all shards
@@ -501,6 +539,49 @@ mod tests {
         r.mark_dead(1);
         assert!(r.route_migrated(&Request::new(10, vec![5; 4], 1)).is_none());
         assert_eq!(r.alive_count(), 0);
+    }
+
+    #[test]
+    fn block_backlog_charges_and_refunds_whole_blocks() {
+        let mut r = Router::new(2, 64);
+        assert_eq!(r.block_backlog(0), 0, "accounting off by default");
+        r.set_block_budget(16);
+        // prompt 9 (+BOS = 10) + decode 4 = 14 tokens -> 1 block
+        let (_, d1) = r.admit(req(1, 9));
+        assert_eq!(d1.shard, 0);
+        assert_eq!(r.block_backlog(0), 1);
+        // prompt 29 (+BOS = 30) + decode 4 = 34 tokens -> 3 blocks
+        let (_, d2) = r.admit(req(2, 29));
+        assert_eq!(d2.shard, 1);
+        assert_eq!(r.block_backlog(1), 3);
+        r.complete(1);
+        assert_eq!(r.block_backlog(0), 0, "completion refunds the block charge");
+        r.release(2);
+        assert_eq!(r.block_backlog(1), 0, "shed release refunds too");
+        r.complete(2);
+        assert_eq!(r.block_backlog(1), 0, "idempotent");
+    }
+
+    #[test]
+    fn block_charges_survive_migration_and_budget_off() {
+        let mut r = Router::new(2, 16);
+        r.set_block_budget(8);
+        r.mark_dead(0);
+        let m = Request::new(9, vec![5; 20], 3);
+        r.route_migrated(&m).unwrap();
+        assert_eq!(r.block_backlog(1), 23usize.div_ceil(8));
+        r.complete(9);
+        assert_eq!(r.block_backlog(1), 0);
+        // turning the budget off mid-stream leaves old charges refundable
+        r.revive(0);
+        r.promote(0);
+        let (_, d) = r.admit(req(1, 7));
+        assert!(r.block_backlog(d.shard) > 0);
+        r.set_block_budget(0);
+        let (_, d2) = r.admit(req(2, 7));
+        assert_eq!(r.block_backlog(d2.shard), 0, "new charges price zero blocks");
+        r.complete(1);
+        assert_eq!(r.block_backlog(d.shard), 0, "old charge still refunds its blocks");
     }
 
     #[test]

@@ -97,6 +97,7 @@ use crate::util::pool;
 use super::batcher::{AdmissionPolicy, Batch, BatchPolicy, Batcher, SchedulerMode};
 use super::cost::CostEstimator;
 use super::faults::{FaultSpec, ShardHealth};
+use super::kv_cache::DEFAULT_BLOCK_SIZE;
 use super::request::{Priority, Request, RequestId, Response, ServeEvent};
 use super::router::Router;
 use super::worker::{Backend, Worker, WorkerStats};
@@ -169,6 +170,16 @@ pub struct ServerConfig {
     /// is whole and pressure clears. `None` (default) = fixed-width
     /// serving, bit-identical to the pre-ladder behavior.
     pub degrade_bits: Option<u32>,
+    /// physical KV blocks per shard pool (`None` = fully provisioned:
+    /// every lane can hold a full context). Under-provisioned pools
+    /// make admission a block-budget question: arrivals bounce back to
+    /// the queue, interactive arrivals preempt batch residencies, and
+    /// the predictive gate prices the block-pressure drain time.
+    pub kv_blocks: Option<usize>,
+    /// shared-prefix block reuse across requests (on by default):
+    /// arrivals whose prompt prefix matches a retained chain skip
+    /// straight to the first uncached block.
+    pub prefix_cache: bool,
 }
 
 impl ServerConfig {
@@ -185,6 +196,8 @@ impl ServerConfig {
             fault: FaultSpec::default(),
             standby: 0,
             degrade_bits: None,
+            kv_blocks: None,
+            prefix_cache: true,
         }
     }
 }
@@ -234,6 +247,12 @@ struct SloGate {
     base_estimator: Option<CostEstimator>,
     /// server's prefill chunk (serialization term of the prediction)
     prefill_chunk: usize,
+    /// KV block size the shards allocate at (0 disables the block-
+    /// pressure term)
+    block_size: usize,
+    /// physical blocks in one shard's pool — demand past this drains at
+    /// the decode rate before the candidate can hold its residency
+    pool_blocks: usize,
     /// trailing policies only: samples older than this are expired
     /// before every read (the stale-window fix)
     stale_after: Option<Duration>,
@@ -246,6 +265,8 @@ impl SloGate {
         global: bool,
         estimator: Option<CostEstimator>,
         prefill_chunk: usize,
+        block_size: usize,
+        pool_blocks: usize,
     ) -> Self {
         let n = if global { 1 } else { shards };
         let stale_after = match policy {
@@ -261,6 +282,8 @@ impl SloGate {
             estimator,
             base_estimator: estimator,
             prefill_chunk,
+            block_size,
+            pool_blocks,
             stale_after,
         }
     }
@@ -303,7 +326,12 @@ impl SloGate {
     /// batch-priority candidate whose predicted completion would breach
     /// the target. Interactive candidates are never shed — they ride
     /// the normal tier ahead of parked batch work, which absorbs the
-    /// shed instead.
+    /// shed instead. `block_demand` is the shard's in-flight KV-block
+    /// demand *including* the candidate's freshly-routed charge: the
+    /// slice past the shard's pool can only materialize as residencies
+    /// drain, so the gate adds that drain time (priced at the decode
+    /// rate) — block pressure becomes predicted latency instead of an
+    /// invisible admission stall.
     ///
     /// The queue tier comes from the request's first-class priority:
     /// batch-priority work parks in the low tier even with a healthy
@@ -316,6 +344,7 @@ impl SloGate {
         established: bool,
         req: &Request,
         backlog: (usize, usize),
+        block_demand: usize,
     ) -> Gate {
         let i = self.idx(shard);
         if let Some(age) = self.stale_after {
@@ -351,12 +380,16 @@ impl SloGate {
                 let Some(est) = self.estimator.as_ref() else {
                     return tier;
                 };
-                let predicted_ms = est.predict_ms(
+                let mut predicted_ms = est.predict_ms(
                     backlog,
                     req.prompt.len(),
                     req.max_new_tokens,
                     self.prefill_chunk,
                 );
+                if self.block_size > 0 {
+                    let deficit = block_demand.saturating_sub(self.pool_blocks);
+                    predicted_ms += est.block_drain_s(deficit, self.block_size) * 1e3;
+                }
                 if req.priority == Priority::Batch && predicted_ms > SLO_TRIP_FRACTION * target_ms {
                     Gate::Shed
                 } else {
@@ -452,6 +485,15 @@ pub struct ServerReport {
     /// to drain (1.0 = exactly fair; no admissions after promotion
     /// reports 1.0)
     pub rejoin_admit_share: Vec<f64>,
+    /// prompt tokens whose prefill a prefix-cache hit skipped, summed
+    /// over all worker incarnations
+    pub prefix_hit_tokens: u64,
+    /// batch-priority residencies unmapped (table unmap + park) to
+    /// admit an interactive arrival within one step
+    pub preemptions: u64,
+    /// tokens re-prefilled on preemption resume (the slice the prefix
+    /// cache no longer held) — the bounded cost of cheap preemption
+    pub resume_reprefill_tokens: u64,
 }
 
 impl ServerReport {
@@ -1067,7 +1109,13 @@ impl Server {
             if let Some(plan) = &respawn_cfg.fault.plan {
                 m = m.with_faults(plan.shard_faults_incarnation(shard, incarnation));
             }
-            Worker::new_chunked(shard, Backend::Sim(m), respawn_cfg.prefill_chunk)
+            Worker::new_chunked_paged(
+                shard,
+                Backend::Sim(m),
+                respawn_cfg.prefill_chunk,
+                respawn_cfg.kv_blocks,
+                respawn_cfg.prefix_cache,
+            )
         }));
         Ok(server)
     }
@@ -1077,7 +1125,10 @@ impl Server {
             bail!("need one backend per shard (got {})", backends.len());
         }
         let ctx = backends[0].cfg().ctx;
-        let router = Router::new(cfg.shards, ctx - 8);
+        let mut router = Router::new(cfg.shards, ctx - 8);
+        // admission is a block-budget question now: charge routing in
+        // the same block unit the shard allocators hand out
+        router.set_block_budget(DEFAULT_BLOCK_SIZE.min(ctx).max(1));
         let batcher = Batcher::new(cfg.policy);
         // pool-aware batch shaping: size the shared kernel pool from the
         // total slot count so per-shard fan-outs don't convoy
@@ -1092,7 +1143,13 @@ impl Server {
             let (tx, rx): (Sender<ToWorker>, Receiver<ToWorker>) = channel();
             senders.push(Some(tx));
             let ev_tx = ev_tx.clone();
-            let worker = Worker::new_chunked(shard, backend, cfg.prefill_chunk);
+            let worker = Worker::new_chunked_paged(
+                shard,
+                backend,
+                cfg.prefill_chunk,
+                cfg.kv_blocks,
+                cfg.prefix_cache,
+            );
             handles.push(std::thread::spawn(move || worker_loop(worker, rx, ev_tx)));
         }
         Ok(Server {
@@ -1171,12 +1228,17 @@ impl Server {
         let mut flight = Flight::new(self.cfg.shards, self.ctx);
         let mut shard_tokens = vec![0u64; self.cfg.shards];
         let mut shard_rr = 0usize;
+        let block_size = DEFAULT_BLOCK_SIZE.min(self.ctx).max(1);
+        let pool_blocks =
+            self.cfg.kv_blocks.unwrap_or(self.cfg.batch * self.ctx.div_ceil(block_size));
         let mut gate = SloGate::new(
             self.cfg.admission,
             self.cfg.shards,
             self.cfg.mode == SchedulerMode::Static,
             self.estimator.take(),
             self.cfg.prefill_chunk,
+            block_size,
+            pool_blocks,
         );
         let mut deprioritized = 0u64;
 
@@ -1204,7 +1266,7 @@ impl Server {
                 // its probe is system-wide (matching the gate's global
                 // window) and its backlog is the per-shard share of the
                 // global total.
-                let (established, backlog) = match self.cfg.mode {
+                let (established, backlog, block_demand) = match self.cfg.mode {
                     SchedulerMode::Continuous => {
                         let (p, d) = self.router.backlog(decision.shard);
                         (
@@ -1213,6 +1275,10 @@ impl Server {
                                 p.saturating_sub(req.prompt.len()),
                                 d.saturating_sub(req.max_new_tokens),
                             ),
+                            // includes the candidate's freshly-routed
+                            // block charge — demand past the pool is
+                            // what must drain first
+                            self.router.block_backlog(decision.shard),
                         )
                     }
                     SchedulerMode::Static => {
@@ -1223,10 +1289,15 @@ impl Server {
                                 p.saturating_sub(req.prompt.len()) / self.cfg.shards,
                                 d.saturating_sub(req.max_new_tokens) / self.cfg.shards,
                             ),
+                            // static batches run to completion on one
+                            // shard; block pressure resolves inside the
+                            // worker, so the gate's block term is inert
+                            0,
                         )
                     }
                 };
-                let verdict = gate.decide(decision.shard, established, &req, backlog);
+                let verdict =
+                    gate.decide(decision.shard, established, &req, backlog, block_demand);
                 if let Gate::Shed = verdict {
                     // terminal: refund the router charge, record exactly
                     // one Shed event, never dispatch
@@ -1408,6 +1479,7 @@ impl Server {
         }
         let mut breakdown = Breakdown::new();
         let (mut steps, mut tokens, mut joins, mut retires) = (0u64, 0u64, 0u64, 0u64);
+        let (mut prefix_hits, mut preemptions, mut resume_reprefill) = (0u64, 0u64, 0u64);
         let mut peak_active = Vec::with_capacity(self.handles.len());
         for h in self.handles {
             let st = h.join().map_err(|_| anyhow!("worker panicked"))?;
@@ -1416,6 +1488,9 @@ impl Server {
             tokens += st.tokens_out;
             joins += st.joins;
             retires += st.retires;
+            prefix_hits += st.prefix_hit_tokens;
+            preemptions += st.preemptions;
+            resume_reprefill += st.resume_reprefill_tokens;
             peak_active.push(st.peak_active);
         }
         // comm/sync stages are exercised by the cluster-sim path; on the
@@ -1476,6 +1551,9 @@ impl Server {
             degrade_exits: elastic.degrade_exits,
             rebroadcast_bytes: elastic.rebroadcast_bytes,
             rejoin_admit_share,
+            prefix_hit_tokens: prefix_hits,
+            preemptions,
+            resume_reprefill_tokens: resume_reprefill,
         })
     }
 
@@ -1689,7 +1767,7 @@ fn worker_loop(
                 Err(TryRecvError::Disconnected) => open = false,
             }
         }
-        if queue.pending() == 0 && worker.active() == 0 {
+        if queue.pending() == 0 && !worker.has_work() {
             if !open {
                 break;
             }
@@ -1709,15 +1787,57 @@ fn worker_loop(
             }
             continue;
         }
-        // step boundary: admit joiners into free slots, then one fused
-        // decode step across the in-flight batch
+        // step boundary: admit joiners into free slots — or, with lanes
+        // full, take an interactive head-of-line that can admit by
+        // preempting a batch residency (the one-step interference bound
+        // paged allocation buys) — then one fused decode step across
+        // the in-flight batch
         let free = worker.free_slots();
-        if free > 0 && queue.pending() > 0 {
-            let joiners = queue.take_up_to(free);
-            if !emit(worker.join(joiners), &tx, shard) {
+        let joiners = if free > 0 && queue.pending() > 0 {
+            queue.take_up_to(free)
+        } else if free == 0 && queue.front_interactive() && worker.has_preemptible_batch() {
+            queue.take_up_to(1)
+        } else {
+            Vec::new()
+        };
+        if !joiners.is_empty() {
+            let taken = joiners.len();
+            let (events, bounced) = match worker.join_continuous(joiners) {
+                Ok(x) => x,
+                Err(e) => {
+                    let _ = emit(Err(e), &tx, shard);
+                    break;
+                }
+            };
+            if bounced.len() == taken && !worker.has_work() {
+                // an empty shard that still can't hold the request will
+                // never be able to: the pool is smaller than one
+                // residency — a config error, not transient pressure
+                let _ = emit(
+                    Err(anyhow!(
+                        "request exceeds shard {shard}'s KV block pool — raise kv_blocks"
+                    )),
+                    &tx,
+                    shard,
+                );
+                break;
+            }
+            // block-budget bounces return first-in-line in their tier,
+            // arrival order preserved
+            for r in bounced.into_iter().rev() {
+                if r.priority == Priority::Batch {
+                    queue.push_low_front(r);
+                } else {
+                    queue.push_front(r);
+                }
+            }
+            if !emit(Ok(events), &tx, shard) {
                 break;
             }
         }
+        // re-map preempted requests into whatever capacity remains;
+        // their re-prefill advances inside the next step
+        worker.resume_parked();
         if worker.active() > 0 && !emit(worker.step(), &tx, shard) {
             break;
         }

@@ -1,22 +1,39 @@
 //! Worker shard: a step-driven execution core over one model backend.
 //!
-//! One worker models one GPU of the paper's cluster. It owns a batched KV
-//! cache (fp32 or SimQuant codes depending on the variant) with a slot
-//! free-list, per-layer EMA scale trackers (Alg. 1), and the Eq. 12
-//! breakdown instrumentation.
+//! One worker models one GPU of the paper's cluster. It owns a paged
+//! batched KV cache (fp32 or SimQuant codes depending on the variant)
+//! over a shard-wide block pool, a [`PrefixCacheManager`] mapping
+//! token-prefix chains to retained blocks, per-layer EMA scale trackers
+//! (Alg. 1), and the Eq. 12 breakdown instrumentation.
 //!
 //! The core is two step primitives the scheduler composes:
 //!
-//!   [`Worker::join`] — admit requests into free slots and start their
+//!   [`Worker::join`] — admit requests into free lanes and start their
 //!   prefill: whole-prompt by default, or the first `prefill_chunk`
-//!   tokens when chunking is on. A slot whose prompt is fully ingested
-//!   emits its first token + TTFT; otherwise it parks in
-//!   `Phase::Prefilling { next_pos }` and resumes one chunk per step.
+//!   tokens when chunking is on. Admission first probes the prefix
+//!   cache — a shared-prefix arrival maps the cached blocks and starts
+//!   prefill at the first uncached token — then reserves the lane's
+//!   block budget up front so decode appends never fail mid-flight. A
+//!   slot whose prompt is fully ingested emits its first token + TTFT;
+//!   otherwise it parks in `Phase::Prefilling { next_pos }` and resumes
+//!   one chunk per step. When its prefill completes, the prompt's full
+//!   blocks are published to the prefix cache for the next arrival.
 //!
 //!   [`Worker::step`] — one bounded prefill chunk for any mid-prefill
 //!   slots, then one fused decode step across every *decoding* slot;
-//!   finished slots retire inside the step, release their KV pages back
-//!   to the free list, and emit a `Done` response.
+//!   finished slots retire inside the step, release their KV blocks back
+//!   to the pool (prefix-retained blocks stay), and emit a `Done`
+//!   response.
+//!
+//! Preemption is a table unmap, not a loss: when an interactive arrival
+//! finds no free lane or no free blocks
+//! ([`Worker::join_continuous`]), the youngest batch-priority slot is
+//! unmapped and parked with its generated tokens intact
+//! ([`Worker::resume_parked`] re-maps it when capacity frees, re-
+//! prefilling `prompt ++ generated[..n-1]` — mostly prefix-cache hits —
+//! and decoding onward from the last generated token). The victim loses
+//! at most one step of progress and its stream stays loss/dup-free; the
+//! interactive request admits within the same boundary.
 //!
 //! Static batching is the degenerate composition (join everything, step
 //! until drained — [`Worker::process_batch`]); continuous batching
@@ -38,6 +55,7 @@
 //! model (`runtime::SimModel`) the scheduler tests and the batching
 //! ablation run offline.
 
+use std::collections::VecDeque;
 use std::time::Instant;
 
 use anyhow::{bail, Result};
@@ -49,8 +67,9 @@ use crate::runtime::{i32_bytes, literal_from_raw, Literal, ModelCfg, ModelHandle
 use crate::tensor::{DType, Tensor};
 
 use super::batcher::Batch;
-use super::kv_cache::{KvCache, PrefillPage};
-use super::request::{Request, Response, ServeEvent};
+use super::kv_cache::{KvCache, PrefillPage, DEFAULT_BLOCK_SIZE};
+use super::prefix_cache::PrefixCacheManager;
+use super::request::{Priority, Request, Response, ServeEvent};
 use super::scale_sync::ScaleSync;
 
 /// Model execution backend for one worker shard.
@@ -115,10 +134,16 @@ enum Phase {
     Decoding,
 }
 
-/// One in-flight request occupying a batch slot.
+/// One in-flight request occupying a batch slot (or parked between
+/// preemption and resume).
 struct Slot {
     req: Request,
+    /// current ingest-stream length: the original prompt at admission,
+    /// `prompt ++ generated[..n-1]` after a resume
     prompt_len: usize,
+    /// original admitted prompt length — the prefix-cache registration
+    /// slice and the reported `Response::prompt_len`
+    base_prompt_len: usize,
     phase: Phase,
     generated: Vec<i32>,
     ttft_s: f64,
@@ -126,6 +151,8 @@ struct Slot {
     /// separately from decode cadence
     queued_s: f64,
     first_token_at: Instant,
+    /// admission order — preemption targets the youngest batch slot
+    join_seq: u64,
 }
 
 /// Counters a worker thread hands back at shutdown.
@@ -137,6 +164,12 @@ pub struct WorkerStats {
     pub joins: u64,
     pub retires: u64,
     pub peak_active: usize,
+    /// prompt tokens whose prefill a prefix-cache hit skipped
+    pub prefix_hit_tokens: u64,
+    /// batch slots unmapped to admit an interactive arrival
+    pub preemptions: u64,
+    /// tokens re-prefilled (not served by the prefix cache) on resume
+    pub resume_reprefill_tokens: u64,
 }
 
 pub struct Worker {
@@ -144,6 +177,12 @@ pub struct Worker {
     backend: Backend,
     kv: KvCache,
     slots: Vec<Option<Slot>>,
+    /// preempted slots awaiting re-map, FIFO
+    parked: VecDeque<Slot>,
+    /// prefix cache over the KV block pool
+    prefix: PrefixCacheManager,
+    prefix_enabled: bool,
+    next_join_seq: u64,
     /// max prompt tokens prefilled per step boundary (0 = whole prompt);
     /// pinned to 0 on the PJRT backend, whose compiled prefill graph
     /// ingests full prompts
@@ -159,6 +198,12 @@ pub struct Worker {
     pub retires: u64,
     /// max concurrently in-flight slots observed
     pub peak_active: usize,
+    /// prompt tokens whose prefill a prefix-cache hit skipped
+    pub prefix_hit_tokens: u64,
+    /// batch slots unmapped to admit an interactive arrival
+    pub preemptions: u64,
+    /// tokens re-prefilled (not served by the prefix cache) on resume
+    pub resume_reprefill_tokens: u64,
 }
 
 impl Worker {
@@ -170,13 +215,33 @@ impl Worker {
     /// prompt tokens are ingested per step boundary (0 = whole-prompt
     /// prefill, the pre-chunking behavior). The PJRT backend pins the
     /// chunk to 0 — its compiled prefill graph is whole-prompt.
+    /// Fully provisions the block pool (every lane can hold a full
+    /// context) with the prefix cache on.
     pub fn new_chunked(shard: usize, backend: Backend, prefill_chunk: usize) -> Self {
+        Self::new_chunked_paged(shard, backend, prefill_chunk, None, true)
+    }
+
+    /// Worker over an explicit KV block pool. `kv_blocks` bounds the
+    /// shard's physical blocks (`None` = fully provisioned: `batch *
+    /// ceil(ctx / block_size)`, so lanes never compete); under-
+    /// provisioned pools make admission a block-budget question —
+    /// arrivals bounce or preempt when the pool runs dry.
+    /// `prefix_cache` toggles shared-prefix block reuse.
+    pub fn new_chunked_paged(
+        shard: usize,
+        backend: Backend,
+        prefill_chunk: usize,
+        kv_blocks: Option<usize>,
+        prefix_cache: bool,
+    ) -> Self {
         let c = backend.cfg().clone();
         let b = backend.batch();
+        let bs = DEFAULT_BLOCK_SIZE.min(c.ctx).max(1);
+        let n_blocks = kv_blocks.unwrap_or(b * ((c.ctx + bs - 1) / bs));
         let kv = if backend.variant() == Variant::SimQuant {
-            KvCache::new_simquant(c.n_layers, b, c.ctx, c.d_model)
+            KvCache::new_simquant_bits_paged(c.n_layers, b, c.ctx, c.d_model, 8, bs, n_blocks)
         } else {
-            KvCache::new_f32(c.n_layers, b, c.ctx, c.d_model)
+            KvCache::new_f32_paged(c.n_layers, b, c.ctx, c.d_model, bs, n_blocks)
         };
         let prefill_chunk = match &backend {
             Backend::Pjrt(_) => 0,
@@ -189,6 +254,10 @@ impl Worker {
             backend,
             kv,
             slots,
+            parked: VecDeque::new(),
+            prefix: PrefixCacheManager::new(bs),
+            prefix_enabled: prefix_cache,
+            next_join_seq: 0,
             prefill_chunk,
             scales: ScaleSync::new(c.n_layers, 0.9, 1e-6, 0),
             breakdown: Breakdown::new(),
@@ -197,6 +266,9 @@ impl Worker {
             joins: 0,
             retires: 0,
             peak_active: 0,
+            prefix_hit_tokens: 0,
+            preemptions: 0,
+            resume_reprefill_tokens: 0,
         }
     }
 
@@ -231,6 +303,30 @@ impl Worker {
         self.capacity() - self.kv.free_slots()
     }
 
+    /// Whether the worker still owes progress: in-flight slots or
+    /// preempted requests awaiting resume.
+    pub fn has_work(&self) -> bool {
+        self.active() > 0 || !self.parked.is_empty()
+    }
+
+    /// Preempted requests awaiting a resume.
+    pub fn parked_len(&self) -> usize {
+        self.parked.len()
+    }
+
+    /// Whether any in-flight slot is batch-priority (a preemption
+    /// candidate for an interactive arrival).
+    pub fn has_preemptible_batch(&self) -> bool {
+        self.slots
+            .iter()
+            .any(|s| matches!(s, Some(s) if s.req.priority == Priority::Batch))
+    }
+
+    /// The shard's KV cache (tests + observability).
+    pub fn kv(&self) -> &KvCache {
+        &self.kv
+    }
+
     pub fn into_stats(self) -> WorkerStats {
         WorkerStats {
             breakdown: self.breakdown,
@@ -239,6 +335,9 @@ impl Worker {
             joins: self.joins,
             retires: self.retires,
             peak_active: self.peak_active,
+            prefix_hit_tokens: self.prefix_hit_tokens,
+            preemptions: self.preemptions,
+            resume_reprefill_tokens: self.resume_reprefill_tokens,
         }
     }
 
@@ -246,12 +345,13 @@ impl Worker {
     /// prefill (whole prompt when `prefill_chunk == 0`, else the first
     /// chunk). Joiners whose whole prompt fits the first ingest emit
     /// their first token + TTFT immediately; requests whose budget is a
-    /// single token retire immediately.
+    /// single token retire immediately. This is the strict (static-path)
+    /// entry: it never preempts, and errors when lanes or blocks run
+    /// out — continuous serving uses [`Worker::join_continuous`].
     pub fn join(&mut self, reqs: Vec<Request>) -> Result<Vec<ServeEvent>> {
         if reqs.is_empty() {
             return Ok(Vec::new());
         }
-        let ctx = self.backend.cfg().ctx;
         let b = self.backend.batch();
         if reqs.len() > self.kv.free_slots() {
             bail!(
@@ -260,29 +360,171 @@ impl Worker {
                 self.kv.free_slots()
             );
         }
-
-        // place each joiner in the lowest free slot (FIFO -> ascending)
-        let n = reqs.len();
         for req in reqs {
-            let slot = self.kv.acquire_slot().expect("free capacity checked above");
-            let plen = req.prompt.len().min(ctx - 1);
-            // admission into a slot ends the queueing phase: everything
-            // before this instant is park/batch-formation delay, not
-            // serving cadence
-            let queued_s = req.arrival.elapsed().as_secs_f64();
-            self.slots[slot] = Some(Slot {
-                req,
-                prompt_len: plen,
-                phase: Phase::Prefilling { next_pos: 0 },
-                generated: Vec::new(),
-                ttft_s: 0.0,
-                queued_s,
-                first_token_at: Instant::now(),
-            });
+            let id = req.id;
+            if self.admit_one(req, false).is_err() {
+                bail!("KV block pool exhausted admitting request {id}");
+            }
         }
-        self.joins += n as u64;
-        self.peak_active = self.peak_active.max(self.active());
         self.advance_prefill()
+    }
+
+    /// Continuous-batching admission: admit what fits, returning what
+    /// doesn't to the caller's queue. Interactive arrivals may preempt
+    /// the youngest batch-priority slot when lanes or blocks run dry —
+    /// the one-step interference bound paged allocation buys.
+    pub fn join_continuous(
+        &mut self,
+        reqs: Vec<Request>,
+    ) -> Result<(Vec<ServeEvent>, Vec<Request>)> {
+        let mut bounced = Vec::new();
+        let mut admitted = false;
+        for req in reqs {
+            match self.admit_one(req, true) {
+                Ok(()) => admitted = true,
+                Err(req) => bounced.push(req),
+            }
+        }
+        let events = if admitted { self.advance_prefill()? } else { Vec::new() };
+        Ok((events, bounced))
+    }
+
+    /// Admit one request: acquire a lane (preempting the youngest batch
+    /// slot for an interactive arrival when allowed), probe the prefix
+    /// cache so a shared-prefix prompt skips to its first uncached
+    /// block, then reserve the lane's whole block budget up front —
+    /// evicting idle cached prefixes, then preempting (when allowed) if
+    /// the pool is still dry. Returns the request on bounce.
+    fn admit_one(&mut self, req: Request, allow_preempt: bool) -> Result<(), Request> {
+        let ctx = self.backend.cfg().ctx;
+        let preempting = allow_preempt && req.priority == Priority::Interactive;
+        let lane = loop {
+            if let Some(lane) = self.kv.acquire_slot() {
+                break lane;
+            }
+            if preempting && self.preempt_youngest_batch() {
+                continue;
+            }
+            return Err(req);
+        };
+        let plen = req.prompt.len().min(ctx - 1);
+        let cached = if self.prefix_enabled {
+            self.prefix.attach(&req.prompt[..plen], lane, &mut self.kv)
+        } else {
+            0
+        };
+        // reserve the full residency now so decode appends cannot hit
+        // an exhausted pool mid-flight
+        let target = (plen + req.max_new_tokens).min(ctx);
+        loop {
+            if self.kv.try_reserve(lane, target) {
+                break;
+            }
+            if self.prefix.evict_one(&mut self.kv) {
+                continue;
+            }
+            if preempting && self.preempt_youngest_batch() {
+                continue;
+            }
+            self.kv.release_slot(lane);
+            return Err(req);
+        }
+        self.prefix_hit_tokens += cached as u64;
+        // admission into a slot ends the queueing phase: everything
+        // before this instant is park/batch-formation delay, not
+        // serving cadence
+        let queued_s = req.arrival.elapsed().as_secs_f64();
+        let join_seq = self.next_join_seq;
+        self.next_join_seq += 1;
+        self.slots[lane] = Some(Slot {
+            req,
+            prompt_len: plen,
+            base_prompt_len: plen,
+            phase: Phase::Prefilling { next_pos: cached },
+            generated: Vec::new(),
+            ttft_s: 0.0,
+            queued_s,
+            first_token_at: Instant::now(),
+            join_seq,
+        });
+        self.joins += 1;
+        self.peak_active = self.peak_active.max(self.active());
+        Ok(())
+    }
+
+    /// Unmap the youngest batch-priority slot: its block table releases
+    /// back to the pool (prefix-retained blocks stay warm) and the
+    /// request parks with its generated tokens intact for
+    /// [`Worker::resume_parked`]. O(table) bookkeeping — no KV copies.
+    fn preempt_youngest_batch(&mut self) -> bool {
+        let victim = self
+            .slots
+            .iter()
+            .enumerate()
+            .filter_map(|(i, s)| s.as_ref().map(|s| (i, s.join_seq, s.req.priority)))
+            .filter(|(_, _, p)| *p == Priority::Batch)
+            .max_by_key(|(_, seq, _)| *seq)
+            .map(|(i, _, _)| i);
+        let Some(lane) = victim else {
+            return false;
+        };
+        let slot = self.slots[lane].take().expect("victim slot is occupied");
+        self.kv.release_slot(lane);
+        self.parked.push_back(slot);
+        self.preemptions += 1;
+        true
+    }
+
+    /// Re-map preempted requests (FIFO) into free lanes: rebuild the
+    /// ingest stream `prompt ++ generated[..n-1]` (the last generated
+    /// token's KV row is produced by its own decode step), attach
+    /// whatever the prefix cache still holds, and re-enter `Prefilling`
+    /// at the first uncached position. The resumed slot then decodes
+    /// onward from its last generated token — the stream continues
+    /// loss/dup-free under its original seq numbering. Returns how many
+    /// requests resumed; their prefill advances at the next step
+    /// boundary. Never preempts (resume must not thrash a live slot).
+    pub fn resume_parked(&mut self) -> usize {
+        let ctx = self.backend.cfg().ctx;
+        let mut resumed = 0;
+        while !self.parked.is_empty() {
+            let Some(lane) = self.kv.acquire_slot() else { break };
+            let mut slot = self.parked.pop_front().expect("checked non-empty");
+            // rebuild the ingest stream from the original prompt — a
+            // slot preempted more than once must not replay twice
+            slot.req.prompt.truncate(slot.base_prompt_len);
+            let replay = slot.generated.len().saturating_sub(1);
+            slot.req.prompt.extend_from_slice(&slot.generated[..replay]);
+            slot.prompt_len = slot.req.prompt.len().min(ctx - 1);
+            let cached = if self.prefix_enabled {
+                self.prefix.attach(&slot.req.prompt[..slot.prompt_len], lane, &mut self.kv)
+            } else {
+                0
+            };
+            let target = (slot.base_prompt_len + slot.req.max_new_tokens).min(ctx);
+            let reserved = loop {
+                if self.kv.try_reserve(lane, target) {
+                    break true;
+                }
+                if self.prefix.evict_one(&mut self.kv) {
+                    continue;
+                }
+                break false;
+            };
+            if !reserved {
+                self.kv.release_slot(lane);
+                self.parked.push_front(slot);
+                break;
+            }
+            self.resume_reprefill_tokens += (slot.prompt_len - cached) as u64;
+            slot.phase = Phase::Prefilling { next_pos: cached };
+            self.slots[lane] = Some(slot);
+            resumed += 1;
+        }
+        if resumed > 0 {
+            self.peak_active = self.peak_active.max(self.active());
+        }
+        resumed
     }
 
     /// Run one bounded prefill chunk over every mid-prefill slot: one
@@ -365,6 +607,22 @@ impl Worker {
                 let s = self.slots[slot].as_mut().expect("advancing slot is occupied");
                 if start + len < s.prompt_len {
                     s.phase = Phase::Prefilling { next_pos: start + len };
+                    continue;
+                }
+                // prompt fully ingested: publish its full blocks so the
+                // next shared-prefix arrival skips them
+                if self.prefix_enabled {
+                    self.prefix.register(
+                        &s.req.prompt[..s.base_prompt_len],
+                        slot,
+                        &mut self.kv,
+                    );
+                }
+                if !s.generated.is_empty() {
+                    // resumed after preemption: its first token (and any
+                    // later ones) were already served — re-enter decode
+                    // from the last generated token, no re-emission
+                    s.phase = Phase::Decoding;
                     continue;
                 }
                 let plen = s.prompt_len;
@@ -530,7 +788,7 @@ impl Worker {
         Response {
             id: s.req.id,
             tokens: s.generated,
-            prompt_len: s.prompt_len,
+            prompt_len: s.base_prompt_len,
             priority: s.req.priority,
             latency_s: s.req.arrival.elapsed().as_secs_f64(),
             ttft_s: s.ttft_s,
@@ -752,6 +1010,151 @@ mod tests {
         };
         assert_eq!(of(1), vec![0, 1, 2, 3]);
         assert_eq!(of(2), vec![0, 1]);
+    }
+
+    fn paged_worker(
+        variant: Variant,
+        batch: usize,
+        chunk: usize,
+        kv_blocks: Option<usize>,
+        prefix: bool,
+    ) -> Worker {
+        Worker::new_chunked_paged(
+            0,
+            Backend::Sim(SimModel::tiny(variant, batch, SimCost::fast())),
+            chunk,
+            kv_blocks,
+            prefix,
+        )
+    }
+
+    #[test]
+    fn prefix_hit_skips_prefill_and_preserves_stream() {
+        // ids 1 and 8 build identical prompts (2 + id % 7 == 3), so the
+        // second arrival hits the chain the first one registered
+        let mut w = sim_worker(Variant::Fp, 4);
+        let first = w
+            .process_batch(Batch { requests: vec![req(1, 24, 4)], formed_at: Instant::now() })
+            .unwrap();
+        assert_eq!(w.prefix_hit_tokens, 0, "cold arrival cannot hit");
+        assert!(w.kv().retained_count() > 0, "full prompt blocks were published");
+        let second = w
+            .process_batch(Batch { requests: vec![req(8, 24, 4)], formed_at: Instant::now() })
+            .unwrap();
+        // one full 16-token block is cached; the 24-token prompt's tail
+        // (and at least the last token) still prefills
+        assert_eq!(w.prefix_hit_tokens, 16);
+        assert_eq!(first[0].tokens, second[0].tokens, "prefix hit changed the stream");
+    }
+
+    #[test]
+    fn preempt_resume_continues_stream_loss_dup_free() {
+        let solo = {
+            let mut w = sim_worker(Variant::Fp, 1);
+            let rs = w
+                .process_batch(Batch {
+                    requests: vec![req(5, 20, 6)],
+                    formed_at: Instant::now(),
+                })
+                .unwrap();
+            rs[0].tokens.clone()
+        };
+        let mut w = sim_worker(Variant::Fp, 1);
+        let mut events = w
+            .join(vec![req(5, 20, 6).with_priority(Priority::Batch)])
+            .unwrap();
+        events.extend(w.step().unwrap());
+        // lane and pool are held by the batch slot: the interactive
+        // arrival preempts it and admits within the same boundary
+        let (evs, bounced) = w.join_continuous(vec![req(9, 4, 2)]).unwrap();
+        assert!(bounced.is_empty(), "interactive arrival must not bounce");
+        assert_eq!(w.preemptions, 1);
+        assert_eq!(w.parked_len(), 1);
+        assert!(
+            evs.iter()
+                .any(|e| matches!(e, ServeEvent::Token { id: 9, first: true, .. })),
+            "interactive first token within the join boundary"
+        );
+        events.extend(evs);
+        while w.active() > 0 {
+            events.extend(w.step().unwrap());
+        }
+        assert_eq!(w.resume_parked(), 1);
+        assert!(w.resume_reprefill_tokens > 0, "resume re-prefills the uncached tail");
+        while w.has_work() {
+            events.extend(w.step().unwrap());
+        }
+        let stream: Vec<(usize, i32)> = events
+            .iter()
+            .filter_map(|e| match e {
+                ServeEvent::Token { id: 5, seq, token, .. } => Some((*seq, *token)),
+                _ => None,
+            })
+            .collect();
+        let seqs: Vec<usize> = stream.iter().map(|(s, _)| *s).collect();
+        assert_eq!(seqs, vec![0, 1, 2, 3, 4, 5], "loss/dup-free seq numbering");
+        let tokens: Vec<i32> = stream.iter().map(|(_, t)| *t).collect();
+        assert_eq!(tokens, solo, "preempt + resume changed the stream");
+        let done: Vec<u64> = events
+            .iter()
+            .filter_map(|e| match e {
+                ServeEvent::Done(r) => Some(r.id),
+                _ => None,
+            })
+            .collect();
+        assert_eq!(done, vec![9, 5], "both requests complete");
+    }
+
+    #[test]
+    fn paged_pool_drains_clean() {
+        // prefix cache off: every block returns to the free pool
+        let mut w = paged_worker(Variant::SimQuant, 4, 4, None, false);
+        let total = w.kv().total_blocks();
+        assert_eq!(w.kv().free_block_count(), total);
+        let rs = w
+            .process_batch(Batch {
+                requests: vec![req(1, 20, 4), req(2, 33, 5), req(3, 10, 3)],
+                formed_at: Instant::now(),
+            })
+            .unwrap();
+        assert_eq!(rs.len(), 3);
+        assert_eq!(w.active(), 0);
+        assert_eq!(w.kv().free_block_count(), total, "refcount leak: blocks not returned");
+        assert_eq!(w.kv().retained_count(), 0);
+        // prefix cache on: drained pool = free + retained prefix blocks
+        let mut w = paged_worker(Variant::SimQuant, 4, 4, None, true);
+        let _ = w
+            .process_batch(Batch {
+                requests: vec![req(1, 20, 4), req(2, 33, 5), req(3, 10, 3)],
+                formed_at: Instant::now(),
+            })
+            .unwrap();
+        assert_eq!(w.kv().free_block_count() + w.kv().retained_count(), total);
+        // 20 -> 1 full block, 33 -> 2, 10 -> 0
+        assert_eq!(w.kv().retained_count(), 3);
+    }
+
+    #[test]
+    fn prefix_cache_and_small_pools_do_not_change_streams() {
+        // ids 1/8/15 share the token fill (2 + id % 7 == 3): maximal
+        // prefix sharing across all three prompts
+        let run = |kv_blocks: Option<usize>, prefix: bool| {
+            let mut w = paged_worker(Variant::Fp, 4, 4, kv_blocks, prefix);
+            let rs = w
+                .process_batch(Batch {
+                    requests: vec![req(1, 24, 5), req(8, 24, 5), req(15, 9, 4)],
+                    formed_at: Instant::now(),
+                })
+                .unwrap();
+            let mut rs: Vec<_> = rs.into_iter().map(|r| (r.id, r.tokens)).collect();
+            rs.sort();
+            rs
+        };
+        let reference = run(None, false);
+        assert_eq!(reference, run(None, true), "prefix cache changed a stream");
+        // 2 + 2 + 1 = 5 blocks of residency squeezed into a 6-block pool
+        assert_eq!(reference, run(Some(6), true), "tight pool changed a stream");
+        assert_eq!(reference, run(Some(6), false));
     }
 
     #[test]

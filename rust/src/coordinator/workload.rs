@@ -24,6 +24,11 @@ pub struct WorkloadSpec {
     /// `Priority::Batch` (CLI `--priority-mix`). 1.0 keeps the
     /// pre-priority all-interactive workload
     pub interactive_frac: f64,
+    /// fraction of requests prefixed with a synthetic system prompt
+    /// drawn from [`system_prompt_bank`] (CLI `--shared-prefix`) — the
+    /// shared-prefix chat traffic the prefix cache converts into block
+    /// hits. 0.0 consumes no randomness, so pinned seeds reproduce
+    pub shared_prefix_frac: f64,
     pub seed: u64,
 }
 
@@ -38,9 +43,26 @@ impl Default for WorkloadSpec {
             max_new_max: 24,
             long_frac: 0.0,
             interactive_frac: 1.0,
+            shared_prefix_frac: 0.0,
             seed: 42,
         }
     }
+}
+
+/// Length of each synthetic system prompt in the bank. With the BOS the
+/// router prepends, a 63-token system prompt fills exactly four 16-token
+/// KV blocks — every block of the shared prefix is cacheable.
+pub const SYSTEM_PROMPT_TOKENS: usize = 63;
+
+/// The synthetic system-prompt bank: four fixed token sequences standing
+/// in for the handful of system prompts most chat traffic shares. Fixed
+/// seeds (independent of `WorkloadSpec::seed`) keep the bank identical
+/// across workloads, so prefix-cache hit rates are comparable between
+/// runs.
+pub fn system_prompt_bank() -> Vec<Vec<i32>> {
+    (0..4u64)
+        .map(|i| corpus::generate_tokens(SYSTEM_PROMPT_TOKENS, 0xB10C + i))
+        .collect()
 }
 
 /// One generated arrival: the request plus its offset from workload start.
@@ -53,6 +75,7 @@ pub struct Arrival {
 /// Generate the arrival sequence (deterministic under the seed).
 pub fn generate(spec: &WorkloadSpec) -> Vec<Arrival> {
     let mut rng = XorShift64Star::new(spec.seed);
+    let bank = system_prompt_bank();
     let mut t = 0.0f64;
     let mut out = Vec::with_capacity(spec.n_requests);
     for i in 0..spec.n_requests {
@@ -76,7 +99,22 @@ pub fn generate(spec: &WorkloadSpec) -> Vec<Arrival> {
         if spec.interactive_frac < 1.0 && rng.next_f64() >= spec.interactive_frac {
             priority = Priority::Batch;
         }
-        let prompt = corpus::generate_tokens(plen, spec.seed.wrapping_add(1000 + i as u64));
+        // shared_prefix_frac == 0.0 must consume no randomness so existing
+        // seeds reproduce their pinned workloads bit-for-bit. A shared
+        // request prepends one bank prompt to its unique tail, so its
+        // total length exceeds `prompt_max` by SYSTEM_PROMPT_TOKENS —
+        // that's the shape of chat traffic: fixed system prompt + turn.
+        let shared =
+            spec.shared_prefix_frac > 0.0 && rng.next_f64() < spec.shared_prefix_frac;
+        let mut prompt = if shared {
+            bank[rng.next_below(bank.len() as u64) as usize].clone()
+        } else {
+            Vec::new()
+        };
+        prompt.extend(corpus::generate_tokens(
+            plen,
+            spec.seed.wrapping_add(1000 + i as u64),
+        ));
         out.push(Arrival {
             at_s: t,
             request: Request::new(i as u64 + 1, prompt, max_new).with_priority(priority),
@@ -203,6 +241,68 @@ mod tests {
         assert!(generate(&spec)
             .iter()
             .all(|a| a.request.priority == Priority::Batch));
+    }
+
+    #[test]
+    fn shared_prefix_zero_consumes_no_extra_randomness() {
+        let base = generate(&WorkloadSpec::default());
+        let explicit =
+            generate(&WorkloadSpec { shared_prefix_frac: 0.0, ..Default::default() });
+        for (a, b) in base.iter().zip(&explicit) {
+            assert_eq!(a.request.prompt, b.request.prompt);
+            assert_eq!(a.at_s, b.at_s);
+        }
+    }
+
+    #[test]
+    fn shared_prefix_prepends_bank_prompts_reproducibly() {
+        let spec = WorkloadSpec {
+            n_requests: 200,
+            shared_prefix_frac: 0.5,
+            ..Default::default()
+        };
+        let arr = generate(&spec);
+        let bank = system_prompt_bank();
+        let shared: Vec<_> = arr
+            .iter()
+            .filter(|a| {
+                bank.iter().any(|sys| a.request.prompt.starts_with(sys))
+            })
+            .collect();
+        // ~100 expected; wide band for the deterministic PRNG draw
+        assert!((60..=140).contains(&shared.len()), "shared: {}", shared.len());
+        // shared prompts carry the full 63-token system prefix plus a
+        // unique per-request tail within the configured bounds
+        for a in &shared {
+            let tail = a.request.prompt.len() - SYSTEM_PROMPT_TOKENS;
+            assert!((spec.prompt_min..=spec.prompt_max).contains(&tail));
+        }
+        assert!(
+            shared.windows(2).any(|w| w[0].request.prompt != w[1].request.prompt),
+            "tails must differ between shared requests"
+        );
+        // mix is reproducible under the seed
+        let again = generate(&spec);
+        for (a, b) in arr.iter().zip(&again) {
+            assert_eq!(a.request.prompt, b.request.prompt);
+        }
+    }
+
+    #[test]
+    fn system_prompt_bank_is_fixed_and_block_aligned() {
+        let a = system_prompt_bank();
+        let b = system_prompt_bank();
+        assert_eq!(a, b, "bank must be seed-independent and stable");
+        assert_eq!(a.len(), 4);
+        for p in &a {
+            assert_eq!(p.len(), SYSTEM_PROMPT_TOKENS);
+        }
+        // the four prompts are distinct, so cache chains don't collide
+        for i in 0..a.len() {
+            for j in i + 1..a.len() {
+                assert_ne!(a[i], a[j]);
+            }
+        }
     }
 
     #[test]

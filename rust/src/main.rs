@@ -73,6 +73,15 @@ COMMANDS:
                    [--priority-mix F]    (fraction of requests tagged interactive;
                                           the rest are batch priority: low queue
                                           tier, shed first. default 1.0)
+                   [--shared-prefix F]   (fraction of requests prefixed with a
+                                          shared synthetic system prompt; the
+                                          paged KV prefix cache converts repeats
+                                          into block hits that skip prefill.
+                                          default 0.0)
+                   [--kv-blocks N]       (KV block pool size per shard; default
+                                          sizes the pool to batch x ctx)
+                   [--no-prefix-cache]   (disable prefix-block retention; paged
+                                          allocation and preemption stay on)
                    [--fault-plan SPEC]   (seeded fault injection + recovery; SPEC is
                                           comma-separated `crash:<shard>@<step>`,
                                           `stall:<shard>@<step>x<steps>`, `corrupt:<p>`,
@@ -197,6 +206,14 @@ fn serve(args: &Args) -> Result<()> {
     if !(0.0..=1.0).contains(&priority_mix) {
         bail!("--priority-mix must be in [0, 1] (got {priority_mix})");
     }
+    // fraction of requests sharing a synthetic system prompt (prefix cache)
+    let shared_prefix = args.get_f64("shared-prefix", 0.0);
+    if !(0.0..=1.0).contains(&shared_prefix) {
+        bail!("--shared-prefix must be in [0, 1] (got {shared_prefix})");
+    }
+    // KV block pool override (0 = default batch x ctx sizing)
+    let kv_blocks = args.get_usize("kv-blocks", 0);
+    let prefix_cache = !args.has_flag("no-prefix-cache");
     // predict sheds batch-priority work only: an all-interactive mix
     // leaves nothing sheddable and the gate silently degrades to open —
     // surface that at the point of use instead
@@ -217,6 +234,8 @@ fn serve(args: &Args) -> Result<()> {
     cfg.admission = admission;
     cfg.standby = standby;
     cfg.degrade_bits = (degrade_bits > 0).then_some(degrade_bits as u32);
+    cfg.kv_blocks = (kv_blocks > 0).then_some(kv_blocks);
+    cfg.prefix_cache = prefix_cache;
     if let Some(plan) = fault_plan {
         cfg.fault = FaultSpec::with_plan(plan);
     }
@@ -240,6 +259,7 @@ fn serve(args: &Args) -> Result<()> {
         max_new_max: max_new,
         long_frac: 0.0,
         interactive_frac: priority_mix,
+        shared_prefix_frac: shared_prefix,
         seed: 9000,
     };
     let report = if rate > 0.0 {
@@ -301,6 +321,17 @@ fn serve(args: &Args) -> Result<()> {
             report.degrade_enters,
             report.degrade_exits,
             report.rebroadcast_bytes as f64 / 1e6,
+        );
+    }
+    if shared_prefix > 0.0
+        || report.prefix_hit_tokens > 0
+        || report.preemptions > 0
+    {
+        println!(
+            "paged kv: prefix hit {} tokens | preemptions {} | resume re-prefill {} tokens",
+            report.prefix_hit_tokens,
+            report.preemptions,
+            report.resume_reprefill_tokens,
         );
     }
     if priority_mix < 1.0 {

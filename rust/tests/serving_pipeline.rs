@@ -187,6 +187,7 @@ fn open_loop_replay_completes_under_pressure() {
         max_new_max: 6,
         long_frac: 0.0,
         interactive_frac: 1.0,
+        shared_prefix_frac: 0.0,
         seed: 11,
     };
     let arrivals = workload::generate(&spec);
@@ -873,6 +874,142 @@ fn weight_bytes_summed_across_shards() {
     assert_eq!(four.shard_weight_bytes.len(), 4);
     assert_eq!(four.weight_storage_bytes, 4 * one.weight_storage_bytes);
     assert!(four.shard_weight_bytes.iter().all(|b| *b == one.weight_storage_bytes));
+}
+
+// ---------------------------------------------------------------------------
+// Paged KV: prefix cache + cheap preemption (sim backend)
+// ---------------------------------------------------------------------------
+
+/// Batch-heavy pressure mix: long-budget batch work arrives first and
+/// saturates a starved block pool while it decodes; short interactive
+/// requests arrive inside that window, so admission must preempt.
+/// BOS-prefixed so the router's admission rewrite is the identity.
+fn pressure_arrivals(n_batch: usize, n_interactive: usize) -> Vec<workload::Arrival> {
+    let mut arrivals = Vec::new();
+    for i in 0..n_batch {
+        let mut prompt = corpus::generate_tokens(10, 80_000 + i as u64);
+        prompt[0] = BOS;
+        arrivals.push(workload::Arrival {
+            at_s: 0.0,
+            request: Request::new(i as u64 + 1, prompt, 24).with_priority(Priority::Batch),
+        });
+    }
+    for j in 0..n_interactive {
+        let mut prompt = corpus::generate_tokens(10, 90_000 + j as u64);
+        prompt[0] = BOS;
+        arrivals.push(workload::Arrival {
+            at_s: 0.0005 + j as f64 * 0.0005,
+            request: Request::new((n_batch + j) as u64 + 1, prompt, 3),
+        });
+    }
+    arrivals
+}
+
+#[test]
+fn interactive_admits_via_preemption_under_full_cache_pressure() {
+    // the PR 5 hole this pins shut: an interactive arrival finding every
+    // KV block held by batch residents used to wait out a full batch
+    // residency; with block tables it unmaps the youngest batch table
+    // and admits immediately. Batch budgets are 24 tokens against a
+    // pool that holds two residents, so the pressure window is long.
+    let (n_batch, n_interactive) = (8, 4);
+    let n = n_batch + n_interactive;
+    let reference = {
+        let server = sim_server(SchedulerMode::Continuous, 1, 4);
+        server.run_open_loop(pressure_arrivals(n_batch, n_interactive)).unwrap()
+    };
+    let mut cfg = sim_cfg(SchedulerMode::Continuous, 1, 4);
+    // 10-token prompts + 24 new = 3 blocks per batch request: two
+    // residents fill the pool, lanes stay free — blocks are the bind
+    cfg.kv_blocks = Some(6);
+    let server = Server::start_sim(cfg, SimCost::fast()).unwrap();
+    let report = server.run_open_loop(pressure_arrivals(n_batch, n_interactive)).unwrap();
+
+    assert_eq!(report.responses.len(), n, "preemption lost a request");
+    assert!(
+        report.preemptions >= 1,
+        "a block-starved pool must admit interactive work by preempting"
+    );
+    assert!(
+        report.resume_reprefill_tokens > 0,
+        "a preempted victim must resume via re-prefill"
+    );
+    assert_eq!(report.lost_tokens, 0);
+    assert_eq!(report.dup_tokens, 0);
+    assert_eq!(report.router_in_flight, 0);
+    // preemption may move time, never tokens: every stream (preempted
+    // victims included) matches the pressure-free reference exactly
+    for id in 1..=n as u64 {
+        assert_eq!(
+            by_id(&reference.responses, id).tokens,
+            by_id(&report.responses, id).tokens,
+            "id {id} diverged under preemption pressure"
+        );
+    }
+    // full budgets delivered — the victims lost no generated position
+    for r in &report.responses {
+        let budget = if r.id <= n_batch as u64 { 24 } else { 3 };
+        assert_eq!(r.tokens.len(), budget, "id {} lost budget", r.id);
+    }
+    // interactive work front-ran the queued batch backlog instead of
+    // waiting out a 24-token residency
+    let last_interactive = report
+        .responses
+        .iter()
+        .filter(|r| r.priority == Priority::Interactive)
+        .map(|r| r.first_token_at)
+        .max()
+        .unwrap();
+    let last_batch = report
+        .responses
+        .iter()
+        .filter(|r| r.priority == Priority::Batch)
+        .map(|r| r.first_token_at)
+        .max()
+        .unwrap();
+    assert!(
+        last_interactive < last_batch,
+        "interactive admission waited behind the batch backlog"
+    );
+}
+
+#[test]
+fn preempt_resume_stays_exactly_once_under_fault_drill() {
+    // the hostile composition for the paged path: a starved block pool
+    // forcing preempt/park/resume on the survivor while the other shard
+    // is killed mid-run and its streams migrate. Every stream must
+    // still be delivered exactly once, bit-identical to a fault-free,
+    // pressure-free reference.
+    let (n_batch, n_interactive) = (8, 4);
+    let n = n_batch + n_interactive;
+    let reference = {
+        let mut cfg = sim_cfg(SchedulerMode::Continuous, 2, 4);
+        cfg.prefill_chunk = 8;
+        let server = Server::start_sim(cfg, SimCost::fast()).unwrap();
+        server.run_open_loop(pressure_arrivals(n_batch, n_interactive)).unwrap()
+    };
+    let mut cfg = fault_cfg(2, FaultPlan::new(5).crash(1, 6));
+    cfg.kv_blocks = Some(6);
+    let server = Server::start_sim(cfg, SimCost::fast()).unwrap();
+    let report = server.run_open_loop(pressure_arrivals(n_batch, n_interactive)).unwrap();
+
+    assert_eq!(report.responses.len(), n, "a survivor must absorb the dead shard's work");
+    assert_eq!(report.dead_shards, vec![1], "the injected crash was not detected");
+    assert!(
+        report.preemptions >= 1,
+        "the starved survivor must preempt to admit the interactive burst"
+    );
+    assert_eq!(report.lost_tokens, 0, "a token position was skipped");
+    assert_eq!(report.dup_tokens, 0, "a token position was double-delivered");
+    assert_eq!(report.router_in_flight, 0);
+    assert_eq!(report.router_inflight_tokens, 0);
+    for id in 1..=n as u64 {
+        assert_eq!(
+            by_id(&reference.responses, id).tokens,
+            by_id(&report.responses, id).tokens,
+            "id {id} diverged across preempt/resume + migration"
+        );
+    }
 }
 
 // ---------------------------------------------------------------------------
