@@ -37,6 +37,17 @@
 //! batch residents (table unmap, prefix-cached resume): every preempted
 //! request must still complete with zero lost/duplicated tokens.
 //!
+//! **Sweep 5 — self-speculative decoding x draft bit-width** (same
+//! 4-shard heavy-tail overload): each lane drafts `k` tokens per cycle
+//! from a low-bit variant of its own weights, one fused full-width pass
+//! verifies all `k + 1` positions, and the longest matching prefix is
+//! accepted (rejected suffix = paged KV table truncation, no data
+//! movement). k in {0, 2, 4} crossed with draft bits in {2, 4}. Token
+//! streams must be bit-identical to the k=0 baseline (speculation may
+//! only move time, never tokens), zero lost/duplicated tokens, and the
+//! full-size k=4 / 4-bit arm must clear 1.2x baseline tokens/s at
+//! equal-or-better served p99.
+//!
 //! Besides the printed tables, every run writes `BENCH_batching.json`
 //! (tokens/s, TTFT, latency percentiles, ITL p99, shed counts per row)
 //! so the serving perf trajectory is diffable across PRs and gated in CI
@@ -345,6 +356,66 @@ fn run_prefix(
         prefix_hit_tokens: report.prefix_hit_tokens,
         preemptions: report.preemptions,
         resume_reprefill_tokens: report.resume_reprefill_tokens,
+        lost_tokens: report.lost_tokens,
+        dup_tokens: report.dup_tokens,
+        served: report.responses.len(),
+        requests: n_requests,
+        streams: report.responses.iter().map(|r| (r.id, r.tokens.clone())).collect(),
+    })
+}
+
+// ---------------------------------------------------------------------------
+// Sweep 5: self-speculative decoding x draft bit-width
+// ---------------------------------------------------------------------------
+
+struct SpecRow {
+    spec_k: usize,
+    draft_bits: u32,
+    tok_per_s: f64,
+    ttft_mean_ms: f64,
+    lat_p99_ms: f64,
+    itl_p99_ms: f64,
+    drafted_tokens: u64,
+    accepted_tokens: u64,
+    acceptance_rate: f64,
+    lost_tokens: u64,
+    dup_tokens: u64,
+    served: usize,
+    requests: usize,
+    /// token streams keyed by request id (bit-identity vs the k=0 arm)
+    streams: std::collections::HashMap<u64, Vec<i32>>,
+}
+
+fn run_spec(
+    spec_k: usize,
+    draft_bits: u32,
+    n_requests: usize,
+    cost: SimCost,
+) -> anyhow::Result<SpecRow> {
+    let mut cfg = ServerConfig::new("sim-tiny", Variant::SimQuant);
+    cfg.shards = 4;
+    cfg.batch = 8;
+    cfg.mode = SchedulerMode::Continuous;
+    cfg.prefill_chunk = PREFILL_CHUNK;
+    cfg.spec_k = spec_k;
+    cfg.spec_draft_bits = draft_bits;
+    let server = Server::start_sim(cfg, cost)?;
+    let report = server.run_open_loop(workload::generate(&slo_spec(n_requests, 1.0)))?;
+    assert_eq!(
+        report.responses.len(),
+        n_requests,
+        "spec k={spec_k}: open admission must serve every request"
+    );
+    Ok(SpecRow {
+        spec_k,
+        draft_bits,
+        tok_per_s: report.tokens_per_s(),
+        ttft_mean_ms: report.ttft_summary().mean * 1e3,
+        lat_p99_ms: report.latency_percentile(0.99) * 1e3,
+        itl_p99_ms: report.itl_percentile(0.99) * 1e3,
+        drafted_tokens: report.drafted_tokens,
+        accepted_tokens: report.accepted_tokens,
+        acceptance_rate: report.acceptance_rate(),
         lost_tokens: report.lost_tokens,
         dup_tokens: report.dup_tokens,
         served: report.responses.len(),
@@ -756,6 +827,120 @@ fn main() -> anyhow::Result<()> {
          (one-step interference) and the victim resumes through the same cache."
     );
 
+    // ---- sweep 5: self-speculative decoding x draft bit-width -------------
+    println!(
+        "\n== ablation: self-speculative decoding (4 shards, continuous, chunked \
+         prefill {PREFILL_CHUNK}, {slo_requests} reqs, {SLO_RATE_PER_SHARD} \
+         req/s/shard, heavy-tail prompts) ==\n"
+    );
+    let mut spec_rows: Vec<SpecRow> = vec![run_spec(0, 4, slo_requests, slo_cost)?];
+    for k in [2usize, 4] {
+        for bits in [2u32, 4] {
+            spec_rows.push(run_spec(k, bits, slo_requests, slo_cost)?);
+        }
+    }
+    let mut spec_table = Table::new(&[
+        "k",
+        "draft bits",
+        "tok/s",
+        "ttft mean (ms)",
+        "lat p99 (ms)",
+        "itl p99 (ms)",
+        "drafted",
+        "accepted",
+        "accept %",
+    ]);
+    for r in &spec_rows {
+        spec_table.row(vec![
+            r.spec_k.to_string(),
+            if r.spec_k == 0 { "-".into() } else { r.draft_bits.to_string() },
+            format!("{:.0}", r.tok_per_s),
+            format!("{:.2}", r.ttft_mean_ms),
+            format!("{:.2}", r.lat_p99_ms),
+            format!("{:.3}", r.itl_p99_ms),
+            r.drafted_tokens.to_string(),
+            r.accepted_tokens.to_string(),
+            format!("{:.1}", r.acceptance_rate * 100.0),
+        ]);
+    }
+    spec_table.print();
+
+    // speculation may only move time, never tokens: every arm's streams
+    // must be bit-identical to the plain-decode baseline
+    let baseline = &spec_rows[0];
+    let mut mismatched: Vec<usize> = Vec::new();
+    for r in &spec_rows {
+        let bad = r
+            .streams
+            .iter()
+            .filter(|(id, toks)| baseline.streams.get(id) != Some(toks))
+            .count();
+        mismatched.push(bad);
+        assert_eq!(
+            bad, 0,
+            "k={} bits={}: {bad} token streams diverged from plain decode",
+            r.spec_k, r.draft_bits
+        );
+        assert_eq!(
+            (r.lost_tokens, r.dup_tokens),
+            (0, 0),
+            "k={} bits={}: speculative serving lost or duplicated tokens",
+            r.spec_k,
+            r.draft_bits
+        );
+        assert!(
+            r.accepted_tokens <= r.drafted_tokens,
+            "k={}: accepted {} > drafted {}",
+            r.spec_k,
+            r.accepted_tokens,
+            r.drafted_tokens
+        );
+    }
+    let k4b4 = spec_rows
+        .iter()
+        .find(|r| r.spec_k == 4 && r.draft_bits == 4)
+        .expect("k=4/4-bit arm missing");
+    println!(
+        "\nspeculation: k=4 draft-4-bit tok/s {:.0} vs plain {:.0} ({:.2}x), \
+         lat p99 {:.2} vs {:.2} ms, acceptance {:.1}%",
+        k4b4.tok_per_s,
+        baseline.tok_per_s,
+        k4b4.tok_per_s / baseline.tok_per_s.max(1e-9),
+        k4b4.lat_p99_ms,
+        baseline.lat_p99_ms,
+        k4b4.acceptance_rate * 100.0,
+    );
+    // acceptance gate (full runs only: smoke bursts are too short for a
+    // stable throughput ratio on noisy CI runners)
+    if !smoke {
+        let speedup = k4b4.tok_per_s / baseline.tok_per_s.max(1e-9);
+        assert!(
+            speedup >= 1.2,
+            "k=4 draft-4-bit speculation must clear 1.2x plain tokens/s (got {speedup:.3}x)"
+        );
+        assert!(
+            k4b4.lat_p99_ms <= baseline.lat_p99_ms,
+            "speculation regressed served p99: {:.2} ms vs plain {:.2} ms",
+            k4b4.lat_p99_ms,
+            baseline.lat_p99_ms
+        );
+        for r in &spec_rows[1..] {
+            assert!(
+                r.acceptance_rate > 0.0 && r.drafted_tokens > 0,
+                "k={} bits={}: speculation never drafted",
+                r.spec_k,
+                r.draft_bits
+            );
+        }
+    }
+    println!(
+        "\nshape: drafts stream bits/8 of the bytes (weights and KV pages), so k \
+         low-bit draft steps plus one fused (k+1)-position verify cost less wall \
+         clock than k+1 full-width steps whenever enough drafts survive \
+         verification; rejected suffixes truncate the block table in place, so a \
+         mispredicted cycle costs the draft spin and nothing else."
+    );
+
     // machine-readable trajectory output
     let json_rows: Vec<Value> = rows
         .iter()
@@ -834,6 +1019,28 @@ fn main() -> anyhow::Result<()> {
             ])
         })
         .collect();
+    let spec_json: Vec<Value> = spec_rows
+        .iter()
+        .zip(&mismatched)
+        .map(|(r, bad)| {
+            Value::obj(vec![
+                ("spec_k", Value::Num(r.spec_k as f64)),
+                ("draft_bits", Value::Num(r.draft_bits as f64)),
+                ("requests", Value::Num(r.requests as f64)),
+                ("served", Value::Num(r.served as f64)),
+                ("tok_per_s", Value::Num(r.tok_per_s)),
+                ("ttft_mean_ms", Value::Num(r.ttft_mean_ms)),
+                ("lat_p99_ms", Value::Num(r.lat_p99_ms)),
+                ("itl_p99_ms", Value::Num(r.itl_p99_ms)),
+                ("drafted_tokens", Value::Num(r.drafted_tokens as f64)),
+                ("accepted_tokens", Value::Num(r.accepted_tokens as f64)),
+                ("acceptance_rate", Value::Num(r.acceptance_rate)),
+                ("lost_tokens", Value::Num(r.lost_tokens as f64)),
+                ("dup_tokens", Value::Num(r.dup_tokens as f64)),
+                ("mismatched_streams", Value::Num(*bad as f64)),
+            ])
+        })
+        .collect();
     let out = Value::obj(vec![
         ("bench", Value::Str("ablation_batching".into())),
         ("backend", Value::Str("sim".into())),
@@ -848,6 +1055,7 @@ fn main() -> anyhow::Result<()> {
         ("slo_rows", Value::Arr(slo_json)),
         ("predictive_rows", Value::Arr(pred_json)),
         ("prefix_rows", Value::Arr(prefix_json)),
+        ("spec_rows", Value::Arr(spec_json)),
     ]);
     // smoke runs (CI) write to target/ so the committed full-run numbers
     // at the repo root never drift to smoke-sized samples

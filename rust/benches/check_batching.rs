@@ -80,6 +80,16 @@ const FAULT_GOODPUT_MIN_RATIO: f64 = 0.6;
 /// silently stopping to hit).
 const PREFIX_TTFT_MAX_RATIO: f64 = 0.5;
 
+/// The k=4 / 4-bit self-speculative arm must clear this tokens/s
+/// multiple over plain decode on full runs (the modeled cycle yields
+/// ~1.5x raw decode speedup; heavy-tail prefill dilutes it to ~1.3x).
+const SPEC_SPEEDUP_MIN: f64 = 1.2;
+
+/// Speculative served p99 may exceed the plain-decode baseline's by at
+/// most this factor (full-run acceptance pins `<=`; smoke tails on a
+/// handful of requests are noisy).
+const SPEC_P99_MAX_RATIO: f64 = 1.05;
+
 fn f(row: &Value, key: &str) -> f64 {
     row.get(key).and_then(Value::as_f64).unwrap_or(f64::NAN)
 }
@@ -411,6 +421,70 @@ fn check_prefix_rows(rows: &[Value], smoke: bool, failures: &mut Vec<String>) {
     }
 }
 
+fn check_spec_rows(rows: &[Value], smoke: bool, failures: &mut Vec<String>) {
+    // exactly-once + bit-identity hold for every speculative arm at
+    // every size: speculation may only move time, never tokens
+    for r in rows {
+        let label = format!("k={} bits={}", f(r, "spec_k"), f(r, "draft_bits"));
+        for key in ["lost_tokens", "dup_tokens", "mismatched_streams"] {
+            let v = f(r, key);
+            if v.is_nan() || v != 0.0 {
+                failures.push(format!(
+                    "spec_rows: {label}: {key} = {v} (must be 0) — speculative decode \
+                     changed, lost, or duplicated delivered tokens"
+                ));
+            }
+        }
+        if f(r, "served") != f(r, "requests") {
+            failures.push(format!(
+                "spec_rows: {label}: served {} != offered {} — a speculative lane \
+                 never completed",
+                f(r, "served"),
+                f(r, "requests"),
+            ));
+        }
+        let (drafted, accepted) = (f(r, "drafted_tokens"), f(r, "accepted_tokens"));
+        if drafted.is_nan() || accepted.is_nan() || accepted > drafted {
+            failures.push(format!(
+                "spec_rows: {label}: accepted {accepted} > drafted {drafted} — the \
+                 acceptance counter overran the draft counter"
+            ));
+        }
+        if f(r, "spec_k") > 0.0 && drafted <= 0.0 {
+            failures.push(format!(
+                "spec_rows: {label}: speculation enabled but no tokens drafted"
+            ));
+        }
+    }
+    let pick = |k: f64, bits: f64| {
+        rows.iter()
+            .find(|r| f(r, "spec_k") == k && (k == 0.0 || f(r, "draft_bits") == bits))
+    };
+    let (Some(plain), Some(k4b4)) = (pick(0.0, 0.0), pick(4.0, 4.0)) else {
+        failures.push("spec_rows: missing k=0 baseline / k=4 draft-4-bit pair".to_string());
+        return;
+    };
+    // the throughput ratio needs the full-size burst to stabilize; smoke
+    // keeps the identity/accounting gates above and skips the ratio
+    if !smoke {
+        let speedup = f(k4b4, "tok_per_s") / f(plain, "tok_per_s").max(1e-12);
+        if speedup.is_nan() || speedup < SPEC_SPEEDUP_MIN {
+            failures.push(format!(
+                "spec_rows: k=4 draft-4-bit speedup {speedup:.3}x < {SPEC_SPEEDUP_MIN}x \
+                 over plain decode — speculation lost its throughput win"
+            ));
+        }
+        let p99_ratio = f(k4b4, "lat_p99_ms") / f(plain, "lat_p99_ms").max(1e-12);
+        if p99_ratio.is_nan() || p99_ratio > SPEC_P99_MAX_RATIO {
+            failures.push(format!(
+                "spec_rows: k=4 draft-4-bit lat p99 ratio {p99_ratio:.3} > \
+                 {SPEC_P99_MAX_RATIO} vs plain — the speedup must not buy throughput \
+                 with the latency tail"
+            ));
+        }
+    }
+}
+
 fn main() -> ExitCode {
     let manifest = std::path::Path::new(env!("CARGO_MANIFEST_DIR"));
     // `cargo bench` invokes every bench binary with a `--bench` flag;
@@ -464,11 +538,15 @@ fn main() -> ExitCode {
         Some(rows) => check_prefix_rows(rows, smoke, &mut failures),
         None => failures.push("missing `prefix_rows` array".to_string()),
     }
+    match doc.get("spec_rows").and_then(Value::as_arr) {
+        Some(rows) => check_spec_rows(rows, smoke, &mut failures),
+        None => failures.push("missing `spec_rows` array".to_string()),
+    }
     if failures.is_empty() {
         println!(
             "check_batching: {} OK (static-vs-continuous + chunked/admission + \
              predictive-admission + fault-recovery + elastic kill/degrade/rejoin + \
-             prefix-cache/preemption gates hold)",
+             prefix-cache/preemption + speculative-decode gates hold)",
             path.display()
         );
         ExitCode::SUCCESS

@@ -97,6 +97,28 @@ impl CostEstimator {
         }
     }
 
+    /// The estimator for self-speculative serving: each decode cycle
+    /// runs `k` draft steps through the `draft_bits`-wide variant of
+    /// the same weights — each priced at `draft_bits / 8` of a plain
+    /// per-token step, since a draft streams that fraction of the
+    /// bytes (weights and KV pages alike) — plus one full-price fused
+    /// verify pass, and emits [`SimCost::spec_tokens_per_cycle`]
+    /// tokens in expectation. The effective per-token decode rate is
+    /// the cycle cost over that yield, so predictive admission keeps
+    /// pricing real throughput when speculation is on. `k == 0` is the
+    /// identity.
+    pub fn speculative(&self, k: usize, draft_bits: u32) -> Self {
+        if k == 0 {
+            return *self;
+        }
+        let scale = draft_bits.clamp(1, 8) as f64 / 8.0;
+        let cycle_s = (1.0 + k as f64 * scale) * self.decode_s_per_token;
+        CostEstimator {
+            decode_s_per_token: cycle_s / SimCost::spec_tokens_per_cycle(k, draft_bits),
+            ..*self
+        }
+    }
+
     /// Serialization cost (seconds) chunked prefill adds for a prompt:
     /// each chunk boundary after the first waits behind one fused decode
     /// step before the next chunk is paid. `prefill_chunk == 0` is
@@ -229,6 +251,33 @@ mod tests {
         // clamped below, and the step clock is the sim launch cost
         assert!(e.degraded(0).decode_s_per_token > 31.25e-6);
         assert!((e.step_s() - 250e-6).abs() < 1e-15);
+    }
+
+    #[test]
+    fn speculative_estimator_prices_cycle_cost_over_expected_yield() {
+        let e = est();
+        // k=4 draft-4-bit: cycle = (1 + 4 * 0.5) * 56.25 us = 168.75 us,
+        // yield = 1 + 0.95 + 0.95^2 + 0.95^3 + 0.95^4 = 4.52438125
+        let s = e.speculative(4, 4);
+        let want = 3.0 * 56.25e-6 / SimCost::spec_tokens_per_cycle(4, 4);
+        assert!((s.decode_s_per_token - want).abs() < 1e-15);
+        // the modeled speedup clears the bench gate's 1.2x bar
+        assert!(e.decode_s_per_token / s.decode_s_per_token > 1.2);
+        // prefill, launch clock, and batch are untouched
+        assert_eq!(s.prefill_s_per_token, e.prefill_s_per_token);
+        assert_eq!(s.step_s(), e.step_s());
+        assert_eq!(s.batch(), e.batch());
+        // k=0 is the identity
+        assert_eq!(e.speculative(0, 4).decode_s_per_token, e.decode_s_per_token);
+        // native-width drafts accept everything but cost a full step each:
+        // yield k+1 over cost k+1 — the identity again, not a free lunch
+        let native = e.speculative(4, 8);
+        assert!((native.decode_s_per_token - e.decode_s_per_token).abs() < 1e-15);
+        // a cheaper, chattier draft (2-bit) still beats plain decode
+        assert!(e.speculative(4, 2).decode_s_per_token < e.decode_s_per_token);
+        // and speculative composes with degraded-width serving
+        let both = e.degraded(4).speculative(4, 4);
+        assert!(both.decode_s_per_token < e.degraded(4).decode_s_per_token);
     }
 
     #[test]

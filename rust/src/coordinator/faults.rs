@@ -5,10 +5,9 @@
 //! decode step, transient stalls of K steps, link chunk corruption with
 //! probability p, scheduled recoveries — under a single seed, so a
 //! failing recovery run replays bit-identically. The plan itself does
-//! nothing: it compiles into per-shard [`runtime::ShardFaults`] executed
-//! inside the sim backend (the "device" dies; the scheduler has to
-//! notice) and per-rank [`collective::LinkFaults`] drawn by the ring
-//! transport.
+//! nothing: it compiles into per-shard [`ShardFaults`] executed inside
+//! the sim backend (the "device" dies; the scheduler has to notice) and
+//! per-rank [`LinkFaults`] drawn by the ring transport.
 //!
 //! A `recover:<shard>@<step>` clause schedules a *replacement device*
 //! for the shard: at recovery step `at_step` (counted in calibrated
@@ -28,6 +27,25 @@
 //! tracking is armed only when a plan is present — on a healthy
 //! deployment (and on slow CI runners) there is no wall-clock deadline
 //! that could false-kill a busy shard.
+//!
+//! # Plan grammar
+//!
+//! [`FaultPlan::parse`] accepts the comma-separated spec the CLI's
+//! `serve --fault-plan` flag takes. Each clause is one of:
+//!
+//! | clause | meaning |
+//! |---|---|
+//! | `crash:<shard>@<step>` | shard dies permanently at fused-decode step `<step>` (0-based, on that incarnation's own clock) |
+//! | `stall:<shard>@<step>x<steps>` | shard burns `<steps>` extra step costs of wall clock at `<step>`, then resumes |
+//! | `recover:<shard>@<step>` | a replacement device for `<shard>` becomes available at dispatcher recovery step `<step>` |
+//! | `corrupt:<p>` | each collective wire chunk is corrupted with probability `p` in `[0, 1]` |
+//! | `seed:<n>` | RNG seed for the corruption draws (defaults to 0) |
+//!
+//! Example: `crash:1@40,recover:1@120,seed:7` kills shard 1 at its 40th
+//! fused decode step and schedules a replacement at recovery step 120.
+//! Repeated `crash:`/`recover:` clauses for the same shard script a
+//! flapping device: the k-th crash clause applies to the shard's k-th
+//! incarnation.
 
 use std::time::Duration;
 

@@ -796,6 +796,25 @@ impl KvCache {
         self.lens[slot] += 1;
     }
 
+    /// Roll the slot back to `len` tokens — the speculative-decoding
+    /// rejection path. Per-lane block tables make this pure
+    /// bookkeeping: the table keeps its mappings and no blocks move or
+    /// free (the lane's reservation was sized for its full budget at
+    /// admit, so the freed tail is re-filled by the very next append).
+    /// Rows past `len` become dead and are overwritten in place later;
+    /// any widened SimQuant page params they left behind only loosen a
+    /// bound, never corrupt live rows.
+    pub fn truncate(&mut self, slot: usize, len: usize) {
+        assert!(
+            len <= self.lens[slot],
+            "truncate can only shrink: slot {} has {} tokens, asked for {}",
+            slot,
+            self.lens[slot],
+            len
+        );
+        self.lens[slot] = len;
+    }
+
     fn append_quantized(
         &mut self,
         block: usize,
@@ -1883,6 +1902,50 @@ mod tests {
         kv.release_slot(a);
         assert_eq!(kv.free_block_count(), 3);
         assert_eq!(kv.free_slots(), 2);
+    }
+
+    #[test]
+    fn truncate_rolls_back_appends_without_freeing_blocks() {
+        // 1 layer, 2 slots, ctx 8, d 2, block 2, 4 blocks
+        let mut kv = KvCache::new_f32_paged(1, 2, 8, 2, 2, 4);
+        let s = kv.acquire_slot().unwrap();
+        assert!(kv.try_reserve(s, 6)); // 3 blocks, the lane's full budget
+        assert_eq!(kv.free_block_count(), 1);
+        let committed = rows(2, 2, 21, 1.0);
+        for t in 0..2 {
+            kv.append_row(s, 0, &committed[t * 2..(t + 1) * 2], &committed[t * 2..(t + 1) * 2]);
+            kv.bump(s);
+        }
+        let table = kv.table(s).to_vec();
+        // three speculative rows land in the reserved blocks ...
+        let draft = rows(3, 2, 22, 1.0);
+        for t in 0..3 {
+            kv.append_row(s, 0, &draft[t * 2..(t + 1) * 2], &draft[t * 2..(t + 1) * 2]);
+            kv.bump(s);
+        }
+        assert_eq!(kv.len(s), 5);
+        // ... and a full rejection rolls them back: pure table bookkeeping
+        kv.truncate(s, 2);
+        assert_eq!(kv.len(s), 2);
+        assert_eq!(kv.table(s), &table[..], "rollback must not remap blocks");
+        assert_eq!(kv.free_block_count(), 1, "rollback must not free blocks");
+        assert_eq!(kv.decode_k(s, 0), committed, "committed rows survive rollback");
+        // the next append overwrites the dead rows in place
+        let fresh = rows(1, 2, 23, 1.0);
+        kv.append_row(s, 0, &fresh, &fresh);
+        kv.bump(s);
+        assert_eq!(&kv.decode_k(s, 0)[4..], &fresh[..]);
+        // drain: the pool balances, so nothing leaked
+        kv.release_slot(s);
+        assert_eq!(kv.free_block_count(), 4);
+        assert_eq!(kv.free_slots(), 2);
+        // shrink-only contract
+        let r = std::panic::catch_unwind(|| {
+            let mut kv2 = KvCache::new_f32_paged(1, 1, 4, 2, 2, 2);
+            let s = kv2.acquire_slot().unwrap();
+            kv2.truncate(s, 1);
+        });
+        assert!(r.is_err(), "growing via truncate must panic");
     }
 
     #[test]

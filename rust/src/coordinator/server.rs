@@ -180,6 +180,17 @@ pub struct ServerConfig {
     /// arrivals whose prompt prefix matches a retained chain skip
     /// straight to the first uncached block.
     pub prefix_cache: bool,
+    /// self-speculative draft depth per decode cycle (0 = plain
+    /// decode). Each decoding lane drafts up to `spec_k` tokens from
+    /// the `spec_draft_bits`-wide variant of the same weights and one
+    /// fused full-width pass verifies them; only verified tokens are
+    /// emitted, so streams stay bit-identical to plain serving. Sim
+    /// backend only — `Server::start` bails when set, mirroring
+    /// `degrade_bits`.
+    pub spec_k: usize,
+    /// draft width (bits) speculative draft passes run at; the
+    /// bitwidth-ladder knob that makes the draft model free
+    pub spec_draft_bits: u32,
 }
 
 impl ServerConfig {
@@ -198,6 +209,8 @@ impl ServerConfig {
             degrade_bits: None,
             kv_blocks: None,
             prefix_cache: true,
+            spec_k: 0,
+            spec_draft_bits: 4,
         }
     }
 }
@@ -494,11 +507,25 @@ pub struct ServerReport {
     /// tokens re-prefilled on preemption resume (the slice the prefix
     /// cache no longer held) — the bounded cost of cheap preemption
     pub resume_reprefill_tokens: u64,
+    /// draft tokens proposed by low-bit speculative passes (0 when
+    /// `ServerConfig::spec_k == 0`)
+    pub drafted_tokens: u64,
+    /// draft tokens the full-width verify passes accepted
+    pub accepted_tokens: u64,
 }
 
 impl ServerReport {
     pub fn tokens_per_s(&self) -> f64 {
         self.tokens_out as f64 / self.wall_s.max(1e-9)
+    }
+
+    /// Fraction of speculative drafts the full-width verify accepted
+    /// (0 when speculation was off — no drafts were proposed).
+    pub fn acceptance_rate(&self) -> f64 {
+        if self.drafted_tokens == 0 {
+            return 0.0;
+        }
+        self.accepted_tokens as f64 / self.drafted_tokens as f64
     }
 
     /// Requests shed by the admission gate.
@@ -1030,6 +1057,13 @@ impl Server {
     /// compiles, so a missing file fails fast instead of after minutes
     /// of compilation.
     pub fn start(registry: &Arc<Registry>, cfg: ServerConfig) -> Result<Self> {
+        if cfg.spec_k > 0 {
+            bail!(
+                "speculative decoding requires the sim backend: PJRT graphs \
+                 compile at a fixed width and have no low-bit draft variant to \
+                 run (mirroring degrade_bits, use Server::start_sim)"
+            );
+        }
         let estimator = match cfg.admission {
             AdmissionPolicy::Predictive { .. } => Some(Self::hotpath_estimator(cfg.batch)?),
             _ => None,
@@ -1096,7 +1130,13 @@ impl Server {
             .collect();
         let respawn_cfg = cfg.clone();
         let mut server = Self::start_with(cfg, backends)?;
-        server.estimator = Some(CostEstimator::from_sim_cost(&cost, batch));
+        // speculative serving changes the effective decode rate; price
+        // admission at the expected draft/verify cycle yield so the
+        // predictive gate stays honest (identity when spec_k == 0)
+        server.estimator = Some(
+            CostEstimator::from_sim_cost(&cost, batch)
+                .speculative(respawn_cfg.spec_k, respawn_cfg.spec_draft_bits),
+        );
         // replacement workers for rejoin/standby: incarnation k of a
         // shard runs the k-th slice of its fault schedule on a fresh
         // device clock (its ScaleSync starts fresh, exactly like every
@@ -1109,12 +1149,14 @@ impl Server {
             if let Some(plan) = &respawn_cfg.fault.plan {
                 m = m.with_faults(plan.shard_faults_incarnation(shard, incarnation));
             }
-            Worker::new_chunked_paged(
+            Worker::new_spec(
                 shard,
                 Backend::Sim(m),
                 respawn_cfg.prefill_chunk,
                 respawn_cfg.kv_blocks,
                 respawn_cfg.prefix_cache,
+                respawn_cfg.spec_k,
+                respawn_cfg.spec_draft_bits,
             )
         }));
         Ok(server)
@@ -1143,12 +1185,14 @@ impl Server {
             let (tx, rx): (Sender<ToWorker>, Receiver<ToWorker>) = channel();
             senders.push(Some(tx));
             let ev_tx = ev_tx.clone();
-            let worker = Worker::new_chunked_paged(
+            let worker = Worker::new_spec(
                 shard,
                 backend,
                 cfg.prefill_chunk,
                 cfg.kv_blocks,
                 cfg.prefix_cache,
+                cfg.spec_k,
+                cfg.spec_draft_bits,
             );
             handles.push(std::thread::spawn(move || worker_loop(worker, rx, ev_tx)));
         }
@@ -1480,6 +1524,7 @@ impl Server {
         let mut breakdown = Breakdown::new();
         let (mut steps, mut tokens, mut joins, mut retires) = (0u64, 0u64, 0u64, 0u64);
         let (mut prefix_hits, mut preemptions, mut resume_reprefill) = (0u64, 0u64, 0u64);
+        let (mut drafted, mut accepted) = (0u64, 0u64);
         let mut peak_active = Vec::with_capacity(self.handles.len());
         for h in self.handles {
             let st = h.join().map_err(|_| anyhow!("worker panicked"))?;
@@ -1491,6 +1536,8 @@ impl Server {
             prefix_hits += st.prefix_hit_tokens;
             preemptions += st.preemptions;
             resume_reprefill += st.resume_reprefill_tokens;
+            drafted += st.drafted_tokens;
+            accepted += st.accepted_tokens;
             peak_active.push(st.peak_active);
         }
         // comm/sync stages are exercised by the cluster-sim path; on the
@@ -1554,6 +1601,8 @@ impl Server {
             prefix_hit_tokens: prefix_hits,
             preemptions,
             resume_reprefill_tokens: resume_reprefill,
+            drafted_tokens: drafted,
+            accepted_tokens: accepted,
         })
     }
 

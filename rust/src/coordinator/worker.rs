@@ -170,6 +170,10 @@ pub struct WorkerStats {
     pub preemptions: u64,
     /// tokens re-prefilled (not served by the prefix cache) on resume
     pub resume_reprefill_tokens: u64,
+    /// draft tokens proposed by low-bit speculative passes
+    pub drafted_tokens: u64,
+    /// draft tokens the full-width verify pass accepted
+    pub accepted_tokens: u64,
 }
 
 pub struct Worker {
@@ -204,6 +208,16 @@ pub struct Worker {
     pub preemptions: u64,
     /// tokens re-prefilled (not served by the prefix cache) on resume
     pub resume_reprefill_tokens: u64,
+    /// self-speculative draft depth per decode cycle (0 = plain decode);
+    /// pinned to 0 on the PJRT backend, whose compiled graphs have no
+    /// low-bit draft variant to run
+    spec_k: usize,
+    /// draft width (bits) the speculative draft passes run at
+    spec_draft_bits: u32,
+    /// draft tokens proposed by low-bit speculative passes
+    pub drafted_tokens: u64,
+    /// draft tokens the full-width verify pass accepted
+    pub accepted_tokens: u64,
 }
 
 impl Worker {
@@ -234,6 +248,27 @@ impl Worker {
         kv_blocks: Option<usize>,
         prefix_cache: bool,
     ) -> Self {
+        Self::new_spec(shard, backend, prefill_chunk, kv_blocks, prefix_cache, 0, 4)
+    }
+
+    /// The widest constructor: [`Worker::new_chunked_paged`] plus
+    /// self-speculative decoding. When `spec_k > 0` every decode cycle
+    /// drafts up to `spec_k` tokens per lane from the
+    /// `spec_draft_bits`-wide variant of the same weights and verifies
+    /// them in one fused full-width pass (see `step`); token streams
+    /// stay bit-identical to plain decode because only verified tokens
+    /// are emitted. Sim backend only — on PJRT the knob pins to 0,
+    /// mirroring `prefill_chunk` (compiled graphs have no runtime
+    /// draft variant).
+    pub fn new_spec(
+        shard: usize,
+        backend: Backend,
+        prefill_chunk: usize,
+        kv_blocks: Option<usize>,
+        prefix_cache: bool,
+        spec_k: usize,
+        spec_draft_bits: u32,
+    ) -> Self {
         let c = backend.cfg().clone();
         let b = backend.batch();
         let bs = DEFAULT_BLOCK_SIZE.min(c.ctx).max(1);
@@ -243,9 +278,9 @@ impl Worker {
         } else {
             KvCache::new_f32_paged(c.n_layers, b, c.ctx, c.d_model, bs, n_blocks)
         };
-        let prefill_chunk = match &backend {
-            Backend::Pjrt(_) => 0,
-            Backend::Sim(_) => prefill_chunk,
+        let (prefill_chunk, spec_k) = match &backend {
+            Backend::Pjrt(_) => (0, 0),
+            Backend::Sim(_) => (prefill_chunk, spec_k),
         };
         let mut slots = Vec::with_capacity(b);
         slots.resize_with(b, || None);
@@ -269,6 +304,10 @@ impl Worker {
             prefix_hit_tokens: 0,
             preemptions: 0,
             resume_reprefill_tokens: 0,
+            spec_k,
+            spec_draft_bits: spec_draft_bits.clamp(1, 8),
+            drafted_tokens: 0,
+            accepted_tokens: 0,
         }
     }
 
@@ -284,6 +323,12 @@ impl Worker {
     /// Prefill chunk in effect (0 = whole-prompt).
     pub fn prefill_chunk(&self) -> usize {
         self.prefill_chunk
+    }
+
+    /// Speculative draft depth in effect (0 = plain decode; pinned to 0
+    /// on PJRT).
+    pub fn spec_k(&self) -> usize {
+        self.spec_k
     }
 
     /// Degraded-mode control: switch the backend's KV read width (no-op
@@ -338,6 +383,8 @@ impl Worker {
             prefix_hit_tokens: self.prefix_hit_tokens,
             preemptions: self.preemptions,
             resume_reprefill_tokens: self.resume_reprefill_tokens,
+            drafted_tokens: self.drafted_tokens,
+            accepted_tokens: self.accepted_tokens,
         }
     }
 
@@ -684,6 +731,9 @@ impl Worker {
         if !any {
             return Ok(events);
         }
+        if self.spec_k > 0 && matches!(self.backend, Backend::Sim(_)) {
+            return self.step_speculative(events, &active, &token);
+        }
 
         let outs = match &self.backend {
             Backend::Pjrt(handle) => {
@@ -753,6 +803,217 @@ impl Worker {
                 s.generated.len() >= s.req.max_new_tokens || self.kv.len(slot) + 1 >= ctx
             };
             self.tokens_out += 1;
+            if done {
+                events.push(ServeEvent::Done(self.retire(slot)));
+            }
+        }
+        Ok(events)
+    }
+
+    /// One self-speculative draft/verify/accept cycle over the decoding
+    /// set (sim backend only; `active`/`token` are the pre-prefill
+    /// decoding snapshot `step` built). Each lane autoregressively
+    /// drafts up to `spec_k` tokens through the `spec_draft_bits`-wide
+    /// variant of the same weights, appending their KV rows as it goes;
+    /// then ONE fused full-width pass verifies every drafted position
+    /// plus a continuation slot per lane. The longest draft prefix
+    /// matching the full-width argmax is accepted and the verify row
+    /// right after it supplies the next token (the correction when a
+    /// draft missed, the bonus continuation when all landed) — so every
+    /// emitted token is exactly the plain-decode token and streams stay
+    /// bit-identical by construction. A rejected suffix rolls the
+    /// lane's paged KV table back via [`KvCache::truncate`]: pure
+    /// bookkeeping, no block movement, and the lane's admission-time
+    /// block reservation is never exceeded, so rollback never needs to
+    /// free anything. Only the verify pass advances the fault clock —
+    /// one speculative cycle is one counted fused step.
+    fn step_speculative(
+        &mut self,
+        mut events: Vec<ServeEvent>,
+        active: &[bool],
+        token: &[i32],
+    ) -> Result<Vec<ServeEvent>> {
+        let cfg = self.backend.cfg().clone();
+        let b = self.backend.batch();
+        let (ctx, v, l, d) = (cfg.ctx, cfg.vocab, cfg.n_layers, cfg.d_model);
+        let draft_bits = self.spec_draft_bits;
+
+        // per-lane draft depth: bounded by the speculation knob, the
+        // remaining token budget, and the context ceiling (a cycle
+        // emits up to k_eff + 1 tokens), so lanes retire at exactly the
+        // plain-decode boundaries and drafting never outruns the block
+        // reservation made at admission
+        let mut k_eff = vec![0usize; b];
+        let mut pos0 = vec![0usize; b];
+        for slot in 0..b {
+            if !active[slot] {
+                continue;
+            }
+            let s = self.slots[slot].as_ref().expect("active slot is occupied");
+            pos0[slot] = self.kv.len(slot);
+            k_eff[slot] = self
+                .spec_k
+                .min(s.req.max_new_tokens.saturating_sub(s.generated.len() + 1))
+                .min(ctx.saturating_sub(pos0[slot] + 2));
+        }
+        let k_max = (0..b).filter(|&s| active[s]).map(|s| k_eff[s]).max().unwrap_or(0);
+        let kk = k_max + 1;
+
+        // draft phase (k_max low-bit passes), then one fused verify
+        let mut drafts: Vec<Vec<i32>> = vec![Vec::new(); b];
+        let verify_outs = {
+            let Backend::Sim(model) = &self.backend else {
+                bail!("speculative decoding requires the sim backend");
+            };
+            let bd = &mut self.breakdown;
+            let kv = &mut self.kv;
+            let scales = &mut self.scales;
+            let mut cur = token.to_vec();
+            let mut drafted = 0u64;
+            for i in 1..=k_max {
+                let mut dact = vec![false; b];
+                let mut dtok = vec![PAD; b];
+                let mut dpos = vec![0i32; b];
+                for slot in 0..b {
+                    if active[slot] && k_eff[slot] >= i {
+                        dact[slot] = true;
+                        dtok[slot] = cur[slot];
+                        dpos[slot] = kv.len(slot) as i32;
+                        drafted += 1;
+                    }
+                }
+                let outs = bd.span(Stage::Gemm, || {
+                    model.decode_draft(&dtok, &dpos, &dact, draft_bits)
+                })?;
+                let d_logits = outs[0].f32_view()?; // [B, V]
+                let k_new = outs[1].f32_view()?; // [L, B, D]
+                let v_new = outs[2].f32_view()?;
+                bd.span(Stage::Quant, || {
+                    for slot in 0..b {
+                        if !dact[slot] {
+                            continue;
+                        }
+                        for layer in 0..l {
+                            let off = (layer * b + slot) * d;
+                            kv.append_row(
+                                slot,
+                                layer,
+                                &k_new[off..off + d],
+                                &v_new[off..off + d],
+                            );
+                            scales.observe(layer, &k_new[off..off + d]);
+                        }
+                        kv.bump(slot);
+                    }
+                });
+                for slot in 0..b {
+                    if dact[slot] {
+                        let t = argmax(&d_logits[slot * v..(slot + 1) * v]);
+                        drafts[slot].push(t);
+                        cur[slot] = t;
+                    }
+                }
+            }
+            self.drafted_tokens += drafted;
+            let mut vtok = vec![PAD; b * kk];
+            let mut vpos = vec![0i32; b * kk];
+            let mut vlive = vec![false; b * kk];
+            for slot in 0..b {
+                if !active[slot] {
+                    continue;
+                }
+                for j in 0..=k_eff[slot] {
+                    let i = slot * kk + j;
+                    vtok[i] = if j == 0 { token[slot] } else { drafts[slot][j - 1] };
+                    vpos[i] = (pos0[slot] + j) as i32;
+                    vlive[i] = true;
+                }
+            }
+            bd.span(Stage::Gemm, || model.decode_verify(&vtok, &vpos, &vlive, kk))?
+        };
+        self.steps += 1;
+        let v_logits = verify_outs[0].f32_view()?; // [B, kk, V]
+        let k_new = verify_outs[1].f32_view()?; // [L, B, kk, D]
+        let v_new = verify_outs[2].f32_view()?;
+
+        // accept the longest draft prefix matching the full-width
+        // argmax; the verify row after it is the next emitted token
+        let mut accept = vec![0usize; b];
+        let mut next_tok = vec![PAD; b];
+        for slot in 0..b {
+            if !active[slot] {
+                continue;
+            }
+            let mut j = 0usize;
+            while j < k_eff[slot] {
+                let row = &v_logits[(slot * kk + j) * v..(slot * kk + j + 1) * v];
+                if drafts[slot][j] != argmax(row) {
+                    break;
+                }
+                j += 1;
+            }
+            accept[slot] = j;
+            let row = &v_logits[(slot * kk + j) * v..(slot * kk + j + 1) * v];
+            next_tok[slot] = argmax(row);
+            self.accepted_tokens += j as u64;
+        }
+
+        // KV fixup: a rejected suffix rolls the table back (no block
+        // movement); a fully-accepted chain appends the verify pass's
+        // bonus row so the cache ends one row behind the stream,
+        // exactly like plain decode
+        {
+            let kv = &mut self.kv;
+            let scales = &mut self.scales;
+            let bd = &mut self.breakdown;
+            bd.span(Stage::Quant, || {
+                for slot in 0..b {
+                    if !active[slot] {
+                        continue;
+                    }
+                    let (j, ke) = (accept[slot], k_eff[slot]);
+                    if j < ke {
+                        kv.truncate(slot, pos0[slot] + j + 1);
+                    } else {
+                        for layer in 0..l {
+                            let off = ((layer * b + slot) * kk + ke) * d;
+                            kv.append_row(
+                                slot,
+                                layer,
+                                &k_new[off..off + d],
+                                &v_new[off..off + d],
+                            );
+                            scales.observe(layer, &k_new[off..off + d]);
+                        }
+                        kv.bump(slot);
+                    }
+                }
+            });
+        }
+
+        // emit the accepted prefix + the verify token; retire finished
+        // lanes exactly where plain decode would
+        for slot in 0..b {
+            if !active[slot] {
+                continue;
+            }
+            let done = {
+                let s = self.slots[slot].as_mut().expect("active slot is occupied");
+                for t in 0..=accept[slot] {
+                    let tok =
+                        if t < accept[slot] { drafts[slot][t] } else { next_tok[slot] };
+                    s.generated.push(tok);
+                    events.push(ServeEvent::Token {
+                        id: s.req.id,
+                        token: tok,
+                        seq: s.generated.len() - 1,
+                        first: false,
+                        at: Instant::now(),
+                    });
+                }
+                s.generated.len() >= s.req.max_new_tokens || self.kv.len(slot) + 1 >= ctx
+            };
+            self.tokens_out += (accept[slot] + 1) as u64;
             if done {
                 events.push(ServeEvent::Done(self.retire(slot)));
             }
@@ -1155,6 +1416,64 @@ mod tests {
         // 2 + 2 + 1 = 5 blocks of residency squeezed into a 6-block pool
         assert_eq!(reference, run(Some(6), true), "tight pool changed a stream");
         assert_eq!(reference, run(Some(6), false));
+    }
+
+    fn spec_worker(variant: Variant, batch: usize, k: usize, bits: u32) -> Worker {
+        Worker::new_spec(
+            0,
+            Backend::Sim(SimModel::tiny(variant, batch, SimCost::fast())),
+            0,
+            None,
+            true,
+            k,
+            bits,
+        )
+    }
+
+    #[test]
+    fn speculative_decode_streams_match_plain() {
+        // verification is exact, so every (k, bits) combination must
+        // reproduce the plain-decode streams bit for bit
+        let reqs = || vec![req(1, 4, 12), req(2, 6, 7), req(3, 9, 1), req(4, 3, 2)];
+        let run = |mut w: Worker| {
+            let rs = w
+                .process_batch(Batch { requests: reqs(), formed_at: Instant::now() })
+                .unwrap();
+            let mut rs: Vec<_> = rs.into_iter().map(|r| (r.id, r.tokens)).collect();
+            rs.sort();
+            rs
+        };
+        let plain = run(sim_worker(Variant::Fp, 4));
+        for k in [2usize, 4] {
+            for bits in [2u32, 4] {
+                let got = run(spec_worker(Variant::Fp, 4, k, bits));
+                assert_eq!(got, plain, "spec k={k} bits={bits} changed a stream");
+            }
+        }
+    }
+
+    #[test]
+    fn speculative_counters_steps_and_pool_accounting() {
+        let batch = || Batch {
+            requests: vec![req(1, 20, 12), req(2, 33, 9), req(3, 10, 6)],
+            formed_at: Instant::now(),
+        };
+        let plain_steps = {
+            let mut w = sim_worker(Variant::SimQuant, 4);
+            let _ = w.process_batch(batch()).unwrap();
+            w.steps
+        };
+        let mut w = spec_worker(Variant::SimQuant, 4, 4, 4);
+        let total = w.kv().total_blocks();
+        let rs = w.process_batch(batch()).unwrap();
+        assert_eq!(rs.len(), 3);
+        assert!(w.drafted_tokens > 0, "speculation proposed no drafts");
+        assert!(w.accepted_tokens > 0, "verify accepted no drafts at a = 0.95");
+        assert!(w.accepted_tokens <= w.drafted_tokens);
+        // fewer fused full-width steps for the same streams — the win
+        assert!(w.steps < plain_steps, "spec {} >= plain {}", w.steps, plain_steps);
+        // rejected-suffix rollbacks leaked nothing: the pool balances
+        assert_eq!(w.kv().free_block_count() + w.kv().retained_count(), total);
     }
 
     #[test]

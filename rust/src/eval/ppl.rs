@@ -79,7 +79,7 @@ pub fn perplexity(
     })
 }
 
-/// -log softmax(row)[target], numerically stable.
+/// `-log softmax(row)[target]`, numerically stable.
 pub fn nll_of(row: &[f32], target: usize) -> f64 {
     let mx = row.iter().cloned().fold(f32::NEG_INFINITY, f32::max) as f64;
     let lse: f64 = row.iter().map(|x| ((*x as f64) - mx).exp()).sum::<f64>().ln() + mx;

@@ -107,6 +107,16 @@ COMMANDS:
                                           capacity, fewer sheds — and restore
                                           native width once the fleet is whole
                                           and pressure clears; sim backend only)
+                   [--spec-k K]          (self-speculative decoding: each lane
+                                          drafts K tokens/cycle from a low-bit
+                                          variant of the same weights, then one
+                                          fused full-width pass verifies and
+                                          accepts the longest matching prefix;
+                                          rejected tokens roll the paged KV
+                                          table back. 0 = off; sim backend only)
+                   [--spec-bits B]       (draft bit-width for --spec-k, 2 or 4;
+                                          default 4. lower bits draft faster
+                                          but mispredict more)
   eval-ppl         --model gpt2-tiny --variant all [--windows 8]
   breakdown        --ctx 32768 --batch 448 [--world 8] [--transport nccl]
   bitwidth-search  --model gpt2-tiny [--lambda 1e-4] [--policy greedy|grid|entropy]
@@ -187,12 +197,24 @@ fn serve(args: &Args) -> Result<()> {
     // warm spare pool + degraded-mode KV width (0 = native 8-bit only)
     let standby = args.get_usize("standby", 0);
     let degrade_bits = args.get_usize("degrade-bits", 0);
+    // self-speculative decoding: draft depth + draft bit-width (0 = off)
+    let spec_k = args.get_usize("spec-k", 0);
+    let spec_bits = args.get_usize("spec-bits", 4);
+    if spec_k > 0 && !(1..=8).contains(&spec_bits) {
+        bail!("--spec-bits must be in 1..=8 (got {spec_bits})");
+    }
     if backend != "sim" {
         // compiled PJRT shards neither respawn nor change KV width at
         // runtime — reject the elastic options instead of silently
         // serving without them (and mispricing admission)
         if degrade_bits > 0 {
             bail!("--degrade-bits needs --backend sim (PJRT graphs compile at a fixed KV width)");
+        }
+        if spec_k > 0 {
+            bail!(
+                "--spec-k needs --backend sim (PJRT graphs compile at a fixed width; \
+                 there is no low-bit draft variant to run)"
+            );
         }
         if standby > 0 || fault_plan.as_ref().is_some_and(|p| p.has_recovery()) {
             bail!(
@@ -236,6 +258,8 @@ fn serve(args: &Args) -> Result<()> {
     cfg.degrade_bits = (degrade_bits > 0).then_some(degrade_bits as u32);
     cfg.kv_blocks = (kv_blocks > 0).then_some(kv_blocks);
     cfg.prefix_cache = prefix_cache;
+    cfg.spec_k = spec_k;
+    cfg.spec_draft_bits = spec_bits as u32;
     if let Some(plan) = fault_plan {
         cfg.fault = FaultSpec::with_plan(plan);
     }
@@ -321,6 +345,15 @@ fn serve(args: &Args) -> Result<()> {
             report.degrade_enters,
             report.degrade_exits,
             report.rebroadcast_bytes as f64 / 1e6,
+        );
+    }
+    if spec_k > 0 {
+        println!(
+            "speculation: k={spec_k} draft {spec_bits}-bit | drafted {} | accepted {} \
+             ({:.1}% acceptance)",
+            report.drafted_tokens,
+            report.accepted_tokens,
+            report.acceptance_rate() * 100.0,
         );
     }
     if shared_prefix > 0.0

@@ -54,7 +54,7 @@ pub struct TTest {
     pub mean_diff: f64,
 }
 
-/// Paired t-test over matched samples a[i] vs b[i].
+/// Paired t-test over matched samples `a[i]` vs `b[i]`.
 pub fn paired_t_test(a: &[f64], b: &[f64]) -> TTest {
     assert_eq!(a.len(), b.len(), "paired test needs matched samples");
     let n = a.len();

@@ -15,9 +15,9 @@ use super::kernels::{scale_rows_into, symmetric_quantize_channel_into};
 pub struct AwqResult {
     /// int8 codes of W*s, [K, N]
     pub q: Vec<i8>,
-    /// per-output-channel scales, [N]
+    /// per-output-channel scales, `[N]`
     pub delta: Vec<f32>,
-    /// per-input-channel smoothing factors, [K]
+    /// per-input-channel smoothing factors, `[K]`
     pub s: Vec<f32>,
     /// chosen exponent
     pub alpha: f32,
@@ -27,7 +27,7 @@ pub struct AwqResult {
 
 const ALPHAS: [f32; 5] = [0.0, 0.25, 0.5, 0.75, 1.0];
 
-/// Quantize w [K, N] given calibration meanabs [K] and E[x^2] proxy [K].
+/// Quantize w `[K, N]` given calibration meanabs `[K]` and `E[x^2]` proxy `[K]`.
 pub fn awq_quantize(
     w: &[f32],
     k: usize,

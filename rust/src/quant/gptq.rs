@@ -16,14 +16,14 @@ use super::{qrange, round_ties_even};
 pub struct GptqResult {
     /// int8 codes, [K, N]
     pub q: Vec<i8>,
-    /// per-output-channel scales, [N]
+    /// per-output-channel scales, `[N]`
     pub delta: Vec<f32>,
-    /// channel processing order, [K]
+    /// channel processing order, `[K]`
     pub order: Vec<usize>,
 }
 
-/// Quantize w [K, N] with diag-Hessian error feedback.
-/// `h_diag` = sum_t X[t,j]^2 from calibration ([K]).
+/// Quantize w `[K, N]` with diag-Hessian error feedback.
+/// `h_diag` = `sum_t X[t,j]^2` from calibration (`[K]`).
 pub fn gptq_quantize(
     w: &[f32],
     k: usize,

@@ -86,8 +86,8 @@ fn row_chunks(rows: usize, width: usize, threads: usize) -> Vec<std::ops::Range<
 // Symmetric per-output-channel (axis=1 of [K, N])
 // ---------------------------------------------------------------------------
 
-/// Per-column symmetric quantization of `w` [K, N] into caller buffers:
-/// `q` [K, N] codes, `delta` [N] scales. Parallel over row ranges with
+/// Per-column symmetric quantization of `w` `[K, N]` into caller buffers:
+/// `q` `[K, N]` codes, `delta` `[N]` scales. Parallel over row ranges with
 /// `threads` workers; bit-identical to `reference::symmetric_quantize_channel`.
 pub fn symmetric_quantize_channel_into_threads(
     w: &[f32],
@@ -280,8 +280,8 @@ pub fn zeroquant_group_quantize_into(
 // Token-wise (row-wise) activation quantization
 // ---------------------------------------------------------------------------
 
-/// Token-wise symmetric quantization of `x` [T, D] into caller buffers:
-/// `q` [T, D], `delta` [T]. Scale and encode passes are fused per row
+/// Token-wise symmetric quantization of `x` `[T, D]` into caller buffers:
+/// `q` `[T, D]`, `delta` `[T]`. Scale and encode passes are fused per row
 /// (one read while the row is cache-hot); rows are independent, so the
 /// fan-out splits row ranges.
 pub fn token_quantize_into_threads(
@@ -357,8 +357,8 @@ pub fn token_quantize_into(
 // SimQuant per-channel min/max affine (KV cache)
 // ---------------------------------------------------------------------------
 
-/// Per-channel min/max encode of `x` [T, D] into caller buffers: `q`
-/// [T, D] unsigned codes, `vmin` [D], `step` [D]. `step` doubles as the
+/// Per-channel min/max encode of `x` `[T, D]` into caller buffers: `q`
+/// `[T, D]` unsigned codes, `vmin` `[D]`, `step` `[D]`. `step` doubles as the
 /// vmax accumulator during the reduction pass, so the single-chunk path
 /// allocates nothing. `t == 0` yields the reference's zeroed params.
 #[allow(clippy::too_many_arguments)]
@@ -632,9 +632,9 @@ pub fn unpack_u8_into(packed: &[u8], bits: u32, out: &mut [u8]) -> Result<()> {
     Ok(())
 }
 
-/// Token-wise quantization of `x` [T, D] straight into a bit-packed code
-/// buffer (`packed` [packed_len(T*D, bits)]) plus per-row scales `delta`
-/// [T] — the ring collectives' send-endpoint encode. Per-element math is
+/// Token-wise quantization of `x` `[T, D]` straight into a bit-packed code
+/// buffer (`packed` `[packed_len(T*D, bits)]`) plus per-row scales `delta`
+/// `[T]` — the ring collectives' send-endpoint encode. Per-element math is
 /// byte-for-byte [`token_quantize_into`]'s (same scales, same codes
 /// pre-pack), so unpacking yields exactly the reference's codes. The
 /// code stream is packed contiguously row-major; rows are not

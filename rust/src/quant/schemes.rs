@@ -84,7 +84,7 @@ pub fn zeropoint_dequantize(q: &[i8], scale: f32, zp: f32) -> Vec<f32> {
 // Symmetric per-output-channel (axis=1 of [K, N])
 // ---------------------------------------------------------------------------
 
-/// Per-column symmetric quantization of w [K, N]. Returns (codes, delta [N]).
+/// Per-column symmetric quantization of w `[K, N]`. Returns `(codes, delta [N])`.
 /// Allocates fresh outputs; the hot path uses
 /// `symmetric_quantize_channel_into` with reused buffers.
 pub fn symmetric_quantize_channel(
@@ -155,8 +155,8 @@ pub fn zeroquant_group_dequantize(
     out
 }
 
-/// Token-wise (row-wise) symmetric activation quantization of x [T, D].
-/// Returns (codes, delta [T]).
+/// Token-wise (row-wise) symmetric activation quantization of x `[T, D]`.
+/// Returns `(codes, delta [T])`.
 pub fn token_quantize(x: &[f32], t: usize, d: usize, bits: u32) -> Result<(Vec<i8>, Vec<f32>)> {
     let mut q = vec![0i8; t * d];
     let mut delta = vec![0f32; t];
@@ -195,8 +195,8 @@ pub fn smoothquant_scales(
 // SimQuant: per-channel min/max affine (KV cache)
 // ---------------------------------------------------------------------------
 
-/// Per-channel (columns of x [T, D]) min/max encode to unsigned codes.
-/// Returns (codes u8, vmin [D], step [D]). Thm. A.2 bound holds per channel.
+/// Per-channel (columns of x `[T, D]`) min/max encode to unsigned codes.
+/// Returns `(codes u8, vmin [D], step [D])`. Thm. A.2 bound holds per channel.
 pub fn simquant_encode(
     x: &[f32],
     t: usize,

@@ -168,7 +168,7 @@ impl ModelHandle {
         exe.run_borrowed(&refs)
     }
 
-    /// Run the prefill graph: weights ++ [tokens].
+    /// Run the prefill graph: `weights ++ [tokens]`.
     pub fn prefill(&self, runtime_inputs: &[Tensor]) -> Result<Vec<Tensor>> {
         self.run(&self.prefill, runtime_inputs)
     }

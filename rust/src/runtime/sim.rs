@@ -6,12 +6,14 @@
 //! stands in for a compiled (prefill, decode) graph pair with the same
 //! tensor contract the workers consume:
 //!
-//!   prefill: tokens [B, CTX]            -> [logits [B, CTX, V],
-//!                                           k [L, B, CTX, D],
-//!                                           v [L, B, CTX, D]]
-//!   decode:  token [B], pos [B], caches -> [logits [B, V],
-//!                                           k_new [L, B, D],
-//!                                           v_new [L, B, D]]
+//! ```text
+//! prefill: tokens [B, CTX]            -> [logits [B, CTX, V],
+//!                                         k [L, B, CTX, D],
+//!                                         v [L, B, CTX, D]]
+//! decode:  token [B], pos [B], caches -> [logits [B, V],
+//!                                         k_new [L, B, D],
+//!                                         v_new [L, B, D]]
+//! ```
 //!
 //! Outputs are a pure deterministic hash of (token, position), so
 //! generation is reproducible across runs, thread counts, and — crucially
@@ -49,6 +51,12 @@ pub struct SimCost {
     pub decode_us_per_slot: f64,
 }
 
+/// The knobs a [`SimCost`] profile object may set (anything else in
+/// the object is a typo and triggers a [`SimCost::from_profile`]
+/// warning).
+const PROFILE_KEYS: [&str; 3] =
+    ["prefill_us_per_token", "decode_step_us", "decode_us_per_slot"];
+
 impl Default for SimCost {
     fn default() -> Self {
         SimCost {
@@ -84,6 +92,42 @@ impl SimCost {
         self.decode_step_us / batch.max(1) as f64 + self.decode_us_per_slot
     }
 
+    /// Expected probability that one self-speculative draft token,
+    /// drawn from the `draft_bits`-wide SimQuant variant of the same
+    /// weights, matches the full-width model's token at a position.
+    /// The ladder is monotone in width — FineQuant-style grouping
+    /// bounds the 4-bit quality gap tightly, 2-bit drafts diverge more
+    /// often — and 8 bits is the serving width itself, so it always
+    /// agrees. [`SimModel`] draws per-(token, pos) Bernoulli outcomes
+    /// against this rate; `coordinator::cost::CostEstimator` prices
+    /// speculative decode cycles with the same numbers so predictive
+    /// admission stays honest.
+    pub fn draft_accept_rate(draft_bits: u32) -> f64 {
+        match draft_bits {
+            8.. => 1.0,
+            4..=7 => 0.95,
+            2..=3 => 0.8,
+            _ => 0.5,
+        }
+    }
+
+    /// Expected tokens emitted per speculative draft/verify cycle: the
+    /// accepted prefix (`sum_{i=1..k} a^i` for per-position acceptance
+    /// `a`) plus one more token the verify pass always yields — the
+    /// correction token when a draft missed, the bonus continuation of
+    /// the last draft when all `k` landed. `k == 0` degenerates to
+    /// plain decode (one token per fused step).
+    pub fn spec_tokens_per_cycle(k: usize, draft_bits: u32) -> f64 {
+        let a = Self::draft_accept_rate(draft_bits);
+        let mut tokens = 1.0;
+        let mut run = 1.0;
+        for _ in 0..k {
+            run *= a;
+            tokens += run;
+        }
+        tokens
+    }
+
     /// Read a cost profile from parsed JSON. Accepts two shapes:
     ///
     ///   * a profile object: `{"prefill_us_per_token": ..,
@@ -104,6 +148,13 @@ impl SimCost {
         if v.as_obj().is_none() {
             bail!("sim cost profile must be a JSON object or a hotpath row array");
         }
+        for key in Self::unknown_profile_keys(v) {
+            eprintln!(
+                "warning: sim cost profile key {key:?} is not a SimCost knob \
+                 (known: {PROFILE_KEYS:?}); it will be ignored and the knob it \
+                 was probably meant to set keeps its default"
+            );
+        }
         let mut c = SimCost::default();
         let read = |key: &str, slot: &mut f64| -> Result<()> {
             if let Some(x) = v.get(key) {
@@ -121,6 +172,18 @@ impl SimCost {
         read("decode_step_us", &mut c.decode_step_us)?;
         read("decode_us_per_slot", &mut c.decode_us_per_slot)?;
         Ok(c)
+    }
+
+    /// Profile-object keys [`SimCost::from_profile`] does not
+    /// recognize. A typo'd knob (say `decode_us_per_tok`) would
+    /// otherwise be silently dropped and the real knob would quietly
+    /// run with its default; `from_profile` warns on each of these.
+    pub fn unknown_profile_keys(v: &Value) -> Vec<String> {
+        let Some(obj) = v.as_obj() else { return Vec::new() };
+        obj.iter()
+            .map(|(key, _)| key.clone())
+            .filter(|key| !PROFILE_KEYS.contains(&key.as_str()))
+            .collect()
     }
 
     /// Load a cost profile from a JSON file (see [`SimCost::from_profile`]).
@@ -329,6 +392,53 @@ impl SimModel {
         }
     }
 
+    /// Seeded per-(token, pos) acceptance draw for self-speculative
+    /// decoding: does the `draft_bits`-wide draft of the same weights
+    /// produce the full-width token at this position? A pure hash of
+    /// (seed, token, pos, draft_bits) thresholded against
+    /// [`SimCost::draft_accept_rate`], so the outcome is reproducible
+    /// across runs, lanes, and scheduling orders — exactly like the
+    /// trajectory itself.
+    fn draft_agrees(&self, token: i32, pos: usize, draft_bits: u32) -> bool {
+        let h = mix(
+            self.seed
+                ^ 0xD4AF_7000
+                ^ ((token as u64) << 1)
+                ^ ((pos as u64) << 24)
+                ^ ((draft_bits as u64) << 56),
+        );
+        unit01(h) < SimCost::draft_accept_rate(draft_bits)
+    }
+
+    /// Draft logits for (token, pos): the full-width row wherever the
+    /// acceptance model agrees, a deterministically perturbed row where
+    /// the low-bit draft would mispredict. A mispredicting row demotes
+    /// the full-width argmax below the [`unit`] range, so the draft
+    /// token provably differs and the acceptance draw actually binds.
+    fn fill_draft_logits(&self, token: i32, pos: usize, draft_bits: u32, out: &mut [f32]) {
+        self.fill_logits(token, pos, out);
+        if self.draft_agrees(token, pos, draft_bits) {
+            return;
+        }
+        let mut top = 0usize;
+        for (j, x) in out.iter().enumerate() {
+            if *x > out[top] {
+                top = j;
+            }
+        }
+        let h = mix(
+            self.seed
+                ^ 0xD1F7_0000
+                ^ ((token as u64) << 1)
+                ^ ((pos as u64) << 24)
+                ^ ((draft_bits as u64) << 48),
+        );
+        for (j, o) in out.iter_mut().enumerate() {
+            *o = unit(mix(h ^ ((j as u64) << 40)));
+        }
+        out[top] = -1.5;
+    }
+
     /// Run the simulated prefill graph over a `[B, CTX]` token matrix.
     /// Rows with `prompt_lens[slot] == 0` are padding (not charged).
     pub fn prefill(&self, tokens: &[i32], prompt_lens: &[usize]) -> Result<Vec<Tensor>> {
@@ -429,6 +539,137 @@ impl SimModel {
             Tensor::from_f32(vec![l, b, d], vv),
         ])
     }
+
+    /// One fused *draft* decode step for self-speculative decoding:
+    /// the same lane contract as [`SimModel::decode`], run through the
+    /// `draft_bits`-wide SimQuant variant of the same weights. Logits
+    /// follow the full-width trajectory wherever the seeded
+    /// per-(token, pos) acceptance model agrees and diverge
+    /// deterministically where the low-bit draft would mispredict; KV
+    /// rows are exact — the sim models draft error at the argmax
+    /// level, which is what the verify pass arbitrates. A draft step
+    /// streams `draft_bits / 8` of the bytes everywhere — weights
+    /// (the fixed launch term) and KV pages (the per-slot term, the
+    /// same scale [`SimModel::set_kv_bits`] applies) — so the whole
+    /// spin scales with the draft width; that discount is where
+    /// speculation's throughput win comes from. Draft passes do not
+    /// advance the fault clock: [`ShardFaults`] steps count full-width
+    /// fused calls, and one draft+verify cycle is one scheduler step.
+    pub fn decode_draft(
+        &self,
+        token: &[i32],
+        pos: &[i32],
+        active: &[bool],
+        draft_bits: u32,
+    ) -> Result<Vec<Tensor>> {
+        self.check_crashed()?;
+        let (b, v) = (self.batch, self.cfg.vocab);
+        let (l, d) = (self.cfg.n_layers, self.cfg.d_model);
+        if token.len() != b || pos.len() != b || active.len() != b {
+            bail!("sim draft decode: expected {} slots, got {}", b, token.len());
+        }
+        let bits = draft_bits.clamp(1, 8);
+        let mut logits = vec![0f32; b * v];
+        let mut k = vec![0f32; l * b * d];
+        let mut vv = vec![0f32; l * b * d];
+        let mut n_active = 0usize;
+        for slot in 0..b {
+            if !active[slot] {
+                continue;
+            }
+            n_active += 1;
+            let p = pos[slot] as usize;
+            self.fill_draft_logits(token[slot], p, bits, &mut logits[slot * v..(slot + 1) * v]);
+            for layer in 0..l {
+                let off = (layer * b + slot) * d;
+                self.fill_kv(layer, token[slot], p, true, &mut k[off..off + d]);
+                self.fill_kv(layer, token[slot], p, false, &mut vv[off..off + d]);
+            }
+        }
+        let scale = bits as f64 / 8.0;
+        spin_us(
+            scale * (self.cost.decode_step_us + self.cost.decode_us_per_slot * n_active as f64),
+        );
+        Ok(vec![
+            Tensor::from_f32(vec![b, v], logits),
+            Tensor::from_f32(vec![l, b, d], k),
+            Tensor::from_f32(vec![l, b, d], vv),
+        ])
+    }
+
+    /// One fused full-width *verify* pass over `k` speculated
+    /// positions per lane. `token`/`pos`/`live` are `[B * k]`
+    /// slot-major (lane `s`, position `j` at index `s * k + j`); dead
+    /// entries stay zero-filled. Returns `[B, k, V]` logits plus
+    /// `[L, B, k, D]` KV rows — exactly what the full-width model
+    /// produces for those inputs, so longest-prefix acceptance against
+    /// these logits is exact and the client stream stays bit-identical
+    /// to non-speculative decoding. Counts as one fused decode call on
+    /// the fault clock (crash/stall semantics match
+    /// [`SimModel::decode`]). Costs the same as a plain fused step —
+    /// one launch plus the native per-slot cost per lane with any live
+    /// position: verification is memory-bound on streaming the weights
+    /// and each lane's KV pages once, and the extra positions ride the
+    /// same pass as near-free compute.
+    pub fn decode_verify(
+        &self,
+        token: &[i32],
+        pos: &[i32],
+        live: &[bool],
+        k: usize,
+    ) -> Result<Vec<Tensor>> {
+        self.check_crashed()?;
+        let call = self.decode_calls.get();
+        self.decode_calls.set(call + 1);
+        if let Some(at) = self.faults.crash_at_step {
+            if call >= at {
+                self.crashed.set(true);
+                return Err(anyhow::Error::new(InjectedCrash { step: call }));
+            }
+        }
+        let (b, v) = (self.batch, self.cfg.vocab);
+        let (l, d) = (self.cfg.n_layers, self.cfg.d_model);
+        if k == 0 || token.len() != b * k || pos.len() != b * k || live.len() != b * k {
+            bail!("sim verify: expected {}x{} positions, got {}", b, k, token.len());
+        }
+        let mut logits = vec![0f32; b * k * v];
+        let mut kk = vec![0f32; l * b * k * d];
+        let mut vv = vec![0f32; l * b * k * d];
+        let mut n_lanes = 0usize;
+        for slot in 0..b {
+            if !live[slot * k..(slot + 1) * k].iter().any(|x| *x) {
+                continue;
+            }
+            n_lanes += 1;
+            for j in 0..k {
+                let i = slot * k + j;
+                if !live[i] {
+                    continue;
+                }
+                let p = pos[i] as usize;
+                self.fill_logits(token[i], p, &mut logits[i * v..(i + 1) * v]);
+                for layer in 0..l {
+                    let off = ((layer * b + slot) * k + j) * d;
+                    self.fill_kv(layer, token[i], p, true, &mut kk[off..off + d]);
+                    self.fill_kv(layer, token[i], p, false, &mut vv[off..off + d]);
+                }
+            }
+        }
+        let kv_scale = self.kv_bits.get() as f64 / 8.0;
+        spin_us(
+            self.cost.decode_step_us + self.cost.decode_us_per_slot * kv_scale * n_lanes as f64,
+        );
+        if let Some((at, extra)) = self.faults.stall {
+            if call == at {
+                spin_us(extra as f64 * self.cost.step_us(n_lanes));
+            }
+        }
+        Ok(vec![
+            Tensor::from_f32(vec![b, k, v], logits),
+            Tensor::from_f32(vec![l, b, k, d], kk),
+            Tensor::from_f32(vec![l, b, k, d], vv),
+        ])
+    }
 }
 
 /// splitmix64 finalizer — a cheap, well-mixed stateless hash.
@@ -442,6 +683,11 @@ fn mix(mut z: u64) -> u64 {
 /// Map a hash to f32 in [-1, 1).
 fn unit(h: u64) -> f32 {
     ((h >> 11) as f64 / (1u64 << 53) as f64 * 2.0 - 1.0) as f32
+}
+
+/// Map a hash to f64 in [0, 1) — the acceptance-model coin flip.
+fn unit01(h: u64) -> f64 {
+    (h >> 11) as f64 / (1u64 << 53) as f64
 }
 
 /// Burn `us` microseconds of wall clock (spin, not sleep: OS sleep
@@ -668,5 +914,155 @@ mod tests {
         spin_us(200.0);
         let el = t0.elapsed().as_secs_f64();
         assert!(el >= 190e-6, "spun only {el}s");
+    }
+
+    #[test]
+    fn unknown_profile_keys_warn_but_known_keys_pass() {
+        let typo =
+            json::parse(r#"{"decode_us_per_tok": 30, "decode_step_us": 300}"#).unwrap();
+        assert_eq!(SimCost::unknown_profile_keys(&typo), vec!["decode_us_per_tok"]);
+        // the typo'd knob still parses (warn, don't fail) with defaults
+        let c = SimCost::from_profile(&typo).unwrap();
+        assert_eq!(c.decode_step_us, 300.0);
+        assert_eq!(c.decode_us_per_slot, SimCost::default().decode_us_per_slot);
+        let clean = json::parse(r#"{"decode_us_per_slot": 30}"#).unwrap();
+        assert!(SimCost::unknown_profile_keys(&clean).is_empty());
+        // non-objects (hotpath row arrays) have no keys to vet
+        assert!(SimCost::unknown_profile_keys(&json::parse("[]").unwrap()).is_empty());
+    }
+
+    #[test]
+    fn acceptance_model_tracks_draft_width() {
+        assert_eq!(SimCost::draft_accept_rate(8), 1.0);
+        assert_eq!(SimCost::draft_accept_rate(4), 0.95);
+        assert_eq!(SimCost::draft_accept_rate(2), 0.8);
+        assert_eq!(SimCost::draft_accept_rate(1), 0.5);
+        // k=0 degenerates to plain decode: one token per cycle
+        assert_eq!(SimCost::spec_tokens_per_cycle(0, 4), 1.0);
+        // a=1: every draft accepted plus the bonus verify token
+        assert_eq!(SimCost::spec_tokens_per_cycle(3, 8), 4.0);
+        // a=0.95, k=2: 1 + 0.95 + 0.9025
+        let e = SimCost::spec_tokens_per_cycle(2, 4);
+        assert!((e - 2.8525).abs() < 1e-12, "got {e}");
+        // more drafts never hurt expected tokens per cycle
+        for bits in [2u32, 4] {
+            for k in 1..6usize {
+                assert!(
+                    SimCost::spec_tokens_per_cycle(k + 1, bits)
+                        >= SimCost::spec_tokens_per_cycle(k, bits)
+                );
+            }
+        }
+    }
+
+    #[test]
+    fn draft_logits_match_full_width_exactly_when_the_model_agrees() {
+        let m = sim();
+        let v = m.cfg.vocab;
+        let (mut full, mut draft) = (vec![0f32; v], vec![0f32; v]);
+        let (mut agreed, mut diverged) = (0usize, 0usize);
+        for token in 0..16i32 {
+            for pos in 0..16usize {
+                m.fill_logits(token, pos, &mut full);
+                m.fill_draft_logits(token, pos, 4, &mut draft);
+                if m.draft_agrees(token, pos, 4) {
+                    agreed += 1;
+                    assert_eq!(full, draft, "agreeing draft row must be bit-identical");
+                } else {
+                    diverged += 1;
+                    assert_ne!(
+                        argmax_idx(&full),
+                        argmax_idx(&draft),
+                        "mispredicted draft should flip the argmax (token {token} pos {pos})"
+                    );
+                }
+            }
+        }
+        // the seeded coin actually lands on both sides at a = 0.95
+        assert!(agreed > diverged, "agreed {agreed} <= diverged {diverged}");
+        assert!(diverged > 0, "no mispredictions in 256 draws at a = 0.95");
+        // native-width drafts never mispredict (a = 1.0)
+        for token in 0..16i32 {
+            for pos in 0..16usize {
+                assert!(m.draft_agrees(token, pos, 8));
+            }
+        }
+    }
+
+    fn argmax_idx(row: &[f32]) -> usize {
+        let mut best = 0usize;
+        for (j, x) in row.iter().enumerate() {
+            if *x > row[best] {
+                best = j;
+            }
+        }
+        best
+    }
+
+    #[test]
+    fn verify_pass_reproduces_plain_decode_rows() {
+        let m = sim();
+        let (b, k, v, d) = (m.batch, 3usize, m.cfg.vocab, m.cfg.d_model);
+        // lane 1 speculates tokens 5, 9, 2 at positions 10, 11, 12
+        let mut token = vec![0i32; b * k];
+        let mut pos = vec![0i32; b * k];
+        let mut live = vec![false; b * k];
+        token[k..2 * k].copy_from_slice(&[5, 9, 2]);
+        pos[k..2 * k].copy_from_slice(&[10, 11, 12]);
+        live[k..2 * k].fill(true);
+        let out = m.decode_verify(&token, &pos, &live, k).unwrap();
+        assert_eq!(out[0].shape, vec![b, k, v]);
+        assert_eq!(out[1].shape, vec![m.cfg.n_layers, b, k, d]);
+        let verify = out[0].f32_view().unwrap();
+        let plain = m
+            .decode(&[0, 9, 0, 0], &[0, 11, 0, 0], &[false, true, false, false])
+            .unwrap();
+        // verify row (lane 1, j = 1) == plain decode of (9, 11)
+        let row = &verify[(k + 1) * v..(k + 2) * v];
+        assert_eq!(row, &plain[0].f32_view().unwrap()[v..2 * v]);
+        // dead positions stay zero (lane 0 is entirely dead)
+        assert!(verify[..k * v].iter().all(|x| *x == 0.0));
+    }
+
+    #[test]
+    fn draft_passes_do_not_advance_the_fault_clock() {
+        let m = sim().with_faults(ShardFaults { crash_at_step: Some(1), stall: None });
+        let (tok, pos, act) = ([3, 0, 0, 0], [1, 0, 0, 0], [true, false, false, false]);
+        // any number of draft passes before the first counted call is fine
+        for _ in 0..5 {
+            m.decode_draft(&tok, &pos, &act, 4).unwrap();
+        }
+        let vtok = vec![3i32; m.batch * 2];
+        let vpos = vec![1i32; m.batch * 2];
+        let vlive = vec![true; m.batch * 2];
+        assert!(m.decode_verify(&vtok, &vpos, &vlive, 2).is_ok()); // call 0
+        let err = m.decode_verify(&vtok, &vpos, &vlive, 2).unwrap_err(); // call 1
+        assert!(is_injected_crash(&err), "{err:#}");
+        // the crash sticks for draft passes too
+        assert!(is_injected_crash(&m.decode_draft(&tok, &pos, &act, 4).unwrap_err()));
+    }
+
+    #[test]
+    fn draft_decode_is_cheaper_than_native_width() {
+        let cost = SimCost {
+            prefill_us_per_token: 0.0,
+            decode_step_us: 0.0,
+            decode_us_per_slot: 1000.0,
+        };
+        let m = SimModel::tiny(Variant::Fp, 4, cost);
+        let (tok, pos, act) = ([7, 3, 9, 2], [4, 1, 2, 3], [true; 4]);
+        let t0 = Instant::now();
+        m.decode(&tok, &pos, &act).unwrap();
+        let full_el = t0.elapsed().as_secs_f64();
+        let t1 = Instant::now();
+        let draft = m.decode_draft(&tok, &pos, &act, 2).unwrap();
+        let draft_el = t1.elapsed().as_secs_f64();
+        // 2-bit draft spins a quarter of the native per-slot cost
+        assert!(full_el >= 3.5e-3, "8-bit spun only {full_el}s");
+        assert!(draft_el < 2.0e-3, "2-bit draft still spun {draft_el}s");
+        // draft KV rows are exact — rollback/accept never corrupts cache
+        let plain = m.decode(&tok, &pos, &act).unwrap();
+        assert_eq!(draft[1].f32_view().unwrap(), plain[1].f32_view().unwrap());
+        assert_eq!(draft[2].f32_view().unwrap(), plain[2].f32_view().unwrap());
     }
 }

@@ -5,8 +5,10 @@
 //! batching, slot reuse after retirement, TTFT ordering, static-mode
 //! equivalence with the pre-refactor run-to-completion behavior, chunked
 //! prefill (token streams bit-identical to whole-prompt, decode progress
-//! between chunks, no loss across chunk seams), and SLO admission (shed
-//! requests terminate exactly once; `Priority` serves everything). The
+//! between chunks, no loss across chunk seams), SLO admission (shed
+//! requests terminate exactly once; `Priority` serves everything), and
+//! self-speculative decoding (streams bit-identical to plain decode for
+//! every (k, draft_bits); rejected draft suffixes leak no KV blocks). The
 //! PJRT tests (real registry -> server -> workers) remain gated on
 //! `--features xla` + compiled artifacts.
 
@@ -1008,6 +1010,113 @@ fn preempt_resume_stays_exactly_once_under_fault_drill() {
             by_id(&reference.responses, id).tokens,
             by_id(&report.responses, id).tokens,
             "id {id} diverged across preempt/resume + migration"
+        );
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Self-speculative decoding (sim backend)
+// ---------------------------------------------------------------------------
+
+#[test]
+fn speculative_streams_bit_identical_to_plain_across_k_and_bits() {
+    // only verified (full-width) tokens are ever emitted, so speculation
+    // may move time but never tokens: every (k, draft_bits) combination
+    // must reproduce the plain-decode streams exactly, across chunked
+    // prefill, multi-shard routing, and mixed budgets
+    let n = 24;
+    let run = |k: usize, bits: u32| {
+        let mut cfg = sim_cfg(SchedulerMode::Continuous, 2, 4);
+        cfg.prefill_chunk = 8;
+        cfg.spec_k = k;
+        cfg.spec_draft_bits = bits;
+        let server = Server::start_sim(cfg, SimCost::fast()).unwrap();
+        server.run_workload(long_mixed_requests(n)).unwrap()
+    };
+    let plain = run(0, 4);
+    assert_eq!(plain.drafted_tokens, 0, "k=0 must never draft");
+    for k in [2usize, 4] {
+        for bits in [2u32, 4] {
+            let report = run(k, bits);
+            assert_eq!(
+                report.responses.len(),
+                n,
+                "k={k} bits={bits}: a speculative lane lost a request"
+            );
+            assert!(report.drafted_tokens > 0, "k={k} bits={bits}: speculation never drafted");
+            assert!(
+                report.accepted_tokens <= report.drafted_tokens,
+                "k={k} bits={bits}: accepted overran drafted"
+            );
+            assert!(
+                report.acceptance_rate() > 0.0,
+                "k={k} bits={bits}: no draft ever survived verification"
+            );
+            assert_eq!(report.lost_tokens, 0, "k={k} bits={bits}: a position was skipped");
+            assert_eq!(report.dup_tokens, 0, "k={k} bits={bits}: a position was re-delivered");
+            for id in 1..=n as u64 {
+                assert_eq!(
+                    by_id(&plain.responses, id).tokens,
+                    by_id(&report.responses, id).tokens,
+                    "id {id} diverged under speculative decode (k={k}, bits={bits})"
+                );
+            }
+            // every request still delivers its exact budget
+            for (i, req) in long_mixed_requests(n).iter().enumerate() {
+                assert_eq!(by_id(&report.responses, req.id).tokens.len(), 2 + (i % 5));
+            }
+        }
+    }
+}
+
+#[test]
+fn rejected_draft_suffixes_never_leak_kv_blocks() {
+    // 2-bit drafts mispredict ~20% of draws, so rejected suffixes (and
+    // their block-table truncations) happen many times across this run;
+    // rollback is pure table bookkeeping, so after every slot retires
+    // the pool must balance exactly: every block is either free or
+    // retained by the prefix cache — none stranded by a truncation
+    let mut spec = Worker::new_spec(
+        0,
+        Backend::Sim(SimModel::tiny(Variant::SimQuant, 4, SimCost::fast())),
+        0,
+        None,
+        true,
+        4,
+        2,
+    );
+    let mut plain = Worker::new(
+        0,
+        Backend::Sim(SimModel::tiny(Variant::SimQuant, 4, SimCost::fast())),
+    );
+    let mut expected: Vec<Response> = Vec::new();
+    let mut got: Vec<Response> = Vec::new();
+    for chunk in long_mixed_requests(16).chunks(4) {
+        let batch = |reqs: &[Request]| Batch {
+            requests: reqs.to_vec(),
+            formed_at: std::time::Instant::now(),
+        };
+        expected.extend(plain.process_batch(batch(chunk)).unwrap());
+        got.extend(spec.process_batch(batch(chunk)).unwrap());
+        // pool accounting holds at every batch boundary, not just at
+        // the end — a leak would compound across batches
+        let kv = spec.kv();
+        assert_eq!(
+            kv.free_block_count() + kv.retained_count(),
+            kv.total_blocks(),
+            "a rejected draft suffix stranded a KV block"
+        );
+    }
+    assert!(spec.drafted_tokens > 0, "speculation never drafted");
+    assert!(
+        spec.accepted_tokens < spec.drafted_tokens,
+        "2-bit drafts never mispredicted — the rollback path went unexercised"
+    );
+    for id in 1..=16u64 {
+        assert_eq!(
+            by_id(&expected, id).tokens,
+            by_id(&got, id).tokens,
+            "id {id} diverged after draft rollback"
         );
     }
 }
