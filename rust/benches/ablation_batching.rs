@@ -99,6 +99,7 @@ fn run_one(
         long_frac: 0.0,
         interactive_frac: 1.0,
         shared_prefix_frac: 0.0,
+        prefill_heavy_frac: 0.0,
         seed: 42,
     };
     let report = server.run_open_loop(workload::generate(&spec))?;
@@ -175,6 +176,7 @@ fn slo_spec(n_requests: usize, interactive_frac: f64) -> workload::WorkloadSpec 
         long_frac: 0.25,
         interactive_frac,
         shared_prefix_frac: 0.0,
+        prefill_heavy_frac: 0.0,
         seed: 42,
     }
 }
@@ -315,6 +317,7 @@ fn prefix_spec(
         long_frac: 0.0,
         interactive_frac,
         shared_prefix_frac: SHARED_PREFIX_FRAC,
+        prefill_heavy_frac: 0.0,
         seed: 4242,
     }
 }
@@ -420,6 +423,112 @@ fn run_spec(
         dup_tokens: report.dup_tokens,
         served: report.responses.len(),
         requests: n_requests,
+        streams: report.responses.iter().map(|r| (r.id, r.tokens.clone())).collect(),
+    })
+}
+
+// ---------------------------------------------------------------------------
+// Sweep 6: disaggregated prefill/decode vs mixed fleet
+// ---------------------------------------------------------------------------
+
+/// Fraction of the disagg sweep's requests forced to the prefill-bound
+/// shape (near-max prompt, minimum decode) — the trace the split is
+/// built for: prefill work that would stall a mixed fleet's decode
+/// lanes runs on dedicated admission shards instead.
+const DISAGG_PREFILL_HEAVY_FRAC: f64 = 0.8;
+
+/// Offered load per shard (req/s) for the disagg sweep: sustained
+/// prefill pressure on the admitting half without saturating either
+/// fleet shape, so tokens/s tracks the arrival process in both arms.
+const DISAGG_RATE_PER_SHARD: f64 = 150.0;
+
+/// Pressure-tick clock for the sweep (no fault plan, so liveness stays
+/// disarmed): the default deadline is sized for crash detection, far
+/// slower than the re-role episodes a bench-length run contains.
+const DISAGG_STEP_DEADLINE_MS: u64 = 50;
+
+struct DisaggRow {
+    scenario: &'static str,
+    shards: usize,
+    tok_per_s: f64,
+    ttft_mean_ms: f64,
+    lat_p99_ms: f64,
+    interactive_p99_ms: f64,
+    itl_p99_ms: f64,
+    handoffs: u64,
+    kv_migrate_bytes: u64,
+    reroles: u64,
+    estimator_abs_err_ms: f64,
+    prefill_busy_share: f64,
+    decode_busy_share: f64,
+    lost_tokens: u64,
+    dup_tokens: u64,
+    served: usize,
+    requests: usize,
+    router_in_flight: usize,
+    /// token streams keyed by request id (bit-identity vs the mixed arm)
+    streams: std::collections::HashMap<u64, Vec<i32>>,
+}
+
+/// Prefill-heavy mixed-priority trace: most requests carry near-max
+/// prompts with minimum decode; the rest are ordinary chat turns whose
+/// interactive half measures the latency the split must protect.
+fn disagg_spec(n_requests: usize, shards: usize) -> workload::WorkloadSpec {
+    workload::WorkloadSpec {
+        n_requests,
+        rate_per_s: DISAGG_RATE_PER_SHARD * shards as f64,
+        prompt_min: 8,
+        prompt_max: 96,
+        max_new_min: 2,
+        max_new_max: 12,
+        long_frac: 0.0,
+        interactive_frac: 0.5,
+        shared_prefix_frac: 0.0,
+        prefill_heavy_frac: DISAGG_PREFILL_HEAVY_FRAC,
+        seed: 777,
+    }
+}
+
+fn run_disagg(
+    scenario: &'static str,
+    disagg: bool,
+    shards: usize,
+    n_requests: usize,
+    cost: SimCost,
+) -> anyhow::Result<DisaggRow> {
+    let mut cfg = ServerConfig::new("sim-tiny", Variant::SimQuant);
+    cfg.shards = shards;
+    cfg.batch = 8;
+    cfg.mode = SchedulerMode::Continuous;
+    cfg.prefill_chunk = PREFILL_CHUNK;
+    cfg.disagg = disagg;
+    cfg.fault.step_deadline = Duration::from_millis(DISAGG_STEP_DEADLINE_MS);
+    let server = Server::start_sim(cfg, cost)?;
+    let report = server.run_open_loop(workload::generate(&disagg_spec(n_requests, shards)))?;
+    assert_eq!(
+        report.responses.len(),
+        n_requests,
+        "{scenario} @ {shards} shards: open admission must serve every request"
+    );
+    Ok(DisaggRow {
+        scenario,
+        shards,
+        tok_per_s: report.tokens_per_s(),
+        ttft_mean_ms: report.ttft_summary().mean * 1e3,
+        lat_p99_ms: report.latency_percentile(0.99) * 1e3,
+        interactive_p99_ms: report.latency_percentile_for(Priority::Interactive, 0.99) * 1e3,
+        itl_p99_ms: report.itl_percentile(0.99) * 1e3,
+        handoffs: report.handoffs,
+        kv_migrate_bytes: report.kv_migrate_bytes,
+        reroles: report.reroles,
+        estimator_abs_err_ms: report.estimator_abs_err * 1e3,
+        prefill_busy_share: report.prefill_busy_share,
+        decode_busy_share: report.decode_busy_share,
+        lost_tokens: report.lost_tokens,
+        dup_tokens: report.dup_tokens,
+        served: report.responses.len(),
+        requests: n_requests,
+        router_in_flight: report.router_in_flight,
         streams: report.responses.iter().map(|r| (r.id, r.tokens.clone())).collect(),
     })
 }
@@ -941,6 +1050,135 @@ fn main() -> anyhow::Result<()> {
          mispredicted cycle costs the draft spin and nothing else."
     );
 
+    // ---- sweep 6: disaggregated prefill/decode vs mixed fleet ----------
+    let disagg_requests = if smoke { 32 } else { 256 };
+    println!(
+        "\n== ablation: disaggregated prefill/decode vs mixed (continuous, chunked \
+         prefill {PREFILL_CHUNK}, {disagg_requests} reqs, {DISAGG_RATE_PER_SHARD} \
+         req/s/shard, {:.0}% prefill-heavy) ==\n",
+        DISAGG_PREFILL_HEAVY_FRAC * 100.0
+    );
+    let mut disagg_rows: Vec<DisaggRow> = Vec::new();
+    for shards in [2usize, 4, 8] {
+        disagg_rows.push(run_disagg("mixed", false, shards, disagg_requests, slo_cost)?);
+        disagg_rows.push(run_disagg("disagg", true, shards, disagg_requests, slo_cost)?);
+    }
+    let mut disagg_table = Table::new(&[
+        "fleet",
+        "shards",
+        "tok/s",
+        "ttft mean (ms)",
+        "int p99 (ms)",
+        "itl p99 (ms)",
+        "handoffs",
+        "kv moved (MB)",
+        "re-roles",
+        "busy p/d",
+    ]);
+    for r in &disagg_rows {
+        disagg_table.row(vec![
+            r.scenario.to_string(),
+            r.shards.to_string(),
+            format!("{:.0}", r.tok_per_s),
+            format!("{:.2}", r.ttft_mean_ms),
+            format!("{:.2}", r.interactive_p99_ms),
+            format!("{:.3}", r.itl_p99_ms),
+            r.handoffs.to_string(),
+            format!("{:.2}", r.kv_migrate_bytes as f64 / 1e6),
+            r.reroles.to_string(),
+            format!("{:.0}/{:.0}", r.prefill_busy_share * 100.0, r.decode_busy_share * 100.0),
+        ]);
+    }
+    disagg_table.print();
+
+    // role placement may only move work, never tokens: every disagg
+    // stream must be bit-identical to the mixed fleet at the same size
+    let mut disagg_mismatched: Vec<usize> = Vec::new();
+    for r in &disagg_rows {
+        let bad = if r.scenario == "disagg" {
+            let mixed = disagg_rows
+                .iter()
+                .find(|m| m.scenario == "mixed" && m.shards == r.shards)
+                .expect("mixed baseline row missing");
+            r.streams.iter().filter(|(id, toks)| mixed.streams.get(id) != Some(toks)).count()
+        } else {
+            0
+        };
+        disagg_mismatched.push(bad);
+        assert_eq!(
+            bad, 0,
+            "disagg @ {} shards: {bad} token streams diverged from the mixed fleet",
+            r.shards
+        );
+        assert_eq!(
+            (r.lost_tokens, r.dup_tokens),
+            (0, 0),
+            "{} @ {} shards: serving lost or duplicated tokens",
+            r.scenario,
+            r.shards
+        );
+        assert_eq!(
+            r.router_in_flight, 0,
+            "{} @ {} shards: router charge leaked",
+            r.scenario, r.shards
+        );
+    }
+    for shards in [2usize, 4, 8] {
+        let pick = |scen: &str| {
+            disagg_rows
+                .iter()
+                .find(|r| r.scenario == scen && r.shards == shards)
+                .expect("sweep arm missing")
+        };
+        let (m, d) = (pick("mixed"), pick("disagg"));
+        println!(
+            "\ndisagg @ {shards} shards: tok/s {:.0} vs mixed {:.0} ({:.2}x), int p99 \
+             {:.2} vs {:.2} ms, {} handoffs, {:.2} MB migrated, {} re-roles, \
+             estimator err {:.1} ms",
+            d.tok_per_s,
+            m.tok_per_s,
+            d.tok_per_s / m.tok_per_s.max(1e-9),
+            d.interactive_p99_ms,
+            m.interactive_p99_ms,
+            d.handoffs,
+            d.kv_migrate_bytes as f64 / 1e6,
+            d.reroles,
+            d.estimator_abs_err_ms,
+        );
+        assert!(d.handoffs > 0, "disagg @ {shards} shards never handed a stream off");
+        assert!(
+            d.kv_migrate_bytes > 0,
+            "disagg @ {shards} shards handed off without moving KV pages"
+        );
+        assert_eq!(m.handoffs, 0, "mixed @ {shards} shards handed off");
+        // throughput parity and latency gates (full runs only: smoke
+        // bursts are too short for stable ratios on noisy CI runners)
+        if !smoke {
+            let tok_ratio = d.tok_per_s / m.tok_per_s.max(1e-9);
+            assert!(
+                (0.85..=1.15).contains(&tok_ratio),
+                "disagg @ {shards} shards broke tokens/s parity: {tok_ratio:.3}x mixed"
+            );
+            if shards >= 8 {
+                assert!(
+                    d.interactive_p99_ms <= m.interactive_p99_ms,
+                    "disagg @ {shards} shards regressed interactive p99: {:.2} ms vs \
+                     mixed {:.2} ms",
+                    d.interactive_p99_ms,
+                    m.interactive_p99_ms
+                );
+            }
+        }
+    }
+    println!(
+        "\nshape: dedicated decode shards never interleave chunked prefill between \
+         decode steps, so the interactive tail tightens as the fleet grows; the \
+         cost is one quantized page migration per stream (bits/8 of the lane's KV \
+         bytes on the simulated wire), amortized over every decoded token. \
+         Re-roling converts whichever side the calibrated estimator says is \
+         drowning, one shard per pressure episode."
+    );
+
     // machine-readable trajectory output
     let json_rows: Vec<Value> = rows
         .iter()
@@ -1041,6 +1279,33 @@ fn main() -> anyhow::Result<()> {
             ])
         })
         .collect();
+    let disagg_json: Vec<Value> = disagg_rows
+        .iter()
+        .zip(&disagg_mismatched)
+        .map(|(r, bad)| {
+            Value::obj(vec![
+                ("scenario", Value::Str(r.scenario.into())),
+                ("shards", Value::Num(r.shards as f64)),
+                ("requests", Value::Num(r.requests as f64)),
+                ("served", Value::Num(r.served as f64)),
+                ("tok_per_s", Value::Num(r.tok_per_s)),
+                ("ttft_mean_ms", Value::Num(r.ttft_mean_ms)),
+                ("lat_p99_ms", Value::Num(r.lat_p99_ms)),
+                ("interactive_p99_ms", Value::Num(r.interactive_p99_ms)),
+                ("itl_p99_ms", Value::Num(r.itl_p99_ms)),
+                ("handoffs", Value::Num(r.handoffs as f64)),
+                ("kv_migrate_bytes", Value::Num(r.kv_migrate_bytes as f64)),
+                ("reroles", Value::Num(r.reroles as f64)),
+                ("estimator_abs_err_ms", Value::Num(r.estimator_abs_err_ms)),
+                ("prefill_busy_share", Value::Num(r.prefill_busy_share)),
+                ("decode_busy_share", Value::Num(r.decode_busy_share)),
+                ("lost_tokens", Value::Num(r.lost_tokens as f64)),
+                ("dup_tokens", Value::Num(r.dup_tokens as f64)),
+                ("mismatched_streams", Value::Num(*bad as f64)),
+                ("router_in_flight", Value::Num(r.router_in_flight as f64)),
+            ])
+        })
+        .collect();
     let out = Value::obj(vec![
         ("bench", Value::Str("ablation_batching".into())),
         ("backend", Value::Str("sim".into())),
@@ -1056,6 +1321,7 @@ fn main() -> anyhow::Result<()> {
         ("predictive_rows", Value::Arr(pred_json)),
         ("prefix_rows", Value::Arr(prefix_json)),
         ("spec_rows", Value::Arr(spec_json)),
+        ("disagg_rows", Value::Arr(disagg_json)),
     ]);
     // smoke runs (CI) write to target/ so the committed full-run numbers
     // at the repo root never drift to smoke-sized samples

@@ -149,6 +149,7 @@ fn spec(n_requests: usize) -> workload::WorkloadSpec {
         long_frac: 0.0,
         interactive_frac: 1.0,
         shared_prefix_frac: 0.0,
+        prefill_heavy_frac: 0.0,
         seed: WORKLOAD_SEED,
     }
 }

@@ -90,6 +90,17 @@ const SPEC_SPEEDUP_MIN: f64 = 1.2;
 /// handful of requests are noisy).
 const SPEC_P99_MAX_RATIO: f64 = 1.05;
 
+/// At the scaling end of the disagg sweep (8 shards) the split fleet's
+/// interactive p99 must not exceed the mixed fleet's: dedicated decode
+/// shards never interleave chunked prefill between decode steps, which
+/// is the entire point of paying for page migration.
+const DISAGG_INT_P99_MAX_RATIO: f64 = 1.0;
+
+/// Smaller fleets get slack on the interactive tail: a 2-shard split is
+/// the degenerate 1+1 and pays the halved admission width before the
+/// decode-isolation win can amortize it.
+const DISAGG_INT_P99_SMALL_FLEET_RATIO: f64 = 1.25;
+
 fn f(row: &Value, key: &str) -> f64 {
     row.get(key).and_then(Value::as_f64).unwrap_or(f64::NAN)
 }
@@ -485,6 +496,89 @@ fn check_spec_rows(rows: &[Value], smoke: bool, failures: &mut Vec<String>) {
     }
 }
 
+fn check_disagg_rows(rows: &[Value], smoke: bool, failures: &mut Vec<String>) {
+    // exactly-once + bit-identity hold for every arm at every size:
+    // moving a stream's KV pages between shards may change where tokens
+    // are produced, never which tokens are delivered
+    for r in rows {
+        let label = format!("{} @ {} shards", s(r, "scenario"), f(r, "shards"));
+        for key in ["lost_tokens", "dup_tokens", "mismatched_streams", "router_in_flight"] {
+            let v = f(r, key);
+            if v.is_nan() || v != 0.0 {
+                failures.push(format!(
+                    "disagg_rows: {label}: {key} = {v} (must be 0) — page migration \
+                     changed, lost, or leaked delivered tokens"
+                ));
+            }
+        }
+        if f(r, "served") != f(r, "requests") {
+            failures.push(format!(
+                "disagg_rows: {label}: served {} != offered {} — a handed-off stream \
+                 never completed",
+                f(r, "served"),
+                f(r, "requests"),
+            ));
+        }
+    }
+    for shards in [2.0f64, 4.0, 8.0] {
+        let pick = |scen: &str| {
+            rows.iter().find(|r| s(r, "scenario") == scen && f(r, "shards") == shards)
+        };
+        let (Some(mixed), Some(disagg)) = (pick("mixed"), pick("disagg")) else {
+            failures.push(format!(
+                "disagg_rows: missing mixed/disagg pair at {shards} shards"
+            ));
+            continue;
+        };
+        let handoffs = f(disagg, "handoffs");
+        if handoffs.is_nan() || handoffs <= 0.0 {
+            failures.push(format!(
+                "disagg_rows: disagg @ {shards} shards recorded no handoffs — the \
+                 prefill half never released a stream"
+            ));
+        }
+        let moved = f(disagg, "kv_migrate_bytes");
+        if moved.is_nan() || moved <= 0.0 {
+            failures.push(format!(
+                "disagg_rows: disagg @ {shards} shards migrated no KV bytes — streams \
+                 continued via re-prefill instead of the quantized page wire"
+            ));
+        }
+        if f(mixed, "handoffs") != 0.0 || f(mixed, "kv_migrate_bytes") != 0.0 {
+            failures.push(format!(
+                "disagg_rows: mixed @ {shards} shards handed off or migrated pages — \
+                 the baseline is not a baseline"
+            ));
+        }
+        let tok_ratio = f(disagg, "tok_per_s") / f(mixed, "tok_per_s").max(1e-12);
+        if !(TOK_RATIO_BAND.0..=TOK_RATIO_BAND.1).contains(&tok_ratio) {
+            failures.push(format!(
+                "disagg_rows: disagg/mixed tok/s ratio {tok_ratio:.3} at {shards} \
+                 shards outside [{}, {}] — the latency shape must come at \
+                 throughput parity",
+                TOK_RATIO_BAND.0, TOK_RATIO_BAND.1
+            ));
+        }
+        // the interactive tail needs the full-size burst to stabilize;
+        // smoke keeps the identity/accounting/parity gates above
+        if !smoke {
+            let p99_ratio =
+                f(disagg, "interactive_p99_ms") / f(mixed, "interactive_p99_ms").max(1e-12);
+            let max_ratio = if shards >= 8.0 {
+                DISAGG_INT_P99_MAX_RATIO
+            } else {
+                DISAGG_INT_P99_SMALL_FLEET_RATIO
+            };
+            if p99_ratio.is_nan() || p99_ratio > max_ratio {
+                failures.push(format!(
+                    "disagg_rows: disagg/mixed interactive p99 ratio {p99_ratio:.3} at \
+                     {shards} shards > {max_ratio} — the split lost its tail win"
+                ));
+            }
+        }
+    }
+}
+
 fn main() -> ExitCode {
     let manifest = std::path::Path::new(env!("CARGO_MANIFEST_DIR"));
     // `cargo bench` invokes every bench binary with a `--bench` flag;
@@ -542,11 +636,16 @@ fn main() -> ExitCode {
         Some(rows) => check_spec_rows(rows, smoke, &mut failures),
         None => failures.push("missing `spec_rows` array".to_string()),
     }
+    match doc.get("disagg_rows").and_then(Value::as_arr) {
+        Some(rows) => check_disagg_rows(rows, smoke, &mut failures),
+        None => failures.push("missing `disagg_rows` array".to_string()),
+    }
     if failures.is_empty() {
         println!(
             "check_batching: {} OK (static-vs-continuous + chunked/admission + \
              predictive-admission + fault-recovery + elastic kill/degrade/rejoin + \
-             prefix-cache/preemption + speculative-decode gates hold)",
+             prefix-cache/preemption + speculative-decode + disagg-migration gates \
+             hold)",
             path.display()
         );
         ExitCode::SUCCESS

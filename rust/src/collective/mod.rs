@@ -20,7 +20,8 @@ mod topology;
 
 pub use link::{CommStats, LinkFaults, LinkModel};
 pub use ops::{
-    adaptive_chunk, Collective, OpError, CHUNK_RETRY_LIMIT, MAX_QUANT_CHUNK, QUANT_CHUNK,
+    adaptive_chunk, transfer_quant_pages, Collective, OpError, CHUNK_RETRY_LIMIT,
+    MAX_QUANT_CHUNK, QUANT_CHUNK,
 };
 pub use topology::{Topology, Transport};
 

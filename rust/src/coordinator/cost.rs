@@ -181,6 +181,103 @@ impl CostEstimator {
     pub fn block_drain_s(&self, deficit_blocks: usize, block_size: usize) -> f64 {
         (deficit_blocks * block_size) as f64 * self.decode_s_per_token
     }
+
+    /// The estimator with every time knob scaled by an online
+    /// calibration factor ([`EstimatorCalibration::correction`]). A
+    /// single multiplicative residual models "the whole fit was
+    /// proportionally off" (contention the static fit can't see), so
+    /// prefill, decode, and the step clock stretch together and every
+    /// derived margin — chunk serialization, block drain — stays
+    /// consistent with the corrected rates. Non-positive or non-finite
+    /// factors are ignored (identity).
+    pub fn calibrated(&self, correction: f64) -> Self {
+        if !correction.is_finite() || correction <= 0.0 {
+            return *self;
+        }
+        CostEstimator {
+            prefill_s_per_token: self.prefill_s_per_token * correction,
+            decode_s_per_token: self.decode_s_per_token * correction,
+            step_s: self.step_s * correction,
+            batch: self.batch,
+        }
+    }
+}
+
+/// Online predicted-vs-actual calibration for the [`CostEstimator`].
+///
+/// The estimator's knobs come from a static fit (sim cost knobs or a
+/// pinned hotpath profile), but the serving fleet drifts away from any
+/// static fit: degraded widths, speculative yield, and disaggregated
+/// handoff all bend real completion times. Every completed request is
+/// one labeled sample — the dispatcher records `t_pred` at admission
+/// and observes `t_act` at completion — and this regresses the
+/// multiplicative residual online as an EMA, so recent traffic
+/// dominates. The corrected estimate `predict * correction()` feeds the
+/// predictive admission margin, and the prefill:decode re-roling band
+/// reads the same calibrated model — the estimator-feedback loop the
+/// predictive-admission PR left open.
+#[derive(Debug, Clone, Copy, Default)]
+pub struct EstimatorCalibration {
+    /// EMA of `actual / predicted`
+    ratio: f64,
+    /// EMA of `|actual - predicted| / predicted`
+    abs_err: f64,
+    samples: u64,
+}
+
+impl EstimatorCalibration {
+    /// EMA smoothing: one sample moves the running estimates by 10%.
+    const ALPHA: f64 = 0.1;
+    /// Clamp band for the correction so a few wild residuals cannot
+    /// price the fleet into shedding everything (or admitting blind).
+    const CORRECTION_BAND: (f64, f64) = (0.25, 4.0);
+
+    /// Fold in one completed request: `predicted_s` is what the gate
+    /// priced at admission, `actual_s` the measured completion time.
+    /// Degenerate samples (non-positive or non-finite on either side)
+    /// are dropped — a zero prediction carries no calibration signal.
+    pub fn observe(&mut self, predicted_s: f64, actual_s: f64) {
+        let usable = predicted_s.is_finite()
+            && actual_s.is_finite()
+            && predicted_s > 0.0
+            && actual_s > 0.0;
+        if !usable {
+            return;
+        }
+        let ratio = actual_s / predicted_s;
+        let err = (actual_s - predicted_s).abs() / predicted_s;
+        if self.samples == 0 {
+            self.ratio = ratio;
+            self.abs_err = err;
+        } else {
+            self.ratio += Self::ALPHA * (ratio - self.ratio);
+            self.abs_err += Self::ALPHA * (err - self.abs_err);
+        }
+        self.samples += 1;
+    }
+
+    /// Multiplicative correction for predictions: `1.0` until the first
+    /// sample lands, then the EMA of `actual / predicted` clamped to
+    /// the safety band.
+    pub fn correction(&self) -> f64 {
+        if self.samples == 0 {
+            return 1.0;
+        }
+        let (lo, hi) = Self::CORRECTION_BAND;
+        self.ratio.clamp(lo, hi)
+    }
+
+    /// Mean absolute relative prediction error (EMA) — the
+    /// estimator-quality signal the disaggregation bench reports as
+    /// `estimator_err`.
+    pub fn mean_abs_err(&self) -> f64 {
+        self.abs_err
+    }
+
+    /// Completed-request samples folded in so far.
+    pub fn samples(&self) -> u64 {
+        self.samples
+    }
 }
 
 #[cfg(test)]
@@ -305,5 +402,75 @@ mod tests {
         assert_eq!(e.block_drain_s(0, 16), 0.0);
         // degraded width drains faster — deficit latency shrinks with it
         assert!(e.degraded(4).block_drain_s(3, 16) < e.block_drain_s(3, 16));
+    }
+
+    #[test]
+    fn calibration_starts_neutral() {
+        let c = EstimatorCalibration::default();
+        assert_eq!(c.correction(), 1.0);
+        assert_eq!(c.mean_abs_err(), 0.0);
+        assert_eq!(c.samples(), 0);
+    }
+
+    #[test]
+    fn calibration_tracks_a_constant_bias() {
+        let mut c = EstimatorCalibration::default();
+        for _ in 0..200 {
+            c.observe(0.010, 0.015); // the fit is 1.5x optimistic
+        }
+        assert!((c.correction() - 1.5).abs() < 1e-9, "{}", c.correction());
+        assert!((c.mean_abs_err() - 0.5).abs() < 1e-9, "{}", c.mean_abs_err());
+        assert_eq!(c.samples(), 200);
+    }
+
+    #[test]
+    fn calibration_is_recency_weighted() {
+        let mut c = EstimatorCalibration::default();
+        for _ in 0..50 {
+            c.observe(0.01, 0.02); // old regime: 2x under-priced
+        }
+        for _ in 0..50 {
+            c.observe(0.01, 0.01); // fleet drifts back to the fit
+        }
+        // 0.9^50 of the old bias is all that survives
+        assert!(c.correction() < 1.05, "{}", c.correction());
+        assert!(c.correction() >= 1.0);
+    }
+
+    #[test]
+    fn calibration_clamps_wild_residuals() {
+        let mut over = EstimatorCalibration::default();
+        over.observe(0.001, 10.0);
+        assert_eq!(over.correction(), 4.0);
+        let mut under = EstimatorCalibration::default();
+        under.observe(10.0, 0.001);
+        assert_eq!(under.correction(), 0.25);
+    }
+
+    #[test]
+    fn calibration_ignores_degenerate_samples() {
+        let mut c = EstimatorCalibration::default();
+        c.observe(0.0, 1.0);
+        c.observe(1.0, 0.0);
+        c.observe(f64::NAN, 1.0);
+        c.observe(1.0, f64::INFINITY);
+        c.observe(-1.0, 1.0);
+        assert_eq!(c.samples(), 0);
+        assert_eq!(c.correction(), 1.0);
+    }
+
+    #[test]
+    fn calibrated_estimator_scales_every_time_knob_together() {
+        let e = est();
+        let c = e.calibrated(1.5);
+        let t = e.predict_s((100, 50), 16, 8, 16);
+        assert!((c.predict_s((100, 50), 16, 8, 16) - 1.5 * t).abs() < 1e-12);
+        assert!((c.step_s() - 1.5 * e.step_s()).abs() < 1e-15);
+        assert!((c.block_drain_s(3, 16) - 1.5 * e.block_drain_s(3, 16)).abs() < 1e-12);
+        assert_eq!(c.batch(), e.batch());
+        // degenerate corrections are the identity
+        assert_eq!(e.calibrated(0.0).step_s(), e.step_s());
+        assert_eq!(e.calibrated(f64::NAN).step_s(), e.step_s());
+        assert_eq!(e.calibrated(1.0).step_s(), e.step_s());
     }
 }

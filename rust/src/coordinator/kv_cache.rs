@@ -87,6 +87,91 @@ pub struct PrefillPage<'a> {
     pub t_len: usize,
 }
 
+/// One lane's KV residency serialized at true packed width — the unit
+/// of disaggregated prefill→decode handoff and page-based migration.
+/// [`KvCache::export_lane`] copies the lane's mapped blocks (codes at
+/// their bit-packed wire width plus the per-(layer, block) channel
+/// params, or raw f32 rows for an uncompressed cache) in logical-block
+/// order; [`KvCache::import_lane`] maps them into a fresh lane of a
+/// *geometry-identical* cache on another shard, after which decode
+/// continues bit-identically: the codes and params are copied verbatim,
+/// so every future dequantize sees exactly the bytes the source shard
+/// held. The export is a copy — source refcounts, retention, and COW
+/// state are untouched, and the importer always writes into private
+/// fresh blocks.
+#[derive(Debug, Clone, PartialEq)]
+pub struct LaneExport {
+    /// tokens resident in the lane at export
+    len: usize,
+    quantized: bool,
+    bits: u32,
+    n_layers: usize,
+    d: usize,
+    block_size: usize,
+    /// logical blocks exported (= ceil(len / block_size))
+    n_lblocks: usize,
+    /// f32 mode: [L, n_lblocks, block_size, D] rows (empty when quantized)
+    k_f32: Vec<f32>,
+    v_f32: Vec<f32>,
+    /// simquant mode: [L, n_lblocks, block_size, row_bytes] packed codes
+    k_q: Vec<u8>,
+    v_q: Vec<u8>,
+    /// simquant mode: [L, n_lblocks, D] per-channel params
+    k_min: Vec<f32>,
+    k_step: Vec<f32>,
+    v_min: Vec<f32>,
+    v_step: Vec<f32>,
+}
+
+impl LaneExport {
+    /// Tokens resident in the exported lane.
+    pub fn len(&self) -> usize {
+        self.len
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.len == 0
+    }
+
+    /// Code bitwidth the pages travel at (8 for an f32 cache).
+    pub fn code_bits(&self) -> u32 {
+        if self.quantized {
+            self.bits
+        } else {
+            8
+        }
+    }
+
+    /// The byte segments that cross the wire: bit-packed code pages
+    /// (`codes`) and f32 side data (`params` — channel params for a
+    /// quantized lane, the raw rows for an f32 lane). The split is what
+    /// [`crate::collective::ops::transfer_quant_pages`] checksums and
+    /// charges to the link model.
+    pub fn wire_segments(&self) -> (Vec<&[u8]>, Vec<&[f32]>) {
+        if self.quantized {
+            (
+                vec![self.k_q.as_slice(), self.v_q.as_slice()],
+                vec![
+                    self.k_min.as_slice(),
+                    self.k_step.as_slice(),
+                    self.v_min.as_slice(),
+                    self.v_step.as_slice(),
+                ],
+            )
+        } else {
+            (Vec::new(), vec![self.k_f32.as_slice(), self.v_f32.as_slice()])
+        }
+    }
+
+    /// Total bytes the export occupies on the wire (packed codes + f32
+    /// side data) — the quantized-width payload, not a dense gather.
+    pub fn wire_bytes(&self) -> usize {
+        let (codes, params) = self.wire_segments();
+        codes.iter().map(|c| c.len()).sum::<usize>()
+            + params.iter().map(|p| p.len() * 4).sum::<usize>()
+    }
+}
+
 /// Paged, batched KV cache for one worker shard.
 pub struct KvCache {
     n_layers: usize,
@@ -1328,6 +1413,132 @@ impl KvCache {
             }
         })
     }
+
+    /// Serialize one lane's resident blocks for migration. Each mapped
+    /// logical block is copied whole (all layers, codes at packed width
+    /// + params), in logical order — dead rows past `len` inside the
+    /// last block travel too, which keeps the block byte-identical to
+    /// the source (they are dead on arrival as well: `len` caps every
+    /// read). Blocks reserved beyond the residency (decode budget) are
+    /// not exported; the importer re-reserves from its own pool. The
+    /// source lane is untouched: refcounts, retention, and length all
+    /// stay, so the caller decides separately whether to release it.
+    pub fn export_lane(&self, slot: usize) -> LaneExport {
+        let t = self.lens[slot];
+        let nb = if t == 0 { 0 } else { (t - 1) / self.block_size + 1 };
+        let (l, bs, d, rb) = (self.n_layers, self.block_size, self.d, self.row_bytes);
+        let mut ex = LaneExport {
+            len: t,
+            quantized: self.mode == Mode::SimQuant,
+            bits: self.bits,
+            n_layers: l,
+            d,
+            block_size: bs,
+            n_lblocks: nb,
+            k_f32: Vec::new(),
+            v_f32: Vec::new(),
+            k_q: Vec::new(),
+            v_q: Vec::new(),
+            k_min: Vec::new(),
+            k_step: Vec::new(),
+            v_min: Vec::new(),
+            v_step: Vec::new(),
+        };
+        match self.mode {
+            Mode::F32 => {
+                ex.k_f32.reserve(l * nb * bs * d);
+                ex.v_f32.reserve(l * nb * bs * d);
+                for layer in 0..l {
+                    for bi in 0..nb {
+                        let block = self.tables[slot][bi];
+                        let off = self.block_row_off(layer, block, 0);
+                        ex.k_f32.extend_from_slice(&self.k_f32[off..off + bs * d]);
+                        ex.v_f32.extend_from_slice(&self.v_f32[off..off + bs * d]);
+                    }
+                }
+            }
+            Mode::SimQuant => {
+                ex.k_q.reserve(l * nb * bs * rb);
+                ex.v_q.reserve(l * nb * bs * rb);
+                ex.k_min.reserve(l * nb * d);
+                ex.k_step.reserve(l * nb * d);
+                ex.v_min.reserve(l * nb * d);
+                ex.v_step.reserve(l * nb * d);
+                for layer in 0..l {
+                    for bi in 0..nb {
+                        let block = self.tables[slot][bi];
+                        let off = self.block_code_off(layer, block, 0);
+                        ex.k_q.extend_from_slice(&self.k_q[off..off + bs * rb]);
+                        ex.v_q.extend_from_slice(&self.v_q[off..off + bs * rb]);
+                        let p = self.block_param_off(layer, block);
+                        ex.k_min.extend_from_slice(&self.k_min[p..p + d]);
+                        ex.k_step.extend_from_slice(&self.k_step[p..p + d]);
+                        ex.v_min.extend_from_slice(&self.v_min[p..p + d]);
+                        ex.v_step.extend_from_slice(&self.v_step[p..p + d]);
+                    }
+                }
+            }
+        }
+        ex
+    }
+
+    /// Map a serialized lane into an empty, acquired lane of this cache
+    /// (the receiving shard). Reserves the residency's blocks from the
+    /// local pool and writes the exported codes + params verbatim at
+    /// block granularity — no dequantize, no re-encode, so the imported
+    /// lane decodes bit-identically to the source. Returns `false` when
+    /// the free pool cannot cover the residency; any blocks already
+    /// claimed stay mapped (the caller releases the lane to undo,
+    /// mirroring [`KvCache::try_reserve`]). The export's geometry
+    /// (layers, head dim, block size, bitwidth, mode) must match —
+    /// shards in one fleet are built identically, so a mismatch is a
+    /// construction bug, not a runtime condition.
+    pub fn import_lane(&mut self, slot: usize, ex: &LaneExport) -> bool {
+        assert_eq!(ex.quantized, self.mode == Mode::SimQuant, "import across cache modes");
+        assert_eq!(ex.bits, self.bits, "import across code bitwidths");
+        assert_eq!(ex.n_layers, self.n_layers, "import across layer counts");
+        assert_eq!(ex.d, self.d, "import across head dims");
+        assert_eq!(ex.block_size, self.block_size, "import across block sizes");
+        assert!(ex.len <= self.ctx, "imported lane past ctx");
+        assert!(
+            self.tables[slot].is_empty() && self.lens[slot] == 0,
+            "import into a dirty slot"
+        );
+        if !self.try_reserve(slot, ex.len) {
+            return false;
+        }
+        let (bs, d, rb, nb) = (self.block_size, self.d, self.row_bytes, ex.n_lblocks);
+        for layer in 0..self.n_layers {
+            for bi in 0..nb {
+                let block = self.tables[slot][bi];
+                let src = (layer * nb + bi) * bs;
+                match self.mode {
+                    Mode::F32 => {
+                        let off = self.block_row_off(layer, block, 0);
+                        self.k_f32[off..off + bs * d]
+                            .copy_from_slice(&ex.k_f32[src * d..(src + bs) * d]);
+                        self.v_f32[off..off + bs * d]
+                            .copy_from_slice(&ex.v_f32[src * d..(src + bs) * d]);
+                    }
+                    Mode::SimQuant => {
+                        let off = self.block_code_off(layer, block, 0);
+                        self.k_q[off..off + bs * rb]
+                            .copy_from_slice(&ex.k_q[src * rb..(src + bs) * rb]);
+                        self.v_q[off..off + bs * rb]
+                            .copy_from_slice(&ex.v_q[src * rb..(src + bs) * rb]);
+                        let p = self.block_param_off(layer, block);
+                        let ps = (layer * nb + bi) * d;
+                        self.k_min[p..p + d].copy_from_slice(&ex.k_min[ps..ps + d]);
+                        self.k_step[p..p + d].copy_from_slice(&ex.k_step[ps..ps + d]);
+                        self.v_min[p..p + d].copy_from_slice(&ex.v_min[ps..ps + d]);
+                        self.v_step[p..p + d].copy_from_slice(&ex.v_step[ps..ps + d]);
+                    }
+                }
+            }
+        }
+        self.lens[slot] = ex.len;
+        true
+    }
 }
 
 /// Encode a `[t_len, D]` page: params per channel, codes written row by
@@ -2090,6 +2301,127 @@ mod tests {
             // quantization's error
             assert!((got - e).abs() < 0.2, "row {i}: {got} vs {e}");
         }
+    }
+
+    #[test]
+    fn export_import_roundtrip_is_bit_identical() {
+        // a lane shipped as packed pages must decode on the importer to
+        // exactly the bytes the source decodes to — per layer, per bits
+        for bits in [8u32, 4, 2] {
+            let (l, d, ctx, bs) = (2usize, 8usize, 16usize, 4usize);
+            let mut src = KvCache::new_simquant_bits_paged(l, 2, ctx, d, bits, bs, 8);
+            let s = src.acquire_slot().unwrap();
+            let k = rows(6, d, 91, 1.5);
+            let v = rows(6, d, 92, 1.5);
+            for layer in 0..l {
+                src.ingest_prefill(s, layer, &k, &v, 6);
+            }
+            let ex = src.export_lane(s);
+            assert_eq!(ex.len(), 6);
+            assert_eq!(ex.code_bits(), bits);
+            let mut dst = KvCache::new_simquant_bits_paged(l, 2, ctx, d, bits, bs, 8);
+            let t = dst.acquire_slot().unwrap();
+            assert!(dst.import_lane(t, &ex));
+            assert_eq!(dst.len(t), 6);
+            for layer in 0..l {
+                assert_eq!(src.decode_k(s, layer), dst.decode_k(t, layer), "bits={bits}");
+            }
+            // the continuation stays identical too: the same appended row
+            // encodes to the same codes under the copied params
+            let row = rows(1, d, 93, 1.0);
+            for layer in 0..l {
+                src.append_row(s, layer, &row, &row);
+                dst.append_row(t, layer, &row, &row);
+            }
+            src.bump(s);
+            dst.bump(t);
+            for layer in 0..l {
+                assert_eq!(src.decode_k(s, layer), dst.decode_k(t, layer), "bits={bits}");
+            }
+            // source lane untouched by the export (copy semantics)
+            assert_eq!(src.len(s), 7);
+        }
+    }
+
+    #[test]
+    fn f32_export_import_roundtrip() {
+        let mut src = KvCache::new_f32_paged(2, 1, 8, 4, 4, 4);
+        let s = src.acquire_slot().unwrap();
+        let k = rows(5, 4, 95, 1.0);
+        for layer in 0..2 {
+            src.ingest_prefill(s, layer, &k, &k, 5);
+        }
+        let ex = src.export_lane(s);
+        assert!(!ex.is_empty());
+        let (codes, params) = ex.wire_segments();
+        assert!(codes.is_empty(), "f32 lanes travel as raw rows");
+        assert_eq!(params.len(), 2);
+        let mut dst = KvCache::new_f32_paged(2, 1, 8, 4, 4, 4);
+        let t = dst.acquire_slot().unwrap();
+        assert!(dst.import_lane(t, &ex));
+        for layer in 0..2 {
+            assert_eq!(src.decode_k(s, layer), dst.decode_k(t, layer));
+        }
+    }
+
+    #[test]
+    fn export_wire_bytes_shrink_with_bitwidth() {
+        let mk = |bits| {
+            let mut kv = KvCache::new_simquant_bits_paged(2, 1, 16, 8, bits, 4, 8);
+            let s = kv.acquire_slot().unwrap();
+            let k = rows(8, 8, 97, 1.0);
+            for layer in 0..2 {
+                kv.ingest_prefill(s, layer, &k, &k, 8);
+            }
+            kv.export_lane(s).wire_bytes()
+        };
+        let (b8, b4, b2) = (mk(8), mk(4), mk(2));
+        assert!(b4 < b8 && b2 < b4, "packed widths must ship packed: {b8} {b4} {b2}");
+    }
+
+    #[test]
+    fn export_import_balances_refcounts_with_shared_prefix() {
+        // exporting a lane that maps a shared retained block must not
+        // disturb the source's COW state, and the importer's blocks are
+        // private — both pools balance after release
+        let (d, ctx, bs) = (2usize, 8usize, 4usize);
+        let mut src = KvCache::new_f32_paged(1, 2, ctx, d, bs, 4);
+        let a = src.acquire_slot().unwrap();
+        let k = rows(6, d, 98, 1.0);
+        src.ingest_prefill(a, 0, &k, &k, 6);
+        let shared = src.table(a)[0];
+        src.retain_block(shared);
+        let ex = src.export_lane(a);
+        assert_eq!(src.ref_count(shared), 1, "export must not touch refcounts");
+        let mut dst = KvCache::new_f32_paged(1, 2, ctx, d, bs, 4);
+        let t = dst.acquire_slot().unwrap();
+        assert!(dst.import_lane(t, &ex));
+        assert_eq!(dst.decode_k(t, 0), k);
+        src.release_slot(a);
+        dst.release_slot(t);
+        assert_eq!(
+            src.free_block_count() + src.retained_count(),
+            src.total_blocks(),
+            "source pool must balance (retained prefix stays)"
+        );
+        assert_eq!(dst.free_block_count(), dst.total_blocks());
+    }
+
+    #[test]
+    fn import_fails_cleanly_on_exhausted_pool() {
+        let mut src = KvCache::new_f32_paged(1, 1, 16, 2, 4, 4);
+        let s = src.acquire_slot().unwrap();
+        let k = rows(12, 2, 99, 1.0);
+        src.ingest_prefill(s, 0, &k, &k, 12);
+        let ex = src.export_lane(s);
+        // destination pool has 2 blocks; the lane needs 3
+        let mut dst = KvCache::new_f32_paged(1, 1, 16, 2, 4, 2);
+        let t = dst.acquire_slot().unwrap();
+        assert!(!dst.import_lane(t, &ex));
+        // claimed blocks stay mapped; releasing the lane restores them
+        dst.release_slot(t);
+        assert_eq!(dst.free_block_count(), 2);
+        assert_eq!(dst.free_slots(), 1);
     }
 
     #[test]

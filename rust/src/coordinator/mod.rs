@@ -181,16 +181,16 @@ mod worker;
 pub mod workload;
 
 pub use batcher::{AdmissionPolicy, Batch, BatchPolicy, Batcher, SchedulerMode};
-pub use cost::CostEstimator;
+pub use cost::{CostEstimator, EstimatorCalibration};
 pub use bitwidth::{
     quant_mse, search_bitwidths, size_reduction, BitwidthChoice, LayerInfo, SearchPolicy,
     BIT_CHOICES,
 };
 pub use faults::{CrashFault, FaultPlan, FaultSpec, RecoverFault, ShardHealth, StallFault};
-pub use kv_cache::{KvCache, PrefillPage, DEFAULT_BLOCK_SIZE};
+pub use kv_cache::{KvCache, LaneExport, PrefillPage, DEFAULT_BLOCK_SIZE};
 pub use prefix_cache::PrefixCacheManager;
 pub use request::{Priority, Request, RequestId, Response, ServeEvent};
-pub use router::{request_cost, RouteDecision, Router, Transition};
+pub use router::{request_cost, RouteDecision, Router, ShardRole, Transition};
 pub use scale_sync::{sync_wire_bits_for, ScaleSync, SYNC_WIRE_BITS};
 pub use server::{Server, ServerConfig, ServerReport};
 pub use worker::{Backend, Worker, WorkerStats};

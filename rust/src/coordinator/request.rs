@@ -1,6 +1,9 @@
 //! Request / response / event types for the serving path.
 
+use std::sync::Arc;
 use std::time::Instant;
+
+use super::kv_cache::LaneExport;
 
 pub type RequestId = u64;
 
@@ -134,6 +137,38 @@ pub enum ServeEvent {
         /// triggered the shed
         shard: usize,
     },
+    /// A prefill-role worker finished a request's prefill and released
+    /// the lane: the dispatcher must migrate the exported KV pages to a
+    /// decode-role shard, which continues the stream bit-identically.
+    /// The `Token` for `seq` 0 (the prefill-produced first token, last
+    /// element of `generated`) has already been emitted by the source
+    /// worker; the importing worker resumes at `seq == generated.len()`.
+    /// `pages` is `Arc`-shared so the event channel never copies the
+    /// block payload — only the simulated wire does.
+    Handoff {
+        /// source (prefill) shard
+        shard: usize,
+        /// the original request (prompt as admitted, priority intact)
+        req: Request,
+        /// tokens generated so far (the prefill first token, plus any
+        /// decode progress if a mixed-role worker handed off late)
+        generated: Vec<i32>,
+        /// TTFT measured on the source shard (first token already out)
+        ttft_s: f64,
+        /// queueing time measured on the source shard
+        queued_s: f64,
+        /// emission instant of the first token on the source shard
+        first_token_at: Option<Instant>,
+        /// the lane's KV block table at true packed width
+        pages: Arc<LaneExport>,
+    },
+    /// A decode-role worker could not admit an `ImportPages` migration
+    /// (no free lane, or its block pool cannot hold the residency): the
+    /// request bounces back to the dispatcher, which falls back to
+    /// re-prefill injection on a live shard — the no-pages path. The
+    /// dispatcher rebuilds the continuation from its own delivered
+    /// prefix, so the bounce carries only the original request.
+    ImportBounced { req: Request },
 }
 
 #[cfg(test)]

@@ -29,6 +29,49 @@ pub struct RouteDecision {
     pub cost: usize,
 }
 
+/// Serving role of one shard in a (possibly disaggregated) fleet.
+///
+/// `Mixed` is the classic configuration — every shard admits arrivals,
+/// prefills, and decodes. Under disaggregation the fleet splits:
+/// `Prefill` shards admit new arrivals and run chunked prefill only;
+/// when a lane finishes prefill its KV block table migrates (as packed
+/// quantized pages) to a `Decode` shard, which continues the stream.
+/// Roles are a *routing* property: the router keeps prefill-role shards
+/// out of the handoff target set and decode-role shards out of the
+/// admission set, while liveness/probing rules apply unchanged.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Default)]
+pub enum ShardRole {
+    /// Admits new arrivals, runs chunked prefill, hands finished lanes
+    /// off to a decode-capable shard.
+    Prefill,
+    /// Receives migrated KV pages and runs the decode loop only.
+    Decode,
+    /// Admits, prefills, and decodes — the mixed baseline.
+    #[default]
+    Mixed,
+}
+
+impl ShardRole {
+    pub fn name(self) -> &'static str {
+        match self {
+            ShardRole::Prefill => "prefill",
+            ShardRole::Decode => "decode",
+            ShardRole::Mixed => "mixed",
+        }
+    }
+
+    /// Whether this role accepts new client arrivals (prefill work).
+    pub fn admits_arrivals(self) -> bool {
+        !matches!(self, ShardRole::Decode)
+    }
+
+    /// Whether this role runs the decode loop (i.e. is a valid handoff
+    /// or migration target for a prefilled lane).
+    pub fn runs_decode(self) -> bool {
+        !matches!(self, ShardRole::Prefill)
+    }
+}
+
 /// Outcome of a routing-set health transition ([`Router::mark_dead`],
 /// [`Router::revive`], [`Router::promote`]): `Noop` means the
 /// transition had already been applied — killing a dead shard twice,
@@ -95,6 +138,9 @@ pub struct Router {
     /// requests charged to each shard since construction (admissions +
     /// migrations) — the fair-share signal the rejoin drill measures
     admitted: Vec<u64>,
+    /// serving role per shard (all `Mixed` unless the server
+    /// disaggregates or re-roles)
+    roles: Vec<ShardRole>,
     next_id: RequestId,
 }
 
@@ -113,6 +159,7 @@ impl Router {
             alive: vec![true; n_shards],
             probing: vec![false; n_shards],
             admitted: vec![0; n_shards],
+            roles: vec![ShardRole::Mixed; n_shards],
             next_id: 1,
         }
     }
@@ -158,17 +205,39 @@ impl Router {
         Some(RouteDecision { shard, cost: request_cost(req) })
     }
 
-    /// The next shard a request should land on. An *idle* probing
-    /// (just-rejoined) shard takes priority — the probe stream is what
-    /// validates it, and it can hold only one at a time, so this cannot
-    /// starve the full-share shards. Otherwise full-share live shards
-    /// compete on in-flight tokens as before (a busy prober is not a
-    /// candidate). If every live shard is a busy prober (degenerate),
-    /// fall back to least-loaded among all live shards rather than
-    /// stalling admission.
+    /// Route a finished-prefill lane to a decode-capable shard (no
+    /// admission rewrite, like [`Router::route_migrated`]). Prefers
+    /// `Decode`/`Mixed` shards; if none is alive (degenerate — e.g.
+    /// every decode shard died mid-handoff), falls back to any live
+    /// shard so the stream continues rather than stalling.
+    pub fn route_handoff(&mut self, req: &Request) -> Option<RouteDecision> {
+        let shard = self
+            .least_loaded_where(|i| self.roles[i].runs_decode())
+            .or_else(|| self.least_loaded_where(|_| true))?;
+        self.charge(shard, req);
+        Some(RouteDecision { shard, cost: request_cost(req) })
+    }
+
+    /// The next shard a new arrival should land on: least-loaded among
+    /// live shards whose role admits arrivals (`Prefill`/`Mixed`); if
+    /// the admission set is empty (every admitting shard died), any
+    /// live shard absorbs the request rather than stalling admission.
     fn least_loaded_alive(&self) -> Option<usize> {
-        let probe =
-            (0..self.n_shards).find(|&i| self.alive[i] && self.probing[i] && self.load[i] == 0);
+        self.least_loaded_where(|i| self.roles[i].admits_arrivals())
+            .or_else(|| self.least_loaded_where(|_| true))
+    }
+
+    /// Least-loaded live shard among those passing `ok`. An *idle*
+    /// probing (just-rejoined) shard takes priority — the probe stream
+    /// is what validates it, and it can hold only one at a time, so
+    /// this cannot starve the full-share shards. Otherwise full-share
+    /// live shards compete on in-flight tokens (ties -> lowest rank; a
+    /// busy prober is not a candidate). If every passing live shard is
+    /// a busy prober (degenerate), fall back to least-loaded among them
+    /// rather than stalling.
+    fn least_loaded_where(&self, ok: impl Fn(usize) -> bool) -> Option<usize> {
+        let probe = (0..self.n_shards)
+            .find(|&i| self.alive[i] && ok(i) && self.probing[i] && self.load[i] == 0);
         if probe.is_some() {
             return probe;
         }
@@ -176,14 +245,14 @@ impl Router {
             .load
             .iter()
             .enumerate()
-            .filter(|(i, _)| self.alive[*i] && !self.probing[*i])
+            .filter(|(i, _)| self.alive[*i] && ok(*i) && !self.probing[*i])
             .min_by_key(|(i, l)| (**l, *i))
             .map(|(i, _)| i);
         eligible.or_else(|| {
             self.load
                 .iter()
                 .enumerate()
-                .filter(|(i, _)| self.alive[*i])
+                .filter(|(i, _)| self.alive[*i] && ok(*i))
                 .min_by_key(|(i, l)| (**l, *i))
                 .map(|(i, _)| i)
         })
@@ -243,6 +312,31 @@ impl Router {
             }
             _ => Transition::Noop,
         }
+    }
+
+    /// Assign a shard's serving role. Re-assigning the current role is
+    /// a typed no-op so re-entrant re-role ticks do not churn state.
+    /// The shard's in-flight charges are untouched: lanes it already
+    /// holds drain under the old behavior while new routing follows the
+    /// new role (mirroring the probe-ramp philosophy).
+    pub fn set_role(&mut self, shard: usize, role: ShardRole) -> Transition {
+        match self.roles.get_mut(shard) {
+            Some(r) if *r != role => {
+                *r = role;
+                Transition::Applied
+            }
+            _ => Transition::Noop,
+        }
+    }
+
+    /// A shard's current serving role (`Mixed` for out-of-range).
+    pub fn role_of(&self, shard: usize) -> ShardRole {
+        self.roles.get(shard).copied().unwrap_or(ShardRole::Mixed)
+    }
+
+    /// Per-shard serving roles.
+    pub fn roles(&self) -> &[ShardRole] {
+        &self.roles
     }
 
     pub fn is_alive(&self, shard: usize) -> bool {
@@ -582,6 +676,69 @@ mod tests {
         assert_eq!(r.block_backlog(d2.shard), 0, "new charges price zero blocks");
         r.complete(1);
         assert_eq!(r.block_backlog(d.shard), 0, "old charge still refunds its blocks");
+    }
+
+    #[test]
+    fn roles_default_mixed_with_typed_transitions() {
+        let mut r = Router::new(2, 16);
+        assert_eq!(r.role_of(0), ShardRole::Mixed);
+        assert_eq!(r.roles(), &[ShardRole::Mixed, ShardRole::Mixed]);
+        assert_eq!(r.set_role(0, ShardRole::Prefill), Transition::Applied);
+        assert_eq!(r.set_role(0, ShardRole::Prefill), Transition::Noop, "same role");
+        assert_eq!(r.set_role(99, ShardRole::Decode), Transition::Noop, "out of range");
+        assert_eq!(r.role_of(0), ShardRole::Prefill);
+        assert_eq!(r.role_of(99), ShardRole::Mixed);
+    }
+
+    #[test]
+    fn decode_role_shards_leave_the_admission_set() {
+        let mut r = Router::new(2, 16);
+        r.set_role(0, ShardRole::Prefill);
+        r.set_role(1, ShardRole::Decode);
+        for i in 1..=4 {
+            let (_, d) = r.admit(req(i, 2));
+            assert_eq!(d.shard, 0, "arrivals must land on the prefill shard");
+        }
+        // handoffs go the other way: decode shard only
+        let h = Request::new(9, vec![5; 6], 3);
+        let d = r.route_handoff(&h).unwrap();
+        assert_eq!(d.shard, 1, "handoff must land on the decode shard");
+        assert_eq!(d.cost, 6 + 3, "no admission rewrite on handoff");
+        assert_eq!(r.shard_of(9), Some(1));
+        r.complete(9);
+    }
+
+    #[test]
+    fn role_routing_falls_back_rather_than_stalling() {
+        // all shards prefill-role: handoff still routes (to the least
+        // loaded live shard) instead of returning None
+        let mut r = Router::new(2, 16);
+        r.set_role(0, ShardRole::Prefill);
+        r.set_role(1, ShardRole::Prefill);
+        let h = Request::new(9, vec![5; 4], 2);
+        assert!(r.route_handoff(&h).is_some());
+        r.complete(9);
+        // all shards decode-role: arrivals still admit somewhere
+        r.set_role(0, ShardRole::Decode);
+        r.set_role(1, ShardRole::Decode);
+        let (_, d) = r.admit(req(1, 2));
+        assert!(d.shard < 2);
+        // no live shard at all -> handoff has nowhere to go
+        r.mark_dead(0);
+        r.mark_dead(1);
+        assert!(r.route_handoff(&Request::new(10, vec![5; 4], 1)).is_none());
+    }
+
+    #[test]
+    fn handoff_prefers_live_decode_shards_over_dead_ones() {
+        let mut r = Router::new(3, 16);
+        r.set_role(0, ShardRole::Prefill);
+        r.set_role(1, ShardRole::Decode);
+        r.set_role(2, ShardRole::Decode);
+        r.mark_dead(1);
+        let h = Request::new(9, vec![5; 4], 2);
+        let d = r.route_handoff(&h).unwrap();
+        assert_eq!(d.shard, 2, "dead decode shard must not take handoffs");
     }
 
     #[test]

@@ -78,6 +78,35 @@
 //! within one pressure episode. PJRT shards neither respawn nor change
 //! width at runtime (compiled graphs pin both) — elastic recovery is a
 //! sim-backend facility, like fault injection itself.
+//!
+//! **Disaggregated prefill/decode serving** (`ServerConfig::disagg`,
+//! continuous mode only) splits the fleet by [`ShardRole`]: prefill-
+//! role shards admit arrivals and run chunked prefill only — when a
+//! lane's prefill completes (first token emitted), the worker exports
+//! its KV block table ([`ServeEvent::Handoff`]) and the dispatcher
+//! migrates the pages to a decode-role shard over a point-to-point
+//! quantized transfer ([`collective::transfer_quant_pages`]): blocks
+//! ship at their true packed width, checksummed and retried like every
+//! quantized collective payload, bytes counted in the dispatcher's
+//! wire [`CommStats`]. The importing worker maps the pages straight
+//! into its pool and continues the stream bit-identically — the token
+//! trajectory is a pure function of the KV prefix, so no re-prefill
+//! and no `seq` rebase is needed (the importer resumes at `seq ==
+//! generated.len()`, continuing the same global positions). When the
+//! transfer ejects (persistent corruption) or the target cannot hold
+//! the residency ([`ServeEvent::ImportBounced`]), the stream falls
+//! back to the kill-path's re-prefill injection — the no-pages path.
+//! Roles are *elastic*: an [`EstimatorCalibration`] regresses
+//! predicted-vs-actual completion error online from completions (the
+//! correction also feeds the predictive admission margin), and
+//! `recovery_tick` re-roles one shard per pressure episode when the
+//! predicted prefill:decode backlog ratio drifts past the
+//! [`ROLE_HI`]/[`ROLE_LO`] hysteresis band — mirroring the degrade
+//! ladder's watermark/tick discipline. Rejoining and standby-promoted
+//! shards in a disaggregated fleet are seeded over the same page wire:
+//! the most-loaded survivor hands off its youngest decoding lane and
+//! the idle-prober routing priority lands the pages on the fresh
+//! shard, so recovery costs a page transfer instead of a re-prefill.
 
 use std::cmp::Ordering;
 use std::collections::{HashMap, HashSet, VecDeque};
@@ -89,17 +118,18 @@ use std::time::{Duration, Instant};
 
 use anyhow::{anyhow, bail, Result};
 
+use crate::collective::{transfer_quant_pages, CommStats, LinkFaults, LinkModel};
 use crate::metrics::{mean_ci95, percentile, Breakdown, RollingWindow, Stage, Summary};
 use crate::quant::Variant;
 use crate::runtime::{is_injected_crash, Registry, SimCost, SimModel};
 use crate::util::pool;
 
 use super::batcher::{AdmissionPolicy, Batch, BatchPolicy, Batcher, SchedulerMode};
-use super::cost::CostEstimator;
+use super::cost::{CostEstimator, EstimatorCalibration};
 use super::faults::{FaultSpec, ShardHealth};
-use super::kv_cache::DEFAULT_BLOCK_SIZE;
+use super::kv_cache::{LaneExport, DEFAULT_BLOCK_SIZE};
 use super::request::{Priority, Request, RequestId, Response, ServeEvent};
-use super::router::Router;
+use super::router::{Router, ShardRole};
 use super::worker::{Backend, Worker, WorkerStats};
 use super::workload::Arrival;
 
@@ -191,6 +221,16 @@ pub struct ServerConfig {
     /// draft width (bits) speculative draft passes run at; the
     /// bitwidth-ladder knob that makes the draft model free
     pub spec_draft_bits: u32,
+    /// disaggregated prefill/decode serving: split the fleet into
+    /// [`ShardRole::Prefill`] shards (first `ceil(shards/2)`; admit and
+    /// chunk-prefill only, handing finished lanes off over the
+    /// quantized page wire) and [`ShardRole::Decode`] shards (import
+    /// pages, run the decode loop), with estimator-driven elastic
+    /// re-roling under sustained role imbalance. Continuous mode and
+    /// `shards > 1` only; a single shard stays `Mixed`. `false`
+    /// (default) = the mixed baseline, bit-identical to pre-disagg
+    /// serving.
+    pub disagg: bool,
 }
 
 impl ServerConfig {
@@ -211,6 +251,7 @@ impl ServerConfig {
             prefix_cache: true,
             spec_k: 0,
             spec_draft_bits: 4,
+            disagg: false,
         }
     }
 }
@@ -227,6 +268,26 @@ enum ToWorker {
     /// degrade ladder: switch the backend's KV read width (no-op on
     /// PJRT backends, whose compiled graphs pin the width)
     SetKvBits(u32),
+    /// disaggregation: continue a handed-off stream from imported KV
+    /// pages (no re-prefill). Fields mirror [`ServeEvent::Handoff`];
+    /// a worker that cannot hold the residency bounces the request
+    /// back as [`ServeEvent::ImportBounced`].
+    ImportPages {
+        req: Request,
+        generated: Vec<i32>,
+        pages: Arc<LaneExport>,
+        ttft_s: f64,
+        queued_s: f64,
+        first_token_at: Option<Instant>,
+    },
+    /// elastic re-roling: arm (`true`, prefill role) or disarm the
+    /// worker's hand-off-on-prefill-completion switch. Safe to flip
+    /// live — lanes already decoding finish where they are.
+    SetRole(bool),
+    /// rejoin/standby seeding: export the youngest decoding lane as a
+    /// [`ServeEvent::Handoff`]; a worker with nothing decoding ignores
+    /// the request.
+    ExportLane,
 }
 
 /// What the admission gate decided for one routed request.
@@ -269,6 +330,11 @@ struct SloGate {
     /// trailing policies only: samples older than this are expired
     /// before every read (the stale-window fix)
     stale_after: Option<Duration>,
+    /// online predicted-vs-actual completion regression: every tracked
+    /// completion feeds it one (raw prediction, observed latency)
+    /// sample; its correction multiplies into the predictive margin and
+    /// drives the re-role ratio, and its mean error is reported
+    cal: EstimatorCalibration,
 }
 
 impl SloGate {
@@ -298,7 +364,25 @@ impl SloGate {
             block_size,
             pool_blocks,
             stale_after,
+            cal: EstimatorCalibration::default(),
         }
+    }
+
+    /// Price one routed candidate's completion for *calibration*: the
+    /// raw (uncorrected) prediction the estimator makes from the
+    /// shard's backlog, regardless of admission policy — calibration
+    /// must regress the model's own error, never its corrected output.
+    /// `None` when no estimator is fitted (e.g. the PJRT path without a
+    /// profile under a trailing policy).
+    fn predict_raw(&self, backlog: (usize, usize), req: &Request, block_demand: usize) -> Option<f64> {
+        let est = self.estimator.as_ref()?;
+        let mut ms =
+            est.predict_ms(backlog, req.prompt.len(), req.max_new_tokens, self.prefill_chunk);
+        if self.block_size > 0 {
+            let deficit = block_demand.saturating_sub(self.pool_blocks);
+            ms += est.block_drain_s(deficit, self.block_size) * 1e3;
+        }
+        Some(ms)
     }
 
     /// Degrade-ladder repricing: swap the predictive estimator for its
@@ -393,6 +477,9 @@ impl SloGate {
                 let Some(est) = self.estimator.as_ref() else {
                     return tier;
                 };
+                // fold the observed prediction error back into the
+                // margin (identity until completions arrive)
+                let est = est.calibrated(self.cal.correction());
                 let mut predicted_ms = est.predict_ms(
                     backlog,
                     req.prompt.len(),
@@ -512,6 +599,26 @@ pub struct ServerReport {
     pub drafted_tokens: u64,
     /// draft tokens the full-width verify passes accepted
     pub accepted_tokens: u64,
+    /// finished-prefill lanes exported for migration (prefill-role
+    /// handoffs plus rejoin-seeding exports), summed over all worker
+    /// incarnations
+    pub handoffs: u64,
+    /// KV page bytes shipped over the quantized point-to-point
+    /// migration wire (true packed width plus f32 per-block params);
+    /// disagg serving must keep this > 0 while re-prefill stays the
+    /// rare fallback
+    pub kv_migrate_bytes: u64,
+    /// elastic re-role moves (at most one per pressure episode)
+    pub reroles: u64,
+    /// fraction of fleet busy time spent in fused prefill passes
+    /// (prefill + decode shares sum to 1 when the fleet did any work)
+    pub prefill_busy_share: f64,
+    /// fraction of fleet busy time spent in fused decode (and
+    /// draft/verify) passes
+    pub decode_busy_share: f64,
+    /// online estimator calibration: mean |predicted - actual| /
+    /// actual over tracked completions (0 with no samples)
+    pub estimator_abs_err: f64,
 }
 
 impl ServerReport {
@@ -628,13 +735,17 @@ struct Track {
     first_token_at: Option<Instant>,
     last_token_at: Option<Instant>,
     migrations: u32,
+    /// the estimator's raw completion prediction at admission (ms; 0
+    /// when no estimator was fitted) — regressed against the observed
+    /// latency when the request completes
+    predicted_ms: f64,
     /// terminal event consumed (Done, synthesized Done, or Shed); late
     /// duplicates from a resurrected stream are dropped against this
     done: bool,
 }
 
 impl Track {
-    fn new(req: &Request, shard: usize, low: bool) -> Self {
+    fn new(req: &Request, shard: usize, low: bool, predicted_ms: f64) -> Self {
         Track {
             prompt: req.prompt.clone(),
             prompt_len: req.prompt.len(),
@@ -649,6 +760,7 @@ impl Track {
             first_token_at: None,
             last_token_at: None,
             migrations: 0,
+            predicted_ms,
             done: false,
         }
     }
@@ -738,11 +850,11 @@ impl Flight {
     /// Record a dispatched request. Resets the shard's liveness clock
     /// when this is its first runnable work — an idle shard's clock is
     /// stale by design and must not count against it.
-    fn insert(&mut self, req: &Request, shard: usize, low: bool) {
+    fn insert(&mut self, req: &Request, shard: usize, low: bool, predicted_ms: f64) {
         if !self.busy(shard) {
             self.last_event_at[shard] = Instant::now();
         }
-        self.tracks.insert(req.id, Track::new(req, shard, low));
+        self.tracks.insert(req.id, Track::new(req, shard, low, predicted_ms));
     }
 
     /// Deliver one token at global position `offset + seq`, exactly
@@ -887,61 +999,86 @@ impl Flight {
                 .collect();
             ids.sort_unstable();
             for id in ids {
-                // idempotent refund of the dead shard's charge; a
-                // successful reroute re-charges the survivor
-                router.release(id);
-                let Some(t) = self.tracks.get_mut(&id) else { continue };
-                let remaining = t.max_new.saturating_sub(t.delivered.len());
-                let priority = t.priority;
-                let low = t.low;
-                let mut prompt = t.prompt.clone();
-                prompt.extend_from_slice(&t.delivered);
-                if remaining == 0 || prompt.len() >= self.ctx {
-                    // stream already fully delivered (its Done is either
-                    // buffered — later deduped — or died unemitted), or
-                    // the prefix can't extend within the context window,
-                    // matching where the original would have KV-capped
-                    t.done = true;
-                    let resp = t.response(id, dead);
-                    self.responses.push(resp);
-                    continue;
-                }
-                let arrival = t.arrival;
-                let mut req = Request::new(id, prompt, remaining);
-                req.priority = priority;
-                req.arrival = arrival;
-                let mut routed = None;
-                while let Some(d) = router.route_migrated(&req) {
-                    let live = senders[d.shard]
-                        .as_ref()
-                        .is_some_and(|tx| tx.send(ToWorker::Inject(req.clone(), low)).is_ok());
-                    if live {
-                        routed = Some(d.shard);
-                        break;
-                    }
-                    // target died undetected: refund, eject it from
-                    // routing now, queue its own kill pass, retry
-                    router.release(id);
-                    router.mark_dead(d.shard);
-                    queue.push(d.shard);
-                }
-                match routed {
-                    Some(target) => {
-                        if !self.busy(target) {
-                            self.last_event_at[target] = Instant::now();
-                        }
-                        if let Some(t) = self.tracks.get_mut(&id) {
-                            t.offset = t.delivered.len();
-                            t.shard = target;
-                            t.migrations += 1;
-                        }
-                        self.recovery.migrated_ids.push(id);
-                        self.recovery.reprefill_tokens += req.prompt.len() as u64;
-                    }
-                    None => self.shed(id, priority),
-                }
+                queue.extend(self.reroute_reprefill(router, senders, id));
             }
         }
+    }
+
+    /// Re-inject one in-flight request as a re-prefill (admitted prompt
+    /// plus the delivered prefix) on a live shard — the shared no-pages
+    /// path behind dead-shard migration, corrupt page transfers, and
+    /// decode-side import bounces. Refunds the request's current charge
+    /// idempotently, synthesizes the response when the stream is
+    /// already complete (or cannot extend within the context window),
+    /// rebases the delivery offset on success, and counts the
+    /// migration. Returns any shards discovered dead while probing
+    /// targets (their sends failed) for the caller to run its own kill
+    /// pass over.
+    fn reroute_reprefill(
+        &mut self,
+        router: &mut Router,
+        senders: &mut [Option<Sender<ToWorker>>],
+        id: RequestId,
+    ) -> Vec<usize> {
+        let mut newly_dead = Vec::new();
+        // idempotent refund of the current charge; a successful
+        // reroute re-charges the survivor
+        router.release(id);
+        let Some(t) = self.tracks.get_mut(&id) else { return newly_dead };
+        if t.done {
+            return newly_dead;
+        }
+        let remaining = t.max_new.saturating_sub(t.delivered.len());
+        let priority = t.priority;
+        let low = t.low;
+        let shard_now = t.shard;
+        let mut prompt = t.prompt.clone();
+        prompt.extend_from_slice(&t.delivered);
+        if remaining == 0 || prompt.len() >= self.ctx {
+            // stream already fully delivered (its Done is either
+            // buffered — later deduped — or died unemitted), or the
+            // prefix can't extend within the context window, matching
+            // where the original would have KV-capped
+            t.done = true;
+            let resp = t.response(id, shard_now);
+            self.responses.push(resp);
+            return newly_dead;
+        }
+        let arrival = t.arrival;
+        let mut req = Request::new(id, prompt, remaining);
+        req.priority = priority;
+        req.arrival = arrival;
+        let mut routed = None;
+        while let Some(d) = router.route_migrated(&req) {
+            let live = senders[d.shard]
+                .as_ref()
+                .is_some_and(|tx| tx.send(ToWorker::Inject(req.clone(), low)).is_ok());
+            if live {
+                routed = Some(d.shard);
+                break;
+            }
+            // target died undetected: refund, eject it from routing
+            // now, report it for its own kill pass, retry
+            router.release(id);
+            router.mark_dead(d.shard);
+            newly_dead.push(d.shard);
+        }
+        match routed {
+            Some(target) => {
+                if !self.busy(target) {
+                    self.last_event_at[target] = Instant::now();
+                }
+                if let Some(t) = self.tracks.get_mut(&id) {
+                    t.offset = t.delivered.len();
+                    t.shard = target;
+                    t.migrations += 1;
+                }
+                self.recovery.migrated_ids.push(id);
+                self.recovery.reprefill_tokens += req.prompt.len() as u64;
+            }
+            None => self.shed(id, priority),
+        }
+        newly_dead
     }
 }
 
@@ -956,6 +1093,21 @@ const DEGRADE_LO_PER_SLOT: f64 = 2.0;
 /// moves (a death bypasses this and degrades immediately — capacity
 /// loss is a fact, not a noisy signal).
 const DEGRADE_TICKS: u32 = 3;
+
+/// Re-role watermarks on the predicted prefill:decode backlog ratio,
+/// normalized per role-capable alive shard (disaggregated fleets
+/// only). Above [`ROLE_HI`] for [`ROLE_TICKS`] consecutive
+/// step-deadline ticks, prefill work is drowning its shards: one
+/// decode-role shard re-roles to prefill. Below [`ROLE_LO`] for the
+/// same count, decode is the bottleneck: one prefill-role shard
+/// re-roles to decode. The band between the marks is the hysteresis,
+/// and — mirroring the degrade ladder — at most one shard moves per
+/// pressure episode (the flag resets when the ratio re-enters the
+/// band), so one imbalance burst cannot oscillate the fleet.
+const ROLE_HI: f64 = 2.0;
+const ROLE_LO: f64 = 0.5;
+/// Consecutive off-band ticks before a re-role move.
+const ROLE_TICKS: u32 = 3;
 
 /// Sim-only replacement-worker factory: `(shard, incarnation)` -> a
 /// fresh worker running that incarnation's slice of the fault plan
@@ -988,6 +1140,13 @@ struct Elastic {
     degrade_enters: u64,
     degrade_exits: u64,
     last_pressure_tick: Instant,
+    /// re-role hysteresis (disagg only): off-band tick counters, the
+    /// one-move-per-episode latch, and the move count
+    role_hi_ticks: u32,
+    role_lo_ticks: u32,
+    role_moved: bool,
+    reroles: u64,
+    last_role_tick: Instant,
 }
 
 impl Elastic {
@@ -1018,6 +1177,11 @@ impl Elastic {
             degrade_enters: 0,
             degrade_exits: 0,
             last_pressure_tick: Instant::now(),
+            role_hi_ticks: 0,
+            role_lo_ticks: 0,
+            role_moved: false,
+            reroles: 0,
+            last_role_tick: Instant::now(),
         }
     }
 }
@@ -1244,6 +1408,28 @@ impl Server {
                  runs to completion inside its worker and cannot migrate"
             );
         }
+        if self.cfg.disagg && self.cfg.mode != SchedulerMode::Continuous {
+            bail!(
+                "disaggregated serving requires SchedulerMode::Continuous — \
+                 handoff migrates lanes between step boundaries, which a \
+                 run-to-completion static batch never reaches"
+            );
+        }
+        // disaggregated split: first ceil(n/2) shards take the prefill
+        // role, the rest decode; a single shard stays Mixed (there is
+        // nothing to hand off to)
+        let disagg = self.cfg.disagg && self.cfg.shards > 1;
+        if disagg {
+            let prefill_n = self.cfg.shards.div_ceil(2);
+            for shard in 0..self.cfg.shards {
+                let role =
+                    if shard < prefill_n { ShardRole::Prefill } else { ShardRole::Decode };
+                self.router.set_role(shard, role);
+                if let Some(tx) = self.senders[shard].as_ref() {
+                    let _ = tx.send(ToWorker::SetRole(role == ShardRole::Prefill));
+                }
+            }
+        }
         // liveness deadlines are wall-clock; arm them only when a plan
         // is configured so a loaded CI runner can't false-kill a shard
         let liveness = self.cfg.fault.active() && self.cfg.mode == SchedulerMode::Continuous;
@@ -1252,7 +1438,7 @@ impl Server {
         let step_s = self.estimator.as_ref().map(|e| e.step_s()).unwrap_or(0.0);
         let mut elastic = Elastic::new(&self.cfg, step_s);
         let elastic_armed = self.cfg.mode == SchedulerMode::Continuous
-            && (liveness || self.cfg.degrade_bits.is_some() || self.cfg.standby > 0);
+            && (liveness || self.cfg.degrade_bits.is_some() || self.cfg.standby > 0 || disagg);
         // rejoin needs a fresh event-sender clone for the replacement
         // worker; keep ours only when one can actually spawn, so a
         // fully-exited pool still reads as disconnected otherwise
@@ -1285,6 +1471,21 @@ impl Server {
             pool_blocks,
         );
         let mut deprioritized = 0u64;
+
+        // disaggregated page-migration wire: an NVLink-class point-to-
+        // point link for handed-off KV blocks, with the fault plan's
+        // corruption probability (when armed) drawn at a rank of its
+        // own past the ring transport's
+        let wire = LinkModel::nvlink();
+        let mut wire_comm = CommStats::default();
+        let mut wire_faults: Option<LinkFaults> = self
+            .cfg
+            .fault
+            .plan
+            .as_ref()
+            .filter(|p| p.corrupt_p > 0.0)
+            .map(|p| p.link_faults(self.cfg.shards));
+        let mut kv_migrate_bytes = 0u64;
 
         while flight.undone() < total {
             // 1) inject every due arrival, gating each on its routed
@@ -1351,12 +1552,15 @@ impl Server {
                 }
                 let low = matches!(verdict, Gate::Low);
                 deprioritized += low as u64;
+                // raw completion prediction, regressed against the
+                // observed latency at Done (online calibration)
+                let predicted_ms = gate.predict_raw(backlog, &req, block_demand).unwrap_or(0.0);
                 match self.cfg.mode {
                     SchedulerMode::Continuous => {
                         // tracked *before* the send so a failed send can
                         // migrate this request along with the rest of
                         // the shard's in-flight work
-                        flight.insert(&req, decision.shard, low);
+                        flight.insert(&req, decision.shard, low, predicted_ms);
                         let sent = self.senders[decision.shard]
                             .as_ref()
                             .is_some_and(|tx| tx.send(ToWorker::Inject(req, low)).is_ok());
@@ -1376,7 +1580,7 @@ impl Server {
                         }
                     }
                     SchedulerMode::Static => {
-                        flight.insert(&req, decision.shard, low);
+                        flight.insert(&req, decision.shard, low, predicted_ms);
                         if low {
                             self.batcher.push_low(req);
                         } else {
@@ -1443,6 +1647,7 @@ impl Server {
                         }
                         ServeEvent::Done(r) => {
                             self.router.complete(r.id);
+                            let rid = r.id;
                             let n_tokens = r.tokens.len() as u64;
                             // None = duplicate Done from a stream that
                             // already terminated (migration race); the
@@ -1450,6 +1655,16 @@ impl Server {
                             if let Some(latency_s) = flight.complete(r) {
                                 shard_tokens[shard] += n_tokens;
                                 gate.observe(shard, latency_s);
+                                // feed the online estimator regression
+                                // its predicted-vs-actual sample
+                                let predicted_ms = flight
+                                    .tracks
+                                    .get(&rid)
+                                    .map(|t| t.predicted_ms)
+                                    .unwrap_or(0.0);
+                                if predicted_ms > 0.0 {
+                                    gate.cal.observe(predicted_ms / 1e3, latency_s);
+                                }
                             }
                         }
                         // workers never shed; defensive accounting if
@@ -1465,6 +1680,135 @@ impl Server {
                                 .map(|t| t.priority)
                                 .unwrap_or(Priority::Batch);
                             flight.shed(id, priority);
+                        }
+                        // a prefill-role (or rebalance-donor) worker
+                        // released a finished lane: ship its KV pages
+                        // to a decode-capable shard over the quantized
+                        // wire; any failure — no live target, a wire
+                        // eject, a dead mailbox — falls back to the
+                        // re-prefill path
+                        ServeEvent::Handoff {
+                            shard: src,
+                            req,
+                            generated,
+                            ttft_s,
+                            queued_s,
+                            first_token_at,
+                            pages,
+                        } => {
+                            let id = req.id;
+                            // the source lane is gone; refund its
+                            // charge before re-routing (idempotent)
+                            self.router.release(id);
+                            // price the continuation like a migrated
+                            // stream: delivered prefix folded into the
+                            // prompt, remaining budget as decode
+                            let plan = flight.tracks.get(&id).filter(|t| !t.done).map(|t| {
+                                let mut p = t.prompt.clone();
+                                p.extend_from_slice(&t.delivered);
+                                let rem = t.max_new.saturating_sub(t.delivered.len());
+                                (p, rem, t.priority, t.arrival)
+                            });
+                            let mut fallback = false;
+                            if let Some((pprompt, remaining, priority, arrival)) = plan {
+                                let target = if remaining == 0 {
+                                    // fully delivered: the fallback
+                                    // synthesizes the response
+                                    None
+                                } else {
+                                    let mut pricing = Request::new(id, pprompt, remaining);
+                                    pricing.priority = priority;
+                                    pricing.arrival = arrival;
+                                    self.router.route_handoff(&pricing)
+                                };
+                                match target {
+                                    Some(d) => {
+                                        let transferred = {
+                                            let (codes, params) = pages.wire_segments();
+                                            transfer_quant_pages(
+                                                &wire,
+                                                src,
+                                                wire_faults.as_mut(),
+                                                &mut wire_comm,
+                                                pages.code_bits(),
+                                                &codes,
+                                                &params,
+                                            )
+                                        };
+                                        match transferred {
+                                            Ok(bytes) => {
+                                                kv_migrate_bytes += bytes;
+                                                let msg = ToWorker::ImportPages {
+                                                    req,
+                                                    generated,
+                                                    pages,
+                                                    ttft_s,
+                                                    queued_s,
+                                                    first_token_at,
+                                                };
+                                                let sent = self.senders[d.shard]
+                                                    .as_ref()
+                                                    .is_some_and(|tx| tx.send(msg).is_ok());
+                                                if sent {
+                                                    if !flight.busy(d.shard) {
+                                                        flight.last_event_at[d.shard] =
+                                                            Instant::now();
+                                                    }
+                                                    // no offset rebase: the
+                                                    // importer continues the
+                                                    // same seq stream
+                                                    if let Some(t) =
+                                                        flight.tracks.get_mut(&id)
+                                                    {
+                                                        t.shard = d.shard;
+                                                    }
+                                                } else {
+                                                    self.router.release(id);
+                                                    fallback = true;
+                                                }
+                                            }
+                                            Err(_) => {
+                                                // the wire ejected after
+                                                // retries: pages never landed
+                                                self.router.release(id);
+                                                fallback = true;
+                                            }
+                                        }
+                                    }
+                                    None => fallback = true,
+                                }
+                            }
+                            if fallback {
+                                for s in flight.reroute_reprefill(
+                                    &mut self.router,
+                                    &mut self.senders,
+                                    id,
+                                ) {
+                                    flight.kill_shard(
+                                        &mut self.router,
+                                        &mut self.senders,
+                                        &self.cfg.fault,
+                                        s,
+                                    );
+                                }
+                            }
+                        }
+                        // the decode target could not hold the migrated
+                        // residency: fall back to re-prefill on a live
+                        // shard (the no-pages path)
+                        ServeEvent::ImportBounced { req } => {
+                            for s in flight.reroute_reprefill(
+                                &mut self.router,
+                                &mut self.senders,
+                                req.id,
+                            ) {
+                                flight.kill_shard(
+                                    &mut self.router,
+                                    &mut self.senders,
+                                    &self.cfg.fault,
+                                    s,
+                                );
+                            }
                         }
                     }
                 }
@@ -1525,6 +1869,8 @@ impl Server {
         let (mut steps, mut tokens, mut joins, mut retires) = (0u64, 0u64, 0u64, 0u64);
         let (mut prefix_hits, mut preemptions, mut resume_reprefill) = (0u64, 0u64, 0u64);
         let (mut drafted, mut accepted) = (0u64, 0u64);
+        let mut handoffs = 0u64;
+        let (mut prefill_busy, mut decode_busy) = (0.0f64, 0.0f64);
         let mut peak_active = Vec::with_capacity(self.handles.len());
         for h in self.handles {
             let st = h.join().map_err(|_| anyhow!("worker panicked"))?;
@@ -1538,8 +1884,14 @@ impl Server {
             resume_reprefill += st.resume_reprefill_tokens;
             drafted += st.drafted_tokens;
             accepted += st.accepted_tokens;
+            handoffs += st.handoffs;
+            prefill_busy += st.prefill_busy_s;
+            decode_busy += st.decode_busy_s;
             peak_active.push(st.peak_active);
         }
+        let busy = prefill_busy + decode_busy;
+        let (prefill_busy_share, decode_busy_share) =
+            if busy > 0.0 { (prefill_busy / busy, decode_busy / busy) } else { (0.0, 0.0) };
         // comm/sync stages are exercised by the cluster-sim path; on the
         // serve path they only appear if scale sync ran
         breakdown.add(Stage::Sync, 0.0);
@@ -1603,6 +1955,12 @@ impl Server {
             resume_reprefill_tokens: resume_reprefill,
             drafted_tokens: drafted,
             accepted_tokens: accepted,
+            handoffs,
+            kv_migrate_bytes,
+            reroles: elastic.reroles,
+            prefill_busy_share,
+            decode_busy_share,
+            estimator_abs_err: gate.cal.mean_abs_err(),
         })
     }
 
@@ -1644,6 +2002,31 @@ impl Server {
         self.router.revive(shard);
         el.probe_since[shard] = Some(Instant::now());
         el.rejoined.push(shard);
+        // disaggregated fleets seed a decode-capable rejoiner over the
+        // page wire: the most-loaded decode-capable survivor exports
+        // its youngest decoding lane, and `route_handoff`'s idle-prober
+        // priority lands the pages right here — recovery costs one page
+        // transfer instead of a re-prefill. Mixed fleets keep the
+        // arrival-driven probe ramp (pinned pre-disagg behavior).
+        if self.cfg.disagg
+            && self.cfg.shards > 1
+            && self.router.role_of(shard).runs_decode()
+        {
+            let donor = (0..self.cfg.shards)
+                .filter(|&s| {
+                    s != shard
+                        && self.router.is_alive(s)
+                        && self.router.role_of(s).runs_decode()
+                        && self.senders[s].is_some()
+                        && self.router.load()[s] > 0
+                })
+                .max_by_key(|&s| self.router.load()[s]);
+            if let Some(d) = donor {
+                if let Some(tx) = self.senders[d].as_ref() {
+                    let _ = tx.send(ToWorker::ExportLane);
+                }
+            }
+        }
         true
     }
 
@@ -1734,6 +2117,88 @@ impl Server {
                 }
             }
         }
+        // elastic re-roling (disaggregated fleets): compare the
+        // predicted drain of the fleet's prefill backlog per admitting
+        // shard against its decode backlog per decode-capable shard;
+        // sustained drift past the ROLE_HI/ROLE_LO band re-roles the
+        // least-loaded shard of the over-provisioned role — at most
+        // one move per pressure episode, mirroring the degrade ladder
+        if self.cfg.disagg && self.cfg.shards > 1 {
+            let tick = el.last_role_tick.elapsed() >= self.cfg.fault.step_deadline;
+            if tick {
+                el.last_role_tick = Instant::now();
+                let (p_tok, d_tok) = self.router.backlog_total();
+                if p_tok + d_tok == 0 {
+                    // idle fleet: no signal, and any episode is over
+                    el.role_hi_ticks = 0;
+                    el.role_lo_ticks = 0;
+                    el.role_moved = false;
+                } else {
+                    let alive_with = |ok: fn(ShardRole) -> bool| {
+                        (0..self.cfg.shards)
+                            .filter(|&s| self.router.is_alive(s) && ok(self.router.role_of(s)))
+                            .count()
+                    };
+                    let n_pre = alive_with(ShardRole::admits_arrivals);
+                    let n_dec = alive_with(ShardRole::runs_decode);
+                    // predicted drain times when an estimator is fitted
+                    // (the sim path always has one), raw token backlogs
+                    // otherwise — the ratio is what matters
+                    let (p_cost, d_cost) = match gate.estimator.as_ref() {
+                        Some(est) => (
+                            est.predict_ms((p_tok, 0), 0, 0, self.cfg.prefill_chunk),
+                            est.predict_ms((0, d_tok), 0, 0, self.cfg.prefill_chunk),
+                        ),
+                        None => (p_tok as f64, d_tok as f64),
+                    };
+                    let ratio = (p_cost / n_pre.max(1) as f64)
+                        / (d_cost / n_dec.max(1) as f64).max(1e-9);
+                    if ratio >= ROLE_HI {
+                        el.role_hi_ticks += 1;
+                        el.role_lo_ticks = 0;
+                    } else if ratio <= ROLE_LO {
+                        el.role_lo_ticks += 1;
+                        el.role_hi_ticks = 0;
+                    } else {
+                        // back inside the band: the episode is over
+                        el.role_hi_ticks = 0;
+                        el.role_lo_ticks = 0;
+                        el.role_moved = false;
+                    }
+                    // keep at least one shard of each capability alive
+                    let (from_ok, to_role): (fn(ShardRole) -> bool, ShardRole) =
+                        if el.role_hi_ticks >= ROLE_TICKS && n_dec > 1 {
+                            // prefill is drowning: convert a decode shard
+                            (|r| r == ShardRole::Decode, ShardRole::Prefill)
+                        } else if el.role_lo_ticks >= ROLE_TICKS && n_pre > 1 {
+                            // decode is drowning: convert a prefill shard
+                            (|r| r == ShardRole::Prefill, ShardRole::Decode)
+                        } else {
+                            (|_| false, ShardRole::Mixed)
+                        };
+                    if !el.role_moved {
+                        let mover = (0..self.cfg.shards)
+                            .filter(|&s| {
+                                self.router.is_alive(s)
+                                    && from_ok(self.router.role_of(s))
+                                    && self.senders[s].is_some()
+                            })
+                            .min_by_key(|&s| (self.router.load()[s], s));
+                        if let Some(s) = mover {
+                            self.router.set_role(s, to_role);
+                            if let Some(tx) = self.senders[s].as_ref() {
+                                let _ =
+                                    tx.send(ToWorker::SetRole(to_role == ShardRole::Prefill));
+                            }
+                            el.reroles += 1;
+                            el.role_moved = true;
+                            el.role_hi_ticks = 0;
+                            el.role_lo_ticks = 0;
+                        }
+                    }
+                }
+            }
+        }
         // probe ramp: a probing shard healthy for `ramp_deadlines`
         // clean step deadlines gets its full share back; Suspect
         // restarts the clean window, death clears the probe entirely
@@ -1807,6 +2272,23 @@ fn worker_loop(
                 Ok(ToWorker::SetKvBits(bits)) => {
                     worker.set_kv_bits(bits);
                 }
+                Ok(ToWorker::SetRole(prefill)) => worker.set_handoff(prefill),
+                Ok(ToWorker::ImportPages { req, generated, pages, ttft_s, queued_s, first_token_at }) => {
+                    if let Err(req) =
+                        worker.import_handoff(req, generated, &pages, ttft_s, queued_s, first_token_at)
+                    {
+                        if tx.send((shard, Ok(ServeEvent::ImportBounced { req }))).is_err() {
+                            break 'serve;
+                        }
+                    }
+                }
+                Ok(ToWorker::ExportLane) => {
+                    if let Some(ev) = worker.export_one_lane() {
+                        if tx.send((shard, Ok(ev))).is_err() {
+                            break 'serve;
+                        }
+                    }
+                }
                 Ok(ToWorker::Batch(reqs)) => {
                     if !run_static(&mut worker, reqs, &tx) {
                         break 'serve;
@@ -1826,6 +2308,24 @@ fn worker_loop(
                 Ok(ToWorker::Inject(r, true)) => queue.push_low(r),
                 Ok(ToWorker::SetKvBits(bits)) => {
                     worker.set_kv_bits(bits);
+                }
+                Ok(ToWorker::SetRole(prefill)) => worker.set_handoff(prefill),
+                Ok(ToWorker::ImportPages { req, generated, pages, ttft_s, queued_s, first_token_at }) => {
+                    if let Err(req) =
+                        worker.import_handoff(req, generated, &pages, ttft_s, queued_s, first_token_at)
+                    {
+                        if tx.send((shard, Ok(ServeEvent::ImportBounced { req }))).is_err() {
+                            break;
+                        }
+                    }
+                }
+                // an idle worker has nothing decoding; a busy one may
+                Ok(ToWorker::ExportLane) => {
+                    if let Some(ev) = worker.export_one_lane() {
+                        if tx.send((shard, Ok(ev))).is_err() {
+                            break;
+                        }
+                    }
                 }
                 Ok(ToWorker::Batch(reqs)) => {
                     if !run_static(&mut worker, reqs, &tx) {

@@ -66,8 +66,10 @@ use crate::quant::Variant;
 use crate::runtime::{i32_bytes, literal_from_raw, Literal, ModelCfg, ModelHandle, SimModel};
 use crate::tensor::{DType, Tensor};
 
+use std::sync::Arc;
+
 use super::batcher::Batch;
-use super::kv_cache::{KvCache, PrefillPage, DEFAULT_BLOCK_SIZE};
+use super::kv_cache::{KvCache, LaneExport, PrefillPage, DEFAULT_BLOCK_SIZE};
 use super::prefix_cache::PrefixCacheManager;
 use super::request::{Priority, Request, Response, ServeEvent};
 use super::scale_sync::ScaleSync;
@@ -174,6 +176,12 @@ pub struct WorkerStats {
     pub drafted_tokens: u64,
     /// draft tokens the full-width verify pass accepted
     pub accepted_tokens: u64,
+    /// lanes exported at prefill completion for page migration
+    pub handoffs: u64,
+    /// wall seconds spent in fused prefill passes
+    pub prefill_busy_s: f64,
+    /// wall seconds spent in fused decode (and draft/verify) passes
+    pub decode_busy_s: f64,
 }
 
 pub struct Worker {
@@ -218,6 +226,17 @@ pub struct Worker {
     pub drafted_tokens: u64,
     /// draft tokens the full-width verify pass accepted
     pub accepted_tokens: u64,
+    /// disaggregated prefill role: when set, a lane whose prefill
+    /// completes is exported as a [`ServeEvent::Handoff`] (block table
+    /// at packed width) instead of decoding here — the dispatcher
+    /// migrates it to a decode-role shard
+    handoff_on_prefill: bool,
+    /// lanes exported at prefill completion for page migration
+    pub handoffs: u64,
+    /// wall seconds spent in fused prefill passes
+    pub prefill_busy_s: f64,
+    /// wall seconds spent in fused decode (and draft/verify) passes
+    pub decode_busy_s: f64,
 }
 
 impl Worker {
@@ -308,7 +327,25 @@ impl Worker {
             spec_draft_bits: spec_draft_bits.clamp(1, 8),
             drafted_tokens: 0,
             accepted_tokens: 0,
+            handoff_on_prefill: false,
+            handoffs: 0,
+            prefill_busy_s: 0.0,
+            decode_busy_s: 0.0,
         }
+    }
+
+    /// Flip the disaggregated prefill role: when on, lanes export at
+    /// prefill completion ([`ServeEvent::Handoff`]) instead of decoding
+    /// here. Safe to toggle live — lanes already decoding finish where
+    /// they are; only *future* prefill completions hand off (that's what
+    /// keeps elastic re-roling cheap: no drain barrier).
+    pub fn set_handoff(&mut self, on: bool) {
+        self.handoff_on_prefill = on;
+    }
+
+    /// Whether prefill completions currently hand off.
+    pub fn handoff_on_prefill(&self) -> bool {
+        self.handoff_on_prefill
     }
 
     pub fn variant(&self) -> Variant {
@@ -385,6 +422,9 @@ impl Worker {
             resume_reprefill_tokens: self.resume_reprefill_tokens,
             drafted_tokens: self.drafted_tokens,
             accepted_tokens: self.accepted_tokens,
+            handoffs: self.handoffs,
+            prefill_busy_s: self.prefill_busy_s,
+            decode_busy_s: self.decode_busy_s,
         }
     }
 
@@ -604,6 +644,7 @@ impl Worker {
         if advancing.is_empty() {
             return Ok(Vec::new());
         }
+        let t_busy = Instant::now();
 
         // fused prefill over this round's chunk spans
         let outs = match &self.backend {
@@ -644,13 +685,20 @@ impl Worker {
             }
             bd.span(Stage::Quant, || kv.ingest_prefill_batch(&pages));
         }
+        self.prefill_busy_s += t_busy.elapsed().as_secs_f64();
 
         // completed prefills emit their first token; unfinished slots
         // record their resume position
+        enum After {
+            Decode,
+            Retire,
+            Handoff,
+        }
         let mut events = Vec::with_capacity(advancing.len());
         for &slot in &advancing {
             let (start, len) = spans[slot];
-            let done = {
+            let mut emitted = false;
+            let after = {
                 let s = self.slots[slot].as_mut().expect("advancing slot is occupied");
                 if start + len < s.prompt_len {
                     s.phase = Phase::Prefilling { next_pos: start + len };
@@ -668,29 +716,49 @@ impl Worker {
                 if !s.generated.is_empty() {
                     // resumed after preemption: its first token (and any
                     // later ones) were already served — re-enter decode
-                    // from the last generated token, no re-emission
+                    // from the last generated token, no re-emission (a
+                    // prefill-role worker exports the lane instead)
                     s.phase = Phase::Decoding;
-                    continue;
+                    if self.handoff_on_prefill {
+                        After::Handoff
+                    } else {
+                        continue;
+                    }
+                } else {
+                    let plen = s.prompt_len;
+                    let row =
+                        &logits[(slot * ctx + plen - 1) * v..(slot * ctx + plen) * v];
+                    let tok = argmax(row);
+                    s.generated.push(tok);
+                    s.ttft_s = s.req.arrival.elapsed().as_secs_f64();
+                    s.first_token_at = Instant::now();
+                    s.phase = Phase::Decoding;
+                    events.push(ServeEvent::Token {
+                        id: s.req.id,
+                        token: tok,
+                        seq: 0,
+                        first: true,
+                        at: s.first_token_at,
+                    });
+                    emitted = true;
+                    if s.req.max_new_tokens <= 1 {
+                        // budget satisfied by the prefill token: retire
+                        // locally, nothing to migrate
+                        After::Retire
+                    } else if self.handoff_on_prefill {
+                        After::Handoff
+                    } else {
+                        After::Decode
+                    }
                 }
-                let plen = s.prompt_len;
-                let row = &logits[(slot * ctx + plen - 1) * v..(slot * ctx + plen) * v];
-                let tok = argmax(row);
-                s.generated.push(tok);
-                s.ttft_s = s.req.arrival.elapsed().as_secs_f64();
-                s.first_token_at = Instant::now();
-                s.phase = Phase::Decoding;
-                events.push(ServeEvent::Token {
-                    id: s.req.id,
-                    token: tok,
-                    seq: 0,
-                    first: true,
-                    at: s.first_token_at,
-                });
-                s.req.max_new_tokens <= 1
             };
-            self.tokens_out += 1;
-            if done {
-                events.push(ServeEvent::Done(self.retire(slot)));
+            if emitted {
+                self.tokens_out += 1;
+            }
+            match after {
+                After::Decode => {}
+                After::Retire => events.push(ServeEvent::Done(self.retire(slot))),
+                After::Handoff => events.push(self.hand_off(slot)),
             }
         }
         Ok(events)
@@ -734,6 +802,7 @@ impl Worker {
         if self.spec_k > 0 && matches!(self.backend, Backend::Sim(_)) {
             return self.step_speculative(events, &active, &token);
         }
+        let t_busy = Instant::now();
 
         let outs = match &self.backend {
             Backend::Pjrt(handle) => {
@@ -782,6 +851,7 @@ impl Worker {
                 }
             });
         }
+        self.decode_busy_s += t_busy.elapsed().as_secs_f64();
 
         // emit this step's tokens; retire finished slots immediately
         for slot in 0..b {
@@ -837,6 +907,7 @@ impl Worker {
         let b = self.backend.batch();
         let (ctx, v, l, d) = (cfg.ctx, cfg.vocab, cfg.n_layers, cfg.d_model);
         let draft_bits = self.spec_draft_bits;
+        let t_busy = Instant::now();
 
         // per-lane draft depth: bounded by the speculation knob, the
         // remaining token budget, and the context ceiling (a cycle
@@ -990,6 +1061,7 @@ impl Worker {
                 }
             });
         }
+        self.decode_busy_s += t_busy.elapsed().as_secs_f64();
 
         // emit the accepted prefix + the verify token; retire finished
         // lanes exactly where plain decode would
@@ -1057,6 +1129,114 @@ impl Worker {
             first_token_at: s.first_token_at,
             shard: self.shard,
         }
+    }
+
+    /// Export a lane and release it, returning the
+    /// [`ServeEvent::Handoff`] the dispatcher migrates to a decode
+    /// shard. The block table is serialized at true packed width
+    /// *before* the lane frees; the carried request is restored to its
+    /// original prompt (a resumed slot's ingest stream may have been
+    /// extended with generated tokens). The lane's capacity is reusable
+    /// on the very next join — a prefill-role worker turns its lanes
+    /// over per prompt, not per stream.
+    fn hand_off(&mut self, slot: usize) -> ServeEvent {
+        let pages = Arc::new(self.kv.export_lane(slot));
+        let mut s = self.slots[slot].take().expect("handoff of empty slot");
+        self.kv.release_slot(slot);
+        self.handoffs += 1;
+        s.req.prompt.truncate(s.base_prompt_len);
+        ServeEvent::Handoff {
+            shard: self.shard,
+            req: s.req,
+            generated: s.generated,
+            ttft_s: s.ttft_s,
+            queued_s: s.queued_s,
+            first_token_at: Some(s.first_token_at),
+            pages,
+        }
+    }
+
+    /// Export the *youngest* decoding lane as a migration handoff (the
+    /// rebalance path: a freshly revived shard asks the most-loaded
+    /// survivor for work, and the youngest lane has the most stream
+    /// left to gain from moving). Mid-prefill lanes never qualify —
+    /// their block tables are incomplete. Returns `None` when nothing
+    /// is decoding.
+    pub fn export_one_lane(&mut self) -> Option<ServeEvent> {
+        let lane = self
+            .slots
+            .iter()
+            .enumerate()
+            .filter_map(|(i, s)| s.as_ref().map(|s| (i, s.join_seq, s.phase)))
+            .filter(|(_, _, phase)| *phase == Phase::Decoding)
+            .max_by_key(|(_, seq, _)| *seq)
+            .map(|(i, _, _)| i)?;
+        Some(self.hand_off(lane))
+    }
+
+    /// Admit a migrated lane: acquire a slot, map the exported block
+    /// table into the local pool (no re-prefill), extend the block
+    /// reservation to the stream's full residency, and resume decoding
+    /// from the last generated token. The continued stream is
+    /// bit-identical to staying put because the imported pages preserve
+    /// every (row, position) and the model trajectory is a pure
+    /// function of them. Timing fields carry over from the source shard
+    /// so TTFT/queueing reflect the request's real history. Returns the
+    /// request on failure (no free lane, or the pool cannot hold the
+    /// residency) — the dispatcher's cue to fall back to re-prefill
+    /// injection, the no-pages path.
+    #[allow(clippy::result_large_err)]
+    pub fn import_handoff(
+        &mut self,
+        req: Request,
+        generated: Vec<i32>,
+        pages: &LaneExport,
+        ttft_s: f64,
+        queued_s: f64,
+        first_token_at: Option<Instant>,
+    ) -> Result<(), Request> {
+        let ctx = self.backend.cfg().ctx;
+        if generated.is_empty() || pages.is_empty() || pages.len() > ctx {
+            return Err(req);
+        }
+        let Some(lane) = self.kv.acquire_slot() else {
+            return Err(req);
+        };
+        if !self.kv.import_lane(lane, pages) {
+            self.kv.release_slot(lane);
+            return Err(req);
+        }
+        let plen = req.prompt.len().min(ctx - 1);
+        // extend the reservation to the full residency now so decode
+        // appends cannot hit an exhausted pool mid-flight (mirrors
+        // admission), evicting idle cached prefixes if needed
+        let target = (plen + req.max_new_tokens).min(ctx);
+        loop {
+            if self.kv.try_reserve(lane, target) {
+                break;
+            }
+            if self.prefix.evict_one(&mut self.kv) {
+                continue;
+            }
+            self.kv.release_slot(lane);
+            return Err(req);
+        }
+        let join_seq = self.next_join_seq;
+        self.next_join_seq += 1;
+        self.slots[lane] = Some(Slot {
+            req,
+            prompt_len: plen,
+            base_prompt_len: plen,
+            phase: Phase::Decoding,
+            generated,
+            ttft_s,
+            queued_s,
+            first_token_at: first_token_at.unwrap_or_else(Instant::now),
+            join_seq,
+        });
+        self.joins += 1;
+        self.peak_active = self.peak_active.max(self.active());
+        Ok(())
     }
 }
 
@@ -1474,6 +1654,150 @@ mod tests {
         assert!(w.steps < plain_steps, "spec {} >= plain {}", w.steps, plain_steps);
         // rejected-suffix rollbacks leaked nothing: the pool balances
         assert_eq!(w.kv().free_block_count() + w.kv().retained_count(), total);
+    }
+
+    fn take_handoff(
+        evs: Vec<ServeEvent>,
+    ) -> (Request, Vec<i32>, Arc<LaneExport>, f64, f64, Option<Instant>) {
+        evs.into_iter()
+            .find_map(|e| match e {
+                ServeEvent::Handoff {
+                    req,
+                    generated,
+                    pages,
+                    ttft_s,
+                    queued_s,
+                    first_token_at,
+                    ..
+                } => Some((req, generated, pages, ttft_s, queued_s, first_token_at)),
+                _ => None,
+            })
+            .expect("handoff event")
+    }
+
+    #[test]
+    fn prefill_handoff_then_import_is_bit_identical() {
+        let baseline = {
+            let mut w = sim_worker(Variant::SimQuant, 2);
+            let rs = w
+                .process_batch(Batch {
+                    requests: vec![req(1, 12, 6)],
+                    formed_at: Instant::now(),
+                })
+                .unwrap();
+            rs[0].tokens.clone()
+        };
+        let mut src = sim_worker(Variant::SimQuant, 2);
+        src.set_handoff(true);
+        let evs = src.join(vec![req(1, 12, 6)]).unwrap();
+        // the first token is emitted on the prefill shard, then the lane
+        // exports and frees immediately
+        let first_tok = evs
+            .iter()
+            .find_map(|e| match e {
+                ServeEvent::Token { token, seq: 0, first: true, .. } => Some(*token),
+                _ => None,
+            })
+            .expect("first token on the prefill shard");
+        assert_eq!(src.handoffs, 1);
+        assert_eq!(src.active(), 0, "lane must free at handoff");
+        assert!(!src.has_work());
+        let (hreq, generated, pages, ttft_s, queued_s, at) = take_handoff(evs);
+        assert_eq!(generated, vec![first_tok]);
+        assert_eq!(hreq.prompt.len(), 12, "original prompt travels");
+        // import into a fresh decode worker and drain: the combined
+        // stream must match the mixed baseline token for token
+        let mut dst = sim_worker(Variant::SimQuant, 2);
+        dst.import_handoff(hreq, generated.clone(), &pages, ttft_s, queued_s, at)
+            .expect("import into a fresh pool");
+        assert_eq!(dst.active(), 1);
+        let mut stream = generated;
+        let mut seqs = vec![0usize];
+        while dst.active() > 0 {
+            for e in dst.step().unwrap() {
+                if let ServeEvent::Token { token, seq, .. } = e {
+                    stream.push(token);
+                    seqs.push(seq);
+                }
+            }
+        }
+        assert_eq!(stream, baseline, "handoff changed the stream");
+        assert_eq!(seqs, (0..baseline.len()).collect::<Vec<_>>(), "seq numbering continues");
+        // the imported lane's blocks return to the pool at retirement
+        assert_eq!(
+            dst.kv().free_block_count() + dst.kv().retained_count(),
+            dst.kv().total_blocks()
+        );
+    }
+
+    #[test]
+    fn import_handoff_bounces_when_the_pool_cannot_hold_the_stream() {
+        let mut src = sim_worker(Variant::SimQuant, 2);
+        src.set_handoff(true);
+        let evs = src.join(vec![req(1, 40, 8)]).unwrap();
+        let (hreq, generated, pages, ttft_s, queued_s, at) = take_handoff(evs);
+        // a 2-block destination pool cannot hold the 40-token lane
+        let mut dst = paged_worker(Variant::SimQuant, 2, 0, Some(2), false);
+        let back = dst
+            .import_handoff(hreq, generated, &pages, ttft_s, queued_s, at)
+            .expect_err("import must bounce, not panic");
+        assert_eq!(back.id, 1, "request returns to the dispatcher");
+        assert_eq!(dst.active(), 0);
+        assert_eq!(
+            dst.kv().free_block_count(),
+            dst.kv().total_blocks(),
+            "failed import leaked blocks"
+        );
+    }
+
+    #[test]
+    fn export_one_lane_picks_the_youngest_decoding_lane() {
+        let mut w = sim_worker(Variant::Fp, 4);
+        let _ = w.join(vec![req(1, 4, 8)]).unwrap();
+        let _ = w.step().unwrap();
+        let _ = w.join(vec![req(2, 4, 8)]).unwrap();
+        let (hreq, generated, ..) = take_handoff(
+            w.export_one_lane().map(|e| vec![e]).expect("a decoding lane exists"),
+        );
+        assert_eq!(hreq.id, 2, "youngest decoding lane exports");
+        assert!(!generated.is_empty());
+        assert_eq!(w.active(), 1, "the older lane stays");
+        // nothing decoding -> nothing to export
+        let mut idle = sim_worker(Variant::Fp, 2);
+        assert!(idle.export_one_lane().is_none());
+    }
+
+    #[test]
+    fn handoff_round_trip_keeps_speculative_streams_identical() {
+        // import into a speculative decode worker: verified-exact
+        // speculation over migrated pages must still match plain decode
+        let baseline = {
+            let mut w = sim_worker(Variant::Fp, 2);
+            let rs = w
+                .process_batch(Batch {
+                    requests: vec![req(3, 10, 9)],
+                    formed_at: Instant::now(),
+                })
+                .unwrap();
+            rs[0].tokens.clone()
+        };
+        let mut src = sim_worker(Variant::Fp, 2);
+        src.set_handoff(true);
+        let evs = src.join(vec![req(3, 10, 9)]).unwrap();
+        let (hreq, generated, pages, ttft_s, queued_s, at) = take_handoff(evs);
+        let mut dst = spec_worker(Variant::Fp, 2, 4, 4);
+        dst.import_handoff(hreq, generated.clone(), &pages, ttft_s, queued_s, at)
+            .expect("import into the speculative worker");
+        let mut stream = generated;
+        while dst.active() > 0 {
+            for e in dst.step().unwrap() {
+                if let ServeEvent::Token { token, .. } = e {
+                    stream.push(token);
+                }
+            }
+        }
+        assert_eq!(stream, baseline, "speculative decode over migrated pages diverged");
+        assert!(dst.drafted_tokens > 0, "speculation ran on the imported lane");
     }
 
     #[test]

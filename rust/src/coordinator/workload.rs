@@ -29,6 +29,12 @@ pub struct WorkloadSpec {
     /// shared-prefix chat traffic the prefix cache converts into block
     /// hits. 0.0 consumes no randomness, so pinned seeds reproduce
     pub shared_prefix_frac: f64,
+    /// fraction of requests reshaped into the prefill-heavy extreme —
+    /// full `prompt_max` prompt, minimum `max_new_min` decode (CLI
+    /// `--prefill-heavy`): the summarization-style traffic that starves
+    /// a mixed fleet's decode path and motivates disaggregation. 0.0
+    /// consumes no randomness, so pinned seeds reproduce
+    pub prefill_heavy_frac: f64,
     pub seed: u64,
 }
 
@@ -44,6 +50,7 @@ impl Default for WorkloadSpec {
             long_frac: 0.0,
             interactive_frac: 1.0,
             shared_prefix_frac: 0.0,
+            prefill_heavy_frac: 0.0,
             seed: 42,
         }
     }
@@ -106,6 +113,16 @@ pub fn generate(spec: &WorkloadSpec) -> Vec<Arrival> {
         // that's the shape of chat traffic: fixed system prompt + turn.
         let shared =
             spec.shared_prefix_frac > 0.0 && rng.next_f64() < spec.shared_prefix_frac;
+        // prefill_heavy_frac == 0.0 must consume no randomness so existing
+        // seeds reproduce their pinned workloads bit-for-bit. A heavy
+        // request overrides the already-drawn lengths (the draws above
+        // still happen, keeping the stream aligned for its neighbors):
+        // maximal prompt, minimal decode — the shape that starves a
+        // mixed fleet's decode path.
+        let heavy =
+            spec.prefill_heavy_frac > 0.0 && rng.next_f64() < spec.prefill_heavy_frac;
+        let (plen, max_new) =
+            if heavy { (spec.prompt_max, spec.max_new_min) } else { (plen, max_new) };
         let mut prompt = if shared {
             bank[rng.next_below(bank.len() as u64) as usize].clone()
         } else {
@@ -285,6 +302,67 @@ mod tests {
         let again = generate(&spec);
         for (a, b) in arr.iter().zip(&again) {
             assert_eq!(a.request.prompt, b.request.prompt);
+        }
+    }
+
+    #[test]
+    fn prefill_heavy_zero_consumes_no_extra_randomness() {
+        let base = generate(&WorkloadSpec::default());
+        let explicit =
+            generate(&WorkloadSpec { prefill_heavy_frac: 0.0, ..Default::default() });
+        for (a, b) in base.iter().zip(&explicit) {
+            assert_eq!(a.request.prompt, b.request.prompt);
+            assert_eq!(a.at_s, b.at_s);
+            assert_eq!(a.request.max_new_tokens, b.request.max_new_tokens);
+        }
+    }
+
+    #[test]
+    fn prefill_heavy_skews_to_long_prompts_short_decodes() {
+        let spec = WorkloadSpec {
+            n_requests: 200,
+            prefill_heavy_frac: 1.0,
+            ..Default::default()
+        };
+        for a in generate(&spec) {
+            assert_eq!(a.request.prompt.len(), spec.prompt_max);
+            assert_eq!(a.request.max_new_tokens, spec.max_new_min);
+        }
+        // a partial mix keeps both shapes and reproduces under the seed
+        let half = WorkloadSpec {
+            n_requests: 200,
+            prefill_heavy_frac: 0.5,
+            ..Default::default()
+        };
+        let arr = generate(&half);
+        let heavy = arr
+            .iter()
+            .filter(|a| {
+                a.request.prompt.len() == half.prompt_max
+                    && a.request.max_new_tokens == half.max_new_min
+            })
+            .count();
+        // ~100 expected; wide band for the deterministic PRNG draw
+        assert!((60..=140).contains(&heavy), "heavy requests: {heavy}");
+        let again = generate(&half);
+        for (a, b) in arr.iter().zip(&again) {
+            assert_eq!(a.request.prompt, b.request.prompt);
+            assert_eq!(a.request.max_new_tokens, b.request.max_new_tokens);
+        }
+        // heavy composes with shared prefixes: the bank prompt rides in
+        // front of the full-length tail
+        let mixed = WorkloadSpec {
+            n_requests: 50,
+            prefill_heavy_frac: 1.0,
+            shared_prefix_frac: 1.0,
+            ..Default::default()
+        };
+        for a in generate(&mixed) {
+            assert_eq!(
+                a.request.prompt.len(),
+                SYSTEM_PROMPT_TOKENS + mixed.prompt_max
+            );
+            assert_eq!(a.request.max_new_tokens, mixed.max_new_min);
         }
     }
 

@@ -117,6 +117,21 @@ COMMANDS:
                    [--spec-bits B]       (draft bit-width for --spec-k, 2 or 4;
                                           default 4. lower bits draft faster
                                           but mispredict more)
+                   [--disagg]            (disaggregated prefill/decode serving:
+                                          the first half of the fleet admits and
+                                          chunk-prefills, the rest decodes;
+                                          finished prefills migrate their
+                                          quantized KV pages over the simulated
+                                          wire and the decode shard continues
+                                          the stream bit-identically. shards
+                                          re-role elastically when the
+                                          estimator sees the prefill:decode
+                                          backlog drift. continuous mode +
+                                          --backend sim only)
+                   [--prefill-heavy F]   (fraction of requests forced to
+                                          max-length prompts with minimum
+                                          decode — the prefill-bound trace the
+                                          disagg split is built for. default 0)
   eval-ppl         --model gpt2-tiny --variant all [--windows 8]
   breakdown        --ctx 32768 --batch 448 [--world 8] [--transport nccl]
   bitwidth-search  --model gpt2-tiny [--lambda 1e-4] [--policy greedy|grid|entropy]
@@ -203,6 +218,14 @@ fn serve(args: &Args) -> Result<()> {
     if spec_k > 0 && !(1..=8).contains(&spec_bits) {
         bail!("--spec-bits must be in 1..=8 (got {spec_bits})");
     }
+    // disaggregated prefill/decode fleet split (sim + continuous only)
+    let disagg = args.has_flag("disagg");
+    if disagg && !matches!(mode, SchedulerMode::Continuous) {
+        bail!("--disagg needs --mode continuous (static batches never hand off mid-stream)");
+    }
+    if disagg && shards < 2 {
+        bail!("--disagg needs --shards >= 2 (one shard cannot split roles)");
+    }
     if backend != "sim" {
         // compiled PJRT shards neither respawn nor change KV width at
         // runtime — reject the elastic options instead of silently
@@ -222,6 +245,12 @@ fn serve(args: &Args) -> Result<()> {
                  shards don't respawn; PJRT recovery is detection + migration only)"
             );
         }
+        if disagg {
+            bail!(
+                "--disagg needs --backend sim (compiled PJRT shards neither re-role \
+                 at runtime nor export quantized KV pages over the simulated wire)"
+            );
+        }
     }
     // fraction of requests tagged interactive priority (rest are batch)
     let priority_mix = args.get_f64("priority-mix", 1.0);
@@ -232,6 +261,12 @@ fn serve(args: &Args) -> Result<()> {
     let shared_prefix = args.get_f64("shared-prefix", 0.0);
     if !(0.0..=1.0).contains(&shared_prefix) {
         bail!("--shared-prefix must be in [0, 1] (got {shared_prefix})");
+    }
+    // fraction of requests forced to a prefill-bound shape (long prompt,
+    // minimum decode) — the trace the disagg split is built for
+    let prefill_heavy = args.get_f64("prefill-heavy", 0.0);
+    if !(0.0..=1.0).contains(&prefill_heavy) {
+        bail!("--prefill-heavy must be in [0, 1] (got {prefill_heavy})");
     }
     // KV block pool override (0 = default batch x ctx sizing)
     let kv_blocks = args.get_usize("kv-blocks", 0);
@@ -260,6 +295,7 @@ fn serve(args: &Args) -> Result<()> {
     cfg.prefix_cache = prefix_cache;
     cfg.spec_k = spec_k;
     cfg.spec_draft_bits = spec_bits as u32;
+    cfg.disagg = disagg;
     if let Some(plan) = fault_plan {
         cfg.fault = FaultSpec::with_plan(plan);
     }
@@ -284,6 +320,7 @@ fn serve(args: &Args) -> Result<()> {
         long_frac: 0.0,
         interactive_frac: priority_mix,
         shared_prefix_frac: shared_prefix,
+        prefill_heavy_frac: prefill_heavy,
         seed: 9000,
     };
     let report = if rate > 0.0 {
@@ -354,6 +391,18 @@ fn serve(args: &Args) -> Result<()> {
             report.drafted_tokens,
             report.accepted_tokens,
             report.acceptance_rate() * 100.0,
+        );
+    }
+    if disagg || report.handoffs > 0 {
+        println!(
+            "disagg: handoffs {} | kv pages migrated {:.2} MB | re-roles {} | \
+             busy split prefill {:.0}% / decode {:.0}% | estimator abs err {:.1} ms",
+            report.handoffs,
+            report.kv_migrate_bytes as f64 / 1e6,
+            report.reroles,
+            report.prefill_busy_share * 100.0,
+            report.decode_busy_share * 100.0,
+            report.estimator_abs_err * 1e3,
         );
     }
     if shared_prefix > 0.0

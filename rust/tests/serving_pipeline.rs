@@ -190,6 +190,7 @@ fn open_loop_replay_completes_under_pressure() {
         long_frac: 0.0,
         interactive_frac: 1.0,
         shared_prefix_frac: 0.0,
+        prefill_heavy_frac: 0.0,
         seed: 11,
     };
     let arrivals = workload::generate(&spec);
@@ -1119,6 +1120,268 @@ fn rejected_draft_suffixes_never_leak_kv_blocks() {
             "id {id} diverged after draft rollback"
         );
     }
+}
+
+// ---------------------------------------------------------------------------
+// Disaggregated prefill/decode serving (sim backend)
+// ---------------------------------------------------------------------------
+
+/// Continuous disagg config: first half of the fleet admits + prefills,
+/// the rest decodes behind the quantized page-migration wire.
+fn disagg_cfg(shards: usize, batch: usize) -> ServerConfig {
+    let mut cfg = sim_cfg(SchedulerMode::Continuous, shards, batch);
+    cfg.prefill_chunk = 8;
+    cfg.disagg = true;
+    cfg
+}
+
+#[test]
+fn disagg_streams_bit_identical_to_mixed_baseline() {
+    // the sim trajectory is a pure function of (token, pos) and the
+    // page export ships the lane verbatim at packed width, so a decode
+    // shard continuing an imported stream must reproduce the mixed
+    // fleet's generations exactly — any seq rebase, dropped page, or
+    // dequant drift in the migration path would diverge here
+    let n = 24;
+    let reference = {
+        let mut cfg = sim_cfg(SchedulerMode::Continuous, 2, 4);
+        cfg.prefill_chunk = 8;
+        let server = Server::start_sim(cfg, SimCost::fast()).unwrap();
+        server.run_workload(long_mixed_requests(n)).unwrap()
+    };
+    let server = Server::start_sim(disagg_cfg(2, 4), SimCost::fast()).unwrap();
+    let report = server.run_workload(long_mixed_requests(n)).unwrap();
+
+    assert_eq!(report.responses.len(), n, "a handoff lost a request");
+    assert!(report.handoffs > 0, "a prefill-role shard must hand its lanes off");
+    assert!(report.kv_migrate_bytes > 0, "pages must cross the simulated wire");
+    assert_eq!(report.lost_tokens, 0, "a token position was skipped across a handoff");
+    assert_eq!(report.dup_tokens, 0, "a token position was re-delivered across a handoff");
+    assert_eq!(report.router_in_flight, 0);
+    assert_eq!(report.router_inflight_tokens, 0);
+    for id in 1..=n as u64 {
+        assert_eq!(
+            by_id(&reference.responses, id).tokens,
+            by_id(&report.responses, id).tokens,
+            "id {id} diverged across the prefill->decode handoff"
+        );
+    }
+    for (i, req) in long_mixed_requests(n).iter().enumerate() {
+        assert_eq!(by_id(&report.responses, req.id).tokens.len(), 2 + (i % 5));
+    }
+}
+
+#[test]
+fn disagg_page_migration_needs_no_reprefill() {
+    // one simultaneous wave that fits the prefill half's lanes while
+    // the decode half sits idle: every handoff must land its pages, so
+    // both re-prefill counters — the no-pages fallback and the
+    // preemption-resume path — must stay exactly zero
+    let n = 4;
+    let server = Server::start_sim(disagg_cfg(2, 4), SimCost::fast()).unwrap();
+    let report = server.run_workload(long_mixed_requests(n)).unwrap();
+    assert_eq!(report.responses.len(), n);
+    assert_eq!(report.handoffs, n as u64, "every stream must migrate by pages");
+    assert!(report.kv_migrate_bytes > 0);
+    assert_eq!(report.migrated(), 0, "page migration must not ride the re-prefill path");
+    assert_eq!(report.reprefill_tokens, 0, "a page-migrated lane was re-prefilled");
+    assert_eq!(report.resume_reprefill_tokens, 0);
+    assert_eq!(report.lost_tokens, 0);
+    assert_eq!(report.dup_tokens, 0);
+    assert_eq!(report.router_in_flight, 0);
+}
+
+#[test]
+fn disagg_matches_mixed_under_shared_prefix_and_speculation() {
+    // composition drills: the prefix cache and self-speculative decode
+    // both ride the same paged KV tables the migration exports; neither
+    // may perturb a migrated stream
+    let n = 24;
+    let spec = workload::WorkloadSpec {
+        n_requests: n,
+        rate_per_s: 300.0,
+        prompt_min: 12,
+        prompt_max: 32,
+        max_new_min: 2,
+        max_new_max: 6,
+        long_frac: 0.0,
+        interactive_frac: 1.0,
+        shared_prefix_frac: 0.85,
+        prefill_heavy_frac: 0.0,
+        seed: 13,
+    };
+    let run = |disagg: bool, spec_k: usize| {
+        let mut cfg = sim_cfg(SchedulerMode::Continuous, 2, 4);
+        cfg.prefill_chunk = 8;
+        cfg.disagg = disagg;
+        cfg.spec_k = spec_k;
+        let server = Server::start_sim(cfg, SimCost::fast()).unwrap();
+        server.run_open_loop(workload::generate(&spec)).unwrap()
+    };
+    let mixed = run(false, 0);
+    assert_eq!(mixed.responses.len(), n);
+    for (label, report) in [("prefix", run(true, 0)), ("prefix+spec", run(true, 2))] {
+        assert_eq!(report.responses.len(), n, "{label}: a request was lost");
+        assert!(report.handoffs > 0, "{label}: the split never handed off");
+        assert_eq!(report.lost_tokens, 0, "{label}");
+        assert_eq!(report.dup_tokens, 0, "{label}");
+        assert_eq!(report.router_in_flight, 0, "{label}");
+        if label == "prefix+spec" {
+            assert!(report.drafted_tokens > 0, "decode shards must draft under spec-k");
+        }
+        for r in &report.responses {
+            assert_eq!(
+                by_id(&mixed.responses, r.id).tokens,
+                r.tokens,
+                "{label}: id {} diverged from the mixed baseline",
+                r.id
+            );
+        }
+    }
+}
+
+#[test]
+fn disagg_kill_of_the_decode_half_stays_exactly_once() {
+    // the kill-during-migration drill: the decode half dies while it
+    // holds imported streams and while further handoffs are in flight.
+    // Survivor-side re-prefill (the dead shard cannot export) must
+    // continue every stream bit-identically with zero loss/duplication
+    let n = 32;
+    let reference = {
+        let mut cfg = sim_cfg(SchedulerMode::Continuous, 2, 4);
+        cfg.prefill_chunk = 8;
+        let server = Server::start_sim(cfg, SimCost::fast()).unwrap();
+        server.run_workload(long_mixed_requests(n)).unwrap()
+    };
+    let mut cfg = fault_cfg(2, FaultPlan::new(5).crash(1, 6));
+    cfg.disagg = true;
+    let server = Server::start_sim(cfg, SimCost::fast()).unwrap();
+    let report = server.run_workload(long_mixed_requests(n)).unwrap();
+
+    assert_eq!(report.responses.len(), n, "the prefill half must absorb the dead decode half");
+    assert_eq!(report.dead_shards, vec![1], "the injected crash was not detected");
+    assert!(report.handoffs > 0, "pages must have been migrating when the shard died");
+    assert_eq!(report.lost_tokens, 0, "a token position was skipped");
+    assert_eq!(report.dup_tokens, 0, "a token position was double-delivered");
+    assert_eq!(report.router_in_flight, 0, "a router charge leaked through the drill");
+    assert_eq!(report.router_inflight_tokens, 0);
+    for id in 1..=n as u64 {
+        assert_eq!(
+            by_id(&reference.responses, id).tokens,
+            by_id(&report.responses, id).tokens,
+            "id {id} diverged across the kill-during-migration drill"
+        );
+    }
+}
+
+#[test]
+fn disagg_rejoin_seeds_pages_and_keeps_streams() {
+    // a decode shard dies and rejoins: recovery must ride the page wire
+    // (kv_migrate_bytes keeps counting, preemption-resume stays zero)
+    // and the client-visible streams must match a fault-free mixed run
+    let n = 32;
+    let reference = {
+        let mut cfg = sim_cfg(SchedulerMode::Continuous, 4, 4);
+        cfg.prefill_chunk = 8;
+        let server = Server::start_sim(cfg, SimCost::fast()).unwrap();
+        server.run_workload(long_mixed_requests(n)).unwrap()
+    };
+    let mut cfg = fault_cfg(4, FaultPlan::new(5).crash(3, 6).recover(3, 8));
+    cfg.disagg = true;
+    let server = Server::start_sim(cfg, SimCost::fast()).unwrap();
+    let report = server.run_workload(long_mixed_requests(n)).unwrap();
+
+    assert_eq!(report.responses.len(), n);
+    assert_eq!(report.dead_shards, vec![3], "the injected crash was not detected");
+    assert_eq!(report.rejoined, vec![3], "the recover: clause must bring shard 3 back");
+    assert!(report.handoffs > 0);
+    assert!(report.kv_migrate_bytes > 0, "recovery must keep riding the page wire");
+    assert_eq!(
+        report.resume_reprefill_tokens, 0,
+        "page-migrated lanes must resume without re-prefill"
+    );
+    assert_eq!(report.lost_tokens, 0);
+    assert_eq!(report.dup_tokens, 0);
+    assert_eq!(report.router_in_flight, 0);
+    assert_eq!(report.router_inflight_tokens, 0);
+    for id in 1..=n as u64 {
+        assert_eq!(
+            by_id(&reference.responses, id).tokens,
+            by_id(&report.responses, id).tokens,
+            "id {id} diverged across the disagg kill -> rejoin"
+        );
+    }
+}
+
+#[test]
+fn reroling_converts_a_shard_under_sustained_prefill_pressure() {
+    // a prefill-bound flood on a 2+2 split: the predicted backlog ratio
+    // pins above ROLE_HI, so the hysteretic ladder must convert at
+    // least one decode shard to prefill — and the moves, which only
+    // change admission routing and the handoff flag, must not perturb
+    // any token stream
+    let reqs = |seed: u64| -> Vec<Request> {
+        (0..64)
+            .map(|i| {
+                let mut prompt = corpus::generate_tokens(100, seed + i as u64);
+                prompt[0] = BOS;
+                Request::new(i as u64 + 1, prompt, 2)
+            })
+            .collect()
+    };
+    let reference = {
+        let mut cfg = sim_cfg(SchedulerMode::Continuous, 4, 4);
+        cfg.prefill_chunk = 8;
+        let server = Server::start_sim(cfg, SimCost::default()).unwrap();
+        server.run_workload(reqs(70_000)).unwrap()
+    };
+    let mut cfg = disagg_cfg(4, 4);
+    // tick the re-role clock fast enough for the test; no fault plan,
+    // so liveness stays disarmed and this is pressure-only
+    cfg.fault.step_deadline = Duration::from_millis(1);
+    let server = Server::start_sim(cfg, SimCost::default()).unwrap();
+    let report = server.run_workload(reqs(70_000)).unwrap();
+
+    assert_eq!(report.responses.len(), 64);
+    assert!(report.handoffs > 0);
+    assert!(
+        report.reroles >= 1,
+        "sustained prefill pressure must re-role a decode shard"
+    );
+    assert!(
+        report.reroles <= 4,
+        "the one-move-per-episode latch failed: {} re-roles",
+        report.reroles
+    );
+    assert_eq!(report.lost_tokens, 0);
+    assert_eq!(report.dup_tokens, 0);
+    assert_eq!(report.router_in_flight, 0);
+    for id in 1..=64u64 {
+        assert_eq!(
+            by_id(&reference.responses, id).tokens,
+            by_id(&report.responses, id).tokens,
+            "id {id}: a re-role move must not change the greedy stream"
+        );
+    }
+}
+
+#[test]
+fn disagg_busy_shares_split_and_estimator_calibrates() {
+    // role counters: the fleet's busy time must split into prefill and
+    // decode shares that sum to one, and the online calibration must
+    // have observed completions (a finite mean error)
+    let n = 24;
+    let server = Server::start_sim(disagg_cfg(2, 4), SimCost::fast()).unwrap();
+    let report = server.run_workload(long_mixed_requests(n)).unwrap();
+    assert_eq!(report.responses.len(), n);
+    assert!(report.prefill_busy_share > 0.0, "the prefill half did fused prefill work");
+    assert!(report.decode_busy_share > 0.0, "the decode half did fused decode work");
+    assert!(
+        (report.prefill_busy_share + report.decode_busy_share - 1.0).abs() < 1e-9,
+        "busy shares must partition fleet busy time"
+    );
+    assert!(report.estimator_abs_err.is_finite());
+    assert!(report.estimator_abs_err >= 0.0);
 }
 
 // ---------------------------------------------------------------------------
